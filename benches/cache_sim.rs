@@ -1,0 +1,65 @@
+//! L3 hot-path microbenchmark: raw cache-simulator event throughput
+//! (sequential, strided and random access patterns) — the quantity the
+//! DESIGN.md §Perf target (≥30M events/s) tracks.
+
+use easycrash::benchlib::Bench;
+use easycrash::sim::{Hierarchy, Memory, SimConfig};
+use easycrash::util::rng::Rng;
+
+fn main() {
+    let b = Bench::new("cache_sim");
+    let cfg = SimConfig::mini();
+    let span = 2 * 1024 * 1024usize; // 2 MB footprint >> LLC
+
+    let mut h = Hierarchy::new(&cfg);
+    let mut m = Memory::new(span);
+    const OPS: u64 = 200_000;
+
+    b.run_throughput("sequential_read", || {
+        let mut addr = 0usize;
+        for _ in 0..OPS {
+            h.access(&mut m, addr, false);
+            addr = (addr + 8) % span;
+        }
+        OPS
+    });
+
+    let mut h = Hierarchy::new(&cfg);
+    let mut m = Memory::new(span);
+    b.run_throughput("sequential_write", || {
+        let mut addr = 0usize;
+        for _ in 0..OPS {
+            m.st_f64(addr & !7, 1.0);
+            h.access(&mut m, addr & !7, true);
+            addr = (addr + 8) % span;
+        }
+        OPS
+    });
+
+    let mut h = Hierarchy::new(&cfg);
+    let mut m = Memory::new(span);
+    let mut rng = Rng::new(7);
+    b.run_throughput("random_rw", || {
+        for _ in 0..OPS {
+            let addr = (rng.index(span / 8)) * 8;
+            let write = rng.f64() < 0.3;
+            if write {
+                m.st_f64(addr, 2.0);
+            }
+            h.access(&mut m, addr, write);
+        }
+        OPS
+    });
+
+    // Flush path cost (dirty vs clean), the §2.1 asymmetry.
+    let mut h = Hierarchy::new(&cfg);
+    let mut m = Memory::new(span);
+    for i in 0..4096 {
+        m.st_f64(i * 64, 1.0);
+        h.access(&mut m, i * 64, true);
+    }
+    b.run_throughput("flush_range_256KB", || {
+        h.flush_range(&mut m, 0, 256 * 1024, easycrash::sim::FlushKind::ClflushOpt);
+        4096
+    });
+}

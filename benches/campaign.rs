@@ -1,0 +1,28 @@
+//! End-to-end campaign benchmark: the coordinator's core operation
+//! (1 instrumented run + N inline restarts) per benchmark app — and the
+//! §Perf evidence for the single-pass design (compare `campaign_100` to
+//! 100× `profile`: the paper's methodology would pay the latter).
+
+use easycrash::apps;
+use easycrash::benchlib::Bench;
+use easycrash::easycrash::{Campaign, PersistPlan};
+use easycrash::runtime::NativeEngine;
+
+fn main() {
+    let b = Bench::new("campaign");
+    for name in ["toy", "is", "cg", "mg"] {
+        let app = apps::by_name(name).unwrap();
+        let c = Campaign::new(0, 1);
+        b.run(&format!("profile_{name}"), || {
+            std::hint::black_box(c.profile(app.as_ref(), &PersistPlan::none()));
+        });
+    }
+    for name in ["toy", "is"] {
+        let app = apps::by_name(name).unwrap();
+        let mut eng = NativeEngine::new();
+        let c = Campaign::new(100, 1);
+        b.run(&format!("campaign100_{name}"), || {
+            std::hint::black_box(c.run(app.as_ref(), &PersistPlan::none(), &mut eng));
+        });
+    }
+}

@@ -1,0 +1,47 @@
+//! Step-engine latency: native Rust kernels vs the PJRT-compiled AOT
+//! artifacts on the post-crash recomputation path. PJRT requires
+//! `make artifacts`; the bench skips those cases otherwise.
+
+use easycrash::apps::AppCore;
+use easycrash::benchlib::Bench;
+use easycrash::runtime::{NativeEngine, PjrtEngine, StepEngine};
+use easycrash::sim::RawEnv;
+
+fn main() {
+    let b = Bench::new("engine");
+
+    // kmeans step: native.
+    let km = easycrash::apps::kmeans::Kmeans::default();
+    let mut raw = RawEnv::new();
+    let st = km.build(&mut raw).unwrap();
+    b.run("kmeans_step_native", || {
+        km.step(&mut raw, &st, 0).unwrap();
+    });
+
+    // mg vcycle: native.
+    let mg = easycrash::apps::mg::Mg::default();
+    let mut raw_mg = RawEnv::new();
+    let st_mg = mg.build(&mut raw_mg).unwrap();
+    b.run("mg_vcycle_native", || {
+        mg.step(&mut raw_mg, &st_mg, 0).unwrap();
+    });
+
+    match PjrtEngine::from_default_dir() {
+        Ok(mut eng) => {
+            let mut raw2 = RawEnv::new();
+            let st2 = km.build(&mut raw2).unwrap();
+            let mut eng2 = NativeEngine::new();
+            let _ = &mut eng2;
+            b.run("kmeans_step_pjrt", || {
+                km.step_fast(&mut raw2, &st2, 0, &mut eng).unwrap();
+            });
+            let mut raw3 = RawEnv::new();
+            let st3 = mg.build(&mut raw3).unwrap();
+            b.run("mg_vcycle_pjrt", || {
+                mg.step_fast(&mut raw3, &st3, 0, &mut eng).unwrap();
+            });
+            println!("pjrt executions served: {}", eng.calls());
+        }
+        Err(e) => println!("skipping PJRT benches: {e}"),
+    }
+}

@@ -1,0 +1,36 @@
+//! Persistence-operation cost: flushing an object's cache blocks under
+//! different dirtiness (the §2.1 clean-vs-dirty asymmetry that motivates
+//! selective flushing) and both instruction kinds.
+
+use easycrash::benchlib::Bench;
+use easycrash::sim::{FlushKind, Hierarchy, Memory, SimConfig};
+
+fn main() {
+    let b = Bench::new("flush");
+    let cfg = SimConfig::mini();
+    let obj = 128 * 1024usize; // 128 KB object = 2048 lines
+
+    for (case, dirty_every) in [("all_dirty", 1usize), ("10pct_dirty", 10), ("clean", 0)] {
+        let mut h = Hierarchy::new(&cfg);
+        let mut m = Memory::new(obj);
+        b.run(&format!("clflushopt_{case}"), || {
+            if dirty_every > 0 {
+                for l in (0..obj / 64).step_by(dirty_every) {
+                    m.st_f64(l * 64, 1.0);
+                    h.access(&mut m, l * 64, true);
+                }
+            }
+            h.flush_range(&mut m, 0, obj, FlushKind::ClflushOpt);
+        });
+    }
+
+    let mut h = Hierarchy::new(&cfg);
+    let mut m = Memory::new(obj);
+    b.run("clwb_all_dirty", || {
+        for l in 0..obj / 64 {
+            m.st_f64(l * 64, 1.0);
+            h.access(&mut m, l * 64, true);
+        }
+        h.flush_range(&mut m, 0, obj, FlushKind::Clwb);
+    });
+}

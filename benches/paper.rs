@@ -1,0 +1,55 @@
+//! End-to-end paper-artifact regeneration, timed: one case per table /
+//! figure family (the deliverable-(d) harness entry point; the CLI's
+//! `easycrash all` prints the full rows, this bench times the pipeline
+//! at a reduced test count).
+
+use easycrash::benchlib::Bench;
+use easycrash::report::{self, ReportCtx};
+use easycrash::sim::NvmProfile;
+use easycrash::util::cli::Args;
+
+fn ctx() -> ReportCtx {
+    let argv = vec!["--tests".to_string(), "60".to_string()];
+    let args = Args::parse(&argv, &["tests"]).unwrap();
+    ReportCtx::from_args(&args).unwrap()
+}
+
+fn main() {
+    std::env::set_var("EC_BENCH_MS", "200"); // one-shot style: these are heavy
+    let b = Bench::new("paper");
+    // Shared context so memoization mirrors the real `all` run.
+    let c = ctx();
+    b.run("table1", || {
+        report::table1::run(&c).unwrap();
+    });
+    b.run("fig3", || {
+        report::fig3::run(&c).unwrap();
+    });
+    b.run("fig4", || {
+        report::fig4::run(&c).unwrap();
+    });
+    b.run("fig5", || {
+        report::fig5::run(&c).unwrap();
+    });
+    b.run("fig6", || {
+        report::fig6::run(&c).unwrap();
+    });
+    b.run("table4", || {
+        report::table4::run(&c).unwrap();
+    });
+    b.run("fig7", || {
+        report::fig7::run(&c, &NvmProfile::ALL_FIG7).unwrap();
+    });
+    b.run("fig8", || {
+        report::fig7::run(&c, &[NvmProfile::OPTANE]).unwrap();
+    });
+    b.run("fig9", || {
+        report::fig9::run(&c).unwrap();
+    });
+    b.run("fig10", || {
+        report::fig10::run(&c).unwrap();
+    });
+    b.run("fig11", || {
+        report::fig11::run(&c).unwrap();
+    });
+}

@@ -1,0 +1,70 @@
+//! Crash-test campaign + statistical selection, on CG.
+//!
+//! Reproduces the §5.1 methodology end to end: a characterization
+//! campaign (inconsistency rates per candidate object), Spearman
+//! correlation against recomputation success, and the resulting critical
+//! data objects — then shows the recomputability with them persisted.
+//!
+//! ```text
+//! cargo run --release --example crash_campaign [-- <app> [tests]]
+//! ```
+
+use easycrash::apps::by_name;
+use easycrash::easycrash::selection::{critical_names, select_critical};
+use easycrash::easycrash::{Campaign, PersistPlan};
+use easycrash::runtime::NativeEngine;
+use easycrash::util::{mean, pct};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let app_name = args.first().map(|s| s.as_str()).unwrap_or("cg");
+    let tests = args
+        .get(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300usize);
+    let app = by_name(app_name).ok_or_else(|| anyhow::anyhow!("unknown app {app_name}"))?;
+    let mut engine = NativeEngine::new();
+
+    println!("== characterization campaign: {app_name}, {tests} crash tests ==");
+    let campaign = Campaign::new(tests, 7);
+    let base = campaign.run(app.as_ref(), &PersistPlan::none(), &mut engine);
+    let f = base.response_fractions();
+    println!(
+        "responses: S1={} S2={} S3={} S4={}  (recomputability {})",
+        pct(f[0]),
+        pct(f[1]),
+        pct(f[2]),
+        pct(f[3]),
+        pct(base.recomputability())
+    );
+
+    println!("\n== Spearman selection over per-object inconsistency ==");
+    let rows = select_critical(&base);
+    for r in &rows {
+        let (xs, _) = (0..base.candidates.len())
+            .find(|&j| base.candidates[j].1 == r.name)
+            .map(|j| base.vectors_for(j))
+            .unwrap();
+        println!(
+            "  {:<10} mean inconsistency {:>6}  Rs={:+.3} p={:.2e}  critical={}",
+            r.name,
+            pct(mean(&xs)),
+            r.rs,
+            r.p,
+            r.selected
+        );
+    }
+    let critical = critical_names(&rows);
+    println!("critical objects: {critical:?}");
+
+    if !critical.is_empty() {
+        let plan = PersistPlan::at_iter_end(&critical, app.regions().len(), 1);
+        let with = campaign.run(app.as_ref(), &plan, &mut engine);
+        println!(
+            "\nwith critical objects persisted at iteration end: {} (persist ops: {})",
+            pct(with.recomputability()),
+            with.persist_ops
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! The three-layer hot path in action: post-crash recomputation running
+//! the AOT-compiled JAX/Pallas step functions through PJRT from Rust —
+//! Python is nowhere in this process.
+//!
+//! Requires artifacts: `make artifacts` first.
+//!
+//! ```text
+//! cargo run --release --example pjrt_recompute
+//! ```
+
+use std::time::Instant;
+
+use easycrash::apps::by_name;
+use easycrash::easycrash::{Campaign, PersistPlan};
+use easycrash::runtime::{NativeEngine, PjrtEngine, StepEngine};
+use easycrash::util::pct;
+
+fn main() -> anyhow::Result<()> {
+    let mut pjrt = PjrtEngine::from_default_dir()?;
+    println!("artifacts available: {:?}", pjrt.available());
+
+    let app = by_name("kmeans").expect("kmeans registered");
+    let campaign = Campaign::new(60, 99);
+    let plan = PersistPlan::none();
+
+    println!("\n== kmeans crash campaign, restarts recomputed via PJRT ==");
+    let t0 = Instant::now();
+    let r_pjrt = campaign.run(app.as_ref(), &plan, &mut pjrt);
+    let wall_pjrt = t0.elapsed();
+    println!(
+        "pjrt engine:   recomputability={}  ({} XLA executions, wall {:.2?})",
+        pct(r_pjrt.recomputability()),
+        pjrt.calls(),
+        wall_pjrt
+    );
+
+    let mut native = NativeEngine::new();
+    let t1 = Instant::now();
+    let r_native = campaign.run(app.as_ref(), &plan, &mut native);
+    println!(
+        "native engine: recomputability={}  (wall {:.2?})",
+        pct(r_native.recomputability()),
+        t1.elapsed()
+    );
+    println!(
+        "\nagreement: |Δ recomputability| = {}",
+        pct((r_pjrt.recomputability() - r_native.recomputability()).abs())
+    );
+    Ok(())
+}

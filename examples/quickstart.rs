@@ -1,0 +1,57 @@
+//! Quickstart: one crash test, end to end.
+//!
+//! Runs MG under the NVCT simulator, crashes it at a random point of the
+//! main loop, restarts from the surviving NVM image and classifies the
+//! outcome — first without any persistence, then with EasyCrash's
+//! selected plan.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use easycrash::apps::by_name;
+use easycrash::easycrash::{Campaign, PersistPlan, Workflow};
+use easycrash::runtime::NativeEngine;
+use easycrash::util::pct;
+
+fn main() -> anyhow::Result<()> {
+    let app = by_name("mg").expect("mg registered");
+    let mut engine = NativeEngine::new();
+
+    println!("== 1. a handful of crash tests without persistence ==");
+    let campaign = Campaign::new(20, 42);
+    let base = campaign.run(app.as_ref(), &PersistPlan::none(), &mut engine);
+    for (i, t) in base.records.iter().take(5).enumerate() {
+        println!(
+            "  crash {i}: op {} iter {} region R{} -> {} ({} extra iters)",
+            t.op,
+            t.iter,
+            t.region,
+            t.response.label(),
+            t.extra_iters
+        );
+    }
+    println!("  recomputability: {}", pct(base.recomputability()));
+
+    println!("\n== 2. the EasyCrash workflow picks what/where to persist ==");
+    let wf = Workflow {
+        tests: 150,
+        seed: 42,
+        ..Default::default()
+    };
+    let rep = wf.run(app.as_ref(), &mut engine);
+    println!("  critical data objects: {:?}", rep.critical);
+    println!("  plan: {:?}", rep.plan.entries);
+    println!(
+        "  recomputability: {} -> {} (best possible {})",
+        pct(rep.base.recomputability()),
+        pct(rep.final_result.recomputability()),
+        pct(rep.best.recomputability()),
+    );
+    println!(
+        "  modeled flush overhead: {:.2}% (budget t_s = {:.0}%)",
+        rep.region_sel.predicted_overhead * 100.0,
+        wf.ts * 100.0
+    );
+    Ok(())
+}

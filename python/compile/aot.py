@@ -1,0 +1,63 @@
+"""AOT lowering: JAX step functions -> HLO *text* artifacts for the Rust
+coordinator.
+
+HLO text (NOT ``lowered.compile().serialize()`` and NOT the proto) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Each function is lowered with ``return_tuple=True`` (the Rust side unwraps
+with ``to_tuple()``) and gets a ``.sig`` sidecar listing input shapes so the
+Rust engine can reshape flat f32 buffers without a JSON parser.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import export_table
+
+
+def to_hlo_text(fn, example_args):
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def signature_text(example_args):
+    lines = ["# input shapes (one line per input; space-separated dims)"]
+    for a in example_args:
+        lines.append("scalar" if len(a.shape) == 0 else " ".join(str(d) for d in a.shape))
+    return "\n".join(lines) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower a single function")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    table = export_table()
+    for name, (fn, example) in sorted(table.items()):
+        if args.only and name != args.only:
+            continue
+        text = to_hlo_text(fn, example)
+        hlo_path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(hlo_path, "w") as f:
+            f.write(text)
+        with open(os.path.join(args.out_dir, f"{name}.sig"), "w") as f:
+            f.write(signature_text(example))
+        print(f"wrote {hlo_path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Layer-1 Pallas kernel: pairwise squared distances for k-means.
+
+``distances(pts, cent)[n, k] = ||pts[n] - cent[k]||²`` — the assignment
+hot-spot of the Lloyd iteration, expressed as an MXU-friendly expansion
+``|p|² - 2 p·cᵀ + |c|²`` so the inner contraction is a matmul.
+
+TPU mapping: points tiled into VMEM-sized row blocks; the (K, D) centroid
+matrix is tiny and replicated per program. ``interpret=True`` on this image
+(see stencil.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 1024
+
+
+def _dist_kernel(p_ref, c_ref, o_ref):
+    p = p_ref[...]  # (bn, D)
+    c = c_ref[...]  # (K, D)
+    p2 = jnp.sum(p * p, axis=1, keepdims=True)  # (bn, 1)
+    c2 = jnp.sum(c * c, axis=1)[None, :]  # (1, K)
+    cross = p @ c.T  # MXU contraction
+    o_ref[...] = p2 - 2.0 * cross + c2
+
+
+def distances(pts, cent):
+    """(N, K) squared distances between (N, D) points and (K, D) centroids."""
+    n, d = pts.shape
+    k, d2 = cent.shape
+    assert d == d2
+    bn = BLOCK_N if n % BLOCK_N == 0 else n
+    return pl.pallas_call(
+        _dist_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, k), pts.dtype),
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, k), lambda i: (i, 0)),
+        interpret=True,
+    )(pts, cent)

@@ -1,0 +1,45 @@
+"""Layer-1 Pallas kernel: Dirichlet 5-point matvec for CG.
+
+``matvec5(p) = 4*p - shifted neighbors (zero outside the grid)`` over a 2-D
+f32 grid — CG's SpMV hot-spot (region R0). The CSR matrix the Rust
+coordinator streams is exactly this operator, so the kernel IS the matrix.
+
+TPU mapping: row-band partitioning via BlockSpec; each program holds a
+(by, nx) band plus its two neighbor rows. ``interpret=True`` on this image
+(see stencil.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_Y = 16
+
+
+def _matvec_kernel(p_ref, pm_ref, pp_ref, o_ref):
+    p = p_ref[...]
+    up = pm_ref[...]  # row j-1 band (zero-padded at the boundary)
+    dn = pp_ref[...]  # row j+1 band
+    nx = p.shape[1]
+    # Dirichlet x-shifts: zero beyond the edges.
+    xm = jnp.concatenate([jnp.zeros((p.shape[0], 1), p.dtype), p[:, : nx - 1]], axis=1)
+    xp = jnp.concatenate([p[:, 1:], jnp.zeros((p.shape[0], 1), p.dtype)], axis=1)
+    o_ref[...] = 4.0 * p - (xm + xp + up + dn)
+
+
+def matvec5(p):
+    """q = A p for the 5-pt Dirichlet Laplacian on an (ny, nx) f32 grid."""
+    ny, nx = p.shape
+    by = BLOCK_Y if ny % BLOCK_Y == 0 else ny
+    zrow = jnp.zeros((1, nx), p.dtype)
+    pm = jnp.concatenate([zrow, p[: ny - 1]], axis=0)  # row above
+    pp = jnp.concatenate([p[1:], zrow], axis=0)  # row below
+    spec = pl.BlockSpec((by, nx), lambda i: (i, 0))
+    return pl.pallas_call(
+        _matvec_kernel,
+        out_shape=jax.ShapeDtypeStruct(p.shape, p.dtype),
+        grid=(ny // by,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        interpret=True,
+    )(p, pm, pp)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+reference (pytest asserts allclose between kernel and oracle)."""
+
+import jax.numpy as jnp
+
+
+def residual7_ref(u, v):
+    """Periodic 7-pt residual r = v - (6u - sum of neighbors)."""
+    a = 6.0 * u
+    for axis in range(3):
+        a = a - jnp.roll(u, 1, axis=axis) - jnp.roll(u, -1, axis=axis)
+    return v - a
+
+
+def matvec5_ref(p):
+    """Dirichlet 5-pt Laplacian matvec on a 2-D grid."""
+    ny, nx = p.shape
+    zc = jnp.zeros((ny, 1), p.dtype)
+    zr = jnp.zeros((1, nx), p.dtype)
+    xm = jnp.concatenate([zc, p[:, : nx - 1]], axis=1)
+    xp = jnp.concatenate([p[:, 1:], zc], axis=1)
+    ym = jnp.concatenate([zr, p[: ny - 1]], axis=0)
+    yp = jnp.concatenate([p[1:], zr], axis=0)
+    return 4.0 * p - (xm + xp + ym + yp)
+
+
+def distances_ref(pts, cent):
+    """(N, K) pairwise squared distances."""
+    diff = pts[:, None, :] - cent[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)

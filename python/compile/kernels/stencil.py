@@ -1,0 +1,60 @@
+"""Layer-1 Pallas kernel: periodic 7-point residual for MG.
+
+``residual7(u, v) = v - (6*u - sum of 6 periodic neighbors)`` on a 3-D f32
+grid — the compute hot-spot of the MG V-cycle (region R0 of the Rust
+kernel's iteration).
+
+TPU mapping (see DESIGN.md §9): the grid is partitioned into z-slabs via
+``BlockSpec``; each program instance holds three (bz, ny, nx) f32 slabs in
+VMEM (u-slab + halo handled by gathering the rolled arrays as inputs, v-slab,
+out-slab). On this image Pallas must run with ``interpret=True`` — real TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute — so
+correctness is asserted against the pure-jnp oracle in ``ref.py`` and TPU
+efficiency is estimated analytically.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# z-slab height per program instance.
+BLOCK_Z = 8
+
+
+def _residual_kernel(u_ref, um_ref, up_ref, v_ref, o_ref):
+    """One z-slab: um/up are u rolled by ±1 in z (halo-free formulation)."""
+    u = u_ref[...]
+    v = v_ref[...]
+    zp = up_ref[...]
+    zm = um_ref[...]
+    xm = jnp.roll(u, 1, axis=2)
+    xp = jnp.roll(u, -1, axis=2)
+    ym = jnp.roll(u, 1, axis=1)
+    yp = jnp.roll(u, -1, axis=1)
+    a = 6.0 * u - (xm + xp + ym + yp + zm + zp)
+    o_ref[...] = v - a
+
+
+@functools.partial(jax.jit, static_argnames=())
+def residual7(u, v):
+    """Periodic 7-pt residual r = v - A u over a (nz, ny, nx) f32 grid.
+
+    The z-neighbors are materialized by rolling the full array once (cheap,
+    fused by XLA) so each Pallas block is self-contained — the BlockSpec
+    expresses the HBM->VMEM z-slab schedule.
+    """
+    nz, ny, nx = u.shape
+    bz = BLOCK_Z if nz % BLOCK_Z == 0 else nz
+    um = jnp.roll(u, 1, axis=0)
+    up = jnp.roll(u, -1, axis=0)
+    spec = pl.BlockSpec((bz, ny, nx), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        _residual_kernel,
+        out_shape=jax.ShapeDtypeStruct(u.shape, u.dtype),
+        grid=(nz // bz,),
+        in_specs=[spec, spec, spec, spec],
+        out_specs=spec,
+        interpret=True,
+    )(u, um, up, v)

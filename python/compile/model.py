@@ -1,0 +1,160 @@
+"""Layer-2 JAX models: the flagship benchmarks' per-iteration step
+functions, calling the Layer-1 Pallas kernels.
+
+Each function mirrors the corresponding Rust native kernel closely enough
+for tolerance-based acceptance; exact f32 trajectories differ (summation
+order, Jacobi vs in-place relaxation), which is why the strict-band apps
+default to the native engine for crash campaigns while the PJRT engine is
+validated against these functions within `atol` (see
+rust/tests/pjrt_roundtrip.rs and DESIGN.md §Hardware-Adaptation).
+
+These functions are lowered ONCE by ``aot.py``; Python never runs on the
+coordinator's request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.kmeans_assign import distances
+from .kernels.poisson5 import matvec5
+from .kernels.stencil import residual7
+
+# ---------------------------------------------------------------------------
+# MG (constants must match rust/src/apps/mg.rs)
+# ---------------------------------------------------------------------------
+
+MG_DIM = 32
+MG_LEVELS = 4
+MG_OMEGA = 1.0 / 6.0
+
+
+def _apply_a(u):
+    """Periodic 7-pt operator A = 6I - neighbors."""
+    a = 6.0 * u
+    for axis in range(3):
+        a = a - jnp.roll(u, 1, axis=axis) - jnp.roll(u, -1, axis=axis)
+    return a
+
+
+def _restrict(r):
+    """8-child averaging restriction (matches the Rust kernel)."""
+    d = r.shape[0] // 2
+    return r.reshape(d, 2, d, 2, d, 2).mean(axis=(1, 3, 5))
+
+
+def _prolong_tl(zc):
+    """Trilinear (3/4-1/4) periodic prolongation, separable per axis."""
+    d = zc.shape[0]
+    xs = jnp.arange(2 * d)
+    par = xs // 2
+    nbr = jnp.where(xs % 2 == 1, (par + 1) % d, (par - 1) % d)
+
+    def interp(a, axis):
+        pa = jnp.take(a, par, axis=axis)
+        na = jnp.take(a, nbr, axis=axis)
+        return 0.75 * pa + 0.25 * na
+
+    a = zc
+    for axis in range(3):
+        a = interp(a, axis)
+    return a
+
+
+def _jacobi_refine(z, r, sweeps):
+    """Weighted-Jacobi refinement of A z = r (simultaneous updates; the
+    Rust kernel relaxes in place, i.e. Gauss-Seidel — equivalent smoothing
+    strength for the cycle, different exact trajectory)."""
+    for _ in range(sweeps):
+        z = z + MG_OMEGA * (r - _apply_a(z))
+    return z
+
+
+def mg_vcycle(u, v):
+    """One V-cycle of the MG benchmark. Returns (u', r0)."""
+    r0 = residual7(u, v)  # Pallas hot-spot
+    # Restrict residuals down the hierarchy.
+    rs = [r0]
+    for _ in range(1, MG_LEVELS):
+        rs.append(_restrict(rs[-1]))
+    # Coarsest correction + refinements.
+    z = MG_OMEGA * rs[-1]
+    z = _jacobi_refine(z, rs[-1], 3)
+    # Walk up to level 1.
+    for lvl in range(MG_LEVELS - 2, 0, -1):
+        z = _prolong_tl(z)
+        z = _jacobi_refine(z, rs[lvl], 2)
+    # Fine update + one post-smoothing pass.
+    u = u + _prolong_tl(z) + MG_OMEGA * r0
+    u = u + MG_OMEGA * (v - _apply_a(u))
+    return u, r0
+
+
+# ---------------------------------------------------------------------------
+# CG (constants must match rust/src/apps/cg.rs)
+# ---------------------------------------------------------------------------
+
+CG_EDGE = 96
+CG_N = CG_EDGE * CG_EDGE
+
+
+def cg_step(x, r, p, rho):
+    """One CG iteration on the 5-pt Dirichlet Poisson system.
+
+    Inputs are flat (N,) f32 vectors plus the scalar carrier rho (1,).
+    Returns (x', r', p', q, rho')."""
+    q = matvec5(p.reshape(CG_EDGE, CG_EDGE)).reshape(CG_N)  # Pallas hot-spot
+    pq = jnp.dot(p, q)
+    rho_s = rho[0]
+    alpha = jnp.where(jnp.abs(pq) > 1e-30, rho_s / pq, 0.0)
+    x = x + alpha * p
+    r = r - alpha * q
+    rho_new = jnp.dot(r, r)
+    beta = jnp.where(jnp.abs(rho_s) > 1e-30, rho_new / rho_s, 0.0)
+    p = r + beta * p
+    return x, r, p, q, rho_new.reshape(1)
+
+
+# ---------------------------------------------------------------------------
+# K-means (constants must match rust/src/apps/kmeans.rs)
+# ---------------------------------------------------------------------------
+
+KM_N = 16384
+KM_D = 8
+KM_K = 8
+
+
+def kmeans_step(pts, cent):
+    """One Lloyd iteration. Returns (cent',)."""
+    d2 = distances(pts, cent)  # Pallas hot-spot (N, K)
+    assign = jnp.argmin(d2, axis=1)
+    onehot = jax.nn.one_hot(assign, cent.shape[0], dtype=pts.dtype)
+    counts = onehot.sum(axis=0)  # (K,)
+    sums = onehot.T @ pts  # (K, D)
+    new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts, 1.0)[:, None], cent)
+    return (new,)
+
+
+def kmeans_inertia(pts, cent):
+    """Acceptance-verification reduction: total within-cluster distance."""
+    d2 = distances(pts, cent)
+    return (jnp.sum(jnp.min(d2, axis=1), dtype=jnp.float32).reshape(1),)
+
+
+# ---------------------------------------------------------------------------
+# AOT export table: name -> (fn, example inputs)
+# ---------------------------------------------------------------------------
+
+
+def export_table():
+    f32 = jnp.float32
+    mg_spec = jax.ShapeDtypeStruct((MG_DIM, MG_DIM, MG_DIM), f32)
+    vec = jax.ShapeDtypeStruct((CG_N,), f32)
+    one = jax.ShapeDtypeStruct((1,), f32)
+    pts = jax.ShapeDtypeStruct((KM_N, KM_D), f32)
+    cent = jax.ShapeDtypeStruct((KM_K, KM_D), f32)
+    return {
+        "mg_vcycle": (lambda u, v: mg_vcycle(u, v), [mg_spec, mg_spec]),
+        "cg_step": (cg_step, [vec, vec, vec, one]),
+        "kmeans_step": (kmeans_step, [pts, cent]),
+        "kmeans_inertia": (kmeans_inertia, [pts, cent]),
+    }

@@ -1,0 +1,118 @@
+"""Pallas kernels vs pure-jnp oracles — the core build-time correctness
+signal, swept over shapes/seeds with hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.kmeans_assign import distances
+from compile.kernels.poisson5 import matvec5
+from compile.kernels.ref import distances_ref, matvec5_ref, residual7_ref
+from compile.kernels.stencil import residual7
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape, dtype, -1.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# residual7
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    nz=st.sampled_from([4, 8, 16, 32]),
+    ny=st.sampled_from([4, 8, 16]),
+    nx=st.sampled_from([8, 16, 32]),
+    key=st.integers(0, 2**31 - 1),
+)
+def test_residual7_matches_ref(nz, ny, nx, key):
+    u = rand(key, (nz, ny, nx))
+    v = rand(key + 1, (nz, ny, nx))
+    got = residual7(u, v)
+    want = residual7_ref(u, v)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_residual7_zero_solution():
+    # u = const is in the periodic operator's null space: r == v.
+    u = jnp.full((8, 8, 8), 3.5, jnp.float32)
+    v = rand(7, (8, 8, 8))
+    np.testing.assert_allclose(residual7(u, v), v, rtol=1e-6, atol=1e-6)
+
+
+def test_residual7_non_divisible_z_falls_back_to_single_block():
+    u = rand(3, (6, 8, 8))
+    v = rand(4, (6, 8, 8))
+    np.testing.assert_allclose(residual7(u, v), residual7_ref(u, v), rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# matvec5
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    ny=st.sampled_from([8, 16, 32, 96]),
+    nx=st.sampled_from([8, 16, 96]),
+    key=st.integers(0, 2**31 - 1),
+)
+def test_matvec5_matches_ref(ny, nx, key):
+    p = rand(key, (ny, nx))
+    np.testing.assert_allclose(matvec5(p), matvec5_ref(p), rtol=1e-6, atol=1e-6)
+
+
+def test_matvec5_is_spd_quadratic_form():
+    # x^T A x > 0 for x != 0 (Dirichlet Laplacian is SPD).
+    x = rand(11, (16, 16))
+    q = float(jnp.vdot(x, matvec5(x)))
+    assert q > 0.0
+
+
+def test_matvec5_matches_dense_operator_row():
+    # Spot-check one interior entry against the stencil definition.
+    p = rand(13, (8, 8))
+    q = matvec5(p)
+    i, j = 3, 4
+    want = 4 * p[i, j] - p[i - 1, j] - p[i + 1, j] - p[i, j - 1] - p[i, j + 1]
+    np.testing.assert_allclose(q[i, j], want, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# distances
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.sampled_from([64, 256, 1024, 2048]),
+    d=st.sampled_from([2, 4, 8]),
+    k=st.sampled_from([2, 8, 16]),
+    key=st.integers(0, 2**31 - 1),
+)
+def test_distances_matches_ref(n, d, k, key):
+    pts = rand(key, (n, d)) * 3.0
+    cent = rand(key + 2, (k, d)) * 3.0
+    np.testing.assert_allclose(
+        distances(pts, cent), distances_ref(pts, cent), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_distances_zero_for_identical_points():
+    pts = rand(21, (32, 8))
+    d2 = distances(pts, pts[:8])
+    np.testing.assert_allclose(jnp.diagonal(d2[:8]), jnp.zeros(8), atol=1e-5)
+
+
+def test_distances_nonnegative():
+    pts = rand(22, (128, 4)) * 10.0
+    cent = rand(23, (8, 4)) * 10.0
+    assert float(jnp.min(distances(pts, cent))) >= -1e-4
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,90 @@
+"""Layer-2 model tests: shapes, convergence behavior, and agreement with
+the Rust kernels' algebra."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    CG_N,
+    KM_D,
+    KM_K,
+    KM_N,
+    MG_DIM,
+    cg_step,
+    kmeans_inertia,
+    kmeans_step,
+    mg_vcycle,
+)
+
+
+def test_mg_vcycle_shapes_and_convergence():
+    key = jax.random.PRNGKey(0)
+    v = jnp.zeros((MG_DIM,) * 3, jnp.float32)
+    # NPB-style ±1 charges (zero mean).
+    idx = jax.random.choice(key, MG_DIM**3, (16,), replace=False)
+    v = v.reshape(-1).at[idx].set(jnp.tile(jnp.array([1.0, -1.0], jnp.float32), 8))
+    v = v.reshape((MG_DIM,) * 3)
+    u = jnp.zeros_like(v)
+    r_first = None
+    for i in range(8):
+        u, r0 = mg_vcycle(u, v)
+        if i == 0:
+            r_first = float(jnp.linalg.norm(r0))
+    r_last = float(jnp.linalg.norm(r0))
+    assert u.shape == (MG_DIM,) * 3 and r0.shape == (MG_DIM,) * 3
+    assert r_last < r_first / 10.0, f"{r_first} -> {r_last}"
+
+
+def test_cg_step_reduces_residual():
+    x = jnp.zeros((CG_N,), jnp.float32)
+    r = jnp.ones((CG_N,), jnp.float32)
+    p = jnp.ones((CG_N,), jnp.float32)
+    rho = jnp.array([float(CG_N)], jnp.float32)
+    rho_hist = [float(rho[0])]
+    step = jax.jit(cg_step)
+    for _ in range(75):
+        x, r, p, q, rho = step(x, r, p, rho)
+        rho_hist.append(float(rho[0]))
+    assert x.shape == (CG_N,) and q.shape == (CG_N,) and rho.shape == (1,)
+    # ‖r‖² is not monotone in CG, but by 75 iterations it must be far below
+    # its peak and below the start.
+    assert rho_hist[-1] < max(rho_hist) / 50.0, rho_hist[::15]
+    assert rho_hist[-1] < rho_hist[0], rho_hist[::15]
+
+
+def test_cg_step_alpha_guard_on_zero_p():
+    # p = 0 => pq = 0: the guard must not produce NaNs.
+    z = jnp.zeros((CG_N,), jnp.float32)
+    x, r, p, q, rho = cg_step(z, z, z, jnp.array([0.0], jnp.float32))
+    assert bool(jnp.all(jnp.isfinite(x)))
+    assert float(rho[0]) == 0.0
+
+
+def test_kmeans_step_reduces_inertia_and_keeps_shapes():
+    key = jax.random.PRNGKey(42)
+    pts = jax.random.normal(key, (KM_N, KM_D), jnp.float32) + 2.0 * jax.random.randint(
+        jax.random.PRNGKey(1), (KM_N, 1), 0, 2
+    ).astype(jnp.float32)
+    cent = pts[:KM_K] * 0.25
+    i0 = float(kmeans_inertia(pts, cent)[0][0])
+    for _ in range(10):
+        (cent,) = kmeans_step(pts, cent)
+    i1 = float(kmeans_inertia(pts, cent)[0][0])
+    assert cent.shape == (KM_K, KM_D)
+    assert i1 < i0, f"{i0} -> {i1}"
+
+
+def test_kmeans_empty_cluster_keeps_centroid():
+    # A far-away centroid gets no points: it must remain unchanged.
+    pts = jnp.zeros((KM_N, KM_D), jnp.float32)
+    cent = jnp.concatenate(
+        [jnp.zeros((KM_K - 1, KM_D), jnp.float32), jnp.full((1, KM_D), 1e6, jnp.float32)]
+    )
+    (new,) = kmeans_step(pts, cent)
+    np.testing.assert_allclose(new[-1], cent[-1])
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

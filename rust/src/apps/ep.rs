@@ -1,0 +1,198 @@
+//! EP — NPB embarrassingly-parallel Monte Carlo kernel.
+//!
+//! Gaussian deviates by the Marsaglia polar method over a deterministic,
+//! index-seeded uniform stream; per-batch tallies into annulus counts
+//! `q[0..10]` plus running sums. Two code regions (Table 1: EP has 2):
+//! sample generation and tally accumulation.
+//!
+//! EP is the paper's "unsuitable" benchmark on both axes: its footprint is
+//! far below the LLC (everything lives dirty in the cache, so a crash
+//! loses all tallies → verification fails, recomputability ≈ 0), and its
+//! tally objects have a *constant* 100% inconsistent rate across crash
+//! tests — zero variance — so the Spearman selection cannot identify them
+//! as critical (§8 "what kind of application is not suitable").
+//! Verification is exact-count (no error tolerance).
+
+use std::cell::OnceCell;
+
+use super::{AppCore, Golden, RegionSpec};
+use crate::sim::{Buf, Env, ObjSpec, Signal};
+use crate::util::rng::Rng;
+
+const NQ: usize = 10;
+/// Samples (pairs) per main-loop iteration (batch).
+const BATCH: usize = 512;
+/// Rotating sample-buffer capacity.
+const XCAP: usize = 4096;
+
+pub struct Ep {
+    pub iters: u64,
+    pub seed: u64,
+    gold: OnceCell<Golden>,
+}
+
+impl Default for Ep {
+    fn default() -> Ep {
+        Ep {
+            iters: 256,
+            seed: 0x6570,
+            gold: OnceCell::new(),
+        }
+    }
+}
+
+pub struct St {
+    /// Uniform sample pairs, rotating window (candidate: written each
+    /// iteration, lifetime spans the main loop).
+    x: Buf,
+    /// Annulus counts (candidate; tiny, always cache-resident).
+    q: Buf,
+    /// Running sums [sx, sy] (candidate).
+    sums: Buf,
+    it: Buf,
+}
+
+impl AppCore for Ep {
+    type St = St;
+
+    fn name(&self) -> &'static str {
+        "ep"
+    }
+
+    fn description(&self) -> &'static str {
+        "NPB EP: Monte Carlo gaussian pairs with exact count verification"
+    }
+
+    fn region_specs(&self) -> Vec<RegionSpec> {
+        vec![RegionSpec::l("gen"), RegionSpec::l("accum")]
+    }
+
+    fn iters(&self) -> u64 {
+        self.iters
+    }
+
+    fn build<E: Env>(&self, env: &mut E) -> Result<St, Signal> {
+        let x = env.alloc(ObjSpec::f64("x", 2 * XCAP, true));
+        let q = env.alloc(ObjSpec::i64("q", NQ, true));
+        let sums = env.alloc(ObjSpec::f64("sums", 2, true));
+        let it = env.alloc(ObjSpec::i64("it", 1, true));
+        for i in 0..2 * XCAP {
+            env.st(x, i, 0.0)?;
+        }
+        for b in 0..NQ {
+            env.sti(q, b, 0)?;
+        }
+        env.st(sums, 0, 0.0)?;
+        env.st(sums, 1, 0.0)?;
+        env.sti(it, 0, 0)?;
+        Ok(St { x, q, sums, it })
+    }
+
+    fn step<E: Env>(&self, env: &mut E, st: &St, it: u64) -> Result<(), Signal> {
+        // R0: generate this batch's uniforms (index-seeded: stateless, so
+        // restart regenerates the identical stream).
+        env.region(0)?;
+        let base = ((it as usize) * BATCH) % XCAP;
+        for j in 0..BATCH {
+            let mut r = Rng::new(self.seed ^ (it * BATCH as u64 + j as u64));
+            env.st(st.x, 2 * (base + j), 2.0 * r.f64() - 1.0)?;
+            env.st(st.x, 2 * (base + j) + 1, 2.0 * r.f64() - 1.0)?;
+        }
+        // R1: Marsaglia acceptance + tallies.
+        env.region(1)?;
+        let (mut dsx, mut dsy) = (0.0f64, 0.0f64);
+        let mut dq = [0i64; NQ];
+        for j in 0..BATCH {
+            let x1 = env.ld(st.x, 2 * (base + j))?;
+            let x2 = env.ld(st.x, 2 * (base + j) + 1)?;
+            let t = x1 * x1 + x2 * x2;
+            if t <= 1.0 && t > 0.0 {
+                let f = (-2.0 * t.ln() / t).sqrt();
+                let (g1, g2) = (x1 * f, x2 * f);
+                let l = g1.abs().max(g2.abs()) as usize;
+                if l >= NQ {
+                    return Err(Signal::Interrupt);
+                }
+                dq[l] += 1;
+                dsx += g1;
+                dsy += g2;
+            }
+        }
+        for (b, d) in dq.iter().enumerate() {
+            if *d != 0 {
+                let c = env.ldi(st.q, b)?;
+                env.sti(st.q, b, c + d)?;
+            }
+        }
+        let sx = env.ld(st.sums, 0)? + dsx;
+        let sy = env.ld(st.sums, 1)? + dsy;
+        env.st(st.sums, 0, sx)?;
+        env.st(st.sums, 1, sy)?;
+        Ok(())
+    }
+
+    fn metric<E: Env>(&self, env: &mut E, st: &St) -> Result<f64, Signal> {
+        // Exact verification hash over counts + sums (integer-dominated).
+        let mut m = 0.0f64;
+        for b in 0..NQ {
+            m += env.ldi(st.q, b)? as f64 * (b as f64 + 1.0) * 1e3;
+        }
+        let sx = env.ld(st.sums, 0)?;
+        let sy = env.ld(st.sums, 1)?;
+        Ok(m + sx.to_bits() as f64 % 1e6 + sy.to_bits() as f64 % 1e6)
+    }
+
+    fn accept(&self, metric: f64, golden: &Golden) -> bool {
+        metric == golden.metric // exact: EP tolerates nothing
+    }
+
+    fn iter_buf(st: &St) -> Buf {
+        st.it
+    }
+
+    fn golden_cell(&self) -> &OnceCell<Golden> {
+        &self.gold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{CrashApp, Response, Snapshot};
+
+    #[test]
+    fn golden_reproducible() {
+        assert_eq!(Ep::default().golden().metric, Ep::default().golden().metric);
+    }
+
+    #[test]
+    fn lost_tallies_fail_verification() {
+        let ep = Ep::default();
+        let g = ep.golden();
+        // Restart at iter 10 with no persisted tallies: counts miss 10
+        // batches, exact verification fails, extra iterations cannot help.
+        let snap = Snapshot { iter: 10, objs: vec![] };
+        let mut eng = crate::runtime::NativeEngine::new();
+        let (resp, _) = ep.recompute(&snap, &g, &mut eng);
+        assert_eq!(resp, Response::S4);
+    }
+
+    #[test]
+    fn full_restart_is_s1() {
+        let ep = Ep::default();
+        let g = ep.golden();
+        let snap = Snapshot { iter: 0, objs: vec![] };
+        let mut eng = crate::runtime::NativeEngine::new();
+        assert_eq!(ep.recompute(&snap, &g, &mut eng).0, Response::S1);
+    }
+
+    #[test]
+    fn footprint_fits_in_llc() {
+        // EP is the paper's small-footprint case: everything cacheable.
+        let ep = Ep::default();
+        let cfg = crate::sim::SimConfig::mini();
+        let mut env = crate::sim::SimEnv::new(&cfg, ep.regions().len());
+        ep.build(&mut env).unwrap();
+        assert!(env.reg.footprint() < cfg.l3.size);
+    }
+}

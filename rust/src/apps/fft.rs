@@ -1,0 +1,166 @@
+//! Radix-2 complex FFT substrate for the FT benchmark.
+//!
+//! Iterative (bit-reversal + butterfly) Cooley–Tukey over the [`Env`]
+//! abstraction, operating on split re/im f64 buffers with an arbitrary
+//! stride so the same routine serves all three dimensions of FT's 3-D
+//! transform. Twiddle factors are computed on the fly (sin/cos are CPU
+//! work, not memory traffic, so this keeps the simulated access stream
+//! faithful to an in-place FFT).
+
+use crate::sim::{Buf, Env, Signal};
+
+/// In-place FFT of length `n` (power of two) over elements
+/// `base + k*stride` of the split complex arrays `(re, im)`.
+/// `inverse` selects the conjugate transform (unnormalized — FT divides
+/// once by the total size like NPB does).
+pub fn fft_strided<E: Env>(
+    env: &mut E,
+    re: Buf,
+    im: Buf,
+    base: usize,
+    stride: usize,
+    n: usize,
+    inverse: bool,
+) -> Result<(), Signal> {
+    debug_assert!(n.is_power_of_two());
+    let at = |k: usize| base + k * stride;
+
+    // Bit-reversal permutation.
+    let bits = n.trailing_zeros();
+    for k in 0..n {
+        let j = (k.reverse_bits() >> (usize::BITS - bits)) as usize;
+        if j > k {
+            let (ar, ai) = (env.ld(re, at(k))?, env.ld(im, at(k))?);
+            let (br, bi) = (env.ld(re, at(j))?, env.ld(im, at(j))?);
+            env.st(re, at(k), br)?;
+            env.st(im, at(k), bi)?;
+            env.st(re, at(j), ar)?;
+            env.st(im, at(j), ai)?;
+        }
+    }
+
+    // Butterflies.
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let (wr0, wi0) = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let (mut wr, mut wi) = (1.0f64, 0.0f64);
+            for j in 0..len / 2 {
+                let a = at(i + j);
+                let b = at(i + j + len / 2);
+                let (ar, ai) = (env.ld(re, a)?, env.ld(im, a)?);
+                let (br, bi) = (env.ld(re, b)?, env.ld(im, b)?);
+                let (tr, ti) = (br * wr - bi * wi, br * wi + bi * wr);
+                env.st(re, a, ar + tr)?;
+                env.st(im, a, ai + ti)?;
+                env.st(re, b, ar - tr)?;
+                env.st(im, b, ai - ti)?;
+                let nwr = wr * wr0 - wi * wi0;
+                wi = wr * wi0 + wi * wr0;
+                wr = nwr;
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{ObjSpec, RawEnv};
+
+    fn alloc_pair(env: &mut RawEnv, n: usize) -> (Buf, Buf) {
+        (
+            env.alloc(ObjSpec::f64("re", n, true)),
+            env.alloc(ObjSpec::f64("im", n, true)),
+        )
+    }
+
+    #[test]
+    fn fft_of_impulse_is_flat() {
+        let mut env = RawEnv::new();
+        let (re, im) = alloc_pair(&mut env, 16);
+        env.st(re, 0, 1.0).unwrap();
+        fft_strided(&mut env, re, im, 0, 1, 16, false).unwrap();
+        for k in 0..16 {
+            assert!((env.ld(re, k).unwrap() - 1.0).abs() < 1e-12);
+            assert!(env.ld(im, k).unwrap().abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn roundtrip_recovers_signal() {
+        let mut env = RawEnv::new();
+        let n = 64;
+        let (re, im) = alloc_pair(&mut env, n);
+        for k in 0..n {
+            env.st(re, k, (k as f64 * 0.37).sin()).unwrap();
+            env.st(im, k, (k as f64 * 0.11).cos()).unwrap();
+        }
+        let orig: Vec<(f64, f64)> = (0..n)
+            .map(|k| (env.ld(re, k).unwrap(), env.ld(im, k).unwrap()))
+            .collect();
+        fft_strided(&mut env, re, im, 0, 1, n, false).unwrap();
+        fft_strided(&mut env, re, im, 0, 1, n, true).unwrap();
+        for k in 0..n {
+            assert!((env.ld(re, k).unwrap() / n as f64 - orig[k].0).abs() < 1e-10);
+            assert!((env.ld(im, k).unwrap() / n as f64 - orig[k].1).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn strided_equals_contiguous() {
+        // FFT along a strided slice must equal the contiguous result.
+        let n = 32;
+        let mut a = RawEnv::new();
+        let (re_a, im_a) = alloc_pair(&mut a, n);
+        let mut b = RawEnv::new();
+        let (re_b, im_b) = alloc_pair(&mut b, n * 4);
+        for k in 0..n {
+            let v = (k as f64 * 0.77).sin();
+            a.st(re_a, k, v).unwrap();
+            b.st(re_b, k * 4, v).unwrap();
+        }
+        fft_strided(&mut a, re_a, im_a, 0, 1, n, false).unwrap();
+        fft_strided(&mut b, re_b, im_b, 0, 4, n, false).unwrap();
+        for k in 0..n {
+            assert!(
+                (a.ld(re_a, k).unwrap() - b.ld(re_b, k * 4).unwrap()).abs() < 1e-10
+            );
+            assert!(
+                (a.ld(im_a, k).unwrap() - b.ld(im_b, k * 4).unwrap()).abs() < 1e-10
+            );
+        }
+    }
+
+    #[test]
+    fn parseval_energy_preserved() {
+        let mut env = RawEnv::new();
+        let n = 128;
+        let (re, im) = alloc_pair(&mut env, n);
+        for k in 0..n {
+            env.st(re, k, (k as f64).cos()).unwrap();
+        }
+        let e_time: f64 = (0..n)
+            .map(|k| {
+                let r = env.ld(re, k).unwrap();
+                r * r
+            })
+            .sum();
+        fft_strided(&mut env, re, im, 0, 1, n, false).unwrap();
+        let e_freq: f64 = (0..n)
+            .map(|k| {
+                let r = env.ld(re, k).unwrap();
+                let i = env.ld(im, k).unwrap();
+                r * r + i * i
+            })
+            .sum::<f64>()
+            / n as f64;
+        assert!((e_time - e_freq).abs() < 1e-8 * e_time);
+    }
+}

@@ -1,0 +1,258 @@
+//! kmeans — Rodinia k-means clustering (data mining).
+//!
+//! Lloyd iterations over synthetic Gaussian clusters. One code region
+//! (paper Table 1: kmeans has a single region) covering assignment +
+//! centroid update. The only live cross-iteration state is the centroid
+//! array — the paper's famous 20 B critical data object: the points are
+//! read-only input data, re-generated deterministically on restart.
+//!
+//! Dynamics match the paper: the centroids always sit dirty in the cache
+//! (tiny object), so without EasyCrash a crash loses them and restart
+//! must re-converge from near-initial centroids (Table 1: 18.2 extra
+//! iterations on average → S2); flushing the centroids each iteration
+//! makes restart exact (S1).
+//!
+//! f32 numerics so the PJRT path (`kmeans_step` artifact, Pallas
+//! distance/assign kernel) is interchangeable with the native kernel.
+
+use std::cell::OnceCell;
+
+use super::{AppCore, Golden, RegionSpec};
+use crate::runtime::StepEngine;
+use crate::sim::{Buf, Env, ObjSpec, Signal};
+use crate::util::rng::Rng;
+
+pub const NPOINTS: usize = 16384;
+pub const DIMS: usize = 8;
+pub const K: usize = 8;
+
+pub struct Kmeans {
+    pub iters: u64,
+    pub tol_factor: f64,
+    pub seed: u64,
+    gold: OnceCell<Golden>,
+}
+
+impl Default for Kmeans {
+    fn default() -> Kmeans {
+        Kmeans {
+            iters: 14,
+            tol_factor: crate::util::env_f64("EC_TOL_KMEANS", 1.005),
+            seed: 0x6B6D,
+            gold: OnceCell::new(),
+        }
+    }
+}
+
+pub struct St {
+    /// Input points (read-only, re-generated on restart).
+    pts: Buf,
+    /// Centroids (the candidate critical data object).
+    cent: Buf,
+    it: Buf,
+}
+
+impl Kmeans {
+    /// Deterministic synthetic clusters: K Gaussian blobs on a hypercube.
+    fn gen_points<E: Env>(&self, env: &mut E, pts: Buf) -> Result<(), Signal> {
+        let mut rng = Rng::new(self.seed);
+        for p in 0..NPOINTS {
+            let c = p % K;
+            for d in 0..DIMS {
+                // Overlapping blobs (centers ±1.2, σ=1.0): Lloyd needs a
+                // meaningful number of iterations to settle boundaries.
+                let center = if (c >> (d % 3)) & 1 == 1 { 1.2 } else { -1.2 };
+                let jitter = rng.gauss() as f32 * 1.35;
+                env.stf(pts, p * DIMS + d, center + jitter)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn inertia<E: Env>(&self, env: &mut E, st: &St) -> Result<f64, Signal> {
+        let mut total = 0.0f64;
+        for p in 0..NPOINTS {
+            let mut best = f32::INFINITY;
+            for c in 0..K {
+                let mut d2 = 0.0f32;
+                for d in 0..DIMS {
+                    let diff = env.ldf(st.pts, p * DIMS + d)? - env.ldf(st.cent, c * DIMS + d)?;
+                    d2 += diff * diff;
+                }
+                if d2 < best {
+                    best = d2;
+                }
+            }
+            total += best as f64;
+        }
+        Ok(total)
+    }
+}
+
+impl AppCore for Kmeans {
+    type St = St;
+
+    fn name(&self) -> &'static str {
+        "kmeans"
+    }
+
+    fn description(&self) -> &'static str {
+        "Rodinia kmeans: Lloyd iterations on synthetic Gaussian clusters"
+    }
+
+    fn region_specs(&self) -> Vec<RegionSpec> {
+        vec![RegionSpec::l("lloyd")]
+    }
+
+    fn iters(&self) -> u64 {
+        self.iters
+    }
+
+    fn build<E: Env>(&self, env: &mut E) -> Result<St, Signal> {
+        let pts = env.alloc(ObjSpec::f32("points", NPOINTS * DIMS, false));
+        let cent = env.alloc(ObjSpec::f32("centroids", K * DIMS, true));
+        let it = env.alloc(ObjSpec::i64("it", 1, true));
+        self.gen_points(env, pts)?;
+        // Deliberately poor initialization: the first K points shrunk
+        // toward the origin, so Lloyd needs a meaningful number of
+        // iterations to separate the blobs (and restart from initial
+        // centroids costs extra iterations, the paper's kmeans case).
+        for c in 0..K {
+            for d in 0..DIMS {
+                let v = env.ldf(pts, c * DIMS + d)?;
+                env.stf(cent, c * DIMS + d, 0.25 * v)?;
+            }
+        }
+        env.sti(it, 0, 0)?;
+        Ok(St { pts, cent, it })
+    }
+
+    fn step<E: Env>(&self, env: &mut E, st: &St, _it: u64) -> Result<(), Signal> {
+        env.region(0)?;
+        // Assignment + accumulation in one pass (native Lloyd iteration).
+        let mut sums = [[0.0f32; DIMS]; K];
+        let mut counts = [0u32; K];
+        for p in 0..NPOINTS {
+            let mut best = f32::INFINITY;
+            let mut bc = 0usize;
+            for c in 0..K {
+                let mut d2 = 0.0f32;
+                for d in 0..DIMS {
+                    let diff =
+                        env.ldf(st.pts, p * DIMS + d)? - env.ldf(st.cent, c * DIMS + d)?;
+                    d2 += diff * diff;
+                }
+                if d2 < best {
+                    best = d2;
+                    bc = c;
+                }
+            }
+            counts[bc] += 1;
+            for d in 0..DIMS {
+                sums[bc][d] += env.ldf(st.pts, p * DIMS + d)?;
+            }
+        }
+        for c in 0..K {
+            if counts[c] > 0 {
+                for d in 0..DIMS {
+                    env.stf(st.cent, c * DIMS + d, sums[c][d] / counts[c] as f32)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn step_fast(
+        &self,
+        env: &mut crate::sim::RawEnv,
+        st: &St,
+        it: u64,
+        engine: &mut dyn StepEngine,
+    ) -> Result<(), Signal> {
+        if !engine.supports("kmeans_step") {
+            return self.step(env, st, it);
+        }
+        let pts = env.f32_slice(st.pts).to_vec();
+        let cent = env.f32_slice(st.cent).to_vec();
+        let outs = engine
+            .call_f32("kmeans_step", &[&pts, &cent])
+            .map_err(|_| Signal::Interrupt)?;
+        env.f32_slice_mut(st.cent).copy_from_slice(&outs[0]);
+        Ok(())
+    }
+
+    fn metric<E: Env>(&self, env: &mut E, st: &St) -> Result<f64, Signal> {
+        self.inertia(env, st)
+    }
+
+    fn accept(&self, metric: f64, golden: &Golden) -> bool {
+        metric.is_finite() && metric <= golden.metric * self.tol_factor
+    }
+
+    fn iter_buf(st: &St) -> Buf {
+        st.it
+    }
+
+    fn golden_cell(&self) -> &OnceCell<Golden> {
+        &self.gold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::CrashApp;
+    use crate::sim::RawEnv;
+
+    #[test]
+    fn lloyd_reduces_inertia() {
+        let km = Kmeans::default();
+        let mut raw = RawEnv::new();
+        let st = km.build(&mut raw).unwrap();
+        let i0 = km.inertia(&mut raw, &st).unwrap();
+        for it in 0..km.iters {
+            km.step(&mut raw, &st, it).unwrap();
+        }
+        let i1 = km.inertia(&mut raw, &st).unwrap();
+        assert!(i1 < i0 * 0.8, "inertia must drop: {i0} -> {i1}");
+    }
+
+    #[test]
+    fn extended_run_never_increases_inertia() {
+        // Lloyd is monotone: running past the nominal end can only keep or
+        // improve the inertia (the nominal count is deliberately tight so
+        // restarts from stale centroids need extra iterations, like the
+        // paper's kmeans).
+        let km = Kmeans::default();
+        let g = km.golden();
+        let mut raw = RawEnv::new();
+        let st = km.build(&mut raw).unwrap();
+        for it in 0..km.iters + 10 {
+            km.step(&mut raw, &st, it).unwrap();
+        }
+        let extended = km.inertia(&mut raw, &st).unwrap();
+        assert!(extended <= g.metric * 1.0001, "lloyd must be monotone");
+    }
+
+    #[test]
+    fn restart_with_fresh_centroids_needs_extra_iters() {
+        // Emulate the paper's kmeans failure mode: crash late, centroids
+        // lost (back to init), only a few iterations remain -> S2.
+        use crate::apps::{Response, Snapshot};
+        let km = Kmeans::default();
+        let g = km.golden();
+        let snap = Snapshot {
+            iter: km.iters - 2,
+            objs: vec![], // nothing persisted: centroids re-initialized
+        };
+        let mut eng = crate::runtime::NativeEngine::new();
+        let (resp, extra) = km.recompute(&snap, &g, &mut eng);
+        assert_eq!(resp, Response::S2, "needs extra iterations");
+        assert!(extra > 0);
+    }
+
+    #[test]
+    fn single_region_like_paper() {
+        assert_eq!(Kmeans::default().regions().len(), 1);
+    }
+}

@@ -1,0 +1,327 @@
+//! The benchmark suite (paper Table 1): NPB CG/MG/FT/IS/BT/SP/LU/EP plus
+//! botsspar (SPEC OMP), LULESH and Rodinia kmeans, re-implemented as
+//! mini-class kernels over the [`Env`](crate::sim::Env) abstraction.
+//!
+//! Each app implements [`AppCore`] once, generically over `Env`; the
+//! blanket impl of [`CrashApp`] derives from it:
+//!
+//! * the instrumented full run ([`CrashApp::run_sim`], the NVCT path),
+//! * the memoized golden run (uninstrumented reference execution),
+//! * restart + S1–S4 classification from a crash snapshot
+//!   ([`CrashApp::recompute`], the campaign hot path, optionally through
+//!   the PJRT engine).
+
+use std::cell::OnceCell;
+
+use crate::runtime::StepEngine;
+use crate::sim::{Buf, Env, ObjId, RawEnv, Signal, SimEnv};
+
+pub mod adi;
+pub mod bt;
+pub mod botsspar;
+pub mod cg;
+pub mod ep;
+pub mod fft;
+pub mod ft;
+pub mod is;
+pub mod kmeans;
+pub mod lu;
+pub mod lulesh;
+pub mod mg;
+pub mod sp;
+pub mod toy;
+
+/// Static description of one code region (§5.2): a first-level inner loop
+/// or the block between two adjacent first-level inner loops.
+#[derive(Clone, Debug)]
+pub struct RegionSpec {
+    pub name: &'static str,
+    /// Loop-structured regions support frequency-`x` persistence (Eq. 5);
+    /// non-loop regions are flushed at region end or not at all.
+    pub is_loop: bool,
+}
+
+impl RegionSpec {
+    pub fn l(name: &'static str) -> RegionSpec {
+        RegionSpec { name, is_loop: true }
+    }
+    pub fn b(name: &'static str) -> RegionSpec {
+        RegionSpec { name, is_loop: false }
+    }
+}
+
+/// Result of the reference (golden) run.
+#[derive(Clone, Copy, Debug)]
+pub struct Golden {
+    /// Main-loop iteration count of the original execution (Table 1).
+    pub iters: u64,
+    /// Final value of the app's acceptance-verification metric.
+    pub metric: f64,
+}
+
+/// Crash snapshot handed from the campaign to `recompute`: the persisted
+/// NVM bytes of every candidate object plus the persisted loop-iterator
+/// bookmark.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub iter: u64,
+    pub objs: Vec<(ObjId, Vec<u8>)>,
+}
+
+/// The four application responses after crash + restart (§4.2 / Fig. 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Response {
+    /// Successful recomputation, no extra iterations.
+    S1,
+    /// Successful recomputation with ≥1 extra iteration.
+    S2,
+    /// Interruption (restart could not run to completion, e.g. segfault).
+    S3,
+    /// Acceptance verification fails even after 2× the original iterations.
+    S4,
+}
+
+impl Response {
+    /// "Recomputes" in the paper's strict sense (§2.2): correct outcome
+    /// *and* no extra iterations.
+    pub fn recomputes(self) -> bool {
+        self == Response::S1
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Response::S1 => "S1",
+            Response::S2 => "S2",
+            Response::S3 => "S3",
+            Response::S4 => "S4",
+        }
+    }
+}
+
+/// What each benchmark implements, written once and generic over [`Env`].
+pub trait AppCore {
+    /// Per-app state: the buffers allocated in `build` plus scalars.
+    type St;
+
+    fn name(&self) -> &'static str;
+    fn description(&self) -> &'static str;
+    fn region_specs(&self) -> Vec<RegionSpec>;
+    /// Main-loop iteration count of the nominal run.
+    fn iters(&self) -> u64;
+
+    /// Allocate every data object and run the initialization phase.
+    fn build<E: Env>(&self, env: &mut E) -> Result<Self::St, Signal>;
+
+    /// One main-loop iteration (calls `env.region(k)` at phase boundaries).
+    fn step<E: Env>(&self, env: &mut E, st: &Self::St, it: u64) -> Result<(), Signal>;
+
+    /// One main-loop iteration on the fast (recompute) path. Defaults to
+    /// the native kernel; flagship apps route through the PJRT engine.
+    fn step_fast(
+        &self,
+        env: &mut RawEnv,
+        st: &Self::St,
+        it: u64,
+        _engine: &mut dyn StepEngine,
+    ) -> Result<(), Signal> {
+        self.step(env, st, it)
+    }
+
+    /// Compute the acceptance-verification metric over current state.
+    fn metric<E: Env>(&self, env: &mut E, st: &Self::St) -> Result<f64, Signal>;
+
+    /// Acceptance verification (§2.2): is `metric` an acceptable outcome
+    /// given the golden run?
+    fn accept(&self, metric: f64, golden: &Golden) -> bool;
+
+    /// The loop-iterator bookmark buffer within `St`.
+    fn iter_buf(st: &Self::St) -> Buf;
+
+    /// Memoization cell for the golden run.
+    fn golden_cell(&self) -> &OnceCell<Golden>;
+}
+
+/// Object-safe interface the coordinator (campaigns, reports, CLI) uses.
+pub trait CrashApp {
+    fn name(&self) -> &'static str;
+    fn description(&self) -> &'static str;
+    fn regions(&self) -> Vec<RegionSpec>;
+    fn nominal_iters(&self) -> u64;
+
+    /// Full instrumented run over the NVCT simulator. `Err` only in
+    /// halt-at-crash mode.
+    fn run_sim(&self, env: &mut SimEnv) -> Result<(), Signal>;
+
+    /// Reference run (memoized).
+    fn golden(&self) -> Golden;
+
+    /// Restart from a crash snapshot, classify the response, and report
+    /// extra iterations used (0 unless S2).
+    fn recompute(
+        &self,
+        snap: &Snapshot,
+        golden: &Golden,
+        engine: &mut dyn StepEngine,
+    ) -> (Response, u64);
+}
+
+impl<T: AppCore> CrashApp for T {
+    fn name(&self) -> &'static str {
+        AppCore::name(self)
+    }
+
+    fn description(&self) -> &'static str {
+        AppCore::description(self)
+    }
+
+    fn regions(&self) -> Vec<RegionSpec> {
+        self.region_specs()
+    }
+
+    fn nominal_iters(&self) -> u64 {
+        self.iters()
+    }
+
+    fn run_sim(&self, env: &mut SimEnv) -> Result<(), Signal> {
+        let st = self.build(env)?;
+        env.mark_main_start();
+        let it_buf = Self::iter_buf(&st);
+        for it in 0..self.iters() {
+            self.step(env, &st, it)?;
+            // Bookmark "resume at it+1"; persisted by iter_end.
+            env.sti(it_buf, 0, (it + 1) as i64)?;
+            env.iter_end(it)?;
+        }
+        Ok(())
+    }
+
+    fn golden(&self) -> Golden {
+        *self.golden_cell().get_or_init(|| {
+            let mut raw = RawEnv::new();
+            let st = self.build(&mut raw).expect("golden build cannot fail");
+            for it in 0..self.iters() {
+                self.step(&mut raw, &st, it).expect("golden step cannot fail");
+            }
+            let metric = self
+                .metric(&mut raw, &st)
+                .expect("golden metric cannot fail");
+            Golden {
+                iters: self.iters(),
+                metric,
+            }
+        })
+    }
+
+    fn recompute(
+        &self,
+        snap: &Snapshot,
+        golden: &Golden,
+        engine: &mut dyn StepEngine,
+    ) -> (Response, u64) {
+        let mut raw = RawEnv::new();
+        // Restart = re-initialize, then overlay persisted candidates
+        // (Fig. 2b: initialize(); load_value(...); resume main loop).
+        let st = match self.build(&mut raw) {
+            Ok(s) => s,
+            Err(_) => return (Response::S3, 0),
+        };
+        for (id, bytes) in &snap.objs {
+            match raw.buf_of(*id) {
+                Some(buf) if buf.len as usize * buf.ty.bytes() == bytes.len() => {
+                    raw.load_bytes(buf, bytes)
+                }
+                _ => return (Response::S3, 0),
+            }
+        }
+        let nominal = self.iters();
+        let start = snap.iter.min(nominal);
+        // Run the remaining nominal iterations.
+        for it in start..nominal {
+            if let Err(_s) = self.step_fast(&mut raw, &st, it, engine) {
+                return (Response::S3, 0);
+            }
+        }
+        match self.metric(&mut raw, &st) {
+            Ok(m) if self.accept(m, golden) => return (Response::S1, 0),
+            Ok(_) => {}
+            Err(_) => return (Response::S3, 0),
+        }
+        // Verification failed at the nominal end: allow extra iterations up
+        // to 2× the original execution (§4.2 response definitions).
+        let max = nominal * 2;
+        for it in nominal..max {
+            if let Err(_s) = self.step_fast(&mut raw, &st, it, engine) {
+                return (Response::S3, it - nominal);
+            }
+            match self.metric(&mut raw, &st) {
+                Ok(m) if self.accept(m, golden) => return (Response::S2, it - nominal + 1),
+                Ok(_) => {}
+                Err(_) => return (Response::S3, it - nominal),
+            }
+        }
+        (Response::S4, max - nominal)
+    }
+}
+
+/// All paper benchmarks, default mini-class configurations, in Table 1
+/// order.
+pub fn all() -> Vec<Box<dyn CrashApp>> {
+    vec![
+        Box::new(cg::Cg::default()),
+        Box::new(mg::Mg::default()),
+        Box::new(ft::Ft::default()),
+        Box::new(is::Is::default()),
+        Box::new(bt::Bt::default()),
+        Box::new(lu::Lu::default()),
+        Box::new(sp::Sp::default()),
+        Box::new(ep::Ep::default()),
+        Box::new(botsspar::Botsspar::default()),
+        Box::new(lulesh::Lulesh::default()),
+        Box::new(kmeans::Kmeans::default()),
+    ]
+}
+
+/// The Fig. 5/6/Table-4 evaluation set: every benchmark except EP, whose
+/// inherent recomputability is ~0 and which the paper excludes from the
+/// EasyCrash evaluation (§6).
+pub fn eval_set() -> Vec<Box<dyn CrashApp>> {
+    all().into_iter().filter(|a| a.name() != "ep").collect()
+}
+
+/// Look up a benchmark by name (incl. the `toy` test app).
+pub fn by_name(name: &str) -> Option<Box<dyn CrashApp>> {
+    if name == "toy" {
+        return Some(Box::new(toy::Toy::default()));
+    }
+    all().into_iter().find(|a| a.name() == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_eleven_paper_apps() {
+        let apps = all();
+        assert_eq!(apps.len(), 11);
+        let names: Vec<_> = apps.iter().map(|a| a.name()).collect();
+        for expected in [
+            "cg", "mg", "ft", "is", "bt", "lu", "sp", "ep", "botsspar", "lulesh", "kmeans",
+        ] {
+            assert!(names.contains(&expected), "missing {expected}");
+        }
+    }
+
+    #[test]
+    fn eval_set_excludes_ep() {
+        assert!(eval_set().iter().all(|a| a.name() != "ep"));
+        assert_eq!(eval_set().len(), 10);
+    }
+
+    #[test]
+    fn by_name_resolves() {
+        assert!(by_name("mg").is_some());
+        assert!(by_name("toy").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,132 @@
+//! Mini benchmarking harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets set `harness = false` and drive this: warmup,
+//! time-budgeted iteration, mean / p50 / p95 and optional throughput,
+//! printed in a stable single-line-per-benchmark format that the §Perf
+//! logs in EXPERIMENTS.md quote directly.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark group printer.
+pub struct Bench {
+    name: String,
+    warmup: Duration,
+    budget: Duration,
+}
+
+/// Result of one measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    pub iters: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        // Honor `cargo bench -- --quick`-style budget via env.
+        let ms = std::env::var("EC_BENCH_MS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(700u64);
+        Bench {
+            name: name.to_string(),
+            warmup: Duration::from_millis(ms / 4),
+            budget: Duration::from_millis(ms),
+        }
+    }
+
+    /// Measure `f` repeatedly within the time budget.
+    pub fn run<F: FnMut()>(&self, case: &str, mut f: F) -> Measurement {
+        // Warmup.
+        let t0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while t0.elapsed() < self.warmup || warm_iters == 0 {
+            f();
+            warm_iters += 1;
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let t1 = Instant::now();
+        while t1.elapsed() < self.budget || samples.is_empty() {
+            let s = Instant::now();
+            f();
+            samples.push(s.elapsed());
+            if samples.len() >= 10_000 {
+                break;
+            }
+        }
+        samples.sort_unstable();
+        let total: Duration = samples.iter().sum();
+        let m = Measurement {
+            iters: samples.len() as u64,
+            mean: total / samples.len() as u32,
+            p50: samples[samples.len() / 2],
+            p95: samples[(samples.len() * 95 / 100).min(samples.len() - 1)],
+        };
+        println!(
+            "bench {:<40} {:>8} iters  mean {:>12?}  p50 {:>12?}  p95 {:>12?}",
+            format!("{}/{}", self.name, case),
+            m.iters,
+            m.mean,
+            m.p50,
+            m.p95
+        );
+        m
+    }
+
+    /// Measure and report a throughput in "units/s" (e.g. simulated ops).
+    pub fn run_throughput<F: FnMut() -> u64>(&self, case: &str, mut f: F) -> Measurement {
+        let mut units_total = 0u64;
+        let t0 = Instant::now();
+        let mut warm = 0;
+        while t0.elapsed() < self.warmup || warm == 0 {
+            f();
+            warm += 1;
+        }
+        let mut samples = Vec::new();
+        let t1 = Instant::now();
+        while t1.elapsed() < self.budget || samples.is_empty() {
+            let s = Instant::now();
+            units_total += f();
+            samples.push(s.elapsed());
+            if samples.len() >= 10_000 {
+                break;
+            }
+        }
+        let wall: Duration = samples.iter().sum();
+        samples.sort_unstable();
+        let m = Measurement {
+            iters: samples.len() as u64,
+            mean: wall / samples.len() as u32,
+            p50: samples[samples.len() / 2],
+            p95: samples[(samples.len() * 95 / 100).min(samples.len() - 1)],
+        };
+        let rate = units_total as f64 / wall.as_secs_f64();
+        println!(
+            "bench {:<40} {:>8} iters  mean {:>12?}  throughput {:>10.1}M units/s",
+            format!("{}/{}", self.name, case),
+            m.iters,
+            m.mean,
+            rate / 1e6
+        );
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("EC_BENCH_MS", "40");
+        let b = Bench::new("selftest");
+        let m = b.run("noop-ish", || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(m.iters > 0);
+        assert!(m.p50 <= m.p95);
+    }
+}

@@ -1,0 +1,393 @@
+//! Crash-test campaigns (§2.2 / §4.1): run an application under a
+//! persistence plan, crash it at uniformly-random points of the main
+//! loop, restart from the surviving NVM image, and classify every
+//! response.
+//!
+//! ## Single-pass design (see DESIGN.md §Perf)
+//!
+//! Under a fixed plan, a crash is an *observation* — it does not perturb
+//! the pre-crash event stream. So instead of the paper's N independent
+//! instrumented runs per campaign, we draw all N crash points up-front,
+//! sort them, and harvest them in ONE instrumented execution: at each
+//! point the observer records per-object inconsistency, snapshots the
+//! candidates' persisted bytes, and restarts + classifies inline on the
+//! fast engine. This is what makes 1000-test campaigns on 11 apps
+//! tractable on one core.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::apps::{CrashApp, Response, Snapshot};
+use crate::runtime::StepEngine;
+use crate::sim::{HierStats, ObjId, SimConfig, SimEnv};
+use crate::util::rng::Rng;
+
+use super::plan::PersistPlan;
+
+/// One crash test's outcome.
+#[derive(Clone, Debug)]
+pub struct TestRecord {
+    /// Memory-op index of the crash.
+    pub op: u64,
+    /// Main-loop iteration in progress.
+    pub iter: u64,
+    /// Code region in progress (== `num_regions` during inter-region ops).
+    pub region: usize,
+    pub response: Response,
+    pub extra_iters: u64,
+    /// Data inconsistent rate per candidate object (campaign candidate
+    /// order).
+    pub inconsistency: Vec<f64>,
+}
+
+/// Aggregated result of one campaign.
+#[derive(Clone, Debug)]
+pub struct CampaignResult {
+    pub app: String,
+    pub plan: PersistPlan,
+    pub records: Vec<TestRecord>,
+    /// Candidate objects: (id, name, bytes).
+    pub candidates: Vec<(ObjId, String, usize)>,
+    /// Total instrumented ops / ops at main-loop start.
+    pub ops_total: u64,
+    pub ops_main_start: u64,
+    /// Modeled execution cycles of the full run under this plan.
+    pub cycles: f64,
+    /// Per-region cycles (`a_k` numerators; last slot = out-of-region).
+    pub region_cycles: Vec<f64>,
+    /// Number of persistence operations and their total cycles (Table 4).
+    pub persist_ops: u64,
+    pub persist_cycles: f64,
+    /// Cache/NVM event counters for the full run.
+    pub stats: HierStats,
+    pub footprint: usize,
+    pub num_regions: usize,
+}
+
+impl CampaignResult {
+    /// Application recomputability (§2.2): fraction of tests that
+    /// recompute successfully with no extra iterations (S1).
+    pub fn recomputability(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records
+            .iter()
+            .filter(|r| r.response.recomputes())
+            .count() as f64
+            / self.records.len() as f64
+    }
+
+    /// Fraction of each response class [S1, S2, S3, S4] (Fig. 3).
+    pub fn response_fractions(&self) -> [f64; 4] {
+        let mut c = [0usize; 4];
+        for r in &self.records {
+            let i = match r.response {
+                Response::S1 => 0,
+                Response::S2 => 1,
+                Response::S3 => 2,
+                Response::S4 => 3,
+            };
+            c[i] += 1;
+        }
+        let n = self.records.len().max(1) as f64;
+        [
+            c[0] as f64 / n,
+            c[1] as f64 / n,
+            c[2] as f64 / n,
+            c[3] as f64 / n,
+        ]
+    }
+
+    /// Recomputability of crashes that landed in region `k` (`c_k`).
+    /// Returns `None` when no crash landed there (insufficient samples).
+    pub fn region_recomputability(&self, k: usize) -> Option<f64> {
+        let hits: Vec<&TestRecord> = self.records.iter().filter(|r| r.region == k).collect();
+        if hits.is_empty() {
+            return None;
+        }
+        Some(hits.iter().filter(|r| r.response.recomputes()).count() as f64 / hits.len() as f64)
+    }
+
+    /// Mean extra iterations over successful-with-overhead tests (Table 1
+    /// "Ave. # of extra iter.").
+    pub fn mean_extra_iters(&self) -> Option<f64> {
+        let s2: Vec<u64> = self
+            .records
+            .iter()
+            .filter(|r| r.response == Response::S2)
+            .map(|r| r.extra_iters)
+            .collect();
+        if s2.is_empty() {
+            None
+        } else {
+            Some(s2.iter().sum::<u64>() as f64 / s2.len() as f64)
+        }
+    }
+
+    /// `a_k` time ratio of region `k` (Eq. 1).
+    pub fn a(&self, k: usize) -> f64 {
+        if self.cycles == 0.0 {
+            0.0
+        } else {
+            self.region_cycles[k] / self.cycles
+        }
+    }
+
+    /// Inconsistency/success vectors for candidate `j` (Spearman input).
+    pub fn vectors_for(&self, j: usize) -> (Vec<f64>, Vec<f64>) {
+        let xs = self.records.iter().map(|r| r.inconsistency[j]).collect();
+        let ys = self
+            .records
+            .iter()
+            .map(|r| if r.response.recomputes() { 1.0 } else { 0.0 })
+            .collect();
+        (xs, ys)
+    }
+}
+
+/// Campaign runner.
+pub struct Campaign {
+    pub tests: usize,
+    pub seed: u64,
+    pub cfg: SimConfig,
+    /// §6 "result verification" mode: snapshot the *architectural* image
+    /// instead of NVM at each crash (the physical-machine methodology
+    /// where copying data forces consistency). Reported as "VFY" in
+    /// Fig. 6.
+    pub verified: bool,
+}
+
+impl Default for Campaign {
+    fn default() -> Campaign {
+        Campaign {
+            tests: 400,
+            seed: 0xEC,
+            cfg: SimConfig::mini(),
+            verified: false,
+        }
+    }
+}
+
+impl Campaign {
+    pub fn new(tests: usize, seed: u64) -> Campaign {
+        Campaign {
+            tests,
+            seed,
+            cfg: SimConfig::mini(),
+            verified: false,
+        }
+    }
+
+    /// Profile run only: execute the app under `plan` with no crashes and
+    /// return the (records-empty) result — the timing/write side of the
+    /// campaign, used by Table 4 / Fig. 7-9 and the `l_k` estimates.
+    pub fn profile(&self, app: &dyn CrashApp, plan: &PersistPlan) -> CampaignResult {
+        self.run_inner(app, plan, None)
+    }
+
+    /// Full campaign: profile + crash harvesting + inline classification.
+    pub fn run(
+        &self,
+        app: &dyn CrashApp,
+        plan: &PersistPlan,
+        engine: &mut dyn StepEngine,
+    ) -> CampaignResult {
+        // Pass 1 (profile) to learn the op-count range of the main loop.
+        let profile = self.run_inner(app, plan, None);
+        let mut rng = Rng::new(self.seed ^ 0x9E37_79B9_7F4A_7C15);
+        let lo = profile.ops_main_start;
+        let hi = profile.ops_total.max(lo + 1);
+        let points: Vec<u64> = {
+            let span = hi - lo;
+            let mut v: Vec<u64> = (0..self.tests).map(|_| lo + rng.below(span)).collect();
+            v.sort_unstable();
+            v
+        };
+        // Pass 2: harvest.
+        let mut res = self.run_inner(app, plan, Some((points, engine)));
+        res.ops_main_start = profile.ops_main_start;
+        res
+    }
+
+    fn run_inner(
+        &self,
+        app: &dyn CrashApp,
+        plan: &PersistPlan,
+        crash: Option<(Vec<u64>, &mut dyn StepEngine)>,
+    ) -> CampaignResult {
+        let num_regions = app.regions().len();
+        let mut env = SimEnv::new(&self.cfg, num_regions);
+        let records = Rc::new(RefCell::new(Vec::new()));
+        let golden = app.golden();
+
+        // Hooks can only resolve after `build` registers the objects, but
+        // `run_sim` does both build and the main loop. Learn the registry
+        // layout from a probe env halted at the very first memory access —
+        // by convention every app registers all of its objects before its
+        // first data access, and allocation order is deterministic, so the
+        // probe layout's ids match the real run's.
+        let layout = {
+            let mut probe = SimEnv::new(&self.cfg, num_regions);
+            probe.halt_at = Some(1);
+            let _ = app.run_sim(&mut probe);
+            probe.reg
+        };
+        let hooks = plan
+            .resolve(&layout, num_regions)
+            .expect("plan must resolve against the app's registry");
+        env.set_hooks(hooks);
+
+        let candidates: Vec<(ObjId, String, usize)> = layout
+            .candidates()
+            .into_iter()
+            .map(|id| {
+                let o = layout.get(id);
+                (id, o.spec.name.to_string(), o.spec.bytes())
+            })
+            .collect();
+
+        if let Some((points, engine)) = crash {
+            let engine = RefCell::new(engine);
+            let records_sink = records.clone();
+            let cand = candidates.clone();
+            let app_ref: &dyn CrashApp = app;
+            let verified = self.verified;
+            let obs: crate::sim::Observer<'_> = Box::new(move |env, info| {
+                let inconsistency: Vec<f64> =
+                    cand.iter().map(|(id, _, _)| env.inconsistent_rate(*id)).collect();
+                let snap = Snapshot {
+                    iter: if verified { info.iter } else { env.nvm_iter() },
+                    objs: cand
+                        .iter()
+                        .map(|(id, _, _)| {
+                            let bytes = if verified {
+                                env.arch_bytes(*id)
+                            } else {
+                                env.nvm_bytes(*id)
+                            };
+                            (*id, bytes)
+                        })
+                        .collect(),
+                };
+                let mut eng = engine.borrow_mut();
+                let (response, extra) = app_ref.recompute(&snap, &golden, &mut **eng);
+                records_sink.borrow_mut().push(TestRecord {
+                    op: info.op,
+                    iter: info.iter,
+                    region: info.region,
+                    response,
+                    extra_iters: extra,
+                    inconsistency,
+                });
+            });
+            // Scope the observer borrow to the run.
+            let mut env2 = env;
+            env2.set_crash_points(points, obs);
+            app.run_sim(&mut env2).expect("campaign run must complete");
+            return Self::collect(app, plan, env2, records, candidates, num_regions);
+        }
+
+        app.run_sim(&mut env).expect("profile run must complete");
+        Self::collect(app, plan, env, records, candidates, num_regions)
+    }
+
+    fn collect(
+        app: &dyn CrashApp,
+        plan: &PersistPlan,
+        env: SimEnv,
+        records: Rc<RefCell<Vec<TestRecord>>>,
+        candidates: Vec<(ObjId, String, usize)>,
+        num_regions: usize,
+    ) -> CampaignResult {
+        let records = records.borrow().clone();
+        CampaignResult {
+            app: app.name().to_string(),
+            plan: plan.clone(),
+            records,
+            candidates,
+            ops_total: env.ops(),
+            ops_main_start: env.main_start_ops(),
+            cycles: env.clock.cycles,
+            region_cycles: env.clock.by_region.clone(),
+            persist_ops: env.persist_ops,
+            persist_cycles: env.persist_cycles,
+            stats: env.hier.stats,
+            footprint: env.reg.footprint(),
+            num_regions,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::by_name;
+    use crate::runtime::NativeEngine;
+
+    #[test]
+    fn profile_measures_ops_and_cycles() {
+        let app = by_name("toy").unwrap();
+        let c = Campaign::new(0, 1);
+        let r = c.profile(app.as_ref(), &PersistPlan::none());
+        assert!(r.ops_total > r.ops_main_start);
+        assert!(r.ops_main_start > 0);
+        assert!(r.cycles > 0.0);
+        assert_eq!(r.candidates.len(), 3); // x, y, it
+        assert!(r.records.is_empty());
+    }
+
+    #[test]
+    fn campaign_collects_n_records() {
+        let app = by_name("toy").unwrap();
+        let c = Campaign::new(50, 2);
+        let mut eng = NativeEngine::new();
+        let r = c.run(app.as_ref(), &PersistPlan::none(), &mut eng);
+        assert_eq!(r.records.len(), 50);
+        // Crash points were restricted to the main loop.
+        assert!(r.records.iter().all(|t| t.op >= r.ops_main_start));
+        // Inconsistency rates are valid fractions.
+        assert!(r
+            .records
+            .iter()
+            .all(|t| t.inconsistency.iter().all(|&x| (0.0..=1.0).contains(&x))));
+    }
+
+    #[test]
+    fn persistence_improves_toy_recomputability() {
+        let app = by_name("toy").unwrap();
+        let c = Campaign::new(120, 3);
+        let mut eng = NativeEngine::new();
+        let base = c.run(app.as_ref(), &PersistPlan::none(), &mut eng);
+        let plan = PersistPlan::at_iter_end(&["x", "y"], 2, 1);
+        let with = c.run(app.as_ref(), &plan, &mut eng);
+        assert!(
+            with.recomputability() >= base.recomputability(),
+            "persistence must not hurt: {} vs {}",
+            with.recomputability(),
+            base.recomputability()
+        );
+        assert!(with.persist_ops > 0);
+    }
+
+    #[test]
+    fn results_are_deterministic_for_seed() {
+        let app = by_name("toy").unwrap();
+        let c = Campaign::new(40, 7);
+        let mut eng = NativeEngine::new();
+        let a = c.run(app.as_ref(), &PersistPlan::none(), &mut eng);
+        let b = c.run(app.as_ref(), &PersistPlan::none(), &mut eng);
+        assert_eq!(a.recomputability(), b.recomputability());
+        assert_eq!(a.ops_total, b.ops_total);
+    }
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let app = by_name("toy").unwrap();
+        let c = Campaign::new(60, 9);
+        let mut eng = NativeEngine::new();
+        let r = c.run(app.as_ref(), &PersistPlan::none(), &mut eng);
+        let f = r.response_fractions();
+        assert!((f.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+}

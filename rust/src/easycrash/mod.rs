@@ -1,0 +1,14 @@
+//! The EasyCrash framework (the paper's §5 contribution): crash-test
+//! campaigns, outcome classification, statistical selection of critical
+//! data objects, code-region selection and the end-to-end workflow.
+
+pub mod campaign;
+pub mod plan;
+pub mod regions;
+pub mod selection;
+pub mod stats;
+pub mod workflow;
+
+pub use campaign::{Campaign, CampaignResult, TestRecord};
+pub use plan::PersistPlan;
+pub use workflow::Workflow;

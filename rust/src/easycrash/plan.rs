@@ -1,0 +1,174 @@
+//! Persistence plans: which data objects to flush, at which code regions,
+//! every how many main-loop iterations (the output of the EasyCrash
+//! decision process, and the input the user's `cache_block_flush` calls
+//! encode in Fig. 2a).
+
+use crate::sim::{FlushHooks, FlushKind, Registry};
+
+/// One planned persistence site.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlanEntry {
+    /// Object name (resolved against the app's registry at install time).
+    pub object: String,
+    /// Code region at whose end the flush happens.
+    pub region: usize,
+    /// Persist every `x` main-loop iterations (Eq. 5's frequency).
+    pub every_x: u32,
+}
+
+/// A complete persistence plan.
+#[derive(Clone, Debug, Default)]
+pub struct PersistPlan {
+    pub entries: Vec<PlanEntry>,
+    /// Which flush instruction the production run uses. The paper uses
+    /// CLFLUSHOPT for performance (§6) — CLWB keeps lines valid instead.
+    pub clwb: bool,
+}
+
+impl PersistPlan {
+    /// No persistence (the Fig. 3 baseline — only the loop-iterator
+    /// bookmark is persisted, which the env does unconditionally).
+    pub fn none() -> PersistPlan {
+        PersistPlan::default()
+    }
+
+    /// Persist `objects` at the end of every main-loop iteration (i.e. at
+    /// the end of the last code region), every `x` iterations.
+    pub fn at_iter_end(objects: &[&str], num_regions: usize, x: u32) -> PersistPlan {
+        PersistPlan {
+            entries: objects
+                .iter()
+                .map(|o| PlanEntry {
+                    object: o.to_string(),
+                    region: num_regions - 1,
+                    every_x: x,
+                })
+                .collect(),
+            clwb: false,
+        }
+    }
+
+    /// Persist `objects` at the end of *every* code region, every
+    /// iteration — the costly "best recomputability" configuration of §6.
+    pub fn at_every_region(objects: &[&str], num_regions: usize) -> PersistPlan {
+        PersistPlan {
+            entries: (0..num_regions)
+                .flat_map(|k| {
+                    objects.iter().map(move |o| PlanEntry {
+                        object: o.to_string(),
+                        region: k,
+                        every_x: 1,
+                    })
+                })
+                .collect(),
+            clwb: false,
+        }
+    }
+
+    /// Persist `objects` at one specific region (Fig. 4b's experiment).
+    pub fn at_region(objects: &[&str], region: usize, x: u32) -> PersistPlan {
+        PersistPlan {
+            entries: objects
+                .iter()
+                .map(|o| PlanEntry {
+                    object: o.to_string(),
+                    region,
+                    every_x: x,
+                })
+                .collect(),
+            clwb: false,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Distinct object names in the plan.
+    pub fn objects(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.entries.iter().map(|e| e.object.as_str()).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// Resolve against a registry into the env's hook table. Unknown
+    /// object names are an error (they indicate a plan/app mismatch).
+    pub fn resolve(&self, reg: &Registry, num_regions: usize) -> Result<FlushHooks, String> {
+        let mut hooks = FlushHooks::none(num_regions);
+        hooks.kind = if self.clwb {
+            FlushKind::Clwb
+        } else {
+            FlushKind::ClflushOpt
+        };
+        hooks.iter_obj = reg.by_name("it");
+        for e in &self.entries {
+            let id = reg
+                .by_name(&e.object)
+                .ok_or_else(|| format!("plan references unknown object `{}`", e.object))?;
+            if e.region >= num_regions {
+                return Err(format!(
+                    "plan references region {} but the app has {}",
+                    e.region, num_regions
+                ));
+            }
+            if e.every_x == 0 {
+                return Err("every_x must be >= 1".into());
+            }
+            hooks.at_region_end[e.region].push((id, e.every_x));
+        }
+        Ok(hooks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::ObjSpec;
+
+    fn reg() -> Registry {
+        let mut r = Registry::new();
+        r.register(ObjSpec::f64("u", 16, true));
+        r.register(ObjSpec::f64("r", 16, true));
+        r.register(ObjSpec::i64("it", 1, true));
+        r
+    }
+
+    #[test]
+    fn resolve_sets_hooks() {
+        let plan = PersistPlan::at_iter_end(&["u", "r"], 4, 1);
+        let hooks = plan.resolve(&reg(), 4).unwrap();
+        assert_eq!(hooks.at_region_end[3].len(), 2);
+        assert!(hooks.at_region_end[0].is_empty());
+        assert!(hooks.iter_obj.is_some());
+        assert_eq!(hooks.kind, FlushKind::ClflushOpt);
+    }
+
+    #[test]
+    fn every_region_covers_all() {
+        let plan = PersistPlan::at_every_region(&["u"], 3);
+        let hooks = plan.resolve(&reg(), 3).unwrap();
+        for k in 0..3 {
+            assert_eq!(hooks.at_region_end[k].len(), 1);
+        }
+    }
+
+    #[test]
+    fn unknown_object_is_error() {
+        let plan = PersistPlan::at_iter_end(&["nope"], 2, 1);
+        assert!(plan.resolve(&reg(), 2).is_err());
+    }
+
+    #[test]
+    fn bad_region_is_error() {
+        let plan = PersistPlan::at_region(&["u"], 7, 1);
+        assert!(plan.resolve(&reg(), 2).is_err());
+    }
+
+    #[test]
+    fn none_plan_still_bookmarks_iterator() {
+        let hooks = PersistPlan::none().resolve(&reg(), 2).unwrap();
+        assert!(hooks.iter_obj.is_some());
+        assert!(hooks.at_region_end.iter().all(|v| v.is_empty()));
+    }
+}

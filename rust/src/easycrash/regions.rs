@@ -1,0 +1,225 @@
+//! Code-region selection (§5.2): the analytical model (Eq. 1–5) and the
+//! 0-1 (multi-choice) knapsack over regions × persistence frequencies,
+//! solved by dynamic programming in pseudo-polynomial time.
+
+/// Inputs to the region model, all measured from two crash-test campaigns
+//  (§5.3 steps 1+3) and the flush-cost estimate.
+#[derive(Clone, Debug)]
+pub struct RegionModel {
+    /// `a_k`: time ratio of each region (Eq. 1 weights).
+    pub a: Vec<f64>,
+    /// `c_k`: region recomputability with no persistence.
+    pub c: Vec<f64>,
+    /// `c_k^max`: region recomputability when critical objects are
+    /// persisted at every region, every iteration.
+    pub cmax: Vec<f64>,
+    /// `l_k`: estimated overhead ratio of persisting the critical objects
+    /// at region `k` every iteration (already doubled for the
+    /// invalidation-reload effect, per §5.2).
+    pub l: Vec<f64>,
+    /// Loop-structured regions support persistence every `x` iterations.
+    pub is_loop: Vec<bool>,
+}
+
+/// One chosen persistence site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RegionChoice {
+    pub region: usize,
+    /// Persist every `x` main-loop iterations.
+    pub x: u32,
+}
+
+/// Outcome of the selection.
+#[derive(Clone, Debug)]
+pub struct RegionSelection {
+    pub choices: Vec<RegionChoice>,
+    /// Predicted application recomputability Y′ (Eq. 2).
+    pub predicted_y: f64,
+    /// Predicted total overhead Σ l_k/x.
+    pub predicted_overhead: f64,
+    /// Whether Y′ exceeded the efficiency threshold τ (Eq. 4).
+    pub meets_tau: bool,
+}
+
+/// Frequencies considered for loop regions (x=1 maximizes `c_k^x`;
+/// higher x trades recomputability for overhead, Eq. 5).
+const FREQS: [u32; 4] = [1, 2, 4, 8];
+
+/// Baseline recomputability Y (Eq. 1).
+pub fn baseline_y(m: &RegionModel) -> f64 {
+    m.a.iter().zip(&m.c).map(|(a, c)| a * c).sum()
+}
+
+/// `c_k^x` by linear interpolation (Eq. 5).
+pub fn c_at_freq(c: f64, cmax: f64, x: u32) -> f64 {
+    (cmax - c) / x as f64 + c
+}
+
+/// Solve the multi-choice knapsack: pick at most one frequency per region
+/// such that Σ l_k/x ≤ t_s, maximizing Y′; then check Y′ > τ.
+///
+/// Weights are discretized to `RESOLUTION` of t_s for the DP (the paper's
+/// pseudo-polynomial dynamic programming).
+pub fn select_regions(m: &RegionModel, ts: f64, tau: f64) -> RegionSelection {
+    let w = m.a.len();
+    assert!(
+        m.c.len() == w && m.cmax.len() == w && m.l.len() == w && m.is_loop.len() == w,
+        "model vectors must agree"
+    );
+    const STEPS: usize = 2000;
+    let scale = STEPS as f64 / ts.max(1e-12);
+
+    // Options per region: (weight_steps, value, x).
+    let mut options: Vec<Vec<(usize, f64, u32)>> = Vec::with_capacity(w);
+    for k in 0..w {
+        let mut opts = Vec::new();
+        let freqs: &[u32] = if m.is_loop[k] { &FREQS } else { &[1] };
+        for &x in freqs {
+            let weight = m.l[k] / x as f64;
+            let gain = m.a[k] * (c_at_freq(m.c[k], m.cmax[k], x) - m.c[k]);
+            if gain <= 0.0 {
+                continue;
+            }
+            let wsteps = (weight * scale).ceil() as usize;
+            if wsteps <= STEPS {
+                opts.push((wsteps, gain, x));
+            }
+        }
+        options.push(opts);
+    }
+
+    // Multi-choice knapsack DP, keeping every layer for backtracking.
+    let mut layers: Vec<Vec<f64>> = vec![vec![0.0; STEPS + 1]];
+    for k in 0..w {
+        let prev = &layers[k];
+        let mut next = prev.clone();
+        for &(ws, gain, _) in &options[k] {
+            for b in ws..=STEPS {
+                let cand = prev[b - ws] + gain;
+                if cand > next[b] {
+                    next[b] = cand;
+                }
+            }
+        }
+        layers.push(next);
+    }
+    let final_layer = &layers[w];
+    let mut b = (0..=STEPS).max_by(|&i, &j| final_layer[i].total_cmp(&final_layer[j])).unwrap();
+
+    // Backtrack the chosen option per region.
+    let mut choices = Vec::new();
+    for k in (0..w).rev() {
+        let cur = layers[k + 1][b];
+        if (layers[k][b] - cur).abs() < 1e-15 {
+            continue; // region k skipped
+        }
+        for &(ws, gain, x) in &options[k] {
+            if ws <= b && (layers[k][b - ws] + gain - cur).abs() < 1e-12 {
+                choices.push(RegionChoice { region: k, x });
+                b -= ws;
+                break;
+            }
+        }
+    }
+    choices.reverse();
+
+    let predicted_overhead: f64 = choices
+        .iter()
+        .map(|ch| m.l[ch.region] / ch.x as f64)
+        .sum();
+    // Y' (Eq. 2): baseline plus the selected gains (the persistence
+    // overhead's effect on a_i is second-order and conservative to drop).
+    let predicted_y = baseline_y(m)
+        + choices
+            .iter()
+            .map(|ch| {
+                m.a[ch.region]
+                    * (c_at_freq(m.c[ch.region], m.cmax[ch.region], ch.x) - m.c[ch.region])
+            })
+            .sum::<f64>();
+
+    RegionSelection {
+        choices,
+        predicted_y,
+        predicted_overhead,
+        meets_tau: predicted_y > tau,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> RegionModel {
+        RegionModel {
+            a: vec![0.5, 0.3, 0.2],
+            c: vec![0.2, 0.4, 0.9],
+            cmax: vec![0.9, 0.8, 0.95],
+            l: vec![0.02, 0.025, 0.01],
+            is_loop: vec![true, true, false],
+        }
+    }
+
+    #[test]
+    fn eq5_interpolation() {
+        assert_eq!(c_at_freq(0.2, 0.8, 1), 0.8);
+        assert!((c_at_freq(0.2, 0.8, 2) - 0.5).abs() < 1e-12);
+        assert!((c_at_freq(0.2, 0.8, 4) - 0.35).abs() < 1e-12);
+    }
+
+    #[test]
+    fn baseline_weighted_sum() {
+        let y = baseline_y(&model());
+        assert!((y - (0.5 * 0.2 + 0.3 * 0.4 + 0.2 * 0.9)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn generous_budget_takes_all_useful_regions() {
+        let sel = select_regions(&model(), 0.10, 0.0);
+        // All three have positive gain; budget 10% >> total 5.5%.
+        assert_eq!(sel.choices.len(), 3);
+        assert!(sel.choices.iter().all(|c| c.x == 1));
+        assert!(sel.predicted_overhead <= 0.10 + 1e-9);
+    }
+
+    #[test]
+    fn tight_budget_prefers_best_gain_per_cost() {
+        // Budget fits only ~one region at x=1: region 0 has the biggest
+        // gain (0.5*0.7=0.35).
+        let sel = select_regions(&model(), 0.02, 0.0);
+        assert!(!sel.choices.is_empty());
+        assert!(sel.predicted_overhead <= 0.02 + 1e-9);
+        let first = sel.choices.iter().find(|c| c.region == 0);
+        assert!(first.is_some(), "choices: {:?}", sel.choices);
+    }
+
+    #[test]
+    fn zero_budget_selects_nothing() {
+        let sel = select_regions(&model(), 1e-9, 0.5);
+        assert!(sel.choices.is_empty());
+        assert!((sel.predicted_y - baseline_y(&model())).abs() < 1e-9);
+    }
+
+    #[test]
+    fn frequency_fallback_under_budget_pressure() {
+        // A single expensive loop region: only higher x fits the budget.
+        let m = RegionModel {
+            a: vec![1.0],
+            c: vec![0.1],
+            cmax: vec![0.9],
+            l: vec![0.08],
+            is_loop: vec![true],
+        };
+        let sel = select_regions(&m, 0.03, 0.0);
+        assert_eq!(sel.choices.len(), 1);
+        assert!(sel.choices[0].x >= 4, "x={}", sel.choices[0].x);
+    }
+
+    #[test]
+    fn tau_gate_reported() {
+        let sel = select_regions(&model(), 0.10, 0.99);
+        assert!(!sel.meets_tau);
+        let sel = select_regions(&model(), 0.10, 0.3);
+        assert!(sel.meets_tau);
+    }
+}

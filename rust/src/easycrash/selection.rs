@@ -1,0 +1,140 @@
+//! Critical-data-object selection (§5.1): Spearman rank correlation
+//! between each candidate's data inconsistent rate and recomputation
+//! success over a crash-test campaign.
+
+use super::campaign::CampaignResult;
+use super::stats::spearman;
+
+/// Correlation analysis of one candidate object.
+#[derive(Clone, Debug)]
+pub struct SelectionRow {
+    pub name: String,
+    pub bytes: usize,
+    pub rs: f64,
+    pub p: f64,
+    pub selected: bool,
+}
+
+/// The paper's significance threshold (§5.1: p < 0.01 "statistically shows
+/// a very strong correlation in our study").
+pub const P_THRESHOLD: f64 = 0.01;
+
+/// Run the §5.1 selection over a (no-persistence) characterization
+/// campaign. A candidate is critical iff its correlation coefficient is
+/// negative (more inconsistency ⇒ less recomputability) and significant.
+///
+/// The loop-iterator bookmark is excluded: it is always persisted
+/// (footnote 3), so it is never a selection question.
+pub fn select_critical(result: &CampaignResult) -> Vec<SelectionRow> {
+    select_critical_with(result, P_THRESHOLD)
+}
+
+pub fn select_critical_with(result: &CampaignResult, p_threshold: f64) -> Vec<SelectionRow> {
+    let mut rows = Vec::new();
+    for (j, (_, name, bytes)) in result.candidates.iter().enumerate() {
+        if name == "it" {
+            continue;
+        }
+        let (xs, ys) = result.vectors_for(j);
+        let c = spearman(&xs, &ys);
+        rows.push(SelectionRow {
+            name: name.clone(),
+            bytes: *bytes,
+            rs: c.rs,
+            p: c.p,
+            selected: c.rs < 0.0 && c.p < p_threshold,
+        });
+    }
+    rows
+}
+
+/// Names of the selected critical data objects.
+pub fn critical_names(rows: &[SelectionRow]) -> Vec<&str> {
+    rows.iter()
+        .filter(|r| r.selected)
+        .map(|r| r.name.as_str())
+        .collect()
+}
+
+/// Total size of the selected critical objects (Table 1 "Critical DO
+/// size").
+pub fn critical_bytes(rows: &[SelectionRow]) -> usize {
+    rows.iter().filter(|r| r.selected).map(|r| r.bytes).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{Response, Snapshot};
+    use crate::easycrash::campaign::{CampaignResult, TestRecord};
+    use crate::easycrash::plan::PersistPlan;
+    use crate::sim::HierStats;
+    use crate::util::rng::Rng;
+
+    fn synthetic_result() -> CampaignResult {
+        // Candidate 0 ("u"): success anti-correlates with inconsistency.
+        // Candidate 1 ("r"): independent noise.
+        // Candidate 2 ("it"): excluded from selection.
+        let mut rng = Rng::new(42);
+        let mut records = Vec::new();
+        for _ in 0..400 {
+            let xu = rng.f64();
+            let xr = rng.f64();
+            let success = rng.f64() < 0.9 - 0.7 * xu;
+            records.push(TestRecord {
+                op: 0,
+                iter: 0,
+                region: 0,
+                response: if success { Response::S1 } else { Response::S4 },
+                extra_iters: 0,
+                inconsistency: vec![xu, xr, 0.0],
+            });
+        }
+        let _ = Snapshot { iter: 0, objs: vec![] };
+        CampaignResult {
+            app: "synthetic".into(),
+            plan: PersistPlan::none(),
+            records,
+            candidates: vec![
+                (0, "u".into(), 1024),
+                (1, "r".into(), 2048),
+                (2, "it".into(), 8),
+            ],
+            ops_total: 1,
+            ops_main_start: 0,
+            cycles: 1.0,
+            region_cycles: vec![1.0, 0.0],
+            persist_ops: 0,
+            persist_cycles: 0.0,
+            stats: HierStats::default(),
+            footprint: 4096,
+            num_regions: 1,
+        }
+    }
+
+    #[test]
+    fn selects_correlated_object_only() {
+        let rows = select_critical(&synthetic_result());
+        assert_eq!(rows.len(), 2, "`it` excluded");
+        let u = rows.iter().find(|r| r.name == "u").unwrap();
+        let r = rows.iter().find(|r| r.name == "r").unwrap();
+        assert!(u.selected, "u: rs={} p={}", u.rs, u.p);
+        assert!(u.rs < 0.0);
+        assert!(!r.selected, "r: rs={} p={}", r.rs, r.p);
+        assert_eq!(critical_names(&rows), vec!["u"]);
+        assert_eq!(critical_bytes(&rows), 1024);
+    }
+
+    #[test]
+    fn constant_inconsistency_never_selected() {
+        // EP's situation: always 100% inconsistent -> zero variance.
+        let mut res = synthetic_result();
+        for t in &mut res.records {
+            t.inconsistency[0] = 1.0;
+        }
+        let rows = select_critical(&res);
+        let u = rows.iter().find(|r| r.name == "u").unwrap();
+        assert!(!u.selected);
+        assert_eq!(u.p, 1.0);
+    }
+}

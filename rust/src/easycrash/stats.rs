@@ -1,0 +1,264 @@
+//! Statistics for critical-data-object selection (§5.1): Spearman's rank
+//! correlation coefficient with a Student-t two-sided p-value
+//! (ln-gamma + regularized incomplete beta implemented from scratch —
+//! no stats crates are available offline).
+
+/// Result of one correlation analysis.
+#[derive(Clone, Copy, Debug)]
+pub struct Correlation {
+    pub rs: f64,
+    pub p: f64,
+    pub n: usize,
+}
+
+/// Average ranks with tie correction (1-based, fractional for ties).
+pub fn ranks(xs: &[f64]) -> Vec<f64> {
+    let n = xs.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut out = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            out[idx[k]] = avg;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let (mut sxy, mut sxx, mut syy) = (0.0, 0.0, 0.0);
+    for (x, y) in xs.iter().zip(ys) {
+        let (dx, dy) = (x - mx, y - my);
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx <= 0.0 || syy <= 0.0 {
+        return f64::NAN; // a constant input has no defined correlation
+    }
+    (sxy / (sxx * syy).sqrt()).clamp(-1.0, 1.0)
+}
+
+/// Spearman's rank correlation with two-sided p-value (t approximation,
+/// the standard test the paper's reference [77] discusses).
+pub fn spearman(xs: &[f64], ys: &[f64]) -> Correlation {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    if n < 4 {
+        return Correlation { rs: 0.0, p: 1.0, n };
+    }
+    let rs = pearson(&ranks(xs), &ranks(ys));
+    if !rs.is_finite() {
+        // Degenerate (constant) vector: no evidence of correlation. This
+        // is exactly EP's situation — tallies are 100% inconsistent in
+        // every crash test, so selection cannot see them (§8).
+        return Correlation { rs: 0.0, p: 1.0, n };
+    }
+    let df = (n - 2) as f64;
+    let denom = (1.0 - rs * rs).max(1e-15);
+    let t = rs * (df / denom).sqrt();
+    let p = 2.0 * student_t_sf(t.abs(), df);
+    Correlation { rs, p: p.clamp(0.0, 1.0), n }
+}
+
+/// Survival function of Student's t: P(T > t) for t ≥ 0.
+pub fn student_t_sf(t: f64, df: f64) -> f64 {
+    if t <= 0.0 {
+        return 0.5;
+    }
+    let x = df / (df + t * t);
+    0.5 * betai(0.5 * df, 0.5, x)
+}
+
+/// ln Γ(x) via the Lanczos approximation (g=7, n=9).
+pub fn ln_gamma(x: f64) -> f64 {
+    const COEF: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + 7.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// Regularized incomplete beta I_x(a, b) via Lentz's continued fraction.
+pub fn betai(a: f64, b: f64, x: f64) -> f64 {
+    if x <= 0.0 {
+        return 0.0;
+    }
+    if x >= 1.0 {
+        return 1.0;
+    }
+    let ln_front =
+        ln_gamma(a + b) - ln_gamma(a) - ln_gamma(b) + a * x.ln() + b * (1.0 - x).ln();
+    let front = ln_front.exp();
+    if x < (a + 1.0) / (a + b + 2.0) {
+        front * beta_cf(a, b, x) / a
+    } else {
+        1.0 - front * beta_cf(b, a, 1.0 - x) / b
+    }
+}
+
+fn beta_cf(a: f64, b: f64, x: f64) -> f64 {
+    const MAX_IT: usize = 200;
+    const EPS: f64 = 3e-14;
+    const FPMIN: f64 = 1e-300;
+    let qab = a + b;
+    let qap = a + 1.0;
+    let qam = a - 1.0;
+    let mut c = 1.0;
+    let mut d = 1.0 - qab * x / qap;
+    if d.abs() < FPMIN {
+        d = FPMIN;
+    }
+    d = 1.0 / d;
+    let mut h = d;
+    for m in 1..=MAX_IT {
+        let m = m as f64;
+        let m2 = 2.0 * m;
+        // even step
+        let aa = m * (b - m) * x / ((qam + m2) * (a + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        h *= d * c;
+        // odd step
+        let aa = -(a + m) * (qab + m) * x / ((a + m2) * (qap + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < EPS {
+            break;
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_gamma_known_values() {
+        assert!((ln_gamma(1.0)).abs() < 1e-10);
+        assert!((ln_gamma(2.0)).abs() < 1e-10);
+        assert!((ln_gamma(5.0) - 24f64.ln()).abs() < 1e-9); // Γ(5)=24
+        assert!((ln_gamma(0.5) - 0.5 * std::f64::consts::PI.ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn betai_boundaries_and_symmetry() {
+        assert_eq!(betai(2.0, 3.0, 0.0), 0.0);
+        assert_eq!(betai(2.0, 3.0, 1.0), 1.0);
+        // I_x(a,b) = 1 - I_{1-x}(b,a)
+        let x = 0.37;
+        assert!((betai(2.5, 1.5, x) - (1.0 - betai(1.5, 2.5, 1.0 - x))).abs() < 1e-10);
+        // I_x(1,1) = x (uniform)
+        assert!((betai(1.0, 1.0, 0.42) - 0.42).abs() < 1e-10);
+    }
+
+    #[test]
+    fn student_sf_reference_points() {
+        // t=0 -> 0.5
+        assert!((student_t_sf(0.0, 10.0) - 0.5).abs() < 1e-12);
+        // Large df approaches the normal: P(T>1.96) ≈ 0.025
+        let p = student_t_sf(1.96, 1e6);
+        assert!((p - 0.025).abs() < 1e-3, "{p}");
+        // Known: df=5, t=2.015 -> one-sided 0.05 (t-table)
+        let p = student_t_sf(2.015, 5.0);
+        assert!((p - 0.05).abs() < 2e-3, "{p}");
+    }
+
+    #[test]
+    fn ranks_with_ties() {
+        let r = ranks(&[10.0, 20.0, 20.0, 30.0]);
+        assert_eq!(r, vec![1.0, 2.5, 2.5, 4.0]);
+    }
+
+    #[test]
+    fn spearman_perfect_monotone() {
+        let xs: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x * x + 1.0).collect(); // monotone
+        let c = spearman(&xs, &ys);
+        assert!((c.rs - 1.0).abs() < 1e-12);
+        assert!(c.p < 1e-6);
+        let ys_neg: Vec<f64> = xs.iter().map(|x| -x).collect();
+        let c = spearman(&xs, &ys_neg);
+        assert!((c.rs + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_degenerate_input_is_insignificant() {
+        let xs = vec![1.0; 50]; // constant: EP's tally situation
+        let ys: Vec<f64> = (0..50).map(|i| (i % 2) as f64).collect();
+        let c = spearman(&xs, &ys);
+        assert_eq!(c.rs, 0.0);
+        assert_eq!(c.p, 1.0);
+    }
+
+    #[test]
+    fn spearman_independent_is_insignificant() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(99);
+        let xs: Vec<f64> = (0..200).map(|_| rng.f64()).collect();
+        let ys: Vec<f64> = (0..200).map(|_| rng.f64()).collect();
+        let c = spearman(&xs, &ys);
+        assert!(c.rs.abs() < 0.2, "rs={}", c.rs);
+        assert!(c.p > 0.01, "p={}", c.p);
+    }
+
+    #[test]
+    fn spearman_noisy_negative_correlation_detected() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(7);
+        let xs: Vec<f64> = (0..300).map(|_| rng.f64()).collect();
+        // success less likely when x high, with noise
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|&x| if rng.f64() < 0.85 - 0.6 * x { 1.0 } else { 0.0 })
+            .collect();
+        let c = spearman(&xs, &ys);
+        assert!(c.rs < -0.2, "rs={}", c.rs);
+        assert!(c.p < 0.01, "p={}", c.p);
+    }
+}

@@ -1,0 +1,37 @@
+//! # EasyCrash — reproduction of Ren, Wu & Li (2019)
+//!
+//! *EasyCrash: Exploring Non-Volatility of Non-Volatile Memory for High
+//! Performance Computing Under Failures.*
+//!
+//! This crate is the Layer-3 Rust coordinator of a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * [`sim`] — the NVCT substrate: a multi-level write-back cache hierarchy
+//!   over a dual (architectural / persisted-NVM) memory image, with random
+//!   crash generation, cache-flush instruction semantics, data-inconsistency
+//!   accounting, NVM write counting and an analytical NVM timing model.
+//! * [`apps`] — the paper's eleven-benchmark workload suite (NPB CG/MG/FT/
+//!   IS/BT/SP/LU/EP, botsspar, LULESH, kmeans), re-implemented as mini-class
+//!   kernels instrumented through the simulator.
+//! * [`easycrash`] — the paper's contribution: crash-test campaigns,
+//!   Spearman-based critical-data-object selection, knapsack-based
+//!   code-region selection and the end-to-end workflow.
+//! * [`model`] — the §7 system-efficiency emulator (Young's formula,
+//!   Eq. 6–9).
+//! * [`runtime`] — PJRT wrapper that loads AOT-compiled JAX/Pallas step
+//!   functions (`artifacts/*.hlo.txt`) and runs them on the post-crash
+//!   recomputation hot path. Python never runs at coordinator runtime.
+//! * [`report`] — generators for every table and figure in the paper's
+//!   evaluation.
+//!
+//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod util;
+pub mod sim;
+pub mod apps;
+pub mod easycrash;
+pub mod model;
+pub mod runtime;
+pub mod report;
+pub mod benchlib;

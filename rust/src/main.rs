@@ -1,0 +1,138 @@
+//! `easycrash` CLI — the Layer-3 coordinator entrypoint.
+//!
+//! Subcommands reproduce every table/figure of the paper, run individual
+//! crash campaigns and the selection workflow, and expose the
+//! system-efficiency model. See `easycrash help`.
+
+use std::time::Instant;
+
+use easycrash::apps;
+use easycrash::easycrash::{Campaign, PersistPlan};
+use easycrash::runtime::{NativeEngine, PjrtEngine, StepEngine};
+use easycrash::util::cli::Args;
+
+fn engine_from(args: &Args) -> anyhow::Result<Box<dyn StepEngine>> {
+    match args.get_or("engine", "native") {
+        "native" => Ok(Box::new(NativeEngine::new())),
+        "pjrt" => Ok(Box::new(PjrtEngine::from_default_dir()?)),
+        other => anyhow::bail!("unknown engine `{other}` (native|pjrt)"),
+    }
+}
+
+const VALUED: &[&str] = &[
+    "app", "tests", "seed", "engine", "plan", "ts", "tau", "mtbf", "tchk", "out",
+];
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, VALUED).map_err(|e| anyhow::anyhow!(e))?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+
+    match cmd {
+        "probe" => probe(&args),
+        "campaign" => cmd_campaign(&args),
+        "list" => {
+            for a in apps::all() {
+                println!("{:<10} {}", a.name(), a.description());
+            }
+            Ok(())
+        }
+        _ => easycrash::report::cli_dispatch(cmd, &args),
+    }
+}
+
+/// Quick timing probe of one app's instrumented run + campaign.
+fn probe(args: &Args) -> anyhow::Result<()> {
+    let name = args.get_or("app", "mg");
+    let tests = args.usize_or("tests", 100).map_err(|e| anyhow::anyhow!(e))?;
+    let app = apps::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown app {name}"))?;
+    let mut engine = engine_from(args)?;
+    let c = Campaign::new(tests, 1);
+    let t0 = Instant::now();
+    let prof = c.profile(app.as_ref(), &PersistPlan::none());
+    let t_prof = t0.elapsed();
+    println!(
+        "{name}: ops={} ({:.1}M) footprint={} cycles={:.3e} profile_wall={:.2?} ({:.1}M ops/s)",
+        prof.ops_total,
+        prof.ops_total as f64 / 1e6,
+        easycrash::util::human_bytes(prof.footprint as u64),
+        prof.cycles,
+        t_prof,
+        prof.ops_total as f64 / t_prof.as_secs_f64() / 1e6,
+    );
+    let t1 = Instant::now();
+    let res = c.run(app.as_ref(), &PersistPlan::none(), engine.as_mut());
+    println!(
+        "campaign({tests}): wall={:.2?} recomputability={} fractions={:?}",
+        t1.elapsed(),
+        easycrash::util::pct(res.recomputability()),
+        res.response_fractions()
+    );
+    Ok(())
+}
+
+fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
+    let name = args.get_or("app", "mg");
+    let tests = args.usize_or("tests", 400).map_err(|e| anyhow::anyhow!(e))?;
+    let seed = args.u64_or("seed", 0xEC).map_err(|e| anyhow::anyhow!(e))?;
+    let app = apps::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown app {name}"))?;
+    let mut engine = engine_from(args)?;
+    let num_regions = app.regions().len();
+    let plan = match args.get_or("plan", "none") {
+        "none" => PersistPlan::none(),
+        "all" => {
+            let prof = Campaign::new(0, seed).profile(app.as_ref(), &PersistPlan::none());
+            let names: Vec<String> = prof
+                .candidates
+                .iter()
+                .map(|(_, n, _)| n.clone())
+                .filter(|n| n != "it")
+                .collect();
+            let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+            PersistPlan::at_iter_end(&refs, num_regions, 1)
+        }
+        spec => {
+            // "obj@region/x" entries separated by commas; e.g. "u@3/1,r@3/2"
+            let mut entries = Vec::new();
+            for part in spec.split(',') {
+                let (obj, rest) = part
+                    .split_once('@')
+                    .ok_or_else(|| anyhow::anyhow!("bad plan entry `{part}`"))?;
+                let (region, x) = match rest.split_once('/') {
+                    Some((r, x)) => (r.parse()?, x.parse()?),
+                    None => (rest.parse()?, 1),
+                };
+                entries.push(easycrash::easycrash::plan::PlanEntry {
+                    object: obj.to_string(),
+                    region,
+                    every_x: x,
+                });
+            }
+            PersistPlan { entries, clwb: false }
+        }
+    };
+    let c = Campaign::new(tests, seed);
+    let t0 = Instant::now();
+    let res = c.run(app.as_ref(), &plan, engine.as_mut());
+    let f = res.response_fractions();
+    println!("app={name} tests={tests} wall={:.2?}", t0.elapsed());
+    println!(
+        "recomputability={}  S1={} S2={} S3={} S4={}",
+        easycrash::util::pct(res.recomputability()),
+        easycrash::util::pct(f[0]),
+        easycrash::util::pct(f[1]),
+        easycrash::util::pct(f[2]),
+        easycrash::util::pct(f[3]),
+    );
+    for (j, (_, n, bytes)) in res.candidates.iter().enumerate() {
+        let mean_inc = easycrash::util::mean(
+            &res.records.iter().map(|r| r.inconsistency[j]).collect::<Vec<_>>(),
+        );
+        println!(
+            "  {n:<12} {:>10}  mean inconsistency {}",
+            easycrash::util::human_bytes(*bytes as u64),
+            easycrash::util::pct(mean_inc)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,189 @@
+//! System-efficiency model (§7, Eq. 6–9).
+//!
+//! Synchronous coordinated checkpointing with local-storage checkpoints;
+//! EasyCrash lengthens the effective MTBF by the application
+//! recomputability (`MTBF_EC = MTBF / (1 − R)`), lengthening the Young
+//! interval, and replaces most rollbacks by cheap NVM restarts.
+
+use super::young::young_interval;
+
+/// Model inputs (defaults follow the paper's §7 parameter choices).
+#[derive(Clone, Copy, Debug)]
+pub struct EfficiencyInput {
+    /// System mean time between failures, seconds.
+    pub mtbf: f64,
+    /// Checkpoint write time `T_chk`, seconds.
+    pub t_chk: f64,
+    /// Recovery time from a checkpoint `T_r` (paper: = T_chk).
+    pub t_r: f64,
+    /// Synchronization time `T_sync` (paper: 50% of T_chk).
+    pub t_sync: f64,
+    /// Application recomputability with EasyCrash (`R_EasyCrash`).
+    pub r_easycrash: f64,
+    /// EasyCrash runtime overhead `t_s` (fraction, e.g. 0.015).
+    pub ts: f64,
+    /// NVM restart recovery time `T_r'` (load non-read-only data objects
+    /// from NVM main memory), seconds.
+    pub t_r_nvm: f64,
+}
+
+impl EfficiencyInput {
+    /// Paper-style constructor: MTBF + T_chk + recomputability, with the
+    /// §7 conventions (T_r = T_chk, T_sync = T_chk/2) and an NVM restart
+    /// time derived from data size / bandwidth.
+    pub fn paper(mtbf: f64, t_chk: f64, r: f64, ts: f64, t_r_nvm: f64) -> EfficiencyInput {
+        EfficiencyInput {
+            mtbf,
+            t_chk,
+            t_r: t_chk,
+            t_sync: 0.5 * t_chk,
+            r_easycrash: r,
+            ts,
+            t_r_nvm,
+        }
+    }
+}
+
+/// Model outputs.
+#[derive(Clone, Copy, Debug)]
+pub struct EfficiencyModel {
+    /// System efficiency without EasyCrash (Eq. 6).
+    pub base: f64,
+    /// System efficiency with EasyCrash (Eq. 8).
+    pub easycrash: f64,
+    /// Checkpoint intervals.
+    pub t_interval: f64,
+    pub t_interval_ec: f64,
+}
+
+impl EfficiencyModel {
+    /// Relative improvement of EasyCrash over plain C/R.
+    pub fn improvement(&self) -> f64 {
+        (self.easycrash - self.base) / self.base
+    }
+}
+
+/// Evaluate the §7 model.
+///
+/// Efficiency without EasyCrash: per checkpoint interval the system spends
+/// `T + T_chk` to bank `T` of useful work, and each crash (rate
+/// `1/MTBF`) costs `T_vain + T_r + T_sync` with `T_vain = T/2` (Eq. 6–7).
+///
+/// With EasyCrash (Eq. 8–9): crashes split into `M'` rollbacks (fraction
+/// `1 − R`) and `M''` NVM restarts (fraction `R`, costing only
+/// `T_r' + T_sync`); the checkpoint interval uses
+/// `MTBF_EC = MTBF / (1 − R)` and useful work pays the `t_s` flush
+/// overhead.
+pub fn evaluate(inp: &EfficiencyInput) -> EfficiencyModel {
+    let t = young_interval(inp.t_chk, inp.mtbf);
+    // Eq. 6-7 in steady-state rate form: per second of wall time,
+    //   useful   = u
+    //   chk cost = u * T_chk / T
+    //   crashes  = 1/MTBF, each costing T/2 + T_r + T_sync
+    // 1 = u (1 + T_chk/T) + (T/2 + T_r + T_sync)/MTBF
+    let crash_cost = (0.5 * t + inp.t_r + inp.t_sync) / inp.mtbf;
+    let base = ((1.0 - crash_cost) / (1.0 + inp.t_chk / t)).max(0.0);
+
+    let r = inp.r_easycrash.clamp(0.0, 0.9999);
+    let mtbf_ec = inp.mtbf / (1.0 - r);
+    let t_ec = young_interval(inp.t_chk, mtbf_ec);
+    // Rollback crashes: rate (1-r)/MTBF, cost T'/2 + T_r + T_sync.
+    // EasyCrash restarts: rate r/MTBF, cost T_r' + T_sync.
+    let cost_rollback = (1.0 - r) * (0.5 * t_ec + inp.t_r + inp.t_sync) / inp.mtbf;
+    let cost_restart = r * (inp.t_r_nvm + inp.t_sync) / inp.mtbf;
+    // Useful work additionally pays the persistence overhead ts.
+    let ec = ((1.0 - cost_rollback - cost_restart)
+        / ((1.0 + inp.ts) * (1.0 + inp.t_chk / t_ec)))
+        .max(0.0);
+
+    EfficiencyModel {
+        base,
+        easycrash: ec,
+        t_interval: t,
+        t_interval_ec: t_ec,
+    }
+}
+
+/// The recomputability threshold τ (§7 "determination of τ"): the
+/// smallest `R_EasyCrash` for which EasyCrash beats plain C/R, found by
+/// bisection on the model.
+pub fn tau_threshold(inp: &EfficiencyInput) -> f64 {
+    let mut lo = 0.0;
+    let mut hi = 1.0;
+    for _ in 0..60 {
+        let mid = 0.5 * (lo + hi);
+        let m = evaluate(&EfficiencyInput {
+            r_easycrash: mid,
+            ..*inp
+        });
+        if m.easycrash > m.base {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    // If even R=1 does not help (e.g. overhead dominates), report 1.0.
+    let at_hi = evaluate(&EfficiencyInput {
+        r_easycrash: hi,
+        ..*inp
+    });
+    if at_hi.easycrash <= at_hi.base && hi > 0.999 {
+        1.0
+    } else {
+        hi
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inp(mtbf: f64, t_chk: f64, r: f64) -> EfficiencyInput {
+        EfficiencyInput::paper(mtbf, t_chk, r, 0.015, 5.0)
+    }
+
+    #[test]
+    fn base_efficiency_reasonable() {
+        // MTBF 12h, T_chk 320s: overheads are a few percent.
+        let m = evaluate(&inp(43_200.0, 320.0, 0.82));
+        assert!(m.base > 0.8 && m.base < 1.0, "{}", m.base);
+        assert!(m.easycrash > m.base, "EC must help at R=0.82");
+    }
+
+    #[test]
+    fn improvement_grows_with_checkpoint_cost() {
+        let small = evaluate(&inp(43_200.0, 32.0, 0.82)).improvement();
+        let large = evaluate(&inp(43_200.0, 3200.0, 0.82)).improvement();
+        assert!(large > small, "{small} vs {large}");
+    }
+
+    #[test]
+    fn improvement_grows_as_mtbf_shrinks() {
+        // Paper Fig. 11: larger systems (smaller MTBF) benefit more.
+        let h12 = evaluate(&inp(43_200.0, 3200.0, 0.8)).improvement();
+        let h6 = evaluate(&inp(21_600.0, 3200.0, 0.8)).improvement();
+        let h3 = evaluate(&inp(10_800.0, 3200.0, 0.8)).improvement();
+        assert!(h6 > h12 && h3 > h6, "{h12} {h6} {h3}");
+    }
+
+    #[test]
+    fn zero_recomputability_is_no_better() {
+        let m = evaluate(&inp(43_200.0, 320.0, 0.0));
+        assert!(m.easycrash <= m.base, "ts overhead with no benefit");
+    }
+
+    #[test]
+    fn interval_lengthens_with_easycrash() {
+        let m = evaluate(&inp(43_200.0, 320.0, 0.82));
+        assert!(m.t_interval_ec > 2.0 * m.t_interval);
+    }
+
+    #[test]
+    fn tau_is_meaningful() {
+        let t = tau_threshold(&inp(43_200.0, 3200.0, 0.0));
+        assert!(t > 0.0 && t < 0.5, "tau={t}");
+        // With tiny checkpoint cost, EasyCrash's ts makes the bar higher.
+        let t2 = tau_threshold(&inp(43_200.0, 32.0, 0.0));
+        assert!(t2 > t, "{t2} vs {t}");
+    }
+}

@@ -1,0 +1,9 @@
+//! End-to-end system-efficiency emulator (paper §7): Young's formula,
+//! Eq. 6–9, MTBF scaling across system sizes.
+
+pub mod efficiency;
+pub mod sweep;
+pub mod young;
+
+pub use efficiency::{EfficiencyInput, EfficiencyModel};
+pub use young::young_interval;

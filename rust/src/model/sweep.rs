@@ -1,0 +1,73 @@
+//! Parameter sweeps over the §7 efficiency model (Fig. 10 / Fig. 11).
+
+use super::efficiency::{evaluate, EfficiencyInput, EfficiencyModel};
+
+/// The paper's checkpoint-overhead scenarios: SSD/NVMe-class (32 s),
+/// mid (320 s), HDD-class (3200 s) for 64–128 GB nodes.
+pub const T_CHK_SCENARIOS: [f64; 3] = [32.0, 320.0, 3200.0];
+
+/// The paper's system scales: 100k nodes (MTBF 12 h), 200k (6 h),
+/// 400k (3 h) — MTBF scaled as in [21]/[43].
+pub const SCALES: [(u64, f64); 3] = [
+    (100_000, 12.0 * 3600.0),
+    (200_000, 6.0 * 3600.0),
+    (400_000, 3.0 * 3600.0),
+];
+
+/// One sweep point.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepPoint {
+    pub nodes: u64,
+    pub mtbf: f64,
+    pub t_chk: f64,
+    pub model: EfficiencyModel,
+}
+
+/// Fig. 10-style sweep: fixed MTBF, varying checkpoint overhead.
+pub fn sweep_chk(mtbf: f64, r: f64, ts: f64, t_r_nvm: f64) -> Vec<SweepPoint> {
+    T_CHK_SCENARIOS
+        .iter()
+        .map(|&t_chk| SweepPoint {
+            nodes: 100_000,
+            mtbf,
+            t_chk,
+            model: evaluate(&EfficiencyInput::paper(mtbf, t_chk, r, ts, t_r_nvm)),
+        })
+        .collect()
+}
+
+/// Fig. 11-style sweep: varying system scale (MTBF), fixed overheads.
+pub fn sweep_scale(t_chk: f64, r: f64, ts: f64, t_r_nvm: f64) -> Vec<SweepPoint> {
+    SCALES
+        .iter()
+        .map(|&(nodes, mtbf)| SweepPoint {
+            nodes,
+            mtbf,
+            t_chk,
+            model: evaluate(&EfficiencyInput::paper(mtbf, t_chk, r, ts, t_r_nvm)),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chk_sweep_has_three_scenarios() {
+        let pts = sweep_chk(43_200.0, 0.82, 0.015, 5.0);
+        assert_eq!(pts.len(), 3);
+        // EasyCrash wins in every scenario at R=0.82.
+        assert!(pts.iter().all(|p| p.model.easycrash > p.model.base));
+        // And by more when checkpoints are expensive.
+        assert!(pts[2].model.improvement() > pts[0].model.improvement());
+    }
+
+    #[test]
+    fn scale_sweep_monotone_improvement() {
+        let pts = sweep_scale(3200.0, 0.8, 0.015, 5.0);
+        assert_eq!(pts.len(), 3);
+        assert!(pts[1].model.improvement() > pts[0].model.improvement());
+        assert!(pts[2].model.improvement() > pts[1].model.improvement());
+    }
+}

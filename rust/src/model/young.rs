@@ -1,0 +1,28 @@
+//! Young's first-order optimal checkpoint interval [76]:
+//! `T = sqrt(2 · T_chk · MTBF)`.
+
+/// Optimal checkpoint interval (seconds) for checkpoint cost `t_chk` and
+/// mean time between failures `mtbf` (both seconds).
+pub fn young_interval(t_chk: f64, mtbf: f64) -> f64 {
+    assert!(t_chk > 0.0 && mtbf > 0.0);
+    (2.0 * t_chk * mtbf).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_value() {
+        // T_chk = 320 s, MTBF = 12 h = 43200 s -> sqrt(2*320*43200) ≈ 5257.6 s
+        let t = young_interval(320.0, 43_200.0);
+        assert!((t - 5257.66).abs() < 1.0, "{t}");
+    }
+
+    #[test]
+    fn scales_with_sqrt() {
+        let t1 = young_interval(100.0, 10_000.0);
+        let t2 = young_interval(400.0, 10_000.0);
+        assert!((t2 / t1 - 2.0).abs() < 1e-12);
+    }
+}

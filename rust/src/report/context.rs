@@ -1,0 +1,176 @@
+//! Shared context for the report generators: configuration + memoized
+//! campaigns/workflows so figures that share measurements (Fig. 5/6,
+//! Table 1/4...) run each campaign once.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::apps::{self, CrashApp};
+use crate::easycrash::workflow::{Workflow, WorkflowReport};
+use crate::easycrash::{Campaign, CampaignResult, PersistPlan};
+use crate::runtime::{NativeEngine, StepEngine};
+use crate::sim::SimConfig;
+use crate::util::cli::Args;
+
+pub struct ReportCtx {
+    pub tests: usize,
+    pub seed: u64,
+    pub ts: f64,
+    pub tau: f64,
+    pub cfg: SimConfig,
+    pub verbose: bool,
+    engine: RefCell<Box<dyn StepEngine>>,
+    workflows: RefCell<HashMap<String, Rc<WorkflowReport>>>,
+    campaigns: RefCell<HashMap<String, Rc<CampaignResult>>>,
+}
+
+impl ReportCtx {
+    pub fn from_args(args: &Args) -> anyhow::Result<ReportCtx> {
+        let tests = args
+            .usize_or("tests", if args.flag("paper-scale") { 1000 } else { 200 })
+            .map_err(|e| anyhow::anyhow!(e))?;
+        let engine: Box<dyn StepEngine> = match args.get_or("engine", "native") {
+            "native" => Box::new(NativeEngine::new()),
+            "pjrt" => Box::new(crate::runtime::PjrtEngine::from_default_dir()?),
+            other => anyhow::bail!("unknown engine `{other}`"),
+        };
+        Ok(ReportCtx {
+            tests,
+            seed: args.u64_or("seed", 0xEC).map_err(|e| anyhow::anyhow!(e))?,
+            ts: args.f64_or("ts", 0.03).map_err(|e| anyhow::anyhow!(e))?,
+            tau: args.f64_or("tau", 0.10).map_err(|e| anyhow::anyhow!(e))?,
+            cfg: SimConfig::mini(),
+            verbose: args.flag("verbose"),
+            engine: RefCell::new(engine),
+            workflows: RefCell::new(HashMap::new()),
+            campaigns: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn campaign_runner(&self) -> Campaign {
+        Campaign {
+            tests: self.tests,
+            seed: self.seed,
+            cfg: self.cfg,
+            verified: false,
+        }
+    }
+
+    /// Memoized full workflow for one app.
+    pub fn workflow(&self, app: &dyn CrashApp) -> Rc<WorkflowReport> {
+        if let Some(w) = self.workflows.borrow().get(app.name()) {
+            return w.clone();
+        }
+        if self.verbose {
+            eprintln!("[workflow] {}", app.name());
+        }
+        let wf = Workflow {
+            tests: self.tests,
+            seed: self.seed,
+            ts: self.ts,
+            tau: self.tau,
+            cfg: self.cfg,
+        };
+        let rep = Rc::new(wf.run(app, self.engine.borrow_mut().as_mut()));
+        self.workflows
+            .borrow_mut()
+            .insert(app.name().to_string(), rep.clone());
+        rep
+    }
+
+    /// Memoized campaign under an arbitrary plan (keyed by `key`).
+    pub fn campaign(
+        &self,
+        app: &dyn CrashApp,
+        key: &str,
+        plan: &PersistPlan,
+        verified: bool,
+    ) -> Rc<CampaignResult> {
+        let full_key = format!("{}::{}{}", app.name(), key, if verified { "::vfy" } else { "" });
+        if let Some(c) = self.campaigns.borrow().get(&full_key) {
+            return c.clone();
+        }
+        if self.verbose {
+            eprintln!("[campaign] {full_key}");
+        }
+        let mut runner = self.campaign_runner();
+        runner.verified = verified;
+        let res = Rc::new(runner.run(app, plan, self.engine.borrow_mut().as_mut()));
+        self.campaigns.borrow_mut().insert(full_key, res.clone());
+        res
+    }
+
+    /// Profile-only run (no crashes) under a plan + optional NVM profile.
+    pub fn profile(
+        &self,
+        app: &dyn CrashApp,
+        plan: &PersistPlan,
+        cfg: SimConfig,
+    ) -> CampaignResult {
+        Campaign {
+            tests: 0,
+            seed: self.seed,
+            cfg,
+            verified: false,
+        }
+        .profile(app, plan)
+    }
+
+    /// Candidate object names of an app (excluding the iterator bookmark).
+    pub fn candidate_names(&self, app: &dyn CrashApp) -> Vec<String> {
+        let prof = self.profile(app, &PersistPlan::none(), self.cfg);
+        prof.candidates
+            .iter()
+            .map(|(_, n, _)| n.clone())
+            .filter(|n| n != "it")
+            .collect()
+    }
+
+    /// The paper's three standard plans for an app: none / critical-at-
+    /// iteration-end / all-candidates-at-iteration-end.
+    pub fn plan_all_candidates(&self, app: &dyn CrashApp) -> PersistPlan {
+        let names = self.candidate_names(app);
+        let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        PersistPlan::at_iter_end(&refs, app.regions().len(), 1)
+    }
+
+    pub fn plan_critical_iter_end(&self, app: &dyn CrashApp) -> PersistPlan {
+        let wf = self.workflow(app);
+        let refs: Vec<&str> = wf.critical.iter().map(|s| s.as_str()).collect();
+        if refs.is_empty() {
+            PersistPlan::none()
+        } else {
+            PersistPlan::at_iter_end(&refs, app.regions().len(), 1)
+        }
+    }
+
+    pub fn plan_best(&self, app: &dyn CrashApp) -> PersistPlan {
+        let wf = self.workflow(app);
+        let refs: Vec<&str> = wf.critical.iter().map(|s| s.as_str()).collect();
+        if refs.is_empty() {
+            PersistPlan::none()
+        } else {
+            PersistPlan::at_every_region(&refs, app.regions().len())
+        }
+    }
+
+    pub fn eval_apps(&self) -> Vec<Box<dyn CrashApp>> {
+        apps::eval_set()
+    }
+
+    pub fn all_apps(&self) -> Vec<Box<dyn CrashApp>> {
+        apps::all()
+    }
+
+    /// Average EasyCrash recomputability across the eval set (drives the
+    /// §7 model and MTBF_EasyCrash).
+    pub fn avg_final_recomputability(&self) -> f64 {
+        let apps = self.eval_apps();
+        let vals: Vec<f64> = apps
+            .iter()
+            .map(|a| self.workflow(a.as_ref()).final_result.recomputability())
+            .collect();
+        crate::util::mean(&vals)
+    }
+}

@@ -1,0 +1,66 @@
+//! Figure 10: system efficiency with and without EasyCrash at MTBF = 12 h
+//! under the three checkpoint-overhead scenarios (32 s / 320 s / 3200 s),
+//! for the lowest- and highest-recomputability benchmarks plus the
+//! average (the paper shows FT, SP and the average).
+
+use crate::model::efficiency::{evaluate, EfficiencyInput};
+use crate::model::sweep::T_CHK_SCENARIOS;
+use crate::util::{pct, table::Table};
+
+use super::context::ReportCtx;
+use super::fig6;
+
+/// NVM restart time: non-read-only data / DRAM bandwidth (§7 T_r').
+pub fn t_r_nvm_seconds(bytes_per_node: f64) -> f64 {
+    bytes_per_node / 106e9
+}
+
+pub fn run(ctx: &ReportCtx) -> anyhow::Result<Table> {
+    let rows = fig6::rows(ctx);
+    let lo = rows
+        .iter()
+        .min_by(|a, b| a.easycrash.total_cmp(&b.easycrash))
+        .expect("rows");
+    let hi = rows
+        .iter()
+        .max_by(|a, b| a.easycrash.total_cmp(&b.easycrash))
+        .expect("rows");
+    let avg = crate::util::mean(&rows.iter().map(|r| r.easycrash).collect::<Vec<_>>());
+    // Model a 96 GB node (paper's 64-128 GB) for the NVM restart time.
+    let t_r_nvm = t_r_nvm_seconds(96e9);
+    let mtbf = 12.0 * 3600.0;
+
+    let mut t = Table::new(&[
+        "T_chk",
+        &format!("{} base", lo.app),
+        &format!("{} EC", lo.app),
+        &format!("{} base", hi.app),
+        &format!("{} EC", hi.app),
+        "avg base",
+        "avg EC",
+        "avg improve",
+    ]);
+    for &t_chk in &T_CHK_SCENARIOS {
+        let m_lo = evaluate(&EfficiencyInput::paper(mtbf, t_chk, lo.easycrash, ctx.ts, t_r_nvm));
+        let m_hi = evaluate(&EfficiencyInput::paper(mtbf, t_chk, hi.easycrash, ctx.ts, t_r_nvm));
+        let m_av = evaluate(&EfficiencyInput::paper(mtbf, t_chk, avg, ctx.ts, t_r_nvm));
+        t.row(vec![
+            format!("{t_chk:.0}s"),
+            pct(m_lo.base),
+            pct(m_lo.easycrash),
+            pct(m_hi.base),
+            pct(m_hi.easycrash),
+            pct(m_av.base),
+            pct(m_av.easycrash),
+            pct(m_av.improvement()),
+        ]);
+    }
+    println!(
+        "lowest-recomputability app: {} (R={}), highest: {} (R={}); paper shows FT and SP",
+        lo.app,
+        pct(lo.easycrash),
+        hi.app,
+        pct(hi.easycrash)
+    );
+    Ok(t)
+}

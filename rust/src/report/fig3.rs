@@ -1,0 +1,37 @@
+//! Figure 3: application responses after crash and restart, with no
+//! persistence (S1 = success, S2 = success w/ extra iterations, S3 =
+//! interruption, S4 = verification fails).
+
+use crate::easycrash::PersistPlan;
+use crate::util::{pct, table::Table};
+
+use super::context::ReportCtx;
+
+pub fn run(ctx: &ReportCtx) -> anyhow::Result<Table> {
+    let mut t = Table::new(&["app", "S1", "S2", "S3", "S4"]);
+    let mut sums = [0.0; 4];
+    let apps = ctx.all_apps();
+    for app in &apps {
+        let r = ctx.campaign(app.as_ref(), "none", &PersistPlan::none(), false);
+        let f = r.response_fractions();
+        for (s, x) in sums.iter_mut().zip(f) {
+            *s += x;
+        }
+        t.row(vec![
+            app.name().into(),
+            pct(f[0]),
+            pct(f[1]),
+            pct(f[2]),
+            pct(f[3]),
+        ]);
+    }
+    let n = apps.len() as f64;
+    t.row(vec![
+        "average".into(),
+        pct(sums[0] / n),
+        pct(sums[1] / n),
+        pct(sums[2] / n),
+        pct(sums[3] / n),
+    ]);
+    Ok(t)
+}

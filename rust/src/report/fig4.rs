@@ -1,0 +1,34 @@
+//! Figure 4: MG's recomputability (a) persisting individual data objects
+//! at the end of each main-loop iteration, and (b) persisting `u` at the
+//! end of each of the four code regions R1–R4.
+
+use crate::easycrash::PersistPlan;
+use crate::util::{pct, table::Table};
+
+use super::context::ReportCtx;
+
+pub fn run(ctx: &ReportCtx) -> anyhow::Result<(Table, Table)> {
+    let app = crate::apps::by_name("mg").expect("mg registered");
+    let regions = app.regions().len();
+
+    // (a) persist one object at a time at iteration end.
+    let mut ta = Table::new(&["persisted object", "recomputability"]);
+    let base = ctx.campaign(app.as_ref(), "none", &PersistPlan::none(), false);
+    ta.row(vec!["none".into(), pct(base.recomputability())]);
+    for obj in ["it", "u", "r"] {
+        let plan = PersistPlan::at_iter_end(&[obj], regions, 1);
+        let r = ctx.campaign(app.as_ref(), &format!("only-{obj}"), &plan, false);
+        ta.row(vec![obj.into(), pct(r.recomputability())]);
+    }
+
+    // (b) persist u at the end of each region.
+    let mut tb = Table::new(&["persist u at", "recomputability"]);
+    tb.row(vec!["none".into(), pct(base.recomputability())]);
+    let names: Vec<String> = app.regions().iter().map(|r| r.name.to_string()).collect();
+    for k in 0..regions {
+        let plan = PersistPlan::at_region(&["u"], k, 1);
+        let r = ctx.campaign(app.as_ref(), &format!("u-at-r{k}"), &plan, false);
+        tb.row(vec![format!("R{} ({})", k + 1, names[k]), pct(r.recomputability())]);
+    }
+    Ok((ta, tb))
+}

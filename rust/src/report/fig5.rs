@@ -1,0 +1,32 @@
+//! Figure 5: recomputability under the three persistence strategies —
+//! (1) no persistence, (2) the selected critical data objects, (3) all
+//! candidate data objects (both persisted at each main-loop iteration
+//! end). The paper's §5.1 validation: (2) ≈ (3).
+
+use crate::easycrash::PersistPlan;
+use crate::util::{pct, table::Table};
+
+use super::context::ReportCtx;
+
+pub fn run(ctx: &ReportCtx) -> anyhow::Result<Table> {
+    let mut t = Table::new(&["app", "no persist", "selected DOs", "all candidate DOs", "|Δ(2,3)|"]);
+    let mut max_gap = 0.0f64;
+    for app in ctx.eval_apps() {
+        let base = ctx.campaign(app.as_ref(), "none", &PersistPlan::none(), false);
+        let sel_plan = ctx.plan_critical_iter_end(app.as_ref());
+        let sel = ctx.campaign(app.as_ref(), "critical-iter-end", &sel_plan, false);
+        let all_plan = ctx.plan_all_candidates(app.as_ref());
+        let all = ctx.campaign(app.as_ref(), "all-iter-end", &all_plan, false);
+        let gap = (sel.recomputability() - all.recomputability()).abs();
+        max_gap = max_gap.max(gap);
+        t.row(vec![
+            app.name().into(),
+            pct(base.recomputability()),
+            pct(sel.recomputability()),
+            pct(all.recomputability()),
+            pct(gap),
+        ]);
+    }
+    println!("max |selected - all| gap: {} (paper: <3%)", pct(max_gap));
+    Ok(t)
+}

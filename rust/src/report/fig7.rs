@@ -1,0 +1,48 @@
+//! Figures 7 & 8: normalized execution time with and without EasyCrash
+//! under NVM performance profiles (Quartz-style 4×/8× latency, 1/6 & 1/8
+//! bandwidth for Fig. 7; the Optane DC PMM profile for Fig. 8).
+//! "Without EasyCrash" persists all candidates at every iteration end,
+//! exactly the paper's comparison.
+
+use crate::easycrash::PersistPlan;
+use crate::sim::NvmProfile;
+use crate::util::{mean, table::Table};
+
+use super::context::ReportCtx;
+
+pub fn run(ctx: &ReportCtx, profiles: &[NvmProfile]) -> anyhow::Result<Table> {
+    let mut headers: Vec<String> = vec!["app".to_string()];
+    for p in profiles {
+        headers.push(format!("EC {}", p.name));
+        headers.push(format!("noEC {}", p.name));
+    }
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr_refs);
+
+    let mut per_profile_ec: Vec<Vec<f64>> = vec![Vec::new(); profiles.len()];
+    let mut per_profile_all: Vec<Vec<f64>> = vec![Vec::new(); profiles.len()];
+    for app in ctx.eval_apps() {
+        let wf = ctx.workflow(app.as_ref());
+        let all_plan = ctx.plan_all_candidates(app.as_ref());
+        let mut row = vec![app.name().to_string()];
+        for (i, p) in profiles.iter().enumerate() {
+            let cfg = ctx.cfg.with_nvm(*p);
+            let base = ctx.profile(app.as_ref(), &PersistPlan::none(), cfg);
+            let ec = ctx.profile(app.as_ref(), &wf.plan, cfg);
+            let all = ctx.profile(app.as_ref(), &all_plan, cfg);
+            let (ne, na) = (ec.cycles / base.cycles, all.cycles / base.cycles);
+            per_profile_ec[i].push(ne);
+            per_profile_all[i].push(na);
+            row.push(format!("{ne:.3}"));
+            row.push(format!("{na:.3}"));
+        }
+        t.row(row);
+    }
+    let mut avg_row = vec!["average".to_string()];
+    for i in 0..profiles.len() {
+        avg_row.push(format!("{:.3}", mean(&per_profile_ec[i])));
+        avg_row.push(format!("{:.3}", mean(&per_profile_all[i])));
+    }
+    t.row(avg_row);
+    Ok(t)
+}

@@ -1,0 +1,202 @@
+//! Report generators — one per table/figure in the paper's evaluation —
+//! plus the CLI dispatch. Each generator prints the paper's rows to
+//! stdout and writes a CSV under `results/`.
+
+pub mod context;
+pub mod fig10;
+pub mod fig11;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig9;
+pub mod table1;
+pub mod table4;
+
+use crate::sim::NvmProfile;
+use crate::util::cli::Args;
+use crate::util::table::Table;
+
+pub use context::ReportCtx;
+
+fn emit(name: &str, title: &str, t: &Table) -> anyhow::Result<()> {
+    println!("\n== {title} ==");
+    print!("{}", t.render());
+    let path = t.save_csv(name)?;
+    println!("[csv] {}", path.display());
+    Ok(())
+}
+
+/// The per-app workflow summary (selection details; used by the
+/// `workflow` subcommand).
+fn cmd_workflow(ctx: &ReportCtx, args: &Args) -> anyhow::Result<()> {
+    let name = args.get_or("app", "mg");
+    let app = crate::apps::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown app `{name}`"))?;
+    let wf = ctx.workflow(app.as_ref());
+    println!("== EasyCrash workflow for {name} ==");
+    println!("step 1: characterization campaign ({} tests)", wf.base.records.len());
+    println!(
+        "  recomputability without persistence: {}",
+        crate::util::pct(wf.base.recomputability())
+    );
+    println!("step 2: data-object selection (Spearman, p<0.01):");
+    let mut t = Table::new(&["object", "bytes", "Rs", "p", "critical"]);
+    for r in &wf.selection {
+        t.row(vec![
+            r.name.clone(),
+            crate::util::human_bytes(r.bytes as u64),
+            format!("{:+.3}", r.rs),
+            format!("{:.2e}", r.p),
+            if r.selected { "yes".into() } else { "no".into() },
+        ]);
+    }
+    print!("{}", t.render());
+    println!("step 3: code-region selection (t_s={}, tau={}):", ctx.ts, ctx.tau);
+    let regions = app.regions();
+    let mut t = Table::new(&["region", "a_k", "c_k", "c_k^max", "l_k", "chosen x"]);
+    for k in 0..regions.len() {
+        let chosen = wf
+            .region_sel
+            .choices
+            .iter()
+            .find(|c| c.region == k)
+            .map(|c| c.x.to_string())
+            .unwrap_or_else(|| "-".into());
+        t.row(vec![
+            format!("R{k} ({})", regions[k].name),
+            format!("{:.3}", wf.model.a[k]),
+            format!("{:.2}", wf.model.c[k]),
+            format!("{:.2}", wf.model.cmax[k]),
+            format!("{:.4}", wf.model.l[k]),
+            chosen,
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "  predicted Y'={} overhead={:.2}% meets tau: {}",
+        crate::util::pct(wf.region_sel.predicted_y),
+        wf.region_sel.predicted_overhead * 100.0,
+        wf.region_sel.meets_tau
+    );
+    println!("step 4: production plan: {:?}", wf.plan.entries);
+    println!(
+        "  final recomputability: {} (best config: {})",
+        crate::util::pct(wf.final_result.recomputability()),
+        crate::util::pct(wf.best.recomputability())
+    );
+    Ok(())
+}
+
+/// §6 sensitivity study: t_s ∈ {2%, 3%, 5%}.
+fn cmd_sensitivity(base_args: &Args) -> anyhow::Result<()> {
+    for ts in [0.02, 0.03, 0.05] {
+        let mut args = base_args.clone();
+        args.options.insert("ts".into(), ts.to_string());
+        let ctx = ReportCtx::from_args(&args)?;
+        let mut t = Table::new(&["app", "Y' predicted", "overhead", "meets tau"]);
+        for app in ctx.eval_apps() {
+            let wf = ctx.workflow(app.as_ref());
+            t.row(vec![
+                app.name().into(),
+                crate::util::pct(wf.region_sel.predicted_y),
+                format!("{:.2}%", wf.region_sel.predicted_overhead * 100.0),
+                wf.region_sel.meets_tau.to_string(),
+            ]);
+        }
+        emit(
+            &format!("sensitivity_ts{}", (ts * 100.0) as u32),
+            &format!("Sensitivity: t_s = {:.0}%", ts * 100.0),
+            &t,
+        )?;
+    }
+    Ok(())
+}
+
+/// Dispatch a report subcommand. `cmd` is the first positional argument.
+pub fn cli_dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
+    match cmd {
+        "help" | "--help" | "-h" => {
+            print_help();
+            return Ok(());
+        }
+        "sensitivity" => return cmd_sensitivity(args),
+        _ => {}
+    }
+    let ctx = ReportCtx::from_args(args)?;
+    match cmd {
+        "workflow" => cmd_workflow(&ctx, args)?,
+        "table1" => emit("table1", "Table 1: benchmark information", &table1::run(&ctx)?)?,
+        "fig3" => emit("fig3", "Figure 3: responses after crash+restart", &fig3::run(&ctx)?)?,
+        "fig4" => {
+            let (a, b) = fig4::run(&ctx)?;
+            emit("fig4a", "Figure 4a: MG, persisting individual objects", &a)?;
+            emit("fig4b", "Figure 4b: MG, persisting u per region", &b)?;
+        }
+        "fig5" => emit("fig5", "Figure 5: three persistence strategies", &fig5::run(&ctx)?)?,
+        "fig6" => emit("fig6", "Figure 6: recomputability by method", &fig6::run(&ctx)?)?,
+        "table4" => emit("table4", "Table 4: normalized execution time", &table4::run(&ctx)?)?,
+        "fig7" => emit(
+            "fig7",
+            "Figure 7: normalized time under NVM profiles",
+            &fig7::run(&ctx, &NvmProfile::ALL_FIG7)?,
+        )?,
+        "fig8" => emit(
+            "fig8",
+            "Figure 8: normalized time on Optane DC PMM",
+            &fig7::run(&ctx, &[NvmProfile::OPTANE])?,
+        )?,
+        "fig9" => emit("fig9", "Figure 9: normalized NVM writes", &fig9::run(&ctx)?)?,
+        "fig10" => emit("fig10", "Figure 10: system efficiency vs T_chk", &fig10::run(&ctx)?)?,
+        "fig11" => emit("fig11", "Figure 11: system efficiency vs scale", &fig11::run(&ctx)?)?,
+        "all" => {
+            emit("table1", "Table 1: benchmark information", &table1::run(&ctx)?)?;
+            emit("fig3", "Figure 3: responses after crash+restart", &fig3::run(&ctx)?)?;
+            let (a, b) = fig4::run(&ctx)?;
+            emit("fig4a", "Figure 4a: MG, persisting individual objects", &a)?;
+            emit("fig4b", "Figure 4b: MG, persisting u per region", &b)?;
+            emit("fig5", "Figure 5: three persistence strategies", &fig5::run(&ctx)?)?;
+            emit("fig6", "Figure 6: recomputability by method", &fig6::run(&ctx)?)?;
+            emit("table4", "Table 4: normalized execution time", &table4::run(&ctx)?)?;
+            emit(
+                "fig7",
+                "Figure 7: normalized time under NVM profiles",
+                &fig7::run(&ctx, &NvmProfile::ALL_FIG7)?,
+            )?;
+            emit(
+                "fig8",
+                "Figure 8: normalized time on Optane DC PMM",
+                &fig7::run(&ctx, &[NvmProfile::OPTANE])?,
+            )?;
+            emit("fig9", "Figure 9: normalized NVM writes", &fig9::run(&ctx)?)?;
+            emit("fig10", "Figure 10: system efficiency vs T_chk", &fig10::run(&ctx)?)?;
+            emit("fig11", "Figure 11: system efficiency vs scale", &fig11::run(&ctx)?)?;
+        }
+        other => {
+            print_help();
+            anyhow::bail!("unknown command `{other}`");
+        }
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "easycrash — reproduction of 'EasyCrash: Exploring Non-Volatility of NVM for HPC Under Failures'
+
+USAGE: easycrash <command> [--tests N] [--seed S] [--engine native|pjrt]
+                 [--ts F] [--tau F] [--paper-scale] [--verbose]
+
+paper artifacts:
+  table1 fig3 fig4 fig5 fig6 table4 fig7 fig8 fig9 fig10 fig11
+  all            regenerate everything (CSV under results/)
+  sensitivity    t_s ∈ {{2,3,5}}%% study
+
+tools:
+  list                         list benchmarks
+  probe    --app A [--tests N] timing probe for one app
+  campaign --app A --plan none|all|obj@region/x[,..]
+  workflow --app A             run + display the 4-step EasyCrash workflow"
+    );
+}

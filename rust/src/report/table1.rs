@@ -1,0 +1,67 @@
+//! Table 1: benchmark information for the crash experiments.
+
+use crate::easycrash::selection::critical_bytes;
+use crate::easycrash::PersistPlan;
+use crate::util::{human_bytes, table::Table};
+
+use super::context::ReportCtx;
+
+pub fn run(ctx: &ReportCtx) -> anyhow::Result<Table> {
+    let mut t = Table::new(&[
+        "app",
+        "#regions",
+        "R/W",
+        "footprint",
+        "candidate DO",
+        "critical DO",
+        "extra iter (restart)",
+        "#iters",
+    ]);
+    for app in ctx.all_apps() {
+        let base = ctx.campaign(app.as_ref(), "none", &PersistPlan::none(), false);
+        let loads = base.stats.loads.max(1);
+        let stores = base.stats.stores.max(1);
+        let ratio = if loads >= stores {
+            format!("{:.0}:1", loads as f64 / stores as f64)
+        } else {
+            format!("1:{:.0}", stores as f64 / loads as f64)
+        };
+        let cand_bytes: usize = base
+            .candidates
+            .iter()
+            .filter(|(_, n, _)| n != "it")
+            .map(|(_, _, b)| *b)
+            .sum();
+        // Critical DO size: EP is excluded from the EasyCrash evaluation
+        // (its selection finds nothing usable, §6/§8).
+        let crit = if app.name() == "ep" {
+            "n/a".to_string()
+        } else {
+            let wf = ctx.workflow(app.as_ref());
+            human_bytes(critical_bytes(&wf.selection) as u64)
+        };
+        // "Ave. # of extra iter. to restart": the paper reports N/A with
+        // the dominant failure class when restart doesn't succeed.
+        let f = base.response_fractions();
+        let extra = if let Some(e) = base.mean_extra_iters() {
+            format!("{e:.1}")
+        } else if f[2] > f[3] && f[2] > 0.1 {
+            "N/A (segfault)".to_string()
+        } else if f[3] > 0.1 {
+            "N/A (verification fails)".to_string()
+        } else {
+            "0".to_string()
+        };
+        t.row(vec![
+            app.name().into(),
+            app.regions().len().to_string(),
+            ratio,
+            human_bytes(base.footprint as u64),
+            human_bytes(cand_bytes as u64),
+            crit,
+            extra,
+            app.nominal_iters().to_string(),
+        ]);
+    }
+    Ok(t)
+}

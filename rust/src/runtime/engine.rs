@@ -1,0 +1,69 @@
+//! The step-engine abstraction.
+//!
+//! Post-crash recomputation and golden runs only need numerics (no cache
+//! simulation), so they execute through a [`StepEngine`]:
+//!
+//! * [`NativeEngine`] — marker engine: the app runs its own generic kernel
+//!   over `RawEnv` (bit-identical math to the instrumented run).
+//! * [`super::PjrtEngine`] — loads the AOT artifacts and serves
+//!   [`StepEngine::call_f32`]; the flagship apps (CG, MG, K-means) route
+//!   their step functions through it.
+//!
+//! Keeping the interface at "named function over f32 tensors" decouples the
+//! benchmark code from the xla crate types.
+
+use anyhow::Result;
+
+/// Engine interface used on the recomputation hot path.
+pub trait StepEngine {
+    fn name(&self) -> &'static str;
+
+    /// Can `call_f32` serve this function name?
+    fn supports(&self, fname: &str) -> bool;
+
+    /// Execute the AOT-compiled function `fname` on f32 inputs, returning
+    /// its outputs. Only meaningful when `supports(fname)`.
+    fn call_f32(&mut self, fname: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>>;
+
+    /// Number of executions served (benchmarking / tests).
+    fn calls(&self) -> u64 {
+        0
+    }
+}
+
+/// Marker engine: apps fall back to their native Rust kernels.
+#[derive(Default)]
+pub struct NativeEngine;
+
+impl NativeEngine {
+    pub fn new() -> NativeEngine {
+        NativeEngine
+    }
+}
+
+impl StepEngine for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn supports(&self, _fname: &str) -> bool {
+        false
+    }
+
+    fn call_f32(&mut self, fname: &str, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        anyhow::bail!("native engine does not serve AOT calls (asked for `{fname}`)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_supports_nothing() {
+        let mut e = NativeEngine::new();
+        assert!(!e.supports("mg_vcycle"));
+        assert!(e.call_f32("mg_vcycle", &[]).is_err());
+        assert_eq!(e.name(), "native");
+    }
+}

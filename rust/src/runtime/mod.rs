@@ -1,0 +1,13 @@
+//! Runtime layer: executing the AOT-compiled JAX/Pallas step functions.
+//!
+//! `python/compile/aot.py` lowers each flagship step function (CG step,
+//! MG V-cycle, K-means step) to HLO *text* under `artifacts/`; this module
+//! loads those artifacts once per process, compiles them on the PJRT CPU
+//! client, and exposes them behind [`StepEngine`] so the post-crash
+//! recomputation hot path can run them without any Python.
+
+pub mod engine;
+pub mod pjrt;
+
+pub use engine::{NativeEngine, StepEngine};
+pub use pjrt::PjrtEngine;

@@ -1,0 +1,193 @@
+//! PJRT-backed [`StepEngine`]: load HLO-text artifacts, compile once,
+//! execute many times.
+//!
+//! Interchange is HLO **text** (not serialized `HloModuleProto`): jax ≥ 0.5
+//! emits protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids and round-trips cleanly (see
+//! `/opt/xla-example/README.md` and `python/compile/aot.py`).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::engine::StepEngine;
+
+/// Shapes of one AOT function's inputs, parsed from its `.sig` sidecar
+/// (written by `aot.py`): one line per input, space-separated dims
+/// (scalars = empty line → rank-0).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Signature {
+    pub inputs: Vec<Vec<i64>>,
+}
+
+impl Signature {
+    pub fn parse(text: &str) -> Signature {
+        let inputs = text
+            .lines()
+            .map(|l| l.trim())
+            .filter(|l| !l.is_empty() && !l.starts_with('#'))
+            .map(|l| {
+                if l == "scalar" {
+                    Vec::new()
+                } else {
+                    l.split_whitespace()
+                        .map(|t| t.parse::<i64>().expect("bad dim in .sig"))
+                        .collect()
+                }
+            })
+            .collect();
+        Signature { inputs }
+    }
+}
+
+/// Compile-once registry of PJRT executables keyed by artifact stem.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    exes: HashMap<String, (xla::PjRtLoadedExecutable, Signature)>,
+    calls: u64,
+}
+
+impl PjrtEngine {
+    /// Create the engine over an artifacts directory (default:
+    /// `artifacts/` next to the working directory, or `$EASYCRASH_ARTIFACTS`).
+    pub fn new(dir: impl AsRef<Path>) -> Result<PjrtEngine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtEngine {
+            client,
+            dir: dir.as_ref().to_path_buf(),
+            exes: HashMap::new(),
+            calls: 0,
+        })
+    }
+
+    /// Default artifacts location.
+    pub fn artifacts_dir() -> PathBuf {
+        std::env::var_os("EASYCRASH_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Convenience: engine over the default artifacts dir; `Err` if the
+    /// directory is missing (run `make artifacts`).
+    pub fn from_default_dir() -> Result<PjrtEngine> {
+        let dir = Self::artifacts_dir();
+        anyhow::ensure!(
+            dir.is_dir(),
+            "artifacts dir `{}` not found — run `make artifacts` first",
+            dir.display()
+        );
+        Ok(PjrtEngine::new(dir)?)
+    }
+
+    fn artifact_path(&self, fname: &str) -> PathBuf {
+        self.dir.join(format!("{fname}.hlo.txt"))
+    }
+
+    /// Load + compile an artifact if not already resident.
+    fn ensure(&mut self, fname: &str) -> Result<()> {
+        if self.exes.contains_key(fname) {
+            return Ok(());
+        }
+        let path = self.artifact_path(fname);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile of {fname}"))?;
+        let sig_path = self.dir.join(format!("{fname}.sig"));
+        let sig = if sig_path.is_file() {
+            Signature::parse(&std::fs::read_to_string(&sig_path)?)
+        } else {
+            Signature::default()
+        };
+        self.exes.insert(fname.to_string(), (exe, sig));
+        Ok(())
+    }
+
+    /// Names of all artifacts present on disk.
+    pub fn available(&self) -> Vec<String> {
+        let mut v: Vec<String> = std::fs::read_dir(&self.dir)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter_map(|e| {
+                        let name = e.file_name().to_string_lossy().into_owned();
+                        name.strip_suffix(".hlo.txt").map(|s| s.to_string())
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        v.sort();
+        v
+    }
+}
+
+impl StepEngine for PjrtEngine {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn supports(&self, fname: &str) -> bool {
+        self.exes.contains_key(fname) || self.artifact_path(fname).is_file()
+    }
+
+    fn call_f32(&mut self, fname: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        self.ensure(fname)?;
+        let (exe, sig) = self.exes.get(fname).expect("ensured above");
+        anyhow::ensure!(
+            sig.inputs.len() == inputs.len(),
+            "{fname}: expected {} inputs, got {}",
+            sig.inputs.len(),
+            inputs.len()
+        );
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs.iter().zip(&sig.inputs) {
+            let expected: i64 = dims.iter().product::<i64>().max(1);
+            anyhow::ensure!(
+                data.len() as i64 == expected,
+                "{fname}: input length {} != shape {:?}",
+                data.len(),
+                dims
+            );
+            let lit = xla::Literal::vec1(data);
+            let lit = if dims.is_empty() {
+                lit.reshape(&[])?
+            } else {
+                lit.reshape(dims)?
+            };
+            lits.push(lit);
+        }
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        self.calls += 1;
+        // aot.py lowers with return_tuple=True: unwrap the tuple.
+        let parts = result.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+
+    fn calls(&self) -> u64 {
+        self.calls
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signature_parse() {
+        let s = Signature::parse("# comment\n32 32 16\nscalar\n8 4\n");
+        assert_eq!(
+            s.inputs,
+            vec![vec![32, 32, 16], Vec::<i64>::new(), vec![8, 4]]
+        );
+    }
+
+    // End-to-end PJRT tests live in rust/tests/pjrt_roundtrip.rs (they need
+    // `make artifacts` to have run).
+}

@@ -1,0 +1,283 @@
+//! One set-associative, write-back/write-allocate cache level with true-LRU
+//! replacement — tag/dirty/LRU metadata only (data bytes live in the
+//! architectural image, see [`crate::sim::memory`]).
+
+use super::config::CacheGeom;
+
+const INVALID: u64 = u64::MAX;
+
+/// Metadata-only cache level. Lines are identified by *line index*
+/// (byte address >> 6).
+#[derive(Clone)]
+pub struct Cache {
+    sets: usize,
+    ways: usize,
+    set_mask: u64,
+    /// `sets * ways` tags; `INVALID` marks an empty way. The "tag" we store
+    /// is the full line index (cheaper than splitting tag/index and exact).
+    tags: Vec<u64>,
+    dirty: Vec<bool>,
+    /// Per-way LRU rank within its set: 0 = most recent, `ways-1` = LRU.
+    lru: Vec<u8>,
+}
+
+impl Cache {
+    pub fn new(geom: CacheGeom) -> Cache {
+        let sets = geom.sets();
+        assert!(sets.is_power_of_two(), "set count must be a power of two");
+        assert!(geom.ways <= u8::MAX as usize);
+        Cache {
+            sets,
+            ways: geom.ways,
+            set_mask: (sets - 1) as u64,
+            tags: vec![INVALID; sets * geom.ways],
+            dirty: vec![false; sets * geom.ways],
+            lru: (0..sets * geom.ways).map(|i| (i % geom.ways) as u8).collect(),
+        }
+    }
+
+    #[inline]
+    fn set_of(&self, line: u64) -> usize {
+        (line & self.set_mask) as usize
+    }
+
+    #[inline]
+    fn base(&self, set: usize) -> usize {
+        set * self.ways
+    }
+
+    /// Is the line resident? Does not touch LRU.
+    #[inline]
+    pub fn probe(&self, line: u64) -> Option<usize> {
+        let b = self.base(self.set_of(line));
+        (0..self.ways).find(|&w| self.tags[b + w] == line)
+    }
+
+    #[inline]
+    fn touch(&mut self, set: usize, way: usize) {
+        let b = self.base(set);
+        let lru = &mut self.lru[b..b + self.ways];
+        let old = lru[way];
+        for l in lru.iter_mut() {
+            if *l < old {
+                *l += 1;
+            }
+        }
+        lru[way] = 0;
+    }
+
+    /// Access the line; returns `true` on hit (updating LRU and, for
+    /// writes, the dirty bit). On miss returns `false` without filling —
+    /// the hierarchy decides fill policy.
+    #[inline]
+    pub fn access(&mut self, line: u64, write: bool) -> bool {
+        let set = self.set_of(line);
+        let b = self.base(set);
+        // Slice once so the way scan is bounds-check-free.
+        let tags = &self.tags[b..b + self.ways];
+        if let Some(w) = tags.iter().position(|&t| t == line) {
+            self.touch(set, w);
+            if write {
+                self.dirty[b + w] = true;
+            }
+            return true;
+        }
+        false
+    }
+
+    /// Install the line (which must not be resident), evicting the LRU way
+    /// if the set is full. Returns the evicted `(line, dirty)` if any.
+    pub fn fill(&mut self, line: u64, dirty: bool) -> Option<(u64, bool)> {
+        debug_assert!(self.probe(line).is_none(), "fill of resident line");
+        let set = self.set_of(line);
+        let b = self.base(set);
+        // Prefer an invalid way; otherwise evict the LRU way.
+        let mut victim_way = usize::MAX;
+        let mut victim_rank = 0u8;
+        for w in 0..self.ways {
+            if self.tags[b + w] == INVALID {
+                victim_way = w;
+                break;
+            }
+            if self.lru[b + w] >= victim_rank {
+                victim_rank = self.lru[b + w];
+                victim_way = w;
+            }
+        }
+        debug_assert!(victim_way != usize::MAX);
+        let evicted = if self.tags[b + victim_way] == INVALID {
+            None
+        } else {
+            Some((self.tags[b + victim_way], self.dirty[b + victim_way]))
+        };
+        self.tags[b + victim_way] = line;
+        self.dirty[b + victim_way] = dirty;
+        self.touch(set, victim_way);
+        evicted
+    }
+
+    /// Merge dirtiness into a resident line (used when a dirty victim is
+    /// demoted into a level where the line is already resident).
+    pub fn set_dirty(&mut self, line: u64) -> bool {
+        let b = self.base(self.set_of(line));
+        if let Some(w) = self.probe(line) {
+            self.dirty[b + w] = true;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Remove the line if resident; returns `Some(was_dirty)`.
+    pub fn invalidate(&mut self, line: u64) -> Option<bool> {
+        let set = self.set_of(line);
+        let b = self.base(set);
+        if let Some(w) = self.probe(line) {
+            self.tags[b + w] = INVALID;
+            let d = self.dirty[b + w];
+            self.dirty[b + w] = false;
+            // demote the freed way to LRU so it is reused first
+            let old = self.lru[b + w];
+            for x in 0..self.ways {
+                if self.lru[b + x] > old {
+                    self.lru[b + x] -= 1;
+                }
+            }
+            self.lru[b + w] = (self.ways - 1) as u8;
+            Some(d)
+        } else {
+            None
+        }
+    }
+
+    /// Clear the dirty bit keeping the line valid (CLWB semantics);
+    /// returns `Some(was_dirty)` if resident.
+    pub fn clean(&mut self, line: u64) -> Option<bool> {
+        let set = self.set_of(line);
+        if let Some(w) = self.probe(line) {
+            let b = self.base(set);
+            let d = self.dirty[b + w];
+            self.dirty[b + w] = false;
+            Some(d)
+        } else {
+            None
+        }
+    }
+
+    /// Is the line resident *and* dirty?
+    #[inline]
+    pub fn is_dirty(&self, line: u64) -> bool {
+        let b = self.base(self.set_of(line));
+        (0..self.ways).any(|w| self.tags[b + w] == line && self.dirty[b + w])
+    }
+
+    /// Collect all dirty lines (crash-time inconsistency accounting).
+    pub fn dirty_lines(&self, out: &mut Vec<u64>) {
+        for i in 0..self.tags.len() {
+            if self.dirty[i] && self.tags[i] != INVALID {
+                out.push(self.tags[i]);
+            }
+        }
+    }
+
+    /// Number of resident lines (tests / stats).
+    pub fn occupancy(&self) -> usize {
+        self.tags.iter().filter(|&&t| t != INVALID).count()
+    }
+
+    pub fn ways(&self) -> usize {
+        self.ways
+    }
+
+    pub fn sets(&self) -> usize {
+        self.sets
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::CacheGeom;
+
+    fn tiny() -> Cache {
+        // 4 sets x 2 ways
+        Cache::new(CacheGeom::new(8 * 64, 2))
+    }
+
+    #[test]
+    fn hit_after_fill() {
+        let mut c = tiny();
+        assert!(!c.access(5, false));
+        assert_eq!(c.fill(5, false), None);
+        assert!(c.access(5, false));
+        assert!(!c.is_dirty(5));
+        assert!(c.access(5, true));
+        assert!(c.is_dirty(5));
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut c = tiny();
+        // set 0 holds lines 0,4,8,... (4 sets)
+        c.fill(0, false);
+        c.fill(4, false);
+        c.access(0, false); // 4 becomes LRU
+        let ev = c.fill(8, true).expect("must evict");
+        assert_eq!(ev, (4, false));
+        assert!(c.probe(0).is_some());
+        assert!(c.probe(8).is_some());
+    }
+
+    #[test]
+    fn dirty_victim_reported() {
+        let mut c = tiny();
+        c.fill(0, false);
+        c.access(0, true);
+        c.fill(4, false);
+        c.access(4, false); // 0 is LRU now
+        let ev = c.fill(8, false).unwrap();
+        assert_eq!(ev, (0, true));
+    }
+
+    #[test]
+    fn invalidate_and_clean() {
+        let mut c = tiny();
+        c.fill(3, true);
+        assert_eq!(c.clean(3), Some(true));
+        assert!(!c.is_dirty(3));
+        assert!(c.probe(3).is_some(), "clwb keeps the line valid");
+        assert_eq!(c.invalidate(3), Some(false));
+        assert!(c.probe(3).is_none());
+        assert_eq!(c.invalidate(3), None);
+    }
+
+    #[test]
+    fn dirty_lines_enumeration() {
+        let mut c = tiny();
+        c.fill(1, true);
+        c.fill(2, false);
+        c.fill(6, true);
+        let mut v = Vec::new();
+        c.dirty_lines(&mut v);
+        v.sort_unstable();
+        assert_eq!(v, vec![1, 6]);
+    }
+
+    #[test]
+    fn occupancy_counts() {
+        let mut c = tiny();
+        assert_eq!(c.occupancy(), 0);
+        c.fill(0, false);
+        c.fill(1, false);
+        assert_eq!(c.occupancy(), 2);
+        c.invalidate(0);
+        assert_eq!(c.occupancy(), 1);
+    }
+
+    #[test]
+    fn invalid_way_preferred_over_eviction() {
+        let mut c = tiny();
+        c.fill(0, true);
+        assert_eq!(c.fill(4, false), None, "second way free: no eviction");
+    }
+}

@@ -1,0 +1,163 @@
+//! Simulator configuration: cache geometry and NVM performance profiles.
+
+use super::LINE;
+
+/// Geometry of one cache level (capacity, associativity; 64 B lines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheGeom {
+    /// Total capacity in bytes. Must be a power-of-two multiple of
+    /// `ways * 64`.
+    pub size: usize,
+    /// Set associativity.
+    pub ways: usize,
+}
+
+impl CacheGeom {
+    pub const fn new(size: usize, ways: usize) -> CacheGeom {
+        CacheGeom { size, ways }
+    }
+
+    pub fn lines(&self) -> usize {
+        self.size / LINE
+    }
+
+    pub fn sets(&self) -> usize {
+        self.lines() / self.ways
+    }
+}
+
+/// An NVM performance profile, expressed relative to DRAM (the paper's
+/// Quartz methodology: 4×/8× DRAM latency, 1/6 and 1/8 DRAM bandwidth, and
+/// an Optane DC PMM point).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NvmProfile {
+    pub name: &'static str,
+    /// Read latency multiplier vs DRAM.
+    pub read_lat_x: f64,
+    /// Write latency multiplier vs DRAM.
+    pub write_lat_x: f64,
+    /// Bandwidth divisor vs DRAM (1.0 = DRAM bandwidth).
+    pub bw_div: f64,
+}
+
+impl NvmProfile {
+    pub const DRAM: NvmProfile = NvmProfile {
+        name: "dram",
+        read_lat_x: 1.0,
+        write_lat_x: 1.0,
+        bw_div: 1.0,
+    };
+    /// 4× DRAM latency (Quartz `Lat=4x`).
+    pub const LAT4X: NvmProfile = NvmProfile {
+        name: "lat4x",
+        read_lat_x: 4.0,
+        write_lat_x: 4.0,
+        bw_div: 1.0,
+    };
+    /// 8× DRAM latency (Quartz `Lat=8x`).
+    pub const LAT8X: NvmProfile = NvmProfile {
+        name: "lat8x",
+        read_lat_x: 8.0,
+        write_lat_x: 8.0,
+        bw_div: 1.0,
+    };
+    /// 1/6 DRAM bandwidth (Quartz `BW=1/6`).
+    pub const BW6: NvmProfile = NvmProfile {
+        name: "bw1/6",
+        read_lat_x: 1.0,
+        write_lat_x: 1.0,
+        bw_div: 6.0,
+    };
+    /// 1/8 DRAM bandwidth (Quartz `BW=1/8`).
+    pub const BW8: NvmProfile = NvmProfile {
+        name: "bw1/8",
+        read_lat_x: 1.0,
+        write_lat_x: 1.0,
+        bw_div: 8.0,
+    };
+    /// Intel Optane DC PMM app-direct mode: ~3× read latency, ~4× write
+    /// latency, ~1/3 bandwidth vs DDR4 (public characterizations of the
+    /// 2019-era DIMMs).
+    pub const OPTANE: NvmProfile = NvmProfile {
+        name: "optane",
+        read_lat_x: 3.0,
+        write_lat_x: 4.0,
+        bw_div: 3.0,
+    };
+
+    pub const ALL_FIG7: [NvmProfile; 4] = [
+        NvmProfile::LAT4X,
+        NvmProfile::LAT8X,
+        NvmProfile::BW6,
+        NvmProfile::BW8,
+    ];
+}
+
+/// Full simulator configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SimConfig {
+    pub l1: CacheGeom,
+    pub l2: CacheGeom,
+    pub l3: CacheGeom,
+    pub nvm: NvmProfile,
+}
+
+impl SimConfig {
+    /// Default mini-scale hierarchy: the Xeon Gold 6126 geometry of the
+    /// paper (8/16/11-way) with capacities scaled ~16× down so the
+    /// mini-class benchmark footprints keep the paper's footprint≫LLC
+    /// relationship while keeping crash campaigns fast on one core.
+    pub fn mini() -> SimConfig {
+        SimConfig {
+            l1: CacheGeom::new(16 * 1024, 8),
+            l2: CacheGeom::new(64 * 1024, 8),
+            l3: CacheGeom::new(256 * 1024, 16),
+            nvm: NvmProfile::DRAM,
+        }
+    }
+
+    /// The paper's actual hierarchy (Table: L1 32 KB/8-way, L2 1 MB/16-way,
+    /// L3 19.25 MB≈rounded to 16 MB pow2/11→16-way). Usable with
+    /// `--paper-scale`, at a large simulation-time cost.
+    pub fn paper() -> SimConfig {
+        SimConfig {
+            l1: CacheGeom::new(32 * 1024, 8),
+            l2: CacheGeom::new(1024 * 1024, 16),
+            l3: CacheGeom::new(16 * 1024 * 1024, 16),
+            nvm: NvmProfile::DRAM,
+        }
+    }
+
+    pub fn with_nvm(mut self, nvm: NvmProfile) -> SimConfig {
+        self.nvm = nvm;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_math() {
+        let g = CacheGeom::new(16 * 1024, 8);
+        assert_eq!(g.lines(), 256);
+        assert_eq!(g.sets(), 32);
+    }
+
+    #[test]
+    fn mini_fits_invariants() {
+        let c = SimConfig::mini();
+        for g in [c.l1, c.l2, c.l3] {
+            assert!(g.sets().is_power_of_two(), "sets must be pow2 for mask indexing");
+            assert_eq!(g.sets() * g.ways * LINE, g.size);
+        }
+        assert!(c.l1.size < c.l2.size && c.l2.size < c.l3.size);
+    }
+
+    #[test]
+    fn paper_profile_values() {
+        assert_eq!(NvmProfile::LAT8X.read_lat_x, 8.0);
+        assert_eq!(NvmProfile::BW6.bw_div, 6.0);
+    }
+}

@@ -1,0 +1,781 @@
+//! The execution environments benchmarks run against.
+//!
+//! Each benchmark's numerical kernel is written once, generic over [`Env`]:
+//!
+//! * [`SimEnv`] — instrumented execution: every load/store goes through the
+//!   cache hierarchy and the dual memory image; region markers drive the
+//!   persistence plan's cache flushes; crash points trigger the campaign
+//!   observer (the paper's NVCT role).
+//! * [`RawEnv`] — plain arrays, no simulation: used for golden runs and for
+//!   post-crash recomputation, where only numerics matter (the fast path;
+//!   the PJRT engine slots in above this level for the flagship apps).
+//!
+//! Out-of-range indices return [`Signal::Interrupt`] from either env —
+//! this is how restart from inconsistent integer state manifests as the
+//! paper's "Interruption" outcome (S3) instead of aborting the process.
+
+use super::hierarchy::{FlushKind, Hierarchy};
+use super::memory::Memory;
+use super::objects::{ObjId, ObjSpec, Registry, Ty};
+use super::timing::Clock;
+use super::SimConfig;
+
+/// Why a kernel stopped early.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Signal {
+    /// The configured crash point was reached (halt-mode only).
+    Crash,
+    /// The program performed an invalid access (restart "segfault", S3).
+    Interrupt,
+}
+
+/// Handle to a registered data object; valid for the env that returned it
+/// (both envs assign the same ids when allocation order matches, which the
+/// app drivers guarantee by construction).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Buf {
+    pub id: ObjId,
+    pub len: u32,
+    pub ty: Ty,
+}
+
+/// The access interface benchmarks are written against.
+pub trait Env {
+    /// Register a data object (must happen before any access to it).
+    fn alloc(&mut self, spec: ObjSpec) -> Buf;
+
+    fn ld(&mut self, b: Buf, i: usize) -> Result<f64, Signal>;
+    fn st(&mut self, b: Buf, i: usize, v: f64) -> Result<(), Signal>;
+    fn ldf(&mut self, b: Buf, i: usize) -> Result<f32, Signal>;
+    fn stf(&mut self, b: Buf, i: usize, v: f32) -> Result<(), Signal>;
+    fn ldi(&mut self, b: Buf, i: usize) -> Result<i64, Signal>;
+    fn sti(&mut self, b: Buf, i: usize, v: i64) -> Result<(), Signal>;
+
+    /// Mark entry into code region `k` (first-level inner loop / inter-loop
+    /// block, §5.2). Ends the previous region, firing its flush hooks.
+    fn region(&mut self, k: usize) -> Result<(), Signal>;
+
+    /// Mark the end of main-loop iteration `it`: ends the current region
+    /// and persists the loop-iterator bookmark (paper footnote 3).
+    fn iter_end(&mut self, it: u64) -> Result<(), Signal>;
+
+    /// Bulk helper: read `len` f64s starting at `i` into `out`.
+    fn ld_slice(&mut self, b: Buf, i: usize, out: &mut [f64]) -> Result<(), Signal> {
+        for (k, o) in out.iter_mut().enumerate() {
+            *o = self.ld(b, i + k)?;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Persistence plan hooks (resolved form used by SimEnv)
+// ---------------------------------------------------------------------------
+
+/// A resolved persistence plan: which objects to flush at the end of which
+/// region, every how many main-loop iterations.
+#[derive(Clone, Debug)]
+pub struct FlushHooks {
+    /// `at_region_end[k]` = list of `(object, every_x)` to flush when
+    /// region `k` ends.
+    pub at_region_end: Vec<Vec<(ObjId, u32)>>,
+    /// The loop-iterator bookmark object, flushed at every iteration end.
+    pub iter_obj: Option<ObjId>,
+    pub kind: FlushKind,
+}
+
+impl FlushHooks {
+    pub fn none(num_regions: usize) -> FlushHooks {
+        FlushHooks {
+            at_region_end: vec![Vec::new(); num_regions],
+            iter_obj: None,
+            kind: FlushKind::ClflushOpt,
+        }
+    }
+}
+
+/// Crash metadata handed to the campaign observer.
+#[derive(Clone, Copy, Debug)]
+pub struct CrashInfo {
+    /// Index of the memory op at which the crash fired.
+    pub op: u64,
+    /// Main-loop iteration in progress (0-based).
+    pub iter: u64,
+    /// Code region in progress (== `num_regions` during init/teardown).
+    pub region: usize,
+}
+
+/// Observer callback: `SimEnv` invokes it at each pre-drawn crash point,
+/// with full access to the env for inconsistency accounting and snapshots.
+/// Execution resumes afterwards — a crash is an observation, not a
+/// perturbation (see DESIGN.md "single-pass campaign").
+pub type Observer<'a> = Box<dyn FnMut(&mut SimEnv, CrashInfo) + 'a>;
+
+// ---------------------------------------------------------------------------
+// SimEnv
+// ---------------------------------------------------------------------------
+
+/// Instrumented environment (the NVCT role).
+pub struct SimEnv<'a> {
+    pub mem: Memory,
+    pub hier: Hierarchy,
+    pub reg: Registry,
+    pub clock: Clock,
+    pub hooks: FlushHooks,
+    num_regions: usize,
+    cur_region: usize,
+    cur_iter: u64,
+    ops: u64,
+    /// Sorted ascending crash points (op indices); observer fires at each.
+    crash_points: Vec<u64>,
+    cp_idx: usize,
+    next_crash: u64,
+    /// If set, `Signal::Crash` is returned once `ops` reaches this value
+    /// (halt-mode, for run-to-crash demos and tests).
+    pub halt_at: Option<u64>,
+    observer: Option<Observer<'a>>,
+    /// Number of persistence operations executed (Table 4).
+    pub persist_ops: u64,
+    /// Cycles spent inside persistence operations.
+    pub persist_cycles: f64,
+    /// Op index at which the main computation loop began (crash points are
+    /// drawn within the main loop only, per §3 "code regions where crashes
+    /// can happen").
+    main_start: Option<u64>,
+}
+
+impl<'a> SimEnv<'a> {
+    pub fn new(cfg: &SimConfig, num_regions: usize) -> SimEnv<'a> {
+        SimEnv {
+            mem: Memory::new(0),
+            hier: Hierarchy::new(cfg),
+            reg: Registry::new(),
+            clock: Clock::new(num_regions),
+            hooks: FlushHooks::none(num_regions),
+            num_regions,
+            cur_region: num_regions,
+            cur_iter: 0,
+            ops: 0,
+            crash_points: Vec::new(),
+            cp_idx: 0,
+            next_crash: u64::MAX,
+            halt_at: None,
+            observer: None,
+            persist_ops: 0,
+            persist_cycles: 0.0,
+            main_start: None,
+        }
+    }
+
+    /// Record that initialization finished and the main loop begins now.
+    ///
+    /// This also writes back all dirty lines: the paper's NVCT attaches to
+    /// a process whose initialized data is already in (NVM) main memory,
+    /// so restart sees a complete post-init image plus whatever the main
+    /// loop persisted. Crashes are drawn within the main loop only (§3).
+    pub fn mark_main_start(&mut self) {
+        if self.main_start.is_none() {
+            self.hier.drain(&mut self.mem);
+            self.main_start = Some(self.ops);
+        }
+    }
+
+    /// Op index of the main-loop start (0 if never marked).
+    pub fn main_start_ops(&self) -> u64 {
+        self.main_start.unwrap_or(0)
+    }
+
+    /// Install the persistence plan (resolved hooks).
+    pub fn set_hooks(&mut self, hooks: FlushHooks) {
+        assert_eq!(hooks.at_region_end.len(), self.num_regions);
+        self.hooks = hooks;
+    }
+
+    /// Install sorted crash points + the observer fired at each.
+    pub fn set_crash_points(&mut self, points: Vec<u64>, obs: Observer<'a>) {
+        debug_assert!(points.windows(2).all(|w| w[0] <= w[1]));
+        self.next_crash = points.first().copied().unwrap_or(u64::MAX);
+        self.crash_points = points;
+        self.cp_idx = 0;
+        self.observer = Some(obs);
+    }
+
+    /// Total instrumented memory ops so far (campaigns draw crash points
+    /// uniformly over this count, measured by a profiling run).
+    pub fn ops(&self) -> u64 {
+        self.ops
+    }
+
+    pub fn cur_iter(&self) -> u64 {
+        self.cur_iter
+    }
+
+    pub fn cur_region(&self) -> usize {
+        self.cur_region
+    }
+
+    /// Per-object data inconsistent rate in [0,1] (§3 "calculation of data
+    /// inconsistent rate").
+    pub fn inconsistent_rate(&self, id: ObjId) -> f64 {
+        let o = self.reg.get(id);
+        let bytes = o.spec.bytes();
+        if bytes == 0 {
+            return 0.0;
+        }
+        self.hier.inconsistent_bytes(&self.mem, o.base, bytes) as f64 / bytes as f64
+    }
+
+    /// Copy the *persisted* bytes of an object out of NVM (restart path).
+    pub fn nvm_bytes(&self, id: ObjId) -> Vec<u8> {
+        let o = self.reg.get(id);
+        self.mem.nvm[o.base..o.base + o.spec.bytes()].to_vec()
+    }
+
+    /// Copy the *architectural* bytes of an object (the §6 "result
+    /// verification" methodology: stopping on a physical machine and
+    /// copying data forces full consistency, unlike a real crash).
+    pub fn arch_bytes(&self, id: ObjId) -> Vec<u8> {
+        let o = self.reg.get(id);
+        self.mem.arch[o.base..o.base + o.spec.bytes()].to_vec()
+    }
+
+    /// The persisted loop-iterator bookmark (0 if none registered yet).
+    pub fn nvm_iter(&self) -> u64 {
+        match self.hooks.iter_obj {
+            Some(id) => {
+                let o = self.reg.get(id);
+                self.mem.nvm_i64(o.base).max(0) as u64
+            }
+            None => 0,
+        }
+    }
+
+    #[inline]
+    fn addr(&self, b: Buf, i: usize, esz: usize) -> usize {
+        self.reg.get(b.id).base + i * esz
+    }
+
+    /// Advance the op counter, firing crash observers / halt mode.
+    #[inline]
+    fn tick(&mut self) -> Result<(), Signal> {
+        self.ops += 1;
+        if self.ops >= self.next_crash {
+            self.crash_hook();
+        }
+        if let Some(h) = self.halt_at {
+            if self.ops >= h {
+                return Err(Signal::Crash);
+            }
+        }
+        Ok(())
+    }
+
+    #[cold]
+    fn crash_hook(&mut self) {
+        // Fire for every crash point drawn at this op index (duplicates are
+        // independent tests).
+        while self.cp_idx < self.crash_points.len() && self.crash_points[self.cp_idx] <= self.ops
+        {
+            self.cp_idx += 1;
+            if let Some(mut obs) = self.observer.take() {
+                let info = CrashInfo {
+                    op: self.ops,
+                    iter: self.cur_iter,
+                    region: self.cur_region,
+                };
+                obs(self, info);
+                self.observer = Some(obs);
+            }
+        }
+        self.next_crash = self
+            .crash_points
+            .get(self.cp_idx)
+            .copied()
+            .unwrap_or(u64::MAX);
+    }
+
+    /// Fire the flush hooks for the region that just ended.
+    fn end_region(&mut self, k: usize) {
+        if k >= self.hooks.at_region_end.len() {
+            return;
+        }
+        // Cheap common case: nothing planned here.
+        if self.hooks.at_region_end[k].is_empty() {
+            return;
+        }
+        let entries = std::mem::take(&mut self.hooks.at_region_end[k]);
+        let mut fired = false;
+        let mut cost = 0.0;
+        for &(obj, every_x) in &entries {
+            if self.cur_iter % every_x as u64 == 0 {
+                let o = self.reg.get(obj).clone();
+                cost += self
+                    .hier
+                    .flush_range(&mut self.mem, o.base, o.spec.bytes(), self.hooks.kind);
+                fired = true;
+            }
+        }
+        self.hooks.at_region_end[k] = entries;
+        if fired {
+            self.persist_ops += 1;
+            self.persist_cycles += cost;
+            self.clock.add(k, cost);
+        }
+    }
+
+    /// Flush one object immediately (used by the checkpoint model and the
+    /// explicit `cache_block_flush` API of Fig. 2a).
+    pub fn flush_object(&mut self, id: ObjId) {
+        let o = self.reg.get(id).clone();
+        let cost = self
+            .hier
+            .flush_range(&mut self.mem, o.base, o.spec.bytes(), self.hooks.kind);
+        let r = self.cur_region.min(self.clock.by_region.len() - 1);
+        self.clock.add(r, cost);
+    }
+}
+
+impl<'a> Env for SimEnv<'a> {
+    fn alloc(&mut self, spec: ObjSpec) -> Buf {
+        let len = spec.len as u32;
+        let ty = spec.ty;
+        let bytes = spec.bytes();
+        let id = self.reg.register(spec);
+        // Grow both images to cover the new object (line-aligned).
+        let need = self.reg.footprint().max(self.reg.get(id).base + bytes);
+        let need = (need + super::LINE - 1) & !(super::LINE - 1);
+        if need > self.mem.len() {
+            self.mem.arch.resize(need, 0);
+            self.mem.nvm.resize(need, 0);
+        }
+        Buf { id, len, ty }
+    }
+
+    #[inline]
+    fn ld(&mut self, b: Buf, i: usize) -> Result<f64, Signal> {
+        if i >= b.len as usize {
+            return Err(Signal::Interrupt);
+        }
+        let addr = self.addr(b, i, 8);
+        self.tick()?;
+        let cost = self.hier.access(&mut self.mem, addr, false);
+        self.clock.add(self.cur_region, cost);
+        Ok(self.mem.ld_f64(addr))
+    }
+
+    #[inline]
+    fn st(&mut self, b: Buf, i: usize, v: f64) -> Result<(), Signal> {
+        if i >= b.len as usize {
+            return Err(Signal::Interrupt);
+        }
+        let addr = self.addr(b, i, 8);
+        self.tick()?;
+        self.mem.st_f64(addr, v);
+        let cost = self.hier.access(&mut self.mem, addr, true);
+        self.clock.add(self.cur_region, cost);
+        Ok(())
+    }
+
+    #[inline]
+    fn ldf(&mut self, b: Buf, i: usize) -> Result<f32, Signal> {
+        if i >= b.len as usize {
+            return Err(Signal::Interrupt);
+        }
+        let addr = self.addr(b, i, 4);
+        self.tick()?;
+        let cost = self.hier.access(&mut self.mem, addr, false);
+        self.clock.add(self.cur_region, cost);
+        Ok(self.mem.ld_f32(addr))
+    }
+
+    #[inline]
+    fn stf(&mut self, b: Buf, i: usize, v: f32) -> Result<(), Signal> {
+        if i >= b.len as usize {
+            return Err(Signal::Interrupt);
+        }
+        let addr = self.addr(b, i, 4);
+        self.tick()?;
+        self.mem.st_f32(addr, v);
+        let cost = self.hier.access(&mut self.mem, addr, true);
+        self.clock.add(self.cur_region, cost);
+        Ok(())
+    }
+
+    #[inline]
+    fn ldi(&mut self, b: Buf, i: usize) -> Result<i64, Signal> {
+        if i >= b.len as usize {
+            return Err(Signal::Interrupt);
+        }
+        let addr = self.addr(b, i, 8);
+        self.tick()?;
+        let cost = self.hier.access(&mut self.mem, addr, false);
+        self.clock.add(self.cur_region, cost);
+        Ok(self.mem.ld_i64(addr))
+    }
+
+    #[inline]
+    fn sti(&mut self, b: Buf, i: usize, v: i64) -> Result<(), Signal> {
+        if i >= b.len as usize {
+            return Err(Signal::Interrupt);
+        }
+        let addr = self.addr(b, i, 8);
+        self.tick()?;
+        self.mem.st_i64(addr, v);
+        let cost = self.hier.access(&mut self.mem, addr, true);
+        self.clock.add(self.cur_region, cost);
+        Ok(())
+    }
+
+    fn region(&mut self, k: usize) -> Result<(), Signal> {
+        debug_assert!(k < self.num_regions);
+        let prev = self.cur_region;
+        if prev < self.num_regions {
+            self.end_region(prev);
+        }
+        self.cur_region = k;
+        Ok(())
+    }
+
+    fn iter_end(&mut self, _it: u64) -> Result<(), Signal> {
+        let prev = self.cur_region;
+        if prev < self.num_regions {
+            self.end_region(prev);
+        }
+        // Persist the loop-iterator bookmark (footnote 3: ~zero cost, one
+        // cache line).
+        if let Some(id) = self.hooks.iter_obj {
+            let o = self.reg.get(id).clone();
+            let cost =
+                self.hier
+                    .flush_range(&mut self.mem, o.base, o.spec.bytes(), self.hooks.kind);
+            self.clock.add(prev.min(self.num_regions), cost);
+        }
+        self.cur_iter += 1;
+        self.cur_region = self.num_regions;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RawEnv
+// ---------------------------------------------------------------------------
+
+/// Uninstrumented environment: plain typed arenas, no caches, no timing.
+/// Used for golden runs and post-crash recomputation.
+#[derive(Default)]
+pub struct RawEnv {
+    objs: Vec<(Ty, usize, usize)>, // (ty, offset-in-arena, len)
+    pub f64s: Vec<f64>,
+    pub f32s: Vec<f32>,
+    pub i64s: Vec<i64>,
+    names: Vec<&'static str>,
+}
+
+impl RawEnv {
+    pub fn new() -> RawEnv {
+        RawEnv::default()
+    }
+
+    /// Overlay the persisted NVM bytes of one object into the arena (the
+    /// restart `load_value` of Fig. 2b). `bytes` must be the object's full
+    /// byte image.
+    pub fn load_bytes(&mut self, b: Buf, bytes: &[u8]) {
+        let (ty, off, len) = self.objs[b.id as usize];
+        assert_eq!(bytes.len(), len * ty.bytes(), "snapshot size mismatch");
+        match ty {
+            Ty::F64 => {
+                for k in 0..len {
+                    let a: [u8; 8] = bytes[k * 8..k * 8 + 8].try_into().unwrap();
+                    self.f64s[off + k] = f64::from_le_bytes(a);
+                }
+            }
+            Ty::F32 => {
+                for k in 0..len {
+                    let a: [u8; 4] = bytes[k * 4..k * 4 + 4].try_into().unwrap();
+                    self.f32s[off + k] = f32::from_le_bytes(a);
+                }
+            }
+            Ty::I64 => {
+                for k in 0..len {
+                    let a: [u8; 8] = bytes[k * 8..k * 8 + 8].try_into().unwrap();
+                    self.i64s[off + k] = i64::from_le_bytes(a);
+                }
+            }
+        }
+    }
+
+    /// Borrow an object's f32 slice (PJRT engine path: zero-copy handoff).
+    pub fn f32_slice(&self, b: Buf) -> &[f32] {
+        let (ty, off, len) = self.objs[b.id as usize];
+        assert_eq!(ty, Ty::F32);
+        &self.f32s[off..off + len]
+    }
+
+    pub fn f32_slice_mut(&mut self, b: Buf) -> &mut [f32] {
+        let (ty, off, len) = self.objs[b.id as usize];
+        assert_eq!(ty, Ty::F32);
+        &mut self.f32s[off..off + len]
+    }
+
+    pub fn f64_slice(&self, b: Buf) -> &[f64] {
+        let (ty, off, len) = self.objs[b.id as usize];
+        assert_eq!(ty, Ty::F64);
+        &self.f64s[off..off + len]
+    }
+
+    pub fn f64_slice_mut(&mut self, b: Buf) -> &mut [f64] {
+        let (ty, off, len) = self.objs[b.id as usize];
+        assert_eq!(ty, Ty::F64);
+        &mut self.f64s[off..off + len]
+    }
+
+    pub fn name_of(&self, b: Buf) -> &'static str {
+        self.names[b.id as usize]
+    }
+
+    /// Reconstruct the handle for a registered object id (restart overlay).
+    pub fn buf_of(&self, id: super::objects::ObjId) -> Option<Buf> {
+        self.objs.get(id as usize).map(|&(ty, _, len)| Buf {
+            id,
+            len: len as u32,
+            ty,
+        })
+    }
+}
+
+impl Env for RawEnv {
+    fn alloc(&mut self, spec: ObjSpec) -> Buf {
+        let id = self.objs.len() as ObjId;
+        let (off, len) = match spec.ty {
+            Ty::F64 => {
+                let off = self.f64s.len();
+                self.f64s.resize(off + spec.len, 0.0);
+                (off, spec.len)
+            }
+            Ty::F32 => {
+                let off = self.f32s.len();
+                self.f32s.resize(off + spec.len, 0.0);
+                (off, spec.len)
+            }
+            Ty::I64 => {
+                let off = self.i64s.len();
+                self.i64s.resize(off + spec.len, 0);
+                (off, spec.len)
+            }
+        };
+        self.objs.push((spec.ty, off, len));
+        self.names.push(spec.name);
+        Buf {
+            id,
+            len: len as u32,
+            ty: spec.ty,
+        }
+    }
+
+    #[inline]
+    fn ld(&mut self, b: Buf, i: usize) -> Result<f64, Signal> {
+        if i >= b.len as usize {
+            return Err(Signal::Interrupt);
+        }
+        let (_, off, _) = self.objs[b.id as usize];
+        Ok(self.f64s[off + i])
+    }
+
+    #[inline]
+    fn st(&mut self, b: Buf, i: usize, v: f64) -> Result<(), Signal> {
+        if i >= b.len as usize {
+            return Err(Signal::Interrupt);
+        }
+        let (_, off, _) = self.objs[b.id as usize];
+        self.f64s[off + i] = v;
+        Ok(())
+    }
+
+    #[inline]
+    fn ldf(&mut self, b: Buf, i: usize) -> Result<f32, Signal> {
+        if i >= b.len as usize {
+            return Err(Signal::Interrupt);
+        }
+        let (_, off, _) = self.objs[b.id as usize];
+        Ok(self.f32s[off + i])
+    }
+
+    #[inline]
+    fn stf(&mut self, b: Buf, i: usize, v: f32) -> Result<(), Signal> {
+        if i >= b.len as usize {
+            return Err(Signal::Interrupt);
+        }
+        let (_, off, _) = self.objs[b.id as usize];
+        self.f32s[off + i] = v;
+        Ok(())
+    }
+
+    #[inline]
+    fn ldi(&mut self, b: Buf, i: usize) -> Result<i64, Signal> {
+        if i >= b.len as usize {
+            return Err(Signal::Interrupt);
+        }
+        let (_, off, _) = self.objs[b.id as usize];
+        Ok(self.i64s[off + i])
+    }
+
+    #[inline]
+    fn sti(&mut self, b: Buf, i: usize, v: i64) -> Result<(), Signal> {
+        if i >= b.len as usize {
+            return Err(Signal::Interrupt);
+        }
+        let (_, off, _) = self.objs[b.id as usize];
+        self.i64s[off + i] = v;
+        Ok(())
+    }
+
+    #[inline]
+    fn region(&mut self, _k: usize) -> Result<(), Signal> {
+        Ok(())
+    }
+
+    #[inline]
+    fn iter_end(&mut self, _it: u64) -> Result<(), Signal> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::objects::ObjSpec;
+
+    fn cfg() -> SimConfig {
+        SimConfig::mini()
+    }
+
+    #[test]
+    fn sim_and_raw_agree_on_values() {
+        let c = cfg();
+        let mut sim = SimEnv::new(&c, 1);
+        let mut raw = RawEnv::new();
+        let bs = sim.alloc(ObjSpec::f64("x", 32, true));
+        let br = raw.alloc(ObjSpec::f64("x", 32, true));
+        assert_eq!(bs.id, br.id);
+        for i in 0..32 {
+            sim.st(bs, i, i as f64 * 1.5).unwrap();
+            raw.st(br, i, i as f64 * 1.5).unwrap();
+        }
+        for i in 0..32 {
+            assert_eq!(sim.ld(bs, i).unwrap(), raw.ld(br, i).unwrap());
+        }
+    }
+
+    #[test]
+    fn out_of_range_interrupts() {
+        let mut raw = RawEnv::new();
+        let b = raw.alloc(ObjSpec::f64("x", 4, true));
+        assert_eq!(raw.ld(b, 4), Err(Signal::Interrupt));
+        let c = cfg();
+        let mut sim = SimEnv::new(&c, 1);
+        let b = sim.alloc(ObjSpec::f64("x", 4, true));
+        assert_eq!(sim.st(b, 9, 1.0), Err(Signal::Interrupt));
+    }
+
+    #[test]
+    fn halt_mode_crashes() {
+        let c = cfg();
+        let mut sim = SimEnv::new(&c, 1);
+        let b = sim.alloc(ObjSpec::f64("x", 64, true));
+        sim.halt_at = Some(10);
+        let mut r = Ok(());
+        for i in 0..64 {
+            r = sim.st(b, i, 1.0);
+            if r.is_err() {
+                break;
+            }
+        }
+        assert_eq!(r, Err(Signal::Crash));
+        assert_eq!(sim.ops(), 10);
+    }
+
+    #[test]
+    fn observer_fires_and_execution_continues() {
+        let c = cfg();
+        let mut sim = SimEnv::new(&c, 1);
+        let b = sim.alloc(ObjSpec::f64("x", 64, true));
+        let hits = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        let h2 = hits.clone();
+        sim.set_crash_points(
+            vec![5, 5, 20],
+            Box::new(move |env, info| {
+                h2.borrow_mut().push((info.op, env.inconsistent_rate(0)));
+            }),
+        );
+        for i in 0..64 {
+            sim.st(b, i, 2.0).unwrap();
+        }
+        let hits = hits.borrow();
+        assert_eq!(hits.len(), 3, "duplicate point fires twice");
+        assert_eq!(hits[0].0, 5);
+        assert_eq!(hits[2].0, 20);
+        assert!(hits[2].1 > 0.0, "some bytes must be inconsistent mid-run");
+        assert_eq!(sim.ops(), 64, "run continued to completion");
+    }
+
+    #[test]
+    fn flush_hooks_fire_at_region_end() {
+        let c = cfg();
+        let mut sim = SimEnv::new(&c, 2);
+        let x = sim.alloc(ObjSpec::f64("x", 8, true));
+        let it = sim.alloc(ObjSpec::i64("it", 1, true));
+        let mut hooks = FlushHooks::none(2);
+        hooks.at_region_end[0].push((x.id, 1));
+        hooks.iter_obj = Some(it.id);
+        sim.set_hooks(hooks);
+
+        sim.region(0).unwrap();
+        sim.st(x, 0, 42.0).unwrap();
+        sim.region(1).unwrap(); // ends region 0 -> flush x
+        assert_eq!(sim.mem.nvm_f64(sim.reg.get(x.id).base), 42.0);
+        assert_eq!(sim.persist_ops, 1);
+
+        sim.sti(it, 0, 7).unwrap();
+        sim.iter_end(7).unwrap();
+        assert_eq!(sim.nvm_iter(), 7);
+    }
+
+    #[test]
+    fn flush_every_x_iterations() {
+        let c = cfg();
+        let mut sim = SimEnv::new(&c, 1);
+        let x = sim.alloc(ObjSpec::f64("x", 8, true));
+        let mut hooks = FlushHooks::none(1);
+        hooks.at_region_end[0].push((x.id, 2)); // every 2 iters (it % 2 == 0)
+        sim.set_hooks(hooks);
+        let base = sim.reg.get(x.id).base;
+
+        // iter 0: fires (0 % 2 == 0)
+        sim.region(0).unwrap();
+        sim.st(x, 0, 1.0).unwrap();
+        sim.iter_end(0).unwrap();
+        assert_eq!(sim.mem.nvm_f64(base), 1.0);
+        // iter 1: does not fire
+        sim.region(0).unwrap();
+        sim.st(x, 0, 2.0).unwrap();
+        sim.iter_end(1).unwrap();
+        assert_eq!(sim.mem.nvm_f64(base), 1.0);
+        // iter 2: fires again
+        sim.region(0).unwrap();
+        sim.st(x, 0, 3.0).unwrap();
+        sim.iter_end(2).unwrap();
+        assert_eq!(sim.mem.nvm_f64(base), 3.0);
+    }
+
+    #[test]
+    fn raw_load_bytes_overlays() {
+        let mut raw = RawEnv::new();
+        let b = raw.alloc(ObjSpec::f64("x", 2, true));
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&1.5f64.to_le_bytes());
+        bytes.extend_from_slice(&(-2.0f64).to_le_bytes());
+        raw.load_bytes(b, &bytes);
+        assert_eq!(raw.ld(b, 0).unwrap(), 1.5);
+        assert_eq!(raw.ld(b, 1).unwrap(), -2.0);
+    }
+}

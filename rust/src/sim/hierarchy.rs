@@ -1,0 +1,368 @@
+//! Three-level inclusive write-back hierarchy over the dual memory image.
+//!
+//! Dirtiness is tracked at the innermost level holding the line; dirty
+//! victims are demoted outward; dirty LLC victims (and flushes of dirty
+//! lines) are the only events that write to NVM — each one copies the
+//! line's architectural bytes into the persisted image and bumps the NVM
+//! write counter (the unit Figure 9 counts).
+
+use super::cache::Cache;
+use super::config::SimConfig;
+use super::memory::Memory;
+use super::timing::Costs;
+use super::LINE_SHIFT;
+
+/// Cache-flush instruction flavor (§2.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushKind {
+    /// CLWB: write back if dirty, keep the line valid (no reload cost on
+    /// the next access).
+    Clwb,
+    /// CLFLUSHOPT / CLFLUSH: write back if dirty and invalidate — the next
+    /// access to the block misses (the "extra performance loss" the paper
+    /// doubles its `l_k` estimate for).
+    ClflushOpt,
+}
+
+/// Event counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HierStats {
+    pub loads: u64,
+    pub stores: u64,
+    pub l1_hits: u64,
+    pub l2_hits: u64,
+    pub l3_hits: u64,
+    pub mem_reads: u64,
+    /// NVM line writes from natural (eviction) write-backs.
+    pub nvm_writes_evict: u64,
+    /// NVM line writes performed by flush instructions.
+    pub nvm_writes_flush: u64,
+    /// Flush instructions that found a dirty block.
+    pub flushes_dirty: u64,
+    /// Flush instructions that found a clean / non-resident block.
+    pub flushes_clean: u64,
+}
+
+impl HierStats {
+    pub fn nvm_writes(&self) -> u64 {
+        self.nvm_writes_evict + self.nvm_writes_flush
+    }
+}
+
+/// The cache hierarchy.
+pub struct Hierarchy {
+    l1: Cache,
+    l2: Cache,
+    l3: Cache,
+    pub costs: Costs,
+    pub stats: HierStats,
+}
+
+impl Hierarchy {
+    pub fn new(cfg: &SimConfig) -> Hierarchy {
+        Hierarchy {
+            l1: Cache::new(cfg.l1),
+            l2: Cache::new(cfg.l2),
+            l3: Cache::new(cfg.l3),
+            costs: Costs::from_profile(&cfg.nvm),
+            stats: HierStats::default(),
+        }
+    }
+
+    /// Perform one program load/store at byte address `addr`.
+    /// Returns the modeled cost in cycles.
+    #[inline]
+    pub fn access(&mut self, mem: &mut Memory, addr: usize, write: bool) -> f64 {
+        let line = (addr >> LINE_SHIFT) as u64;
+        if write {
+            self.stats.stores += 1;
+        } else {
+            self.stats.loads += 1;
+        }
+        // Fast path: L1 hit.
+        if self.l1.access(line, write) {
+            self.stats.l1_hits += 1;
+            return self.costs.cpu_op + self.costs.l1_hit;
+        }
+        let mut cost = self.costs.cpu_op;
+        if self.l2.access(line, false) {
+            self.stats.l2_hits += 1;
+            cost += self.costs.l2_hit;
+        } else if self.l3.access(line, false) {
+            self.stats.l3_hits += 1;
+            cost += self.costs.l3_hit;
+            cost += self.fill_l2(mem, line);
+        } else {
+            self.stats.mem_reads += 1;
+            cost += self.costs.mem_read;
+            cost += self.fill_l3(mem, line);
+            cost += self.fill_l2(mem, line);
+        }
+        // Write-allocate into L1; dirty bit lives innermost.
+        cost += self.fill_l1(mem, line, write);
+        cost
+    }
+
+    fn fill_l1(&mut self, mem: &mut Memory, line: u64, dirty: bool) -> f64 {
+        match self.l1.fill(line, dirty) {
+            Some((v, true)) => self.demote_dirty_to_l2(mem, v),
+            _ => 0.0,
+        }
+    }
+
+    fn demote_dirty_to_l2(&mut self, mem: &mut Memory, v: u64) -> f64 {
+        if self.l2.set_dirty(v) {
+            0.0
+        } else {
+            // Inclusion was broken for v (evicted from L2 underneath);
+            // reinstall dirty.
+            match self.l2.fill(v, true) {
+                Some((w, dw)) => self.evict_from_l2(mem, w, dw),
+                None => 0.0,
+            }
+        }
+    }
+
+    fn fill_l2(&mut self, mem: &mut Memory, line: u64) -> f64 {
+        match self.l2.fill(line, false) {
+            Some((v, d)) => self.evict_from_l2(mem, v, d),
+            None => 0.0,
+        }
+    }
+
+    fn evict_from_l2(&mut self, mem: &mut Memory, v: u64, d: bool) -> f64 {
+        // Back-invalidate the inner level; collect its dirtiness.
+        let d1 = self.l1.invalidate(v).unwrap_or(false);
+        let dirty = d || d1;
+        if dirty {
+            if self.l3.set_dirty(v) {
+                0.0
+            } else {
+                match self.l3.fill(v, true) {
+                    Some((w, dw)) => self.evict_from_l3(mem, w, dw),
+                    None => 0.0,
+                }
+            }
+        } else {
+            0.0
+        }
+    }
+
+    fn fill_l3(&mut self, mem: &mut Memory, line: u64) -> f64 {
+        match self.l3.fill(line, false) {
+            Some((v, d)) => self.evict_from_l3(mem, v, d),
+            None => 0.0,
+        }
+    }
+
+    fn evict_from_l3(&mut self, mem: &mut Memory, v: u64, d: bool) -> f64 {
+        let d2 = self.l2.invalidate(v).unwrap_or(false);
+        let d1 = self.l1.invalidate(v).unwrap_or(false);
+        if d || d1 || d2 {
+            mem.writeback_line(v as usize);
+            self.stats.nvm_writes_evict += 1;
+            self.costs.mem_write
+        } else {
+            0.0
+        }
+    }
+
+    /// Execute one cache-flush instruction on the line containing `addr`'s
+    /// block. Returns the modeled cost.
+    pub fn flush_line(&mut self, mem: &mut Memory, line: u64, kind: FlushKind) -> f64 {
+        let dirty =
+            self.l1.is_dirty(line) || self.l2.is_dirty(line) || self.l3.is_dirty(line);
+        match kind {
+            FlushKind::Clwb => {
+                self.l1.clean(line);
+                self.l2.clean(line);
+                self.l3.clean(line);
+            }
+            FlushKind::ClflushOpt => {
+                self.l1.invalidate(line);
+                self.l2.invalidate(line);
+                self.l3.invalidate(line);
+            }
+        }
+        if dirty {
+            mem.writeback_line(line as usize);
+            self.stats.nvm_writes_flush += 1;
+            self.stats.flushes_dirty += 1;
+            self.costs.flush_dirty
+        } else {
+            self.stats.flushes_clean += 1;
+            self.costs.flush_clean
+        }
+    }
+
+    /// Flush every cache block of the byte range `[base, base+len)` — the
+    /// paper's `cache_block_flush(obj, size)` API (Fig. 2a): common practice
+    /// flushes *all* blocks of the object, resident or not.
+    pub fn flush_range(
+        &mut self,
+        mem: &mut Memory,
+        base: usize,
+        len: usize,
+        kind: FlushKind,
+    ) -> f64 {
+        let first = (base >> LINE_SHIFT) as u64;
+        let last = ((base + len - 1) >> LINE_SHIFT) as u64;
+        let mut cost = 0.0;
+        for line in first..=last {
+            cost += self.flush_line(mem, line, kind);
+        }
+        cost
+    }
+
+    /// All currently dirty lines, deduplicated (a line may be dirty at two
+    /// levels transiently after demotion + refetch).
+    pub fn dirty_lines(&self) -> Vec<u64> {
+        let mut v = Vec::new();
+        self.l1.dirty_lines(&mut v);
+        self.l2.dirty_lines(&mut v);
+        self.l3.dirty_lines(&mut v);
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Write back everything dirty (used by tests to check the dual-image
+    /// invariant, and to model a clean application exit).
+    pub fn drain(&mut self, mem: &mut Memory) {
+        for line in self.dirty_lines() {
+            self.flush_line(mem, line, FlushKind::Clwb);
+        }
+    }
+
+    /// Dirty bytes per object range `[base, base+len)`: the numerator of
+    /// the paper's data inconsistent rate. Exact because divergence only
+    /// exists on dirty lines.
+    pub fn inconsistent_bytes(&self, mem: &Memory, base: usize, len: usize) -> usize {
+        let first = (base >> LINE_SHIFT) as u64;
+        let last = ((base + len - 1) >> LINE_SHIFT) as u64;
+        self.dirty_lines()
+            .into_iter()
+            .filter(|&l| l >= first && l <= last)
+            .map(|l| {
+                let lo = ((l as usize) << LINE_SHIFT).max(base);
+                let hi = (((l as usize) + 1) << LINE_SHIFT).min(base + len);
+                mem.divergent_bytes(lo, hi - lo)
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::{CacheGeom, SimConfig};
+    use crate::sim::config::NvmProfile;
+
+    fn tiny_cfg() -> SimConfig {
+        SimConfig {
+            l1: CacheGeom::new(4 * 64, 2),  // 2 sets x 2 ways
+            l2: CacheGeom::new(8 * 64, 2),  // 4 sets x 2 ways
+            l3: CacheGeom::new(16 * 64, 4), // 4 sets x 4 ways
+            nvm: NvmProfile::DRAM,
+        }
+    }
+
+    #[test]
+    fn store_dirties_and_flush_persists() {
+        let cfg = tiny_cfg();
+        let mut h = Hierarchy::new(&cfg);
+        let mut m = Memory::new(4096);
+        let v = f64::from_bits(0x5A5A5A5A5A5A5A5A); // all bytes differ from 0
+        m.st_f64(0, v);
+        h.access(&mut m, 0, true);
+        assert_eq!(m.nvm_f64(0), 0.0, "store not yet persistent");
+        assert_eq!(h.inconsistent_bytes(&m, 0, 64), 8);
+        h.flush_range(&mut m, 0, 64, FlushKind::Clwb);
+        assert_eq!(m.nvm_f64(0), v);
+        assert_eq!(h.inconsistent_bytes(&m, 0, 64), 0);
+        assert_eq!(h.stats.nvm_writes_flush, 1);
+    }
+
+    #[test]
+    fn eviction_writes_back() {
+        let cfg = tiny_cfg();
+        let mut h = Hierarchy::new(&cfg);
+        // Footprint far exceeding L3 (16 lines): write including wrap.
+        let mut m = Memory::new(64 * 64);
+        for i in 0..64 {
+            m.st_f64(i * 64, i as f64);
+            h.access(&mut m, i * 64, true);
+        }
+        assert!(h.stats.nvm_writes_evict > 0, "LLC evictions must write to NVM");
+        // Every line not currently dirty must already be persisted.
+        let dirty = h.dirty_lines();
+        for i in 0..64u64 {
+            if !dirty.contains(&i) {
+                assert_eq!(m.nvm_f64((i as usize) * 64), i as f64, "line {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn dual_image_invariant_after_drain() {
+        let cfg = tiny_cfg();
+        let mut h = Hierarchy::new(&cfg);
+        let mut m = Memory::new(64 * 64);
+        for i in 0..200 {
+            let a = (i * 24) % (64 * 64 - 8);
+            m.st_f64(a & !7, i as f64);
+            h.access(&mut m, a & !7, true);
+        }
+        h.drain(&mut m);
+        assert_eq!(m.divergent_bytes(0, m.len()), 0);
+        assert!(h.dirty_lines().is_empty());
+    }
+
+    #[test]
+    fn clean_flush_cheap_dirty_flush_expensive() {
+        let cfg = tiny_cfg();
+        let mut h = Hierarchy::new(&cfg);
+        let mut m = Memory::new(4096);
+        let clean_cost = h.flush_line(&mut m, 10, FlushKind::ClflushOpt);
+        m.st_f64(0, 1.0);
+        h.access(&mut m, 0, true);
+        let dirty_cost = h.flush_line(&mut m, 0, FlushKind::ClflushOpt);
+        assert!(dirty_cost > 5.0 * clean_cost);
+        assert_eq!(h.stats.flushes_clean, 1);
+        assert_eq!(h.stats.flushes_dirty, 1);
+    }
+
+    #[test]
+    fn clflushopt_invalidates_clwb_does_not() {
+        let cfg = tiny_cfg();
+        let mut h = Hierarchy::new(&cfg);
+        let mut m = Memory::new(4096);
+        m.st_f64(0, 1.0);
+        h.access(&mut m, 0, true);
+        h.flush_line(&mut m, 0, FlushKind::Clwb);
+        let hit_cost = h.access(&mut m, 0, false);
+        assert_eq!(hit_cost, h.costs.cpu_op + h.costs.l1_hit, "clwb keeps line");
+
+        m.st_f64(64, 1.0);
+        h.access(&mut m, 64, true);
+        h.flush_line(&mut m, 1, FlushKind::ClflushOpt);
+        let miss_cost = h.access(&mut m, 64, false);
+        assert!(miss_cost > hit_cost, "clflushopt forces reload");
+    }
+
+    #[test]
+    fn inconsistent_rate_line_granular() {
+        let cfg = tiny_cfg();
+        let mut h = Hierarchy::new(&cfg);
+        let mut m = Memory::new(4096);
+        // object = 4 lines at [256, 512); dirty exactly one line of it
+        let v = f64::from_bits(0xA5A5A5A5A5A5A5A5);
+        m.st_f64(256, v);
+        h.access(&mut m, 256, true);
+        assert_eq!(h.inconsistent_bytes(&m, 256, 256), 8);
+        // another store in the same line: still same line dirty
+        m.st_f64(264, v);
+        h.access(&mut m, 264, true);
+        assert_eq!(h.inconsistent_bytes(&m, 256, 256), 16);
+    }
+}

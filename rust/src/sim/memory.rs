@@ -1,0 +1,156 @@
+//! Dual memory image: architectural truth vs persisted NVM contents.
+//!
+//! See the module-level docs of [`crate::sim`] for the invariant that makes
+//! this exact: divergence between the two images happens only on lines that
+//! are currently dirty in the (metadata-only) cache hierarchy.
+
+use super::{LINE, LINE_SHIFT};
+
+/// The simulated main memory.
+#[derive(Clone)]
+pub struct Memory {
+    /// Architectural image: every store lands here immediately (this is the
+    /// value the program observes — i.e. "caches ∪ memory").
+    pub arch: Vec<u8>,
+    /// Persisted image: updated only by LLC write-backs and flushes. After a
+    /// crash, this is all that survives.
+    pub nvm: Vec<u8>,
+}
+
+impl Memory {
+    /// Allocate both images, zero-filled, rounded up to a whole line.
+    pub fn new(bytes: usize) -> Memory {
+        let sz = (bytes + LINE - 1) & !(LINE - 1);
+        Memory {
+            arch: vec![0u8; sz],
+            nvm: vec![0u8; sz],
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.arch.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.arch.is_empty()
+    }
+
+    // ----- architectural (program-visible) accessors -----
+
+    #[inline]
+    pub fn ld_f64(&self, addr: usize) -> f64 {
+        let b: [u8; 8] = self.arch[addr..addr + 8].try_into().unwrap();
+        f64::from_le_bytes(b)
+    }
+
+    #[inline]
+    pub fn st_f64(&mut self, addr: usize, v: f64) {
+        self.arch[addr..addr + 8].copy_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn ld_f32(&self, addr: usize) -> f32 {
+        let b: [u8; 4] = self.arch[addr..addr + 4].try_into().unwrap();
+        f32::from_le_bytes(b)
+    }
+
+    #[inline]
+    pub fn st_f32(&mut self, addr: usize, v: f32) {
+        self.arch[addr..addr + 4].copy_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn ld_i64(&self, addr: usize) -> i64 {
+        let b: [u8; 8] = self.arch[addr..addr + 8].try_into().unwrap();
+        i64::from_le_bytes(b)
+    }
+
+    #[inline]
+    pub fn st_i64(&mut self, addr: usize, v: i64) {
+        self.arch[addr..addr + 8].copy_from_slice(&v.to_le_bytes());
+    }
+
+    // ----- persistence -----
+
+    /// Write line `line_idx` back to NVM (the only way `nvm` changes).
+    #[inline]
+    pub fn writeback_line(&mut self, line_idx: usize) {
+        let off = line_idx << LINE_SHIFT;
+        self.nvm[off..off + LINE].copy_from_slice(&self.arch[off..off + LINE]);
+    }
+
+    /// Bytes at which the two images differ within `[base, base+len)` —
+    /// the paper's "dirty data bytes" used for the data inconsistent rate.
+    pub fn divergent_bytes(&self, base: usize, len: usize) -> usize {
+        self.arch[base..base + len]
+            .iter()
+            .zip(&self.nvm[base..base + len])
+            .filter(|(a, n)| a != n)
+            .count()
+    }
+
+    /// Read an f64 from the *persisted* image (restart path).
+    #[inline]
+    pub fn nvm_f64(&self, addr: usize) -> f64 {
+        let b: [u8; 8] = self.nvm[addr..addr + 8].try_into().unwrap();
+        f64::from_le_bytes(b)
+    }
+
+    #[inline]
+    pub fn nvm_f32(&self, addr: usize) -> f32 {
+        let b: [u8; 4] = self.nvm[addr..addr + 4].try_into().unwrap();
+        f32::from_le_bytes(b)
+    }
+
+    #[inline]
+    pub fn nvm_i64(&self, addr: usize) -> i64 {
+        let b: [u8; 8] = self.nvm[addr..addr + 8].try_into().unwrap();
+        i64::from_le_bytes(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn typed_roundtrip() {
+        let mut m = Memory::new(256);
+        m.st_f64(8, 3.25);
+        m.st_f32(64, -1.5);
+        m.st_i64(128, -42);
+        assert_eq!(m.ld_f64(8), 3.25);
+        assert_eq!(m.ld_f32(64), -1.5);
+        assert_eq!(m.ld_i64(128), -42);
+        // persisted image untouched until writeback
+        assert_eq!(m.nvm_f64(8), 0.0);
+    }
+
+    #[test]
+    fn writeback_persists_line() {
+        // Full-byte patterns so every byte of the value differs from 0.
+        let (a, b, c) = (
+            f64::from_bits(0x1111111111111111),
+            f64::from_bits(0x2222222222222222),
+            f64::from_bits(0x3333333333333333),
+        );
+        let mut m = Memory::new(256);
+        m.st_f64(0, a);
+        m.st_f64(8, b);
+        m.st_f64(64, c); // different line
+        assert_eq!(m.divergent_bytes(0, 128), 24);
+        m.writeback_line(0);
+        assert_eq!(m.nvm_f64(0), a);
+        assert_eq!(m.nvm_f64(8), b);
+        assert_eq!(m.nvm_f64(64), 0.0);
+        assert_eq!(m.divergent_bytes(0, 128), 8);
+    }
+
+    #[test]
+    fn rounds_to_line() {
+        let m = Memory::new(65);
+        assert_eq!(m.len(), 128);
+    }
+}

@@ -1,0 +1,48 @@
+//! NVCT substrate — the crash-emulation tool of the paper's §3.
+//!
+//! The paper's NVCT is a PIN-based cache simulator with crash-test support:
+//! it models a multi-level write-back cache hierarchy *with data values*, a
+//! persisted main-memory (NVM) image, random crash generation, per-object
+//! data-inconsistency accounting, and restart support. We reproduce it with
+//! source-level instrumentation: benchmark kernels perform every heap/global
+//! access through the [`env::Env`] trait, whose [`env::SimEnv`] implementation
+//! drives the simulator (and whose [`env::RawEnv`] implementation is the
+//! uninstrumented fast path used for golden runs and post-crash
+//! recomputation).
+//!
+//! ## Dual-image design
+//!
+//! Rather than storing data bytes inside simulated cache lines, we keep two
+//! memory images (see [`memory::Memory`]):
+//!
+//! * `arch` — the architectural image, updated by every store. This is what
+//!   the program observes and equals the union of (cache contents ∪ memory).
+//! * `nvm`  — the persisted image, updated only when a dirty line leaves the
+//!   last-level cache (natural eviction write-back or explicit flush).
+//!
+//! Because every store goes through the cache, a cache line's content always
+//! equals the `arch` bytes of its address range; so "write back line L" is
+//! exactly `nvm[L] = arch[L]`. The key invariant (checked by property tests):
+//! `arch[b] != nvm[b]` **only if** `b` belongs to a line that is currently
+//! dirty somewhere in the hierarchy. A crash simply discards caches: the
+//! surviving state *is* the `nvm` image, and the per-object *data
+//! inconsistent rate* of the paper is `(dirty-resident bytes of the object) /
+//! (object size)`.
+
+pub mod cache;
+pub mod config;
+pub mod env;
+pub mod hierarchy;
+pub mod memory;
+pub mod objects;
+pub mod timing;
+
+pub use config::{CacheGeom, NvmProfile, SimConfig};
+pub use env::{Buf, CrashInfo, Env, FlushHooks, Observer, RawEnv, Signal, SimEnv};
+pub use hierarchy::{FlushKind, HierStats, Hierarchy};
+pub use memory::Memory;
+pub use objects::{ObjId, ObjSpec, Registry, Ty};
+
+/// Cache line size in bytes (fixed, like the paper's 64 B lines).
+pub const LINE: usize = 64;
+pub const LINE_SHIFT: u32 = 6;

@@ -1,0 +1,199 @@
+//! Data-object registry.
+//!
+//! The paper studies heap and global data objects (not stack data, §2.2):
+//! every benchmark registers its data objects here, flagging which are
+//! *candidates* for critical-data-object selection (lifetime = main loop,
+//! not read-only; §5.1). Allocation is a 64 B-aligned bump allocator so
+//! distinct objects never share a cache line — matching the paper's
+//! object-granularity accounting.
+
+use super::LINE;
+
+/// Element type of a data object.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ty {
+    F64,
+    F32,
+    I64,
+}
+
+impl Ty {
+    pub fn bytes(self) -> usize {
+        match self {
+            Ty::F64 | Ty::I64 => 8,
+            Ty::F32 => 4,
+        }
+    }
+}
+
+/// Identifier of a registered data object (dense, per-run).
+pub type ObjId = u32;
+
+/// Static description of a data object, provided by the benchmark.
+#[derive(Clone, Debug)]
+pub struct ObjSpec {
+    pub name: &'static str,
+    pub ty: Ty,
+    pub len: usize,
+    /// Candidate critical data object (§5.1): lifetime spans the main
+    /// computation loop and it is not read-only. Non-candidates are
+    /// restored by re-initialization on restart, never read from NVM.
+    pub candidate: bool,
+}
+
+impl ObjSpec {
+    pub fn f64(name: &'static str, len: usize, candidate: bool) -> ObjSpec {
+        ObjSpec { name, ty: Ty::F64, len, candidate }
+    }
+    pub fn f32(name: &'static str, len: usize, candidate: bool) -> ObjSpec {
+        ObjSpec { name, ty: Ty::F32, len, candidate }
+    }
+    pub fn i64(name: &'static str, len: usize, candidate: bool) -> ObjSpec {
+        ObjSpec { name, ty: Ty::I64, len, candidate }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.len * self.ty.bytes()
+    }
+}
+
+/// A registered object: spec + its placement in the simulated address space.
+#[derive(Clone, Debug)]
+pub struct Object {
+    pub spec: ObjSpec,
+    /// Byte offset of the object base (64 B aligned).
+    pub base: usize,
+}
+
+impl Object {
+    pub fn end(&self) -> usize {
+        self.base + self.spec.bytes()
+    }
+
+    /// Number of cache lines the object spans.
+    pub fn lines(&self) -> usize {
+        (self.spec.bytes() + LINE - 1) / LINE
+    }
+
+    pub fn contains(&self, addr: usize) -> bool {
+        addr >= self.base && addr < self.end()
+    }
+}
+
+/// The per-run object registry / address-space map.
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    pub objects: Vec<Object>,
+    cursor: usize,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Register an object, placing it at the next 64 B-aligned offset.
+    pub fn register(&mut self, spec: ObjSpec) -> ObjId {
+        let base = self.cursor;
+        let bytes = spec.bytes();
+        self.cursor = (base + bytes + LINE - 1) & !(LINE - 1);
+        let id = self.objects.len() as ObjId;
+        self.objects.push(Object { spec, base });
+        id
+    }
+
+    /// Total mapped bytes (the benchmark's simulated memory footprint).
+    pub fn footprint(&self) -> usize {
+        self.cursor
+    }
+
+    pub fn get(&self, id: ObjId) -> &Object {
+        &self.objects[id as usize]
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<ObjId> {
+        self.objects
+            .iter()
+            .position(|o| o.spec.name == name)
+            .map(|i| i as ObjId)
+    }
+
+    /// Candidate critical data objects, in registration order.
+    pub fn candidates(&self) -> Vec<ObjId> {
+        (0..self.objects.len() as ObjId)
+            .filter(|&id| self.get(id).spec.candidate)
+            .collect()
+    }
+
+    /// Total bytes of candidate objects (Table 1 "Candi. of critical DO size").
+    pub fn candidate_bytes(&self) -> usize {
+        self.objects
+            .iter()
+            .filter(|o| o.spec.candidate)
+            .map(|o| o.spec.bytes())
+            .sum()
+    }
+
+    /// Map a byte address to the object containing it (objects are sorted
+    /// by base, so binary search).
+    pub fn object_at(&self, addr: usize) -> Option<ObjId> {
+        match self
+            .objects
+            .binary_search_by(|o| {
+                if addr < o.base {
+                    std::cmp::Ordering::Greater
+                } else if addr >= o.end() {
+                    std::cmp::Ordering::Less
+                } else {
+                    std::cmp::Ordering::Equal
+                }
+            }) {
+            Ok(i) => Some(i as ObjId),
+            Err(_) => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alignment_and_no_sharing() {
+        let mut r = Registry::new();
+        let a = r.register(ObjSpec::f64("a", 3, true)); // 24 B -> pads to 64
+        let b = r.register(ObjSpec::f32("b", 1, false)); // 4 B
+        assert_eq!(r.get(a).base, 0);
+        assert_eq!(r.get(b).base, 64);
+        assert_eq!(r.footprint(), 128);
+    }
+
+    #[test]
+    fn object_at_resolves() {
+        let mut r = Registry::new();
+        let a = r.register(ObjSpec::f64("a", 16, true)); // 128 B
+        let b = r.register(ObjSpec::f64("b", 8, true)); // 64 B at 128
+        assert_eq!(r.object_at(0), Some(a));
+        assert_eq!(r.object_at(127), Some(a));
+        assert_eq!(r.object_at(128), Some(b));
+        assert_eq!(r.object_at(191), Some(b));
+        assert_eq!(r.object_at(192), None);
+    }
+
+    #[test]
+    fn candidates_filtered() {
+        let mut r = Registry::new();
+        r.register(ObjSpec::f64("u", 8, true));
+        r.register(ObjSpec::f64("tmp", 8, false));
+        r.register(ObjSpec::i64("it", 1, true));
+        assert_eq!(r.candidates().len(), 2);
+        assert_eq!(r.candidate_bytes(), 8 * 8 + 8);
+    }
+
+    #[test]
+    fn lines_rounding() {
+        let mut r = Registry::new();
+        let a = r.register(ObjSpec::f64("a", 9, true)); // 72 B -> 2 lines
+        assert_eq!(r.get(a).lines(), 2);
+    }
+}

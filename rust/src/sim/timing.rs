@@ -1,0 +1,142 @@
+//! Analytical timing model.
+//!
+//! The paper measures wall-clock on real Xeon + DRAM/Quartz/Optane; we run
+//! on a simulator, so execution time is modeled as Σ events × per-event
+//! cost. Absolute calibration is not the goal — every paper artifact that
+//! involves time (Table 4, Fig. 7, Fig. 8, and the l_k estimates of §5.2)
+//! reports *normalized* execution time, which depends only on cost ratios.
+//!
+//! Costs are in CPU cycles at the paper's 2.6 GHz. Miss latencies are
+//! divided by an MLP (memory-level-parallelism) factor because an
+//! out-of-order core overlaps misses; this keeps the *relative* cost of
+//! compute vs memory realistic for HPC loops, which matters when the NVM
+//! profile scales the memory component (Fig. 7's shape).
+
+use super::config::NvmProfile;
+
+/// DRAM load-to-use latency (87 ns @ 2.6 GHz ≈ 226 cycles).
+const MEM_READ_LAT: f64 = 226.0;
+/// DRAM write (write-back drain) latency.
+const MEM_WRITE_LAT: f64 = 160.0;
+/// Effective memory-level parallelism of the modeled core.
+const MLP: f64 = 4.0;
+/// Cycles to move one 64 B line at DRAM bandwidth (106 GB/s @ 2.6 GHz).
+const LINE_XFER: f64 = 1.57;
+/// Issue cost of a cache-flush instruction that finds nothing to write
+/// back (clean or non-resident block) — the paper's "much less expensive"
+/// case (§2.1).
+const FLUSH_ISSUE: f64 = 6.0;
+
+/// Per-event costs (cycles), derived from an [`NvmProfile`].
+#[derive(Clone, Copy, Debug)]
+pub struct Costs {
+    /// Non-memory work charged per instrumented memory op (≈1 flop/op).
+    pub cpu_op: f64,
+    pub l1_hit: f64,
+    pub l2_hit: f64,
+    pub l3_hit: f64,
+    /// LLC miss serviced from NVM.
+    pub mem_read: f64,
+    /// Dirty-line write-back (eviction or flush) into NVM.
+    pub mem_write: f64,
+    /// Flush instruction that found a clean / non-resident block.
+    pub flush_clean: f64,
+    /// Flush instruction that wrote back a dirty block
+    /// (= issue + `mem_write`).
+    pub flush_dirty: f64,
+}
+
+impl Costs {
+    pub fn from_profile(p: &NvmProfile) -> Costs {
+        let mem_read = (MEM_READ_LAT * p.read_lat_x) / MLP + LINE_XFER * p.bw_div;
+        let mem_write = (MEM_WRITE_LAT * p.write_lat_x) / MLP + LINE_XFER * p.bw_div;
+        Costs {
+            cpu_op: 1.0,
+            l1_hit: 4.0,
+            l2_hit: 14.0,
+            l3_hit: 44.0,
+            mem_read,
+            mem_write,
+            flush_clean: FLUSH_ISSUE,
+            flush_dirty: FLUSH_ISSUE + mem_write,
+        }
+    }
+}
+
+/// Cycle accumulator with per-region attribution (the paper's `a_k`).
+#[derive(Clone, Debug)]
+pub struct Clock {
+    pub cycles: f64,
+    /// Cycles attributed to each code region (index = region id; the last
+    /// slot collects out-of-region time such as initialization).
+    pub by_region: Vec<f64>,
+}
+
+impl Clock {
+    pub fn new(num_regions: usize) -> Clock {
+        Clock {
+            cycles: 0.0,
+            by_region: vec![0.0; num_regions + 1],
+        }
+    }
+
+    #[inline]
+    pub fn add(&mut self, region: usize, cost: f64) {
+        self.cycles += cost;
+        self.by_region[region] += cost;
+    }
+
+    /// `a_k`: the ratio of region `k`'s accumulated time to total time
+    /// (Eq. 1).
+    pub fn a(&self, k: usize) -> f64 {
+        if self.cycles == 0.0 {
+            0.0
+        } else {
+            self.by_region[k] / self.cycles
+        }
+    }
+
+    /// Seconds at the modeled 2.6 GHz.
+    pub fn seconds(&self) -> f64 {
+        self.cycles / 2.6e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dram_costs_ordered() {
+        let c = Costs::from_profile(&NvmProfile::DRAM);
+        assert!(c.l1_hit < c.l2_hit && c.l2_hit < c.l3_hit && c.l3_hit < c.mem_read);
+        assert!(c.flush_clean < c.flush_dirty);
+    }
+
+    #[test]
+    fn latency_profile_scales_misses() {
+        let d = Costs::from_profile(&NvmProfile::DRAM);
+        let l8 = Costs::from_profile(&NvmProfile::LAT8X);
+        assert!(l8.mem_read > 6.0 * d.mem_read);
+        assert!(l8.mem_write > 6.0 * d.mem_write);
+        assert_eq!(l8.l1_hit, d.l1_hit, "hits unaffected by NVM profile");
+    }
+
+    #[test]
+    fn bandwidth_profile_adds_transfer_cost() {
+        let d = Costs::from_profile(&NvmProfile::DRAM);
+        let b8 = Costs::from_profile(&NvmProfile::BW8);
+        assert!(b8.mem_read > d.mem_read);
+        assert!((b8.mem_read - d.mem_read - 7.0 * LINE_XFER).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clock_attribution() {
+        let mut c = Clock::new(2);
+        c.add(0, 10.0);
+        c.add(1, 30.0);
+        c.add(2, 60.0); // out-of-region bucket
+        assert_eq!(c.cycles, 100.0);
+        assert!((c.a(1) - 0.3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,124 @@
+//! Hand-rolled command-line parsing (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed getters and an auto-generated usage block.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one subcommand.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    /// Option keys that take a value (needed to disambiguate `--k v`).
+    valued: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv` given the set of option keys that expect values.
+    pub fn parse(argv: &[String], valued_keys: &[&str]) -> Result<Args, String> {
+        let mut a = Args {
+            valued: valued_keys.iter().map(|s| s.to_string()).collect(),
+            ..Default::default()
+        };
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if a.valued.iter().any(|k| k == body) {
+                    i += 1;
+                    let v = argv
+                        .get(i)
+                        .ok_or_else(|| format!("--{body} expects a value"))?;
+                    a.options.insert(body.to_string(), v.clone());
+                } else {
+                    a.flags.push(body.to_string());
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(a)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects a number, got `{v}`")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = Args::parse(&argv("fig3 --tests 500 --seed=9 --verbose extra"), &["tests", "seed"])
+            .unwrap();
+        assert_eq!(a.positional, vec!["fig3", "extra"]);
+        assert_eq!(a.get("tests"), Some("500"));
+        assert_eq!(a.get("seed"), Some("9"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = Args::parse(&argv("--tests 500 --ts 0.03"), &["tests", "ts"]).unwrap();
+        assert_eq!(a.usize_or("tests", 1).unwrap(), 500);
+        assert_eq!(a.f64_or("ts", 0.0).unwrap(), 0.03);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&argv("--tests"), &["tests"]).is_err());
+    }
+
+    #[test]
+    fn bad_int_is_error() {
+        let a = Args::parse(&argv("--tests abc"), &["tests"]).unwrap();
+        assert!(a.usize_or("tests", 1).is_err());
+    }
+}

@@ -1,0 +1,77 @@
+//! Small self-contained utilities.
+//!
+//! The build environment has no network access to the crate registry, so
+//! the usual ecosystem crates (clap, serde, rand, criterion, proptest) are
+//! unavailable; these modules provide the minimal, deterministic subsets
+//! the coordinator needs.
+
+pub mod cli;
+pub mod json;
+pub mod quickcheck;
+pub mod rng;
+pub mod table;
+
+/// Read an `f64` tuning knob from the environment (used by the benchmark
+/// apps' acceptance-band defaults so calibration studies don't need a
+/// rebuild), falling back to `default`.
+pub fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Format a fraction as a percentage string with one decimal, e.g. `82.0%`.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", 100.0 * x)
+}
+
+/// Format a byte count in human units (B / KB / MB / GB).
+pub fn human_bytes(b: u64) -> String {
+    const KB: f64 = 1024.0;
+    let b = b as f64;
+    if b >= KB * KB * KB {
+        format!("{:.1}GB", b / (KB * KB * KB))
+    } else if b >= KB * KB {
+        format!("{:.1}MB", b / (KB * KB))
+    } else if b >= KB {
+        format!("{:.1}KB", b / KB)
+    } else {
+        format!("{}B", b as u64)
+    }
+}
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pct_formats() {
+        assert_eq!(pct(0.82), "82.0%");
+        assert_eq!(pct(0.0), "0.0%");
+        assert_eq!(pct(1.0), "100.0%");
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512B");
+        assert_eq!(human_bytes(2048), "2.0KB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.0MB");
+        assert_eq!(human_bytes(5 * 1024 * 1024 * 1024), "5.0GB");
+    }
+
+    #[test]
+    fn mean_basic() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+    }
+}

@@ -1,0 +1,117 @@
+//! Mini property-based testing (proptest is unavailable offline).
+//!
+//! `check(seed, cases, |g| ...)` runs a property closure against `cases`
+//! randomly-generated inputs drawn from a [`Gen`]; on failure it panics with
+//! the case index and the seed that reproduces it. No shrinking — cases are
+//! deterministic per seed, so a failing case is directly re-runnable.
+
+use super::rng::Rng;
+
+/// A seeded generator handed to property closures.
+pub struct Gen {
+    pub rng: Rng,
+    /// Case index (0-based), useful for sizing progressions.
+    pub case: usize,
+}
+
+impl Gen {
+    /// Integer in [lo, hi] inclusive.
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo + self.rng.below((hi - lo + 1) as u64) as i64
+    }
+
+    /// usize in [lo, hi] inclusive.
+    pub fn size(&mut self, lo: usize, hi: usize) -> usize {
+        self.int(lo as i64, hi as i64) as usize
+    }
+
+    /// f64 uniform in [lo, hi).
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Bernoulli.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.f64() < p
+    }
+
+    /// A vector of f64s.
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64(lo, hi)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.index(xs.len())]
+    }
+}
+
+/// Run `prop` against `cases` generated inputs. Panics (with reproduction
+/// info) on the first property violation, i.e. when `prop` itself panics or
+/// returns `Err`.
+pub fn check<F>(seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        // Each case gets an independent deterministic stream so a failure
+        // reproduces without replaying earlier cases.
+        let mut g = Gen {
+            rng: Rng::new(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15)),
+            case,
+        };
+        if let Err(msg) = prop(&mut g) {
+            panic!("property failed at case {case} (seed {seed}): {msg}");
+        }
+    }
+}
+
+/// Assert-style helper for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check(1, 50, |g| {
+            let x = g.f64(0.0, 10.0);
+            prop_assert!(x >= 0.0 && x < 10.0, "out of range: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn reports_failing_case() {
+        check(2, 50, |g| {
+            let x = g.int(0, 100);
+            prop_assert!(x < 90, "x={x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<i64> = Vec::new();
+        check(3, 10, |g| {
+            first.push(g.int(0, 1_000_000));
+            Ok(())
+        });
+        let mut second: Vec<i64> = Vec::new();
+        check(3, 10, |g| {
+            second.push(g.int(0, 1_000_000));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,131 @@
+//! End-to-end AOT bridge tests: JAX/Pallas → HLO text → PJRT compile →
+//! execute from Rust, with numerics checked against the native kernels.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise, so plain
+//! `cargo test` stays green on a fresh checkout).
+
+use easycrash::apps::{by_name, AppCore};
+use easycrash::runtime::{PjrtEngine, StepEngine};
+use easycrash::sim::{Env, RawEnv};
+
+fn engine_or_skip() -> Option<PjrtEngine> {
+    match PjrtEngine::from_default_dir() {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("skipping PJRT tests: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn artifacts_enumerate() {
+    let Some(eng) = engine_or_skip() else { return };
+    let av = eng.available();
+    for name in ["cg_step", "kmeans_step", "mg_vcycle", "kmeans_inertia"] {
+        assert!(av.iter().any(|a| a == name), "missing artifact {name}: {av:?}");
+    }
+}
+
+#[test]
+fn kmeans_step_pjrt_matches_native() {
+    let Some(mut eng) = engine_or_skip() else { return };
+    let km = easycrash::apps::kmeans::Kmeans::default();
+
+    // Native iteration.
+    let mut raw_native = RawEnv::new();
+    let st_n = km.build(&mut raw_native).unwrap();
+    km.step(&mut raw_native, &st_n, 0).unwrap();
+
+    // PJRT iteration from identical initial state.
+    let mut raw_pjrt = RawEnv::new();
+    let st_p = km.build(&mut raw_pjrt).unwrap();
+    km.step_fast(&mut raw_pjrt, &st_p, 0, &mut eng).unwrap();
+    assert_eq!(eng.calls(), 1, "PJRT path must actually execute");
+
+    let cn = raw_native.f32_slice(easycrash::sim::Buf {
+        id: 1,
+        len: 64,
+        ty: easycrash::sim::Ty::F32,
+    });
+    let cp = raw_pjrt.f32_slice(easycrash::sim::Buf {
+        id: 1,
+        len: 64,
+        ty: easycrash::sim::Ty::F32,
+    });
+    for (i, (a, b)) in cn.iter().zip(cp).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-3 * a.abs().max(1.0),
+            "centroid[{i}]: native {a} vs pjrt {b}"
+        );
+    }
+}
+
+#[test]
+fn cg_step_pjrt_matches_native() {
+    let Some(mut eng) = engine_or_skip() else { return };
+    let cg = easycrash::apps::cg::Cg::default();
+
+    let mut a = RawEnv::new();
+    let st_a = cg.build(&mut a).unwrap();
+    cg.step(&mut a, &st_a, 0).unwrap();
+
+    let mut b = RawEnv::new();
+    let st_b = cg.build(&mut b).unwrap();
+    cg.step_fast(&mut b, &st_b, 0, &mut eng).unwrap();
+
+    // Compare x (buf id 3 in CG's allocation order) on a sample.
+    let xa = a.buf_of(3).unwrap();
+    let xb = b.buf_of(3).unwrap();
+    for i in (0..9216).step_by(733) {
+        let va = a.ldf(xa, i).unwrap();
+        let vb = b.ldf(xb, i).unwrap();
+        assert!(
+            (va - vb).abs() <= 1e-4 + 1e-3 * va.abs(),
+            "x[{i}]: native {va} vs pjrt {vb}"
+        );
+    }
+}
+
+#[test]
+fn mg_vcycle_pjrt_converges_like_native() {
+    let Some(mut eng) = engine_or_skip() else { return };
+    let mg = easycrash::apps::mg::Mg::default();
+
+    // Run 6 PJRT vcycles; the residual norm trajectory must shrink at a
+    // rate comparable to native (same algorithm, different relaxation
+    // ordering — trajectories differ, convergence must not).
+    let mut nat = RawEnv::new();
+    let st_n = mg.build(&mut nat).unwrap();
+    for it in 0..6 {
+        mg.step(&mut nat, &st_n, it).unwrap();
+    }
+    let rn = mg.metric(&mut nat, &st_n).unwrap();
+
+    let mut pj = RawEnv::new();
+    let st_p = mg.build(&mut pj).unwrap();
+    for it in 0..6 {
+        mg.step_fast(&mut pj, &st_p, it, &mut eng).unwrap();
+    }
+    let rp = mg.metric(&mut pj, &st_p).unwrap();
+    assert!(
+        rp < rn * 3.0 && rp.is_finite(),
+        "pjrt vcycle residual {rp} vs native {rn}"
+    );
+}
+
+#[test]
+fn pjrt_campaign_on_kmeans_matches_native_shape() {
+    // kmeans' tolerance-band acceptance is engine-compatible: a full crash
+    // campaign driven through PJRT must land near the native campaign.
+    let Some(mut eng) = engine_or_skip() else { return };
+    let app = by_name("kmeans").unwrap();
+    let c = easycrash::easycrash::Campaign::new(40, 17);
+    let plan = easycrash::easycrash::PersistPlan::none();
+    let r_pjrt = c.run(app.as_ref(), &plan, &mut eng);
+    let mut native = easycrash::runtime::NativeEngine::new();
+    let r_nat = c.run(app.as_ref(), &plan, &mut native);
+    let d = (r_pjrt.recomputability() - r_nat.recomputability()).abs();
+    assert!(d <= 0.25, "pjrt {} vs native {}", r_pjrt.recomputability(), r_nat.recomputability());
+    assert!(eng.calls() > 0);
+}

@@ -1,0 +1,237 @@
+//! Property-based tests (mini-quickcheck) on the simulator's invariants —
+//! the correctness bedrock of every figure in the reproduction.
+
+use easycrash::prop_assert;
+use easycrash::sim::{
+    CacheGeom, Env, FlushKind, Hierarchy, Memory, ObjSpec, RawEnv, SimConfig, SimEnv,
+};
+use easycrash::util::quickcheck::{check, Gen};
+
+fn random_cfg(g: &mut Gen) -> SimConfig {
+    // Random small power-of-two geometries.
+    let l1_sets = 1usize << g.size(2, 4);
+    let l2_sets = 1usize << g.size(3, 5);
+    let l3_sets = 1usize << g.size(4, 6);
+    SimConfig {
+        l1: CacheGeom::new(l1_sets * 2 * 64, 2),
+        l2: CacheGeom::new(l2_sets * 4 * 64, 4),
+        l3: CacheGeom::new(l3_sets * 8 * 64, 8),
+        nvm: easycrash::sim::NvmProfile::DRAM,
+    }
+}
+
+/// The dual-image invariant: arch and nvm may differ ONLY on lines that
+/// are currently dirty somewhere in the hierarchy.
+#[test]
+fn prop_divergence_only_on_dirty_lines() {
+    check(0xD1, 30, |g| {
+        let cfg = random_cfg(g);
+        let mut h = Hierarchy::new(&cfg);
+        let span = 64 * g.size(64, 256);
+        let mut m = Memory::new(span);
+        for _ in 0..g.size(200, 3000) {
+            let addr = g.size(0, span / 8 - 1) * 8;
+            let write = g.bool(0.4);
+            if write {
+                m.st_f64(addr, g.f64(-1e6, 1e6));
+            }
+            h.access(&mut m, addr, write);
+        }
+        let dirty: std::collections::HashSet<u64> = h.dirty_lines().into_iter().collect();
+        for line in 0..(span / 64) as u64 {
+            let off = line as usize * 64;
+            let divergent = m.divergent_bytes(off, 64) > 0;
+            if divergent {
+                prop_assert!(
+                    dirty.contains(&line),
+                    "line {line} divergent but not dirty anywhere"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// After flushing everything, the images are identical and nothing is
+/// dirty — regardless of access history or flush kind.
+#[test]
+fn prop_full_flush_synchronizes_images() {
+    check(0xD2, 30, |g| {
+        let cfg = random_cfg(g);
+        let mut h = Hierarchy::new(&cfg);
+        let span = 64 * g.size(32, 128);
+        let mut m = Memory::new(span);
+        for _ in 0..g.size(100, 2000) {
+            let addr = g.size(0, span / 8 - 1) * 8;
+            let write = g.bool(0.5);
+            if write {
+                m.st_f64(addr, g.f64(-1.0, 1.0));
+            }
+            h.access(&mut m, addr, write);
+        }
+        let kind = if g.bool(0.5) {
+            FlushKind::Clwb
+        } else {
+            FlushKind::ClflushOpt
+        };
+        h.flush_range(&mut m, 0, span, kind);
+        prop_assert!(
+            m.divergent_bytes(0, span) == 0,
+            "images must match after full flush"
+        );
+        prop_assert!(h.dirty_lines().is_empty(), "no dirty lines after flush");
+        Ok(())
+    });
+}
+
+/// SimEnv and RawEnv observe identical values for identical programs
+/// (the simulator never corrupts program semantics).
+#[test]
+fn prop_sim_equals_raw_semantics() {
+    check(0xD3, 20, |g| {
+        let cfg = random_cfg(g);
+        let n = g.size(16, 200);
+        let mut sim = SimEnv::new(&cfg, 1);
+        let mut raw = RawEnv::new();
+        let bs = sim.alloc(ObjSpec::f64("x", n, true));
+        let br = raw.alloc(ObjSpec::f64("x", n, true));
+        // Random program: interleaved loads/stores with value dependences.
+        let mut acc_s = 0.0f64;
+        let mut acc_r = 0.0f64;
+        for _ in 0..g.size(100, 1500) {
+            let i = g.size(0, n - 1);
+            if g.bool(0.5) {
+                let v = g.f64(-10.0, 10.0) + acc_s * 0.25;
+                sim.st(bs, i, v).unwrap();
+                let vr = g.f64(-10.0, 10.0); // consume same rng draws? no —
+                let _ = vr; // keep streams aligned by drawing identically:
+                raw.st(br, i, v).unwrap();
+            } else {
+                acc_s += sim.ld(bs, i).unwrap();
+                acc_r += raw.ld(br, i).unwrap();
+            }
+        }
+        prop_assert!(acc_s == acc_r, "sim {acc_s} vs raw {acc_r}");
+        for i in 0..n {
+            let a = sim.ld(bs, i).unwrap();
+            let b = raw.ld(br, i).unwrap();
+            prop_assert!(a == b, "x[{i}]: sim {a} vs raw {b}");
+        }
+        Ok(())
+    });
+}
+
+/// NVM writes only grow, and flushing a range makes exactly that range's
+/// object bytes persistent.
+#[test]
+fn prop_flush_persists_target_range() {
+    check(0xD4, 30, |g| {
+        let cfg = random_cfg(g);
+        let mut h = Hierarchy::new(&cfg);
+        let lines = g.size(16, 64);
+        let span = lines * 64;
+        let mut m = Memory::new(span);
+        for l in 0..lines {
+            m.st_f64(l * 64, l as f64 + 0.5);
+            h.access(&mut m, l * 64, true);
+        }
+        let w_before = h.stats.nvm_writes();
+        let lo = g.size(0, lines - 1);
+        let hi = g.size(lo, lines - 1);
+        h.flush_range(&mut m, lo * 64, (hi - lo + 1) * 64, FlushKind::ClflushOpt);
+        prop_assert!(h.stats.nvm_writes() >= w_before, "write counter monotone");
+        for l in lo..=hi {
+            prop_assert!(
+                m.divergent_bytes(l * 64, 64) == 0,
+                "flushed line {l} must be persistent"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Inconsistent rate is within [0,1] and zero exactly when object bytes
+/// match between the images.
+#[test]
+fn prop_inconsistent_rate_bounds() {
+    check(0xD5, 20, |g| {
+        let cfg = random_cfg(g);
+        let n = g.size(8, 512);
+        let mut sim = SimEnv::new(&cfg, 1);
+        let b = sim.alloc(ObjSpec::f64("x", n, true));
+        for _ in 0..g.size(50, 800) {
+            let i = g.size(0, n - 1);
+            sim.st(b, i, g.f64(-5.0, 5.0)).unwrap();
+        }
+        let rate = sim.inconsistent_rate(b.id);
+        prop_assert!((0.0..=1.0).contains(&rate), "rate {rate}");
+        // Drain -> rate must become exactly 0.
+        sim.hier.drain(&mut sim.mem);
+        let rate2 = sim.inconsistent_rate(b.id);
+        prop_assert!(rate2 == 0.0, "post-drain rate {rate2}");
+        Ok(())
+    });
+}
+
+/// The knapsack never exceeds its budget and never selects value-free
+/// regions.
+#[test]
+fn prop_knapsack_respects_budget() {
+    use easycrash::easycrash::regions::{select_regions, RegionModel};
+    check(0xD6, 60, |g| {
+        let w = g.size(1, 16);
+        let mut m = RegionModel {
+            a: Vec::new(),
+            c: Vec::new(),
+            cmax: Vec::new(),
+            l: Vec::new(),
+            is_loop: Vec::new(),
+        };
+        for _ in 0..w {
+            let c = g.f64(0.0, 1.0);
+            m.a.push(g.f64(0.0, 1.0));
+            m.c.push(c);
+            m.cmax.push((c + g.f64(0.0, 1.0 - c)).min(1.0));
+            m.l.push(g.f64(0.001, 0.08));
+            m.is_loop.push(g.bool(0.7));
+        }
+        let ts = g.f64(0.005, 0.06);
+        let sel = select_regions(&m, ts, 0.0);
+        prop_assert!(
+            sel.predicted_overhead <= ts + 1e-9,
+            "overhead {} > budget {ts}",
+            sel.predicted_overhead
+        );
+        for ch in &sel.choices {
+            prop_assert!(ch.region < w, "region index in range");
+            prop_assert!(ch.x >= 1, "x >= 1");
+            let gain = m.a[ch.region] * (m.cmax[ch.region] - m.c[ch.region]);
+            prop_assert!(gain > 0.0, "chosen region must have positive gain");
+        }
+        Ok(())
+    });
+}
+
+/// Spearman is symmetric in rank transformations and bounded.
+#[test]
+fn prop_spearman_bounds_and_monotone_invariance() {
+    use easycrash::easycrash::stats::spearman;
+    check(0xD7, 50, |g| {
+        let n = g.size(8, 200);
+        let xs = g.vec_f64(n, -100.0, 100.0);
+        let ys = g.vec_f64(n, -100.0, 100.0);
+        let c = spearman(&xs, &ys);
+        prop_assert!((-1.0..=1.0).contains(&c.rs), "rs {}", c.rs);
+        prop_assert!((0.0..=1.0).contains(&c.p), "p {}", c.p);
+        // Monotone transform of x must not change rs.
+        let xs2: Vec<f64> = xs.iter().map(|x| x.exp().min(1e300)).collect();
+        let c2 = spearman(&xs2, &ys);
+        prop_assert!(
+            (c.rs - c2.rs).abs() < 1e-9,
+            "monotone invariance: {} vs {}",
+            c.rs,
+            c2.rs
+        );
+        Ok(())
+    });
+}
