@@ -2,10 +2,17 @@
 //! (1 instrumented run + N inline restarts) per benchmark app — and the
 //! §Perf evidence for the single-pass design (compare `campaign_100` to
 //! 100× `profile`: the paper's methodology would pay the latter).
+//!
+//! The `sharded*` cases drive the same campaign through
+//! [`ShardedCampaign`] at increasing worker counts: with >1 hardware
+//! thread available, wall-clock per campaign drops as the N inline
+//! restarts (the dominant cost at paper scale) split across workers,
+//! while the printed result stays bit-identical (see
+//! rust/tests/determinism.rs).
 
 use easycrash::apps;
 use easycrash::benchlib::Bench;
-use easycrash::easycrash::{Campaign, PersistPlan};
+use easycrash::easycrash::{Campaign, PersistPlan, ShardedCampaign};
 use easycrash::runtime::NativeEngine;
 
 fn main() {
@@ -24,5 +31,19 @@ fn main() {
         b.run(&format!("campaign100_{name}"), || {
             std::hint::black_box(c.run(app.as_ref(), &PersistPlan::none(), &mut eng));
         });
+    }
+    // Sharded scaling: identical 400-test campaign at 1/2/4 workers.
+    let workers = std::thread::available_parallelism().map_or(1, |n| n.get());
+    for name in ["toy", "is"] {
+        let app = apps::by_name(name).unwrap();
+        for shards in [1usize, 2, 4] {
+            let sc = ShardedCampaign::new(400, 1, shards);
+            b.run(
+                &format!("sharded{shards}_campaign400_{name} (hw={workers})"),
+                || {
+                    std::hint::black_box(sc.run(app.as_ref(), &PersistPlan::none()));
+                },
+            );
+        }
     }
 }

@@ -5,29 +5,49 @@
 //! correlation against recomputation success, and the resulting critical
 //! data objects — then shows the recomputability with them persisted.
 //!
+//! Campaigns run through [`ShardedCampaign`]: pass `--shards N` to spread
+//! the crash tests over N worker threads — the printed numbers are
+//! bit-identical for every N (the executor's determinism guarantee).
+//!
 //! ```text
-//! cargo run --release --example crash_campaign [-- <app> [tests]]
+//! cargo run --release --example crash_campaign [-- --app cg --tests 300 --shards 4]
 //! ```
 
 use easycrash::apps::by_name;
 use easycrash::easycrash::selection::{critical_names, select_critical};
-use easycrash::easycrash::{Campaign, PersistPlan};
-use easycrash::runtime::NativeEngine;
+use easycrash::easycrash::{Campaign, PersistPlan, ShardedCampaign};
+use easycrash::util::cli::Args;
+use easycrash::util::error::{Error, Result};
 use easycrash::util::{mean, pct};
 
-fn main() -> anyhow::Result<()> {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let app_name = args.first().map(|s| s.as_str()).unwrap_or("cg");
-    let tests = args
-        .get(1)
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(300usize);
-    let app = by_name(app_name).ok_or_else(|| anyhow::anyhow!("unknown app {app_name}"))?;
-    let mut engine = NativeEngine::new();
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["app", "tests", "shards"]).map_err(Error::msg)?;
+    // Flags win; the historical positional form `<app> [tests]` still works.
+    let app_name = args
+        .get("app")
+        .or_else(|| args.positional.first().map(|s| s.as_str()))
+        .unwrap_or("cg");
+    let tests = match args.get("tests") {
+        Some(_) => args.usize_or("tests", 300).map_err(Error::msg)?,
+        None => match args.positional.get(1) {
+            Some(t) => t
+                .parse()
+                .map_err(|_| easycrash::err!("bad tests count `{t}`"))?,
+            None => 300,
+        },
+    };
+    let shards = args.shards_or(1).map_err(Error::msg)?;
+    let app = by_name(app_name).ok_or_else(|| easycrash::err!("unknown app {app_name}"))?;
 
-    println!("== characterization campaign: {app_name}, {tests} crash tests ==");
-    let campaign = Campaign::new(tests, 7);
-    let base = campaign.run(app.as_ref(), &PersistPlan::none(), &mut engine);
+    println!(
+        "== characterization campaign: {app_name}, {tests} crash tests, {shards} shard(s) =="
+    );
+    let campaign = ShardedCampaign {
+        campaign: Campaign::new(tests, 7),
+        shards,
+    };
+    let base = campaign.run(app.as_ref(), &PersistPlan::none());
     let f = base.response_fractions();
     println!(
         "responses: S1={} S2={} S3={} S4={}  (recomputability {})",
@@ -59,7 +79,7 @@ fn main() -> anyhow::Result<()> {
 
     if !critical.is_empty() {
         let plan = PersistPlan::at_iter_end(&critical, app.regions().len(), 1);
-        let with = campaign.run(app.as_ref(), &plan, &mut engine);
+        let with = campaign.run(app.as_ref(), &plan);
         println!(
             "\nwith critical objects persisted at iteration end: {} (persist ops: {})",
             pct(with.recomputability()),

@@ -15,7 +15,7 @@ use easycrash::easycrash::{Campaign, PersistPlan};
 use easycrash::runtime::{NativeEngine, PjrtEngine, StepEngine};
 use easycrash::util::pct;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> easycrash::util::error::Result<()> {
     let mut pjrt = PjrtEngine::from_default_dir()?;
     println!("artifacts available: {:?}", pjrt.available());
 

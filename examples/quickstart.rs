@@ -14,7 +14,7 @@ use easycrash::easycrash::{Campaign, PersistPlan, Workflow};
 use easycrash::runtime::NativeEngine;
 use easycrash::util::pct;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> easycrash::util::error::Result<()> {
     let app = by_name("mg").expect("mg registered");
     let mut engine = NativeEngine::new();
 

@@ -17,7 +17,7 @@
 //! per-iteration persistence recovers it — the paper reports one of its
 //! largest EasyCrash gains (+77%) on botsspar.
 
-use std::cell::OnceCell;
+use std::sync::OnceLock;
 
 use super::{AppCore, Golden, RegionSpec};
 use crate::sim::{Buf, Env, ObjSpec, Signal};
@@ -28,14 +28,14 @@ const BB: usize = B * B;
 
 pub struct Botsspar {
     pub rel_tol: f64,
-    gold: OnceCell<Golden>,
+    gold: OnceLock<Golden>,
 }
 
 impl Default for Botsspar {
     fn default() -> Botsspar {
         Botsspar {
             rel_tol: 1e-9,
-            gold: OnceCell::new(),
+            gold: OnceLock::new(),
         }
     }
 }
@@ -293,7 +293,7 @@ impl AppCore for Botsspar {
         st.it
     }
 
-    fn golden_cell(&self) -> &OnceCell<Golden> {
+    fn golden_cell(&self) -> &OnceLock<Golden> {
         &self.gold
     }
 }

@@ -6,7 +6,7 @@
 //! per-variable add stages — 15 code regions, the paper's BT count.
 //! Tolerant residual verification (BT recomputes well, per Fig. 3).
 
-use std::cell::OnceCell;
+use std::sync::OnceLock;
 
 use super::adi::AdiCore;
 use super::{AppCore, Golden, RegionSpec};
@@ -18,7 +18,7 @@ pub struct Bt {
     pub core: AdiCore,
     pub iters: u64,
     pub tol_factor: f64,
-    gold: OnceCell<Golden>,
+    gold: OnceLock<Golden>,
 }
 
 impl Default for Bt {
@@ -32,7 +32,7 @@ impl Default for Bt {
             },
             iters: 34,
             tol_factor: crate::util::env_f64("EC_TOL_BT", 1e-3),
-            gold: OnceCell::new(),
+            gold: OnceLock::new(),
         }
     }
 }
@@ -156,7 +156,7 @@ impl AppCore for Bt {
         st.it
     }
 
-    fn golden_cell(&self) -> &OnceCell<Golden> {
+    fn golden_cell(&self) -> &OnceLock<Golden> {
         &self.gold
     }
 }

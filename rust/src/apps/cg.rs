@@ -21,7 +21,7 @@
 //! f32 numerics so the PJRT path (`cg_step` artifact, Pallas 5-pt matvec
 //! kernel) is interchangeable with the native CSR kernel.
 
-use std::cell::OnceCell;
+use std::sync::OnceLock;
 
 use super::{AppCore, Golden, RegionSpec};
 use crate::runtime::StepEngine;
@@ -34,7 +34,7 @@ const N: usize = EDGE * EDGE;
 pub struct Cg {
     pub iters: u64,
     pub tol_factor: f64,
-    gold: OnceCell<Golden>,
+    gold: OnceLock<Golden>,
 }
 
 impl Default for Cg {
@@ -42,7 +42,7 @@ impl Default for Cg {
         Cg {
             iters: 75,
             tol_factor: crate::util::env_f64("EC_TOL_CG", 2e-4),
-            gold: OnceCell::new(),
+            gold: OnceLock::new(),
         }
     }
 }
@@ -290,7 +290,7 @@ impl AppCore for Cg {
         st.it
     }
 
-    fn golden_cell(&self) -> &OnceCell<Golden> {
+    fn golden_cell(&self) -> &OnceLock<Golden> {
         &self.gold
     }
 }

@@ -13,7 +13,7 @@
 //! as critical (§8 "what kind of application is not suitable").
 //! Verification is exact-count (no error tolerance).
 
-use std::cell::OnceCell;
+use std::sync::OnceLock;
 
 use super::{AppCore, Golden, RegionSpec};
 use crate::sim::{Buf, Env, ObjSpec, Signal};
@@ -28,7 +28,7 @@ const XCAP: usize = 4096;
 pub struct Ep {
     pub iters: u64,
     pub seed: u64,
-    gold: OnceCell<Golden>,
+    gold: OnceLock<Golden>,
 }
 
 impl Default for Ep {
@@ -36,7 +36,7 @@ impl Default for Ep {
         Ep {
             iters: 256,
             seed: 0x6570,
-            gold: OnceCell::new(),
+            gold: OnceLock::new(),
         }
     }
 }
@@ -150,7 +150,7 @@ impl AppCore for Ep {
         st.it
     }
 
-    fn golden_cell(&self) -> &OnceCell<Golden> {
+    fn golden_cell(&self) -> &OnceLock<Golden> {
         &self.gold
     }
 }

@@ -21,7 +21,7 @@
 //! without persistence and recovers once `csum` (tiny) and the iteration
 //! bookmark are reliably persisted together.
 
-use std::cell::OnceCell;
+use std::sync::OnceLock;
 
 use super::fft::fft_strided;
 use super::{AppCore, Golden, RegionSpec};
@@ -44,7 +44,7 @@ pub struct Ft {
     /// genuine S1 states match to rounding.
     pub rel_tol: f64,
     pub seed: u64,
-    gold: OnceCell<Golden>,
+    gold: OnceLock<Golden>,
 }
 
 impl Default for Ft {
@@ -53,7 +53,7 @@ impl Default for Ft {
             iters: 20,
             rel_tol: crate::util::env_f64("EC_TOL_FT", 1e-12),
             seed: 0x6674,
-            gold: OnceCell::new(),
+            gold: OnceLock::new(),
         }
     }
 }
@@ -268,7 +268,7 @@ impl AppCore for Ft {
         st.it
     }
 
-    fn golden_cell(&self) -> &OnceCell<Golden> {
+    fn golden_cell(&self) -> &OnceLock<Golden> {
         &self.gold
     }
 }

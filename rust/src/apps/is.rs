@@ -14,7 +14,7 @@
 //! [`Signal::Interrupt`] (S3). Verification is exact (sortedness + exact
 //! checksum), so surviving-but-wrong restarts classify S4.
 
-use std::cell::OnceCell;
+use std::sync::OnceLock;
 
 use super::{AppCore, Golden, RegionSpec};
 use crate::sim::{Buf, Env, ObjSpec, Signal};
@@ -27,7 +27,7 @@ const PV_SAMPLES: usize = 512;
 pub struct Is {
     pub iters: u64,
     pub seed: u64,
-    gold: OnceCell<Golden>,
+    gold: OnceLock<Golden>,
 }
 
 impl Default for Is {
@@ -35,7 +35,7 @@ impl Default for Is {
         Is {
             iters: 10,
             seed: 0x6973,
-            gold: OnceCell::new(),
+            gold: OnceLock::new(),
         }
     }
 }
@@ -268,7 +268,7 @@ impl AppCore for Is {
         st.it
     }
 
-    fn golden_cell(&self) -> &OnceCell<Golden> {
+    fn golden_cell(&self) -> &OnceLock<Golden> {
         &self.gold
     }
 }

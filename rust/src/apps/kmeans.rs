@@ -15,7 +15,7 @@
 //! f32 numerics so the PJRT path (`kmeans_step` artifact, Pallas
 //! distance/assign kernel) is interchangeable with the native kernel.
 
-use std::cell::OnceCell;
+use std::sync::OnceLock;
 
 use super::{AppCore, Golden, RegionSpec};
 use crate::runtime::StepEngine;
@@ -30,7 +30,7 @@ pub struct Kmeans {
     pub iters: u64,
     pub tol_factor: f64,
     pub seed: u64,
-    gold: OnceCell<Golden>,
+    gold: OnceLock<Golden>,
 }
 
 impl Default for Kmeans {
@@ -39,7 +39,7 @@ impl Default for Kmeans {
             iters: 14,
             tol_factor: crate::util::env_f64("EC_TOL_KMEANS", 1.005),
             seed: 0x6B6D,
-            gold: OnceCell::new(),
+            gold: OnceLock::new(),
         }
     }
 }
@@ -193,7 +193,7 @@ impl AppCore for Kmeans {
         st.it
     }
 
-    fn golden_cell(&self) -> &OnceCell<Golden> {
+    fn golden_cell(&self) -> &OnceLock<Golden> {
         &self.gold
     }
 }

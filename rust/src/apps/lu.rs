@@ -8,7 +8,7 @@
 //! mixed-iteration field converges slightly slower and misses the strict
 //! residual bound at the nominal iteration count.
 
-use std::cell::OnceCell;
+use std::sync::OnceLock;
 
 use super::adi::AdiCore;
 use super::{AppCore, Golden, RegionSpec};
@@ -20,7 +20,7 @@ pub struct Lu {
     pub core: AdiCore,
     pub iters: u64,
     pub tol_factor: f64,
-    gold: OnceCell<Golden>,
+    gold: OnceLock<Golden>,
 }
 
 impl Default for Lu {
@@ -34,7 +34,7 @@ impl Default for Lu {
             },
             iters: 30,
             tol_factor: crate::util::env_f64("EC_TOL_LU", 1e-3),
-            gold: OnceCell::new(),
+            gold: OnceLock::new(),
         }
     }
 }
@@ -136,7 +136,7 @@ impl AppCore for Lu {
         st.it
     }
 
-    fn golden_cell(&self) -> &OnceCell<Golden> {
+    fn golden_cell(&self) -> &OnceLock<Golden> {
         &self.gold
     }
 }

@@ -12,7 +12,7 @@
 //! state each step. Verification is LULESH's canonical check: final
 //! origin energy within a tolerance of the reference run.
 
-use std::cell::OnceCell;
+use std::sync::OnceLock;
 
 use super::{AppCore, Golden, RegionSpec};
 use crate::sim::{Buf, Env, ObjSpec, Signal};
@@ -30,7 +30,7 @@ const Q2: f64 = 1.2;
 pub struct Lulesh {
     pub iters: u64,
     pub rel_tol: f64,
-    gold: OnceCell<Golden>,
+    gold: OnceLock<Golden>,
 }
 
 impl Default for Lulesh {
@@ -38,7 +38,7 @@ impl Default for Lulesh {
         Lulesh {
             iters: 80,
             rel_tol: crate::util::env_f64("EC_TOL_LULESH", 3e-4),
-            gold: OnceCell::new(),
+            gold: OnceLock::new(),
         }
     }
 }
@@ -219,7 +219,7 @@ impl AppCore for Lulesh {
         st.it
     }
 
-    fn golden_cell(&self) -> &OnceCell<Golden> {
+    fn golden_cell(&self) -> &OnceLock<Golden> {
         &self.gold
     }
 }

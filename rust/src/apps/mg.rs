@@ -19,7 +19,7 @@
 //! f32 numerics so the PJRT path (`mg_vcycle` artifact, Pallas stencil
 //! kernel) is interchangeable with the native kernel.
 
-use std::cell::OnceCell;
+use std::sync::OnceLock;
 
 use super::{AppCore, Golden, RegionSpec};
 use crate::runtime::StepEngine;
@@ -38,7 +38,7 @@ pub struct Mg {
     /// golden (NPB-style epsilon; leaves a few V-cycles of margin).
     pub tol_factor: f64,
     pub seed: u64,
-    gold: OnceCell<Golden>,
+    gold: OnceLock<Golden>,
 }
 
 impl Default for Mg {
@@ -47,7 +47,7 @@ impl Default for Mg {
             iters: 14,
             tol_factor: crate::util::env_f64("EC_TOL_MG", 3e-4),
             seed: 0x6D67,
-            gold: OnceCell::new(),
+            gold: OnceLock::new(),
         }
     }
 }
@@ -383,7 +383,7 @@ impl AppCore for Mg {
         st.it
     }
 
-    fn golden_cell(&self) -> &OnceCell<Golden> {
+    fn golden_cell(&self) -> &OnceLock<Golden> {
         &self.gold
     }
 }

@@ -11,7 +11,7 @@
 //!   ([`CrashApp::recompute`], the campaign hot path, optionally through
 //!   the PJRT engine).
 
-use std::cell::OnceCell;
+use std::sync::OnceLock;
 
 use crate::runtime::StepEngine;
 use crate::sim::{Buf, Env, ObjId, RawEnv, Signal, SimEnv};
@@ -138,11 +138,16 @@ pub trait AppCore {
     fn iter_buf(st: &Self::St) -> Buf;
 
     /// Memoization cell for the golden run.
-    fn golden_cell(&self) -> &OnceCell<Golden>;
+    fn golden_cell(&self) -> &OnceLock<Golden>;
 }
 
 /// Object-safe interface the coordinator (campaigns, reports, CLI) uses.
-pub trait CrashApp {
+///
+/// `Send + Sync` so one app instance can be shared by reference across the
+/// sharded campaign's worker threads: app structs are plain configuration
+/// data plus an `OnceLock`-memoized golden run (every worker that races
+/// the initialization computes the identical deterministic value).
+pub trait CrashApp: Send + Sync {
     fn name(&self) -> &'static str;
     fn description(&self) -> &'static str;
     fn regions(&self) -> Vec<RegionSpec>;
@@ -165,7 +170,7 @@ pub trait CrashApp {
     ) -> (Response, u64);
 }
 
-impl<T: AppCore> CrashApp for T {
+impl<T: AppCore + Send + Sync> CrashApp for T {
     fn name(&self) -> &'static str {
         AppCore::name(self)
     }

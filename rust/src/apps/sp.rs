@@ -7,7 +7,7 @@
 //! recomputability in the paper (88%) — a smooth relaxation with a
 //! tolerant verification, which the generous `tol_factor` mirrors.
 
-use std::cell::OnceCell;
+use std::sync::OnceLock;
 
 use super::adi::AdiCore;
 use super::{AppCore, Golden, RegionSpec};
@@ -20,7 +20,7 @@ pub struct Sp {
     pub core: AdiCore,
     pub iters: u64,
     pub tol_factor: f64,
-    gold: OnceCell<Golden>,
+    gold: OnceLock<Golden>,
 }
 
 impl Default for Sp {
@@ -34,7 +34,7 @@ impl Default for Sp {
             },
             iters: 36,
             tol_factor: crate::util::env_f64("EC_TOL_SP", 0.10),
-            gold: OnceCell::new(),
+            gold: OnceLock::new(),
         }
     }
 }
@@ -177,7 +177,7 @@ impl AppCore for Sp {
         st.it
     }
 
-    fn golden_cell(&self) -> &OnceCell<Golden> {
+    fn golden_cell(&self) -> &OnceLock<Golden> {
         &self.gold
     }
 }

@@ -5,7 +5,7 @@
 //! a tolerant convergence-style verification, and enough footprint to
 //! spill the mini LLC. Not part of the paper's Table 1 set.
 
-use std::cell::OnceCell;
+use std::sync::OnceLock;
 
 use super::{AppCore, Golden, RegionSpec};
 use crate::sim::{Buf, Env, ObjSpec, Signal};
@@ -13,7 +13,7 @@ use crate::sim::{Buf, Env, ObjSpec, Signal};
 pub struct Toy {
     pub n: usize,
     pub iters: u64,
-    gold: OnceCell<Golden>,
+    gold: OnceLock<Golden>,
 }
 
 impl Default for Toy {
@@ -21,7 +21,7 @@ impl Default for Toy {
         Toy {
             n: 1 << 13,
             iters: 12,
-            gold: OnceCell::new(),
+            gold: OnceLock::new(),
         }
     }
 }
@@ -31,7 +31,7 @@ impl Toy {
         Toy {
             n: 512,
             iters: 6,
-            gold: OnceCell::new(),
+            gold: OnceLock::new(),
         }
     }
 }
@@ -115,7 +115,7 @@ impl AppCore for Toy {
         st.it
     }
 
-    fn golden_cell(&self) -> &OnceCell<Golden> {
+    fn golden_cell(&self) -> &OnceLock<Golden> {
         &self.gold
     }
 }

@@ -13,19 +13,42 @@
 //! candidates' persisted bytes, and restarts + classifies inline on the
 //! fast engine. This is what makes 1000-test campaigns on 11 apps
 //! tractable on one core.
+//!
+//! ## Sharded execution (the multi-core extension)
+//!
+//! The same observation-not-perturbation property makes the single pass
+//! *parallelizable*: every instrumented replay of the program produces the
+//! identical event stream, so the sorted crash points can be partitioned
+//! into contiguous batches and harvested by independent worker threads,
+//! each replaying the program once and observing only its own batch.
+//! [`ShardedCampaign`] does exactly that over `std::thread::scope`; the
+//! per-worker state is owned ([`crate::sim::CrashObserver`] structs, one
+//! engine per worker from a factory), so nothing is shared mutably and no
+//! `Rc<RefCell<…>>` appears anywhere on the path.
+//!
+//! ### Determinism guarantee
+//!
+//! Crash points are drawn by [`draw_crash_points`] from [`RNG_LANES`]
+//! fixed, provably non-overlapping RNG streams ([`Rng::for_lane`], one
+//! xoshiro256** 2^128-jump per lane), each lane sampling its own
+//! contiguous sub-range of the main loop's op space. The draw therefore
+//! depends only on `(seed, tests, op-span)` — never on the worker count —
+//! and concatenating the shard batches in order reproduces the sequential
+//! record list *bit-identically* for any shard count (asserted by
+//! `rust/tests/determinism.rs`). Because lane sub-ranges are disjoint, no
+//! crash-point op is ever duplicated across shards (structurally so for
+//! spans ≥ the test count — every real app; `partition_points` keeps
+//! duplicate draws in one batch regardless).
 
-use std::cell::RefCell;
-use std::rc::Rc;
-
-use crate::apps::{CrashApp, Response, Snapshot};
-use crate::runtime::StepEngine;
-use crate::sim::{HierStats, ObjId, SimConfig, SimEnv};
+use crate::apps::{CrashApp, Golden, Response, Snapshot};
+use crate::runtime::{NativeEngine, StepEngine};
+use crate::sim::{CrashInfo, CrashObserver, HierStats, ObjId, SimConfig, SimEnv};
 use crate::util::rng::Rng;
 
 use super::plan::PersistPlan;
 
 /// One crash test's outcome.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct TestRecord {
     /// Memory-op index of the crash.
     pub op: u64,
@@ -146,7 +169,148 @@ impl CampaignResult {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Crash-point drawing (shard-count invariant)
+// ---------------------------------------------------------------------------
+
+/// Fixed number of crash-point RNG lanes. The draw is stratified over this
+/// many split streams *regardless of worker count*, so campaign results
+/// are invariant to `--shards`. 64 comfortably exceeds any machine we
+/// target while keeping per-lane quotas meaningful at paper scale
+/// (1000-test campaigns → ~16 points per lane).
+pub const RNG_LANES: usize = 64;
+
+const POINT_SALT: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Draw `tests` crash points over the main-loop op span `[lo, hi)`.
+///
+/// Lane `l` draws its quota from `Rng::for_lane(seed ^ SALT, l)` —
+/// provably non-overlapping xoshiro256** subsequences — uniformly within
+/// the lane's own contiguous sub-range of `[lo, hi)`. Sub-range widths
+/// are proportional to lane quotas, so the sampling density is constant
+/// across the span (uniform overall, with stratified variance) while
+/// per-lane point sets stay structurally disjoint in op space. The
+/// result is sorted ascending and depends only on the arguments, never
+/// on how many workers later harvest it.
+pub fn draw_crash_points(seed: u64, tests: usize, lo: u64, hi: u64) -> Vec<u64> {
+    let hi = hi.max(lo + 1);
+    let span = hi - lo;
+    let mut points = Vec::with_capacity(tests);
+    // One generator jumped incrementally: at the top of iteration `l` it
+    // holds `Rng::for_lane(seed ^ POINT_SALT, l)`'s state, without
+    // re-deriving lane l's l jumps from scratch (O(lanes) instead of
+    // O(lanes^2) jumps per draw, bit-identical output).
+    let mut lane_rng = Rng::new(seed ^ POINT_SALT);
+    for lane in 0..RNG_LANES {
+        // Lane `l` owns test indices [t0, t1) and the op sub-range covering
+        // the same *fractions* of the span — width is proportional to
+        // quota, so the sampling density is constant across lanes and the
+        // overall draw stays uniform (up to 1-op boundary rounding) for
+        // every `tests` value, including tests % RNG_LANES != 0 and
+        // tests < RNG_LANES.
+        let t0 = tests * lane / RNG_LANES;
+        let t1 = tests * (lane + 1) / RNG_LANES;
+        let quota = t1 - t0;
+        if quota > 0 {
+            // u128 keeps `span * t` exact for any realistic span/test count.
+            let frac = |t: usize| lo + (span as u128 * t as u128 / tests as u128) as u64;
+            let start = frac(t0);
+            let width = frac(t1) - start;
+            let mut rng = lane_rng.clone();
+            for _ in 0..quota {
+                // Degenerate sub-range (span < tests): pin to its start.
+                points.push(if width == 0 { start } else { start + rng.below(width) });
+            }
+        }
+        lane_rng.jump();
+    }
+    // Lane sub-ranges ascend, so sorting the whole vector only orders
+    // points *within* each lane.
+    points.sort_unstable();
+    points
+}
+
+/// Split sorted crash points into `shards` contiguous, near-equal batches.
+/// Batch boundaries are nudged forward so duplicate op values never
+/// straddle two shards — together with the disjoint lane sub-ranges of
+/// [`draw_crash_points`] this guarantees no op appears in two shards.
+pub fn partition_points(points: &[u64], shards: usize) -> Vec<Vec<u64>> {
+    let shards = shards.max(1);
+    let n = points.len();
+    let mut batches = Vec::with_capacity(shards);
+    let mut start = 0usize;
+    for s in 0..shards {
+        let mut end = (n * (s + 1)) / shards;
+        if end < start {
+            end = start;
+        }
+        // Keep all duplicates of the boundary op in this batch.
+        while end > start && end < n && points[end] == points[end - 1] {
+            end += 1;
+        }
+        batches.push(points[start..end].to_vec());
+        start = end;
+    }
+    batches
+}
+
+// ---------------------------------------------------------------------------
+// The harvest observer (owned state, `&mut`-threaded)
+// ---------------------------------------------------------------------------
+
+/// Campaign observer: at each crash point, snapshot the persisted image,
+/// restart + classify on the fast engine, and record the outcome. All
+/// state is owned or exclusively borrowed, so a `Harvest` can live on a
+/// worker thread's stack.
+struct Harvest<'a> {
+    records: Vec<TestRecord>,
+    engine: &'a mut dyn StepEngine,
+    app: &'a dyn CrashApp,
+    golden: Golden,
+    candidates: &'a [(ObjId, String, usize)],
+    verified: bool,
+}
+
+impl CrashObserver for Harvest<'_> {
+    fn on_crash(&mut self, env: &mut SimEnv<'_>, info: CrashInfo) {
+        let inconsistency: Vec<f64> = self
+            .candidates
+            .iter()
+            .map(|(id, _, _)| env.inconsistent_rate(*id))
+            .collect();
+        let snap = Snapshot {
+            iter: if self.verified { info.iter } else { env.nvm_iter() },
+            objs: self
+                .candidates
+                .iter()
+                .map(|(id, _, _)| {
+                    let bytes = if self.verified {
+                        env.arch_bytes(*id)
+                    } else {
+                        env.nvm_bytes(*id)
+                    };
+                    (*id, bytes)
+                })
+                .collect(),
+        };
+        let (response, extra) = self.app.recompute(&snap, &self.golden, self.engine);
+        self.records.push(TestRecord {
+            op: info.op,
+            iter: info.iter,
+            region: info.region,
+            response,
+            extra_iters: extra,
+            inconsistency,
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Campaign (sequential runner)
+// ---------------------------------------------------------------------------
+
 /// Campaign runner.
+#[derive(Clone, Copy, Debug)]
 pub struct Campaign {
     pub tests: usize,
     pub seed: u64,
@@ -169,6 +333,34 @@ impl Default for Campaign {
     }
 }
 
+/// Scalar aggregates of one instrumented execution, extracted while the
+/// env is alive so the observer borrow can end before records are read.
+struct EnvCore {
+    ops_total: u64,
+    ops_main_start: u64,
+    cycles: f64,
+    region_cycles: Vec<f64>,
+    persist_ops: u64,
+    persist_cycles: f64,
+    stats: HierStats,
+    footprint: usize,
+}
+
+impl EnvCore {
+    fn of(env: &SimEnv) -> EnvCore {
+        EnvCore {
+            ops_total: env.ops(),
+            ops_main_start: env.main_start_ops(),
+            cycles: env.clock.cycles,
+            region_cycles: env.clock.by_region.clone(),
+            persist_ops: env.persist_ops,
+            persist_cycles: env.persist_cycles,
+            stats: env.hier.stats,
+            footprint: env.reg.footprint(),
+        }
+    }
+}
+
 impl Campaign {
     pub fn new(tests: usize, seed: u64) -> Campaign {
         Campaign {
@@ -183,7 +375,7 @@ impl Campaign {
     /// return the (records-empty) result — the timing/write side of the
     /// campaign, used by Table 4 / Fig. 7-9 and the `l_k` estimates.
     pub fn profile(&self, app: &dyn CrashApp, plan: &PersistPlan) -> CampaignResult {
-        self.run_inner(app, plan, None)
+        self.pass(app, plan, Vec::new(), None)
     }
 
     /// Full campaign: profile + crash harvesting + inline classification.
@@ -194,32 +386,27 @@ impl Campaign {
         engine: &mut dyn StepEngine,
     ) -> CampaignResult {
         // Pass 1 (profile) to learn the op-count range of the main loop.
-        let profile = self.run_inner(app, plan, None);
-        let mut rng = Rng::new(self.seed ^ 0x9E37_79B9_7F4A_7C15);
-        let lo = profile.ops_main_start;
-        let hi = profile.ops_total.max(lo + 1);
-        let points: Vec<u64> = {
-            let span = hi - lo;
-            let mut v: Vec<u64> = (0..self.tests).map(|_| lo + rng.below(span)).collect();
-            v.sort_unstable();
-            v
-        };
+        let profile = self.profile(app, plan);
+        let points =
+            draw_crash_points(self.seed, self.tests, profile.ops_main_start, profile.ops_total);
         // Pass 2: harvest.
-        let mut res = self.run_inner(app, plan, Some((points, engine)));
+        let mut res = self.pass(app, plan, points, Some(engine));
         res.ops_main_start = profile.ops_main_start;
         res
     }
 
-    fn run_inner(
+    /// One instrumented execution. With an engine, every point in the
+    /// (sorted) `points` batch is harvested and classified inline; without
+    /// one this is a pure profile pass. This is the unit of work a shard
+    /// worker executes.
+    pub(crate) fn pass(
         &self,
         app: &dyn CrashApp,
         plan: &PersistPlan,
-        crash: Option<(Vec<u64>, &mut dyn StepEngine)>,
+        points: Vec<u64>,
+        engine: Option<&mut dyn StepEngine>,
     ) -> CampaignResult {
         let num_regions = app.regions().len();
-        let mut env = SimEnv::new(&self.cfg, num_regions);
-        let records = Rc::new(RefCell::new(Vec::new()));
-        let golden = app.golden();
 
         // Hooks can only resolve after `build` registers the objects, but
         // `run_sim` does both build and the main loop. Learn the registry
@@ -236,7 +423,6 @@ impl Campaign {
         let hooks = plan
             .resolve(&layout, num_regions)
             .expect("plan must resolve against the app's registry");
-        env.set_hooks(hooks);
 
         let candidates: Vec<(ObjId, String, usize)> = layout
             .candidates()
@@ -247,75 +433,162 @@ impl Campaign {
             })
             .collect();
 
-        if let Some((points, engine)) = crash {
-            let engine = RefCell::new(engine);
-            let records_sink = records.clone();
-            let cand = candidates.clone();
-            let app_ref: &dyn CrashApp = app;
-            let verified = self.verified;
-            let obs: crate::sim::Observer<'_> = Box::new(move |env, info| {
-                let inconsistency: Vec<f64> =
-                    cand.iter().map(|(id, _, _)| env.inconsistent_rate(*id)).collect();
-                let snap = Snapshot {
-                    iter: if verified { info.iter } else { env.nvm_iter() },
-                    objs: cand
-                        .iter()
-                        .map(|(id, _, _)| {
-                            let bytes = if verified {
-                                env.arch_bytes(*id)
-                            } else {
-                                env.nvm_bytes(*id)
-                            };
-                            (*id, bytes)
-                        })
-                        .collect(),
+        let (core, records) = match engine {
+            Some(engine) => {
+                let golden = app.golden();
+                let mut harvest = Harvest {
+                    records: Vec::new(),
+                    engine,
+                    app,
+                    golden,
+                    candidates: &candidates,
+                    verified: self.verified,
                 };
-                let mut eng = engine.borrow_mut();
-                let (response, extra) = app_ref.recompute(&snap, &golden, &mut **eng);
-                records_sink.borrow_mut().push(TestRecord {
-                    op: info.op,
-                    iter: info.iter,
-                    region: info.region,
-                    response,
-                    extra_iters: extra,
-                    inconsistency,
-                });
-            });
-            // Scope the observer borrow to the run.
-            let mut env2 = env;
-            env2.set_crash_points(points, obs);
-            app.run_sim(&mut env2).expect("campaign run must complete");
-            return Self::collect(app, plan, env2, records, candidates, num_regions);
-        }
+                let core;
+                {
+                    let mut env = SimEnv::new(&self.cfg, num_regions);
+                    env.set_hooks(hooks);
+                    env.set_crash_points(points, &mut harvest);
+                    app.run_sim(&mut env).expect("campaign run must complete");
+                    core = EnvCore::of(&env);
+                } // env dropped: the observer borrow ends here
+                (core, harvest.records)
+            }
+            None => {
+                let mut env = SimEnv::new(&self.cfg, num_regions);
+                env.set_hooks(hooks);
+                app.run_sim(&mut env).expect("profile run must complete");
+                (EnvCore::of(&env), Vec::new())
+            }
+        };
 
-        app.run_sim(&mut env).expect("profile run must complete");
-        Self::collect(app, plan, env, records, candidates, num_regions)
-    }
-
-    fn collect(
-        app: &dyn CrashApp,
-        plan: &PersistPlan,
-        env: SimEnv,
-        records: Rc<RefCell<Vec<TestRecord>>>,
-        candidates: Vec<(ObjId, String, usize)>,
-        num_regions: usize,
-    ) -> CampaignResult {
-        let records = records.borrow().clone();
         CampaignResult {
             app: app.name().to_string(),
             plan: plan.clone(),
             records,
             candidates,
-            ops_total: env.ops(),
-            ops_main_start: env.main_start_ops(),
-            cycles: env.clock.cycles,
-            region_cycles: env.clock.by_region.clone(),
-            persist_ops: env.persist_ops,
-            persist_cycles: env.persist_cycles,
-            stats: env.hier.stats,
-            footprint: env.reg.footprint(),
+            ops_total: core.ops_total,
+            ops_main_start: core.ops_main_start,
+            cycles: core.cycles,
+            region_cycles: core.region_cycles,
+            persist_ops: core.persist_ops,
+            persist_cycles: core.persist_cycles,
+            stats: core.stats,
+            footprint: core.footprint,
             num_regions,
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ShardedCampaign (parallel runner)
+// ---------------------------------------------------------------------------
+
+/// Multi-core campaign executor: partitions the campaign's crash points
+/// into contiguous batches and harvests them on `shards` scoped worker
+/// threads, each with its own `SimEnv`, observer and engine. The merged
+/// result is bit-identical to [`Campaign::run`] under the same seed (see
+/// the module docs for why, and `rust/tests/determinism.rs` for proof).
+#[derive(Clone, Copy, Debug)]
+pub struct ShardedCampaign {
+    pub campaign: Campaign,
+    /// Worker thread count; 1 degenerates to the sequential schedule
+    /// (same code path, same result).
+    pub shards: usize,
+}
+
+impl ShardedCampaign {
+    pub fn new(tests: usize, seed: u64, shards: usize) -> ShardedCampaign {
+        ShardedCampaign {
+            campaign: Campaign::new(tests, seed),
+            shards,
+        }
+    }
+
+    /// Run with [`NativeEngine`] recomputation (the common case).
+    pub fn run(&self, app: &dyn CrashApp, plan: &PersistPlan) -> CampaignResult {
+        self.run_with(app, plan, &|| Box::new(NativeEngine::new()))
+    }
+
+    /// The one dispatch rule for `--shards`: parallel harvesting (native
+    /// per-worker engines) when `shards > 1`, otherwise the sequential
+    /// [`Campaign::run`] on the caller's engine.
+    ///
+    /// Swapping in per-worker `NativeEngine`s is only numerically
+    /// transparent when the caller's engine *is* native, so with any other
+    /// engine this keeps the caller's numerics and runs sequentially
+    /// instead of silently changing classifications. (The CLI layers
+    /// additionally reject `--shards > 1` with a non-native engine up
+    /// front, with a clear message.)
+    pub fn run_or_seq(
+        &self,
+        app: &dyn CrashApp,
+        plan: &PersistPlan,
+        engine: &mut dyn StepEngine,
+    ) -> CampaignResult {
+        if self.shards > 1 && engine.name() == "native" {
+            self.run(app, plan)
+        } else {
+            self.campaign.run(app, plan, engine)
+        }
+    }
+
+    /// Run with one engine per worker, built by `make_engine`. The factory
+    /// runs on the worker threads, hence `Sync`.
+    pub fn run_with(
+        &self,
+        app: &dyn CrashApp,
+        plan: &PersistPlan,
+        make_engine: &(dyn Fn() -> Box<dyn StepEngine> + Sync),
+    ) -> CampaignResult {
+        let shards = self.shards.max(1);
+        let c = self.campaign;
+        let profile = c.profile(app, plan);
+        let points =
+            draw_crash_points(c.seed, c.tests, profile.ops_main_start, profile.ops_total);
+        let mut batches = partition_points(&points, shards);
+        // An empty batch would still cost a worker a full instrumented
+        // replay that harvests nothing (reachable when shards > points);
+        // drop them, keeping one pass alive for the aggregate side.
+        batches.retain(|b| !b.is_empty());
+        if batches.is_empty() {
+            batches.push(Vec::new());
+        }
+
+        // Front-load the golden run before spawning: `OnceLock` already
+        // guarantees exactly-once initialization (racers block, never
+        // duplicate work), but computing it here keeps the workers'
+        // wall-clock free of one serialized warm-up.
+        let _ = app.golden();
+
+        let mut results: Vec<CampaignResult> = std::thread::scope(|scope| {
+            let handles: Vec<_> = batches
+                .into_iter()
+                .map(|batch| {
+                    scope.spawn(move || {
+                        let mut engine = make_engine();
+                        c.pass(app, plan, batch, Some(engine.as_mut()))
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard worker panicked"))
+                .collect()
+        });
+
+        // Every worker replayed the identical deterministic execution, so
+        // the aggregate side of each result is the same; merging is just
+        // concatenating the record batches in shard order (contiguous
+        // slices of one sorted draw).
+        let mut merged = results.remove(0);
+        for r in results {
+            debug_assert_eq!(r.ops_total, merged.ops_total, "shard replay diverged");
+            debug_assert_eq!(r.cycles, merged.cycles, "shard replay diverged");
+            merged.records.extend(r.records);
+        }
+        merged.ops_main_start = profile.ops_main_start;
+        merged
     }
 }
 
@@ -346,6 +619,8 @@ mod tests {
         assert_eq!(r.records.len(), 50);
         // Crash points were restricted to the main loop.
         assert!(r.records.iter().all(|t| t.op >= r.ops_main_start));
+        // Records arrive in sorted op order (single-pass harvest).
+        assert!(r.records.windows(2).all(|w| w[0].op <= w[1].op));
         // Inconsistency rates are valid fractions.
         assert!(r
             .records
@@ -377,6 +652,7 @@ mod tests {
         let mut eng = NativeEngine::new();
         let a = c.run(app.as_ref(), &PersistPlan::none(), &mut eng);
         let b = c.run(app.as_ref(), &PersistPlan::none(), &mut eng);
+        assert_eq!(a.records, b.records);
         assert_eq!(a.recomputability(), b.recomputability());
         assert_eq!(a.ops_total, b.ops_total);
     }
@@ -389,5 +665,131 @@ mod tests {
         let r = c.run(app.as_ref(), &PersistPlan::none(), &mut eng);
         let f = r.response_fractions();
         assert!((f.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    // -- CampaignResult edge cases ----------------------------------------
+
+    #[test]
+    fn empty_campaign_edge_cases() {
+        let app = by_name("toy").unwrap();
+        let c = Campaign::new(0, 4);
+        let mut eng = NativeEngine::new();
+        let r = c.run(app.as_ref(), &PersistPlan::none(), &mut eng);
+        assert!(r.records.is_empty());
+        assert_eq!(r.recomputability(), 0.0, "empty campaign recomputes nothing");
+        assert_eq!(r.response_fractions(), [0.0; 4]);
+        assert_eq!(r.mean_extra_iters(), None, "no S2 records at all");
+        for k in 0..=r.num_regions {
+            assert_eq!(r.region_recomputability(k), None, "region {k} has no hits");
+        }
+    }
+
+    #[test]
+    fn single_crash_point_campaign() {
+        let app = by_name("toy").unwrap();
+        let c = Campaign::new(1, 5);
+        let mut eng = NativeEngine::new();
+        let r = c.run(app.as_ref(), &PersistPlan::none(), &mut eng);
+        assert_eq!(r.records.len(), 1);
+        let rec = &r.records[0];
+        assert!(rec.op >= r.ops_main_start && rec.op <= r.ops_total);
+        // The lone record's region answers Some; every other region None.
+        assert!(r.region_recomputability(rec.region).is_some());
+        for k in (0..=r.num_regions).filter(|&k| k != rec.region) {
+            assert_eq!(r.region_recomputability(k), None);
+        }
+        let f = r.response_fractions();
+        assert!((f.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(r.recomputability() == 0.0 || r.recomputability() == 1.0);
+    }
+
+    #[test]
+    fn mean_extra_iters_none_without_s2() {
+        // Synthetic result: records exist but none is S2.
+        let app = by_name("toy").unwrap();
+        let c = Campaign::new(0, 6);
+        let mut base = c.profile(app.as_ref(), &PersistPlan::none());
+        base.records = vec![
+            TestRecord {
+                op: 1,
+                iter: 0,
+                region: 0,
+                response: Response::S1,
+                extra_iters: 0,
+                inconsistency: vec![0.0; base.candidates.len()],
+            },
+            TestRecord {
+                op: 2,
+                iter: 0,
+                region: 1,
+                response: Response::S3,
+                extra_iters: 0,
+                inconsistency: vec![1.0; base.candidates.len()],
+            },
+        ];
+        assert_eq!(base.mean_extra_iters(), None);
+        base.records[1].response = Response::S2;
+        base.records[1].extra_iters = 3;
+        assert_eq!(base.mean_extra_iters(), Some(3.0));
+    }
+
+    // -- drawing / partitioning -------------------------------------------
+
+    #[test]
+    fn draw_is_bounded_sorted_and_seeded() {
+        let a = draw_crash_points(11, 500, 1000, 90_000);
+        assert_eq!(a.len(), 500);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        assert!(a.iter().all(|&p| (1000..90_000).contains(&p)));
+        let b = draw_crash_points(11, 500, 1000, 90_000);
+        assert_eq!(a, b, "same seed, same draw");
+        let c = draw_crash_points(12, 500, 1000, 90_000);
+        assert_ne!(a, c, "different seed, different draw");
+    }
+
+    #[test]
+    fn draw_handles_degenerate_spans() {
+        // Span smaller than the lane count: quotas pin to sub-range starts.
+        let p = draw_crash_points(3, 10, 5, 6);
+        assert_eq!(p.len(), 10);
+        assert!(p.iter().all(|&x| x == 5));
+        // hi <= lo is clamped to a 1-op span.
+        let p = draw_crash_points(3, 4, 9, 9);
+        assert_eq!(p, vec![9, 9, 9, 9]);
+    }
+
+    #[test]
+    fn partition_preserves_order_and_count() {
+        let pts = draw_crash_points(21, 1000, 0, 500_000);
+        for shards in [1, 2, 3, 4, 7, 8] {
+            let batches = partition_points(&pts, shards);
+            assert_eq!(batches.len(), shards);
+            let merged: Vec<u64> = batches.iter().flatten().copied().collect();
+            assert_eq!(merged, pts, "concatenation must reproduce the draw");
+        }
+    }
+
+    #[test]
+    fn partition_keeps_duplicates_in_one_shard() {
+        let pts = vec![1, 2, 2, 2, 2, 2, 2, 3, 4, 5];
+        let batches = partition_points(&pts, 3);
+        let merged: Vec<u64> = batches.iter().flatten().copied().collect();
+        assert_eq!(merged, pts);
+        let holders = batches.iter().filter(|b| b.contains(&2)).count();
+        assert_eq!(holders, 1, "all the 2s must land in a single shard");
+    }
+
+    // -- sharded equivalence smoke test (full matrix in tests/determinism.rs)
+
+    #[test]
+    fn sharded_run_matches_sequential_on_toy() {
+        let app = by_name("toy").unwrap();
+        let mut eng = NativeEngine::new();
+        let seq = Campaign::new(30, 13).run(app.as_ref(), &PersistPlan::none(), &mut eng);
+        let sh = ShardedCampaign::new(30, 13, 4).run(app.as_ref(), &PersistPlan::none());
+        assert_eq!(seq.records, sh.records);
+        assert_eq!(seq.cycles, sh.cycles);
+        assert_eq!(seq.ops_total, sh.ops_total);
+        assert_eq!(seq.ops_main_start, sh.ops_main_start);
     }
 }

@@ -9,6 +9,6 @@ pub mod selection;
 pub mod stats;
 pub mod workflow;
 
-pub use campaign::{Campaign, CampaignResult, TestRecord};
+pub use campaign::{Campaign, CampaignResult, ShardedCampaign, TestRecord};
 pub use plan::PersistPlan;
 pub use workflow::Workflow;

@@ -13,7 +13,7 @@ use crate::runtime::StepEngine;
 use crate::sim::timing::Costs;
 use crate::sim::{SimConfig, LINE};
 
-use super::campaign::{Campaign, CampaignResult};
+use super::campaign::{Campaign, CampaignResult, ShardedCampaign};
 use super::plan::{PersistPlan, PlanEntry};
 use super::regions::{select_regions, RegionModel, RegionSelection};
 use super::selection::{critical_names, select_critical, SelectionRow};
@@ -99,19 +99,49 @@ impl Workflow {
         vec![ratio; num_regions]
     }
 
-    /// Run the full workflow for one application.
-    pub fn run(&self, app: &dyn CrashApp, engine: &mut dyn StepEngine) -> WorkflowReport {
-        let campaign = Campaign {
+    fn campaign(&self) -> Campaign {
+        Campaign {
             tests: self.tests,
             seed: self.seed,
             cfg: self.cfg,
             verified: false,
+        }
+    }
+
+    /// Run the full workflow for one application (sequential campaigns).
+    pub fn run(&self, app: &dyn CrashApp, engine: &mut dyn StepEngine) -> WorkflowReport {
+        let campaign = self.campaign();
+        self.run_impl(app, &mut |plan| campaign.run(app, plan, &mut *engine))
+    }
+
+    /// Run the full workflow with every campaign sharded across `shards`
+    /// worker threads (one engine per worker from `make_engine`). Results
+    /// are bit-identical to [`Workflow::run`] under the same seed — the
+    /// campaigns inherit `ShardedCampaign`'s determinism guarantee.
+    pub fn run_sharded(
+        &self,
+        app: &dyn CrashApp,
+        shards: usize,
+        make_engine: &(dyn Fn() -> Box<dyn StepEngine> + Sync),
+    ) -> WorkflowReport {
+        let sharded = ShardedCampaign {
+            campaign: self.campaign(),
+            shards,
         };
+        self.run_impl(app, &mut |plan| sharded.run_with(app, plan, make_engine))
+    }
+
+    /// Workflow skeleton, parametric in how campaigns execute.
+    fn run_impl(
+        &self,
+        app: &dyn CrashApp,
+        run_campaign: &mut dyn FnMut(&PersistPlan) -> CampaignResult,
+    ) -> WorkflowReport {
         let regions = app.regions();
         let num_regions = regions.len();
 
         // Step 1: characterization.
-        let base = campaign.run(app, &PersistPlan::none(), engine);
+        let base = run_campaign(&PersistPlan::none());
 
         // Step 2: data-object selection.
         let selection = select_critical(&base);
@@ -128,7 +158,7 @@ impl Workflow {
         } else {
             PersistPlan::at_every_region(&crit_refs, num_regions)
         };
-        let best = campaign.run(app, &best_plan, engine);
+        let best = run_campaign(&best_plan);
 
         let overall_c = base.recomputability();
         let overall_cmax = best.recomputability();
@@ -174,7 +204,7 @@ impl Workflow {
             clwb: false,
         };
         let (plan, final_result) = if critical.is_empty() {
-            let res = campaign.run(app, &knapsack_plan, engine);
+            let res = run_campaign(&knapsack_plan);
             (knapsack_plan, res)
         } else {
             let last = num_regions - 1;
@@ -190,8 +220,8 @@ impl Workflow {
                     .collect(),
                 clwb: false,
             };
-            let a = campaign.run(app, &knapsack_plan, engine);
-            let b = campaign.run(app, &iter_end_plan, engine);
+            let a = run_campaign(&knapsack_plan);
+            let b = run_campaign(&iter_end_plan);
             if b.recomputability() > a.recomputability() {
                 (iter_end_plan, b)
             } else {

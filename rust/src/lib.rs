@@ -15,12 +15,22 @@
 //!   kernels instrumented through the simulator.
 //! * [`easycrash`] — the paper's contribution: crash-test campaigns,
 //!   Spearman-based critical-data-object selection, knapsack-based
-//!   code-region selection and the end-to-end workflow.
+//!   code-region selection and the end-to-end workflow. Campaigns run
+//!   single-pass (all crash points harvested in one instrumented
+//!   execution) and, via `easycrash::ShardedCampaign`, multi-core: crash
+//!   points are drawn from fixed, non-overlapping RNG lanes
+//!   (xoshiro256** 2^128-jump splitting), partitioned into contiguous
+//!   batches and harvested by scoped worker threads — with output
+//!   **bit-identical** to the sequential run for any `--shards` count
+//!   (proved by `rust/tests/determinism.rs`).
 //! * [`model`] — the §7 system-efficiency emulator (Young's formula,
 //!   Eq. 6–9).
 //! * [`runtime`] — PJRT wrapper that loads AOT-compiled JAX/Pallas step
 //!   functions (`artifacts/*.hlo.txt`) and runs them on the post-crash
 //!   recomputation hot path. Python never runs at coordinator runtime.
+//!   Real PJRT execution sits behind the off-by-default `pjrt` cargo
+//!   feature (the `xla` bindings are unavailable offline); the default
+//!   build is dependency-free and compiles a stub engine.
 //! * [`report`] — generators for every table and figure in the paper's
 //!   evaluation.
 //!

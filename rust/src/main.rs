@@ -7,25 +7,26 @@
 use std::time::Instant;
 
 use easycrash::apps;
-use easycrash::easycrash::{Campaign, PersistPlan};
+use easycrash::easycrash::{Campaign, PersistPlan, ShardedCampaign};
 use easycrash::runtime::{NativeEngine, PjrtEngine, StepEngine};
 use easycrash::util::cli::Args;
+use easycrash::util::error::{Error, Result};
 
-fn engine_from(args: &Args) -> anyhow::Result<Box<dyn StepEngine>> {
+fn engine_from(args: &Args) -> Result<Box<dyn StepEngine>> {
     match args.get_or("engine", "native") {
         "native" => Ok(Box::new(NativeEngine::new())),
         "pjrt" => Ok(Box::new(PjrtEngine::from_default_dir()?)),
-        other => anyhow::bail!("unknown engine `{other}` (native|pjrt)"),
+        other => easycrash::bail!("unknown engine `{other}` (native|pjrt)"),
     }
 }
 
 const VALUED: &[&str] = &[
-    "app", "tests", "seed", "engine", "plan", "ts", "tau", "mtbf", "tchk", "out",
+    "app", "tests", "seed", "engine", "plan", "ts", "tau", "mtbf", "tchk", "out", "shards",
 ];
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&argv, VALUED).map_err(|e| anyhow::anyhow!(e))?;
+    let args = Args::parse(&argv, VALUED).map_err(Error::msg)?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
 
     match cmd {
@@ -41,11 +42,33 @@ fn main() -> anyhow::Result<()> {
     }
 }
 
+/// Build the campaign executor the flags ask for: sequential on the given
+/// engine, or sharded across native workers when `--shards > 1` (the
+/// dispatch rule lives on [`ShardedCampaign::run_or_seq`]).
+fn run_campaign(
+    c: &Campaign,
+    shards: usize,
+    app: &dyn apps::CrashApp,
+    plan: &PersistPlan,
+    engine: &mut dyn StepEngine,
+) -> easycrash::easycrash::CampaignResult {
+    ShardedCampaign {
+        campaign: *c,
+        shards,
+    }
+    .run_or_seq(app, plan, engine)
+}
+
+fn shards_from(args: &Args) -> Result<usize> {
+    args.shards_for_engine().map_err(Error::msg)
+}
+
 /// Quick timing probe of one app's instrumented run + campaign.
-fn probe(args: &Args) -> anyhow::Result<()> {
+fn probe(args: &Args) -> Result<()> {
     let name = args.get_or("app", "mg");
-    let tests = args.usize_or("tests", 100).map_err(|e| anyhow::anyhow!(e))?;
-    let app = apps::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown app {name}"))?;
+    let tests = args.usize_or("tests", 100).map_err(Error::msg)?;
+    let shards = shards_from(args)?;
+    let app = apps::by_name(name).ok_or_else(|| easycrash::err!("unknown app {name}"))?;
     let mut engine = engine_from(args)?;
     let c = Campaign::new(tests, 1);
     let t0 = Instant::now();
@@ -61,9 +84,9 @@ fn probe(args: &Args) -> anyhow::Result<()> {
         prof.ops_total as f64 / t_prof.as_secs_f64() / 1e6,
     );
     let t1 = Instant::now();
-    let res = c.run(app.as_ref(), &PersistPlan::none(), engine.as_mut());
+    let res = run_campaign(&c, shards, app.as_ref(), &PersistPlan::none(), engine.as_mut());
     println!(
-        "campaign({tests}): wall={:.2?} recomputability={} fractions={:?}",
+        "campaign({tests}, shards={shards}): wall={:.2?} recomputability={} fractions={:?}",
         t1.elapsed(),
         easycrash::util::pct(res.recomputability()),
         res.response_fractions()
@@ -71,11 +94,12 @@ fn probe(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
+fn cmd_campaign(args: &Args) -> Result<()> {
     let name = args.get_or("app", "mg");
-    let tests = args.usize_or("tests", 400).map_err(|e| anyhow::anyhow!(e))?;
-    let seed = args.u64_or("seed", 0xEC).map_err(|e| anyhow::anyhow!(e))?;
-    let app = apps::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown app {name}"))?;
+    let tests = args.usize_or("tests", 400).map_err(Error::msg)?;
+    let seed = args.u64_or("seed", 0xEC).map_err(Error::msg)?;
+    let shards = shards_from(args)?;
+    let app = apps::by_name(name).ok_or_else(|| easycrash::err!("unknown app {name}"))?;
     let mut engine = engine_from(args)?;
     let num_regions = app.regions().len();
     let plan = match args.get_or("plan", "none") {
@@ -97,7 +121,7 @@ fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
             for part in spec.split(',') {
                 let (obj, rest) = part
                     .split_once('@')
-                    .ok_or_else(|| anyhow::anyhow!("bad plan entry `{part}`"))?;
+                    .ok_or_else(|| easycrash::err!("bad plan entry `{part}`"))?;
                 let (region, x) = match rest.split_once('/') {
                     Some((r, x)) => (r.parse()?, x.parse()?),
                     None => (rest.parse()?, 1),
@@ -113,9 +137,9 @@ fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
     };
     let c = Campaign::new(tests, seed);
     let t0 = Instant::now();
-    let res = c.run(app.as_ref(), &plan, engine.as_mut());
+    let res = run_campaign(&c, shards, app.as_ref(), &plan, engine.as_mut());
     let f = res.response_fractions();
-    println!("app={name} tests={tests} wall={:.2?}", t0.elapsed());
+    println!("app={name} tests={tests} shards={shards} wall={:.2?}", t0.elapsed());
     println!(
         "recomputability={}  S1={} S2={} S3={} S4={}",
         easycrash::util::pct(res.recomputability()),

@@ -1,50 +1,64 @@
 //! Shared context for the report generators: configuration + memoized
 //! campaigns/workflows so figures that share measurements (Fig. 5/6,
 //! Table 1/4...) run each campaign once.
+//!
+//! The caches are `Mutex<HashMap<_, Arc<_>>>` (not `RefCell`/`Rc`):
+//! cached reports are cheap `Arc` clones, and nothing in the context
+//! relies on single-threaded interior mutability — only the boxed engine
+//! (which may wrap a non-`Send` PJRT client) keeps the context itself
+//! pinned to one thread.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use crate::apps::{self, CrashApp};
 use crate::easycrash::workflow::{Workflow, WorkflowReport};
-use crate::easycrash::{Campaign, CampaignResult, PersistPlan};
+use crate::easycrash::{Campaign, CampaignResult, PersistPlan, ShardedCampaign};
 use crate::runtime::{NativeEngine, StepEngine};
 use crate::sim::SimConfig;
 use crate::util::cli::Args;
+use crate::util::error::Error;
 
 pub struct ReportCtx {
     pub tests: usize,
     pub seed: u64,
     pub ts: f64,
     pub tau: f64,
+    /// Campaign worker threads (`--shards N`). Validated at parse time:
+    /// sharding needs one engine per worker, so `> 1` requires the
+    /// (default) native engine — same rule as the probe/campaign
+    /// subcommands.
+    pub shards: usize,
     pub cfg: SimConfig,
     pub verbose: bool,
-    engine: RefCell<Box<dyn StepEngine>>,
-    workflows: RefCell<HashMap<String, Rc<WorkflowReport>>>,
-    campaigns: RefCell<HashMap<String, Rc<CampaignResult>>>,
+    engine: Mutex<Box<dyn StepEngine>>,
+    workflows: Mutex<HashMap<String, Arc<WorkflowReport>>>,
+    campaigns: Mutex<HashMap<String, Arc<CampaignResult>>>,
 }
 
 impl ReportCtx {
-    pub fn from_args(args: &Args) -> anyhow::Result<ReportCtx> {
+    pub fn from_args(args: &Args) -> crate::util::error::Result<ReportCtx> {
         let tests = args
             .usize_or("tests", if args.flag("paper-scale") { 1000 } else { 200 })
-            .map_err(|e| anyhow::anyhow!(e))?;
-        let engine: Box<dyn StepEngine> = match args.get_or("engine", "native") {
+            .map_err(Error::msg)?;
+        let engine_name = args.get_or("engine", "native");
+        let engine: Box<dyn StepEngine> = match engine_name {
             "native" => Box::new(NativeEngine::new()),
             "pjrt" => Box::new(crate::runtime::PjrtEngine::from_default_dir()?),
-            other => anyhow::bail!("unknown engine `{other}`"),
+            other => crate::bail!("unknown engine `{other}`"),
         };
+        let shards = args.shards_for_engine().map_err(Error::msg)?;
         Ok(ReportCtx {
             tests,
-            seed: args.u64_or("seed", 0xEC).map_err(|e| anyhow::anyhow!(e))?,
-            ts: args.f64_or("ts", 0.03).map_err(|e| anyhow::anyhow!(e))?,
-            tau: args.f64_or("tau", 0.10).map_err(|e| anyhow::anyhow!(e))?,
+            seed: args.u64_or("seed", 0xEC).map_err(Error::msg)?,
+            ts: args.f64_or("ts", 0.03).map_err(Error::msg)?,
+            tau: args.f64_or("tau", 0.10).map_err(Error::msg)?,
+            shards,
             cfg: SimConfig::mini(),
             verbose: args.flag("verbose"),
-            engine: RefCell::new(engine),
-            workflows: RefCell::new(HashMap::new()),
-            campaigns: RefCell::new(HashMap::new()),
+            engine: Mutex::new(engine),
+            workflows: Mutex::new(HashMap::new()),
+            campaigns: Mutex::new(HashMap::new()),
         })
     }
 
@@ -58,8 +72,8 @@ impl ReportCtx {
     }
 
     /// Memoized full workflow for one app.
-    pub fn workflow(&self, app: &dyn CrashApp) -> Rc<WorkflowReport> {
-        if let Some(w) = self.workflows.borrow().get(app.name()) {
+    pub fn workflow(&self, app: &dyn CrashApp) -> Arc<WorkflowReport> {
+        if let Some(w) = self.workflows.lock().unwrap().get(app.name()) {
             return w.clone();
         }
         if self.verbose {
@@ -72,9 +86,14 @@ impl ReportCtx {
             tau: self.tau,
             cfg: self.cfg,
         };
-        let rep = Rc::new(wf.run(app, self.engine.borrow_mut().as_mut()));
+        let rep = Arc::new(if self.shards > 1 {
+            wf.run_sharded(app, self.shards, &|| Box::new(NativeEngine::new()))
+        } else {
+            wf.run(app, self.engine.lock().unwrap().as_mut())
+        });
         self.workflows
-            .borrow_mut()
+            .lock()
+            .unwrap()
             .insert(app.name().to_string(), rep.clone());
         rep
     }
@@ -86,9 +105,9 @@ impl ReportCtx {
         key: &str,
         plan: &PersistPlan,
         verified: bool,
-    ) -> Rc<CampaignResult> {
+    ) -> Arc<CampaignResult> {
         let full_key = format!("{}::{}{}", app.name(), key, if verified { "::vfy" } else { "" });
-        if let Some(c) = self.campaigns.borrow().get(&full_key) {
+        if let Some(c) = self.campaigns.lock().unwrap().get(&full_key) {
             return c.clone();
         }
         if self.verbose {
@@ -96,8 +115,14 @@ impl ReportCtx {
         }
         let mut runner = self.campaign_runner();
         runner.verified = verified;
-        let res = Rc::new(runner.run(app, plan, self.engine.borrow_mut().as_mut()));
-        self.campaigns.borrow_mut().insert(full_key, res.clone());
+        let res = Arc::new(
+            ShardedCampaign {
+                campaign: runner,
+                shards: self.shards,
+            }
+            .run_or_seq(app, plan, self.engine.lock().unwrap().as_mut()),
+        );
+        self.campaigns.lock().unwrap().insert(full_key, res.clone());
         res
     }
 

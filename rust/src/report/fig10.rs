@@ -15,7 +15,7 @@ pub fn t_r_nvm_seconds(bytes_per_node: f64) -> f64 {
     bytes_per_node / 106e9
 }
 
-pub fn run(ctx: &ReportCtx) -> anyhow::Result<Table> {
+pub fn run(ctx: &ReportCtx) -> crate::util::error::Result<Table> {
     let rows = fig6::rows(ctx);
     let lo = rows
         .iter()

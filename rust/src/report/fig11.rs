@@ -8,7 +8,7 @@ use crate::util::{pct, table::Table};
 use super::context::ReportCtx;
 use super::fig10::t_r_nvm_seconds;
 
-pub fn run(ctx: &ReportCtx) -> anyhow::Result<Table> {
+pub fn run(ctx: &ReportCtx) -> crate::util::error::Result<Table> {
     let cg = crate::apps::by_name("cg").expect("cg registered");
     let r = ctx.workflow(cg.as_ref()).final_result.recomputability();
     let t_r_nvm = t_r_nvm_seconds(96e9);

@@ -7,7 +7,7 @@ use crate::util::{pct, table::Table};
 
 use super::context::ReportCtx;
 
-pub fn run(ctx: &ReportCtx) -> anyhow::Result<Table> {
+pub fn run(ctx: &ReportCtx) -> crate::util::error::Result<Table> {
     let mut t = Table::new(&["app", "S1", "S2", "S3", "S4"]);
     let mut sums = [0.0; 4];
     let apps = ctx.all_apps();

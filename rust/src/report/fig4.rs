@@ -7,7 +7,7 @@ use crate::util::{pct, table::Table};
 
 use super::context::ReportCtx;
 
-pub fn run(ctx: &ReportCtx) -> anyhow::Result<(Table, Table)> {
+pub fn run(ctx: &ReportCtx) -> crate::util::error::Result<(Table, Table)> {
     let app = crate::apps::by_name("mg").expect("mg registered");
     let regions = app.regions().len();
 

@@ -8,7 +8,7 @@ use crate::util::{pct, table::Table};
 
 use super::context::ReportCtx;
 
-pub fn run(ctx: &ReportCtx) -> anyhow::Result<Table> {
+pub fn run(ctx: &ReportCtx) -> crate::util::error::Result<Table> {
     let mut t = Table::new(&["app", "no persist", "selected DOs", "all candidate DOs", "|Δ(2,3)|"]);
     let mut max_gap = 0.0f64;
     for app in ctx.eval_apps() {

@@ -36,7 +36,7 @@ pub fn rows(ctx: &ReportCtx) -> Vec<Fig6Row> {
     out
 }
 
-pub fn run(ctx: &ReportCtx) -> anyhow::Result<Table> {
+pub fn run(ctx: &ReportCtx) -> crate::util::error::Result<Table> {
     let rows = rows(ctx);
     let mut t = Table::new(&["app", "w/o EC", "+select DOs", "EC (full)", "best", "VFY"]);
     for r in &rows {

@@ -10,7 +10,7 @@ use crate::util::{mean, table::Table};
 
 use super::context::ReportCtx;
 
-pub fn run(ctx: &ReportCtx, profiles: &[NvmProfile]) -> anyhow::Result<Table> {
+pub fn run(ctx: &ReportCtx, profiles: &[NvmProfile]) -> crate::util::error::Result<Table> {
     let mut headers: Vec<String> = vec!["app".to_string()];
     for p in profiles {
         headers.push(format!("EC {}", p.name));

@@ -53,7 +53,7 @@ fn checkpoint_writes(ctx: &ReportCtx, app: &dyn CrashApp, objects: &[String]) ->
     (w0, env.hier.stats.nvm_writes())
 }
 
-pub fn run(ctx: &ReportCtx) -> anyhow::Result<Table> {
+pub fn run(ctx: &ReportCtx) -> crate::util::error::Result<Table> {
     let mut t = Table::new(&[
         "app",
         "baseline writes",

@@ -20,7 +20,7 @@ use crate::util::table::Table;
 
 pub use context::ReportCtx;
 
-fn emit(name: &str, title: &str, t: &Table) -> anyhow::Result<()> {
+fn emit(name: &str, title: &str, t: &Table) -> crate::util::error::Result<()> {
     println!("\n== {title} ==");
     print!("{}", t.render());
     let path = t.save_csv(name)?;
@@ -30,10 +30,10 @@ fn emit(name: &str, title: &str, t: &Table) -> anyhow::Result<()> {
 
 /// The per-app workflow summary (selection details; used by the
 /// `workflow` subcommand).
-fn cmd_workflow(ctx: &ReportCtx, args: &Args) -> anyhow::Result<()> {
+fn cmd_workflow(ctx: &ReportCtx, args: &Args) -> crate::util::error::Result<()> {
     let name = args.get_or("app", "mg");
     let app = crate::apps::by_name(name)
-        .ok_or_else(|| anyhow::anyhow!("unknown app `{name}`"))?;
+        .ok_or_else(|| crate::err!("unknown app `{name}`"))?;
     let wf = ctx.workflow(app.as_ref());
     println!("== EasyCrash workflow for {name} ==");
     println!("step 1: characterization campaign ({} tests)", wf.base.records.len());
@@ -90,7 +90,7 @@ fn cmd_workflow(ctx: &ReportCtx, args: &Args) -> anyhow::Result<()> {
 }
 
 /// §6 sensitivity study: t_s ∈ {2%, 3%, 5%}.
-fn cmd_sensitivity(base_args: &Args) -> anyhow::Result<()> {
+fn cmd_sensitivity(base_args: &Args) -> crate::util::error::Result<()> {
     for ts in [0.02, 0.03, 0.05] {
         let mut args = base_args.clone();
         args.options.insert("ts".into(), ts.to_string());
@@ -115,7 +115,7 @@ fn cmd_sensitivity(base_args: &Args) -> anyhow::Result<()> {
 }
 
 /// Dispatch a report subcommand. `cmd` is the first positional argument.
-pub fn cli_dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
+pub fn cli_dispatch(cmd: &str, args: &Args) -> crate::util::error::Result<()> {
     match cmd {
         "help" | "--help" | "-h" => {
             print_help();
@@ -175,7 +175,7 @@ pub fn cli_dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
         }
         other => {
             print_help();
-            anyhow::bail!("unknown command `{other}`");
+            crate::bail!("unknown command `{other}`");
         }
     }
     Ok(())
@@ -186,7 +186,10 @@ fn print_help() {
         "easycrash — reproduction of 'EasyCrash: Exploring Non-Volatility of NVM for HPC Under Failures'
 
 USAGE: easycrash <command> [--tests N] [--seed S] [--engine native|pjrt]
-                 [--ts F] [--tau F] [--paper-scale] [--verbose]
+                 [--shards N] [--ts F] [--tau F] [--paper-scale] [--verbose]
+
+--shards N runs every crash campaign across N worker threads; results are
+bit-identical to --shards 1 under the same seed (native engine only).
 
 paper artifacts:
   table1 fig3 fig4 fig5 fig6 table4 fig7 fig8 fig9 fig10 fig11
@@ -195,8 +198,8 @@ paper artifacts:
 
 tools:
   list                         list benchmarks
-  probe    --app A [--tests N] timing probe for one app
-  campaign --app A --plan none|all|obj@region/x[,..]
+  probe    --app A [--tests N] [--shards N] timing probe for one app
+  campaign --app A --plan none|all|obj@region/x[,..] [--shards N]
   workflow --app A             run + display the 4-step EasyCrash workflow"
     );
 }

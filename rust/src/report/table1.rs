@@ -6,7 +6,7 @@ use crate::util::{human_bytes, table::Table};
 
 use super::context::ReportCtx;
 
-pub fn run(ctx: &ReportCtx) -> anyhow::Result<Table> {
+pub fn run(ctx: &ReportCtx) -> crate::util::error::Result<Table> {
     let mut t = Table::new(&[
         "app",
         "#regions",

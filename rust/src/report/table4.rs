@@ -44,7 +44,7 @@ pub fn rows(ctx: &ReportCtx) -> Vec<T4Row> {
     out
 }
 
-pub fn run(ctx: &ReportCtx) -> anyhow::Result<Table> {
+pub fn run(ctx: &ReportCtx) -> crate::util::error::Result<Table> {
     let rows = rows(ctx);
     let mut t = Table::new(&[
         "app",

@@ -12,9 +12,14 @@
 //! Keeping the interface at "named function over f32 tensors" decouples the
 //! benchmark code from the xla crate types.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// Engine interface used on the recomputation hot path.
+///
+/// Deliberately NOT `Send`-bounded: the sharded campaign never moves an
+/// engine across threads — each worker constructs its own engine inside
+/// its thread via a `Sync` factory — so engines wrapping non-thread-safe
+/// native handles (PJRT clients) stay sound without `unsafe` claims.
 pub trait StepEngine {
     fn name(&self) -> &'static str;
 
@@ -51,7 +56,7 @@ impl StepEngine for NativeEngine {
     }
 
     fn call_f32(&mut self, fname: &str, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
-        anyhow::bail!("native engine does not serve AOT calls (asked for `{fname}`)")
+        crate::bail!("native engine does not serve AOT calls (asked for `{fname}`)")
     }
 }
 

@@ -105,11 +105,20 @@ pub struct CrashInfo {
     pub region: usize,
 }
 
-/// Observer callback: `SimEnv` invokes it at each pre-drawn crash point,
+/// Crash observer: `SimEnv` invokes it at each pre-drawn crash point,
 /// with full access to the env for inconsistency accounting and snapshots.
 /// Execution resumes afterwards — a crash is an observation, not a
 /// perturbation (see DESIGN.md "single-pass campaign").
-pub type Observer<'a> = Box<dyn FnMut(&mut SimEnv, CrashInfo) + 'a>;
+///
+/// Observers are plain structs whose state is threaded by `&mut`
+/// (no `Rc<RefCell<…>>` plumbing): the caller owns the observer on its
+/// stack, lends it to the env for the duration of one run, and reads the
+/// harvested results back once the env is dropped. Because the state is
+/// owned, a whole (env, observer) pair can be constructed inside a worker
+/// thread — the property the sharded campaign executor builds on.
+pub trait CrashObserver {
+    fn on_crash(&mut self, env: &mut SimEnv<'_>, info: CrashInfo);
+}
 
 // ---------------------------------------------------------------------------
 // SimEnv
@@ -133,7 +142,7 @@ pub struct SimEnv<'a> {
     /// If set, `Signal::Crash` is returned once `ops` reaches this value
     /// (halt-mode, for run-to-crash demos and tests).
     pub halt_at: Option<u64>,
-    observer: Option<Observer<'a>>,
+    observer: Option<&'a mut dyn CrashObserver>,
     /// Number of persistence operations executed (Table 4).
     pub persist_ops: u64,
     /// Cycles spent inside persistence operations.
@@ -191,8 +200,10 @@ impl<'a> SimEnv<'a> {
         self.hooks = hooks;
     }
 
-    /// Install sorted crash points + the observer fired at each.
-    pub fn set_crash_points(&mut self, points: Vec<u64>, obs: Observer<'a>) {
+    /// Install sorted crash points + the observer fired at each. The
+    /// observer is borrowed for the env's lifetime; its harvested state
+    /// becomes readable again once the env is dropped.
+    pub fn set_crash_points(&mut self, points: Vec<u64>, obs: &'a mut dyn CrashObserver) {
         debug_assert!(points.windows(2).all(|w| w[0] <= w[1]));
         self.next_crash = points.first().copied().unwrap_or(u64::MAX);
         self.crash_points = points;
@@ -277,13 +288,13 @@ impl<'a> SimEnv<'a> {
         while self.cp_idx < self.crash_points.len() && self.crash_points[self.cp_idx] <= self.ops
         {
             self.cp_idx += 1;
-            if let Some(mut obs) = self.observer.take() {
+            if let Some(obs) = self.observer.take() {
                 let info = CrashInfo {
                     op: self.ops,
                     iter: self.cur_iter,
                     region: self.cur_region,
                 };
-                obs(self, info);
+                obs.on_crash(self, info);
                 self.observer = Some(obs);
             }
         }
@@ -694,28 +705,35 @@ mod tests {
         assert_eq!(sim.ops(), 10);
     }
 
+    /// Owned-state observer: no `Rc<RefCell<…>>`, just a struct whose
+    /// results are read back after the env is dropped.
+    struct HitRecorder {
+        hits: Vec<(u64, f64)>,
+    }
+
+    impl CrashObserver for HitRecorder {
+        fn on_crash(&mut self, env: &mut SimEnv<'_>, info: CrashInfo) {
+            self.hits.push((info.op, env.inconsistent_rate(0)));
+        }
+    }
+
     #[test]
     fn observer_fires_and_execution_continues() {
         let c = cfg();
-        let mut sim = SimEnv::new(&c, 1);
-        let b = sim.alloc(ObjSpec::f64("x", 64, true));
-        let hits = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
-        let h2 = hits.clone();
-        sim.set_crash_points(
-            vec![5, 5, 20],
-            Box::new(move |env, info| {
-                h2.borrow_mut().push((info.op, env.inconsistent_rate(0)));
-            }),
-        );
-        for i in 0..64 {
-            sim.st(b, i, 2.0).unwrap();
+        let mut rec = HitRecorder { hits: Vec::new() };
+        {
+            let mut sim = SimEnv::new(&c, 1);
+            let b = sim.alloc(ObjSpec::f64("x", 64, true));
+            sim.set_crash_points(vec![5, 5, 20], &mut rec);
+            for i in 0..64 {
+                sim.st(b, i, 2.0).unwrap();
+            }
+            assert_eq!(sim.ops(), 64, "run continued to completion");
         }
-        let hits = hits.borrow();
-        assert_eq!(hits.len(), 3, "duplicate point fires twice");
-        assert_eq!(hits[0].0, 5);
-        assert_eq!(hits[2].0, 20);
-        assert!(hits[2].1 > 0.0, "some bytes must be inconsistent mid-run");
-        assert_eq!(sim.ops(), 64, "run continued to completion");
+        assert_eq!(rec.hits.len(), 3, "duplicate point fires twice");
+        assert_eq!(rec.hits[0].0, 5);
+        assert_eq!(rec.hits[2].0, 20);
+        assert!(rec.hits[2].1 > 0.0, "some bytes must be inconsistent mid-run");
     }
 
     #[test]

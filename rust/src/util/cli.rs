@@ -75,6 +75,30 @@ impl Args {
         }
     }
 
+    /// The `--shards N` flag shared by every campaign-running command:
+    /// number of worker threads for `easycrash::ShardedCampaign`.
+    /// Defaults to 1 (sequential); 0 is rejected rather than silently
+    /// clamped.
+    pub fn shards_or(&self, default: usize) -> Result<usize, String> {
+        let n = self.usize_or("shards", default)?;
+        if n == 0 {
+            return Err("--shards must be >= 1".into());
+        }
+        Ok(n)
+    }
+
+    /// `--shards` validated against `--engine`: sharding spawns one
+    /// native engine per worker, so `> 1` requires the (default) native
+    /// engine. The single source of truth for every campaign-running
+    /// command's shards/engine rule.
+    pub fn shards_for_engine(&self) -> Result<usize, String> {
+        let n = self.shards_or(1)?;
+        if n > 1 && self.get_or("engine", "native") != "native" {
+            return Err("--shards > 1 requires --engine native (one engine per worker)".into());
+        }
+        Ok(n)
+    }
+
     pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, String> {
         match self.get(name) {
             None => Ok(default),
@@ -120,5 +144,27 @@ mod tests {
     fn bad_int_is_error() {
         let a = Args::parse(&argv("--tests abc"), &["tests"]).unwrap();
         assert!(a.usize_or("tests", 1).is_err());
+    }
+
+    #[test]
+    fn shards_flag_parses_and_rejects_zero() {
+        let a = Args::parse(&argv("--shards 4"), &["shards"]).unwrap();
+        assert_eq!(a.shards_or(1).unwrap(), 4);
+        let a = Args::parse(&argv(""), &["shards"]).unwrap();
+        assert_eq!(a.shards_or(1).unwrap(), 1);
+        let a = Args::parse(&argv("--shards 0"), &["shards"]).unwrap();
+        assert!(a.shards_or(1).is_err());
+    }
+
+    #[test]
+    fn shards_engine_rule_is_enforced() {
+        let a = Args::parse(&argv("--shards 4"), &["shards", "engine"]).unwrap();
+        assert_eq!(a.shards_for_engine().unwrap(), 4);
+        let a = Args::parse(&argv("--shards 4 --engine native"), &["shards", "engine"]).unwrap();
+        assert_eq!(a.shards_for_engine().unwrap(), 4);
+        let a = Args::parse(&argv("--shards 4 --engine pjrt"), &["shards", "engine"]).unwrap();
+        assert!(a.shards_for_engine().is_err());
+        let a = Args::parse(&argv("--shards 1 --engine pjrt"), &["shards", "engine"]).unwrap();
+        assert_eq!(a.shards_for_engine().unwrap(), 1, "sequential pjrt stays allowed");
     }
 }

@@ -6,6 +6,7 @@
 //! the coordinator needs.
 
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod quickcheck;
 pub mod rng;

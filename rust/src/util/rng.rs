@@ -109,6 +109,45 @@ impl Rng {
         v.sort_unstable();
         v
     }
+
+    /// Advance the generator by 2^128 steps (the canonical xoshiro256**
+    /// jump polynomial). Jumping `k` times from a common seed yields the
+    /// subsequence starting at offset `k·2^128` of the master stream, so
+    /// generators split this way produce *provably non-overlapping*
+    /// streams for any realistic draw count.
+    pub fn jump(&mut self) {
+        const JUMP: [u64; 4] = [
+            0x180e_c6d3_3cfd_0aba,
+            0xd5a6_1266_f0c9_392c,
+            0xa958_2618_e03f_c9aa,
+            0x39ab_dc45_29b1_661c,
+        ];
+        let mut s = [0u64; 4];
+        for &j in &JUMP {
+            for b in 0..64 {
+                if (j >> b) & 1 != 0 {
+                    s[0] ^= self.s[0];
+                    s[1] ^= self.s[1];
+                    s[2] ^= self.s[2];
+                    s[3] ^= self.s[3];
+                }
+                self.next_u64();
+            }
+        }
+        self.s = s;
+    }
+
+    /// Split a seed into per-shard/lane generators: lane `k` is the base
+    /// stream advanced by `k` jumps of 2^128 steps each. Lane 0 equals
+    /// `Rng::new(seed)`; distinct lanes never overlap (see [`Rng::jump`]).
+    /// Cost is O(k) jumps — fine for the shard/lane counts campaigns use.
+    pub fn for_lane(seed: u64, lane: u64) -> Rng {
+        let mut r = Rng::new(seed);
+        for _ in 0..lane {
+            r.jump();
+        }
+        r
+    }
 }
 
 #[cfg(test)]
@@ -190,6 +229,43 @@ mod tests {
         let pts = r.sorted_points(1000, 12345);
         assert!(pts.windows(2).all(|w| w[0] <= w[1]));
         assert!(pts.iter().all(|&p| p < 12345));
+    }
+
+    #[test]
+    fn jump_is_deterministic_and_moves_the_stream() {
+        let mut a = Rng::new(77);
+        let mut b = Rng::new(77);
+        a.jump();
+        b.jump();
+        let av: Vec<u64> = (0..16).map(|_| a.next_u64()).collect();
+        let bv: Vec<u64> = (0..16).map(|_| b.next_u64()).collect();
+        assert_eq!(av, bv, "jump must be deterministic");
+        let mut c = Rng::new(77);
+        let cv: Vec<u64> = (0..16).map(|_| c.next_u64()).collect();
+        assert_ne!(av, cv, "jumped stream must differ from the base stream");
+    }
+
+    #[test]
+    fn lanes_are_independent_and_reproducible() {
+        let l0: Vec<u64> = {
+            let mut r = Rng::for_lane(5, 0);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        let base: Vec<u64> = {
+            let mut r = Rng::new(5);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(l0, base, "lane 0 is the base stream");
+        let mut streams = Vec::new();
+        for lane in 0..6u64 {
+            let mut r = Rng::for_lane(5, lane);
+            streams.push((0..64).map(|_| r.next_u64()).collect::<Vec<_>>());
+        }
+        for i in 0..streams.len() {
+            for j in i + 1..streams.len() {
+                assert_ne!(streams[i], streams[j], "lanes {i} and {j} collide");
+            }
+        }
     }
 
     #[test]

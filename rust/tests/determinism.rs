@@ -1,0 +1,154 @@
+//! Determinism proof for the sharded campaign executor.
+//!
+//! The guarantee under test (see `easycrash::campaign` module docs):
+//! `ShardedCampaign` output — records, response fractions, modeled cycles
+//! — is **bit-identical** to the sequential `Campaign` under the same
+//! seed, for every shard count; and shard crash-point batches never share
+//! an op (the per-lane RNG split draws from disjoint op sub-ranges, and
+//! batch boundaries keep duplicate draws together).
+
+use std::collections::HashSet;
+
+use easycrash::apps::{by_name, CrashApp};
+use easycrash::easycrash::campaign::{draw_crash_points, partition_points};
+use easycrash::easycrash::{Campaign, PersistPlan, ShardedCampaign, Workflow};
+use easycrash::runtime::NativeEngine;
+use easycrash::util::rng::Rng;
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+/// The two plans each app is exercised under: no persistence, and all
+/// candidate objects persisted at iteration end.
+fn plans_for(app: &dyn CrashApp) -> Vec<PersistPlan> {
+    let prof = Campaign::new(0, 1).profile(app, &PersistPlan::none());
+    let names: Vec<String> = prof
+        .candidates
+        .iter()
+        .map(|(_, n, _)| n.clone())
+        .filter(|n| n != "it")
+        .collect();
+    let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    vec![
+        PersistPlan::none(),
+        PersistPlan::at_iter_end(&refs, app.regions().len(), 1),
+    ]
+}
+
+/// Satellite: 3 apps × 2 plans × shard counts {1, 2, 4, 8} — sharded
+/// output equals sequential output field by field.
+#[test]
+fn sharded_equals_sequential_across_apps_plans_and_shard_counts() {
+    let tests = 24;
+    let seed = 0xA5;
+    for app_name in ["toy", "is", "kmeans"] {
+        let app = by_name(app_name).unwrap();
+        for (p, plan) in plans_for(app.as_ref()).iter().enumerate() {
+            let mut eng = NativeEngine::new();
+            let seq = Campaign::new(tests, seed).run(app.as_ref(), plan, &mut eng);
+            assert_eq!(seq.records.len(), tests, "{app_name} plan{p}");
+            for shards in SHARD_COUNTS {
+                let sc = ShardedCampaign::new(tests, seed, shards);
+                let r = sc.run(app.as_ref(), plan);
+                let label = format!("{app_name} plan{p} shards={shards}");
+                assert_eq!(r.records, seq.records, "{label}: records diverged");
+                assert_eq!(
+                    r.response_fractions(),
+                    seq.response_fractions(),
+                    "{label}: response fractions diverged"
+                );
+                assert_eq!(r.cycles, seq.cycles, "{label}: modeled cycles diverged");
+                assert_eq!(r.ops_total, seq.ops_total, "{label}");
+                assert_eq!(r.ops_main_start, seq.ops_main_start, "{label}");
+                assert_eq!(r.persist_ops, seq.persist_ops, "{label}");
+                assert_eq!(r.recomputability(), seq.recomputability(), "{label}");
+            }
+        }
+    }
+}
+
+/// The full 4-step workflow inherits the guarantee: sharded campaigns
+/// produce the same selection, plan and final result as sequential ones.
+#[test]
+fn sharded_workflow_equals_sequential_workflow() {
+    let app = by_name("toy").unwrap();
+    let wf = Workflow {
+        tests: 60,
+        seed: 3,
+        ..Default::default()
+    };
+    let mut eng = NativeEngine::new();
+    let seq = wf.run(app.as_ref(), &mut eng);
+    let sh = wf.run_sharded(app.as_ref(), 4, &|| Box::new(NativeEngine::new()));
+    assert_eq!(seq.critical, sh.critical);
+    assert_eq!(seq.plan.entries, sh.plan.entries);
+    assert_eq!(seq.base.records, sh.base.records);
+    assert_eq!(seq.final_result.records, sh.final_result.records);
+    assert_eq!(
+        seq.final_result.recomputability(),
+        sh.final_result.recomputability()
+    );
+}
+
+/// Satellite: per-shard crash-point streams never overlap — for a
+/// 1000-test campaign, no op value appears in two different shards.
+#[test]
+fn shard_batches_share_no_ops_in_a_1000_test_campaign() {
+    let app = by_name("toy").unwrap();
+    let prof = Campaign::new(1000, 7).profile(app.as_ref(), &PersistPlan::none());
+    assert!(
+        prof.ops_total - prof.ops_main_start >= 1000,
+        "main loop must be wider than the test count for the structural guarantee"
+    );
+    let points = draw_crash_points(7, 1000, prof.ops_main_start, prof.ops_total);
+    assert_eq!(points.len(), 1000);
+    for shards in [2usize, 4, 8] {
+        let batches = partition_points(&points, shards);
+        assert_eq!(batches.iter().map(Vec::len).sum::<usize>(), 1000);
+        let sets: Vec<HashSet<u64>> = batches
+            .iter()
+            .map(|b| b.iter().copied().collect())
+            .collect();
+        for i in 0..sets.len() {
+            for j in i + 1..sets.len() {
+                assert!(
+                    sets[i].is_disjoint(&sets[j]),
+                    "shards {i} and {j} share crash-point ops ({} tests each)",
+                    batches[i].len()
+                );
+            }
+        }
+    }
+}
+
+/// The RNG lane split itself: 8 lanes drawing a 1000-test campaign's worth
+/// of values (125 each) never collide — each lane is the master stream
+/// advanced by a distinct number of 2^128-step jumps.
+#[test]
+fn rng_lane_streams_are_disjoint() {
+    let mut seen: HashSet<u64> = HashSet::new();
+    for lane in 0..8u64 {
+        let mut r = Rng::for_lane(0xEC, lane);
+        for i in 0..125 {
+            assert!(
+                seen.insert(r.next_u64()),
+                "lane {lane} draw {i} duplicated an earlier lane's output"
+            );
+        }
+    }
+    assert_eq!(seen.len(), 1000);
+}
+
+/// The draw itself is shard-count-free: it depends only on
+/// (seed, tests, span). Re-drawing must reproduce it exactly, and the
+/// lane stratification keeps every point inside the main loop.
+#[test]
+fn crash_point_draw_is_reproducible_and_bounded() {
+    let app = by_name("is").unwrap();
+    let prof = Campaign::new(0, 2).profile(app.as_ref(), &PersistPlan::none());
+    let (lo, hi) = (prof.ops_main_start, prof.ops_total);
+    let a = draw_crash_points(2, 500, lo, hi);
+    let b = draw_crash_points(2, 500, lo, hi);
+    assert_eq!(a, b);
+    assert!(a.windows(2).all(|w| w[0] <= w[1]), "sorted ascending");
+    assert!(a.iter().all(|&p| p >= lo && p < hi), "within the main loop");
+}
