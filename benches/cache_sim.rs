@@ -7,7 +7,7 @@ use easycrash::sim::{Hierarchy, Memory, SimConfig};
 use easycrash::util::rng::Rng;
 
 fn main() {
-    let b = Bench::new("cache_sim");
+    let mut b = Bench::new("cache_sim");
     let cfg = SimConfig::mini();
     let span = 2 * 1024 * 1024usize; // 2 MB footprint >> LLC
 

@@ -5,10 +5,15 @@
 //!
 //! The `sharded*` cases drive the same campaign through
 //! [`ShardedCampaign`] at increasing worker counts: with >1 hardware
-//! thread available, wall-clock per campaign drops as the N inline
-//! restarts (the dominant cost at paper scale) split across workers,
-//! while the printed result stays bit-identical (see
-//! rust/tests/determinism.rs).
+//! thread, wall-clock per campaign drops both because the N inline
+//! restarts split across workers *and* because every non-final worker
+//! early-stops right after its own last crash point (DESIGN.md §Perf
+//! "early-stop workers") — while the printed result stays bit-identical
+//! (see rust/tests/determinism.rs and rust/tests/fastpath_parity.rs).
+//!
+//! Results are also persisted as machine-readable JSON
+//! (`BENCH_campaign.json` at the repo root: op/s + wall-clock per case);
+//! CI uploads it as an artifact.
 
 use easycrash::apps;
 use easycrash::benchlib::Bench;
@@ -16,34 +21,50 @@ use easycrash::easycrash::{Campaign, PersistPlan, ShardedCampaign};
 use easycrash::runtime::NativeEngine;
 
 fn main() {
-    let b = Bench::new("campaign");
+    let mut b = Bench::new("campaign");
     for name in ["toy", "is", "cg", "mg"] {
         let app = apps::by_name(name).unwrap();
         let c = Campaign::new(0, 1);
-        b.run(&format!("profile_{name}"), || {
-            std::hint::black_box(c.profile(app.as_ref(), &PersistPlan::none()));
+        b.run_throughput(&format!("profile_{name}"), || {
+            let r = c.profile(app.as_ref(), &PersistPlan::none());
+            let ops = r.ops_total;
+            std::hint::black_box(r);
+            ops
         });
     }
     for name in ["toy", "is"] {
         let app = apps::by_name(name).unwrap();
         let mut eng = NativeEngine::new();
         let c = Campaign::new(100, 1);
-        b.run(&format!("campaign100_{name}"), || {
-            std::hint::black_box(c.run(app.as_ref(), &PersistPlan::none(), &mut eng));
+        b.run_throughput(&format!("campaign100_{name}"), || {
+            let r = c.run(app.as_ref(), &PersistPlan::none(), &mut eng);
+            let ops = r.ops_total;
+            std::hint::black_box(r);
+            ops
         });
     }
-    // Sharded scaling: identical 400-test campaign at 1/2/4 workers.
+    // Sharded scaling: identical 400-test campaign at 1/2/4 workers
+    // (early-stop + fast path; the acceptance case for ISSUE 2 is
+    // `sharded4_campaign400_*` ≥ 2x the PR-1 baseline).
     let workers = std::thread::available_parallelism().map_or(1, |n| n.get());
     for name in ["toy", "is"] {
         let app = apps::by_name(name).unwrap();
         for shards in [1usize, 2, 4] {
             let sc = ShardedCampaign::new(400, 1, shards);
-            b.run(
+            b.run_throughput(
                 &format!("sharded{shards}_campaign400_{name} (hw={workers})"),
                 || {
-                    std::hint::black_box(sc.run(app.as_ref(), &PersistPlan::none()));
+                    let r = sc.run(app.as_ref(), &PersistPlan::none());
+                    let ops = r.ops_total;
+                    std::hint::black_box(r);
+                    ops
                 },
             );
         }
+    }
+    if let Err(e) = b.write_json("BENCH_campaign.json") {
+        eprintln!("warning: could not write BENCH_campaign.json: {e}");
+    } else {
+        println!("wrote BENCH_campaign.json");
     }
 }

@@ -8,7 +8,7 @@ use easycrash::runtime::{NativeEngine, PjrtEngine, StepEngine};
 use easycrash::sim::RawEnv;
 
 fn main() {
-    let b = Bench::new("engine");
+    let mut b = Bench::new("engine");
 
     // kmeans step: native.
     let km = easycrash::apps::kmeans::Kmeans::default();

@@ -6,7 +6,7 @@ use easycrash::benchlib::Bench;
 use easycrash::sim::{FlushKind, Hierarchy, Memory, SimConfig};
 
 fn main() {
-    let b = Bench::new("flush");
+    let mut b = Bench::new("flush");
     let cfg = SimConfig::mini();
     let obj = 128 * 1024usize; // 128 KB object = 2048 lines
 

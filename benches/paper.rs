@@ -16,7 +16,7 @@ fn ctx() -> ReportCtx {
 
 fn main() {
     std::env::set_var("EC_BENCH_MS", "200"); // one-shot style: these are heavy
-    let b = Bench::new("paper");
+    let mut b = Bench::new("paper");
     // Shared context so memoization mirrors the real `all` run.
     let c = ctx();
     b.run("table1", || {

@@ -30,6 +30,9 @@ use crate::sim::{Buf, Env, ObjSpec, Signal};
 /// Grid edge: n = EDGE² unknowns.
 const EDGE: usize = 96;
 const N: usize = EDGE * EDGE;
+/// Bulk-API chunk for the dense vector phases (R1–R5): big enough to
+/// amortize the slice call, small enough to stay on the stack.
+const CHUNK: usize = 256;
 
 pub struct Cg {
     pub iters: u64,
@@ -185,13 +188,13 @@ impl AppCore for Cg {
         let sc = env.alloc(ObjSpec::f32("sc", 1, true));
         let it = env.alloc(ObjSpec::i64("it", 1, true));
         Self::build_matrix(env, vals, cols, rowptr)?;
-        // x₀ = 0; b ≡ 1 ⇒ r₀ = b, p₀ = r₀, ρ₀ = r·r = N.
-        for i in 0..N {
-            env.stf(x, i, 0.0)?;
-            env.stf(r, i, 1.0)?;
-            env.stf(p, i, 1.0)?;
-            env.stf(q, i, 0.0)?;
-        }
+        // x₀ = 0; b ≡ 1 ⇒ r₀ = b, p₀ = r₀, ρ₀ = r·r = N (bulk fills).
+        let zeros = vec![0.0f32; N];
+        let ones = vec![1.0f32; N];
+        env.st_slice_f32(x, 0, &zeros)?;
+        env.st_slice_f32(r, 0, &ones)?;
+        env.st_slice_f32(p, 0, &ones)?;
+        env.st_slice_f32(q, 0, &zeros)?;
         env.stf(sc, 0, N as f32)?;
         env.sti(it, 0, 0)?;
         Ok(St {
@@ -208,6 +211,12 @@ impl AppCore for Cg {
     }
 
     fn step<E: Env>(&self, env: &mut E, st: &St, _it: u64) -> Result<(), Signal> {
+        // The dense vector phases (R1–R5) run through the bulk API in
+        // CHUNK-sized runs; accumulation order per element is unchanged,
+        // so the numerics match the scalar kernel bit for bit. The SpMV
+        // stays scalar — its column accesses are data-dependent gathers.
+        let mut a = [0.0f32; CHUNK];
+        let mut b = [0.0f32; CHUNK];
         // R0: q = A p
         env.region(0)?;
         for row in 0..N {
@@ -217,36 +226,69 @@ impl AppCore for Cg {
         // R1: α = ρ / (p·q)
         env.region(1)?;
         let mut pq = 0.0f32;
-        for i in 0..N {
-            pq += env.ldf(st.p, i)? * env.ldf(st.q, i)?;
+        let mut i = 0;
+        while i < N {
+            let n = CHUNK.min(N - i);
+            env.ld_slice_f32(st.p, i, &mut a[..n])?;
+            env.ld_slice_f32(st.q, i, &mut b[..n])?;
+            for (&pv, &qv) in a[..n].iter().zip(&b[..n]) {
+                pq += pv * qv;
+            }
+            i += n;
         }
         let rho = env.ldf(st.sc, 0)?;
         let alpha = if pq.abs() > 1e-30 { rho / pq } else { 0.0 };
         // R2: x += α p
         env.region(2)?;
-        for i in 0..N {
-            let v = env.ldf(st.x, i)? + alpha * env.ldf(st.p, i)?;
-            env.stf(st.x, i, v)?;
+        let mut i = 0;
+        while i < N {
+            let n = CHUNK.min(N - i);
+            env.ld_slice_f32(st.x, i, &mut a[..n])?;
+            env.ld_slice_f32(st.p, i, &mut b[..n])?;
+            for (xv, &pv) in a[..n].iter_mut().zip(&b[..n]) {
+                *xv += alpha * pv;
+            }
+            env.st_slice_f32(st.x, i, &a[..n])?;
+            i += n;
         }
         // R3: r -= α q
         env.region(3)?;
-        for i in 0..N {
-            let v = env.ldf(st.r, i)? - alpha * env.ldf(st.q, i)?;
-            env.stf(st.r, i, v)?;
+        let mut i = 0;
+        while i < N {
+            let n = CHUNK.min(N - i);
+            env.ld_slice_f32(st.r, i, &mut a[..n])?;
+            env.ld_slice_f32(st.q, i, &mut b[..n])?;
+            for (rv, &qv) in a[..n].iter_mut().zip(&b[..n]) {
+                *rv -= alpha * qv;
+            }
+            env.st_slice_f32(st.r, i, &a[..n])?;
+            i += n;
         }
         // R4: ρ' = r·r
         env.region(4)?;
         let mut rho_new = 0.0f32;
-        for i in 0..N {
-            let v = env.ldf(st.r, i)?;
-            rho_new += v * v;
+        let mut i = 0;
+        while i < N {
+            let n = CHUNK.min(N - i);
+            env.ld_slice_f32(st.r, i, &mut a[..n])?;
+            for &v in &a[..n] {
+                rho_new += v * v;
+            }
+            i += n;
         }
         // R5: β = ρ'/ρ; p = r + β p; carry ρ'
         env.region(5)?;
         let beta = if rho.abs() > 1e-30 { rho_new / rho } else { 0.0 };
-        for i in 0..N {
-            let v = env.ldf(st.r, i)? + beta * env.ldf(st.p, i)?;
-            env.stf(st.p, i, v)?;
+        let mut i = 0;
+        while i < N {
+            let n = CHUNK.min(N - i);
+            env.ld_slice_f32(st.r, i, &mut a[..n])?;
+            env.ld_slice_f32(st.p, i, &mut b[..n])?;
+            for (pv, &rv) in b[..n].iter_mut().zip(&a[..n]) {
+                *pv = rv + beta * *pv;
+            }
+            env.st_slice_f32(st.p, i, &b[..n])?;
+            i += n;
         }
         env.stf(st.sc, 0, rho_new)?;
         Ok(())

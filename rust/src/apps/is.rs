@@ -23,6 +23,8 @@ use crate::util::rng::Rng;
 const N: usize = 1 << 15;
 const MAXKEY: usize = 1 << 10;
 const PV_SAMPLES: usize = 512;
+/// Bulk-API chunk for the contiguous sweeps (clear/count/scan/metric).
+const CHUNK: usize = 512;
 
 pub struct Is {
     pub iters: u64,
@@ -129,14 +131,14 @@ impl AppCore for Is {
         let it = env.alloc(ObjSpec::i64("it", 1, true));
 
         let mut rng = Rng::new(self.seed);
-        for b in 0..MAXKEY {
-            env.sti(head, b, -1)?;
-        }
-        for i in 0..N {
-            let k = rng.index(MAXKEY);
-            env.sti(keys, i, k as i64)?;
-            env.sti(sorted, i, 0)?;
-        }
+        let minus_ones = vec![-1i64; MAXKEY];
+        env.st_slice_i64(head, 0, &minus_ones)?;
+        // Draw all keys first (same rng order as the scalar loop), then
+        // bulk-store keys and the sorted scratch.
+        let key_vals: Vec<i64> = (0..N).map(|_| rng.index(MAXKEY) as i64).collect();
+        env.st_slice_i64(keys, 0, &key_vals)?;
+        let zeros = vec![0i64; N];
+        env.st_slice_i64(sorted, 0, &zeros)?;
         // Build the chains (insert in reverse so heads hold low slots).
         for i in (0..N).rev() {
             let k = env.ldi(keys, i)? as usize;
@@ -151,9 +153,7 @@ impl AppCore for Is {
             };
             Self::chain_insert(env, &st_tmp, k, i)?;
         }
-        for b in 0..=MAXKEY {
-            env.sti(counts, b, 0)?;
-        }
+        env.st_slice_i64(counts, 0, &zeros[..MAXKEY + 1])?;
         env.st(pv, 0, 0.0)?;
         env.sti(it, 0, 0)?;
         Ok(St {
@@ -187,28 +187,46 @@ impl AppCore for Is {
             env.sti(st.keys, slot, new)?;
             Self::chain_insert(env, st, new as usize, slot)?;
         }
-        // R2: clear histogram.
+        // R2: clear histogram (bulk store).
         env.region(2)?;
-        for b in 0..=MAXKEY {
-            env.sti(st.counts, b, 0)?;
+        let zeros = [0i64; CHUNK];
+        let mut b0 = 0;
+        while b0 < MAXKEY + 1 {
+            let n = CHUNK.min(MAXKEY + 1 - b0);
+            env.st_slice_i64(st.counts, b0, &zeros[..n])?;
+            b0 += n;
         }
-        // R3: count.
+        // R3: count — keys stream in through the bulk API; the histogram
+        // updates stay scalar (data-dependent scatter).
         env.region(3)?;
-        for i in 0..N {
-            let k = env.ldi(st.keys, i)?;
-            if !(0..MAXKEY as i64).contains(&k) {
-                return Err(Signal::Interrupt);
+        let mut kc = [0i64; CHUNK];
+        let mut i0 = 0;
+        while i0 < N {
+            let n = CHUNK.min(N - i0);
+            env.ld_slice_i64(st.keys, i0, &mut kc[..n])?;
+            for &k in &kc[..n] {
+                if !(0..MAXKEY as i64).contains(&k) {
+                    return Err(Signal::Interrupt);
+                }
+                let c = env.ldi(st.counts, k as usize)?;
+                env.sti(st.counts, k as usize, c + 1)?;
             }
-            let c = env.ldi(st.counts, k as usize)?;
-            env.sti(st.counts, k as usize, c + 1)?;
+            i0 += n;
         }
-        // R4: exclusive prefix scan.
+        // R4: exclusive prefix scan, chunked (the carry is local).
         env.region(4)?;
         let mut acc = 0i64;
-        for b in 0..=MAXKEY {
-            let c = env.ldi(st.counts, b)?;
-            env.sti(st.counts, b, acc)?;
-            acc += c;
+        let mut b0 = 0;
+        while b0 < MAXKEY + 1 {
+            let n = CHUNK.min(MAXKEY + 1 - b0);
+            env.ld_slice_i64(st.counts, b0, &mut kc[..n])?;
+            for c in kc[..n].iter_mut() {
+                let v = *c;
+                *c = acc;
+                acc += v;
+            }
+            env.st_slice_i64(st.counts, b0, &kc[..n])?;
+            b0 += n;
         }
         // R5: gather the sorted permutation by walking the chains.
         env.region(5)?;
@@ -250,12 +268,18 @@ impl AppCore for Is {
         // accumulated partial-verification checksum.
         let mut violations = 0u64;
         let mut prev = i64::MIN;
-        for i in 0..N {
-            let k = env.ldi(st.sorted, i)?;
-            if k < prev {
-                violations += 1;
+        let mut kc = [0i64; CHUNK];
+        let mut i0 = 0;
+        while i0 < N {
+            let n = CHUNK.min(N - i0);
+            env.ld_slice_i64(st.sorted, i0, &mut kc[..n])?;
+            for &k in &kc[..n] {
+                if k < prev {
+                    violations += 1;
+                }
+                prev = k;
             }
-            prev = k;
+            i0 += n;
         }
         Ok(env.ld(st.pv, 0)? + violations as f64 * 1e15)
     }

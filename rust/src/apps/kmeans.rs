@@ -56,15 +56,17 @@ impl Kmeans {
     /// Deterministic synthetic clusters: K Gaussian blobs on a hypercube.
     fn gen_points<E: Env>(&self, env: &mut E, pts: Buf) -> Result<(), Signal> {
         let mut rng = Rng::new(self.seed);
+        let mut row = [0.0f32; DIMS];
         for p in 0..NPOINTS {
             let c = p % K;
-            for d in 0..DIMS {
+            for (d, r) in row.iter_mut().enumerate() {
                 // Overlapping blobs (centers ±1.2, σ=1.0): Lloyd needs a
                 // meaningful number of iterations to settle boundaries.
                 let center = if (c >> (d % 3)) & 1 == 1 { 1.2 } else { -1.2 };
                 let jitter = rng.gauss() as f32 * 1.35;
-                env.stf(pts, p * DIMS + d, center + jitter)?;
+                *r = center + jitter;
             }
+            env.st_slice_f32(pts, p * DIMS, &row)?;
         }
         Ok(())
     }
@@ -117,11 +119,13 @@ impl AppCore for Kmeans {
         // toward the origin, so Lloyd needs a meaningful number of
         // iterations to separate the blobs (and restart from initial
         // centroids costs extra iterations, the paper's kmeans case).
+        let mut row = [0.0f32; DIMS];
         for c in 0..K {
-            for d in 0..DIMS {
-                let v = env.ldf(pts, c * DIMS + d)?;
-                env.stf(cent, c * DIMS + d, 0.25 * v)?;
+            env.ld_slice_f32(pts, c * DIMS, &mut row)?;
+            for v in row.iter_mut() {
+                *v = 0.25 * *v;
             }
+            env.st_slice_f32(cent, c * DIMS, &row)?;
         }
         env.sti(it, 0, 0)?;
         Ok(St { pts, cent, it })
@@ -129,17 +133,24 @@ impl AppCore for Kmeans {
 
     fn step<E: Env>(&self, env: &mut E, st: &St, _it: u64) -> Result<(), Signal> {
         env.region(0)?;
-        // Assignment + accumulation in one pass (native Lloyd iteration).
+        // Assignment + accumulation in one pass (native Lloyd iteration),
+        // through the bulk API: the centroid block is read once (it is
+        // constant during assignment) and each point's feature row once.
+        let mut cent = [[0.0f32; DIMS]; K];
+        for (c, crow) in cent.iter_mut().enumerate() {
+            env.ld_slice_f32(st.cent, c * DIMS, crow)?;
+        }
         let mut sums = [[0.0f32; DIMS]; K];
         let mut counts = [0u32; K];
+        let mut prow = [0.0f32; DIMS];
         for p in 0..NPOINTS {
+            env.ld_slice_f32(st.pts, p * DIMS, &mut prow)?;
             let mut best = f32::INFINITY;
             let mut bc = 0usize;
-            for c in 0..K {
+            for (c, crow) in cent.iter().enumerate() {
                 let mut d2 = 0.0f32;
-                for d in 0..DIMS {
-                    let diff =
-                        env.ldf(st.pts, p * DIMS + d)? - env.ldf(st.cent, c * DIMS + d)?;
+                for (&pv, &cv) in prow.iter().zip(crow) {
+                    let diff = pv - cv;
                     d2 += diff * diff;
                 }
                 if d2 < best {
@@ -148,15 +159,17 @@ impl AppCore for Kmeans {
                 }
             }
             counts[bc] += 1;
-            for d in 0..DIMS {
-                sums[bc][d] += env.ldf(st.pts, p * DIMS + d)?;
+            for (s, &pv) in sums[bc].iter_mut().zip(&prow) {
+                *s += pv;
             }
         }
+        let mut out = [0.0f32; DIMS];
         for c in 0..K {
             if counts[c] > 0 {
-                for d in 0..DIMS {
-                    env.stf(st.cent, c * DIMS + d, sums[c][d] / counts[c] as f32)?;
+                for (o, &s) in out.iter_mut().zip(&sums[c]) {
+                    *o = s / counts[c] as f32;
                 }
+                env.st_slice_f32(st.cent, c * DIMS, &out)?;
             }
         }
         Ok(())

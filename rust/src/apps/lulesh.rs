@@ -26,6 +26,8 @@ const DT: f64 = 1.0e-5;
 /// Artificial-viscosity coefficients.
 const Q1: f64 = 0.06;
 const Q2: f64 = 1.2;
+/// Bulk-API chunk for the element/node sweeps.
+const CHUNK: usize = 512;
 
 pub struct Lulesh {
     pub iters: u64,
@@ -95,17 +97,32 @@ impl AppCore for Lulesh {
         let f = env.alloc(ObjSpec::f64("f", NNODE, false));
         let it = env.alloc(ObjSpec::i64("it", 1, true));
         let h = 1.0 / NELEM as f64;
-        for n in 0..NNODE {
-            env.st(xx, n, n as f64 * h)?;
-            env.st(xd, n, 0.0)?;
-            env.st(f, n, 0.0)?;
+        let mut buf = [0.0f64; CHUNK];
+        let zeros = [0.0f64; CHUNK];
+        let ones = [1.0f64; CHUNK];
+        let mut n0 = 0;
+        while n0 < NNODE {
+            let n = CHUNK.min(NNODE - n0);
+            for (j, b) in buf[..n].iter_mut().enumerate() {
+                *b = (n0 + j) as f64 * h;
+            }
+            env.st_slice(xx, n0, &buf[..n])?;
+            env.st_slice(xd, n0, &zeros[..n])?;
+            env.st_slice(f, n0, &zeros[..n])?;
+            n0 += n;
         }
-        for k in 0..NELEM {
-            env.st(rho, k, 1.0)?;
-            env.st(p, k, 0.0)?;
-            env.st(q, k, 0.0)?;
+        let mut k0 = 0;
+        while k0 < NELEM {
+            let n = CHUNK.min(NELEM - k0);
+            env.st_slice(rho, k0, &ones[..n])?;
+            env.st_slice(p, k0, &zeros[..n])?;
+            env.st_slice(q, k0, &zeros[..n])?;
             // Sedov: energy deposited in the origin element.
-            env.st(e, k, if k == 0 { 5.0 } else { 1e-8 })?;
+            for (j, b) in buf[..n].iter_mut().enumerate() {
+                *b = if k0 + j == 0 { 5.0 } else { 1e-8 };
+            }
+            env.st_slice(e, k0, &buf[..n])?;
+            k0 += n;
         }
         env.sti(it, 0, 0)?;
         Ok(St {
@@ -121,71 +138,128 @@ impl AppCore for Lulesh {
     }
 
     fn step<E: Env>(&self, env: &mut E, st: &St, _it: u64) -> Result<(), Signal> {
+        // The regular element/node sweeps run through the bulk API in
+        // CHUNK-sized runs (staggered-grid reads load CHUNK+1 entries);
+        // per-element arithmetic is unchanged, so the physics matches the
+        // scalar kernel bit for bit. Only the strided R3 sample stays
+        // scalar.
+        let mut ec = [0.0f64; CHUNK];
+        let mut rc = [0.0f64; CHUNK];
+        let mut pc = [0.0f64; CHUNK];
+        let mut qc = [0.0f64; CHUNK];
+        let mut sg = [0.0f64; CHUNK + 1]; // staggered (node) reads
         // R0: EOS + artificial viscosity -> element p, q; nodal forces.
         env.region(0)?;
-        for k in 0..NELEM {
-            let rhok = env.ld(st.rho, k)?;
-            let ek = env.ld(st.e, k)?;
-            if !(rhok.is_finite() && ek.is_finite()) || rhok <= 0.0 {
-                return Err(Signal::Interrupt); // hydro blow-up
+        let mut k0 = 0;
+        while k0 < NELEM {
+            let n = CHUNK.min(NELEM - k0);
+            env.ld_slice(st.rho, k0, &mut rc[..n])?;
+            env.ld_slice(st.e, k0, &mut ec[..n])?;
+            env.ld_slice(st.xd, k0, &mut sg[..n + 1])?;
+            for j in 0..n {
+                let (rhok, ek) = (rc[j], ec[j]);
+                if !(rhok.is_finite() && ek.is_finite()) || rhok <= 0.0 {
+                    return Err(Signal::Interrupt); // hydro blow-up
+                }
+                pc[j] = (GAMMA - 1.0) * rhok * ek.max(0.0);
+                // q: quadratic + linear in compression rate.
+                let dv = sg[j + 1] - sg[j];
+                qc[j] = if dv < 0.0 {
+                    let du = -dv;
+                    rhok * (Q2 * du * du
+                        + Q1 * du * (GAMMA * (GAMMA - 1.0) * ek.max(0.0)).sqrt())
+                } else {
+                    0.0
+                };
             }
-            env.st(st.p, k, (GAMMA - 1.0) * rhok * ek.max(0.0))?;
-            // q: quadratic + linear in compression rate.
-            let dv = env.ld(st.xd, k + 1)? - env.ld(st.xd, k)?;
-            let dx = (env.ld(st.xx, k + 1)? - env.ld(st.xx, k)?).max(1e-12);
-            let qq = if dv < 0.0 {
-                let du = -dv;
-                rhok * (Q2 * du * du + Q1 * du * (GAMMA * (GAMMA - 1.0) * ek.max(0.0)).sqrt())
-            } else {
-                0.0
-            };
-            let _ = dx;
-            env.st(st.q, k, qq)?;
+            env.st_slice(st.p, k0, &pc[..n])?;
+            env.st_slice(st.q, k0, &qc[..n])?;
+            k0 += n;
         }
-        for n in 0..NNODE {
-            let left = if n > 0 {
-                env.ld(st.p, n - 1)? + env.ld(st.q, n - 1)?
-            } else {
-                // reflecting boundary at the origin
-                env.ld(st.p, 0)? + env.ld(st.q, 0)?
-            };
-            let right = if n < NELEM {
-                env.ld(st.p, n)? + env.ld(st.q, n)?
-            } else {
-                0.0 // free surface
-            };
-            env.st(st.f, n, left - right)?;
+        // Nodal forces: the element range [lo, hi) feeding node chunk
+        // [n0, n0 + n) is loaded into staggered (CHUNK+1) buffers — no
+        // per-step heap allocation on the replay path.
+        let mut pg = [0.0f64; CHUNK + 1];
+        let mut qg = [0.0f64; CHUNK + 1];
+        let mut n0 = 0;
+        while n0 < NNODE {
+            let n = CHUNK.min(NNODE - n0);
+            let lo = n0.saturating_sub(1);
+            let hi = (n0 + n).min(NELEM);
+            let m = hi - lo;
+            env.ld_slice(st.p, lo, &mut pg[..m])?;
+            env.ld_slice(st.q, lo, &mut qg[..m])?;
+            for (j, fv) in ec[..n].iter_mut().enumerate() {
+                let node = n0 + j;
+                // reflecting boundary at the origin; free surface at the end
+                let left = if node > 0 {
+                    pg[node - 1 - lo] + qg[node - 1 - lo]
+                } else {
+                    pg[0] + qg[0]
+                };
+                let right = if node < NELEM {
+                    pg[node - lo] + qg[node - lo]
+                } else {
+                    0.0
+                };
+                *fv = left - right;
+            }
+            env.st_slice(st.f, n0, &ec[..n])?;
+            n0 += n;
         }
         // R1: nodal kinematics (leapfrog).
         env.region(1)?;
-        for n in 0..NNODE {
-            let m = 1.0 / NELEM as f64; // lumped nodal mass
-            let a = env.ld(st.f, n)? / m;
-            let v = env.ld(st.xd, n)? + DT * a;
-            let v = if n == 0 { 0.0 } else { v }; // fixed origin
-            env.st(st.xd, n, v)?;
-            let x = env.ld(st.xx, n)? + DT * v;
-            env.st(st.xx, n, x)?;
+        let mut n0 = 0;
+        while n0 < NNODE {
+            let n = CHUNK.min(NNODE - n0);
+            env.ld_slice(st.f, n0, &mut pc[..n])?;
+            env.ld_slice(st.xd, n0, &mut qc[..n])?;
+            env.ld_slice(st.xx, n0, &mut ec[..n])?;
+            for j in 0..n {
+                let m = 1.0 / NELEM as f64; // lumped nodal mass
+                let a = pc[j] / m;
+                let v = qc[j] + DT * a;
+                let v = if n0 + j == 0 { 0.0 } else { v }; // fixed origin
+                qc[j] = v;
+                ec[j] += DT * v;
+            }
+            env.st_slice(st.xd, n0, &qc[..n])?;
+            env.st_slice(st.xx, n0, &ec[..n])?;
+            n0 += n;
         }
         // R2: element updates (volume, density, energy).
         env.region(2)?;
         let h0 = 1.0 / NELEM as f64;
-        for k in 0..NELEM {
-            let dx = env.ld(st.xx, k + 1)? - env.ld(st.xx, k)?;
-            if dx <= 0.0 || !dx.is_finite() {
-                return Err(Signal::Interrupt); // inverted element
+        let mut k0 = 0;
+        while k0 < NELEM {
+            let n = CHUNK.min(NELEM - k0);
+            env.ld_slice(st.xx, k0, &mut sg[..n + 1])?;
+            let mut dxs = [0.0f64; CHUNK];
+            for (j, d) in dxs[..n].iter_mut().enumerate() {
+                *d = sg[j + 1] - sg[j];
+                if *d <= 0.0 || !d.is_finite() {
+                    return Err(Signal::Interrupt); // inverted element
+                }
             }
-            let rho_new = h0 / dx;
-            env.st(st.rho, k, rho_new)?;
-            // Energy update: pdV work (+ viscous heating).
-            let dv = env.ld(st.xd, k + 1)? - env.ld(st.xd, k)?;
-            let pk = env.ld(st.p, k)?;
-            let qk = env.ld(st.q, k)?;
-            let ek = env.ld(st.e, k)?;
-            let de = -(pk + qk) * dv * DT / (env.ld(st.rho, k)? * dx);
-            env.st(st.e, k, (ek + de).max(0.0))?;
+            env.ld_slice(st.xd, k0, &mut sg[..n + 1])?;
+            env.ld_slice(st.p, k0, &mut pc[..n])?;
+            env.ld_slice(st.q, k0, &mut qc[..n])?;
+            env.ld_slice(st.e, k0, &mut ec[..n])?;
+            for j in 0..n {
+                let dx = dxs[j];
+                let rho_new = h0 / dx;
+                rc[j] = rho_new;
+                // Energy update: pdV work (+ viscous heating).
+                let dv = sg[j + 1] - sg[j];
+                let de = -(pc[j] + qc[j]) * dv * DT / (rho_new * dx);
+                ec[j] = (ec[j] + de).max(0.0);
+            }
+            env.st_slice(st.rho, k0, &rc[..n])?;
+            env.st_slice(st.e, k0, &ec[..n])?;
+            k0 += n;
         }
-        // R3: EOS refresh + time-constraint bookkeeping (sampled).
+        // R3: EOS refresh + time-constraint bookkeeping (sampled, strided
+        // — stays scalar).
         env.region(3)?;
         for k in (0..NELEM).step_by(8) {
             let rhok = env.ld(st.rho, k)?;

@@ -133,38 +133,56 @@ impl Mg {
         Ok(())
     }
 
-    /// Trilinear (cell-centered) prolongation: interpolate the coarse
-    /// field at fine node (x,y,z) with 3/4–1/4 weights per dimension,
-    /// periodic. Good enough interpolation for textbook V-cycle rates
-    /// (piecewise-constant prolongation stalls the cycle).
+    /// The 3/4–1/4 parent/neighbor split of fine coordinate `k` on a
+    /// coarse grid with mask `m` (periodic).
     #[inline]
-    fn prolong_at<E: Env>(
+    fn part(k: usize, m: usize) -> (usize, usize) {
+        let p = k / 2;
+        let n = if k % 2 == 1 { (p + 1) & m } else { p.wrapping_sub(1) & m };
+        (p, n)
+    }
+
+    /// Trilinear (cell-centered) prolongation of one full fine x-row at
+    /// fine coordinates (y, z): interpolate the coarse field with 3/4–1/4
+    /// weights per dimension, periodic. Row form of the former
+    /// `prolong_at` — the four coarse x-rows feeding the fine row are
+    /// loaded once through the bulk API, and each element's 8-term
+    /// weighted sum accumulates in the same order as before (bit-identical
+    /// values). Good enough interpolation for textbook V-cycle rates
+    /// (piecewise-constant prolongation stalls the cycle).
+    fn prolong_row<E: Env>(
         env: &mut E,
         zb: Buf,
-        bc: usize,
-        dc: usize,
-        x: usize,
-        y: usize,
-        z: usize,
-    ) -> Result<f32, Signal> {
+        (bc, dc): (usize, usize),
+        (y, z): (usize, usize),
+        rows: &mut [[f32; DIM / 2]; 4],
+        out: &mut [f32],
+    ) -> Result<(), Signal> {
+        debug_assert!(dc <= DIM / 2, "coarse rows fit the scratch width");
         let m = dc - 1;
-        let part = |k: usize| -> (usize, usize) {
-            let p = k / 2;
-            let n = if k % 2 == 1 { (p + 1) & m } else { p.wrapping_sub(1) & m };
-            (p, n)
-        };
-        let (px, nx) = part(x);
-        let (py, ny) = part(y);
-        let (pz, nz) = part(z);
-        let mut s = 0.0f32;
-        for (cx, wx) in [(px, 0.75f32), (nx, 0.25)] {
-            for (cy, wy) in [(py, 0.75f32), (ny, 0.25)] {
-                for (cz, wz) in [(pz, 0.75f32), (nz, 0.25)] {
-                    s += wx * wy * wz * env.ldf(zb, bc + Self::idx(dc, cx, cy, cz))?;
+        let (py, ny) = Self::part(y, m);
+        let (pz, nz) = Self::part(z, m);
+        // rows[0]=(py,pz)  rows[1]=(py,nz)  rows[2]=(ny,pz)  rows[3]=(ny,nz)
+        for (slot, (cy, cz)) in [(py, pz), (py, nz), (ny, pz), (ny, nz)]
+            .into_iter()
+            .enumerate()
+        {
+            env.ld_slice_f32(zb, bc + Self::idx(dc, 0, cy, cz), &mut rows[slot][..dc])?;
+        }
+        for (x, o) in out.iter_mut().enumerate() {
+            let (px, nx) = Self::part(x, m);
+            let mut s = 0.0f32;
+            for (cx, wx) in [(px, 0.75f32), (nx, 0.25f32)] {
+                // (cy outer, cz inner) — the original weight-sum order.
+                for (ybase, wy) in [(0usize, 0.75f32), (2, 0.25f32)] {
+                    for (zoff, wz) in [(0usize, 0.75f32), (1, 0.25f32)] {
+                        s += wx * wy * wz * rows[ybase + zoff][cx];
+                    }
                 }
             }
+            *o = s;
         }
-        Ok(s)
+        Ok(())
     }
 
     /// Residual on the current state, computed from scratch (verification).
@@ -217,14 +235,11 @@ impl AppCore for Mg {
         let v = env.alloc(ObjSpec::f32("v", n, false));
         let z = env.alloc(ObjSpec::f32("z", h, false));
         let it = env.alloc(ObjSpec::i64("it", 1, true));
-        for i in 0..n {
-            env.stf(u, i, 0.0)?;
-            env.stf(v, i, 0.0)?;
-        }
-        for i in 0..h {
-            env.stf(r, i, 0.0)?;
-            env.stf(z, i, 0.0)?;
-        }
+        let zeros = vec![0.0f32; h.max(n)];
+        env.st_slice_f32(u, 0, &zeros[..n])?;
+        env.st_slice_f32(v, 0, &zeros[..n])?;
+        env.st_slice_f32(r, 0, &zeros[..h])?;
+        env.st_slice_f32(z, 0, &zeros[..h])?;
         // NPB-style rhs: ±1 charges at random nodes (zero mean, so the
         // periodic problem is solvable).
         let mut rng = Rng::new(self.seed);
@@ -238,20 +253,46 @@ impl AppCore for Mg {
 
     fn step<E: Env>(&self, env: &mut E, st: &St, _it: u64) -> Result<(), Signal> {
         let d0 = DIM;
+        let m0 = d0 - 1;
+        // Row scratch for the bulk-API sweeps, sized for the finest level —
+        // fixed stack arrays, no per-step heap allocation on the replay
+        // path.
+        let mut uc = [0.0f32; DIM];
+        let mut uym = [0.0f32; DIM];
+        let mut uyp = [0.0f32; DIM];
+        let mut uzm = [0.0f32; DIM];
+        let mut uzp = [0.0f32; DIM];
+        let mut aux = [0.0f32; DIM];
+        let mut out = [0.0f32; DIM];
+        let mut prows = [[0.0f32; DIM / 2]; 4];
 
-        // R0: fine residual r0 = v - A u
+        // R0: fine residual r0 = v - A u. Row form of the 7-pt stencil:
+        // the center row supplies the x±1 taps, the four neighbor rows
+        // the y±1/z±1 taps; per-element arithmetic order is unchanged
+        // (bit-identical to the scalar `apply_a` sweep).
         env.region(0)?;
         for z in 0..d0 {
+            let (zm, zp) = ((z.wrapping_sub(1)) & m0, (z + 1) & m0);
             for y in 0..d0 {
-                for x in 0..d0 {
-                    let a = Self::apply_a(env, st.u, 0, d0, x, y, z)?;
-                    let v = env.ldf(st.v, Self::idx(d0, x, y, z))?;
-                    env.stf(st.r, Self::idx(d0, x, y, z), v - a)?;
+                let (ym, yp) = ((y.wrapping_sub(1)) & m0, (y + 1) & m0);
+                env.ld_slice_f32(st.u, Self::idx(d0, 0, y, z), &mut uc)?;
+                env.ld_slice_f32(st.u, Self::idx(d0, 0, ym, z), &mut uym)?;
+                env.ld_slice_f32(st.u, Self::idx(d0, 0, yp, z), &mut uyp)?;
+                env.ld_slice_f32(st.u, Self::idx(d0, 0, y, zm), &mut uzm)?;
+                env.ld_slice_f32(st.u, Self::idx(d0, 0, y, zp), &mut uzp)?;
+                env.ld_slice_f32(st.v, Self::idx(d0, 0, y, z), &mut aux)?;
+                for (x, o) in out.iter_mut().enumerate() {
+                    let (xm, xp) = ((x.wrapping_sub(1)) & m0, (x + 1) & m0);
+                    let a =
+                        6.0 * uc[x] - (uc[xm] + uc[xp] + uym[x] + uyp[x] + uzm[x] + uzp[x]);
+                    *o = aux[x] - a;
                 }
+                env.st_slice_f32(st.r, Self::idx(d0, 0, y, z), &out)?;
             }
         }
 
-        // R1: restrict residuals down the hierarchy (8-child average)
+        // R1: restrict residuals down the hierarchy (8-child average),
+        // two fine row-pairs in, one coarse row out.
         env.region(1)?;
         for l in 1..LEVELS {
             let df = DIM >> (l - 1);
@@ -260,37 +301,60 @@ impl AppCore for Mg {
             let bc = Self::off(l);
             for z in 0..dc {
                 for y in 0..dc {
-                    for x in 0..dc {
+                    env.ld_slice_f32(st.r, bf + Self::idx(df, 0, 2 * y, 2 * z), &mut uc[..df])?;
+                    env.ld_slice_f32(
+                        st.r,
+                        bf + Self::idx(df, 0, 2 * y + 1, 2 * z),
+                        &mut uym[..df],
+                    )?;
+                    env.ld_slice_f32(
+                        st.r,
+                        bf + Self::idx(df, 0, 2 * y, 2 * z + 1),
+                        &mut uyp[..df],
+                    )?;
+                    env.ld_slice_f32(
+                        st.r,
+                        bf + Self::idx(df, 0, 2 * y + 1, 2 * z + 1),
+                        &mut uzm[..df],
+                    )?;
+                    for (x, o) in out[..dc].iter_mut().enumerate() {
+                        // (dz, dy, dx) accumulation order of the scalar loop.
                         let mut s = 0.0f32;
-                        for dz in 0..2 {
-                            for dy in 0..2 {
-                                for dx in 0..2 {
-                                    s += env.ldf(
-                                        st.r,
-                                        bf + Self::idx(df, 2 * x + dx, 2 * y + dy, 2 * z + dz),
-                                    )?;
-                                }
-                            }
-                        }
-                        env.stf(st.r, bc + Self::idx(dc, x, y, z), s * 0.125)?;
+                        s += uc[2 * x];
+                        s += uc[2 * x + 1];
+                        s += uym[2 * x];
+                        s += uym[2 * x + 1];
+                        s += uyp[2 * x];
+                        s += uyp[2 * x + 1];
+                        s += uzm[2 * x];
+                        s += uzm[2 * x + 1];
+                        *o = s * 0.125;
                     }
+                    env.st_slice_f32(st.r, bc + Self::idx(dc, 0, y, z), &out[..dc])?;
                 }
             }
         }
 
         // R2: coarse corrections — at each level solve A·z ≈ r with a few
         // Jacobi refinements seeded by the prolonged next-coarser
-        // correction (a genuine V-cycle upstroke).
+        // correction (a genuine V-cycle upstroke). The Jacobi sweeps stay
+        // scalar: they update `z` in place with Gauss–Seidel-style
+        // dependencies that a row preload would alter.
         env.region(2)?;
         {
-            // coarsest: z = ω r, then refine
+            // coarsest: z = ω r, then refine (one contiguous level range)
             let l = LEVELS - 1;
             let dc = DIM >> l;
             let bc = Self::off(l);
-            for i in 0..dc * dc * dc {
-                let rr = env.ldf(st.r, bc + i)?;
-                env.stf(st.z, bc + i, OMEGA * rr)?;
+            let nc = dc * dc * dc;
+            let mut cr =
+                [0.0f32; (DIM >> (LEVELS - 1)) * (DIM >> (LEVELS - 1)) * (DIM >> (LEVELS - 1))];
+            debug_assert_eq!(nc, cr.len());
+            env.ld_slice_f32(st.r, bc, &mut cr)?;
+            for rr in cr.iter_mut() {
+                *rr = OMEGA * *rr;
             }
+            env.st_slice_f32(st.z, bc, &cr)?;
             Self::jacobi_refine(env, st, l, 3)?;
             // walk up to level 1
             for l in (1..LEVELS - 1).rev() {
@@ -300,10 +364,8 @@ impl AppCore for Mg {
                 let dc = df / 2;
                 for z in 0..df {
                     for y in 0..df {
-                        for x in 0..df {
-                            let zc = Self::prolong_at(env, st.z, bc, dc, x, y, z)?;
-                            env.stf(st.z, bf + Self::idx(df, x, y, z), zc)?;
-                        }
+                        Self::prolong_row(env, st.z, (bc, dc), (y, z), &mut prows, &mut out[..df])?;
+                        env.st_slice_f32(st.z, bf + Self::idx(df, 0, y, z), &out[..df])?;
                     }
                 }
                 Self::jacobi_refine(env, st, l, 2)?;
@@ -318,16 +380,19 @@ impl AppCore for Mg {
             let d1 = DIM / 2;
             for z in 0..d0 {
                 for y in 0..d0 {
-                    for x in 0..d0 {
-                        let i = Self::idx(d0, x, y, z);
-                        let zc = Self::prolong_at(env, st.z, b1, d1, x, y, z)?;
-                        let r0 = env.ldf(st.r, i)?;
-                        let u0 = env.ldf(st.u, i)?;
-                        env.stf(st.u, i, u0 + zc + OMEGA * r0)?;
+                    let i = Self::idx(d0, 0, y, z);
+                    Self::prolong_row(env, st.z, (b1, d1), (y, z), &mut prows, &mut out)?;
+                    env.ld_slice_f32(st.r, i, &mut aux)?;
+                    env.ld_slice_f32(st.u, i, &mut uc)?;
+                    for ((u0, &zc), &r0) in uc.iter_mut().zip(&out).zip(&aux) {
+                        *u0 = *u0 + zc + OMEGA * r0;
                     }
+                    env.st_slice_f32(st.u, i, &uc)?;
                 }
             }
-            // Fine post-smoothing: u += ω (v − A u).
+            // Fine post-smoothing: u += ω (v − A u). Stays scalar — it
+            // reads its own in-flight updates (x−1/y−1/z−1 taps of the
+            // current sweep), which row preloading would change.
             for z in 0..d0 {
                 for y in 0..d0 {
                     for x in 0..d0 {

@@ -4,14 +4,20 @@
 //! time-budgeted iteration, mean / p50 / p95 and optional throughput,
 //! printed in a stable single-line-per-benchmark format that the §Perf
 //! logs in EXPERIMENTS.md quote directly.
+//!
+//! Every measurement is also recorded on the `Bench`, and
+//! [`Bench::write_json`] dumps the whole group as machine-readable JSON
+//! (hand-rolled — the crate is dependency-free) so CI can persist bench
+//! results as artifacts (`BENCH_campaign.json` at the repo root).
 
 use std::time::{Duration, Instant};
 
-/// One benchmark group printer.
+/// One benchmark group printer + recorder.
 pub struct Bench {
     name: String,
     warmup: Duration,
     budget: Duration,
+    records: Vec<CaseRecord>,
 }
 
 /// Result of one measurement.
@@ -21,6 +27,21 @@ pub struct Measurement {
     pub mean: Duration,
     pub p50: Duration,
     pub p95: Duration,
+}
+
+/// One recorded case, as serialized into the JSON report.
+#[derive(Clone, Debug)]
+pub struct CaseRecord {
+    pub case: String,
+    pub iters: u64,
+    pub mean_ns: u128,
+    pub p50_ns: u128,
+    pub p95_ns: u128,
+    /// Total wall-clock spent inside the measured closure.
+    pub wall_ns: u128,
+    /// Units (e.g. simulated memory ops) per second, when the case was
+    /// measured with [`Bench::run_throughput`].
+    pub units_per_s: Option<f64>,
 }
 
 impl Bench {
@@ -34,11 +55,36 @@ impl Bench {
             name: name.to_string(),
             warmup: Duration::from_millis(ms / 4),
             budget: Duration::from_millis(ms),
+            records: Vec::new(),
         }
     }
 
+    fn summarize(samples: &mut [Duration]) -> (Measurement, Duration) {
+        samples.sort_unstable();
+        let total: Duration = samples.iter().sum();
+        let m = Measurement {
+            iters: samples.len() as u64,
+            mean: total / samples.len() as u32,
+            p50: samples[samples.len() / 2],
+            p95: samples[(samples.len() * 95 / 100).min(samples.len() - 1)],
+        };
+        (m, total)
+    }
+
+    fn record(&mut self, case: &str, m: Measurement, wall: Duration, units_per_s: Option<f64>) {
+        self.records.push(CaseRecord {
+            case: case.to_string(),
+            iters: m.iters,
+            mean_ns: m.mean.as_nanos(),
+            p50_ns: m.p50.as_nanos(),
+            p95_ns: m.p95.as_nanos(),
+            wall_ns: wall.as_nanos(),
+            units_per_s,
+        });
+    }
+
     /// Measure `f` repeatedly within the time budget.
-    pub fn run<F: FnMut()>(&self, case: &str, mut f: F) -> Measurement {
+    pub fn run<F: FnMut()>(&mut self, case: &str, mut f: F) -> Measurement {
         // Warmup.
         let t0 = Instant::now();
         let mut warm_iters = 0u64;
@@ -57,14 +103,7 @@ impl Bench {
                 break;
             }
         }
-        samples.sort_unstable();
-        let total: Duration = samples.iter().sum();
-        let m = Measurement {
-            iters: samples.len() as u64,
-            mean: total / samples.len() as u32,
-            p50: samples[samples.len() / 2],
-            p95: samples[(samples.len() * 95 / 100).min(samples.len() - 1)],
-        };
+        let (m, wall) = Self::summarize(&mut samples);
         println!(
             "bench {:<40} {:>8} iters  mean {:>12?}  p50 {:>12?}  p95 {:>12?}",
             format!("{}/{}", self.name, case),
@@ -73,11 +112,12 @@ impl Bench {
             m.p50,
             m.p95
         );
+        self.record(case, m, wall, None);
         m
     }
 
     /// Measure and report a throughput in "units/s" (e.g. simulated ops).
-    pub fn run_throughput<F: FnMut() -> u64>(&self, case: &str, mut f: F) -> Measurement {
+    pub fn run_throughput<F: FnMut() -> u64>(&mut self, case: &str, mut f: F) -> Measurement {
         let mut units_total = 0u64;
         let t0 = Instant::now();
         let mut warm = 0;
@@ -95,14 +135,7 @@ impl Bench {
                 break;
             }
         }
-        let wall: Duration = samples.iter().sum();
-        samples.sort_unstable();
-        let m = Measurement {
-            iters: samples.len() as u64,
-            mean: wall / samples.len() as u32,
-            p50: samples[samples.len() / 2],
-            p95: samples[(samples.len() * 95 / 100).min(samples.len() - 1)],
-        };
+        let (m, wall) = Self::summarize(&mut samples);
         let rate = units_total as f64 / wall.as_secs_f64();
         println!(
             "bench {:<40} {:>8} iters  mean {:>12?}  throughput {:>10.1}M units/s",
@@ -111,8 +144,64 @@ impl Bench {
             m.mean,
             rate / 1e6
         );
+        self.record(case, m, wall, Some(rate));
         m
     }
+
+    /// All cases recorded so far.
+    pub fn records(&self) -> &[CaseRecord] {
+        &self.records
+    }
+
+    /// Serialize every recorded case as a JSON document.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"group\": \"{}\",\n", escape(&self.name)));
+        s.push_str("  \"cases\": [\n");
+        for (i, r) in self.records.iter().enumerate() {
+            let units = match r.units_per_s {
+                Some(u) if u.is_finite() => format!("{u:.1}"),
+                _ => "null".to_string(),
+            };
+            s.push_str(&format!(
+                "    {{\"case\": \"{}\", \"iters\": {}, \"mean_ns\": {}, \"p50_ns\": {}, \
+                 \"p95_ns\": {}, \"wall_ns\": {}, \"units_per_s\": {}}}{}\n",
+                escape(&r.case),
+                r.iters,
+                r.mean_ns,
+                r.p50_ns,
+                r.p95_ns,
+                r.wall_ns,
+                units,
+                if i + 1 == self.records.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Write the JSON report (machine-readable op/s + wall-clock per
+    /// case). Bench binaries run with the package root as CWD, so a bare
+    /// filename lands at the repo root.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+/// Minimal JSON string escaping (case names are plain ASCII, but stay
+/// correct anyway).
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -122,11 +211,39 @@ mod tests {
     #[test]
     fn measures_something() {
         std::env::set_var("EC_BENCH_MS", "40");
-        let b = Bench::new("selftest");
+        let mut b = Bench::new("selftest");
         let m = b.run("noop-ish", || {
             std::hint::black_box((0..1000).sum::<u64>());
         });
         assert!(m.iters > 0);
         assert!(m.p50 <= m.p95);
+    }
+
+    #[test]
+    fn json_report_is_well_formed() {
+        std::env::set_var("EC_BENCH_MS", "40");
+        let mut b = Bench::new("selftest");
+        b.run("plain", || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        b.run_throughput("units", || {
+            std::hint::black_box((0..100).sum::<u64>());
+            100
+        });
+        let j = b.to_json();
+        assert!(j.contains("\"group\": \"selftest\""));
+        assert!(j.contains("\"case\": \"plain\""));
+        assert!(j.contains("\"units_per_s\": null"));
+        assert!(j.contains("\"wall_ns\": "));
+        assert_eq!(b.records().len(), 2);
+        // Balanced braces/brackets (cheap well-formedness check without a
+        // JSON parser in the dependency-free crate).
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn escape_handles_specials() {
+        assert_eq!(escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
     }
 }

@@ -24,7 +24,12 @@
 //! [`ShardedCampaign`] does exactly that over `std::thread::scope`; the
 //! per-worker state is owned ([`crate::sim::CrashObserver`] structs, one
 //! engine per worker from a factory), so nothing is shared mutably and no
-//! `Rc<RefCell<…>>` appears anywhere on the path.
+//! `Rc<RefCell<…>>` appears anywhere on the path. Workers also stop
+//! *early*: a batch is a contiguous slice of the sorted draw, so a worker
+//! halts right after its final crash point fires instead of replaying the
+//! rest of the program; only the last batch's worker runs to completion
+//! and supplies the campaign-wide aggregates (DESIGN.md §Perf "early-stop
+//! workers").
 //!
 //! ### Determinism guarantee
 //!
@@ -42,7 +47,7 @@
 
 use crate::apps::{CrashApp, Golden, Response, Snapshot};
 use crate::runtime::{NativeEngine, StepEngine};
-use crate::sim::{CrashInfo, CrashObserver, HierStats, ObjId, SimConfig, SimEnv};
+use crate::sim::{CrashInfo, CrashObserver, HierStats, ObjId, Signal, SimConfig, SimEnv};
 use crate::util::rng::Rng;
 
 use super::plan::PersistPlan;
@@ -124,27 +129,39 @@ impl CampaignResult {
 
     /// Recomputability of crashes that landed in region `k` (`c_k`).
     /// Returns `None` when no crash landed there (insufficient samples).
+    /// Single pass, no intermediate collect — `report/` calls this per
+    /// region per figure.
     pub fn region_recomputability(&self, k: usize) -> Option<f64> {
-        let hits: Vec<&TestRecord> = self.records.iter().filter(|r| r.region == k).collect();
-        if hits.is_empty() {
-            return None;
+        let (mut hits, mut ok) = (0usize, 0usize);
+        for r in &self.records {
+            if r.region == k {
+                hits += 1;
+                if r.response.recomputes() {
+                    ok += 1;
+                }
+            }
         }
-        Some(hits.iter().filter(|r| r.response.recomputes()).count() as f64 / hits.len() as f64)
+        if hits == 0 {
+            None
+        } else {
+            Some(ok as f64 / hits as f64)
+        }
     }
 
     /// Mean extra iterations over successful-with-overhead tests (Table 1
-    /// "Ave. # of extra iter.").
+    /// "Ave. # of extra iter."). Single pass, no intermediate collect.
     pub fn mean_extra_iters(&self) -> Option<f64> {
-        let s2: Vec<u64> = self
-            .records
-            .iter()
-            .filter(|r| r.response == Response::S2)
-            .map(|r| r.extra_iters)
-            .collect();
-        if s2.is_empty() {
+        let (mut n, mut sum) = (0u64, 0u64);
+        for r in &self.records {
+            if r.response == Response::S2 {
+                n += 1;
+                sum += r.extra_iters;
+            }
+        }
+        if n == 0 {
             None
         } else {
-            Some(s2.iter().sum::<u64>() as f64 / s2.len() as f64)
+            Some(sum as f64 / n as f64)
         }
     }
 
@@ -347,7 +364,11 @@ struct EnvCore {
 }
 
 impl EnvCore {
-    fn of(env: &SimEnv) -> EnvCore {
+    fn of(env: &mut SimEnv) -> EnvCore {
+        // Drain the pending access-cycle accumulator (a halted early-stop
+        // run leaves cycles pending; a completed run ends on `iter_end`,
+        // which already drained it).
+        env.sync_clock();
         EnvCore {
             ops_total: env.ops(),
             ops_main_start: env.main_start_ops(),
@@ -375,7 +396,7 @@ impl Campaign {
     /// return the (records-empty) result — the timing/write side of the
     /// campaign, used by Table 4 / Fig. 7-9 and the `l_k` estimates.
     pub fn profile(&self, app: &dyn CrashApp, plan: &PersistPlan) -> CampaignResult {
-        self.pass(app, plan, Vec::new(), None)
+        self.pass(app, plan, Vec::new(), None, None)
     }
 
     /// Full campaign: profile + crash harvesting + inline classification.
@@ -390,7 +411,7 @@ impl Campaign {
         let points =
             draw_crash_points(self.seed, self.tests, profile.ops_main_start, profile.ops_total);
         // Pass 2: harvest.
-        let mut res = self.pass(app, plan, points, Some(engine));
+        let mut res = self.pass(app, plan, points, Some(engine), None);
         res.ops_main_start = profile.ops_main_start;
         res
     }
@@ -399,12 +420,22 @@ impl Campaign {
     /// (sorted) `points` batch is harvested and classified inline; without
     /// one this is a pure profile pass. This is the unit of work a shard
     /// worker executes.
+    ///
+    /// `halt_at` is the early-stop hook (DESIGN.md §Perf "early-stop
+    /// workers"): when set, the replay raises `Signal::Crash` the moment
+    /// op `halt_at` is reached and the pass returns whatever was harvested
+    /// so far. Callers that set it (shard workers pass
+    /// `last_point + 1`) get exact records for every point `< halt_at` but
+    /// *truncated* aggregates (`cycles`, `stats`, `ops_total`, …) — the
+    /// sharded merge therefore takes aggregates only from its designated
+    /// full-run worker.
     pub(crate) fn pass(
         &self,
         app: &dyn CrashApp,
         plan: &PersistPlan,
         points: Vec<u64>,
         engine: Option<&mut dyn StepEngine>,
+        halt_at: Option<u64>,
     ) -> CampaignResult {
         let num_regions = app.regions().len();
 
@@ -449,8 +480,15 @@ impl Campaign {
                     let mut env = SimEnv::new(&self.cfg, num_regions);
                     env.set_hooks(hooks);
                     env.set_crash_points(points, &mut harvest);
-                    app.run_sim(&mut env).expect("campaign run must complete");
-                    core = EnvCore::of(&env);
+                    env.halt_at = halt_at;
+                    match app.run_sim(&mut env) {
+                        Ok(()) => {}
+                        // Requested early stop: every batch point fired
+                        // before the halt op by construction.
+                        Err(Signal::Crash) if halt_at.is_some() => {}
+                        Err(s) => panic!("campaign run must complete, got {s:?}"),
+                    }
+                    core = EnvCore::of(&mut env);
                 } // env dropped: the observer borrow ends here
                 (core, harvest.records)
             }
@@ -458,7 +496,7 @@ impl Campaign {
                 let mut env = SimEnv::new(&self.cfg, num_regions);
                 env.set_hooks(hooks);
                 app.run_sim(&mut env).expect("profile run must complete");
-                (EnvCore::of(&env), Vec::new())
+                (EnvCore::of(&mut env), Vec::new())
             }
         };
 
@@ -535,6 +573,20 @@ impl ShardedCampaign {
 
     /// Run with one engine per worker, built by `make_engine`. The factory
     /// runs on the worker threads, hence `Sync`.
+    ///
+    /// ### Early-stop schedule (DESIGN.md §Perf "early-stop workers")
+    ///
+    /// Batches are contiguous slices of one sorted draw, so a worker
+    /// harvesting batch `s` observes nothing after its own last crash
+    /// point: it installs `halt_at = last_point(s) + 1` and stops
+    /// replaying the moment its final point has fired, instead of paying
+    /// for the rest of the instrumented execution. Exactly one designated
+    /// full-run worker — the **last** batch, whose points extend furthest
+    /// anyway — replays to completion and supplies the campaign-wide
+    /// aggregates (`cycles`, `region_cycles`, `stats`, `persist_*`,
+    /// `ops_total`). Records stay bit-identical to the sequential
+    /// [`Campaign::run`]: early stopping only removes replay *after* a
+    /// worker's final observation.
     pub fn run_with(
         &self,
         app: &dyn CrashApp,
@@ -547,13 +599,14 @@ impl ShardedCampaign {
         let points =
             draw_crash_points(c.seed, c.tests, profile.ops_main_start, profile.ops_total);
         let mut batches = partition_points(&points, shards);
-        // An empty batch would still cost a worker a full instrumented
-        // replay that harvests nothing (reachable when shards > points);
-        // drop them, keeping one pass alive for the aggregate side.
+        // An empty batch would still cost a worker a (partial) replay that
+        // harvests nothing (reachable when shards > points); drop them,
+        // keeping one pass alive for the aggregate side.
         batches.retain(|b| !b.is_empty());
         if batches.is_empty() {
             batches.push(Vec::new());
         }
+        let n_batches = batches.len();
 
         // Front-load the golden run before spawning: `OnceLock` already
         // guarantees exactly-once initialization (racers block, never
@@ -564,10 +617,18 @@ impl ShardedCampaign {
         let mut results: Vec<CampaignResult> = std::thread::scope(|scope| {
             let handles: Vec<_> = batches
                 .into_iter()
-                .map(|batch| {
+                .enumerate()
+                .map(|(s, batch)| {
+                    // Last batch = designated full-run worker (aggregates);
+                    // everyone else stops right after their final point.
+                    let halt = if s + 1 == n_batches {
+                        None
+                    } else {
+                        batch.last().map(|&p| p + 1)
+                    };
                     scope.spawn(move || {
                         let mut engine = make_engine();
-                        c.pass(app, plan, batch, Some(engine.as_mut()))
+                        c.pass(app, plan, batch, Some(engine.as_mut()), halt)
                     })
                 })
                 .collect();
@@ -577,16 +638,23 @@ impl ShardedCampaign {
                 .collect()
         });
 
-        // Every worker replayed the identical deterministic execution, so
-        // the aggregate side of each result is the same; merging is just
-        // concatenating the record batches in shard order (contiguous
-        // slices of one sorted draw).
-        let mut merged = results.remove(0);
+        // Aggregates come from the designated full-run worker (the last
+        // one); records are the shard batches concatenated in shard order
+        // — contiguous slices of one sorted draw, so the result is the
+        // sequential record list bit-for-bit.
+        let mut merged = results.pop().expect("at least one worker");
+        let tail = std::mem::take(&mut merged.records);
+        let mut records =
+            Vec::with_capacity(results.iter().map(|r| r.records.len()).sum::<usize>() + tail.len());
         for r in results {
-            debug_assert_eq!(r.ops_total, merged.ops_total, "shard replay diverged");
-            debug_assert_eq!(r.cycles, merged.cycles, "shard replay diverged");
-            merged.records.extend(r.records);
+            records.extend(r.records);
         }
+        records.extend(tail);
+        debug_assert!(
+            records.windows(2).all(|w| w[0].op <= w[1].op),
+            "shard record batches must concatenate in sorted op order"
+        );
+        merged.records = records;
         merged.ops_main_start = profile.ops_main_start;
         merged
     }

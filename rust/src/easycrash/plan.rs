@@ -3,7 +3,7 @@
 //! decision process, and the input the user's `cache_block_flush` calls
 //! encode in Fig. 2a).
 
-use crate::sim::{FlushHooks, FlushKind, Registry};
+use crate::sim::{FlushEntry, FlushHooks, FlushKind, Registry};
 
 /// One planned persistence site.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -92,8 +92,11 @@ impl PersistPlan {
         v
     }
 
-    /// Resolve against a registry into the env's hook table. Unknown
-    /// object names are an error (they indicate a plan/app mismatch).
+    /// Resolve against a registry into the env's hook table. Each entry's
+    /// `(base, bytes)` is looked up here, **once** — firing a hook later
+    /// is lookup-, clone- and allocation-free (DESIGN.md §Perf "flush
+    /// hooks"). Unknown object names are an error (they indicate a
+    /// plan/app mismatch).
     pub fn resolve(&self, reg: &Registry, num_regions: usize) -> Result<FlushHooks, String> {
         let mut hooks = FlushHooks::none(num_regions);
         hooks.kind = if self.clwb {
@@ -101,7 +104,9 @@ impl PersistPlan {
         } else {
             FlushKind::ClflushOpt
         };
-        hooks.iter_obj = reg.by_name("it");
+        hooks.iter_hook = reg
+            .by_name("it")
+            .map(|id| FlushEntry::for_object(reg.get(id), 1));
         for e in &self.entries {
             let id = reg
                 .by_name(&e.object)
@@ -115,7 +120,7 @@ impl PersistPlan {
             if e.every_x == 0 {
                 return Err("every_x must be >= 1".into());
             }
-            hooks.at_region_end[e.region].push((id, e.every_x));
+            hooks.at_region_end[e.region].push(FlushEntry::for_object(reg.get(id), e.every_x));
         }
         Ok(hooks)
     }
@@ -140,7 +145,7 @@ mod tests {
         let hooks = plan.resolve(&reg(), 4).unwrap();
         assert_eq!(hooks.at_region_end[3].len(), 2);
         assert!(hooks.at_region_end[0].is_empty());
-        assert!(hooks.iter_obj.is_some());
+        assert!(hooks.iter_hook.is_some());
         assert_eq!(hooks.kind, FlushKind::ClflushOpt);
     }
 
@@ -168,7 +173,7 @@ mod tests {
     #[test]
     fn none_plan_still_bookmarks_iterator() {
         let hooks = PersistPlan::none().resolve(&reg(), 2).unwrap();
-        assert!(hooks.iter_obj.is_some());
+        assert!(hooks.iter_hook.is_some());
         assert!(hooks.at_region_end.iter().all(|v| v.is_empty()));
     }
 }

@@ -117,7 +117,11 @@ impl Workflow {
     /// Run the full workflow with every campaign sharded across `shards`
     /// worker threads (one engine per worker from `make_engine`). Results
     /// are bit-identical to [`Workflow::run`] under the same seed — the
-    /// campaigns inherit `ShardedCampaign`'s determinism guarantee.
+    /// campaigns inherit `ShardedCampaign`'s determinism guarantee, and
+    /// its early-stop schedule: every non-final shard worker replays only
+    /// up to its own last crash point, so the workflow's four campaigns
+    /// each cost roughly one full replay plus partial replays
+    /// (DESIGN.md §Perf "early-stop workers").
     pub fn run_sharded(
         &self,
         app: &dyn CrashApp,

@@ -58,6 +58,9 @@ impl Cache {
         let b = self.base(set);
         let lru = &mut self.lru[b..b + self.ways];
         let old = lru[way];
+        if old == 0 {
+            return; // already MRU: the rank shift below is a no-op
+        }
         for l in lru.iter_mut() {
             if *l < old {
                 *l += 1;

@@ -37,6 +37,12 @@ pub struct Buf {
     pub id: ObjId,
     pub len: u32,
     pub ty: Ty,
+    /// Resolved base of the object, cached at `alloc` time so the access
+    /// hot path never consults the registry (see DESIGN.md §Perf). The
+    /// unit is env-specific: a byte address in [`SimEnv`]'s simulated
+    /// address space, an element offset into the typed arena in
+    /// [`RawEnv`]. A `Buf` is only meaningful for the env that minted it.
+    pub base: usize,
 }
 
 /// The access interface benchmarks are written against.
@@ -59,10 +65,60 @@ pub trait Env {
     /// and persists the loop-iterator bookmark (paper footnote 3).
     fn iter_end(&mut self, it: u64) -> Result<(), Signal>;
 
-    /// Bulk helper: read `len` f64s starting at `i` into `out`.
+    // ----- bulk access API ------------------------------------------------
+    //
+    // Each `*_slice` call is semantically *exactly* `out.len()` scalar
+    // accesses to consecutive elements, in ascending order: same op
+    // indices, same crash-point firing, same cache events, same modeled
+    // cycles (asserted bit-for-bit by rust/tests/fastpath_parity.rs).
+    // `SimEnv` overrides them to pay the cache walk once per *line*
+    // instead of once per element; `RawEnv` overrides them with plain
+    // slice copies. The defaults below keep any other impl correct.
+
+    /// Bulk helper: read `out.len()` f64s starting at element `i` into `out`.
     fn ld_slice(&mut self, b: Buf, i: usize, out: &mut [f64]) -> Result<(), Signal> {
         for (k, o) in out.iter_mut().enumerate() {
             *o = self.ld(b, i + k)?;
+        }
+        Ok(())
+    }
+
+    /// Bulk helper: write `vals` to consecutive f64 elements starting at `i`.
+    fn st_slice(&mut self, b: Buf, i: usize, vals: &[f64]) -> Result<(), Signal> {
+        for (k, &v) in vals.iter().enumerate() {
+            self.st(b, i + k, v)?;
+        }
+        Ok(())
+    }
+
+    /// Bulk helper: read `out.len()` f32s starting at element `i` into `out`.
+    fn ld_slice_f32(&mut self, b: Buf, i: usize, out: &mut [f32]) -> Result<(), Signal> {
+        for (k, o) in out.iter_mut().enumerate() {
+            *o = self.ldf(b, i + k)?;
+        }
+        Ok(())
+    }
+
+    /// Bulk helper: write `vals` to consecutive f32 elements starting at `i`.
+    fn st_slice_f32(&mut self, b: Buf, i: usize, vals: &[f32]) -> Result<(), Signal> {
+        for (k, &v) in vals.iter().enumerate() {
+            self.stf(b, i + k, v)?;
+        }
+        Ok(())
+    }
+
+    /// Bulk helper: read `out.len()` i64s starting at element `i` into `out`.
+    fn ld_slice_i64(&mut self, b: Buf, i: usize, out: &mut [i64]) -> Result<(), Signal> {
+        for (k, o) in out.iter_mut().enumerate() {
+            *o = self.ldi(b, i + k)?;
+        }
+        Ok(())
+    }
+
+    /// Bulk helper: write `vals` to consecutive i64 elements starting at `i`.
+    fn st_slice_i64(&mut self, b: Buf, i: usize, vals: &[i64]) -> Result<(), Signal> {
+        for (k, &v) in vals.iter().enumerate() {
+            self.sti(b, i + k, v)?;
         }
         Ok(())
     }
@@ -72,15 +128,41 @@ pub trait Env {
 // Persistence plan hooks (resolved form used by SimEnv)
 // ---------------------------------------------------------------------------
 
-/// A resolved persistence plan: which objects to flush at the end of which
-/// region, every how many main-loop iterations.
+/// One fully-resolved flush site: the `(base, bytes)` of the target object
+/// are looked up **once**, when the plan is resolved against the registry,
+/// so firing a hook is a straight `flush_range` — no registry lookup, no
+/// `ObjSpec` clone, no allocation on the per-region-end path (DESIGN.md
+/// §Perf "flush hooks").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FlushEntry {
+    /// Byte address of the object base in the simulated address space.
+    pub base: usize,
+    /// Object size in bytes.
+    pub bytes: usize,
+    /// Persist every `x` main-loop iterations (Eq. 5's frequency).
+    pub every_x: u32,
+}
+
+impl FlushEntry {
+    /// Resolve an entry from a registered object.
+    pub fn for_object(obj: &super::objects::Object, every_x: u32) -> FlushEntry {
+        FlushEntry {
+            base: obj.base,
+            bytes: obj.spec.bytes(),
+            every_x,
+        }
+    }
+}
+
+/// A resolved persistence plan: which address ranges to flush at the end
+/// of which region, every how many main-loop iterations.
 #[derive(Clone, Debug)]
 pub struct FlushHooks {
-    /// `at_region_end[k]` = list of `(object, every_x)` to flush when
-    /// region `k` ends.
-    pub at_region_end: Vec<Vec<(ObjId, u32)>>,
-    /// The loop-iterator bookmark object, flushed at every iteration end.
-    pub iter_obj: Option<ObjId>,
+    /// `at_region_end[k]` = flush sites fired when region `k` ends.
+    pub at_region_end: Vec<Vec<FlushEntry>>,
+    /// The loop-iterator bookmark object, flushed at every iteration end
+    /// (`every_x` is ignored — the bookmark persists unconditionally).
+    pub iter_hook: Option<FlushEntry>,
     pub kind: FlushKind,
 }
 
@@ -88,7 +170,7 @@ impl FlushHooks {
     pub fn none(num_regions: usize) -> FlushHooks {
         FlushHooks {
             at_region_end: vec![Vec::new(); num_regions],
-            iter_obj: None,
+            iter_hook: None,
             kind: FlushKind::ClflushOpt,
         }
     }
@@ -124,7 +206,111 @@ pub trait CrashObserver {
 // SimEnv
 // ---------------------------------------------------------------------------
 
+/// Shared body of the `SimEnv` bulk accessors (DESIGN.md §Perf "bulk
+/// API"). Semantically *exactly* `n` consecutive scalar accesses — same op
+/// indices, crash firing, cache events and cycle bits — but the
+/// set-associative walk is paid once per cache *line*: the first element
+/// of each line-run does a real [`Hierarchy::access`]; the rest are
+/// provably L1 hits on the just-touched MRU line, so their counters and
+/// deterministic hit cost are applied directly. Any run containing a
+/// crash point or the halt op falls back to the scalar path one element
+/// at a time, preserving exact per-element semantics.
+macro_rules! sim_bulk {
+    (ld, $self:ident, $b:ident, $i:ident, $buf:ident, $esz:expr, $scalar:ident, $mem_ld:ident) => {{
+        if $i >= $b.len as usize || $buf.len() > $b.len as usize - $i {
+            // Out-of-range tail: scalar loop reproduces the exact
+            // in-range-prefix-then-Interrupt behavior.
+            for (k, o) in $buf.iter_mut().enumerate() {
+                *o = $self.$scalar($b, $i + k)?;
+            }
+            return Ok(());
+        }
+        let hit_cost = $self.hier.costs.cpu_op + $self.hier.costs.l1_hit;
+        let mut k = 0usize;
+        while k < $buf.len() {
+            let addr = $b.base + ($i + k) * $esz;
+            // Elements of [k, k_end) share addr's cache line.
+            let line_end = (addr | (super::LINE - 1)) + 1;
+            let k_end = (k + (line_end - addr) / $esz).min($buf.len());
+            let run = (k_end - k) as u64;
+            let clear_of_crash = $self.ops + run < $self.next_crash;
+            let clear_of_halt = match $self.halt_at {
+                Some(h) => $self.ops + run < h,
+                None => true,
+            };
+            if !(clear_of_crash && clear_of_halt) {
+                // A crash point or the halt op lands inside this run:
+                // scalar path for one element, then re-try the fast path.
+                $buf[k] = $self.$scalar($b, $i + k)?;
+                k += 1;
+                continue;
+            }
+            $self.ops += run;
+            let cost = $self.hier.access(&mut $self.mem, addr, false);
+            $self.acc += cost;
+            $buf[k] = $self.mem.$mem_ld(addr);
+            $self.hier.bulk_l1_hits(run - 1, false);
+            for kk in k + 1..k_end {
+                // Per-element add keeps the cycle sum bit-identical to
+                // the scalar loop's.
+                $self.acc += hit_cost;
+                $buf[kk] = $self.mem.$mem_ld($b.base + ($i + kk) * $esz);
+            }
+            k = k_end;
+        }
+        Ok(())
+    }};
+    (st, $self:ident, $b:ident, $i:ident, $vals:ident, $esz:expr, $scalar:ident, $mem_st:ident) => {{
+        if $i >= $b.len as usize || $vals.len() > $b.len as usize - $i {
+            for (k, &v) in $vals.iter().enumerate() {
+                $self.$scalar($b, $i + k, v)?;
+            }
+            return Ok(());
+        }
+        let hit_cost = $self.hier.costs.cpu_op + $self.hier.costs.l1_hit;
+        let mut k = 0usize;
+        while k < $vals.len() {
+            let addr = $b.base + ($i + k) * $esz;
+            let line_end = (addr | (super::LINE - 1)) + 1;
+            let k_end = (k + (line_end - addr) / $esz).min($vals.len());
+            let run = (k_end - k) as u64;
+            let clear_of_crash = $self.ops + run < $self.next_crash;
+            let clear_of_halt = match $self.halt_at {
+                Some(h) => $self.ops + run < h,
+                None => true,
+            };
+            if !(clear_of_crash && clear_of_halt) {
+                $self.$scalar($b, $i + k, $vals[k])?;
+                k += 1;
+                continue;
+            }
+            $self.ops += run;
+            // Scalar store order: value lands in the architectural image,
+            // then the hierarchy is charged (dirtying the line).
+            $self.mem.$mem_st(addr, $vals[k]);
+            let cost = $self.hier.access(&mut $self.mem, addr, true);
+            $self.acc += cost;
+            $self.hier.bulk_l1_hits(run - 1, true);
+            for kk in k + 1..k_end {
+                $self.acc += hit_cost;
+                $self.mem.$mem_st($b.base + ($i + kk) * $esz, $vals[kk]);
+            }
+            k = k_end;
+        }
+        Ok(())
+    }};
+}
+
 /// Instrumented environment (the NVCT role).
+///
+/// ### Hot-path shape (DESIGN.md §Perf "fast path")
+///
+/// A scalar access costs: one bounds check, one `base + i*esz` add (base
+/// cached in [`Buf`]), one `tick` (op counter + crash/halt compare), one
+/// [`Hierarchy::access`] (with its last-line memo), and one add into the
+/// scalar cycle accumulator `acc`. Cycles are attributed to
+/// `clock.by_region` lazily: `acc` is drained into the clock on every
+/// region switch / `iter_end` / [`SimEnv::sync_clock`] — never per access.
 pub struct SimEnv<'a> {
     pub mem: Memory,
     pub hier: Hierarchy,
@@ -135,6 +321,9 @@ pub struct SimEnv<'a> {
     cur_region: usize,
     cur_iter: u64,
     ops: u64,
+    /// Cycles accumulated since the last clock drain; always belongs to
+    /// `cur_region` (drained before the region can change).
+    acc: f64,
     /// Sorted ascending crash points (op indices); observer fires at each.
     crash_points: Vec<u64>,
     cp_idx: usize,
@@ -165,6 +354,7 @@ impl<'a> SimEnv<'a> {
             cur_region: num_regions,
             cur_iter: 0,
             ops: 0,
+            acc: 0.0,
             crash_points: Vec::new(),
             cp_idx: 0,
             next_crash: u64::MAX,
@@ -252,18 +442,26 @@ impl<'a> SimEnv<'a> {
 
     /// The persisted loop-iterator bookmark (0 if none registered yet).
     pub fn nvm_iter(&self) -> u64 {
-        match self.hooks.iter_obj {
-            Some(id) => {
-                let o = self.reg.get(id);
-                self.mem.nvm_i64(o.base).max(0) as u64
-            }
+        match self.hooks.iter_hook {
+            Some(e) => self.mem.nvm_i64(e.base).max(0) as u64,
             None => 0,
         }
     }
 
     #[inline]
     fn addr(&self, b: Buf, i: usize, esz: usize) -> usize {
-        self.reg.get(b.id).base + i * esz
+        b.base + i * esz
+    }
+
+    /// Drain the pending cycle accumulator into the per-region clock.
+    /// Called automatically on every region switch and `iter_end`; call it
+    /// manually before reading `clock` mid-run (e.g. after a halted run).
+    pub fn sync_clock(&mut self) {
+        if self.acc != 0.0 {
+            let r = self.cur_region.min(self.num_regions);
+            self.clock.add(r, self.acc);
+            self.acc = 0.0;
+        }
     }
 
     /// Advance the op counter, firing crash observers / halt mode.
@@ -306,27 +504,31 @@ impl<'a> SimEnv<'a> {
     }
 
     /// Fire the flush hooks for the region that just ended.
+    ///
+    /// Entries are pre-resolved [`FlushEntry`] ranges, so this is
+    /// allocation- and clone-free: no `mem::take` of the hook vec, no
+    /// registry lookup, no `ObjSpec` clone per firing (the disjoint field
+    /// borrows below are what the resolved form buys us).
     fn end_region(&mut self, k: usize) {
-        if k >= self.hooks.at_region_end.len() {
+        let Some(entries) = self.hooks.at_region_end.get(k) else {
             return;
-        }
+        };
         // Cheap common case: nothing planned here.
-        if self.hooks.at_region_end[k].is_empty() {
+        if entries.is_empty() {
             return;
         }
-        let entries = std::mem::take(&mut self.hooks.at_region_end[k]);
         let mut fired = false;
         let mut cost = 0.0;
-        for &(obj, every_x) in &entries {
-            if self.cur_iter % every_x as u64 == 0 {
-                let o = self.reg.get(obj).clone();
-                cost += self
-                    .hier
-                    .flush_range(&mut self.mem, o.base, o.spec.bytes(), self.hooks.kind);
+        let iter = self.cur_iter;
+        let SimEnv {
+            hooks, hier, mem, ..
+        } = self;
+        for e in &hooks.at_region_end[k] {
+            if iter % e.every_x as u64 == 0 {
+                cost += hier.flush_range(mem, e.base, e.bytes, hooks.kind);
                 fired = true;
             }
         }
-        self.hooks.at_region_end[k] = entries;
         if fired {
             self.persist_ops += 1;
             self.persist_cycles += cost;
@@ -337,11 +539,14 @@ impl<'a> SimEnv<'a> {
     /// Flush one object immediately (used by the checkpoint model and the
     /// explicit `cache_block_flush` API of Fig. 2a).
     pub fn flush_object(&mut self, id: ObjId) {
-        let o = self.reg.get(id).clone();
+        let (base, bytes) = {
+            let o = self.reg.get(id);
+            (o.base, o.spec.bytes())
+        };
         let cost = self
             .hier
-            .flush_range(&mut self.mem, o.base, o.spec.bytes(), self.hooks.kind);
-        let r = self.cur_region.min(self.clock.by_region.len() - 1);
+            .flush_range(&mut self.mem, base, bytes, self.hooks.kind);
+        let r = self.cur_region.min(self.num_regions);
         self.clock.add(r, cost);
     }
 }
@@ -352,14 +557,15 @@ impl<'a> Env for SimEnv<'a> {
         let ty = spec.ty;
         let bytes = spec.bytes();
         let id = self.reg.register(spec);
+        let base = self.reg.get(id).base;
         // Grow both images to cover the new object (line-aligned).
-        let need = self.reg.footprint().max(self.reg.get(id).base + bytes);
+        let need = self.reg.footprint().max(base + bytes);
         let need = (need + super::LINE - 1) & !(super::LINE - 1);
         if need > self.mem.len() {
             self.mem.arch.resize(need, 0);
             self.mem.nvm.resize(need, 0);
         }
-        Buf { id, len, ty }
+        Buf { id, len, ty, base }
     }
 
     #[inline]
@@ -370,7 +576,7 @@ impl<'a> Env for SimEnv<'a> {
         let addr = self.addr(b, i, 8);
         self.tick()?;
         let cost = self.hier.access(&mut self.mem, addr, false);
-        self.clock.add(self.cur_region, cost);
+        self.acc += cost;
         Ok(self.mem.ld_f64(addr))
     }
 
@@ -383,7 +589,7 @@ impl<'a> Env for SimEnv<'a> {
         self.tick()?;
         self.mem.st_f64(addr, v);
         let cost = self.hier.access(&mut self.mem, addr, true);
-        self.clock.add(self.cur_region, cost);
+        self.acc += cost;
         Ok(())
     }
 
@@ -395,7 +601,7 @@ impl<'a> Env for SimEnv<'a> {
         let addr = self.addr(b, i, 4);
         self.tick()?;
         let cost = self.hier.access(&mut self.mem, addr, false);
-        self.clock.add(self.cur_region, cost);
+        self.acc += cost;
         Ok(self.mem.ld_f32(addr))
     }
 
@@ -408,7 +614,7 @@ impl<'a> Env for SimEnv<'a> {
         self.tick()?;
         self.mem.st_f32(addr, v);
         let cost = self.hier.access(&mut self.mem, addr, true);
-        self.clock.add(self.cur_region, cost);
+        self.acc += cost;
         Ok(())
     }
 
@@ -420,7 +626,7 @@ impl<'a> Env for SimEnv<'a> {
         let addr = self.addr(b, i, 8);
         self.tick()?;
         let cost = self.hier.access(&mut self.mem, addr, false);
-        self.clock.add(self.cur_region, cost);
+        self.acc += cost;
         Ok(self.mem.ld_i64(addr))
     }
 
@@ -433,13 +639,14 @@ impl<'a> Env for SimEnv<'a> {
         self.tick()?;
         self.mem.st_i64(addr, v);
         let cost = self.hier.access(&mut self.mem, addr, true);
-        self.clock.add(self.cur_region, cost);
+        self.acc += cost;
         Ok(())
     }
 
     fn region(&mut self, k: usize) -> Result<(), Signal> {
         debug_assert!(k < self.num_regions);
         let prev = self.cur_region;
+        self.sync_clock(); // pending cycles belong to `prev`
         if prev < self.num_regions {
             self.end_region(prev);
         }
@@ -449,27 +656,78 @@ impl<'a> Env for SimEnv<'a> {
 
     fn iter_end(&mut self, _it: u64) -> Result<(), Signal> {
         let prev = self.cur_region;
+        self.sync_clock(); // pending cycles belong to `prev`
         if prev < self.num_regions {
             self.end_region(prev);
         }
         // Persist the loop-iterator bookmark (footnote 3: ~zero cost, one
         // cache line).
-        if let Some(id) = self.hooks.iter_obj {
-            let o = self.reg.get(id).clone();
-            let cost =
-                self.hier
-                    .flush_range(&mut self.mem, o.base, o.spec.bytes(), self.hooks.kind);
+        if let Some(e) = self.hooks.iter_hook {
+            let cost = self
+                .hier
+                .flush_range(&mut self.mem, e.base, e.bytes, self.hooks.kind);
             self.clock.add(prev.min(self.num_regions), cost);
         }
         self.cur_iter += 1;
         self.cur_region = self.num_regions;
         Ok(())
     }
+
+    fn ld_slice(&mut self, b: Buf, i: usize, out: &mut [f64]) -> Result<(), Signal> {
+        sim_bulk!(ld, self, b, i, out, 8, ld, ld_f64)
+    }
+
+    fn st_slice(&mut self, b: Buf, i: usize, vals: &[f64]) -> Result<(), Signal> {
+        sim_bulk!(st, self, b, i, vals, 8, st, st_f64)
+    }
+
+    fn ld_slice_f32(&mut self, b: Buf, i: usize, out: &mut [f32]) -> Result<(), Signal> {
+        sim_bulk!(ld, self, b, i, out, 4, ldf, ld_f32)
+    }
+
+    fn st_slice_f32(&mut self, b: Buf, i: usize, vals: &[f32]) -> Result<(), Signal> {
+        sim_bulk!(st, self, b, i, vals, 4, stf, st_f32)
+    }
+
+    fn ld_slice_i64(&mut self, b: Buf, i: usize, out: &mut [i64]) -> Result<(), Signal> {
+        sim_bulk!(ld, self, b, i, out, 8, ldi, ld_i64)
+    }
+
+    fn st_slice_i64(&mut self, b: Buf, i: usize, vals: &[i64]) -> Result<(), Signal> {
+        sim_bulk!(st, self, b, i, vals, 8, sti, st_i64)
+    }
 }
 
 // ---------------------------------------------------------------------------
 // RawEnv
 // ---------------------------------------------------------------------------
+
+/// Shared body of the `RawEnv` bulk accessors: bounds-check, then a plain
+/// slice copy over the typed arena at the `Buf`-cached offset; the
+/// out-of-range tail falls back to the scalar loop to keep the exact
+/// in-range-prefix-then-Interrupt semantics.
+macro_rules! raw_bulk {
+    (ld, $self:ident, $b:ident, $i:ident, $out:ident, $arena:ident, $scalar:ident) => {{
+        if $i >= $b.len as usize || $out.len() > $b.len as usize - $i {
+            for (k, o) in $out.iter_mut().enumerate() {
+                *o = $self.$scalar($b, $i + k)?;
+            }
+            return Ok(());
+        }
+        $out.copy_from_slice(&$self.$arena[$b.base + $i..$b.base + $i + $out.len()]);
+        Ok(())
+    }};
+    (st, $self:ident, $b:ident, $i:ident, $vals:ident, $arena:ident, $scalar:ident) => {{
+        if $i >= $b.len as usize || $vals.len() > $b.len as usize - $i {
+            for (k, &v) in $vals.iter().enumerate() {
+                $self.$scalar($b, $i + k, v)?;
+            }
+            return Ok(());
+        }
+        $self.$arena[$b.base + $i..$b.base + $i + $vals.len()].copy_from_slice($vals);
+        Ok(())
+    }};
+}
 
 /// Uninstrumented environment: plain typed arenas, no caches, no timing.
 /// Used for golden runs and post-crash recomputation.
@@ -546,10 +804,11 @@ impl RawEnv {
 
     /// Reconstruct the handle for a registered object id (restart overlay).
     pub fn buf_of(&self, id: super::objects::ObjId) -> Option<Buf> {
-        self.objs.get(id as usize).map(|&(ty, _, len)| Buf {
+        self.objs.get(id as usize).map(|&(ty, off, len)| Buf {
             id,
             len: len as u32,
             ty,
+            base: off,
         })
     }
 }
@@ -580,6 +839,7 @@ impl Env for RawEnv {
             id,
             len: len as u32,
             ty: spec.ty,
+            base: off,
         }
     }
 
@@ -648,6 +908,36 @@ impl Env for RawEnv {
     #[inline]
     fn iter_end(&mut self, _it: u64) -> Result<(), Signal> {
         Ok(())
+    }
+
+    // Bulk accessors: straight slice copies over the typed arenas at the
+    // Buf-cached arena offset (golden runs / recomputation take these, so
+    // the fast engines see memcpy-rate bulk IO). Out-of-range tails fall
+    // back to the scalar loop to keep the exact
+    // in-range-prefix-then-Interrupt semantics.
+
+    fn ld_slice(&mut self, b: Buf, i: usize, out: &mut [f64]) -> Result<(), Signal> {
+        raw_bulk!(ld, self, b, i, out, f64s, ld)
+    }
+
+    fn st_slice(&mut self, b: Buf, i: usize, vals: &[f64]) -> Result<(), Signal> {
+        raw_bulk!(st, self, b, i, vals, f64s, st)
+    }
+
+    fn ld_slice_f32(&mut self, b: Buf, i: usize, out: &mut [f32]) -> Result<(), Signal> {
+        raw_bulk!(ld, self, b, i, out, f32s, ldf)
+    }
+
+    fn st_slice_f32(&mut self, b: Buf, i: usize, vals: &[f32]) -> Result<(), Signal> {
+        raw_bulk!(st, self, b, i, vals, f32s, stf)
+    }
+
+    fn ld_slice_i64(&mut self, b: Buf, i: usize, out: &mut [i64]) -> Result<(), Signal> {
+        raw_bulk!(ld, self, b, i, out, i64s, ldi)
+    }
+
+    fn st_slice_i64(&mut self, b: Buf, i: usize, vals: &[i64]) -> Result<(), Signal> {
+        raw_bulk!(st, self, b, i, vals, i64s, sti)
     }
 }
 
@@ -743,8 +1033,8 @@ mod tests {
         let x = sim.alloc(ObjSpec::f64("x", 8, true));
         let it = sim.alloc(ObjSpec::i64("it", 1, true));
         let mut hooks = FlushHooks::none(2);
-        hooks.at_region_end[0].push((x.id, 1));
-        hooks.iter_obj = Some(it.id);
+        hooks.at_region_end[0].push(FlushEntry::for_object(sim.reg.get(x.id), 1));
+        hooks.iter_hook = Some(FlushEntry::for_object(sim.reg.get(it.id), 1));
         sim.set_hooks(hooks);
 
         sim.region(0).unwrap();
@@ -764,7 +1054,8 @@ mod tests {
         let mut sim = SimEnv::new(&c, 1);
         let x = sim.alloc(ObjSpec::f64("x", 8, true));
         let mut hooks = FlushHooks::none(1);
-        hooks.at_region_end[0].push((x.id, 2)); // every 2 iters (it % 2 == 0)
+        // every 2 iters (it % 2 == 0)
+        hooks.at_region_end[0].push(FlushEntry::for_object(sim.reg.get(x.id), 2));
         sim.set_hooks(hooks);
         let base = sim.reg.get(x.id).base;
 
@@ -783,6 +1074,73 @@ mod tests {
         sim.st(x, 0, 3.0).unwrap();
         sim.iter_end(2).unwrap();
         assert_eq!(sim.mem.nvm_f64(base), 3.0);
+    }
+
+    #[test]
+    fn bulk_slices_match_scalar_bit_for_bit() {
+        // Same access sequence via scalar ops and via the bulk API: ops,
+        // stats, cycles and both memory images must be identical (the
+        // cross-app matrix lives in rust/tests/fastpath_parity.rs).
+        let c = cfg();
+        let mut a = SimEnv::new(&c, 1);
+        let mut b = SimEnv::new(&c, 1);
+        let xa = a.alloc(ObjSpec::f64("x", 100, true));
+        let xb = b.alloc(ObjSpec::f64("x", 100, true));
+        let vals: Vec<f64> = (0..100).map(|i| i as f64 * 1.25 - 3.0).collect();
+        for (i, &v) in vals.iter().enumerate() {
+            a.st(xa, i, v).unwrap();
+        }
+        b.st_slice(xb, 0, &vals).unwrap();
+        let mut out_a = vec![0.0; 97];
+        let mut out_b = vec![0.0; 97];
+        for (k, o) in out_a.iter_mut().enumerate() {
+            *o = a.ld(xa, 3 + k).unwrap();
+        }
+        b.ld_slice(xb, 3, &mut out_b).unwrap();
+        assert_eq!(out_a, out_b);
+        assert_eq!(a.ops(), b.ops());
+        assert_eq!(a.hier.stats, b.hier.stats);
+        a.sync_clock();
+        b.sync_clock();
+        assert_eq!(a.clock.cycles.to_bits(), b.clock.cycles.to_bits());
+        assert_eq!(a.mem.arch, b.mem.arch);
+        assert_eq!(a.mem.nvm, b.mem.nvm);
+    }
+
+    #[test]
+    fn bulk_slice_crash_fires_at_exact_mid_slice_op() {
+        // A crash point landing mid-slice must fire at its precise op
+        // index, observing exactly the elements stored before it.
+        let c = cfg();
+        let mut rec = HitRecorder { hits: Vec::new() };
+        {
+            let mut sim = SimEnv::new(&c, 1);
+            let x = sim.alloc(ObjSpec::f64("x", 64, true));
+            sim.set_crash_points(vec![10, 37], &mut rec);
+            let vals: Vec<f64> = (0..64).map(|i| i as f64 + 0.5).collect();
+            sim.st_slice(x, 0, &vals).unwrap();
+            assert_eq!(sim.ops(), 64);
+        }
+        assert_eq!(rec.hits.iter().map(|h| h.0).collect::<Vec<_>>(), vec![10, 37]);
+    }
+
+    #[test]
+    fn bulk_slice_respects_halt_and_bounds() {
+        let c = cfg();
+        let mut sim = SimEnv::new(&c, 1);
+        let x = sim.alloc(ObjSpec::f64("x", 64, true));
+        sim.halt_at = Some(10);
+        let vals = vec![1.0; 64];
+        assert_eq!(sim.st_slice(x, 0, &vals), Err(Signal::Crash));
+        assert_eq!(sim.ops(), 10, "halt at the exact op, like scalar");
+
+        let mut sim = SimEnv::new(&c, 1);
+        let x = sim.alloc(ObjSpec::f64("x", 16, true));
+        // Out-of-range tail: in-range prefix executes, then Interrupt.
+        assert_eq!(sim.st_slice(x, 10, &vals[..10]), Err(Signal::Interrupt));
+        assert_eq!(sim.ops(), 6, "elements 10..16 stored before the trap");
+        let mut out = vec![0.0; 10];
+        assert_eq!(sim.ld_slice(x, 10, &mut out), Err(Signal::Interrupt));
     }
 
     #[test]

@@ -25,7 +25,7 @@ pub enum FlushKind {
 }
 
 /// Event counters.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct HierStats {
     pub loads: u64,
     pub stores: u64,
@@ -49,6 +49,10 @@ impl HierStats {
     }
 }
 
+/// "No memoized line" sentinel (no real line index can be this large:
+/// addresses are `usize` byte offsets shifted right by 6).
+const MEMO_NONE: u64 = u64::MAX;
+
 /// The cache hierarchy.
 pub struct Hierarchy {
     l1: Cache,
@@ -56,6 +60,18 @@ pub struct Hierarchy {
     l3: Cache,
     pub costs: Costs,
     pub stats: HierStats,
+    /// Last-line memo (DESIGN.md §Perf "fast path"): after any `access`,
+    /// the accessed line is resident in L1 *and* MRU in its set, so a
+    /// consecutive access to the same line is a guaranteed L1 hit whose
+    /// LRU touch is a no-op. `access` exploits this to skip the
+    /// set-associative walk entirely while folding hit counters exactly
+    /// as the walk would. Invalidated by every flush (the only other
+    /// operation that can disturb L1 state).
+    last_line: u64,
+    /// Whether the memoized line is known dirty in L1 (conservative: a
+    /// `false` only means "not proven dirty", and the memo write path
+    /// then performs the idempotent `set_dirty`).
+    last_dirty: bool,
 }
 
 impl Hierarchy {
@@ -66,6 +82,8 @@ impl Hierarchy {
             l3: Cache::new(cfg.l3),
             costs: Costs::from_profile(&cfg.nvm),
             stats: HierStats::default(),
+            last_line: MEMO_NONE,
+            last_dirty: false,
         }
     }
 
@@ -79,6 +97,25 @@ impl Hierarchy {
         } else {
             self.stats.loads += 1;
         }
+        // Fastest path: consecutive access to the memoized line — a
+        // guaranteed L1 MRU hit (see `last_line`); no set walk at all.
+        if line == self.last_line {
+            self.stats.l1_hits += 1;
+            if write && !self.last_dirty {
+                self.l1.set_dirty(line);
+                self.last_dirty = true;
+            }
+            return self.costs.cpu_op + self.costs.l1_hit;
+        }
+        let cost = self.access_uncached(mem, line, write);
+        // The accessed line is now resident + MRU in L1.
+        self.last_line = line;
+        self.last_dirty = write;
+        cost
+    }
+
+    /// The full 3-level walk (memo miss).
+    fn access_uncached(&mut self, mem: &mut Memory, line: u64, write: bool) -> f64 {
         // Fast path: L1 hit.
         if self.l1.access(line, write) {
             self.stats.l1_hits += 1;
@@ -101,6 +138,21 @@ impl Hierarchy {
         // Write-allocate into L1; dirty bit lives innermost.
         cost += self.fill_l1(mem, line, write);
         cost
+    }
+
+    /// Fold `n` guaranteed L1 hits into the counters without touching the
+    /// cache state — the bulk-API path for the tail of a same-line run
+    /// whose first element just went through `access` (so the line is L1
+    /// MRU, its dirty bit already reflects `write`, and per-hit LRU
+    /// touches would be no-ops). Exactly equivalent to `n` scalar hits.
+    #[inline]
+    pub fn bulk_l1_hits(&mut self, n: u64, write: bool) {
+        if write {
+            self.stats.stores += n;
+        } else {
+            self.stats.loads += n;
+        }
+        self.stats.l1_hits += n;
     }
 
     fn fill_l1(&mut self, mem: &mut Memory, line: u64, dirty: bool) -> f64 {
@@ -170,6 +222,9 @@ impl Hierarchy {
     /// Execute one cache-flush instruction on the line containing `addr`'s
     /// block. Returns the modeled cost.
     pub fn flush_line(&mut self, mem: &mut Memory, line: u64, kind: FlushKind) -> f64 {
+        // Flushes are the only operation besides `access` that can disturb
+        // L1 residency/dirtiness: drop the last-line memo.
+        self.last_line = MEMO_NONE;
         let dirty =
             self.l1.is_dirty(line) || self.l2.is_dirty(line) || self.l3.is_dirty(line);
         match kind {
@@ -348,6 +403,39 @@ mod tests {
         h.flush_line(&mut m, 1, FlushKind::ClflushOpt);
         let miss_cost = h.access(&mut m, 64, false);
         assert!(miss_cost > hit_cost, "clflushopt forces reload");
+    }
+
+    #[test]
+    fn memoized_same_line_hits_stay_exact() {
+        let cfg = tiny_cfg();
+        let mut h = Hierarchy::new(&cfg);
+        let mut m = Memory::new(4096);
+        let v = f64::from_bits(0x5A5A5A5A5A5A5A5A);
+        h.access(&mut m, 0, false); // install line 0 (memo set, clean)
+        let hit = h.costs.cpu_op + h.costs.l1_hit;
+        // Memoized write must still dirty the line...
+        m.st_f64(8, v);
+        assert_eq!(h.access(&mut m, 8, true), hit);
+        assert_eq!(h.stats.l1_hits, 1, "memo hit folded into counters");
+        // ...so a flush persists it.
+        h.flush_range(&mut m, 0, 64, FlushKind::Clwb);
+        assert_eq!(m.nvm_f64(8), v);
+        // The flush dropped the memo: the next access takes the full walk
+        // (still an L1 hit, CLWB keeps the line valid).
+        assert_eq!(h.access(&mut m, 0, false), hit);
+        assert_eq!(h.stats.l1_hits, 2);
+    }
+
+    #[test]
+    fn bulk_l1_hits_fold_counters() {
+        let cfg = tiny_cfg();
+        let mut h = Hierarchy::new(&cfg);
+        let mut m = Memory::new(4096);
+        h.access(&mut m, 0, true);
+        h.bulk_l1_hits(7, true);
+        assert_eq!(h.stats.stores, 8);
+        assert_eq!(h.stats.l1_hits, 7);
+        assert_eq!(h.stats.loads, 0);
     }
 
     #[test]

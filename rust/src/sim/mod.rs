@@ -38,7 +38,9 @@ pub mod objects;
 pub mod timing;
 
 pub use config::{CacheGeom, NvmProfile, SimConfig};
-pub use env::{Buf, CrashInfo, CrashObserver, Env, FlushHooks, RawEnv, Signal, SimEnv};
+pub use env::{
+    Buf, CrashInfo, CrashObserver, Env, FlushEntry, FlushHooks, RawEnv, Signal, SimEnv,
+};
 pub use hierarchy::{FlushKind, HierStats, Hierarchy};
 pub use memory::Memory;
 pub use objects::{ObjId, ObjSpec, Registry, Ty};

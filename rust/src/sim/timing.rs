@@ -64,6 +64,11 @@ impl Costs {
 }
 
 /// Cycle accumulator with per-region attribution (the paper's `a_k`).
+///
+/// `SimEnv` no longer calls [`Clock::add`] per memory access: access costs
+/// accumulate in a scalar and are drained here on region switches /
+/// `iter_end` / `sync_clock` (DESIGN.md §Perf "fast path"), so `add` runs
+/// a handful of times per region instead of once per load/store.
 #[derive(Clone, Debug)]
 pub struct Clock {
     pub cycles: f64,

@@ -61,6 +61,12 @@ fn sharded_equals_sequential_across_apps_plans_and_shard_counts() {
                 assert_eq!(r.ops_main_start, seq.ops_main_start, "{label}");
                 assert_eq!(r.persist_ops, seq.persist_ops, "{label}");
                 assert_eq!(r.recomputability(), seq.recomputability(), "{label}");
+                // The aggregates come from the designated full-run worker
+                // (every other worker early-stops): they must still match
+                // the sequential run bit for bit.
+                assert_eq!(r.stats, seq.stats, "{label}: HierStats diverged");
+                assert_eq!(r.persist_cycles, seq.persist_cycles, "{label}");
+                assert_eq!(r.region_cycles, seq.region_cycles, "{label}");
             }
         }
     }

@@ -1,0 +1,224 @@
+//! Fast-path parity proof (ISSUE 2 / DESIGN.md §Perf).
+//!
+//! Two invariants are under test, both bit-for-bit:
+//!
+//! 1. **Scalar vs bulk API**: a `*_slice` call on `SimEnv` is exactly its
+//!    per-element scalar expansion — same op indices, same crash-point
+//!    firing (including points landing mid-slice), same `HierStats`, same
+//!    modeled cycles, same architectural and NVM images.
+//! 2. **Early-stop shards vs sequential**: `ShardedCampaign` (whose
+//!    non-final workers halt right after their last crash point, and
+//!    whose aggregates come from the single designated full-run worker)
+//!    reproduces the sequential `Campaign` field by field, across apps,
+//!    plans and shard counts.
+
+use easycrash::apps::{by_name, CrashApp};
+use easycrash::easycrash::{Campaign, PersistPlan, ShardedCampaign};
+use easycrash::runtime::NativeEngine;
+use easycrash::sim::{
+    Buf, CrashInfo, CrashObserver, Env, FlushEntry, FlushHooks, ObjSpec, SimConfig, SimEnv,
+};
+
+/// Observer that records everything comparable at each crash point.
+struct Probe {
+    hits: Vec<(u64, u64, usize, f64)>,
+}
+
+impl CrashObserver for Probe {
+    fn on_crash(&mut self, env: &mut SimEnv<'_>, info: CrashInfo) {
+        self.hits
+            .push((info.op, info.iter, info.region, env.inconsistent_rate(0)));
+    }
+}
+
+fn build_env<'a>(cfg: &SimConfig) -> (SimEnv<'a>, Buf, Buf, Buf) {
+    let mut env = SimEnv::new(cfg, 1);
+    let x = env.alloc(ObjSpec::f64("x", 256, true));
+    let y = env.alloc(ObjSpec::f32("y", 256, true));
+    let z = env.alloc(ObjSpec::i64("z", 256, true));
+    // A live flush hook so the memoized-line / flush interplay is on the
+    // tested path too.
+    let mut hooks = FlushHooks::none(1);
+    hooks.at_region_end[0].push(FlushEntry::for_object(env.reg.get(x.id), 1));
+    env.set_hooks(hooks);
+    (env, x, y, z)
+}
+
+/// The element sequence both drivers execute: unaligned bases, runs that
+/// cross many cache lines, all three element types, loads and stores.
+const ITERS: u64 = 3;
+
+fn scalar_driver(env: &mut SimEnv, x: Buf, y: Buf, z: Buf) {
+    for it in 0..ITERS {
+        env.region(0).unwrap();
+        for i in 0..200 {
+            env.st(x, 3 + i, i as f64 * 1.5 - it as f64).unwrap();
+        }
+        let mut acc = 0.0f64;
+        for i in 0..200 {
+            acc += env.ld(x, 3 + i).unwrap();
+        }
+        env.st(x, 0, acc).unwrap();
+        for i in 0..100 {
+            env.stf(y, 5 + i, i as f32 + it as f32).unwrap();
+        }
+        let mut f = 0.0f32;
+        for i in 0..100 {
+            f += env.ldf(y, 5 + i).unwrap();
+        }
+        env.stf(y, 0, f).unwrap();
+        for i in 0..50 {
+            env.sti(z, 7 + i, i as i64 * 3).unwrap();
+        }
+        let mut s = 0i64;
+        for i in 0..50 {
+            s += env.ldi(z, 7 + i).unwrap();
+        }
+        env.sti(z, 0, s).unwrap();
+        env.iter_end(it).unwrap();
+    }
+}
+
+fn bulk_driver(env: &mut SimEnv, x: Buf, y: Buf, z: Buf) {
+    for it in 0..ITERS {
+        env.region(0).unwrap();
+        let vals: Vec<f64> = (0..200).map(|i| i as f64 * 1.5 - it as f64).collect();
+        env.st_slice(x, 3, &vals).unwrap();
+        let mut out = vec![0.0f64; 200];
+        env.ld_slice(x, 3, &mut out).unwrap();
+        let mut acc = 0.0f64;
+        for &v in &out {
+            acc += v;
+        }
+        env.st(x, 0, acc).unwrap();
+        let valsf: Vec<f32> = (0..100).map(|i| i as f32 + it as f32).collect();
+        env.st_slice_f32(y, 5, &valsf).unwrap();
+        let mut outf = vec![0.0f32; 100];
+        env.ld_slice_f32(y, 5, &mut outf).unwrap();
+        let mut f = 0.0f32;
+        for &v in &outf {
+            f += v;
+        }
+        env.stf(y, 0, f).unwrap();
+        let valsi: Vec<i64> = (0..50).map(|i| i * 3).collect();
+        env.st_slice_i64(z, 7, &valsi).unwrap();
+        let mut outi = vec![0i64; 50];
+        env.ld_slice_i64(z, 7, &mut outi).unwrap();
+        let mut s = 0i64;
+        for &v in &outi {
+            s += v;
+        }
+        env.sti(z, 0, s).unwrap();
+        env.iter_end(it).unwrap();
+    }
+}
+
+/// Crash points chosen to land mid-run inside bulk slices (including a
+/// duplicate, which must fire twice at the same op).
+fn crash_points() -> Vec<u64> {
+    vec![5, 210, 250, 404, 405, 405, 700, 710, 1300, 2000]
+}
+
+#[test]
+fn bulk_api_is_bit_identical_to_scalar_expansion() {
+    let cfg = SimConfig::mini();
+    let mut pa = Probe { hits: Vec::new() };
+    let mut pb = Probe { hits: Vec::new() };
+
+    let (ops_a, stats_a, cycles_a, by_region_a, arch_a, nvm_a) = {
+        let (mut env, x, y, z) = build_env(&cfg);
+        env.set_crash_points(crash_points(), &mut pa);
+        scalar_driver(&mut env, x, y, z);
+        env.sync_clock();
+        (
+            env.ops(),
+            env.hier.stats,
+            env.clock.cycles,
+            env.clock.by_region.clone(),
+            env.mem.arch.clone(),
+            env.mem.nvm.clone(),
+        )
+    };
+    let (ops_b, stats_b, cycles_b, by_region_b, arch_b, nvm_b) = {
+        let (mut env, x, y, z) = build_env(&cfg);
+        env.set_crash_points(crash_points(), &mut pb);
+        bulk_driver(&mut env, x, y, z);
+        env.sync_clock();
+        (
+            env.ops(),
+            env.hier.stats,
+            env.clock.cycles,
+            env.clock.by_region.clone(),
+            env.mem.arch.clone(),
+            env.mem.nvm.clone(),
+        )
+    };
+
+    assert_eq!(ops_a, ops_b, "op counts");
+    assert_eq!(stats_a, stats_b, "HierStats");
+    assert_eq!(cycles_a.to_bits(), cycles_b.to_bits(), "modeled cycles");
+    let bits = |v: &[f64]| v.iter().map(|c| c.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&by_region_a), bits(&by_region_b), "per-region cycles");
+    assert_eq!(arch_a, arch_b, "architectural image");
+    assert_eq!(nvm_a, nvm_b, "persisted image");
+    assert_eq!(pa.hits.len(), crash_points().len(), "every point fired");
+    for (a, b) in pa.hits.iter().zip(&pb.hits) {
+        assert_eq!(a.0, b.0, "crash op");
+        assert_eq!(a.1, b.1, "crash iter");
+        assert_eq!(a.2, b.2, "crash region");
+        assert_eq!(a.3.to_bits(), b.3.to_bits(), "inconsistency at crash");
+    }
+}
+
+/// The two plans each app is exercised under: no persistence, and all
+/// candidate objects persisted at iteration end.
+fn plans_for(app: &dyn CrashApp) -> Vec<PersistPlan> {
+    let prof = Campaign::new(0, 1).profile(app, &PersistPlan::none());
+    let names: Vec<String> = prof
+        .candidates
+        .iter()
+        .map(|(_, n, _)| n.clone())
+        .filter(|n| n != "it")
+        .collect();
+    let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    vec![
+        PersistPlan::none(),
+        PersistPlan::at_iter_end(&refs, app.regions().len(), 1),
+    ]
+}
+
+/// Satellite: 3 apps × 2 plans × early-stop shards {1,2,4,8} — records,
+/// `HierStats` and modeled cycles bit-identical to the sequential
+/// campaign. (determinism.rs covers toy/is/kmeans; this covers the other
+/// converted flagships, so every bulk-API kernel is under a campaign
+/// parity test somewhere.)
+#[test]
+fn early_stop_shards_match_sequential_bit_for_bit() {
+    let tests = 24;
+    let seed = 0x51;
+    for app_name in ["toy", "ft", "lulesh"] {
+        let app = by_name(app_name).unwrap();
+        for (p, plan) in plans_for(app.as_ref()).iter().enumerate() {
+            let mut eng = NativeEngine::new();
+            let seq = Campaign::new(tests, seed).run(app.as_ref(), plan, &mut eng);
+            assert_eq!(seq.records.len(), tests, "{app_name} plan{p}");
+            for shards in [1usize, 2, 4, 8] {
+                let r = ShardedCampaign::new(tests, seed, shards).run(app.as_ref(), plan);
+                let label = format!("{app_name} plan{p} shards={shards}");
+                assert_eq!(r.records, seq.records, "{label}: records");
+                assert_eq!(r.stats, seq.stats, "{label}: HierStats");
+                assert_eq!(
+                    r.cycles.to_bits(),
+                    seq.cycles.to_bits(),
+                    "{label}: modeled cycles"
+                );
+                assert_eq!(r.region_cycles, seq.region_cycles, "{label}: region cycles");
+                assert_eq!(r.persist_ops, seq.persist_ops, "{label}: persist ops");
+                assert_eq!(r.persist_cycles, seq.persist_cycles, "{label}");
+                assert_eq!(r.ops_total, seq.ops_total, "{label}: ops");
+                assert_eq!(r.ops_main_start, seq.ops_main_start, "{label}");
+                assert_eq!(r.footprint, seq.footprint, "{label}");
+            }
+        }
+    }
+}

@@ -43,16 +43,8 @@ fn kmeans_step_pjrt_matches_native() {
     km.step_fast(&mut raw_pjrt, &st_p, 0, &mut eng).unwrap();
     assert_eq!(eng.calls(), 1, "PJRT path must actually execute");
 
-    let cn = raw_native.f32_slice(easycrash::sim::Buf {
-        id: 1,
-        len: 64,
-        ty: easycrash::sim::Ty::F32,
-    });
-    let cp = raw_pjrt.f32_slice(easycrash::sim::Buf {
-        id: 1,
-        len: 64,
-        ty: easycrash::sim::Ty::F32,
-    });
+    let cn = raw_native.f32_slice(raw_native.buf_of(1).expect("centroid buf"));
+    let cp = raw_pjrt.f32_slice(raw_pjrt.buf_of(1).expect("centroid buf"));
     for (i, (a, b)) in cn.iter().zip(cp).enumerate() {
         assert!(
             (a - b).abs() <= 1e-3 * a.abs().max(1.0),
