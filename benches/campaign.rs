@@ -3,43 +3,58 @@
 //! §Perf evidence for the single-pass design (compare `campaign_100` to
 //! 100× `profile`: the paper's methodology would pay the latter).
 //!
-//! The `sharded*` cases drive the same campaign through
-//! [`ShardedCampaign`] at increasing worker counts: with >1 hardware
+//! Cases are expressed as experiment cells: an `ExperimentSpec` built
+//! with the fluent builder, executed through `api::Runner`'s *uncached*
+//! executors (`execute_profile` / `execute_cell`) so every measured
+//! iteration does real work — the same wiring `easycrash experiment`
+//! uses, minus the memoization.
+//!
+//! The `sharded*` cases raise the spec's worker count: with >1 hardware
 //! thread, wall-clock per campaign drops both because the N inline
 //! restarts split across workers *and* because every non-final worker
 //! early-stops right after its own last crash point (DESIGN.md §Perf
 //! "early-stop workers") — while the printed result stays bit-identical
-//! (see rust/tests/determinism.rs and rust/tests/fastpath_parity.rs).
+//! (see rust/tests/determinism.rs and rust/tests/api.rs).
 //!
 //! Results are also persisted as machine-readable JSON
 //! (`BENCH_campaign.json` at the repo root: op/s + wall-clock per case);
 //! CI uploads it as an artifact.
 
+use easycrash::api::{ExperimentSpec, Runner};
 use easycrash::apps;
 use easycrash::benchlib::Bench;
-use easycrash::easycrash::{Campaign, PersistPlan, ShardedCampaign};
-use easycrash::runtime::NativeEngine;
+use easycrash::easycrash::PersistPlan;
+
+fn runner(app: &str, tests: usize, shards: usize) -> Runner {
+    let spec = ExperimentSpec::builder()
+        .app(app)
+        .tests(tests)
+        .seed(1)
+        .shards(shards)
+        .build()
+        .expect("bench spec is valid");
+    Runner::new(spec).expect("native engine")
+}
 
 fn main() {
     let mut b = Bench::new("campaign");
     for name in ["toy", "is", "cg", "mg"] {
         let app = apps::by_name(name).unwrap();
-        let c = Campaign::new(0, 1);
+        let r = runner(name, 0, 1);
         b.run_throughput(&format!("profile_{name}"), || {
-            let r = c.profile(app.as_ref(), &PersistPlan::none());
-            let ops = r.ops_total;
-            std::hint::black_box(r);
+            let res = r.execute_profile(app.as_ref(), &PersistPlan::none(), r.spec().cfg);
+            let ops = res.ops_total;
+            std::hint::black_box(res);
             ops
         });
     }
     for name in ["toy", "is"] {
         let app = apps::by_name(name).unwrap();
-        let mut eng = NativeEngine::new();
-        let c = Campaign::new(100, 1);
+        let r = runner(name, 100, 1);
         b.run_throughput(&format!("campaign100_{name}"), || {
-            let r = c.run(app.as_ref(), &PersistPlan::none(), &mut eng);
-            let ops = r.ops_total;
-            std::hint::black_box(r);
+            let res = r.execute_cell(app.as_ref(), &PersistPlan::none(), false);
+            let ops = res.ops_total;
+            std::hint::black_box(res);
             ops
         });
     }
@@ -50,13 +65,17 @@ fn main() {
     for name in ["toy", "is"] {
         let app = apps::by_name(name).unwrap();
         for shards in [1usize, 2, 4] {
-            let sc = ShardedCampaign::new(400, 1, shards);
+            let r = runner(name, 400, shards);
+            // execute_cell_threaded keeps sharded1 on the worker-thread
+            // harvest path (as the historical baseline measured), so the
+            // sharded1-vs-sharded2/4 comparison isolates parallel speedup
+            // from harness overhead.
             b.run_throughput(
                 &format!("sharded{shards}_campaign400_{name} (hw={workers})"),
                 || {
-                    let r = sc.run(app.as_ref(), &PersistPlan::none());
-                    let ops = r.ops_total;
-                    std::hint::black_box(r);
+                    let res = r.execute_cell_threaded(app.as_ref(), &PersistPlan::none(), false);
+                    let ops = res.ops_total;
+                    std::hint::black_box(res);
                     ops
                 },
             );

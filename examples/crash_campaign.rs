@@ -5,31 +5,33 @@
 //! correlation against recomputation success, and the resulting critical
 //! data objects — then shows the recomputability with them persisted.
 //!
-//! Campaigns run through [`ShardedCampaign`]: pass `--shards N` to spread
-//! the crash tests over N worker threads — the printed numbers are
-//! bit-identical for every N (the executor's determinism guarantee).
+//! Campaigns run through the typed experiment API: flags build an
+//! `ExperimentSpec`, an `api::Runner` executes its cells (sharded across
+//! `--shards N` worker threads — the printed numbers are bit-identical
+//! for every N, the executor's determinism guarantee).
 //!
 //! ```text
 //! cargo run --release --example crash_campaign [-- --app cg --tests 300 --shards 4]
 //! ```
 
+use easycrash::api::{ExperimentSpec, Runner};
 use easycrash::apps::by_name;
 use easycrash::easycrash::selection::{critical_names, select_critical};
-use easycrash::easycrash::{Campaign, PersistPlan, ShardedCampaign};
+use easycrash::easycrash::PersistPlan;
 use easycrash::util::cli::Args;
-use easycrash::util::error::{Error, Result};
+use easycrash::util::error::Result;
 use easycrash::util::{mean, pct};
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&argv, &["app", "tests", "shards"]).map_err(Error::msg)?;
+    let args = Args::parse(&argv, &["app", "tests", "shards"])?;
     // Flags win; the historical positional form `<app> [tests]` still works.
     let app_name = args
         .get("app")
         .or_else(|| args.positional.first().map(|s| s.as_str()))
         .unwrap_or("cg");
     let tests = match args.get("tests") {
-        Some(_) => args.usize_or("tests", 300).map_err(Error::msg)?,
+        Some(_) => args.usize_or("tests", 300)?,
         None => match args.positional.get(1) {
             Some(t) => t
                 .parse()
@@ -37,17 +39,21 @@ fn main() -> Result<()> {
             None => 300,
         },
     };
-    let shards = args.shards_or(1).map_err(Error::msg)?;
+    let shards = args.shards_or(1)?;
     let app = by_name(app_name).ok_or_else(|| easycrash::err!("unknown app {app_name}"))?;
+
+    let spec = ExperimentSpec::builder()
+        .app(app_name)
+        .tests(tests)
+        .seed(7)
+        .shards(shards)
+        .build()?;
+    let runner = Runner::new(spec)?;
 
     println!(
         "== characterization campaign: {app_name}, {tests} crash tests, {shards} shard(s) =="
     );
-    let campaign = ShardedCampaign {
-        campaign: Campaign::new(tests, 7),
-        shards,
-    };
-    let base = campaign.run(app.as_ref(), &PersistPlan::none());
+    let base = runner.campaign(app.as_ref(), &PersistPlan::none(), false);
     let f = base.response_fractions();
     println!(
         "responses: S1={} S2={} S3={} S4={}  (recomputability {})",
@@ -79,7 +85,7 @@ fn main() -> Result<()> {
 
     if !critical.is_empty() {
         let plan = PersistPlan::at_iter_end(&critical, app.regions().len(), 1);
-        let with = campaign.run(app.as_ref(), &plan);
+        let with = runner.campaign(app.as_ref(), &plan, false);
         println!(
             "\nwith critical objects persisted at iteration end: {} (persist ops: {})",
             pct(with.recomputability()),

@@ -1,0 +1,31 @@
+//! `easycrash::api` — the typed experiment API.
+//!
+//! The paper's evaluation is a grid of scenarios: app × persistence plan
+//! × campaign size × engine × shard count. This module makes that grid
+//! *data* instead of glue code:
+//!
+//! * [`ExperimentSpec`] — a serializable description of one experiment
+//!   (apps, plan grid, campaign config, engine, shards, simulator
+//!   config), with a fluent [`SpecBuilder`] and a JSON round-trip over
+//!   [`crate::util::json`].
+//! * [`Runner`] — the one executor behind the CLI, the report
+//!   generators and the benches. It expands a spec into its scenario
+//!   matrix, resolves each [`PlanSpec`](crate::easycrash::PlanSpec)
+//!   against the app, memoizes profiles / workflows / characterization
+//!   campaigns across cells, and dispatches every cell through the
+//!   existing [`ShardedCampaign`](crate::easycrash::ShardedCampaign) —
+//!   so results are bit-identical to driving `Campaign` by hand (the
+//!   parity test in `rust/tests/api.rs` asserts it).
+//! * [`ExperimentReport`] — the typed result of a spec run, serialized
+//!   to JSON (`easycrash experiment --out report.json`).
+//!
+//! See DESIGN.md §API for the layering, memoization keys and the
+//! determinism guarantee.
+
+mod report;
+mod runner;
+mod spec;
+
+pub use report::{ExperimentCell, ExperimentReport};
+pub use runner::Runner;
+pub use spec::{EngineKind, ExperimentSpec, SpecBuilder};

@@ -1,0 +1,108 @@
+//! The typed result of an experiment run, and its JSON serialization.
+
+use std::sync::Arc;
+
+use crate::easycrash::{CampaignResult, PlanSpec};
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+use crate::util::mean;
+
+use super::spec::ExperimentSpec;
+
+/// Version tag written into report JSON documents.
+pub const REPORT_SCHEMA: &str = "easycrash.experiment/v1";
+
+/// One cell of the scenario matrix: an (app, plan) pair and its
+/// campaign result.
+pub struct ExperimentCell {
+    pub app: String,
+    /// The plan axis value as specified (shorthands stay symbolic).
+    pub plan: PlanSpec,
+    /// The resolved plan's canonical DSL (shorthands expanded).
+    pub plan_resolved: String,
+    pub verified: bool,
+    pub result: Arc<CampaignResult>,
+}
+
+/// A full experiment: the spec that produced it plus one cell per
+/// (app, plan) combination, in matrix order.
+pub struct ExperimentReport {
+    pub spec: ExperimentSpec,
+    pub cells: Vec<ExperimentCell>,
+}
+
+impl ExperimentCell {
+    /// Serialize the cell's headline metrics (the JSON stays summary-
+    /// level: per-test records are large and reproducible from the spec).
+    pub fn to_json(&self) -> Json {
+        let r = &self.result;
+        let f = r.response_fractions();
+        let candidates = Json::Arr(
+            r.candidates
+                .iter()
+                .enumerate()
+                .map(|(j, (_, name, bytes))| {
+                    let inc: Vec<f64> = r.records.iter().map(|t| t.inconsistency[j]).collect();
+                    Json::obj()
+                        .set("name", name.as_str())
+                        .set("bytes", *bytes)
+                        .set(
+                            "mean_inconsistency",
+                            if inc.is_empty() { Json::Null } else { Json::Num(mean(&inc)) },
+                        )
+                })
+                .collect(),
+        );
+        let regions = Json::Arr(
+            (0..r.num_regions)
+                .map(|k| match r.region_recomputability(k) {
+                    Some(c) => Json::Num(c),
+                    None => Json::Null,
+                })
+                .collect(),
+        );
+        Json::obj()
+            .set("app", self.app.as_str())
+            .set("plan", self.plan.to_string())
+            .set("plan_resolved", self.plan_resolved.as_str())
+            .set("verified", self.verified)
+            .set("tests", r.records.len())
+            .set("recomputability", r.recomputability())
+            .set("fractions", f.to_vec())
+            .set(
+                "mean_extra_iters",
+                match r.mean_extra_iters() {
+                    Some(x) => Json::Num(x),
+                    None => Json::Null,
+                },
+            )
+            .set("ops_total", r.ops_total)
+            .set("cycles", r.cycles)
+            .set("persist_ops", r.persist_ops)
+            .set("persist_cycles", r.persist_cycles)
+            .set("footprint", r.footprint)
+            .set("num_regions", r.num_regions)
+            .set("region_recomputability", regions)
+            .set("candidates", candidates)
+    }
+}
+
+impl ExperimentReport {
+    /// Serialize the whole experiment (schema + spec + cells) — the
+    /// `easycrash experiment --out` document and the CI artifact.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("schema", REPORT_SCHEMA)
+            .set("spec", self.spec.to_json())
+            .set(
+                "cells",
+                Json::Arr(self.cells.iter().map(ExperimentCell::to_json).collect()),
+            )
+    }
+
+    /// Write the pretty-printed JSON document to `path`.
+    pub fn write_json(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().to_pretty())
+            .with_context(|| format!("writing experiment report to {path}"))
+    }
+}

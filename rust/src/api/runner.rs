@@ -1,0 +1,315 @@
+//! The unified experiment runner: one execution path behind the CLI,
+//! the report generators and the benches.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::apps::{self, CrashApp};
+use crate::easycrash::workflow::{Workflow, WorkflowReport};
+use crate::easycrash::{Campaign, CampaignResult, PersistPlan, PlanSpec, ShardedCampaign};
+use crate::runtime::StepEngine;
+use crate::sim::SimConfig;
+use crate::util::error::Result;
+
+use super::report::{ExperimentCell, ExperimentReport};
+use super::spec::ExperimentSpec;
+
+/// Executes an [`ExperimentSpec`] as a scenario matrix.
+///
+/// ## Memoization
+///
+/// Cells of the matrix share measurements, so the runner caches
+/// everything keyed by *what is simulated*, never by who asked:
+///
+/// * campaigns — key `app :: plan.dsl() [:: vfy]`; a plan's canonical
+///   DSL rendering determines the simulation bit-for-bit, so two cells
+///   (or a workflow step and a figure) asking for the same plan share
+///   one `Arc<CampaignResult>`;
+/// * profiles (no-crash runs) — key `app :: plan.dsl() :: cfg`, since
+///   profile-only consumers sweep NVM configs;
+/// * workflows — key `app`; the workflow's four step campaigns run
+///   through the campaign cache above, so step 1 *is* the `none` cell.
+///
+/// Goldens are memoized inside each app (`OnceLock`), engines live one
+/// per worker inside [`ShardedCampaign`].
+///
+/// ## Determinism
+///
+/// Every cell dispatches through [`ShardedCampaign::run_or_seq`] with
+/// the spec's `(tests, seed, cfg, shards)` — exactly the wiring the CLI
+/// used to assemble by hand — so a `CampaignResult` produced here is
+/// bit-identical to the pre-API direct construction for the same
+/// `(app, plan, tests, seed, shards)` (asserted in `rust/tests/api.rs`).
+pub struct Runner {
+    spec: ExperimentSpec,
+    verbose: bool,
+    /// The spec's engine, shared by sequential cells. Sharded cells
+    /// build one native engine per worker instead (ShardedCampaign).
+    engine: Mutex<Box<dyn StepEngine>>,
+    profiles: Mutex<HashMap<String, Arc<CampaignResult>>>,
+    campaigns: Mutex<HashMap<String, Arc<CampaignResult>>>,
+    workflows: Mutex<HashMap<String, Arc<WorkflowReport>>>,
+}
+
+impl Runner {
+    pub fn new(spec: ExperimentSpec) -> Result<Runner> {
+        spec.validate()?;
+        let engine = spec.engine.create()?;
+        Ok(Runner {
+            spec,
+            verbose: false,
+            engine: Mutex::new(engine),
+            profiles: Mutex::new(HashMap::new()),
+            campaigns: Mutex::new(HashMap::new()),
+            workflows: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Narrate cell execution on stderr (the reports' `--verbose`).
+    pub fn verbose(mut self, on: bool) -> Runner {
+        self.verbose = on;
+        self
+    }
+
+    pub fn spec(&self) -> &ExperimentSpec {
+        &self.spec
+    }
+
+    /// Run the full scenario matrix (`apps × plans`, spec order).
+    pub fn run(&self) -> Result<ExperimentReport> {
+        let mut cells = Vec::new();
+        for name in &self.spec.apps {
+            // Spec validation at construction guarantees the lookup.
+            let app = apps::by_name(name).expect("spec validated app names");
+            for plan_spec in &self.spec.plans {
+                let plan = self.resolve_plan(app.as_ref(), plan_spec)?;
+                let result = self.campaign(app.as_ref(), &plan, self.spec.verified);
+                cells.push(ExperimentCell {
+                    app: name.clone(),
+                    plan: plan_spec.clone(),
+                    plan_resolved: plan.dsl(),
+                    verified: self.spec.verified,
+                    result,
+                });
+            }
+        }
+        Ok(ExperimentReport {
+            spec: self.spec.clone(),
+            cells,
+        })
+    }
+
+    // -- plan resolution ---------------------------------------------------
+
+    /// Resolve a DSL plan against an app: expand the shorthands and
+    /// validate explicit entries (unknown object, region out of bounds).
+    /// Explicit entries may name *any* registered object — including the
+    /// iterator bookmark `it` (Fig. 4a persists it alone) and
+    /// non-candidate objects; only the `all` shorthand restricts itself
+    /// to candidates minus `it`.
+    pub fn resolve_plan(&self, app: &dyn CrashApp, spec: &PlanSpec) -> Result<PersistPlan> {
+        match spec {
+            PlanSpec::None => Ok(PersistPlan::none()),
+            PlanSpec::All => Ok(self.plan_all_candidates(app)),
+            PlanSpec::Critical => Ok(self.plan_critical_iter_end(app)),
+            PlanSpec::Entries(entries) => {
+                let plan = PersistPlan {
+                    entries: entries.clone(),
+                    clwb: false,
+                };
+                // Validate with the same resolver the campaign will use,
+                // against a cheap halted registry probe — so *any*
+                // registered object is accepted (bt's non-candidate
+                // `forcing` etc.), errors surface at resolve time, and
+                // this path can never disagree with the campaign's own
+                // check.
+                let num_regions = app.regions().len();
+                let layout =
+                    crate::easycrash::campaign::probe_layout(app, &self.spec.cfg, num_regions);
+                plan.resolve(&layout, num_regions)?;
+                Ok(plan)
+            }
+        }
+    }
+
+    /// Candidate object names of an app, excluding the iterator bookmark
+    /// (from the memoized no-persistence profile).
+    pub fn candidate_names(&self, app: &dyn CrashApp) -> Vec<String> {
+        self.profile(app, &PersistPlan::none(), self.spec.cfg)
+            .candidates
+            .iter()
+            .map(|(_, n, _)| n.clone())
+            .filter(|n| n != "it")
+            .collect()
+    }
+
+    /// The `all` shorthand: every candidate object (minus the iterator
+    /// bookmark) persisted at the end of every main-loop iteration — the
+    /// one construction `main.rs` and the report context used to
+    /// duplicate.
+    pub fn plan_all_candidates(&self, app: &dyn CrashApp) -> PersistPlan {
+        let names = self.candidate_names(app);
+        let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        PersistPlan::at_iter_end(&refs, app.regions().len(), 1)
+    }
+
+    /// The `critical` shorthand: the workflow-selected critical objects
+    /// at iteration end (no-op plan when nothing was selected).
+    pub fn plan_critical_iter_end(&self, app: &dyn CrashApp) -> PersistPlan {
+        let wf = self.workflow(app);
+        let refs: Vec<&str> = wf.critical.iter().map(|s| s.as_str()).collect();
+        if refs.is_empty() {
+            PersistPlan::none()
+        } else {
+            PersistPlan::at_iter_end(&refs, app.regions().len(), 1)
+        }
+    }
+
+    /// The costly best configuration: critical objects at every region.
+    pub fn plan_best(&self, app: &dyn CrashApp) -> PersistPlan {
+        let wf = self.workflow(app);
+        let refs: Vec<&str> = wf.critical.iter().map(|s| s.as_str()).collect();
+        if refs.is_empty() {
+            PersistPlan::none()
+        } else {
+            PersistPlan::at_every_region(&refs, app.regions().len())
+        }
+    }
+
+    // -- cell execution ----------------------------------------------------
+
+    /// Memoized crash campaign for one cell. The key is the plan's
+    /// canonical DSL (plus the verified flag) — the full simulation
+    /// input, given the spec's shared `(tests, seed, cfg, shards)`.
+    pub fn campaign(
+        &self,
+        app: &dyn CrashApp,
+        plan: &PersistPlan,
+        verified: bool,
+    ) -> Arc<CampaignResult> {
+        let key = format!(
+            "{}::{}{}",
+            app.name(),
+            plan.dsl(),
+            if verified { "::vfy" } else { "" }
+        );
+        if let Some(c) = self.campaigns.lock().unwrap().get(&key) {
+            return c.clone();
+        }
+        if self.verbose {
+            eprintln!("[campaign] {key}");
+        }
+        let res = Arc::new(self.execute_cell(app, plan, verified));
+        self.campaigns.lock().unwrap().insert(key, res.clone());
+        res
+    }
+
+    /// Uncached cell execution — the exact pre-API wiring: a [`Campaign`]
+    /// from the spec's campaign config, dispatched through
+    /// [`ShardedCampaign::run_or_seq`] (parallel harvesting when
+    /// `shards > 1` on the native engine, sequential on the spec engine
+    /// otherwise). The benches call this directly so that repeated
+    /// measurements keep doing real work.
+    pub fn execute_cell(
+        &self,
+        app: &dyn CrashApp,
+        plan: &PersistPlan,
+        verified: bool,
+    ) -> CampaignResult {
+        let campaign = Campaign {
+            tests: self.spec.tests,
+            seed: self.spec.seed,
+            cfg: self.spec.cfg,
+            verified,
+        };
+        ShardedCampaign {
+            campaign,
+            shards: self.spec.shards,
+        }
+        .run_or_seq(app, plan, self.engine.lock().unwrap().as_mut())
+    }
+
+    /// Memoized profile run (no crashes) under a plan + simulator config
+    /// (profile consumers sweep NVM profiles, hence the cfg key).
+    pub fn profile(&self, app: &dyn CrashApp, plan: &PersistPlan, cfg: SimConfig) -> Arc<CampaignResult> {
+        let key = format!("{}::{}::{:?}", app.name(), plan.dsl(), cfg);
+        if let Some(p) = self.profiles.lock().unwrap().get(&key) {
+            return p.clone();
+        }
+        let res = Arc::new(self.execute_profile(app, plan, cfg));
+        self.profiles.lock().unwrap().insert(key, res.clone());
+        res
+    }
+
+    /// Uncached cell execution forced through the sharded worker-thread
+    /// harness even at `shards == 1` (bench use: the `sharded1` case
+    /// isolates harness overhead from parallel speedup; results stay
+    /// bit-identical to [`Runner::execute_cell`]). Native engines only,
+    /// one per worker.
+    pub fn execute_cell_threaded(
+        &self,
+        app: &dyn CrashApp,
+        plan: &PersistPlan,
+        verified: bool,
+    ) -> CampaignResult {
+        assert_eq!(
+            self.spec.engine,
+            super::spec::EngineKind::Native,
+            "execute_cell_threaded spawns one native engine per worker"
+        );
+        let campaign = Campaign {
+            tests: self.spec.tests,
+            seed: self.spec.seed,
+            cfg: self.spec.cfg,
+            verified,
+        };
+        ShardedCampaign {
+            campaign,
+            shards: self.spec.shards,
+        }
+        .run(app, plan)
+    }
+
+    /// Uncached profile execution (the benches measure this repeatedly;
+    /// everyone else wants the memoized [`Runner::profile`]).
+    pub fn execute_profile(
+        &self,
+        app: &dyn CrashApp,
+        plan: &PersistPlan,
+        cfg: SimConfig,
+    ) -> CampaignResult {
+        Campaign {
+            tests: 0,
+            seed: self.spec.seed,
+            cfg,
+            verified: false,
+        }
+        .profile(app, plan)
+    }
+
+    /// Memoized four-step workflow (§5.3). Steps 1–4 are spec cells: the
+    /// workflow runs through [`Workflow::run_cells`] with this runner's
+    /// memoized campaign executor, so its step campaigns are the same
+    /// `Arc`s the figures see (step 1 == the `none` cell).
+    pub fn workflow(&self, app: &dyn CrashApp) -> Arc<WorkflowReport> {
+        if let Some(w) = self.workflows.lock().unwrap().get(app.name()) {
+            return w.clone();
+        }
+        if self.verbose {
+            eprintln!("[workflow] {}", app.name());
+        }
+        let wf = Workflow {
+            tests: self.spec.tests,
+            seed: self.spec.seed,
+            ts: self.spec.ts,
+            tau: self.spec.tau,
+            cfg: self.spec.cfg,
+        };
+        let rep = Arc::new(wf.run_cells(app, &mut |plan| self.campaign(app, plan, false)));
+        self.workflows
+            .lock()
+            .unwrap()
+            .insert(app.name().to_string(), rep.clone());
+        rep
+    }
+}

@@ -1,0 +1,469 @@
+//! The serializable experiment specification and its fluent builder.
+
+use crate::easycrash::PlanSpec;
+use crate::runtime::{NativeEngine, StepEngine};
+use crate::sim::{CacheGeom, NvmProfile, SimConfig};
+use crate::util::cli::Args;
+use crate::util::error::Result;
+use crate::util::json::Json;
+
+/// Version tag written into spec JSON documents; validated when a file
+/// carries one (absent = current version, for hand-written minimal
+/// files).
+pub const SPEC_SCHEMA: &str = "easycrash.spec/v1";
+
+/// Which recomputation engine the experiment runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// The in-process Rust engine (default; required for `shards > 1`).
+    Native,
+    /// AOT-compiled JAX/Pallas step functions through PJRT (behind the
+    /// `pjrt` cargo feature; a stub otherwise).
+    Pjrt,
+}
+
+impl EngineKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineKind::Native => "native",
+            EngineKind::Pjrt => "pjrt",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<EngineKind> {
+        match name {
+            "native" => Ok(EngineKind::Native),
+            "pjrt" => Ok(EngineKind::Pjrt),
+            other => crate::bail!("unknown engine `{other}` (native|pjrt)"),
+        }
+    }
+
+    /// Instantiate the engine (the single construction site the CLI and
+    /// the report context used to duplicate).
+    pub fn create(self) -> Result<Box<dyn StepEngine>> {
+        match self {
+            EngineKind::Native => Ok(Box::new(NativeEngine::new())),
+            EngineKind::Pjrt => Ok(Box::new(crate::runtime::PjrtEngine::from_default_dir()?)),
+        }
+    }
+}
+
+/// A complete, serializable experiment: the scenario matrix is
+/// `apps × plans`, every cell running a `tests`-point crash campaign
+/// under the shared campaign configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentSpec {
+    /// Application names (see `easycrash list`).
+    pub apps: Vec<String>,
+    /// Plan axis, in the DSL's parse-tree form.
+    pub plans: Vec<PlanSpec>,
+    /// Crash tests per cell.
+    pub tests: usize,
+    pub seed: u64,
+    /// Campaign worker threads (`> 1` requires the native engine).
+    pub shards: usize,
+    pub engine: EngineKind,
+    /// §6 "result verification" mode (snapshot the architectural image).
+    pub verified: bool,
+    /// Workflow parameters (used when a plan is `critical`, and by
+    /// report workflows): runtime-overhead budget `t_s` and the §7
+    /// efficiency threshold `τ`.
+    pub ts: f64,
+    pub tau: f64,
+    /// Simulator configuration shared by every cell.
+    pub cfg: SimConfig,
+}
+
+impl Default for ExperimentSpec {
+    fn default() -> ExperimentSpec {
+        ExperimentSpec {
+            apps: vec!["mg".to_string()],
+            plans: vec![PlanSpec::None],
+            tests: 200,
+            seed: 0xEC,
+            shards: 1,
+            engine: EngineKind::Native,
+            verified: false,
+            ts: 0.03,
+            tau: 0.10,
+            cfg: SimConfig::mini(),
+        }
+    }
+}
+
+impl ExperimentSpec {
+    pub fn builder() -> SpecBuilder {
+        SpecBuilder {
+            spec: ExperimentSpec {
+                apps: Vec::new(),
+                plans: Vec::new(),
+                ..ExperimentSpec::default()
+            },
+        }
+    }
+
+    /// Invariants every constructor funnels through: a non-empty matrix,
+    /// known app names, and the shards/engine rule.
+    pub fn validate(&self) -> Result<()> {
+        crate::ensure!(!self.apps.is_empty(), "experiment spec needs at least one app");
+        crate::ensure!(!self.plans.is_empty(), "experiment spec needs at least one plan");
+        for name in &self.apps {
+            crate::ensure!(
+                crate::apps::by_name(name).is_some(),
+                "unknown app `{name}` (see `easycrash list`)"
+            );
+        }
+        crate::ensure!(self.shards >= 1, "shards must be >= 1");
+        crate::ensure!(
+            self.shards == 1 || self.engine == EngineKind::Native,
+            "shards > 1 requires the native engine (one engine per worker)"
+        );
+        crate::ensure!(
+            self.ts > 0.0 && self.ts.is_finite(),
+            "ts must be positive and finite"
+        );
+        crate::ensure!(
+            self.tau >= 0.0 && self.tau.is_finite(),
+            "tau must be non-negative and finite"
+        );
+        // JSON integers are i64; keeping the seed in that range preserves
+        // the spec's serialization round-trip.
+        crate::ensure!(
+            self.seed <= i64::MAX as u64,
+            "seed must fit in 63 bits (JSON round-trip)"
+        );
+        Ok(())
+    }
+
+    /// Build a spec from CLI flags (`--apps a,b --plans "none;all" --tests
+    /// N --seed S --shards N --engine E --ts F --tau F --verified /
+    /// --no-verified --nvm P`), starting from `self` as the defaults — so
+    /// a spec file loaded with [`ExperimentSpec::from_json`] can be
+    /// overridden per-flag. Only keys present in `args` change
+    /// (`--paper-scale` affects the defaults path in
+    /// [`ExperimentSpec::from_args`] only).
+    pub fn with_args(mut self, args: &Args) -> Result<ExperimentSpec> {
+        if let Some(apps) = args.get("apps").or_else(|| args.get("app")) {
+            self.apps = apps.split(',').map(|s| s.trim().to_string()).collect();
+        }
+        if let Some(plans) = args.get("plans").or_else(|| args.get("plan")) {
+            // Plans are `;`-separated (entries inside one plan use `,`).
+            self.plans = plans
+                .split(';')
+                .map(PlanSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+        }
+        self.tests = args.usize_or("tests", self.tests)?;
+        self.seed = args.u64_or("seed", self.seed)?;
+        self.shards = args.shards_or(self.shards)?;
+        if let Some(e) = args.get("engine") {
+            self.engine = EngineKind::from_name(e)?;
+        }
+        // Presence-only flags can't express "false", so the spec-file
+        // override needs an explicit negative form; the pair together is
+        // ambiguous (flag order is not preserved), so reject it.
+        crate::ensure!(
+            !(args.flag("verified") && args.flag("no-verified")),
+            "--verified and --no-verified are mutually exclusive"
+        );
+        if args.flag("no-verified") {
+            self.verified = false;
+        }
+        if args.flag("verified") {
+            self.verified = true;
+        }
+        self.ts = args.f64_or("ts", self.ts)?;
+        self.tau = args.f64_or("tau", self.tau)?;
+        if let Some(nvm) = args.get("nvm") {
+            self.cfg.nvm = NvmProfile::by_name(nvm)
+                .ok_or_else(|| crate::err!("unknown NVM profile `{nvm}`"))?;
+        }
+        self.validate()?;
+        Ok(self)
+    }
+
+    /// The defaults every CLI entrypoint shares (`--paper-scale` bumps
+    /// the *default* test count to the paper's 1000 — it never overrides
+    /// an explicit `--tests` or a spec file's value), overridden by
+    /// flags.
+    pub fn from_args(args: &Args) -> Result<ExperimentSpec> {
+        let mut base = ExperimentSpec::default();
+        if args.flag("paper-scale") {
+            base.tests = 1000;
+        }
+        base.with_args(args)
+    }
+
+    // -- serialization ----------------------------------------------------
+
+    fn geometry_name(&self) -> &'static str {
+        let mini = SimConfig::mini();
+        let paper = SimConfig::paper();
+        if (self.cfg.l1, self.cfg.l2, self.cfg.l3) == (paper.l1, paper.l2, paper.l3) {
+            "paper"
+        } else if (self.cfg.l1, self.cfg.l2, self.cfg.l3) == (mini.l1, mini.l2, mini.l3) {
+            "mini"
+        } else {
+            // Builder-set geometries serialize with their dimensions in
+            // a `cache` object, so a report's embedded spec stays
+            // loadable and reproducible.
+            "custom"
+        }
+    }
+
+    /// Serialize to the spec JSON document (see `DESIGN.md` §API).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("schema", SPEC_SCHEMA)
+            .set("apps", self.apps.clone())
+            .set(
+                "plans",
+                self.plans.iter().map(|p| p.to_string()).collect::<Vec<_>>(),
+            )
+            .set("tests", self.tests)
+            .set("seed", self.seed)
+            .set("shards", self.shards)
+            .set("engine", self.engine.name())
+            .set("verified", self.verified)
+            .set("ts", self.ts)
+            .set("tau", self.tau)
+            .set("geometry", self.geometry_name())
+            .set("nvm", self.cfg.nvm.name);
+        if self.geometry_name() == "custom" {
+            let geom = |g: CacheGeom| Json::obj().set("size", g.size).set("ways", g.ways);
+            j = j.set(
+                "cache",
+                Json::obj()
+                    .set("l1", geom(self.cfg.l1))
+                    .set("l2", geom(self.cfg.l2))
+                    .set("l3", geom(self.cfg.l3)),
+            );
+        }
+        j
+    }
+
+    /// Parse a spec JSON document (the inverse of [`ExperimentSpec::
+    /// to_json`]). Absent optional fields keep their defaults; the plan
+    /// strings go back through the DSL parser, so a hand-written file
+    /// gets the same validation as the CLI.
+    pub fn from_json(text: &str) -> Result<ExperimentSpec> {
+        let j = Json::parse(text)?;
+        let Json::Obj(fields) = &j else {
+            crate::bail!("a spec file must be a JSON object");
+        };
+        // Reject unknown keys: a typo (`"test"` for `"tests"`) must not
+        // silently fall back to a default and run the wrong experiment.
+        const KNOWN: &[&str] = &[
+            "schema", "apps", "plans", "tests", "seed", "shards", "engine", "verified", "ts",
+            "tau", "geometry", "cache", "nvm",
+        ];
+        for (i, (key, _)) in fields.iter().enumerate() {
+            crate::ensure!(
+                KNOWN.contains(&key.as_str()),
+                "unknown spec field `{key}` (known: {})",
+                KNOWN.join(", ")
+            );
+            crate::ensure!(
+                !fields[..i].iter().any(|(k, _)| k == key),
+                "duplicate spec field `{key}`"
+            );
+        }
+        if let Some(v) = j.get("schema") {
+            let schema = v
+                .as_str()
+                .ok_or_else(|| crate::err!("`schema` must be a string"))?;
+            crate::ensure!(schema == SPEC_SCHEMA, "unsupported spec schema `{schema}`");
+        }
+        let mut spec = ExperimentSpec::default();
+        let str_list = |v: &Json, what: &str| -> Result<Vec<String>> {
+            v.as_arr()
+                .ok_or_else(|| crate::err!("`{what}` must be an array of strings"))?
+                .iter()
+                .map(|x| {
+                    x.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| crate::err!("`{what}` must be an array of strings"))
+                })
+                .collect()
+        };
+        if let Some(v) = j.get("apps") {
+            spec.apps = str_list(v, "apps")?;
+        }
+        if let Some(v) = j.get("plans") {
+            spec.plans = str_list(v, "plans")?
+                .iter()
+                .map(|s| PlanSpec::parse(s.as_str()))
+                .collect::<Result<Vec<_>>>()?;
+        }
+        let usize_field = |key: &str, cur: usize| -> Result<usize> {
+            match j.get(key) {
+                None => Ok(cur),
+                Some(v) => v
+                    .as_usize()
+                    .ok_or_else(|| crate::err!("`{key}` must be a non-negative integer")),
+            }
+        };
+        spec.tests = usize_field("tests", spec.tests)?;
+        spec.shards = usize_field("shards", spec.shards)?;
+        if let Some(v) = j.get("seed") {
+            spec.seed = v
+                .as_u64()
+                .ok_or_else(|| crate::err!("`seed` must be a non-negative integer"))?;
+        }
+        if let Some(v) = j.get("engine") {
+            let name = v
+                .as_str()
+                .ok_or_else(|| crate::err!("`engine` must be a string"))?;
+            spec.engine = EngineKind::from_name(name)?;
+        }
+        if let Some(v) = j.get("verified") {
+            spec.verified = v
+                .as_bool()
+                .ok_or_else(|| crate::err!("`verified` must be a boolean"))?;
+        }
+        let f64_field = |key: &str, cur: f64| -> Result<f64> {
+            match j.get(key) {
+                None => Ok(cur),
+                Some(v) => v.as_f64().ok_or_else(|| crate::err!("`{key}` must be a number")),
+            }
+        };
+        spec.ts = f64_field("ts", spec.ts)?;
+        spec.tau = f64_field("tau", spec.tau)?;
+        if j.get("cache").is_some() {
+            crate::ensure!(
+                j.get("geometry").and_then(Json::as_str) == Some("custom"),
+                "`cache` is only valid with geometry \"custom\""
+            );
+        }
+        if let Some(v) = j.get("geometry") {
+            let nvm = spec.cfg.nvm;
+            spec.cfg = match v.as_str() {
+                Some("mini") => SimConfig::mini(),
+                Some("paper") => SimConfig::paper(),
+                Some("custom") => {
+                    let cache = j.get("cache").ok_or_else(|| {
+                        crate::err!("geometry \"custom\" requires a `cache` object")
+                    })?;
+                    let geom = |level: &str| -> Result<CacheGeom> {
+                        let o = cache
+                            .get(level)
+                            .ok_or_else(|| crate::err!("`cache.{level}` missing"))?;
+                        let size = o.get("size").and_then(Json::as_usize).ok_or_else(|| {
+                            crate::err!("`cache.{level}.size` must be an integer")
+                        })?;
+                        let ways = o.get("ways").and_then(Json::as_usize).ok_or_else(|| {
+                            crate::err!("`cache.{level}.ways` must be an integer")
+                        })?;
+                        // The hierarchy masks set indices, so geometry
+                        // must satisfy size = sets * ways * 64 with
+                        // power-of-two sets.
+                        crate::ensure!(
+                            ways >= 1
+                                && size % (ways * 64) == 0
+                                && (size / (ways * 64)).is_power_of_two(),
+                            "`cache.{level}` is not a valid geometry (size {size}, ways {ways})"
+                        );
+                        Ok(CacheGeom::new(size, ways))
+                    };
+                    SimConfig {
+                        l1: geom("l1")?,
+                        l2: geom("l2")?,
+                        l3: geom("l3")?,
+                        nvm,
+                    }
+                }
+                other => crate::bail!(
+                    "`geometry` must be \"mini\", \"paper\" or \"custom\", got {other:?}"
+                ),
+            }
+            .with_nvm(nvm);
+        }
+        if let Some(v) = j.get("nvm") {
+            let name = v.as_str().ok_or_else(|| crate::err!("`nvm` must be a string"))?;
+            spec.cfg.nvm = NvmProfile::by_name(name)
+                .ok_or_else(|| crate::err!("unknown NVM profile `{name}`"))?;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// Fluent builder for [`ExperimentSpec`]. Starts with an *empty* matrix;
+/// [`SpecBuilder::build`] fills unset axes with the defaults (plans:
+/// `none`) and validates.
+#[derive(Clone, Debug)]
+pub struct SpecBuilder {
+    spec: ExperimentSpec,
+}
+
+impl SpecBuilder {
+    pub fn app(mut self, name: &str) -> SpecBuilder {
+        self.spec.apps.push(name.to_string());
+        self
+    }
+
+    pub fn apps<'a>(mut self, names: impl IntoIterator<Item = &'a str>) -> SpecBuilder {
+        self.spec.apps.extend(names.into_iter().map(str::to_string));
+        self
+    }
+
+    pub fn plan(mut self, plan: PlanSpec) -> SpecBuilder {
+        self.spec.plans.push(plan);
+        self
+    }
+
+    /// Add a plan in DSL form (`none` / `all` / `critical` /
+    /// `obj@region/x,...`).
+    pub fn plan_str(mut self, dsl: &str) -> Result<SpecBuilder> {
+        self.spec.plans.push(PlanSpec::parse(dsl)?);
+        Ok(self)
+    }
+
+    pub fn tests(mut self, tests: usize) -> SpecBuilder {
+        self.spec.tests = tests;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> SpecBuilder {
+        self.spec.seed = seed;
+        self
+    }
+
+    pub fn shards(mut self, shards: usize) -> SpecBuilder {
+        self.spec.shards = shards;
+        self
+    }
+
+    pub fn engine(mut self, engine: EngineKind) -> SpecBuilder {
+        self.spec.engine = engine;
+        self
+    }
+
+    pub fn verified(mut self, verified: bool) -> SpecBuilder {
+        self.spec.verified = verified;
+        self
+    }
+
+    pub fn ts(mut self, ts: f64) -> SpecBuilder {
+        self.spec.ts = ts;
+        self
+    }
+
+    pub fn tau(mut self, tau: f64) -> SpecBuilder {
+        self.spec.tau = tau;
+        self
+    }
+
+    pub fn cfg(mut self, cfg: SimConfig) -> SpecBuilder {
+        self.spec.cfg = cfg;
+        self
+    }
+
+    pub fn build(mut self) -> Result<ExperimentSpec> {
+        if self.spec.plans.is_empty() {
+            self.spec.plans.push(PlanSpec::None);
+        }
+        self.spec.validate()?;
+        Ok(self.spec)
+    }
+}

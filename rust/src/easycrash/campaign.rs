@@ -382,6 +382,24 @@ impl EnvCore {
     }
 }
 
+/// Registry layout learned from a probe env halted at the app's very
+/// first memory access — by convention every app registers all of its
+/// objects before its first data access, and allocation order is
+/// deterministic, so the probe layout's ids match the real run's. Used
+/// by [`Campaign::pass`] to resolve flush hooks and by
+/// [`crate::api::Runner`] to validate plan entries without paying an
+/// instrumented replay.
+pub(crate) fn probe_layout(
+    app: &dyn CrashApp,
+    cfg: &SimConfig,
+    num_regions: usize,
+) -> crate::sim::Registry {
+    let mut probe = SimEnv::new(cfg, num_regions);
+    probe.halt_at = Some(1);
+    let _ = app.run_sim(&mut probe);
+    probe.reg
+}
+
 impl Campaign {
     pub fn new(tests: usize, seed: u64) -> Campaign {
         Campaign {
@@ -440,17 +458,9 @@ impl Campaign {
         let num_regions = app.regions().len();
 
         // Hooks can only resolve after `build` registers the objects, but
-        // `run_sim` does both build and the main loop. Learn the registry
-        // layout from a probe env halted at the very first memory access —
-        // by convention every app registers all of its objects before its
-        // first data access, and allocation order is deterministic, so the
-        // probe layout's ids match the real run's.
-        let layout = {
-            let mut probe = SimEnv::new(&self.cfg, num_regions);
-            probe.halt_at = Some(1);
-            let _ = app.run_sim(&mut probe);
-            probe.reg
-        };
+        // `run_sim` does both build and the main loop — so learn the
+        // registry layout from a cheap halted probe first.
+        let layout = probe_layout(app, &self.cfg, num_regions);
         let hooks = plan
             .resolve(&layout, num_regions)
             .expect("plan must resolve against the app's registry");

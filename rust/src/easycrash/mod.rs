@@ -10,5 +10,5 @@ pub mod stats;
 pub mod workflow;
 
 pub use campaign::{Campaign, CampaignResult, ShardedCampaign, TestRecord};
-pub use plan::PersistPlan;
-pub use workflow::Workflow;
+pub use plan::{PersistPlan, PlanSpec};
+pub use workflow::{Workflow, WorkflowSummary};

@@ -2,8 +2,30 @@
 //! every how many main-loop iterations (the output of the EasyCrash
 //! decision process, and the input the user's `cache_block_flush` calls
 //! encode in Fig. 2a).
+//!
+//! This module also owns the **plan DSL** — the textual grammar the CLI,
+//! spec files and reports share:
+//!
+//! ```text
+//! plan      := "none" | "all" | "critical" | entry ("," entry)*
+//! entry     := object "@" region [ "/" every_x ]
+//! ```
+//!
+//! `obj@region/x` means "flush `obj` at the end of code region `region`
+//! every `x` main-loop iterations"; `/x` defaults to `/1`. The shorthands
+//! are app-relative: `all` is every candidate object (minus the iterator
+//! bookmark) at iteration end, `critical` is the workflow-selected
+//! critical set at iteration end — both resolve through
+//! [`crate::api::Runner`]. [`PlanSpec::parse`] validates the syntax
+//! (malformed entries, `every_x == 0`); [`PlanSpec::validate`] checks an
+//! entry list against a concrete app (unknown object, region out of
+//! bounds). Parsing and [`PlanSpec`]'s `Display` round-trip exactly.
+
+use std::fmt;
+use std::str::FromStr;
 
 use crate::sim::{FlushEntry, FlushHooks, FlushKind, Registry};
+use crate::util::error::{Error, Result};
 
 /// One planned persistence site.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -14,6 +36,146 @@ pub struct PlanEntry {
     pub region: usize,
     /// Persist every `x` main-loop iterations (Eq. 5's frequency).
     pub every_x: u32,
+}
+
+impl fmt::Display for PlanEntry {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.every_x == 1 {
+            write!(f, "{}@{}", self.object, self.region)
+        } else {
+            write!(f, "{}@{}/{}", self.object, self.region, self.every_x)
+        }
+    }
+}
+
+/// A plan as *written* — the DSL's parse tree. The shorthands stay
+/// symbolic (they need an app to enumerate objects); entry lists carry
+/// the literal [`PlanEntry`]s. Conversion to a concrete [`PersistPlan`]
+/// happens in [`crate::api::Runner::resolve_plan`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PlanSpec {
+    /// No persistence (baseline; the iterator bookmark is always kept).
+    None,
+    /// All candidate objects (minus the iterator bookmark) at the end of
+    /// every main-loop iteration.
+    All,
+    /// The workflow-selected critical objects at iteration end.
+    Critical,
+    /// An explicit `obj@region/x` entry list.
+    Entries(Vec<PlanEntry>),
+}
+
+impl PlanSpec {
+    /// Parse the DSL. Syntax errors (malformed entries, `every_x == 0`,
+    /// empty input) are rejected here; app-relative checks (unknown
+    /// object, region out of bounds) live in [`PlanSpec::validate`].
+    pub fn parse(s: &str) -> Result<PlanSpec> {
+        match s.trim() {
+            "" => crate::bail!("empty plan spec (try `none`, `all`, `critical` or `obj@region/x`)"),
+            "none" => Ok(PlanSpec::None),
+            "all" => Ok(PlanSpec::All),
+            "critical" => Ok(PlanSpec::Critical),
+            spec => {
+                let mut entries = Vec::new();
+                for part in spec.split(',') {
+                    entries.push(Self::parse_entry(part.trim())?);
+                }
+                Ok(PlanSpec::Entries(entries))
+            }
+        }
+    }
+
+    fn parse_entry(part: &str) -> Result<PlanEntry> {
+        let (obj, rest) = part
+            .split_once('@')
+            .ok_or_else(|| crate::err!("bad plan entry `{part}` (expected obj@region[/x])"))?;
+        crate::ensure!(!obj.is_empty(), "bad plan entry `{part}`: empty object name");
+        let (region_s, x_s) = match rest.split_once('/') {
+            Some((r, x)) => (r, Some(x)),
+            None => (rest, None),
+        };
+        let region: usize = region_s
+            .parse()
+            .map_err(|_| crate::err!("bad plan entry `{part}`: region `{region_s}` is not an integer"))?;
+        let every_x: u32 = match x_s {
+            None => 1,
+            Some(x) => x
+                .parse()
+                .map_err(|_| crate::err!("bad plan entry `{part}`: frequency `{x}` is not an integer"))?,
+        };
+        crate::ensure!(every_x >= 1, "bad plan entry `{part}`: every_x must be >= 1");
+        Ok(PlanEntry {
+            object: obj.to_string(),
+            region,
+            every_x,
+        })
+    }
+
+    /// Parse *and* validate against an object-name universe and region
+    /// count, so errors surface at parse time. See [`PlanSpec::validate`]
+    /// for what `objects` should contain.
+    pub fn parse_for(s: &str, objects: &[String], num_regions: usize) -> Result<PlanSpec> {
+        let spec = Self::parse(s)?;
+        spec.validate(objects, num_regions)?;
+        Ok(spec)
+    }
+
+    /// Validate an entry list against a caller-supplied object-name
+    /// universe and region count. The caller chooses the universe: the
+    /// CLI path ([`crate::api::Runner::resolve_plan`]) validates against
+    /// the app's *full registry* by resolving instead (any registered
+    /// object is persistable, including `it` and non-candidates), so
+    /// pass every acceptable name here — not just the selection
+    /// candidates — or the two paths will disagree. The shorthands are
+    /// valid for every app by construction.
+    pub fn validate(&self, objects: &[String], num_regions: usize) -> Result<()> {
+        if let PlanSpec::Entries(entries) = self {
+            for e in entries {
+                crate::ensure!(
+                    objects.iter().any(|o| o == &e.object),
+                    "plan references unknown object `{}` (candidates: {})",
+                    e.object,
+                    objects.join(", ")
+                );
+                crate::ensure!(
+                    e.region < num_regions,
+                    "plan references region {} but the app has {num_regions}",
+                    e.region
+                );
+                crate::ensure!(e.every_x >= 1, "every_x must be >= 1");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Pretty-printer, the inverse of [`PlanSpec::parse`]:
+/// `parse(&spec.to_string()) == spec` for every valid spec.
+impl fmt::Display for PlanSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanSpec::None => f.write_str("none"),
+            PlanSpec::All => f.write_str("all"),
+            PlanSpec::Critical => f.write_str("critical"),
+            PlanSpec::Entries(entries) => {
+                for (i, e) in entries.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{e}")?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl FromStr for PlanSpec {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<PlanSpec> {
+        PlanSpec::parse(s)
+    }
 }
 
 /// A complete persistence plan.
@@ -92,12 +254,33 @@ impl PersistPlan {
         v
     }
 
+    /// Canonical DSL rendering of the resolved plan: the entry list in
+    /// plan order (or `none`), with a `+clwb` suffix when the plan uses
+    /// CLWB. Two plans with equal `dsl()` run identical simulations —
+    /// [`crate::api::Runner`] uses this as its memoization key, and
+    /// reports print it.
+    pub fn dsl(&self) -> String {
+        let mut s = if self.entries.is_empty() {
+            "none".to_string()
+        } else {
+            self.entries
+                .iter()
+                .map(|e| e.to_string())
+                .collect::<Vec<_>>()
+                .join(",")
+        };
+        if self.clwb {
+            s.push_str("+clwb");
+        }
+        s
+    }
+
     /// Resolve against a registry into the env's hook table. Each entry's
     /// `(base, bytes)` is looked up here, **once** — firing a hook later
     /// is lookup-, clone- and allocation-free (DESIGN.md §Perf "flush
     /// hooks"). Unknown object names are an error (they indicate a
     /// plan/app mismatch).
-    pub fn resolve(&self, reg: &Registry, num_regions: usize) -> Result<FlushHooks, String> {
+    pub fn resolve(&self, reg: &Registry, num_regions: usize) -> Result<FlushHooks> {
         let mut hooks = FlushHooks::none(num_regions);
         hooks.kind = if self.clwb {
             FlushKind::Clwb
@@ -110,16 +293,13 @@ impl PersistPlan {
         for e in &self.entries {
             let id = reg
                 .by_name(&e.object)
-                .ok_or_else(|| format!("plan references unknown object `{}`", e.object))?;
-            if e.region >= num_regions {
-                return Err(format!(
-                    "plan references region {} but the app has {}",
-                    e.region, num_regions
-                ));
-            }
-            if e.every_x == 0 {
-                return Err("every_x must be >= 1".into());
-            }
+                .ok_or_else(|| crate::err!("plan references unknown object `{}`", e.object))?;
+            crate::ensure!(
+                e.region < num_regions,
+                "plan references region {} but the app has {num_regions}",
+                e.region
+            );
+            crate::ensure!(e.every_x >= 1, "every_x must be >= 1");
             hooks.at_region_end[e.region].push(FlushEntry::for_object(reg.get(id), e.every_x));
         }
         Ok(hooks)

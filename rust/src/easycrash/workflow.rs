@@ -8,6 +8,8 @@
 //!    knapsack region selection (§5.2),
 //! 4. the production persistence plan (and its evaluation campaign).
 
+use std::sync::Arc;
+
 use crate::apps::CrashApp;
 use crate::runtime::StepEngine;
 use crate::sim::timing::Costs;
@@ -43,31 +45,47 @@ impl Default for Workflow {
 }
 
 /// Everything the workflow produced (the inputs for most figures).
+/// Campaign results are `Arc`-shared: when the workflow runs through
+/// [`crate::api::Runner`], its step campaigns are the *same* memoized
+/// cells the figures consume.
 pub struct WorkflowReport {
     pub app: String,
     /// Step 1: characterization campaign, no persistence.
-    pub base: CampaignResult,
+    pub base: Arc<CampaignResult>,
     /// Step 2: per-candidate correlation analysis.
     pub selection: Vec<SelectionRow>,
     pub critical: Vec<String>,
     /// Step 3: campaign persisting critical objects at every region.
-    pub best: CampaignResult,
+    pub best: Arc<CampaignResult>,
     pub model: RegionModel,
     pub region_sel: RegionSelection,
     /// Step 4: the production plan and its evaluation campaign.
     pub plan: PersistPlan,
-    pub final_result: CampaignResult,
+    pub final_result: Arc<CampaignResult>,
+}
+
+/// The three headline recomputabilities of one workflow (Fig. 6's
+/// series), named instead of a positional tuple.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WorkflowSummary {
+    /// Without persistence (step 1's characterization campaign).
+    pub base: f64,
+    /// The costly best configuration (step 3: critical objects persisted
+    /// at every region).
+    pub best: f64,
+    /// The production plan (step 4).
+    pub final_: f64,
 }
 
 impl WorkflowReport {
     /// Convenience: recomputability before / after EasyCrash and at the
-    /// costly best configuration (Fig. 6's series).
-    pub fn summary(&self) -> (f64, f64, f64) {
-        (
-            self.base.recomputability(),
-            self.final_result.recomputability(),
-            self.best.recomputability(),
-        )
+    /// costly best configuration.
+    pub fn summary(&self) -> WorkflowSummary {
+        WorkflowSummary {
+            base: self.base.recomputability(),
+            best: self.best.recomputability(),
+            final_: self.final_result.recomputability(),
+        }
     }
 }
 
@@ -111,7 +129,9 @@ impl Workflow {
     /// Run the full workflow for one application (sequential campaigns).
     pub fn run(&self, app: &dyn CrashApp, engine: &mut dyn StepEngine) -> WorkflowReport {
         let campaign = self.campaign();
-        self.run_impl(app, &mut |plan| campaign.run(app, plan, &mut *engine))
+        self.run_cells(app, &mut |plan| {
+            Arc::new(campaign.run(app, plan, &mut *engine))
+        })
     }
 
     /// Run the full workflow with every campaign sharded across `shards`
@@ -132,14 +152,22 @@ impl Workflow {
             campaign: self.campaign(),
             shards,
         };
-        self.run_impl(app, &mut |plan| sharded.run_with(app, plan, make_engine))
+        self.run_cells(app, &mut |plan| {
+            Arc::new(sharded.run_with(app, plan, make_engine))
+        })
     }
 
-    /// Workflow skeleton, parametric in how campaigns execute.
-    fn run_impl(
+    /// Workflow skeleton, parametric in how campaigns execute: steps 1–4
+    /// are expressed as *cells* — (plan → campaign result) evaluations —
+    /// so the workflow shares one execution path with every other
+    /// consumer. [`crate::api::Runner::workflow`] passes its memoized
+    /// cell executor here, which makes the workflow's step campaigns and
+    /// the figures' campaigns literally the same `Arc`s; [`Workflow::run`]
+    /// and [`Workflow::run_sharded`] pass plain executors.
+    pub fn run_cells(
         &self,
         app: &dyn CrashApp,
-        run_campaign: &mut dyn FnMut(&PersistPlan) -> CampaignResult,
+        run_campaign: &mut dyn FnMut(&PersistPlan) -> Arc<CampaignResult>,
     ) -> WorkflowReport {
         let regions = app.regions();
         let num_regions = regions.len();
@@ -267,9 +295,9 @@ mod tests {
         assert_eq!(rep.final_result.records.len(), 120);
         // The workflow must never make things worse than baseline by more
         // than noise.
-        let (b, f, best) = rep.summary();
-        assert!(f + 0.15 >= b, "final {f} vs base {b}");
-        assert!(best + 0.15 >= b);
+        let s = rep.summary();
+        assert!(s.final_ + 0.15 >= s.base, "final {} vs base {}", s.final_, s.base);
+        assert!(s.best + 0.15 >= s.base);
         // Overhead must respect t_s at the modeled level.
         assert!(rep.region_sel.predicted_overhead <= wf.ts + 1e-9);
     }

@@ -23,6 +23,12 @@
 //!   batches and harvested by scoped worker threads — with output
 //!   **bit-identical** to the sequential run for any `--shards` count
 //!   (proved by `rust/tests/determinism.rs`).
+//! * [`api`] — the typed experiment API: serializable [`api::ExperimentSpec`]s
+//!   (apps × plans × campaign config), the plan DSL
+//!   ([`easycrash::PlanSpec`], `obj@region/x` + `none`/`all`/`critical`),
+//!   and the one [`api::Runner`] behind the CLI, the report generators
+//!   and the benches — memoizing profiles/workflows/campaigns across
+//!   scenario cells with bit-identical results to direct wiring.
 //! * [`model`] — the §7 system-efficiency emulator (Young's formula,
 //!   Eq. 6–9).
 //! * [`runtime`] — PJRT wrapper that loads AOT-compiled JAX/Pallas step
@@ -41,6 +47,7 @@ pub mod util;
 pub mod sim;
 pub mod apps;
 pub mod easycrash;
+pub mod api;
 pub mod model;
 pub mod runtime;
 pub mod report;

@@ -1,37 +1,35 @@
 //! `easycrash` CLI — the Layer-3 coordinator entrypoint.
 //!
 //! Subcommands reproduce every table/figure of the paper, run individual
-//! crash campaigns and the selection workflow, and expose the
-//! system-efficiency model. See `easycrash help`.
+//! crash campaigns, full experiment specs and the selection workflow,
+//! and expose the system-efficiency model. See `easycrash help`.
+//!
+//! Every campaign-running subcommand goes through the typed experiment
+//! API (`easycrash::api`): flags build an [`ExperimentSpec`], a
+//! [`Runner`] executes it — the CLI never assembles `Campaign`s or
+//! `PersistPlan`s by hand.
 
 use std::time::Instant;
 
+use easycrash::api::{ExperimentSpec, Runner};
 use easycrash::apps;
-use easycrash::easycrash::{Campaign, PersistPlan, ShardedCampaign};
-use easycrash::runtime::{NativeEngine, PjrtEngine, StepEngine};
 use easycrash::util::cli::Args;
-use easycrash::util::error::{Error, Result};
-
-fn engine_from(args: &Args) -> Result<Box<dyn StepEngine>> {
-    match args.get_or("engine", "native") {
-        "native" => Ok(Box::new(NativeEngine::new())),
-        "pjrt" => Ok(Box::new(PjrtEngine::from_default_dir()?)),
-        other => easycrash::bail!("unknown engine `{other}` (native|pjrt)"),
-    }
-}
+use easycrash::util::error::{Context, Result};
 
 const VALUED: &[&str] = &[
-    "app", "tests", "seed", "engine", "plan", "ts", "tau", "mtbf", "tchk", "out", "shards",
+    "app", "apps", "tests", "seed", "engine", "plan", "plans", "spec", "ts", "tau", "mtbf",
+    "tchk", "nvm", "out", "shards",
 ];
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&argv, VALUED).map_err(Error::msg)?;
+    let args = Args::parse(&argv, VALUED)?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
 
     match cmd {
         "probe" => probe(&args),
         "campaign" => cmd_campaign(&args),
+        "experiment" => cmd_experiment(&args),
         "list" => {
             for a in apps::all() {
                 println!("{:<10} {}", a.name(), a.description());
@@ -42,37 +40,33 @@ fn main() -> Result<()> {
     }
 }
 
-/// Build the campaign executor the flags ask for: sequential on the given
-/// engine, or sharded across native workers when `--shards > 1` (the
-/// dispatch rule lives on [`ShardedCampaign::run_or_seq`]).
-fn run_campaign(
-    c: &Campaign,
-    shards: usize,
-    app: &dyn apps::CrashApp,
-    plan: &PersistPlan,
-    engine: &mut dyn StepEngine,
-) -> easycrash::easycrash::CampaignResult {
-    ShardedCampaign {
-        campaign: *c,
-        shards,
+/// Spec from flags with a subcommand-specific default test count
+/// (`probe` 100, `campaign` 400); `--app`/`--plan` select the single
+/// cell these commands run — lists belong to `experiment`, so they are
+/// rejected here instead of silently dropping all but the first value.
+fn single_cell_spec(args: &Args, tests: usize) -> Result<ExperimentSpec> {
+    let spec = ExperimentSpec {
+        tests,
+        ..ExperimentSpec::default()
     }
-    .run_or_seq(app, plan, engine)
+    .with_args(args)?;
+    easycrash::ensure!(
+        spec.apps.len() == 1 && spec.plans.len() == 1,
+        "this subcommand runs one (app, plan) cell — use `easycrash experiment` for a matrix"
+    );
+    Ok(spec)
 }
 
-fn shards_from(args: &Args) -> Result<usize> {
-    args.shards_for_engine().map_err(Error::msg)
-}
-
-/// Quick timing probe of one app's instrumented run + campaign.
+/// Quick timing probe of one app's instrumented run + campaign (under
+/// `--plan`, default `none`).
 fn probe(args: &Args) -> Result<()> {
-    let name = args.get_or("app", "mg");
-    let tests = args.usize_or("tests", 100).map_err(Error::msg)?;
-    let shards = shards_from(args)?;
-    let app = apps::by_name(name).ok_or_else(|| easycrash::err!("unknown app {name}"))?;
-    let mut engine = engine_from(args)?;
-    let c = Campaign::new(tests, 1);
+    let runner = Runner::new(single_cell_spec(args, 100)?)?;
+    let spec = runner.spec();
+    let (name, tests, shards) = (spec.apps[0].clone(), spec.tests, spec.shards);
+    let app = apps::by_name(&name).expect("spec validated app names");
+    let plan = runner.resolve_plan(app.as_ref(), &spec.plans[0])?;
     let t0 = Instant::now();
-    let prof = c.profile(app.as_ref(), &PersistPlan::none());
+    let prof = runner.profile(app.as_ref(), &plan, spec.cfg);
     let t_prof = t0.elapsed();
     println!(
         "{name}: ops={} ({:.1}M) footprint={} cycles={:.3e} profile_wall={:.2?} ({:.1}M ops/s)",
@@ -83,8 +77,11 @@ fn probe(args: &Args) -> Result<()> {
         t_prof,
         prof.ops_total as f64 / t_prof.as_secs_f64() / 1e6,
     );
+    // Uncached on purpose: probe exists to time real work, and for
+    // `--plan critical` the memoized cell would be a cache hit (plan
+    // resolution already ran the workflow's campaigns).
     let t1 = Instant::now();
-    let res = run_campaign(&c, shards, app.as_ref(), &PersistPlan::none(), engine.as_mut());
+    let res = runner.execute_cell(app.as_ref(), &plan, spec.verified);
     println!(
         "campaign({tests}, shards={shards}): wall={:.2?} recomputability={} fractions={:?}",
         t1.elapsed(),
@@ -94,50 +91,19 @@ fn probe(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// One (app, plan) cell: `--plan` takes the DSL (`none`, `all`,
+/// `critical`, or `obj@region/x,...` — see `easycrash::easycrash::plan`).
 fn cmd_campaign(args: &Args) -> Result<()> {
-    let name = args.get_or("app", "mg");
-    let tests = args.usize_or("tests", 400).map_err(Error::msg)?;
-    let seed = args.u64_or("seed", 0xEC).map_err(Error::msg)?;
-    let shards = shards_from(args)?;
-    let app = apps::by_name(name).ok_or_else(|| easycrash::err!("unknown app {name}"))?;
-    let mut engine = engine_from(args)?;
-    let num_regions = app.regions().len();
-    let plan = match args.get_or("plan", "none") {
-        "none" => PersistPlan::none(),
-        "all" => {
-            let prof = Campaign::new(0, seed).profile(app.as_ref(), &PersistPlan::none());
-            let names: Vec<String> = prof
-                .candidates
-                .iter()
-                .map(|(_, n, _)| n.clone())
-                .filter(|n| n != "it")
-                .collect();
-            let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
-            PersistPlan::at_iter_end(&refs, num_regions, 1)
-        }
-        spec => {
-            // "obj@region/x" entries separated by commas; e.g. "u@3/1,r@3/2"
-            let mut entries = Vec::new();
-            for part in spec.split(',') {
-                let (obj, rest) = part
-                    .split_once('@')
-                    .ok_or_else(|| easycrash::err!("bad plan entry `{part}`"))?;
-                let (region, x) = match rest.split_once('/') {
-                    Some((r, x)) => (r.parse()?, x.parse()?),
-                    None => (rest.parse()?, 1),
-                };
-                entries.push(easycrash::easycrash::plan::PlanEntry {
-                    object: obj.to_string(),
-                    region,
-                    every_x: x,
-                });
-            }
-            PersistPlan { entries, clwb: false }
-        }
-    };
-    let c = Campaign::new(tests, seed);
+    let runner = Runner::new(single_cell_spec(args, 400)?)?;
+    let spec = runner.spec();
+    let (name, tests, shards) = (spec.apps[0].clone(), spec.tests, spec.shards);
+    let app = apps::by_name(&name).expect("spec validated app names");
+    // The timer starts before plan resolution: `--plan critical` runs
+    // the whole selection workflow there, and the final cell may then be
+    // a memoized hit — `wall` reports the command's actual work.
     let t0 = Instant::now();
-    let res = run_campaign(&c, shards, app.as_ref(), &plan, engine.as_mut());
+    let plan = runner.resolve_plan(app.as_ref(), &spec.plans[0])?;
+    let res = runner.campaign(app.as_ref(), &plan, spec.verified);
     let f = res.response_fractions();
     println!("app={name} tests={tests} shards={shards} wall={:.2?}", t0.elapsed());
     println!(
@@ -158,5 +124,49 @@ fn cmd_campaign(args: &Args) -> Result<()> {
             easycrash::util::pct(mean_inc)
         );
     }
+    Ok(())
+}
+
+/// Run a full experiment spec — the apps × plans scenario matrix — and
+/// write the typed JSON report. The spec comes from a file
+/// (`--spec exp.json`, overridable per-flag) or entirely from flags
+/// (`--apps mg,cg --plans "none;all;u@3/1"`).
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let spec = match args.get("spec") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading spec file {path}"))?;
+            ExperimentSpec::from_json(&text)?.with_args(args)?
+        }
+        None => ExperimentSpec::from_args(args)?,
+    };
+    let runner = Runner::new(spec)?.verbose(args.flag("verbose"));
+    let t0 = Instant::now();
+    let report = runner.run()?;
+    println!(
+        "== experiment: {} app(s) x {} plan(s), {} tests, seed {:#x}, {} shard(s) ==",
+        runner.spec().apps.len(),
+        runner.spec().plans.len(),
+        runner.spec().tests,
+        runner.spec().seed,
+        runner.spec().shards,
+    );
+    for cell in &report.cells {
+        let f = cell.result.response_fractions();
+        println!(
+            "{:<10} plan={:<24} recomputability={}  S1={} S2={} S3={} S4={}",
+            cell.app,
+            cell.plan_resolved,
+            easycrash::util::pct(cell.result.recomputability()),
+            easycrash::util::pct(f[0]),
+            easycrash::util::pct(f[1]),
+            easycrash::util::pct(f[2]),
+            easycrash::util::pct(f[3]),
+        );
+    }
+    println!("wall={:.2?}", t0.elapsed());
+    let out = args.get_or("out", "experiment_report.json");
+    report.write_json(out)?;
+    println!("[json] {out}");
     Ok(())
 }

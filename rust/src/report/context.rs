@@ -1,183 +1,101 @@
-//! Shared context for the report generators: configuration + memoized
-//! campaigns/workflows so figures that share measurements (Fig. 5/6,
-//! Table 1/4...) run each campaign once.
+//! Shared context for the report generators: a thin, figure-facing view
+//! over [`crate::api::Runner`].
 //!
-//! The caches are `Mutex<HashMap<_, Arc<_>>>` (not `RefCell`/`Rc`):
-//! cached reports are cheap `Arc` clones, and nothing in the context
-//! relies on single-threaded interior mutability — only the boxed engine
-//! (which may wrap a non-`Send` PJRT client) keeps the context itself
-//! pinned to one thread.
+//! All memoization (campaigns, profiles, workflows) lives in the runner,
+//! keyed by what is simulated — so figures that share measurements
+//! (Fig. 5/6, Table 1/4, the workflow steps...) run each campaign once,
+//! and the workflow's step campaigns are the *same* `Arc`s the figures
+//! consume. The context only adds the scalar knobs figures read directly
+//! (`tests`, `ts`, `tau`, `cfg`, ...) and the paper's three standard
+//! plan constructors.
 
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
+use crate::api::{ExperimentSpec, Runner};
 use crate::apps::{self, CrashApp};
-use crate::easycrash::workflow::{Workflow, WorkflowReport};
-use crate::easycrash::{Campaign, CampaignResult, PersistPlan, ShardedCampaign};
-use crate::runtime::{NativeEngine, StepEngine};
+use crate::easycrash::workflow::WorkflowReport;
+use crate::easycrash::{CampaignResult, PersistPlan};
 use crate::sim::SimConfig;
 use crate::util::cli::Args;
-use crate::util::error::Error;
 
 pub struct ReportCtx {
     pub tests: usize,
     pub seed: u64,
     pub ts: f64,
     pub tau: f64,
-    /// Campaign worker threads (`--shards N`). Validated at parse time:
-    /// sharding needs one engine per worker, so `> 1` requires the
-    /// (default) native engine — same rule as the probe/campaign
-    /// subcommands.
+    /// Campaign worker threads (`--shards N`). Validated at spec-build
+    /// time: sharding needs one engine per worker, so `> 1` requires the
+    /// (default) native engine — same rule as every other subcommand.
     pub shards: usize,
     pub cfg: SimConfig,
-    pub verbose: bool,
-    engine: Mutex<Box<dyn StepEngine>>,
-    workflows: Mutex<HashMap<String, Arc<WorkflowReport>>>,
-    campaigns: Mutex<HashMap<String, Arc<CampaignResult>>>,
+    runner: Runner,
 }
 
 impl ReportCtx {
     pub fn from_args(args: &Args) -> crate::util::error::Result<ReportCtx> {
-        let tests = args
-            .usize_or("tests", if args.flag("paper-scale") { 1000 } else { 200 })
-            .map_err(Error::msg)?;
-        let engine_name = args.get_or("engine", "native");
-        let engine: Box<dyn StepEngine> = match engine_name {
-            "native" => Box::new(NativeEngine::new()),
-            "pjrt" => Box::new(crate::runtime::PjrtEngine::from_default_dir()?),
-            other => crate::bail!("unknown engine `{other}`"),
-        };
-        let shards = args.shards_for_engine().map_err(Error::msg)?;
+        let spec = ExperimentSpec::from_args(args)?;
+        let runner = Runner::new(spec)?.verbose(args.flag("verbose"));
+        let s = runner.spec();
         Ok(ReportCtx {
-            tests,
-            seed: args.u64_or("seed", 0xEC).map_err(Error::msg)?,
-            ts: args.f64_or("ts", 0.03).map_err(Error::msg)?,
-            tau: args.f64_or("tau", 0.10).map_err(Error::msg)?,
-            shards,
-            cfg: SimConfig::mini(),
-            verbose: args.flag("verbose"),
-            engine: Mutex::new(engine),
-            workflows: Mutex::new(HashMap::new()),
-            campaigns: Mutex::new(HashMap::new()),
+            tests: s.tests,
+            seed: s.seed,
+            ts: s.ts,
+            tau: s.tau,
+            shards: s.shards,
+            cfg: s.cfg,
+            runner,
         })
     }
 
-    pub fn campaign_runner(&self) -> Campaign {
-        Campaign {
-            tests: self.tests,
-            seed: self.seed,
-            cfg: self.cfg,
-            verified: false,
-        }
+    /// The underlying unified runner.
+    pub fn runner(&self) -> &Runner {
+        &self.runner
     }
 
     /// Memoized full workflow for one app.
     pub fn workflow(&self, app: &dyn CrashApp) -> Arc<WorkflowReport> {
-        if let Some(w) = self.workflows.lock().unwrap().get(app.name()) {
-            return w.clone();
-        }
-        if self.verbose {
-            eprintln!("[workflow] {}", app.name());
-        }
-        let wf = Workflow {
-            tests: self.tests,
-            seed: self.seed,
-            ts: self.ts,
-            tau: self.tau,
-            cfg: self.cfg,
-        };
-        let rep = Arc::new(if self.shards > 1 {
-            wf.run_sharded(app, self.shards, &|| Box::new(NativeEngine::new()))
-        } else {
-            wf.run(app, self.engine.lock().unwrap().as_mut())
-        });
-        self.workflows
-            .lock()
-            .unwrap()
-            .insert(app.name().to_string(), rep.clone());
-        rep
+        self.runner.workflow(app)
     }
 
-    /// Memoized campaign under an arbitrary plan (keyed by `key`).
+    /// Memoized campaign under an arbitrary plan (keyed by the plan's
+    /// canonical DSL).
     pub fn campaign(
         &self,
         app: &dyn CrashApp,
-        key: &str,
         plan: &PersistPlan,
         verified: bool,
     ) -> Arc<CampaignResult> {
-        let full_key = format!("{}::{}{}", app.name(), key, if verified { "::vfy" } else { "" });
-        if let Some(c) = self.campaigns.lock().unwrap().get(&full_key) {
-            return c.clone();
-        }
-        if self.verbose {
-            eprintln!("[campaign] {full_key}");
-        }
-        let mut runner = self.campaign_runner();
-        runner.verified = verified;
-        let res = Arc::new(
-            ShardedCampaign {
-                campaign: runner,
-                shards: self.shards,
-            }
-            .run_or_seq(app, plan, self.engine.lock().unwrap().as_mut()),
-        );
-        self.campaigns.lock().unwrap().insert(full_key, res.clone());
-        res
+        self.runner.campaign(app, plan, verified)
     }
 
-    /// Profile-only run (no crashes) under a plan + optional NVM profile.
+    /// Memoized profile-only run (no crashes) under a plan + optional
+    /// NVM profile.
     pub fn profile(
         &self,
         app: &dyn CrashApp,
         plan: &PersistPlan,
         cfg: SimConfig,
-    ) -> CampaignResult {
-        Campaign {
-            tests: 0,
-            seed: self.seed,
-            cfg,
-            verified: false,
-        }
-        .profile(app, plan)
+    ) -> Arc<CampaignResult> {
+        self.runner.profile(app, plan, cfg)
     }
 
     /// Candidate object names of an app (excluding the iterator bookmark).
     pub fn candidate_names(&self, app: &dyn CrashApp) -> Vec<String> {
-        let prof = self.profile(app, &PersistPlan::none(), self.cfg);
-        prof.candidates
-            .iter()
-            .map(|(_, n, _)| n.clone())
-            .filter(|n| n != "it")
-            .collect()
+        self.runner.candidate_names(app)
     }
 
     /// The paper's three standard plans for an app: none / critical-at-
     /// iteration-end / all-candidates-at-iteration-end.
     pub fn plan_all_candidates(&self, app: &dyn CrashApp) -> PersistPlan {
-        let names = self.candidate_names(app);
-        let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
-        PersistPlan::at_iter_end(&refs, app.regions().len(), 1)
+        self.runner.plan_all_candidates(app)
     }
 
     pub fn plan_critical_iter_end(&self, app: &dyn CrashApp) -> PersistPlan {
-        let wf = self.workflow(app);
-        let refs: Vec<&str> = wf.critical.iter().map(|s| s.as_str()).collect();
-        if refs.is_empty() {
-            PersistPlan::none()
-        } else {
-            PersistPlan::at_iter_end(&refs, app.regions().len(), 1)
-        }
+        self.runner.plan_critical_iter_end(app)
     }
 
     pub fn plan_best(&self, app: &dyn CrashApp) -> PersistPlan {
-        let wf = self.workflow(app);
-        let refs: Vec<&str> = wf.critical.iter().map(|s| s.as_str()).collect();
-        if refs.is_empty() {
-            PersistPlan::none()
-        } else {
-            PersistPlan::at_every_region(&refs, app.regions().len())
-        }
+        self.runner.plan_best(app)
     }
 
     pub fn eval_apps(&self) -> Vec<Box<dyn CrashApp>> {

@@ -191,6 +191,11 @@ USAGE: easycrash <command> [--tests N] [--seed S] [--engine native|pjrt]
 --shards N runs every crash campaign across N worker threads; results are
 bit-identical to --shards 1 under the same seed (native engine only).
 
+plans are written in the plan DSL: `none`, `all` (all candidate objects at
+iteration end), `critical` (workflow-selected objects at iteration end), or
+explicit `obj@region/x` entries separated by commas (persist `obj` at the
+end of region `region` every `x` iterations; `/x` defaults to `/1`).
+
 paper artifacts:
   table1 fig3 fig4 fig5 fig6 table4 fig7 fig8 fig9 fig10 fig11
   all            regenerate everything (CSV under results/)
@@ -199,7 +204,12 @@ paper artifacts:
 tools:
   list                         list benchmarks
   probe    --app A [--tests N] [--shards N] timing probe for one app
-  campaign --app A --plan none|all|obj@region/x[,..] [--shards N]
+  campaign --app A --plan none|all|critical|obj@region/x[,..] [--shards N]
+  experiment [--spec FILE.json] [--apps A,B] [--plans P1;P2;..] [--out F]
+             [--verified|--no-verified]
+             run an apps x plans experiment spec end to end and write the
+             typed JSON report (flags override spec-file fields; plans are
+             `;`-separated DSL entries)
   workflow --app A             run + display the 4-step EasyCrash workflow"
     );
 }

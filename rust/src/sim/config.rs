@@ -91,10 +91,26 @@ impl NvmProfile {
         NvmProfile::BW6,
         NvmProfile::BW8,
     ];
+
+    /// Every named profile (spec files refer to these by name).
+    pub const ALL: [NvmProfile; 6] = [
+        NvmProfile::DRAM,
+        NvmProfile::LAT4X,
+        NvmProfile::LAT8X,
+        NvmProfile::BW6,
+        NvmProfile::BW8,
+        NvmProfile::OPTANE,
+    ];
+
+    /// Look a profile up by its `name` (the `"nvm"` field of
+    /// `ExperimentSpec` JSON).
+    pub fn by_name(name: &str) -> Option<NvmProfile> {
+        NvmProfile::ALL.into_iter().find(|p| p.name == name)
+    }
 }
 
 /// Full simulator configuration.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SimConfig {
     pub l1: CacheGeom,
     pub l2: CacheGeom,

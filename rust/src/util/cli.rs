@@ -2,8 +2,12 @@
 //!
 //! Supports `--flag`, `--key value`, `--key=value` and positional
 //! arguments, with typed getters and an auto-generated usage block.
+//! Every fallible getter reports through [`crate::util::error::Error`],
+//! like the rest of the crate.
 
 use std::collections::BTreeMap;
+
+use crate::util::error::Result;
 
 /// Parsed arguments for one subcommand.
 #[derive(Debug, Default, Clone)]
@@ -17,7 +21,7 @@ pub struct Args {
 
 impl Args {
     /// Parse `argv` given the set of option keys that expect values.
-    pub fn parse(argv: &[String], valued_keys: &[&str]) -> Result<Args, String> {
+    pub fn parse(argv: &[String], valued_keys: &[&str]) -> Result<Args> {
         let mut a = Args {
             valued: valued_keys.iter().map(|s| s.to_string()).collect(),
             ..Default::default()
@@ -32,7 +36,7 @@ impl Args {
                     i += 1;
                     let v = argv
                         .get(i)
-                        .ok_or_else(|| format!("--{body} expects a value"))?;
+                        .ok_or_else(|| crate::err!("--{body} expects a value"))?;
                     a.options.insert(body.to_string(), v.clone());
                 } else {
                     a.flags.push(body.to_string());
@@ -57,21 +61,21 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
-    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, String> {
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
         match self.get(name) {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|_| format!("--{name} expects an integer, got `{v}`")),
+                .map_err(|_| crate::err!("--{name} expects an integer, got `{v}`")),
         }
     }
 
-    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, String> {
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
         match self.get(name) {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|_| format!("--{name} expects an integer, got `{v}`")),
+                .map_err(|_| crate::err!("--{name} expects an integer, got `{v}`")),
         }
     }
 
@@ -79,32 +83,20 @@ impl Args {
     /// number of worker threads for `easycrash::ShardedCampaign`.
     /// Defaults to 1 (sequential); 0 is rejected rather than silently
     /// clamped.
-    pub fn shards_or(&self, default: usize) -> Result<usize, String> {
+    pub fn shards_or(&self, default: usize) -> Result<usize> {
         let n = self.usize_or("shards", default)?;
         if n == 0 {
-            return Err("--shards must be >= 1".into());
+            crate::bail!("--shards must be >= 1");
         }
         Ok(n)
     }
 
-    /// `--shards` validated against `--engine`: sharding spawns one
-    /// native engine per worker, so `> 1` requires the (default) native
-    /// engine. The single source of truth for every campaign-running
-    /// command's shards/engine rule.
-    pub fn shards_for_engine(&self) -> Result<usize, String> {
-        let n = self.shards_or(1)?;
-        if n > 1 && self.get_or("engine", "native") != "native" {
-            return Err("--shards > 1 requires --engine native (one engine per worker)".into());
-        }
-        Ok(n)
-    }
-
-    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, String> {
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
         match self.get(name) {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|_| format!("--{name} expects a number, got `{v}`")),
+                .map_err(|_| crate::err!("--{name} expects a number, got `{v}`")),
         }
     }
 }
@@ -154,17 +146,5 @@ mod tests {
         assert_eq!(a.shards_or(1).unwrap(), 1);
         let a = Args::parse(&argv("--shards 0"), &["shards"]).unwrap();
         assert!(a.shards_or(1).is_err());
-    }
-
-    #[test]
-    fn shards_engine_rule_is_enforced() {
-        let a = Args::parse(&argv("--shards 4"), &["shards", "engine"]).unwrap();
-        assert_eq!(a.shards_for_engine().unwrap(), 4);
-        let a = Args::parse(&argv("--shards 4 --engine native"), &["shards", "engine"]).unwrap();
-        assert_eq!(a.shards_for_engine().unwrap(), 4);
-        let a = Args::parse(&argv("--shards 4 --engine pjrt"), &["shards", "engine"]).unwrap();
-        assert!(a.shards_for_engine().is_err());
-        let a = Args::parse(&argv("--shards 1 --engine pjrt"), &["shards", "engine"]).unwrap();
-        assert_eq!(a.shards_for_engine().unwrap(), 1, "sequential pjrt stays allowed");
     }
 }

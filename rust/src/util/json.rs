@@ -1,8 +1,12 @@
-//! Minimal JSON writer (serde is unavailable offline).
+//! Minimal JSON reader/writer (serde is unavailable offline).
 //!
-//! Only what the report generators need: objects, arrays, strings, numbers,
-//! booleans, with correct escaping. Output is deterministic (insertion
-//! order preserved).
+//! Only what the report generators and the `api` spec files need:
+//! objects, arrays, strings, numbers, booleans, with correct escaping.
+//! Output is deterministic (insertion order preserved); [`Json::parse`]
+//! is a small recursive-descent reader so `ExperimentSpec` files round-
+//! trip without serde.
+
+use crate::util::error::Result;
 
 /// A JSON value builder.
 #[derive(Clone, Debug, PartialEq)]
@@ -19,6 +23,79 @@ pub enum Json {
 impl Json {
     pub fn obj() -> Json {
         Json::Obj(Vec::new())
+    }
+
+    /// Parse a JSON document (the writer's inverse: whatever `to_string`
+    /// / `to_pretty` emit parses back to an equal value, modulo the
+    /// Int/Num split for integral floats). Rejects trailing garbage.
+    pub fn parse(s: &str) -> Result<Json> {
+        let mut p = Parser {
+            bytes: s.as_bytes(),
+            pos: 0,
+        };
+        p.skip_ws();
+        let v = p.value(0)?;
+        p.skip_ws();
+        crate::ensure!(p.pos == p.bytes.len(), "trailing characters at byte {}", p.pos);
+        Ok(v)
+    }
+
+    /// Look a key up in an object (`None` for absent keys or non-objects).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fs) => fs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Numeric value, accepting either representation.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            Json::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Json::Int(i) => Some(*i),
+            // Floats only count as integers within f64's exact range
+            // (2^53) — beyond it `as i64` would silently saturate.
+            Json::Num(x) if *x == x.trunc() && x.abs() <= 9_007_199_254_740_992.0 => {
+                Some(*x as i64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_i64().and_then(|i| u64::try_from(i).ok())
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs),
+            _ => None,
+        }
     }
 
     /// Insert a key into an object (panics on non-objects — builder misuse).
@@ -114,6 +191,265 @@ impl Json {
             _ => self.write(out),
         }
     }
+}
+
+/// Recursive-descent JSON reader over the raw bytes.
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+/// Maximum container nesting [`Json::parse`] accepts. Spec/report
+/// documents nest 3 deep; the bound turns a pathological input (100k
+/// `[`s) into an error instead of a stack overflow.
+const MAX_DEPTH: usize = 128;
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        crate::ensure!(
+            self.peek() == Some(b),
+            "expected `{}` at byte {}",
+            b as char,
+            self.pos
+        );
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json> {
+        crate::ensure!(
+            self.bytes[self.pos..].starts_with(word.as_bytes()),
+            "invalid literal at byte {}",
+            self.pos
+        );
+        self.pos += word.len();
+        Ok(v)
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json> {
+        crate::ensure!(depth < MAX_DEPTH, "JSON nests deeper than {MAX_DEPTH} levels");
+        match self.peek() {
+            None => crate::bail!("unexpected end of JSON input"),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => {
+                self.pos += 1;
+                let mut xs = Vec::new();
+                self.skip_ws();
+                if self.peek() == Some(b']') {
+                    self.pos += 1;
+                    return Ok(Json::Arr(xs));
+                }
+                loop {
+                    self.skip_ws();
+                    xs.push(self.value(depth + 1)?);
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b']') => {
+                            self.pos += 1;
+                            return Ok(Json::Arr(xs));
+                        }
+                        _ => crate::bail!("expected `,` or `]` at byte {}", self.pos),
+                    }
+                }
+            }
+            Some(b'{') => {
+                self.pos += 1;
+                let mut fs = Vec::new();
+                self.skip_ws();
+                if self.peek() == Some(b'}') {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fs));
+                }
+                loop {
+                    self.skip_ws();
+                    let k = self.string()?;
+                    self.skip_ws();
+                    self.expect(b':')?;
+                    self.skip_ws();
+                    let v = self.value(depth + 1)?;
+                    fs.push((k, v));
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b'}') => {
+                            self.pos += 1;
+                            return Ok(Json::Obj(fs));
+                        }
+                        _ => crate::bail!("expected `,` or `}}` at byte {}", self.pos),
+                    }
+                }
+            }
+            Some(_) => self.number(),
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let start = self.pos;
+            // Consume a run of plain bytes, then re-validate as UTF-8 in
+            // one go (the input is a &str, so boundaries are safe).
+            while let Some(&b) = self.bytes.get(self.pos) {
+                if b == b'"' || b == b'\\' {
+                    break;
+                }
+                crate::ensure!(b >= 0x20, "unescaped control character in string");
+                self.pos += 1;
+            }
+            out.push_str(std::str::from_utf8(&self.bytes[start..self.pos]).expect("input was str"));
+            match self.peek() {
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    let esc = self
+                        .peek()
+                        .ok_or_else(|| crate::err!("unterminated escape"))?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let code = self.hex4()?;
+                            let c = if (0xD800..=0xDBFF).contains(&code) {
+                                // High surrogate: JSON writes non-BMP
+                                // chars as a \uXXXX\uXXXX pair.
+                                crate::ensure!(
+                                    self.bytes[self.pos..].starts_with(b"\\u"),
+                                    "unpaired surrogate \\u{code:04x}"
+                                );
+                                self.pos += 2;
+                                let low = self.hex4()?;
+                                crate::ensure!(
+                                    (0xDC00..=0xDFFF).contains(&low),
+                                    "invalid low surrogate \\u{low:04x}"
+                                );
+                                char::from_u32(0x10000 + ((code - 0xD800) << 10) + (low - 0xDC00))
+                                    .ok_or_else(|| crate::err!("bad surrogate pair"))?
+                            } else if (0xDC00..=0xDFFF).contains(&code) {
+                                crate::bail!("unpaired surrogate \\u{code:04x}")
+                            } else {
+                                char::from_u32(code).expect("non-surrogate BMP scalar")
+                            };
+                            out.push(c);
+                        }
+                        other => crate::bail!("unknown escape `\\{}`", other as char),
+                    }
+                }
+                _ => crate::bail!("unterminated string"),
+            }
+        }
+    }
+
+    /// Exactly four hex digits of a `\u` escape (strict: no sign, no
+    /// whitespace — `u32::from_str_radix` would accept a leading `+`).
+    fn hex4(&mut self) -> Result<u32> {
+        crate::ensure!(self.pos + 4 <= self.bytes.len(), "truncated \\u escape");
+        let mut code = 0u32;
+        for &b in &self.bytes[self.pos..self.pos + 4] {
+            let d = (b as char)
+                .to_digit(16)
+                .ok_or_else(|| crate::err!("bad \\u escape digit `{}`", b as char))?;
+            code = code * 16 + d;
+        }
+        self.pos += 4;
+        Ok(code)
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let lex = std::str::from_utf8(&self.bytes[start..self.pos]).expect("ascii");
+        crate::ensure!(
+            is_json_number(lex),
+            "expected a JSON value at byte {start} (got `{lex}`)"
+        );
+        if !lex.contains(['.', 'e', 'E']) {
+            if let Ok(i) = lex.parse::<i64>() {
+                return Ok(Json::Int(i));
+            }
+        }
+        lex.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| crate::err!("bad number `{lex}` at byte {start}"))
+    }
+}
+
+/// Strict JSON number grammar (`-?(0|[1-9][0-9]*)(\.[0-9]+)?([eE][+-]?
+/// [0-9]+)?`). Rust's `FromStr` is more lenient (`+5`, `.5`, `5.`); a
+/// document we accept must stay readable by every other JSON tool.
+fn is_json_number(s: &str) -> bool {
+    let b = s.as_bytes();
+    let mut i = 0;
+    if b.get(i) == Some(&b'-') {
+        i += 1;
+    }
+    match b.get(i) {
+        Some(b'0') => i += 1,
+        Some(c) if c.is_ascii_digit() => {
+            while i < b.len() && b[i].is_ascii_digit() {
+                i += 1;
+            }
+        }
+        _ => return false,
+    }
+    if b.get(i) == Some(&b'.') {
+        i += 1;
+        let frac = i;
+        while i < b.len() && b[i].is_ascii_digit() {
+            i += 1;
+        }
+        if i == frac {
+            return false;
+        }
+    }
+    if matches!(b.get(i), Some(b'e') | Some(b'E')) {
+        i += 1;
+        if matches!(b.get(i), Some(b'+') | Some(b'-')) {
+            i += 1;
+        }
+        let exp = i;
+        while i < b.len() && b[i].is_ascii_digit() {
+            i += 1;
+        }
+        if i == exp {
+            return false;
+        }
+    }
+    i == b.len()
 }
 
 fn write_num(x: f64, out: &mut String) {
@@ -220,5 +556,72 @@ mod tests {
         let j = Json::obj().set("a", vec![1i64, 2i64]);
         let p = j.to_pretty();
         assert!(p.contains("\"a\": [\n"));
+    }
+
+    #[test]
+    fn parse_roundtrips_writer_output() {
+        let j = Json::obj()
+            .set("name", "mg\n\"q\"")
+            .set("recomp", 0.83)
+            .set("tests", 400usize)
+            .set("ok", true)
+            .set("none", Json::Null)
+            .set("series", vec![1.0, 2.5])
+            .set("nested", Json::obj().set("k", -7i64));
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        assert_eq!(Json::parse(&j.to_pretty()).unwrap(), j);
+    }
+
+    #[test]
+    fn parse_accepts_plain_documents() {
+        assert_eq!(Json::parse(" [1, 2.5, \"x\"] ").unwrap(),
+            Json::Arr(vec![Json::Int(1), Json::Num(2.5), Json::Str("x".into())]));
+        assert_eq!(Json::parse("{}").unwrap(), Json::obj());
+        assert_eq!(Json::parse("-12").unwrap(), Json::Int(-12));
+        assert_eq!(Json::parse("1e3").unwrap(), Json::Num(1000.0));
+        assert_eq!(Json::parse("\"a\\u0041b\"").unwrap(), Json::Str("aAb".into()));
+        // Surrogate pairs combine into the encoded scalar.
+        assert_eq!(
+            Json::parse("\"\\ud83d\\ude00\"").unwrap(),
+            Json::Str("\u{1F600}".into())
+        );
+    }
+
+    #[test]
+    fn parse_rejects_bad_unicode_escapes() {
+        for bad in [
+            "\"\\u+0FF\"",        // sign-prefixed pseudo-hex
+            "\"\\u00g1\"",        // non-hex digit
+            "\"\\ud800\"",        // lone high surrogate
+            "\"\\ude00\"",        // lone low surrogate
+            "\"\\ud83dx\"",       // high surrogate not followed by \u
+            "\"\\ud83d\\u0041\"", // high surrogate + non-low-surrogate
+        ] {
+            assert!(Json::parse(bad).is_err(), "`{bad}` must not parse");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_input() {
+        for bad in ["", "{", "[1,]", "{\"a\":}", "tru", "1 2", "\"open", "{\"a\" 1}"] {
+            assert!(Json::parse(bad).is_err(), "`{bad}` must not parse");
+        }
+        // Rust-parseable but not JSON: strict number grammar only.
+        for bad in ["+5", ".5", "5.", "01", "1e", "1e+", "-", "--1"] {
+            assert!(Json::parse(bad).is_err(), "`{bad}` is not a JSON number");
+        }
+    }
+
+    #[test]
+    fn accessors() {
+        let j = Json::parse("{\"s\":\"x\",\"i\":3,\"f\":2.5,\"b\":true,\"a\":[1]}").unwrap();
+        assert_eq!(j.get("s").and_then(Json::as_str), Some("x"));
+        assert_eq!(j.get("i").and_then(Json::as_usize), Some(3));
+        assert_eq!(j.get("i").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(j.get("f").and_then(Json::as_f64), Some(2.5));
+        assert_eq!(j.get("f").and_then(Json::as_i64), None);
+        assert_eq!(j.get("b").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.get("a").and_then(Json::as_arr).map(<[Json]>::len), Some(1));
+        assert!(j.get("missing").is_none());
     }
 }

@@ -1,0 +1,420 @@
+//! The typed experiment API: plan-DSL round-trips and rejections, spec
+//! JSON round-trips, the report's golden JSON schema, and the acceptance
+//! parity proof — `CampaignResult`s produced through
+//! `ExperimentSpec`/`Runner` are bit-identical to the pre-redesign
+//! direct `Campaign`/`ShardedCampaign` wiring for the same
+//! `(app, plan, tests, seed, shards)`.
+
+use std::sync::Arc;
+
+use easycrash::api::{EngineKind, ExperimentSpec, Runner};
+use easycrash::apps::by_name;
+use easycrash::easycrash::{Campaign, CampaignResult, PersistPlan, PlanSpec, ShardedCampaign};
+use easycrash::runtime::NativeEngine;
+use easycrash::util::json::Json;
+
+// -- plan DSL ---------------------------------------------------------------
+
+#[test]
+fn plan_dsl_round_trips_through_the_pretty_printer() {
+    for src in [
+        "none",
+        "all",
+        "critical",
+        "u@3",
+        "u@3/2",
+        "u@3,r@3/2,it@0",
+        "u@0/17",
+    ] {
+        let spec = PlanSpec::parse(src).unwrap();
+        let printed = spec.to_string();
+        let reparsed = PlanSpec::parse(&printed).unwrap();
+        assert_eq!(spec, reparsed, "`{src}` -> `{printed}` must reparse equal");
+    }
+    // `/1` is the default frequency: the printer normalizes it away and
+    // the normalized form still parses to the same plan.
+    let verbose = PlanSpec::parse("u@3/1,r@2/1").unwrap();
+    assert_eq!(verbose.to_string(), "u@3,r@2");
+    assert_eq!(PlanSpec::parse("u@3,r@2").unwrap(), verbose);
+    // Whitespace around entries is tolerated.
+    assert_eq!(PlanSpec::parse(" u@3 , r@2 ").unwrap(), verbose);
+}
+
+#[test]
+fn plan_dsl_rejects_malformed_specs() {
+    for bad in [
+        "",
+        "   ",
+        "u",          // no @
+        "@3",         // empty object
+        "u@",         // empty region
+        "u@x",        // non-numeric region
+        "u@3/",       // empty frequency
+        "u@3/x",      // non-numeric frequency
+        "u@3/0",      // every_x == 0
+        "u@3,,r@2",   // empty entry in list
+        "u@-1",       // negative region
+    ] {
+        assert!(PlanSpec::parse(bad).is_err(), "`{bad}` must be rejected");
+    }
+}
+
+#[test]
+fn plan_validation_catches_app_mismatches() {
+    let objects = vec!["x".to_string(), "y".to_string()];
+    // Unknown object.
+    assert!(PlanSpec::parse_for("z@0", &objects, 2).is_err());
+    // Region out of range (toy has 2 regions: 0 and 1).
+    assert!(PlanSpec::parse_for("x@2", &objects, 2).is_err());
+    // In-range entries pass.
+    let ok = PlanSpec::parse_for("x@1,y@0/3", &objects, 2).unwrap();
+    assert_eq!(ok.to_string(), "x@1,y@0/3");
+    // Shorthands are app-valid by construction.
+    PlanSpec::parse_for("all", &objects, 2).unwrap();
+}
+
+#[test]
+fn all_shorthand_equals_explicit_candidate_list() {
+    let app = by_name("toy").unwrap();
+    let runner = Runner::new(
+        ExperimentSpec::builder().app("toy").tests(0).build().unwrap(),
+    )
+    .unwrap();
+    let via_shorthand = runner.resolve_plan(app.as_ref(), &PlanSpec::All).unwrap();
+    // toy's candidates are x and y (the iterator bookmark is excluded).
+    assert_eq!(runner.candidate_names(app.as_ref()), vec!["x", "y"]);
+    let explicit = runner
+        .resolve_plan(
+            app.as_ref(),
+            &PlanSpec::parse("x@1,y@1").unwrap(),
+        )
+        .unwrap();
+    assert_eq!(via_shorthand.entries, explicit.entries);
+    assert_eq!(via_shorthand.dsl(), "x@1,y@1");
+}
+
+#[test]
+fn explicit_entries_may_persist_the_iterator_bookmark() {
+    // Fig. 4a's first row persists `it` alone — the resolver must accept
+    // it even though the `all` shorthand excludes it.
+    let app = by_name("toy").unwrap();
+    let runner = Runner::new(
+        ExperimentSpec::builder().app("toy").tests(0).build().unwrap(),
+    )
+    .unwrap();
+    let plan = runner
+        .resolve_plan(app.as_ref(), &PlanSpec::parse("it@1").unwrap())
+        .unwrap();
+    assert_eq!(plan.dsl(), "it@1");
+    // Unknown objects and out-of-range regions still fail at resolve.
+    assert!(runner
+        .resolve_plan(app.as_ref(), &PlanSpec::parse("nope@1").unwrap())
+        .is_err());
+    assert!(runner
+        .resolve_plan(app.as_ref(), &PlanSpec::parse("x@9").unwrap())
+        .is_err());
+}
+
+#[test]
+fn explicit_entries_may_persist_non_candidate_objects() {
+    // bt registers `forcing` with candidate=false; the old CLI accepted
+    // persisting it, and the resolver must keep doing so.
+    let app = by_name("bt").unwrap();
+    let runner = Runner::new(
+        ExperimentSpec::builder().app("bt").tests(0).build().unwrap(),
+    )
+    .unwrap();
+    let plan = runner
+        .resolve_plan(app.as_ref(), &PlanSpec::parse("forcing@0").unwrap())
+        .unwrap();
+    assert_eq!(plan.dsl(), "forcing@0");
+}
+
+#[test]
+fn persist_plan_dsl_is_canonical() {
+    assert_eq!(PersistPlan::none().dsl(), "none");
+    assert_eq!(PersistPlan::at_iter_end(&["u", "r"], 4, 2).dsl(), "u@3/2,r@3/2");
+    let mut clwb = PersistPlan::at_region(&["u"], 1, 1);
+    clwb.clwb = true;
+    assert_eq!(clwb.dsl(), "u@1+clwb");
+}
+
+// -- spec serialization -----------------------------------------------------
+
+#[test]
+fn spec_round_trips_through_json() {
+    let spec = ExperimentSpec::builder()
+        .apps(["toy", "is"])
+        .plan(PlanSpec::None)
+        .plan_str("x@1/2")
+        .unwrap()
+        .plan(PlanSpec::All)
+        .tests(42)
+        .seed(99)
+        .shards(4)
+        .verified(true)
+        .ts(0.05)
+        .tau(0.2)
+        .build()
+        .unwrap();
+    let text = spec.to_json().to_pretty();
+    let back = ExperimentSpec::from_json(&text).unwrap();
+    assert_eq!(back, spec);
+}
+
+#[test]
+fn custom_geometry_round_trips_and_flag_conflict_errors() {
+    use easycrash::sim::{CacheGeom, SimConfig};
+    // A builder-set custom geometry serializes its dimensions and loads
+    // back identically (reports stay reproducible from their spec).
+    let cfg = SimConfig {
+        l1: CacheGeom::new(8 * 1024, 4),
+        l2: CacheGeom::new(32 * 1024, 8),
+        l3: CacheGeom::new(128 * 1024, 16),
+        ..SimConfig::mini()
+    };
+    let spec = ExperimentSpec::builder().app("toy").cfg(cfg).build().unwrap();
+    let back = ExperimentSpec::from_json(&spec.to_json().to_pretty()).unwrap();
+    assert_eq!(back, spec);
+    // `cache` without geometry "custom" is rejected.
+    assert!(ExperimentSpec::from_json(
+        r#"{"apps":["toy"],"cache":{"l1":{"size":8192,"ways":4}}}"#
+    )
+    .is_err());
+    // Conflicting verified flags are rejected rather than resolved.
+    let argv: Vec<String> = ["--app", "toy", "--verified", "--no-verified"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let args = easycrash::util::cli::Args::parse(&argv, &["app"]).unwrap();
+    assert!(ExperimentSpec::from_args(&args).is_err());
+}
+
+#[test]
+fn spec_from_json_validates() {
+    // Unknown app.
+    assert!(ExperimentSpec::from_json(r#"{"apps":["nope"]}"#).is_err());
+    // Bad plan DSL inside the file.
+    assert!(ExperimentSpec::from_json(r#"{"apps":["toy"],"plans":["u@1/0"]}"#).is_err());
+    // Shards/engine rule.
+    assert!(
+        ExperimentSpec::from_json(r#"{"apps":["toy"],"engine":"pjrt","shards":4}"#).is_err()
+    );
+    // Unknown NVM profile / geometry.
+    assert!(ExperimentSpec::from_json(r#"{"apps":["toy"],"nvm":"flux"}"#).is_err());
+    assert!(ExperimentSpec::from_json(r#"{"apps":["toy"],"geometry":"huge"}"#).is_err());
+    // Seeds beyond i64 can't round-trip through JSON integers.
+    assert!(ExperimentSpec::from_json(r#"{"apps":["toy"],"seed":1e300}"#).is_err());
+    // Integral-float fields outside f64's exact range are rejected, not
+    // saturated.
+    assert!(ExperimentSpec::from_json(r#"{"apps":["toy"],"tests":1e300}"#).is_err());
+    // A nesting bomb errors instead of overflowing the stack.
+    let bomb = "[".repeat(100_000);
+    assert!(easycrash::util::json::Json::parse(&bomb).is_err());
+    // Unknown keys are rejected, not silently defaulted (typo safety),
+    // duplicates likewise, and a non-object document is rejected outright.
+    assert!(ExperimentSpec::from_json(r#"{"apps":["toy"],"test":1000}"#).is_err());
+    assert!(ExperimentSpec::from_json(r#"{"apps":["toy"],"tests":100,"tests":1000}"#).is_err());
+    assert!(ExperimentSpec::from_json(r#"[1,2]"#).is_err());
+    // Minimal valid file: defaults fill the rest.
+    let spec = ExperimentSpec::from_json(r#"{"apps":["toy"]}"#).unwrap();
+    assert_eq!(spec.plans, vec![PlanSpec::None]);
+    assert_eq!(spec.engine, EngineKind::Native);
+}
+
+#[test]
+fn flags_path_enforces_the_shards_engine_rule() {
+    let argv: Vec<String> = ["--app", "toy", "--shards", "4", "--engine", "pjrt"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let args = easycrash::util::cli::Args::parse(&argv, &["app", "shards", "engine"]).unwrap();
+    assert!(ExperimentSpec::from_args(&args).is_err());
+}
+
+// -- report golden schema ---------------------------------------------------
+
+#[test]
+fn experiment_report_json_matches_golden_schema() {
+    let spec = ExperimentSpec::builder()
+        .app("toy")
+        .plan(PlanSpec::None)
+        .plan_str("x@1,y@1")
+        .unwrap()
+        .tests(12)
+        .seed(5)
+        .build()
+        .unwrap();
+    let runner = Runner::new(spec).unwrap();
+    let report = runner.run().unwrap();
+    assert_eq!(report.cells.len(), 2, "1 app x 2 plans");
+
+    let doc = Json::parse(&report.to_json().to_pretty()).expect("report JSON must parse");
+    assert_eq!(
+        doc.get("schema").and_then(Json::as_str),
+        Some("easycrash.experiment/v1")
+    );
+    let spec_j = doc.get("spec").expect("spec embedded");
+    assert_eq!(spec_j.get("schema").and_then(Json::as_str), Some("easycrash.spec/v1"));
+    assert_eq!(spec_j.get("tests").and_then(Json::as_usize), Some(12));
+
+    let cells = doc.get("cells").and_then(Json::as_arr).expect("cells array");
+    assert_eq!(cells.len(), 2);
+    for cell in cells {
+        // The golden key set every consumer of the report relies on.
+        for key in [
+            "app",
+            "plan",
+            "plan_resolved",
+            "verified",
+            "tests",
+            "recomputability",
+            "fractions",
+            "mean_extra_iters",
+            "ops_total",
+            "cycles",
+            "persist_ops",
+            "persist_cycles",
+            "footprint",
+            "num_regions",
+            "region_recomputability",
+            "candidates",
+        ] {
+            assert!(cell.get(key).is_some(), "cell is missing `{key}`");
+        }
+        assert_eq!(cell.get("app").and_then(Json::as_str), Some("toy"));
+        assert_eq!(cell.get("tests").and_then(Json::as_usize), Some(12));
+        let recomp = cell.get("recomputability").and_then(Json::as_f64).unwrap();
+        assert!((0.0..=1.0).contains(&recomp));
+        let fractions = cell.get("fractions").and_then(Json::as_arr).unwrap();
+        assert_eq!(fractions.len(), 4);
+        let sum: f64 = fractions.iter().map(|x| x.as_f64().unwrap()).sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+        let cands = cell.get("candidates").and_then(Json::as_arr).unwrap();
+        assert!(!cands.is_empty());
+        for c in cands {
+            for key in ["name", "bytes", "mean_inconsistency"] {
+                assert!(c.get(key).is_some(), "candidate is missing `{key}`");
+            }
+        }
+    }
+    assert_eq!(cells[0].get("plan").and_then(Json::as_str), Some("none"));
+    assert_eq!(cells[1].get("plan").and_then(Json::as_str), Some("x@1,y@1"));
+    assert_eq!(
+        cells[1].get("plan_resolved").and_then(Json::as_str),
+        Some("x@1,y@1")
+    );
+}
+
+// -- parity: API wiring == direct wiring ------------------------------------
+
+fn assert_bit_identical(a: &CampaignResult, b: &CampaignResult, label: &str) {
+    assert_eq!(a.records, b.records, "{label}: records diverged");
+    assert_eq!(a.candidates, b.candidates, "{label}: candidates diverged");
+    assert_eq!(a.ops_total, b.ops_total, "{label}: ops_total diverged");
+    assert_eq!(a.ops_main_start, b.ops_main_start, "{label}: ops_main_start diverged");
+    assert_eq!(a.cycles, b.cycles, "{label}: cycles diverged");
+    assert_eq!(a.region_cycles, b.region_cycles, "{label}: region cycles diverged");
+    assert_eq!(a.persist_ops, b.persist_ops, "{label}: persist ops diverged");
+    assert_eq!(a.persist_cycles, b.persist_cycles, "{label}: persist cycles diverged");
+    assert_eq!(a.stats, b.stats, "{label}: hierarchy stats diverged");
+    assert_eq!(a.footprint, b.footprint, "{label}: footprint diverged");
+}
+
+/// Acceptance: for the same `(app, plan, tests, seed, shards)`, a
+/// campaign executed through the typed API is bit-identical to the
+/// pre-redesign direct wiring (sequential `Campaign::run` for one
+/// shard, `ShardedCampaign::run` for several).
+#[test]
+fn runner_campaigns_match_direct_wiring_bit_for_bit() {
+    let (tests, seed) = (30, 0xEC);
+    for app_name in ["toy", "is"] {
+        let app = by_name(app_name).unwrap();
+        for plan_dsl in ["none", "all"] {
+            for shards in [1usize, 4] {
+                let spec = ExperimentSpec::builder()
+                    .app(app_name)
+                    .plan_str(plan_dsl)
+                    .unwrap()
+                    .tests(tests)
+                    .seed(seed)
+                    .shards(shards)
+                    .build()
+                    .unwrap();
+                let runner = Runner::new(spec).unwrap();
+                let plan = runner
+                    .resolve_plan(app.as_ref(), &PlanSpec::parse(plan_dsl).unwrap())
+                    .unwrap();
+                let via_api = runner.campaign(app.as_ref(), &plan, false);
+
+                // The pre-redesign wiring, assembled by hand.
+                let direct = if shards == 1 {
+                    let mut eng = NativeEngine::new();
+                    Campaign::new(tests, seed).run(app.as_ref(), &plan, &mut eng)
+                } else {
+                    ShardedCampaign::new(tests, seed, shards).run(app.as_ref(), &plan)
+                };
+                assert_bit_identical(
+                    &via_api,
+                    &direct,
+                    &format!("{app_name}/{plan_dsl}/shards{shards}"),
+                );
+            }
+        }
+    }
+}
+
+/// The runner memoizes by simulation key: asking twice returns the same
+/// `Arc`, and the workflow's step-1 campaign IS the `none` cell.
+#[test]
+fn runner_memoizes_cells_and_shares_them_with_the_workflow() {
+    let app = by_name("toy").unwrap();
+    let spec = ExperimentSpec::builder()
+        .app("toy")
+        .tests(40)
+        .seed(3)
+        .build()
+        .unwrap();
+    let runner = Runner::new(spec).unwrap();
+    let a = runner.campaign(app.as_ref(), &PersistPlan::none(), false);
+    let b = runner.campaign(app.as_ref(), &PersistPlan::none(), false);
+    assert!(Arc::ptr_eq(&a, &b), "same plan key must hit the cache");
+    // Verified campaigns are distinct cells.
+    let v = runner.campaign(app.as_ref(), &PersistPlan::none(), true);
+    assert!(!Arc::ptr_eq(&a, &v));
+    // The workflow's characterization campaign is the shared `none` cell.
+    let wf = runner.workflow(app.as_ref());
+    assert!(
+        Arc::ptr_eq(&wf.base, &a),
+        "workflow step 1 must be the memoized characterization cell"
+    );
+    // And the workflow itself is memoized.
+    assert!(Arc::ptr_eq(&wf, &runner.workflow(app.as_ref())));
+}
+
+/// `experiment` writes a parseable document whose cells agree with the
+/// in-memory results (smoke for the CLI/CI path, without spawning the
+/// binary).
+#[test]
+fn report_written_to_disk_parses_back() {
+    let spec = ExperimentSpec::builder()
+        .app("toy")
+        .tests(8)
+        .seed(11)
+        .build()
+        .unwrap();
+    let runner = Runner::new(spec).unwrap();
+    let report = runner.run().unwrap();
+    let dir = std::env::temp_dir().join("easycrash_api_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("report.json");
+    report.write_json(path.to_str().unwrap()).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let doc = Json::parse(&text).unwrap();
+    let cells = doc.get("cells").and_then(Json::as_arr).unwrap();
+    assert_eq!(cells.len(), 1);
+    assert_eq!(
+        cells[0].get("recomputability").and_then(Json::as_f64),
+        Some(report.cells[0].result.recomputability())
+    );
+}
