@@ -1,0 +1,96 @@
+//! Failure-timeline simulator throughput: how fast `model::trace` chews
+//! through simulated failure events (the perf trajectory of the new
+//! subsystem, next to the campaign benches).
+//!
+//! Each measured call runs a full `TraceSim` whose scenario is sized to
+//! ~10⁵ failure events (500 trials × ~200 failures each: 200 MTBFs of
+//! useful work per trial), so `units/s` is simulated failures per second
+//! and trials/s is `units_per_s / 200`. Results are persisted as
+//! machine-readable JSON (`BENCH_trace.json` at the repo root); CI
+//! smoke-runs this bench and uploads the artifact.
+
+use easycrash::benchlib::Bench;
+use easycrash::model::efficiency::EfficiencyInput;
+use easycrash::model::trace::{FailureDist, RecoveryPolicy, TraceInput, TraceSim};
+
+fn main() {
+    let mut b = Bench::new("trace");
+    let mtbf = 43_200.0;
+    let model = EfficiencyInput::paper(mtbf, 320.0, 0.8, 0.015, 0.9).expect("valid §7 inputs");
+    let scenario = |policy, dist| TraceInput {
+        model,
+        policy,
+        dist,
+        // ~200 failures per trial at this MTBF.
+        work: 200.0 * mtbf,
+        interval: None,
+    };
+
+    for (case, policy) in [
+        ("checkpoint_only", RecoveryPolicy::CheckpointOnly),
+        ("easycrash", RecoveryPolicy::EasyCrashPlusCheckpoint),
+    ] {
+        let inp = scenario(policy, FailureDist::Exponential);
+        for shards in [1usize, 4] {
+            let sim = TraceSim {
+                trials: 500,
+                seed: 1,
+                shards,
+            };
+            b.run_throughput(&format!("{case}_failures100k_shards{shards}"), || {
+                let res = sim.run(&inp).expect("valid trace input");
+                let events = res.failures;
+                std::hint::black_box(res);
+                events
+            });
+        }
+    }
+
+    // NvmRestartOnly restarts the WHOLE job on a failed restart, so a
+    // 200-MTBF job would need ~200 consecutive absorbed failures and
+    // effectively never finish. Use a short job and high R instead
+    // (~a dozen failures per trial; still thousands of events per call).
+    let nvm = TraceInput {
+        model: EfficiencyInput::paper(mtbf, 320.0, 0.95, 0.015, 0.9).expect("valid §7 inputs"),
+        policy: RecoveryPolicy::NvmRestartOnly,
+        dist: FailureDist::Exponential,
+        work: 5.0 * mtbf,
+        interval: None,
+    };
+    for shards in [1usize, 4] {
+        let sim = TraceSim {
+            trials: 500,
+            seed: 1,
+            shards,
+        };
+        b.run_throughput(&format!("nvm_restart_shards{shards}"), || {
+            let res = sim.run(&nvm).expect("valid trace input");
+            let events = res.failures;
+            std::hint::black_box(res);
+            events
+        });
+    }
+
+    // Weibull sampling costs a powf per draw — track it separately.
+    let inp = scenario(
+        RecoveryPolicy::EasyCrashPlusCheckpoint,
+        FailureDist::Weibull { shape: 0.7 },
+    );
+    let sim = TraceSim {
+        trials: 500,
+        seed: 1,
+        shards: 1,
+    };
+    b.run_throughput("easycrash_weibull_failures100k_shards1", || {
+        let res = sim.run(&inp).expect("valid trace input");
+        let events = res.failures;
+        std::hint::black_box(res);
+        events
+    });
+
+    if let Err(e) = b.write_json("BENCH_trace.json") {
+        eprintln!("warning: could not write BENCH_trace.json: {e}");
+    } else {
+        println!("wrote BENCH_trace.json");
+    }
+}

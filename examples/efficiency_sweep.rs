@@ -1,25 +1,43 @@
 //! System-efficiency model sweep (§7): how EasyCrash's recomputability
 //! translates into cluster-level efficiency across checkpoint costs and
-//! machine scales, including the τ threshold of Eq. 4.
+//! machine scales, including the τ threshold of Eq. 4 — cross-checked
+//! against the `model::trace` Monte Carlo failure-timeline simulator.
 //!
 //! ```text
 //! cargo run --release --example efficiency_sweep
 //! ```
 
-use easycrash::model::efficiency::{evaluate, tau_threshold, EfficiencyInput};
+use easycrash::model::efficiency::{tau_threshold, EfficiencyInput};
 use easycrash::model::sweep::{sweep_chk, sweep_scale};
+use easycrash::model::trace::{FailureDist, RecoveryPolicy, TraceInput, TraceSim};
 use easycrash::util::pct;
 
 fn main() {
     let (r, ts, t_r_nvm) = (0.82, 0.015, 0.9); // paper-style averages
+    let sim = TraceSim {
+        trials: 2_000,
+        seed: 0xEC,
+        shards: 4,
+    };
 
     println!("== Fig.10-style: MTBF 12h, varying checkpoint cost ==");
-    for p in sweep_chk(12.0 * 3600.0, r, ts, t_r_nvm) {
+    for p in sweep_chk(12.0 * 3600.0, r, ts, t_r_nvm).expect("valid §7 inputs") {
+        let mc = sim
+            .run(&TraceInput {
+                model: EfficiencyInput::paper(p.mtbf, p.t_chk, r, ts, t_r_nvm)
+                    .expect("valid §7 inputs"),
+                policy: RecoveryPolicy::EasyCrashPlusCheckpoint,
+                dist: FailureDist::Exponential,
+                work: 30.0 * 86_400.0,
+                interval: None,
+            })
+            .expect("valid trace input");
         println!(
-            "T_chk={:>6}s  base={}  easycrash={}  (+{})  interval {:.0}s -> {:.0}s",
+            "T_chk={:>6}s  base={}  easycrash={} (MC {})  (+{})  interval {:.0}s -> {:.0}s",
             p.t_chk,
             pct(p.model.base),
             pct(p.model.easycrash),
+            pct(mc.mean_efficiency),
             pct(p.model.improvement()),
             p.model.t_interval,
             p.model.t_interval_ec,
@@ -27,7 +45,7 @@ fn main() {
     }
 
     println!("\n== Fig.11-style: T_chk 3200s, varying machine scale ==");
-    for p in sweep_scale(3200.0, r, ts, t_r_nvm) {
+    for p in sweep_scale(3200.0, r, ts, t_r_nvm).expect("valid §7 inputs") {
         println!(
             "{:>7} nodes (MTBF {:>2.0}h)  base={}  easycrash={}  (+{})",
             p.nodes,
@@ -40,13 +58,11 @@ fn main() {
 
     println!("\n== τ: minimum recomputability for EasyCrash to pay off ==");
     for t_chk in [32.0, 320.0, 3200.0] {
-        let tau = tau_threshold(&EfficiencyInput::paper(
-            12.0 * 3600.0,
-            t_chk,
-            0.0,
-            ts,
-            t_r_nvm,
-        ));
+        let tau = tau_threshold(
+            &EfficiencyInput::paper(12.0 * 3600.0, t_chk, 0.0, ts, t_r_nvm)
+                .expect("valid §7 inputs"),
+        )
+        .expect("valid §7 inputs");
         println!("T_chk={t_chk:>6}s  tau = {}", pct(tau));
     }
 }

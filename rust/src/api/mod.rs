@@ -18,6 +18,11 @@
 //!   parity test in `rust/tests/api.rs` asserts it).
 //! * [`ExperimentReport`] — the typed result of a spec run, serialized
 //!   to JSON (`easycrash experiment --out report.json`).
+//! * [`EfficiencyReport`] — the efficiency-trace cell type
+//!   (`easycrash efficiency`): campaign-measured recomputability fed
+//!   through the §7 closed form and the [`crate::model::trace`] Monte
+//!   Carlo simulator, serialized as `easycrash.trace/v1` ([`TraceSpec`]
+//!   is the spec's optional `trace` section).
 //!
 //! See DESIGN.md §API for the layering, memoization keys and the
 //! determinism guarantee.
@@ -25,7 +30,9 @@
 mod report;
 mod runner;
 mod spec;
+mod trace;
 
 pub use report::{ExperimentCell, ExperimentReport};
 pub use runner::Runner;
 pub use spec::{EngineKind, ExperimentSpec, SpecBuilder};
+pub use trace::{EfficiencyReport, TraceCell, TraceSpec, TRACE_SCHEMA};

@@ -7,12 +7,16 @@ use std::sync::{Arc, Mutex};
 use crate::apps::{self, CrashApp};
 use crate::easycrash::workflow::{Workflow, WorkflowReport};
 use crate::easycrash::{Campaign, CampaignResult, PersistPlan, PlanSpec, ShardedCampaign};
+use crate::model::efficiency::{evaluate, EfficiencyInput};
+use crate::model::sweep::T_CHK_SCENARIOS;
+use crate::model::trace::{RecoveryPolicy, TraceInput, TraceResult, TraceSim};
 use crate::runtime::StepEngine;
 use crate::sim::SimConfig;
 use crate::util::error::Result;
 
 use super::report::{ExperimentCell, ExperimentReport};
 use super::spec::ExperimentSpec;
+use super::trace::{EfficiencyReport, TraceCell};
 
 /// Executes an [`ExperimentSpec`] as a scenario matrix.
 ///
@@ -95,6 +99,74 @@ impl Runner {
         }
         Ok(ExperimentReport {
             spec: self.spec.clone(),
+            cells,
+        })
+    }
+
+    /// Run the efficiency-trace matrix: for every (app, plan) cell,
+    /// measure `R_EasyCrash` with the memoized campaign, then evaluate
+    /// each `T_chk` scenario both analytically (Eq. 6–9) and by Monte
+    /// Carlo ([`TraceSim`], trials sharded over RNG lanes with the
+    /// spec's `shards` — bit-identical for any worker count). The
+    /// spec's optional `trace` section supplies the Monte Carlo
+    /// parameters (§7 defaults otherwise).
+    pub fn efficiency(&self) -> Result<EfficiencyReport> {
+        let trace = self.spec.trace.unwrap_or_default();
+        let sim = TraceSim {
+            trials: trace.trials,
+            seed: self.spec.seed,
+            shards: self.spec.shards,
+        };
+        // The CheckpointOnly baseline ignores R (the restart coin is
+        // drawn and discarded, t_s does not apply, and the Young
+        // interval uses the raw MTBF), so its Monte Carlo result is
+        // identical for every cell sharing a T_chk — simulate it once
+        // per scenario and Arc-share it (the per-trial outcome vector
+        // is ~0.5 MB at default volume), not once per (app, plan).
+        let mut base_by_t_chk: HashMap<u64, Arc<TraceResult>> = HashMap::new();
+        let mut cells = Vec::new();
+        for name in &self.spec.apps {
+            let app = apps::by_name(name).expect("spec validated app names");
+            for plan_spec in &self.spec.plans {
+                let plan = self.resolve_plan(app.as_ref(), plan_spec)?;
+                let campaign = self.campaign(app.as_ref(), &plan, self.spec.verified);
+                let r = campaign.recomputability();
+                for &t_chk in &T_CHK_SCENARIOS {
+                    let model =
+                        EfficiencyInput::paper(trace.mtbf, t_chk, r, self.spec.ts, trace.t_r_nvm)?;
+                    let scenario = |policy| TraceInput {
+                        model,
+                        policy,
+                        dist: trace.dist,
+                        work: trace.work,
+                        interval: None,
+                    };
+                    let base = match base_by_t_chk.get(&t_chk.to_bits()) {
+                        Some(b) => b.clone(),
+                        None => {
+                            let b = Arc::new(sim.run(&scenario(RecoveryPolicy::CheckpointOnly))?);
+                            base_by_t_chk.insert(t_chk.to_bits(), b.clone());
+                            b
+                        }
+                    };
+                    cells.push(TraceCell {
+                        app: name.clone(),
+                        plan: plan_spec.clone(),
+                        plan_resolved: plan.dsl(),
+                        r_measured: r,
+                        t_chk,
+                        analytic: evaluate(&model)?,
+                        base,
+                        easycrash: Arc::new(
+                            sim.run(&scenario(RecoveryPolicy::EasyCrashPlusCheckpoint))?,
+                        ),
+                    });
+                }
+            }
+        }
+        Ok(EfficiencyReport {
+            spec: self.spec.clone(),
+            trace,
             cells,
         })
     }

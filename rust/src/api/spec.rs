@@ -1,11 +1,14 @@
 //! The serializable experiment specification and its fluent builder.
 
 use crate::easycrash::PlanSpec;
+use crate::model::trace::FailureDist;
 use crate::runtime::{NativeEngine, StepEngine};
 use crate::sim::{CacheGeom, NvmProfile, SimConfig};
 use crate::util::cli::Args;
 use crate::util::error::Result;
 use crate::util::json::Json;
+
+use super::trace::TraceSpec;
 
 /// Version tag written into spec JSON documents; validated when a file
 /// carries one (absent = current version, for hand-written minimal
@@ -72,6 +75,10 @@ pub struct ExperimentSpec {
     pub tau: f64,
     /// Simulator configuration shared by every cell.
     pub cfg: SimConfig,
+    /// Monte Carlo failure-trace parameters (the `efficiency`
+    /// subcommand's cell type); `None` = §7 defaults when a trace is
+    /// requested, and the optional `trace` JSON section stays absent.
+    pub trace: Option<TraceSpec>,
 }
 
 impl Default for ExperimentSpec {
@@ -87,6 +94,7 @@ impl Default for ExperimentSpec {
             ts: 0.03,
             tau: 0.10,
             cfg: SimConfig::mini(),
+            trace: None,
         }
     }
 }
@@ -132,6 +140,9 @@ impl ExperimentSpec {
             self.seed <= i64::MAX as u64,
             "seed must fit in 63 bits (JSON round-trip)"
         );
+        if let Some(trace) = &self.trace {
+            trace.validate()?;
+        }
         Ok(())
     }
 
@@ -177,6 +188,22 @@ impl ExperimentSpec {
         if let Some(nvm) = args.get("nvm") {
             self.cfg.nvm = NvmProfile::by_name(nvm)
                 .ok_or_else(|| crate::err!("unknown NVM profile `{nvm}`"))?;
+        }
+        // Efficiency-trace knobs: any of them materializes the optional
+        // trace section (starting from the file's values or the §7
+        // defaults).
+        if ["trials", "work", "mtbf", "dist"]
+            .into_iter()
+            .any(|k| args.get(k).is_some())
+        {
+            let mut tr = self.trace.unwrap_or_default();
+            tr.trials = args.usize_or("trials", tr.trials)?;
+            tr.work = args.f64_or("work", tr.work)?;
+            tr.mtbf = args.f64_or("mtbf", tr.mtbf)?;
+            if let Some(d) = args.get("dist") {
+                tr.dist = FailureDist::from_name(d)?;
+            }
+            self.trace = Some(tr);
         }
         self.validate()?;
         Ok(self)
@@ -239,6 +266,9 @@ impl ExperimentSpec {
                     .set("l3", geom(self.cfg.l3)),
             );
         }
+        if let Some(trace) = &self.trace {
+            j = j.set("trace", trace.to_json());
+        }
         j
     }
 
@@ -255,7 +285,7 @@ impl ExperimentSpec {
         // silently fall back to a default and run the wrong experiment.
         const KNOWN: &[&str] = &[
             "schema", "apps", "plans", "tests", "seed", "shards", "engine", "verified", "ts",
-            "tau", "geometry", "cache", "nvm",
+            "tau", "geometry", "cache", "nvm", "trace",
         ];
         for (i, (key, _)) in fields.iter().enumerate() {
             crate::ensure!(
@@ -383,6 +413,9 @@ impl ExperimentSpec {
             spec.cfg.nvm = NvmProfile::by_name(name)
                 .ok_or_else(|| crate::err!("unknown NVM profile `{name}`"))?;
         }
+        if let Some(v) = j.get("trace") {
+            spec.trace = Some(TraceSpec::from_json(v)?);
+        }
         spec.validate()?;
         Ok(spec)
     }
@@ -456,6 +489,13 @@ impl SpecBuilder {
 
     pub fn cfg(mut self, cfg: SimConfig) -> SpecBuilder {
         self.spec.cfg = cfg;
+        self
+    }
+
+    /// Attach an efficiency-trace section (the `efficiency` pipeline's
+    /// Monte Carlo parameters).
+    pub fn trace(mut self, trace: TraceSpec) -> SpecBuilder {
+        self.spec.trace = Some(trace);
         self
     }
 

@@ -1,0 +1,222 @@
+//! The efficiency-trace cell type: campaign-measured recomputability fed
+//! into the §7 closed form **and** the [`crate::model::trace`] Monte
+//! Carlo simulator, serialized as `easycrash.trace/v1`.
+//!
+//! Pipeline (one cell per `app × plan × T_chk` scenario):
+//!
+//! ```text
+//! campaign (memoized Runner cell)  ->  R_EasyCrash measured
+//!   -> model::efficiency::evaluate (Eq. 6-9, analytic)
+//!   -> model::trace::TraceSim      (Monte Carlo, sharded RNG lanes)
+//!   -> TraceCell / EfficiencyReport JSON ("easycrash.trace/v1")
+//! ```
+
+use std::sync::Arc;
+
+use crate::model::efficiency::{t_r_nvm_seconds, EfficiencyModel};
+use crate::model::trace::{FailureDist, TraceResult, DEFAULT_TRIALS, DEFAULT_WORK};
+use crate::easycrash::PlanSpec;
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+
+use super::spec::ExperimentSpec;
+
+/// Version tag of the efficiency-trace JSON document.
+pub const TRACE_SCHEMA: &str = "easycrash.trace/v1";
+
+/// The Monte Carlo side of an experiment spec (the optional `trace`
+/// section of the spec JSON; defaults follow §7: MTBF 12 h, exponential
+/// failures, a 96 GB node's NVM restart time).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceSpec {
+    /// Monte Carlo trials per (policy, T_chk) scenario.
+    pub trials: usize,
+    /// Useful work per simulated job, seconds.
+    pub work: f64,
+    /// System MTBF, seconds.
+    pub mtbf: f64,
+    pub dist: FailureDist,
+    /// NVM restart time `T_r'`, seconds.
+    pub t_r_nvm: f64,
+}
+
+impl Default for TraceSpec {
+    fn default() -> TraceSpec {
+        TraceSpec {
+            trials: DEFAULT_TRIALS,
+            work: DEFAULT_WORK,
+            mtbf: 12.0 * 3600.0,
+            dist: FailureDist::Exponential,
+            t_r_nvm: t_r_nvm_seconds(96e9),
+        }
+    }
+}
+
+impl TraceSpec {
+    pub fn validate(&self) -> Result<()> {
+        crate::ensure!(self.trials >= 1, "trace trials must be >= 1");
+        crate::ensure!(
+            self.work.is_finite() && self.work > 0.0,
+            "trace work must be positive and finite"
+        );
+        crate::ensure!(
+            self.mtbf.is_finite() && self.mtbf > 0.0,
+            "trace MTBF must be positive and finite"
+        );
+        crate::ensure!(
+            self.t_r_nvm.is_finite() && self.t_r_nvm >= 0.0,
+            "trace t_r_nvm must be non-negative and finite"
+        );
+        if let FailureDist::Weibull { shape } = self.dist {
+            crate::ensure!(
+                shape.is_finite() && shape > 0.0,
+                "Weibull shape must be positive and finite"
+            );
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("trials", self.trials)
+            .set("work", self.work)
+            .set("mtbf", self.mtbf)
+            .set("dist", self.dist.name())
+            .set("t_r_nvm", self.t_r_nvm)
+    }
+
+    /// Parse the spec file's `trace` object; absent fields keep their
+    /// defaults, unknown fields are rejected (same typo safety as the
+    /// spec itself).
+    pub fn from_json(j: &Json) -> Result<TraceSpec> {
+        let Json::Obj(fields) = j else {
+            crate::bail!("`trace` must be a JSON object");
+        };
+        const KNOWN: &[&str] = &["trials", "work", "mtbf", "dist", "t_r_nvm"];
+        for (key, _) in fields {
+            crate::ensure!(
+                KNOWN.contains(&key.as_str()),
+                "unknown trace field `{key}` (known: {})",
+                KNOWN.join(", ")
+            );
+        }
+        let mut spec = TraceSpec::default();
+        if let Some(v) = j.get("trials") {
+            spec.trials = v
+                .as_usize()
+                .ok_or_else(|| crate::err!("`trace.trials` must be a non-negative integer"))?;
+        }
+        for (key, slot) in [("work", &mut spec.work), ("mtbf", &mut spec.mtbf), ("t_r_nvm", &mut spec.t_r_nvm)]
+        {
+            if let Some(v) = j.get(key) {
+                *slot = v
+                    .as_f64()
+                    .ok_or_else(|| crate::err!("`trace.{key}` must be a number"))?;
+            }
+        }
+        if let Some(v) = j.get("dist") {
+            let name = v
+                .as_str()
+                .ok_or_else(|| crate::err!("`trace.dist` must be a string"))?;
+            spec.dist = FailureDist::from_name(name)?;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// One efficiency-trace cell: an (app, plan) pair's measured
+/// recomputability evaluated at one `T_chk` scenario, analytically and
+/// by simulation.
+pub struct TraceCell {
+    pub app: String,
+    pub plan: PlanSpec,
+    pub plan_resolved: String,
+    /// Campaign-measured `R_EasyCrash` (fraction of S1 responses).
+    pub r_measured: f64,
+    pub t_chk: f64,
+    /// Eq. 6–9 at the measured R.
+    pub analytic: EfficiencyModel,
+    /// Monte Carlo, `CheckpointOnly` policy (validates Eq. 6; the
+    /// R-independent baseline is `Arc`-shared across cells of one
+    /// T_chk).
+    pub base: Arc<TraceResult>,
+    /// Monte Carlo, `EasyCrashPlusCheckpoint` policy (validates Eq. 8).
+    pub easycrash: Arc<TraceResult>,
+}
+
+fn trace_result_json(r: &TraceResult) -> Json {
+    Json::obj()
+        .set("policy", r.policy.name())
+        .set("trials", r.trials)
+        .set(
+            "interval",
+            if r.interval.is_finite() {
+                Json::Num(r.interval)
+            } else {
+                Json::Null
+            },
+        )
+        .set("mean_efficiency", r.mean_efficiency)
+        .set("std_error", r.std_error())
+        .set("mean_wall", r.mean_wall)
+        .set("failures", r.failures)
+        .set("rollbacks", r.rollbacks)
+        .set("nvm_restarts", r.nvm_restarts)
+        .set("checkpoints", r.checkpoints)
+}
+
+impl TraceCell {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("app", self.app.as_str())
+            .set("plan", self.plan.to_string())
+            .set("plan_resolved", self.plan_resolved.as_str())
+            .set("r_measured", self.r_measured)
+            .set("t_chk", self.t_chk)
+            .set(
+                "analytic",
+                Json::obj()
+                    .set("base", self.analytic.base)
+                    .set("easycrash", self.analytic.easycrash)
+                    .set("improvement", self.analytic.improvement())
+                    .set("t_interval", self.analytic.t_interval)
+                    .set("t_interval_ec", self.analytic.t_interval_ec),
+            )
+            .set(
+                "simulated",
+                Json::obj()
+                    .set("base", trace_result_json(&self.base))
+                    .set("easycrash", trace_result_json(&self.easycrash)),
+            )
+    }
+}
+
+/// A full efficiency-trace experiment: the spec that produced it, the
+/// effective trace parameters, and one cell per
+/// (app, plan, T_chk scenario).
+pub struct EfficiencyReport {
+    pub spec: ExperimentSpec,
+    /// The trace section actually used (the spec's, or the defaults).
+    pub trace: TraceSpec,
+    pub cells: Vec<TraceCell>,
+}
+
+impl EfficiencyReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("schema", TRACE_SCHEMA)
+            .set("spec", self.spec.to_json())
+            .set("trace", self.trace.to_json())
+            .set(
+                "cells",
+                Json::Arr(self.cells.iter().map(TraceCell::to_json).collect()),
+            )
+    }
+
+    /// Write the pretty-printed JSON document to `path`.
+    pub fn write_json(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().to_pretty())
+            .with_context(|| format!("writing efficiency trace to {path}"))
+    }
+}

@@ -1,4 +1,5 @@
-//! Shared structured-grid implicit-solver substrate for BT, SP and LU.
+//! Shared structured-grid implicit-solver substrate for BT, SP and LU —
+//! plus [`Adi`], the substrate exposed as a standalone mini app.
 //!
 //! The three NPB pseudo-applications all advance a 5-variable field on a
 //! 3-D grid toward the steady state of a manufactured problem
@@ -10,7 +11,10 @@
 //! and acceptance strictness — the properties that matter for the paper's
 //! crash study.
 
-use crate::sim::{Buf, Env, Signal};
+use std::sync::OnceLock;
+
+use super::{AppCore, Golden, RegionSpec};
+use crate::sim::{Buf, Env, ObjSpec, Signal};
 
 /// Problem geometry/coefficients shared by the three solvers.
 #[derive(Clone, Copy, Debug)]
@@ -268,10 +272,140 @@ impl AdiCore {
     }
 }
 
+// ---------------------------------------------------------------------------
+// The substrate as a standalone mini app
+// ---------------------------------------------------------------------------
+
+/// `adi` — the shared implicit-solver substrate run directly, with the
+/// coarse 5-region decomposition (rhs, x/y/z sweeps, add). Not part of
+/// the paper's Table 1 set (BT/SP/LU are its production decompositions);
+/// it exists to complete the 14-app determinism matrix with a small,
+/// fast ADI timeline (see `rust/tests/determinism.rs`).
+pub struct Adi {
+    pub core: AdiCore,
+    pub iters: u64,
+    pub tol_factor: f64,
+    gold: OnceLock<Golden>,
+}
+
+impl Default for Adi {
+    fn default() -> Adi {
+        Adi {
+            core: AdiCore {
+                d: 10,
+                vars: 2,
+                tau: 2.0,
+                eps: 0.05,
+            },
+            iters: 18,
+            tol_factor: crate::util::env_f64("EC_TOL_ADI", 2e-3),
+            gold: OnceLock::new(),
+        }
+    }
+}
+
+pub struct AdiSt {
+    u: Buf,
+    forcing: Buf,
+    work: Buf,
+    cp: Buf,
+    dp: Buf,
+    it: Buf,
+}
+
+impl AppCore for Adi {
+    type St = AdiSt;
+
+    fn name(&self) -> &'static str {
+        "adi"
+    }
+
+    fn description(&self) -> &'static str {
+        "mini ADI: the BT/SP/LU substrate as a standalone 5-region app"
+    }
+
+    fn region_specs(&self) -> Vec<RegionSpec> {
+        vec![
+            RegionSpec::l("rhs"),
+            RegionSpec::l("x_solve"),
+            RegionSpec::l("y_solve"),
+            RegionSpec::l("z_solve"),
+            RegionSpec::l("add"),
+        ]
+    }
+
+    fn iters(&self) -> u64 {
+        self.iters
+    }
+
+    fn build<E: Env>(&self, env: &mut E) -> Result<AdiSt, Signal> {
+        let c = &self.core;
+        let u = env.alloc(ObjSpec::f64("u", c.len(), true));
+        let forcing = env.alloc(ObjSpec::f64("forcing", c.len(), false));
+        let work = env.alloc(ObjSpec::f64("rhs", c.len(), false));
+        let cp = env.alloc(ObjSpec::f64("cp", c.d, false));
+        let dp = env.alloc(ObjSpec::f64("dp", c.d, false));
+        let it = env.alloc(ObjSpec::i64("it", 1, true));
+        for i in 0..c.len() {
+            env.st(work, i, 0.0)?;
+        }
+        c.init_forcing(env, forcing, u)?;
+        env.sti(it, 0, 0)?;
+        Ok(AdiSt {
+            u,
+            forcing,
+            work,
+            cp,
+            dp,
+            it,
+        })
+    }
+
+    fn step<E: Env>(&self, env: &mut E, st: &AdiSt, _it: u64) -> Result<(), Signal> {
+        let c = self.core;
+        // R0: explicit residual for every variable.
+        env.region(0)?;
+        for v in 0..c.vars {
+            c.compute_rhs(env, st.u, st.forcing, st.work, v)?;
+        }
+        // R1-R3: implicit Thomas sweeps along x, y, z.
+        for (ri, dir) in [(1usize, 0usize), (2, 1), (3, 2)] {
+            env.region(ri)?;
+            for v in 0..c.vars {
+                c.sweep(env, st.work, st.cp, st.dp, v, dir)?;
+            }
+        }
+        // R4: u += work.
+        env.region(4)?;
+        for v in 0..c.vars {
+            c.add(env, st.u, st.work, v)?;
+        }
+        Ok(())
+    }
+
+    fn metric<E: Env>(&self, env: &mut E, st: &AdiSt) -> Result<f64, Signal> {
+        self.core.residual_rms(env, st.u, st.forcing)
+    }
+
+    fn accept(&self, metric: f64, golden: &Golden) -> bool {
+        // Two-sided residual band, like BT's NPB-verify style.
+        metric.is_finite()
+            && (metric - golden.metric).abs() <= self.tol_factor * golden.metric.abs()
+    }
+
+    fn iter_buf(st: &AdiSt) -> Buf {
+        st.it
+    }
+
+    fn golden_cell(&self) -> &OnceLock<Golden> {
+        &self.gold
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::{ObjSpec, RawEnv};
+    use crate::sim::RawEnv;
 
     fn setup(core: &AdiCore) -> (RawEnv, Buf, Buf, Buf, Buf, Buf) {
         let mut env = RawEnv::new();
@@ -328,6 +462,24 @@ mod tests {
         }
         let r1 = core.residual_rms(&mut env, u, f).unwrap();
         assert!(r1 < r0 / 100.0, "SSOR must converge: {r0} -> {r1}");
+    }
+
+    #[test]
+    fn standalone_adi_app_converges_and_has_five_regions() {
+        use crate::apps::CrashApp;
+        let app = Adi::default();
+        assert_eq!(app.regions().len(), 5);
+        let mut raw = RawEnv::new();
+        let st = app.build(&mut raw).unwrap();
+        let r0 = app.metric(&mut raw, &st).unwrap();
+        for it in 0..app.iters {
+            app.step(&mut raw, &st, it).unwrap();
+        }
+        let r1 = app.metric(&mut raw, &st).unwrap();
+        assert!(r1 < r0 / 3.0, "adi must converge: {r0} -> {r1}");
+        let g = app.golden();
+        assert_eq!(g.iters, app.iters);
+        assert!((g.metric - r1).abs() <= 1e-12 * r1.abs().max(1.0), "golden replays the raw run");
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Radix-2 complex FFT substrate for the FT benchmark.
+//! Radix-2 complex FFT substrate for the FT benchmark — plus [`Fft`],
+//! the substrate exposed as a standalone spectral-filter mini app.
 //!
 //! Iterative (bit-reversal + butterfly) Cooley–Tukey over the [`Env`]
 //! abstraction, operating on split re/im f64 buffers with an arbitrary
@@ -7,7 +8,10 @@
 //! work, not memory traffic, so this keeps the simulated access stream
 //! faithful to an in-place FFT).
 
-use crate::sim::{Buf, Env, Signal};
+use std::sync::OnceLock;
+
+use super::{AppCore, Golden, RegionSpec};
+use crate::sim::{Buf, Env, ObjSpec, Signal};
 
 /// In-place FFT of length `n` (power of two) over elements
 /// `base + k*stride` of the split complex arrays `(re, im)`.
@@ -69,10 +73,133 @@ pub fn fft_strided<E: Env>(
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// The substrate as a standalone mini app
+// ---------------------------------------------------------------------------
+
+/// `fft` — a 1-D spectral low-pass filter built on [`fft_strided`]. Each
+/// iteration transforms the signal, damps the upper half of the
+/// spectrum, transforms back and renormalizes. Not part of the paper's
+/// Table 1 set (FT is the production 3-D transform); it completes the
+/// 14-app determinism matrix with an FFT-shaped access pattern whose
+/// mid-transform crash states are *not* recomputable from the data alone
+/// (a half-butterflied array is garbage to a restart), giving the matrix
+/// a low-recomputability spectral workload.
+pub struct Fft {
+    pub n: usize,
+    pub iters: u64,
+    gold: OnceLock<Golden>,
+}
+
+impl Default for Fft {
+    fn default() -> Fft {
+        Fft {
+            n: 1 << 11,
+            iters: 10,
+            gold: OnceLock::new(),
+        }
+    }
+}
+
+pub struct FftSt {
+    re: Buf,
+    im: Buf,
+    it: Buf,
+}
+
+impl AppCore for Fft {
+    type St = FftSt;
+
+    fn name(&self) -> &'static str {
+        "fft"
+    }
+
+    fn description(&self) -> &'static str {
+        "mini FFT: iterative 1-D spectral low-pass filter"
+    }
+
+    fn region_specs(&self) -> Vec<RegionSpec> {
+        vec![
+            RegionSpec::l("forward"),
+            RegionSpec::l("filter"),
+            RegionSpec::l("inverse"),
+        ]
+    }
+
+    fn iters(&self) -> u64 {
+        self.iters
+    }
+
+    fn build<E: Env>(&self, env: &mut E) -> Result<FftSt, Signal> {
+        let re = env.alloc(ObjSpec::f64("re", self.n, true));
+        let im = env.alloc(ObjSpec::f64("im", self.n, true));
+        let it = env.alloc(ObjSpec::i64("it", 1, true));
+        for k in 0..self.n {
+            let x = k as f64;
+            env.st(re, k, (0.37 * x).sin() + 0.3 * (2.3 * x).cos())?;
+            env.st(im, k, 0.0)?;
+        }
+        env.sti(it, 0, 0)?;
+        Ok(FftSt { re, im, it })
+    }
+
+    fn step<E: Env>(&self, env: &mut E, st: &FftSt, _it: u64) -> Result<(), Signal> {
+        let n = self.n;
+        // R0: forward transform.
+        env.region(0)?;
+        fft_strided(env, st.re, st.im, 0, 1, n, false)?;
+        // R1: damp the upper half of the spectrum (modes n/4 .. 3n/4).
+        env.region(1)?;
+        for k in n / 4..3 * n / 4 {
+            let r = env.ld(st.re, k)? * 0.5;
+            env.st(st.re, k, r)?;
+            let i = env.ld(st.im, k)? * 0.5;
+            env.st(st.im, k, i)?;
+        }
+        // R2: inverse transform + 1/n normalization (fft_strided is
+        // unnormalized, like NPB).
+        env.region(2)?;
+        fft_strided(env, st.re, st.im, 0, 1, n, true)?;
+        let inv = 1.0 / n as f64;
+        for k in 0..n {
+            let r = env.ld(st.re, k)? * inv;
+            env.st(st.re, k, r)?;
+            let i = env.ld(st.im, k)? * inv;
+            env.st(st.im, k, i)?;
+        }
+        Ok(())
+    }
+
+    fn metric<E: Env>(&self, env: &mut E, st: &FftSt) -> Result<f64, Signal> {
+        // Signal energy: strictly decaying under the filter, and wildly
+        // wrong (≈ n× too large, or mid-butterfly garbage) when a crash
+        // image is replayed from an inconsistent transform state.
+        let mut s = 0.0;
+        for k in 0..self.n {
+            let r = env.ld(st.re, k)?;
+            let i = env.ld(st.im, k)?;
+            s += r * r + i * i;
+        }
+        Ok(s)
+    }
+
+    fn accept(&self, metric: f64, golden: &Golden) -> bool {
+        metric.is_finite() && (metric - golden.metric).abs() <= 0.05 * golden.metric.abs()
+    }
+
+    fn iter_buf(st: &FftSt) -> Buf {
+        st.it
+    }
+
+    fn golden_cell(&self) -> &OnceLock<Golden> {
+        &self.gold
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::{ObjSpec, RawEnv};
+    use crate::sim::RawEnv;
 
     fn alloc_pair(env: &mut RawEnv, n: usize) -> (Buf, Buf) {
         (
@@ -136,6 +263,29 @@ mod tests {
                 (a.ld(im_a, k).unwrap() - b.ld(im_b, k * 4).unwrap()).abs() < 1e-10
             );
         }
+    }
+
+    #[test]
+    fn standalone_fft_app_filters_energy_downward() {
+        use crate::apps::CrashApp;
+        let app = Fft { n: 256, iters: 6, gold: OnceLock::new() };
+        assert_eq!(app.regions().len(), 3);
+        let mut raw = RawEnv::new();
+        let st = app.build(&mut raw).unwrap();
+        let e0 = app.metric(&mut raw, &st).unwrap();
+        let mut prev = e0;
+        for it in 0..app.iters {
+            app.step(&mut raw, &st, it).unwrap();
+            let e = app.metric(&mut raw, &st).unwrap();
+            assert!(e.is_finite() && e <= prev + 1e-9 * e0, "filter must not add energy");
+            prev = e;
+        }
+        assert!(prev < e0, "damping must remove energy: {e0} -> {prev}");
+        // The golden run replays the identical arithmetic.
+        let g = app.golden();
+        assert_eq!(g.iters, 6);
+        assert!((g.metric - prev).abs() <= 1e-12 * prev.abs().max(1.0));
+        assert!(app.accept(g.metric, &g));
     }
 
     #[test]

@@ -293,12 +293,25 @@ pub fn eval_set() -> Vec<Box<dyn CrashApp>> {
     all().into_iter().filter(|a| a.name() != "ep").collect()
 }
 
-/// Look up a benchmark by name (incl. the `toy` test app).
+/// Non-paper extras: the `toy` test kernel plus the `adi` and `fft`
+/// substrate mini apps. Resolvable by name and part of the full
+/// determinism matrix (`rust/tests/determinism.rs` covers
+/// `all() + extras()` — 14 apps), but excluded from the Table-1
+/// registry the figures sweep.
+pub fn extras() -> Vec<Box<dyn CrashApp>> {
+    vec![
+        Box::new(toy::Toy::default()),
+        Box::new(adi::Adi::default()),
+        Box::new(fft::Fft::default()),
+    ]
+}
+
+/// Look up a benchmark by name (incl. the non-paper extras).
 pub fn by_name(name: &str) -> Option<Box<dyn CrashApp>> {
-    if name == "toy" {
-        return Some(Box::new(toy::Toy::default()));
-    }
-    all().into_iter().find(|a| a.name() == name)
+    all()
+        .into_iter()
+        .chain(extras())
+        .find(|a| a.name() == name)
 }
 
 #[cfg(test)]
@@ -328,5 +341,19 @@ mod tests {
         assert!(by_name("mg").is_some());
         assert!(by_name("toy").is_some());
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn extras_complete_the_fourteen_app_matrix() {
+        let ex = extras();
+        let names: Vec<_> = ex.iter().map(|a| a.name()).collect();
+        assert_eq!(names, vec!["toy", "adi", "fft"]);
+        assert!(by_name("adi").is_some());
+        assert!(by_name("fft").is_some());
+        // No name collides with the paper registry, and the full matrix
+        // is 14 apps.
+        let all_names: Vec<_> = all().iter().map(|a| a.name()).collect();
+        assert!(names.iter().all(|n| !all_names.contains(n)));
+        assert_eq!(all().len() + ex.len(), 14);
     }
 }

@@ -30,7 +30,12 @@
 //!   and the benches — memoizing profiles/workflows/campaigns across
 //!   scenario cells with bit-identical results to direct wiring.
 //! * [`model`] — the §7 system-efficiency emulator (Young's formula,
-//!   Eq. 6–9).
+//!   Eq. 6–9) plus `model::trace`, a discrete-event Monte Carlo
+//!   failure-timeline simulator that validates the closed form
+//!   statistically (2% absolute at 10⁴ trials) and extends it to
+//!   failures during checkpoints/recoveries, Weibull interarrivals and
+//!   campaign-*measured* recomputability — trials sharded over the same
+//!   RNG-lane scheme, bit-identical for any shard count.
 //! * [`runtime`] — PJRT wrapper that loads AOT-compiled JAX/Pallas step
 //!   functions (`artifacts/*.hlo.txt`) and runs them on the post-crash
 //!   recomputation hot path. Python never runs at coordinator runtime.

@@ -18,7 +18,7 @@ use easycrash::util::error::{Context, Result};
 
 const VALUED: &[&str] = &[
     "app", "apps", "tests", "seed", "engine", "plan", "plans", "spec", "ts", "tau", "mtbf",
-    "tchk", "nvm", "out", "shards",
+    "tchk", "nvm", "out", "shards", "trials", "work", "dist",
 ];
 
 fn main() -> Result<()> {
@@ -30,9 +30,13 @@ fn main() -> Result<()> {
         "probe" => probe(&args),
         "campaign" => cmd_campaign(&args),
         "experiment" => cmd_experiment(&args),
+        "efficiency" => cmd_efficiency(&args),
         "list" => {
             for a in apps::all() {
                 println!("{:<10} {}", a.name(), a.description());
+            }
+            for a in apps::extras() {
+                println!("{:<10} {} [extra]", a.name(), a.description());
             }
             Ok(())
         }
@@ -127,19 +131,25 @@ fn cmd_campaign(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Spec from a file (`--spec exp.json`, overridable per-flag) or
+/// entirely from flags — shared by `experiment` and `efficiency`.
+fn spec_from_file_or_flags(args: &Args) -> Result<ExperimentSpec> {
+    match args.get("spec") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading spec file {path}"))?;
+            ExperimentSpec::from_json(&text)?.with_args(args)
+        }
+        None => ExperimentSpec::from_args(args),
+    }
+}
+
 /// Run a full experiment spec — the apps × plans scenario matrix — and
 /// write the typed JSON report. The spec comes from a file
 /// (`--spec exp.json`, overridable per-flag) or entirely from flags
 /// (`--apps mg,cg --plans "none;all;u@3/1"`).
 fn cmd_experiment(args: &Args) -> Result<()> {
-    let spec = match args.get("spec") {
-        Some(path) => {
-            let text = std::fs::read_to_string(path)
-                .with_context(|| format!("reading spec file {path}"))?;
-            ExperimentSpec::from_json(&text)?.with_args(args)?
-        }
-        None => ExperimentSpec::from_args(args)?,
-    };
+    let spec = spec_from_file_or_flags(args)?;
     let runner = Runner::new(spec)?.verbose(args.flag("verbose"));
     let t0 = Instant::now();
     let report = runner.run()?;
@@ -166,6 +176,48 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     }
     println!("wall={:.2?}", t0.elapsed());
     let out = args.get_or("out", "experiment_report.json");
+    report.write_json(out)?;
+    println!("[json] {out}");
+    Ok(())
+}
+
+/// The efficiency-trace pipeline (§7 + `model::trace`): per (app, plan)
+/// cell, measure recomputability with a crash campaign, feed it into the
+/// closed-form model AND the Monte Carlo failure-timeline simulator for
+/// the three T_chk scenarios, and write the `easycrash.trace/v1`
+/// document. Monte Carlo knobs: `--trials N --work SECS --mtbf SECS
+/// --dist exp|weibull:K` (§7 defaults otherwise).
+fn cmd_efficiency(args: &Args) -> Result<()> {
+    let mut spec = spec_from_file_or_flags(args)?;
+    if spec.trace.is_none() {
+        spec.trace = Some(Default::default());
+    }
+    let runner = Runner::new(spec)?.verbose(args.flag("verbose"));
+    let t0 = Instant::now();
+    let report = runner.efficiency()?;
+    println!(
+        "== efficiency: {} cell(s), {} trials/cell, MTBF {:.1}h, {} failures, {} shard(s) ==",
+        report.cells.len(),
+        report.trace.trials,
+        report.trace.mtbf / 3600.0,
+        report.trace.dist.name(),
+        runner.spec().shards,
+    );
+    for c in &report.cells {
+        println!(
+            "{:<10} plan={:<16} T_chk={:>5.0}s R={}  base {} (sim {})  EasyCrash {} (sim {})",
+            c.app,
+            c.plan_resolved,
+            c.t_chk,
+            easycrash::util::pct(c.r_measured),
+            easycrash::util::pct(c.analytic.base),
+            easycrash::util::pct(c.base.mean_efficiency),
+            easycrash::util::pct(c.analytic.easycrash),
+            easycrash::util::pct(c.easycrash.mean_efficiency),
+        );
+    }
+    println!("wall={:.2?}", t0.elapsed());
+    let out = args.get_or("out", "efficiency_trace.json");
     report.write_json(out)?;
     println!("[json] {out}");
     Ok(())

@@ -4,11 +4,23 @@
 //! EasyCrash lengthens the effective MTBF by the application
 //! recomputability (`MTBF_EC = MTBF / (1 − R)`), lengthening the Young
 //! interval, and replaces most rollbacks by cheap NVM restarts.
+//!
+//! This closed form is validated dynamically by the Monte Carlo
+//! failure-timeline simulator in [`super::trace`]
+//! (`rust/tests/model_trace.rs` proves convergence within 2% absolute).
+
+use crate::util::error::Result;
 
 use super::young::young_interval;
 
+/// NVM restart time `T_r'` (§7): load the non-read-only data objects
+/// from NVM main memory at ~DRAM bandwidth.
+pub fn t_r_nvm_seconds(bytes_per_node: f64) -> f64 {
+    bytes_per_node / 106e9
+}
+
 /// Model inputs (defaults follow the paper's §7 parameter choices).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct EfficiencyInput {
     /// System mean time between failures, seconds.
     pub mtbf: f64,
@@ -30,9 +42,11 @@ pub struct EfficiencyInput {
 impl EfficiencyInput {
     /// Paper-style constructor: MTBF + T_chk + recomputability, with the
     /// §7 conventions (T_r = T_chk, T_sync = T_chk/2) and an NVM restart
-    /// time derived from data size / bandwidth.
-    pub fn paper(mtbf: f64, t_chk: f64, r: f64, ts: f64, t_r_nvm: f64) -> EfficiencyInput {
-        EfficiencyInput {
+    /// time derived from data size / bandwidth. Rejects NaN/non-positive
+    /// inputs through [`crate::util::error`] (see [`EfficiencyInput::
+    /// validate`]).
+    pub fn paper(mtbf: f64, t_chk: f64, r: f64, ts: f64, t_r_nvm: f64) -> Result<EfficiencyInput> {
+        let inp = EfficiencyInput {
             mtbf,
             t_chk,
             t_r: t_chk,
@@ -40,7 +54,42 @@ impl EfficiencyInput {
             r_easycrash: r,
             ts,
             t_r_nvm,
+        };
+        inp.validate()?;
+        Ok(inp)
+    }
+
+    /// The invariants every consumer of the model assumes: MTBF and
+    /// T_chk positive and finite, the cost terms non-negative and
+    /// finite, `R_EasyCrash ∈ [0, 1]`. NaN fails every check.
+    pub fn validate(&self) -> Result<()> {
+        crate::ensure!(
+            self.mtbf.is_finite() && self.mtbf > 0.0,
+            "MTBF must be positive and finite, got {}",
+            self.mtbf
+        );
+        crate::ensure!(
+            self.t_chk.is_finite() && self.t_chk > 0.0,
+            "T_chk must be positive and finite, got {}",
+            self.t_chk
+        );
+        for (name, v) in [
+            ("T_r", self.t_r),
+            ("T_sync", self.t_sync),
+            ("t_s", self.ts),
+            ("T_r'", self.t_r_nvm),
+        ] {
+            crate::ensure!(
+                v.is_finite() && v >= 0.0,
+                "{name} must be non-negative and finite, got {v}"
+            );
         }
+        crate::ensure!(
+            self.r_easycrash.is_finite() && (0.0..=1.0).contains(&self.r_easycrash),
+            "R_EasyCrash must be in [0, 1], got {}",
+            self.r_easycrash
+        );
+        Ok(())
     }
 }
 
@@ -63,7 +112,8 @@ impl EfficiencyModel {
     }
 }
 
-/// Evaluate the §7 model.
+/// Evaluate the §7 model. Errors only on invalid input (see
+/// [`EfficiencyInput::validate`]).
 ///
 /// Efficiency without EasyCrash: per checkpoint interval the system spends
 /// `T + T_chk` to bank `T` of useful work, and each crash (rate
@@ -74,8 +124,9 @@ impl EfficiencyModel {
 /// `T_r' + T_sync`); the checkpoint interval uses
 /// `MTBF_EC = MTBF / (1 − R)` and useful work pays the `t_s` flush
 /// overhead.
-pub fn evaluate(inp: &EfficiencyInput) -> EfficiencyModel {
-    let t = young_interval(inp.t_chk, inp.mtbf);
+pub fn evaluate(inp: &EfficiencyInput) -> Result<EfficiencyModel> {
+    inp.validate()?;
+    let t = young_interval(inp.t_chk, inp.mtbf)?;
     // Eq. 6-7 in steady-state rate form: per second of wall time,
     //   useful   = u
     //   chk cost = u * T_chk / T
@@ -86,7 +137,7 @@ pub fn evaluate(inp: &EfficiencyInput) -> EfficiencyModel {
 
     let r = inp.r_easycrash.clamp(0.0, 0.9999);
     let mtbf_ec = inp.mtbf / (1.0 - r);
-    let t_ec = young_interval(inp.t_chk, mtbf_ec);
+    let t_ec = young_interval(inp.t_chk, mtbf_ec)?;
     // Rollback crashes: rate (1-r)/MTBF, cost T'/2 + T_r + T_sync.
     // EasyCrash restarts: rate r/MTBF, cost T_r' + T_sync.
     let cost_rollback = (1.0 - r) * (0.5 * t_ec + inp.t_r + inp.t_sync) / inp.mtbf;
@@ -96,18 +147,19 @@ pub fn evaluate(inp: &EfficiencyInput) -> EfficiencyModel {
         / ((1.0 + inp.ts) * (1.0 + inp.t_chk / t_ec)))
         .max(0.0);
 
-    EfficiencyModel {
+    Ok(EfficiencyModel {
         base,
         easycrash: ec,
         t_interval: t,
         t_interval_ec: t_ec,
-    }
+    })
 }
 
 /// The recomputability threshold τ (§7 "determination of τ"): the
 /// smallest `R_EasyCrash` for which EasyCrash beats plain C/R, found by
 /// bisection on the model.
-pub fn tau_threshold(inp: &EfficiencyInput) -> f64 {
+pub fn tau_threshold(inp: &EfficiencyInput) -> Result<f64> {
+    inp.validate()?;
     let mut lo = 0.0;
     let mut hi = 1.0;
     for _ in 0..60 {
@@ -115,7 +167,7 @@ pub fn tau_threshold(inp: &EfficiencyInput) -> f64 {
         let m = evaluate(&EfficiencyInput {
             r_easycrash: mid,
             ..*inp
-        });
+        })?;
         if m.easycrash > m.base {
             hi = mid;
         } else {
@@ -126,11 +178,11 @@ pub fn tau_threshold(inp: &EfficiencyInput) -> f64 {
     let at_hi = evaluate(&EfficiencyInput {
         r_easycrash: hi,
         ..*inp
-    });
+    })?;
     if at_hi.easycrash <= at_hi.base && hi > 0.999 {
-        1.0
+        Ok(1.0)
     } else {
-        hi
+        Ok(hi)
     }
 }
 
@@ -139,51 +191,75 @@ mod tests {
     use super::*;
 
     fn inp(mtbf: f64, t_chk: f64, r: f64) -> EfficiencyInput {
-        EfficiencyInput::paper(mtbf, t_chk, r, 0.015, 5.0)
+        EfficiencyInput::paper(mtbf, t_chk, r, 0.015, 5.0).unwrap()
     }
 
     #[test]
     fn base_efficiency_reasonable() {
         // MTBF 12h, T_chk 320s: overheads are a few percent.
-        let m = evaluate(&inp(43_200.0, 320.0, 0.82));
+        let m = evaluate(&inp(43_200.0, 320.0, 0.82)).unwrap();
         assert!(m.base > 0.8 && m.base < 1.0, "{}", m.base);
         assert!(m.easycrash > m.base, "EC must help at R=0.82");
     }
 
     #[test]
     fn improvement_grows_with_checkpoint_cost() {
-        let small = evaluate(&inp(43_200.0, 32.0, 0.82)).improvement();
-        let large = evaluate(&inp(43_200.0, 3200.0, 0.82)).improvement();
+        let small = evaluate(&inp(43_200.0, 32.0, 0.82)).unwrap().improvement();
+        let large = evaluate(&inp(43_200.0, 3200.0, 0.82)).unwrap().improvement();
         assert!(large > small, "{small} vs {large}");
     }
 
     #[test]
     fn improvement_grows_as_mtbf_shrinks() {
         // Paper Fig. 11: larger systems (smaller MTBF) benefit more.
-        let h12 = evaluate(&inp(43_200.0, 3200.0, 0.8)).improvement();
-        let h6 = evaluate(&inp(21_600.0, 3200.0, 0.8)).improvement();
-        let h3 = evaluate(&inp(10_800.0, 3200.0, 0.8)).improvement();
+        let h12 = evaluate(&inp(43_200.0, 3200.0, 0.8)).unwrap().improvement();
+        let h6 = evaluate(&inp(21_600.0, 3200.0, 0.8)).unwrap().improvement();
+        let h3 = evaluate(&inp(10_800.0, 3200.0, 0.8)).unwrap().improvement();
         assert!(h6 > h12 && h3 > h6, "{h12} {h6} {h3}");
     }
 
     #[test]
     fn zero_recomputability_is_no_better() {
-        let m = evaluate(&inp(43_200.0, 320.0, 0.0));
+        let m = evaluate(&inp(43_200.0, 320.0, 0.0)).unwrap();
         assert!(m.easycrash <= m.base, "ts overhead with no benefit");
     }
 
     #[test]
     fn interval_lengthens_with_easycrash() {
-        let m = evaluate(&inp(43_200.0, 320.0, 0.82));
+        let m = evaluate(&inp(43_200.0, 320.0, 0.82)).unwrap();
         assert!(m.t_interval_ec > 2.0 * m.t_interval);
     }
 
     #[test]
     fn tau_is_meaningful() {
-        let t = tau_threshold(&inp(43_200.0, 3200.0, 0.0));
+        let t = tau_threshold(&inp(43_200.0, 3200.0, 0.0)).unwrap();
         assert!(t > 0.0 && t < 0.5, "tau={t}");
         // With tiny checkpoint cost, EasyCrash's ts makes the bar higher.
-        let t2 = tau_threshold(&inp(43_200.0, 32.0, 0.0));
+        let t2 = tau_threshold(&inp(43_200.0, 32.0, 0.0)).unwrap();
         assert!(t2 > t, "{t2} vs {t}");
+    }
+
+    #[test]
+    fn constructor_and_evaluate_reject_bad_inputs() {
+        assert!(EfficiencyInput::paper(f64::NAN, 320.0, 0.5, 0.015, 5.0).is_err());
+        assert!(EfficiencyInput::paper(0.0, 320.0, 0.5, 0.015, 5.0).is_err());
+        assert!(EfficiencyInput::paper(43_200.0, -320.0, 0.5, 0.015, 5.0).is_err());
+        assert!(EfficiencyInput::paper(43_200.0, 320.0, 1.5, 0.015, 5.0).is_err());
+        assert!(EfficiencyInput::paper(43_200.0, 320.0, -0.1, 0.015, 5.0).is_err());
+        assert!(EfficiencyInput::paper(43_200.0, 320.0, 0.5, f64::NAN, 5.0).is_err());
+        assert!(EfficiencyInput::paper(43_200.0, 320.0, 0.5, 0.015, -1.0).is_err());
+        // A hand-built struct with a poisoned field fails at evaluate.
+        let mut bad = inp(43_200.0, 320.0, 0.5);
+        bad.t_sync = f64::NAN;
+        assert!(evaluate(&bad).is_err());
+        assert!(tau_threshold(&bad).is_err());
+        // ts = 0 (no overhead) and r = 1 are valid boundary cases.
+        assert!(EfficiencyInput::paper(43_200.0, 320.0, 1.0, 0.0, 0.0).is_ok());
+    }
+
+    #[test]
+    fn t_r_nvm_follows_bandwidth() {
+        let t = t_r_nvm_seconds(96e9);
+        assert!((t - 96.0 / 106.0).abs() < 1e-9, "{t}");
     }
 }

@@ -1,9 +1,15 @@
 //! End-to-end system-efficiency emulator (paper §7): Young's formula,
-//! Eq. 6–9, MTBF scaling across system sizes.
+//! Eq. 6–9, MTBF scaling across system sizes — plus [`trace`], the
+//! discrete-event Monte Carlo failure-timeline simulator that validates
+//! the closed form and extends it to scenarios it cannot express
+//! (failures during checkpoint writes and recoveries, Weibull
+//! interarrivals, finite jobs).
 
 pub mod efficiency;
 pub mod sweep;
+pub mod trace;
 pub mod young;
 
 pub use efficiency::{EfficiencyInput, EfficiencyModel};
+pub use trace::{FailureDist, RecoveryPolicy, TraceInput, TraceResult, TraceSim};
 pub use young::young_interval;

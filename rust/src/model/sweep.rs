@@ -1,5 +1,7 @@
 //! Parameter sweeps over the §7 efficiency model (Fig. 10 / Fig. 11).
 
+use crate::util::error::Result;
+
 use super::efficiency::{evaluate, EfficiencyInput, EfficiencyModel};
 
 /// The paper's checkpoint-overhead scenarios: SSD/NVMe-class (32 s),
@@ -24,29 +26,31 @@ pub struct SweepPoint {
 }
 
 /// Fig. 10-style sweep: fixed MTBF, varying checkpoint overhead.
-pub fn sweep_chk(mtbf: f64, r: f64, ts: f64, t_r_nvm: f64) -> Vec<SweepPoint> {
-    T_CHK_SCENARIOS
-        .iter()
-        .map(|&t_chk| SweepPoint {
+pub fn sweep_chk(mtbf: f64, r: f64, ts: f64, t_r_nvm: f64) -> Result<Vec<SweepPoint>> {
+    let mut pts = Vec::with_capacity(T_CHK_SCENARIOS.len());
+    for &t_chk in &T_CHK_SCENARIOS {
+        pts.push(SweepPoint {
             nodes: 100_000,
             mtbf,
             t_chk,
-            model: evaluate(&EfficiencyInput::paper(mtbf, t_chk, r, ts, t_r_nvm)),
-        })
-        .collect()
+            model: evaluate(&EfficiencyInput::paper(mtbf, t_chk, r, ts, t_r_nvm)?)?,
+        });
+    }
+    Ok(pts)
 }
 
 /// Fig. 11-style sweep: varying system scale (MTBF), fixed overheads.
-pub fn sweep_scale(t_chk: f64, r: f64, ts: f64, t_r_nvm: f64) -> Vec<SweepPoint> {
-    SCALES
-        .iter()
-        .map(|&(nodes, mtbf)| SweepPoint {
+pub fn sweep_scale(t_chk: f64, r: f64, ts: f64, t_r_nvm: f64) -> Result<Vec<SweepPoint>> {
+    let mut pts = Vec::with_capacity(SCALES.len());
+    for &(nodes, mtbf) in &SCALES {
+        pts.push(SweepPoint {
             nodes,
             mtbf,
             t_chk,
-            model: evaluate(&EfficiencyInput::paper(mtbf, t_chk, r, ts, t_r_nvm)),
-        })
-        .collect()
+            model: evaluate(&EfficiencyInput::paper(mtbf, t_chk, r, ts, t_r_nvm)?)?,
+        });
+    }
+    Ok(pts)
 }
 
 #[cfg(test)]
@@ -55,7 +59,7 @@ mod tests {
 
     #[test]
     fn chk_sweep_has_three_scenarios() {
-        let pts = sweep_chk(43_200.0, 0.82, 0.015, 5.0);
+        let pts = sweep_chk(43_200.0, 0.82, 0.015, 5.0).unwrap();
         assert_eq!(pts.len(), 3);
         // EasyCrash wins in every scenario at R=0.82.
         assert!(pts.iter().all(|p| p.model.easycrash > p.model.base));
@@ -65,9 +69,15 @@ mod tests {
 
     #[test]
     fn scale_sweep_monotone_improvement() {
-        let pts = sweep_scale(3200.0, 0.8, 0.015, 5.0);
+        let pts = sweep_scale(3200.0, 0.8, 0.015, 5.0).unwrap();
         assert_eq!(pts.len(), 3);
         assert!(pts[1].model.improvement() > pts[0].model.improvement());
         assert!(pts[2].model.improvement() > pts[1].model.improvement());
+    }
+
+    #[test]
+    fn sweeps_propagate_validation_errors() {
+        assert!(sweep_chk(f64::NAN, 0.8, 0.015, 5.0).is_err());
+        assert!(sweep_scale(-32.0, 0.8, 0.015, 5.0).is_err());
     }
 }

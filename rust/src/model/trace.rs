@@ -1,0 +1,717 @@
+//! Discrete-event Monte Carlo failure-timeline simulator (§7 validated
+//! dynamically).
+//!
+//! The closed-form efficiency model of `model::efficiency` (Eq. 6–9) is
+//! a first-order steady-state approximation: it assumes failures land
+//! uniformly inside a checkpoint interval, never strike during a
+//! checkpoint write or a recovery, and ignores finite-job effects. This
+//! module plays *synthetic failure traces* against an explicit job
+//! timeline instead — compute segments, checkpoint writes, rollback and
+//! NVM-restart recoveries, each of which a failure can interrupt — and
+//! measures efficiency as `useful work / wall time` over many trials.
+//! Monte Carlo means converge to the analytic model where its
+//! assumptions hold (proved statistically in `rust/tests/model_trace.rs`)
+//! and extend it where they do not (Weibull interarrivals, R measured
+//! from a crash campaign instead of assumed).
+//!
+//! ## Timeline state machine (see DESIGN.md §Model)
+//!
+//! A trial advances through three phases:
+//!
+//! * **compute** — banks useful seconds at rate `1/(1+t_s)` per wall
+//!   second (`1` for `CheckpointOnly`) until the segment reaches the
+//!   checkpoint interval or the job's remaining work;
+//! * **checkpoint** — `T_chk` contiguous wall seconds; a failure discards
+//!   the partial write (the previous checkpoint stays valid);
+//! * **recovery** — `T_r + T_sync` for a rollback (`T_sync` alone for a
+//!   from-scratch relaunch under `NvmRestartOnly`), `T_r' + T_sync` for an
+//!   NVM restart; a failure mid-recovery restarts the recovery in full
+//!   (recovery sources — the checkpoint image, the initial state — are
+//!   durable).
+//!
+//! Every failure consumes exactly **two** RNG draws — the next
+//! interarrival gap and a restart coin — under *every* policy (the coin
+//! is ignored where it cannot matter), so timelines of different policies
+//! under the same seed stay stream-aligned: `EasyCrashPlusCheckpoint`
+//! with `R = 0, t_s = 0` is bit-identical to `CheckpointOnly`.
+//!
+//! ## Sharded trials
+//!
+//! Trials are stratified over [`TRIAL_LANES`] fixed xoshiro256** lanes
+//! exactly like the campaign's crash-point draw (`Rng::for_lane`,
+//! 2^128-jump split): lane `l` owns the contiguous trial range
+//! `[trials·l/64, trials·(l+1)/64)` and simulates it sequentially from
+//! its own stream. Workers take contiguous *lane* ranges, so the merged
+//! per-trial outcome list — and every aggregate folded from it in trial
+//! order — is bit-identical for any shard count.
+
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+
+use super::efficiency::EfficiencyInput;
+use super::young::young_interval;
+
+/// Fixed number of trial RNG lanes; the trial→lane assignment never
+/// depends on the worker count (mirrors `campaign::RNG_LANES`).
+pub const TRIAL_LANES: usize = 64;
+
+/// Salt so trace trials never share a stream with the campaign's
+/// crash-point lanes under the same seed.
+const TRACE_SALT: u64 = 0xA076_1D64_78BD_642F;
+
+/// Default Monte Carlo volume of the efficiency pipeline (≥ the 10⁴
+/// trials the acceptance tolerance is calibrated for).
+pub const DEFAULT_TRIALS: usize = 10_000;
+
+/// Default job size: 60 days of useful work — hundreds of checkpoint
+/// intervals at every T_chk scenario, so finite-horizon bias stays well
+/// inside the 2% MC-vs-analytic tolerance.
+pub const DEFAULT_WORK: f64 = 60.0 * 86_400.0;
+
+// ---------------------------------------------------------------------------
+// Inputs
+// ---------------------------------------------------------------------------
+
+/// What happens after a failure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecoveryPolicy {
+    /// Plain C/R: every failure rolls back to the last checkpoint
+    /// (Eq. 6 baseline; `t_s` does not apply).
+    CheckpointOnly,
+    /// EasyCrash + checkpointing (Eq. 8): the NVM restart succeeds with
+    /// probability `R_EasyCrash` and preserves *all* progress; otherwise
+    /// roll back to the last checkpoint.
+    EasyCrashPlusCheckpoint,
+    /// EasyCrash without any checkpointing: a failed NVM restart loses
+    /// the whole job (a scenario class the closed form cannot express).
+    NvmRestartOnly,
+}
+
+impl RecoveryPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            RecoveryPolicy::CheckpointOnly => "checkpoint",
+            RecoveryPolicy::EasyCrashPlusCheckpoint => "easycrash+checkpoint",
+            RecoveryPolicy::NvmRestartOnly => "nvm-restart",
+        }
+    }
+}
+
+/// Failure interarrival distribution; both are scaled so the mean gap is
+/// the model's MTBF.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FailureDist {
+    /// Memoryless arrivals — the §7 assumption.
+    Exponential,
+    /// Weibull arrivals with the given shape `k` (`k < 1` models the
+    /// bursty infant-mortality traces of HPC failure studies), scale set
+    /// to `MTBF / Γ(1 + 1/k)` so the mean stays the MTBF.
+    Weibull { shape: f64 },
+}
+
+impl FailureDist {
+    /// Textual form used by spec files and `--dist`: `exp` or
+    /// `weibull:<shape>`.
+    pub fn name(self) -> String {
+        match self {
+            FailureDist::Exponential => "exp".to_string(),
+            FailureDist::Weibull { shape } => format!("weibull:{shape}"),
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<FailureDist> {
+        if s == "exp" {
+            return Ok(FailureDist::Exponential);
+        }
+        if let Some(k) = s.strip_prefix("weibull:") {
+            let shape: f64 = k
+                .parse()
+                .map_err(|_| crate::err!("bad Weibull shape `{k}`"))?;
+            crate::ensure!(
+                shape.is_finite() && shape > 0.0,
+                "Weibull shape must be positive and finite, got {shape}"
+            );
+            return Ok(FailureDist::Weibull { shape });
+        }
+        crate::bail!("unknown failure distribution `{s}` (exp | weibull:<shape>)")
+    }
+}
+
+/// One trace-simulation scenario.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceInput {
+    /// The §7 parameters (MTBF, T_chk, T_r, T_sync, R, t_s, T_r') — the
+    /// same struct the closed form evaluates, so a scenario can be fed
+    /// to both sides unchanged.
+    pub model: EfficiencyInput,
+    pub policy: RecoveryPolicy,
+    pub dist: FailureDist,
+    /// Useful work the job must bank, seconds.
+    pub work: f64,
+    /// Checkpoint-interval override (compute seconds between writes).
+    /// `None` = the §7 Young interval for the policy's effective MTBF:
+    /// `T` for `CheckpointOnly`, `T'` (from `MTBF/(1−R)`) for
+    /// `EasyCrashPlusCheckpoint`, no checkpoints for `NvmRestartOnly`.
+    pub interval: Option<f64>,
+}
+
+impl TraceInput {
+    pub fn validate(&self) -> Result<()> {
+        self.model.validate()?;
+        crate::ensure!(
+            self.work.is_finite() && self.work > 0.0,
+            "trace work must be positive and finite, got {}",
+            self.work
+        );
+        if let Some(t) = self.interval {
+            crate::ensure!(
+                t.is_finite() && t > 0.0,
+                "checkpoint interval must be positive and finite, got {t}"
+            );
+            // An interval under NvmRestartOnly would write checkpoints
+            // the policy's rollback path can never restore from.
+            crate::ensure!(
+                self.policy != RecoveryPolicy::NvmRestartOnly,
+                "NvmRestartOnly takes no checkpoints; drop the interval override"
+            );
+        }
+        if let FailureDist::Weibull { shape } = self.dist {
+            crate::ensure!(
+                shape.is_finite() && shape > 0.0,
+                "Weibull shape must be positive and finite, got {shape}"
+            );
+        }
+        Ok(())
+    }
+
+    /// The checkpoint interval this scenario runs under
+    /// (`f64::INFINITY` = never checkpoint).
+    pub fn resolved_interval(&self) -> Result<f64> {
+        if let Some(t) = self.interval {
+            return Ok(t);
+        }
+        Ok(match self.policy {
+            RecoveryPolicy::NvmRestartOnly => f64::INFINITY,
+            RecoveryPolicy::CheckpointOnly => {
+                young_interval(self.model.t_chk, self.model.mtbf)?
+            }
+            RecoveryPolicy::EasyCrashPlusCheckpoint => {
+                // Same clamp as evaluate(): R = 1 would make the
+                // rollback MTBF infinite.
+                let r = self.model.r_easycrash.clamp(0.0, 0.9999);
+                young_interval(self.model.t_chk, self.model.mtbf / (1.0 - r))?
+            }
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Interarrival sampling
+// ---------------------------------------------------------------------------
+
+/// Pre-resolved sampler (the Weibull scale needs Γ once, not per draw).
+#[derive(Clone, Copy, Debug)]
+enum Sampler {
+    Exp { mean: f64 },
+    Weibull { scale: f64, inv_shape: f64 },
+}
+
+impl Sampler {
+    fn new(inp: &TraceInput) -> Sampler {
+        match inp.dist {
+            FailureDist::Exponential => Sampler::Exp {
+                mean: inp.model.mtbf,
+            },
+            FailureDist::Weibull { shape } => Sampler::Weibull {
+                scale: inp.model.mtbf / gamma(1.0 + 1.0 / shape),
+                inv_shape: 1.0 / shape,
+            },
+        }
+    }
+
+    /// Inverse-CDF draw; `u ∈ [0, 1)` keeps `ln(1−u)` finite.
+    #[inline]
+    fn draw(&self, rng: &mut Rng) -> f64 {
+        let u = rng.f64();
+        match *self {
+            Sampler::Exp { mean } => -mean * (1.0 - u).ln(),
+            Sampler::Weibull { scale, inv_shape } => {
+                scale * (-(1.0 - u).ln()).powf(inv_shape)
+            }
+        }
+    }
+}
+
+/// Γ(x) for x > 0 via the Lanczos approximation (g = 7, 9 terms) — only
+/// the Weibull mean-matching needs it, always at small positive x.
+// The canonical Lanczos coefficients are quoted at full published
+// precision, which clippy would otherwise flag as excessive.
+#[allow(clippy::excessive_precision)]
+pub fn gamma(x: f64) -> f64 {
+    const COEF: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    let t = x + 7.5;
+    (2.0 * std::f64::consts::PI).sqrt() * t.powf(x + 0.5) * (-t).exp() * a
+}
+
+// ---------------------------------------------------------------------------
+// One trial
+// ---------------------------------------------------------------------------
+
+/// Outcome of a single simulated job.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TrialOutcome {
+    /// Total wall-clock seconds until the job banked its full work.
+    pub wall: f64,
+    /// `work / wall`.
+    pub efficiency: f64,
+    /// All failures, including ones that interrupted a recovery.
+    pub failures: u64,
+    pub rollbacks: u64,
+    pub nvm_restarts: u64,
+    /// Completed checkpoint writes.
+    pub checkpoints: u64,
+}
+
+struct TrialState {
+    /// Wall clock.
+    t: f64,
+    /// Absolute time of the next failure.
+    next_f: f64,
+    /// Useful seconds protected by a checkpoint (or, under
+    /// `NvmRestartOnly`, preserved only as long as restarts succeed).
+    banked: f64,
+    /// Useful seconds since the last checkpoint.
+    seg: f64,
+    failures: u64,
+    rollbacks: u64,
+    nvm_restarts: u64,
+    checkpoints: u64,
+}
+
+/// Handle the failure at `st.t` (== the old `st.next_f`): classify it,
+/// apply the loss, and run the recovery phase — restarting the recovery
+/// in full whenever another failure lands inside it. Returns whether the
+/// primary failure was absorbed by a successful NVM restart.
+///
+/// RNG discipline: the primary failure and every recovery-interrupting
+/// failure each consume exactly one coin + one interarrival draw.
+fn fail(inp: &TraceInput, sampler: &Sampler, rng: &mut Rng, st: &mut TrialState) -> bool {
+    let m = &inp.model;
+    st.failures += 1;
+    let coin = rng.f64();
+    st.next_f = st.t + sampler.draw(rng);
+    let nvm_ok = match inp.policy {
+        RecoveryPolicy::CheckpointOnly => false,
+        RecoveryPolicy::EasyCrashPlusCheckpoint | RecoveryPolicy::NvmRestartOnly => {
+            coin < m.r_easycrash
+        }
+    };
+    let rec = if nvm_ok {
+        st.nvm_restarts += 1;
+        m.t_r_nvm + m.t_sync
+    } else {
+        st.rollbacks += 1;
+        st.seg = 0.0;
+        if inp.policy == RecoveryPolicy::NvmRestartOnly {
+            // No checkpoint exists: relaunch from scratch — nothing to
+            // read back, only the coordination sync.
+            st.banked = 0.0;
+            m.t_sync
+        } else {
+            m.t_r + m.t_sync
+        }
+    };
+    // The recovery needs `rec` contiguous seconds; its sources (the
+    // checkpoint image / the initial state) are durable, so an
+    // interrupting failure restarts it in full. The coin is drawn and
+    // ignored to keep the stream aligned across policies.
+    loop {
+        if st.t + rec <= st.next_f {
+            st.t += rec;
+            return nvm_ok;
+        }
+        st.t = st.next_f;
+        st.failures += 1;
+        let _coin = rng.f64();
+        st.next_f = st.t + sampler.draw(rng);
+    }
+}
+
+fn simulate_trial(
+    inp: &TraceInput,
+    interval: f64,
+    sampler: &Sampler,
+    rng: &mut Rng,
+) -> TrialOutcome {
+    let m = &inp.model;
+    // EasyCrash's flush instrumentation slows compute by (1 + t_s);
+    // plain C/R pays nothing.
+    let o = match inp.policy {
+        RecoveryPolicy::CheckpointOnly => 1.0,
+        _ => 1.0 + m.ts,
+    };
+    let eps = 1e-9 * inp.work.max(1.0);
+    let mut st = TrialState {
+        t: 0.0,
+        next_f: 0.0,
+        banked: 0.0,
+        seg: 0.0,
+        failures: 0,
+        rollbacks: 0,
+        nvm_restarts: 0,
+        checkpoints: 0,
+    };
+    st.next_f = sampler.draw(rng);
+
+    'job: while st.banked + st.seg < inp.work - eps {
+        // -- compute up to the next checkpoint boundary (or the job end) --
+        let seg_target = interval.min(inp.work - st.banked);
+        while st.seg < seg_target {
+            let wall = (seg_target - st.seg) * o;
+            if st.t + wall <= st.next_f {
+                st.t += wall;
+                st.seg = seg_target;
+            } else {
+                // Failure mid-compute: progress up to the instant counts
+                // (it is in `seg`, protected only by an NVM restart).
+                st.seg += (st.next_f - st.t) / o;
+                st.t = st.next_f;
+                fail(inp, sampler, rng, &mut st);
+                // Re-derive the target: a from-scratch rollback resets
+                // `banked` under NvmRestartOnly.
+                continue 'job;
+            }
+        }
+        if st.banked + st.seg >= inp.work - eps {
+            break 'job; // the final stretch needs no checkpoint
+        }
+        // -- checkpoint write --
+        loop {
+            if st.t + m.t_chk <= st.next_f {
+                st.t += m.t_chk;
+                st.banked += st.seg;
+                st.seg = 0.0;
+                st.checkpoints += 1;
+                break;
+            }
+            // Failure during the write: the partial checkpoint is
+            // discarded; the previous one stays valid.
+            st.t = st.next_f;
+            if fail(inp, sampler, rng, &mut st) {
+                // NVM restart preserved the segment: rewrite from scratch.
+                continue;
+            }
+            // Rolled back: nothing left to checkpoint.
+            continue 'job;
+        }
+    }
+    TrialOutcome {
+        wall: st.t,
+        efficiency: inp.work / st.t,
+        failures: st.failures,
+        rollbacks: st.rollbacks,
+        nvm_restarts: st.nvm_restarts,
+        checkpoints: st.checkpoints,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The sharded simulator
+// ---------------------------------------------------------------------------
+
+/// Monte Carlo driver: `trials` simulated jobs, stratified over
+/// [`TRIAL_LANES`] RNG lanes and harvested by `shards` worker threads
+/// with output bit-identical for any shard count.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceSim {
+    pub trials: usize,
+    pub seed: u64,
+    /// Worker threads; 1 runs inline on the caller's thread (same
+    /// iteration, same result).
+    pub shards: usize,
+}
+
+/// Aggregated result of one scenario (all aggregates are folded from
+/// `outcomes` in trial order, so equality is bit-exact across shard
+/// counts).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceResult {
+    pub policy: RecoveryPolicy,
+    pub trials: usize,
+    /// Checkpoint interval used (`f64::INFINITY` = no checkpoints).
+    pub interval: f64,
+    pub outcomes: Vec<TrialOutcome>,
+    pub mean_efficiency: f64,
+    pub mean_wall: f64,
+    pub failures: u64,
+    pub rollbacks: u64,
+    pub nvm_restarts: u64,
+    pub checkpoints: u64,
+}
+
+impl TraceResult {
+    /// Standard error of the mean efficiency (the tests' convergence
+    /// sanity check).
+    pub fn std_error(&self) -> f64 {
+        let n = self.outcomes.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let mean = self.mean_efficiency;
+        let var = self
+            .outcomes
+            .iter()
+            .map(|o| (o.efficiency - mean) * (o.efficiency - mean))
+            .sum::<f64>()
+            / (n - 1) as f64;
+        (var / n as f64).sqrt()
+    }
+}
+
+impl TraceSim {
+    pub fn run(&self, inp: &TraceInput) -> Result<TraceResult> {
+        inp.validate()?;
+        crate::ensure!(self.trials >= 1, "trace trials must be >= 1");
+        let interval = inp.resolved_interval()?;
+        let sampler = Sampler::new(inp);
+        let shards = self.shards.max(1);
+
+        // Lane `l` owns trials [t0, t1) and simulates them sequentially
+        // from its own 2^128-jump stream; a worker walks a contiguous
+        // lane range, jumping incrementally (O(lanes) total jumps).
+        let run_lanes = |lane_lo: usize, lane_hi: usize| -> Vec<TrialOutcome> {
+            let mut out = Vec::new();
+            let mut lane_rng = Rng::for_lane(self.seed ^ TRACE_SALT, lane_lo as u64);
+            for lane in lane_lo..lane_hi {
+                let t0 = self.trials * lane / TRIAL_LANES;
+                let t1 = self.trials * (lane + 1) / TRIAL_LANES;
+                let mut rng = lane_rng.clone();
+                for _ in t0..t1 {
+                    out.push(simulate_trial(inp, interval, &sampler, &mut rng));
+                }
+                lane_rng.jump();
+            }
+            out
+        };
+
+        let outcomes: Vec<TrialOutcome> = if shards == 1 {
+            run_lanes(0, TRIAL_LANES)
+        } else {
+            // Contiguous lane ranges per worker; concatenating in shard
+            // order reproduces the sequential trial order exactly.
+            let run_lanes = &run_lanes;
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..shards)
+                    .map(|s| {
+                        let lo = TRIAL_LANES * s / shards;
+                        let hi = TRIAL_LANES * (s + 1) / shards;
+                        scope.spawn(move || run_lanes(lo, hi))
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .flat_map(|h| h.join().expect("trace worker panicked"))
+                    .collect()
+            })
+        };
+        debug_assert_eq!(outcomes.len(), self.trials);
+
+        let (mut eff, mut wall) = (0.0f64, 0.0f64);
+        let (mut failures, mut rollbacks, mut nvm_restarts, mut checkpoints) =
+            (0u64, 0u64, 0u64, 0u64);
+        for o in &outcomes {
+            eff += o.efficiency;
+            wall += o.wall;
+            failures += o.failures;
+            rollbacks += o.rollbacks;
+            nvm_restarts += o.nvm_restarts;
+            checkpoints += o.checkpoints;
+        }
+        let n = outcomes.len() as f64;
+        Ok(TraceResult {
+            policy: inp.policy,
+            trials: self.trials,
+            interval,
+            mean_efficiency: eff / n,
+            mean_wall: wall / n,
+            failures,
+            rollbacks,
+            nvm_restarts,
+            checkpoints,
+            outcomes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(mtbf: f64, t_chk: f64, r: f64, ts: f64) -> EfficiencyInput {
+        EfficiencyInput::paper(mtbf, t_chk, r, ts, 0.9).unwrap()
+    }
+
+    fn input(policy: RecoveryPolicy, m: EfficiencyInput) -> TraceInput {
+        TraceInput {
+            model: m,
+            policy,
+            dist: FailureDist::Exponential,
+            work: 5.0 * 86_400.0,
+            interval: None,
+        }
+    }
+
+    #[test]
+    fn gamma_reference_values() {
+        assert!((gamma(1.0) - 1.0).abs() < 1e-10);
+        assert!((gamma(5.0) - 24.0).abs() < 1e-8);
+        assert!((gamma(0.5) - std::f64::consts::PI.sqrt()).abs() < 1e-10);
+        // Γ(1 + 1/1) = 1: shape-1 Weibull degenerates to exponential.
+        assert!((gamma(2.0) - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn dist_names_round_trip() {
+        for d in [
+            FailureDist::Exponential,
+            FailureDist::Weibull { shape: 0.7 },
+            FailureDist::Weibull { shape: 1.5 },
+        ] {
+            assert_eq!(FailureDist::from_name(&d.name()).unwrap(), d);
+        }
+        assert!(FailureDist::from_name("weibull:0").is_err());
+        assert!(FailureDist::from_name("weibull:nope").is_err());
+        assert!(FailureDist::from_name("gauss").is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_inputs() {
+        let ok = input(RecoveryPolicy::CheckpointOnly, model(43_200.0, 320.0, 0.8, 0.015));
+        assert!(ok.validate().is_ok());
+        let mut bad = ok;
+        bad.work = 0.0;
+        assert!(bad.validate().is_err());
+        let mut bad = ok;
+        bad.work = f64::NAN;
+        assert!(bad.validate().is_err());
+        let mut bad = ok;
+        bad.interval = Some(-5.0);
+        assert!(bad.validate().is_err());
+        let mut bad = ok;
+        bad.dist = FailureDist::Weibull { shape: f64::NAN };
+        assert!(bad.validate().is_err());
+        assert!(TraceSim { trials: 0, seed: 1, shards: 1 }.run(&ok).is_err());
+    }
+
+    #[test]
+    fn trial_is_deterministic_for_seed() {
+        let inp = input(
+            RecoveryPolicy::EasyCrashPlusCheckpoint,
+            model(43_200.0, 320.0, 0.8, 0.015),
+        );
+        let sim = TraceSim { trials: 64, seed: 9, shards: 1 };
+        let a = sim.run(&inp).unwrap();
+        let b = sim.run(&inp).unwrap();
+        assert_eq!(a, b);
+        let c = TraceSim { trials: 64, seed: 10, shards: 1 }.run(&inp).unwrap();
+        assert_ne!(a.outcomes, c.outcomes, "different seed, different trace");
+    }
+
+    #[test]
+    fn accounting_is_consistent() {
+        let inp = input(
+            RecoveryPolicy::EasyCrashPlusCheckpoint,
+            model(20_000.0, 320.0, 0.7, 0.02),
+        );
+        let res = TraceSim { trials: 128, seed: 3, shards: 1 }.run(&inp).unwrap();
+        assert_eq!(res.outcomes.len(), 128);
+        assert!(res.failures >= res.rollbacks + res.nvm_restarts);
+        assert!(res.failures > 0, "5 days at 20ks MTBF must see failures");
+        assert!(res.rollbacks > 0 && res.nvm_restarts > 0, "r=0.7 splits both ways");
+        assert!(res.checkpoints > 0);
+        for o in &res.outcomes {
+            assert!(o.wall > 0.0 && o.efficiency > 0.0 && o.efficiency <= 1.0);
+            assert!((o.efficiency - inp.work / o.wall).abs() < 1e-12);
+        }
+        assert!(res.mean_efficiency > 0.5, "sane regime: {}", res.mean_efficiency);
+        assert!(res.std_error() > 0.0);
+    }
+
+    #[test]
+    fn checkpoint_only_ignores_ts_and_nvm_restart_only_never_checkpoints() {
+        let a = input(RecoveryPolicy::CheckpointOnly, model(43_200.0, 320.0, 0.8, 0.0));
+        let b = input(RecoveryPolicy::CheckpointOnly, model(43_200.0, 320.0, 0.8, 0.05));
+        let sim = TraceSim { trials: 64, seed: 5, shards: 1 };
+        assert_eq!(
+            sim.run(&a).unwrap().outcomes,
+            sim.run(&b).unwrap().outcomes,
+            "t_s must not affect plain C/R"
+        );
+        let n = sim
+            .run(&input(RecoveryPolicy::NvmRestartOnly, model(43_200.0, 320.0, 0.9, 0.02)))
+            .unwrap();
+        assert_eq!(n.checkpoints, 0);
+        assert!(n.interval.is_infinite());
+    }
+
+    #[test]
+    fn weibull_shape_one_equals_exponential() {
+        // Γ(2) = 1 makes the scale the MTBF and k=1 the same inverse
+        // CDF. The Lanczos Γ is only ulp-accurate, so the timelines are
+        // ulp-close rather than bit-identical: the failure *counts*
+        // (branch decisions) must match and the means agree far inside
+        // sampling noise.
+        let m = model(43_200.0, 320.0, 0.8, 0.015);
+        let e = input(RecoveryPolicy::EasyCrashPlusCheckpoint, m);
+        let mut w = e;
+        w.dist = FailureDist::Weibull { shape: 1.0 };
+        let sim = TraceSim { trials: 64, seed: 11, shards: 1 };
+        let ee = sim.run(&e).unwrap();
+        let ww = sim.run(&w).unwrap();
+        assert_eq!(ee.failures, ww.failures);
+        assert_eq!(ee.rollbacks, ww.rollbacks);
+        assert_eq!(ee.checkpoints, ww.checkpoints);
+        assert!(
+            (ee.mean_efficiency - ww.mean_efficiency).abs() < 1e-6,
+            "{} vs {}",
+            ee.mean_efficiency,
+            ww.mean_efficiency
+        );
+    }
+
+    #[test]
+    fn weibull_tail_changes_the_trace_but_stays_sane() {
+        // k = 0.6 keeps the mean gap (the scale is Γ-matched) but
+        // clusters arrivals; the timeline must change while every
+        // invariant holds. (Whether burstiness helps or hurts efficiency
+        // depends on the loss-vs-clustering balance — a question the
+        // closed form cannot even pose, which is what the simulator is
+        // for — so no direction is asserted here.)
+        let m = model(30_000.0, 320.0, 0.8, 0.015);
+        let sim = TraceSim { trials: 256, seed: 13, shards: 1 };
+        let exp = sim
+            .run(&input(RecoveryPolicy::EasyCrashPlusCheckpoint, m))
+            .unwrap();
+        let mut wi = input(RecoveryPolicy::EasyCrashPlusCheckpoint, m);
+        wi.dist = FailureDist::Weibull { shape: 0.6 };
+        let wei = sim.run(&wi).unwrap();
+        assert_ne!(wei.outcomes, exp.outcomes, "k=0.6 must reshape the trace");
+        assert!(wei.failures > 0);
+        assert!(wei.mean_efficiency > 0.0 && wei.mean_efficiency <= 1.0);
+    }
+}

@@ -1,11 +1,23 @@
 //! Young's first-order optimal checkpoint interval [76]:
 //! `T = sqrt(2 · T_chk · MTBF)`.
 
+use crate::util::error::Result;
+
 /// Optimal checkpoint interval (seconds) for checkpoint cost `t_chk` and
-/// mean time between failures `mtbf` (both seconds).
-pub fn young_interval(t_chk: f64, mtbf: f64) -> f64 {
-    assert!(t_chk > 0.0 && mtbf > 0.0);
-    (2.0 * t_chk * mtbf).sqrt()
+/// mean time between failures `mtbf` (both seconds). NaN and
+/// non-positive inputs are rejected through [`crate::util::error`]
+/// rather than a panic — the CLI and spec files feed this
+/// user-controlled numbers.
+pub fn young_interval(t_chk: f64, mtbf: f64) -> Result<f64> {
+    crate::ensure!(
+        t_chk.is_finite() && t_chk > 0.0,
+        "T_chk must be positive and finite, got {t_chk}"
+    );
+    crate::ensure!(
+        mtbf.is_finite() && mtbf > 0.0,
+        "MTBF must be positive and finite, got {mtbf}"
+    );
+    Ok((2.0 * t_chk * mtbf).sqrt())
 }
 
 #[cfg(test)]
@@ -15,14 +27,23 @@ mod tests {
     #[test]
     fn reference_value() {
         // T_chk = 320 s, MTBF = 12 h = 43200 s -> sqrt(2*320*43200) ≈ 5257.6 s
-        let t = young_interval(320.0, 43_200.0);
+        let t = young_interval(320.0, 43_200.0).unwrap();
         assert!((t - 5257.66).abs() < 1.0, "{t}");
     }
 
     #[test]
     fn scales_with_sqrt() {
-        let t1 = young_interval(100.0, 10_000.0);
-        let t2 = young_interval(400.0, 10_000.0);
+        let t1 = young_interval(100.0, 10_000.0).unwrap();
+        let t2 = young_interval(400.0, 10_000.0).unwrap();
         assert!((t2 / t1 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_degenerate_inputs_via_error_not_panic() {
+        assert!(young_interval(0.0, 10_000.0).is_err());
+        assert!(young_interval(-32.0, 10_000.0).is_err());
+        assert!(young_interval(32.0, 0.0).is_err());
+        assert!(young_interval(f64::NAN, 10_000.0).is_err());
+        assert!(young_interval(32.0, f64::INFINITY).is_err());
     }
 }

@@ -28,6 +28,10 @@ pub struct ReportCtx {
     /// (default) native engine — same rule as every other subcommand.
     pub shards: usize,
     pub cfg: SimConfig,
+    /// `--trace`: add the Monte Carlo simulated-efficiency column to
+    /// fig10/fig11 (same `model::trace` pipeline as the `efficiency`
+    /// subcommand, at a report-friendly trial count).
+    pub with_trace: bool,
     runner: Runner,
 }
 
@@ -43,6 +47,7 @@ impl ReportCtx {
             tau: s.tau,
             shards: s.shards,
             cfg: s.cfg,
+            with_trace: args.flag("trace"),
             runner,
         })
     }

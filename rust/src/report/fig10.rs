@@ -1,18 +1,48 @@
 //! Figure 10: system efficiency with and without EasyCrash at MTBF = 12 h
 //! under the three checkpoint-overhead scenarios (32 s / 320 s / 3200 s),
 //! for the lowest- and highest-recomputability benchmarks plus the
-//! average (the paper shows FT, SP and the average).
+//! average (the paper shows FT, SP and the average). With `--trace`, an
+//! extra column cross-checks the closed form against the `model::trace`
+//! Monte Carlo simulator at the average recomputability.
 
-use crate::model::efficiency::{evaluate, EfficiencyInput};
+use crate::model::efficiency::{evaluate, t_r_nvm_seconds, EfficiencyInput};
 use crate::model::sweep::T_CHK_SCENARIOS;
+use crate::model::trace::{FailureDist, RecoveryPolicy, TraceInput, TraceSim, DEFAULT_WORK};
 use crate::util::{pct, table::Table};
 
 use super::context::ReportCtx;
 use super::fig6;
 
-/// NVM restart time: non-read-only data / DRAM bandwidth (§7 T_r').
-pub fn t_r_nvm_seconds(bytes_per_node: f64) -> f64 {
-    bytes_per_node / 106e9
+/// Monte Carlo volume of the report columns: far above visual resolution
+/// (SE ≈ 0.1%) while keeping `--trace` report latency in milliseconds;
+/// the `efficiency` subcommand runs the full `DEFAULT_TRIALS`.
+pub(super) const SIM_TRIALS: usize = 2_000;
+
+/// Simulated EasyCrash efficiency at one model point — the same pipeline
+/// as the `efficiency` subcommand (Exponential failures, Young interval,
+/// trials sharded over RNG lanes with the report's `--shards`).
+pub(super) fn simulated_ec(
+    ctx: &ReportCtx,
+    mtbf: f64,
+    t_chk: f64,
+    r: f64,
+    t_r_nvm: f64,
+) -> crate::util::error::Result<f64> {
+    let model = EfficiencyInput::paper(mtbf, t_chk, r, ctx.ts, t_r_nvm)?;
+    let sim = TraceSim {
+        trials: SIM_TRIALS,
+        seed: ctx.seed,
+        shards: ctx.shards,
+    };
+    Ok(sim
+        .run(&TraceInput {
+            model,
+            policy: RecoveryPolicy::EasyCrashPlusCheckpoint,
+            dist: FailureDist::Exponential,
+            work: DEFAULT_WORK,
+            interval: None,
+        })?
+        .mean_efficiency)
 }
 
 pub fn run(ctx: &ReportCtx) -> crate::util::error::Result<Table> {
@@ -30,21 +60,22 @@ pub fn run(ctx: &ReportCtx) -> crate::util::error::Result<Table> {
     let t_r_nvm = t_r_nvm_seconds(96e9);
     let mtbf = 12.0 * 3600.0;
 
-    let mut t = Table::new(&[
-        "T_chk",
-        &format!("{} base", lo.app),
-        &format!("{} EC", lo.app),
-        &format!("{} base", hi.app),
-        &format!("{} EC", hi.app),
-        "avg base",
-        "avg EC",
-        "avg improve",
-    ]);
+    let lo_base = format!("{} base", lo.app);
+    let lo_ec = format!("{} EC", lo.app);
+    let hi_base = format!("{} base", hi.app);
+    let hi_ec = format!("{} EC", hi.app);
+    let mut cols: Vec<&str> = vec![
+        "T_chk", &lo_base, &lo_ec, &hi_base, &hi_ec, "avg base", "avg EC", "avg improve",
+    ];
+    if ctx.with_trace {
+        cols.push("avg EC (sim)");
+    }
+    let mut t = Table::new(&cols);
     for &t_chk in &T_CHK_SCENARIOS {
-        let m_lo = evaluate(&EfficiencyInput::paper(mtbf, t_chk, lo.easycrash, ctx.ts, t_r_nvm));
-        let m_hi = evaluate(&EfficiencyInput::paper(mtbf, t_chk, hi.easycrash, ctx.ts, t_r_nvm));
-        let m_av = evaluate(&EfficiencyInput::paper(mtbf, t_chk, avg, ctx.ts, t_r_nvm));
-        t.row(vec![
+        let m_lo = evaluate(&EfficiencyInput::paper(mtbf, t_chk, lo.easycrash, ctx.ts, t_r_nvm)?)?;
+        let m_hi = evaluate(&EfficiencyInput::paper(mtbf, t_chk, hi.easycrash, ctx.ts, t_r_nvm)?)?;
+        let m_av = evaluate(&EfficiencyInput::paper(mtbf, t_chk, avg, ctx.ts, t_r_nvm)?)?;
+        let mut row = vec![
             format!("{t_chk:.0}s"),
             pct(m_lo.base),
             pct(m_lo.easycrash),
@@ -53,7 +84,11 @@ pub fn run(ctx: &ReportCtx) -> crate::util::error::Result<Table> {
             pct(m_av.base),
             pct(m_av.easycrash),
             pct(m_av.improvement()),
-        ]);
+        ];
+        if ctx.with_trace {
+            row.push(pct(simulated_ec(ctx, mtbf, t_chk, avg, t_r_nvm)?));
+        }
+        t.row(row);
     }
     println!(
         "lowest-recomputability app: {} (R={}), highest: {} (R={}); paper shows FT and SP",

@@ -1,29 +1,39 @@
 //! Figure 11: system efficiency for CG as the system scales from 100k to
-//! 200k and 400k nodes (MTBF 12 h → 6 h → 3 h).
+//! 200k and 400k nodes (MTBF 12 h → 6 h → 3 h). With `--trace`, an extra
+//! column cross-checks the closed form against the `model::trace` Monte
+//! Carlo simulator at CG's measured recomputability.
 
-use crate::model::efficiency::{evaluate, EfficiencyInput};
+use crate::model::efficiency::{evaluate, t_r_nvm_seconds, EfficiencyInput};
 use crate::model::sweep::{SCALES, T_CHK_SCENARIOS};
 use crate::util::{pct, table::Table};
 
 use super::context::ReportCtx;
-use super::fig10::t_r_nvm_seconds;
+use super::fig10::simulated_ec;
 
 pub fn run(ctx: &ReportCtx) -> crate::util::error::Result<Table> {
     let cg = crate::apps::by_name("cg").expect("cg registered");
     let r = ctx.workflow(cg.as_ref()).final_result.recomputability();
     let t_r_nvm = t_r_nvm_seconds(96e9);
-    let mut t = Table::new(&["nodes", "MTBF", "T_chk", "base", "EasyCrash", "improve"]);
+    let mut cols: Vec<&str> = vec!["nodes", "MTBF", "T_chk", "base", "EasyCrash", "improve"];
+    if ctx.with_trace {
+        cols.push("EasyCrash (sim)");
+    }
+    let mut t = Table::new(&cols);
     for &(nodes, mtbf) in &SCALES {
         for &t_chk in &T_CHK_SCENARIOS {
-            let m = evaluate(&EfficiencyInput::paper(mtbf, t_chk, r, ctx.ts, t_r_nvm));
-            t.row(vec![
+            let m = evaluate(&EfficiencyInput::paper(mtbf, t_chk, r, ctx.ts, t_r_nvm)?)?;
+            let mut row = vec![
                 nodes.to_string(),
                 format!("{:.0}h", mtbf / 3600.0),
                 format!("{t_chk:.0}s"),
                 pct(m.base),
                 pct(m.easycrash),
                 pct(m.improvement()),
-            ]);
+            ];
+            if ctx.with_trace {
+                row.push(pct(simulated_ec(ctx, mtbf, t_chk, r, t_r_nvm)?));
+            }
+            t.row(row);
         }
     }
     println!("CG R_EasyCrash = {} (improvement grows with scale, as in the paper)", pct(r));

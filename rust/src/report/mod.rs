@@ -200,6 +200,7 @@ paper artifacts:
   table1 fig3 fig4 fig5 fig6 table4 fig7 fig8 fig9 fig10 fig11
   all            regenerate everything (CSV under results/)
   sensitivity    t_s ∈ {{2,3,5}}%% study
+  (--trace adds a Monte Carlo simulated-efficiency column to fig10/fig11)
 
 tools:
   list                         list benchmarks
@@ -210,6 +211,12 @@ tools:
              run an apps x plans experiment spec end to end and write the
              typed JSON report (flags override spec-file fields; plans are
              `;`-separated DSL entries)
+  efficiency [--spec FILE.json] [--apps A,B] [--plans P1;..] [--out F]
+             [--trials N] [--work SECS] [--mtbf SECS] [--dist exp|weibull:K]
+             measure recomputability per cell with a crash campaign, then
+             validate the §7 model with the Monte Carlo failure-timeline
+             simulator at T_chk in {{32,320,3200}}s; writes the
+             `easycrash.trace/v1` JSON document
   workflow --app A             run + display the 4-step EasyCrash workflow"
     );
 }

@@ -9,9 +9,9 @@
 
 use std::collections::HashSet;
 
-use easycrash::apps::{by_name, CrashApp};
+use easycrash::apps::{self, by_name, CrashApp};
 use easycrash::easycrash::campaign::{draw_crash_points, partition_points};
-use easycrash::easycrash::{Campaign, PersistPlan, ShardedCampaign, Workflow};
+use easycrash::easycrash::{Campaign, CampaignResult, PersistPlan, ShardedCampaign, Workflow};
 use easycrash::runtime::NativeEngine;
 use easycrash::util::rng::Rng;
 
@@ -49,26 +49,60 @@ fn sharded_equals_sequential_across_apps_plans_and_shard_counts() {
             for shards in SHARD_COUNTS {
                 let sc = ShardedCampaign::new(tests, seed, shards);
                 let r = sc.run(app.as_ref(), plan);
-                let label = format!("{app_name} plan{p} shards={shards}");
-                assert_eq!(r.records, seq.records, "{label}: records diverged");
-                assert_eq!(
-                    r.response_fractions(),
-                    seq.response_fractions(),
-                    "{label}: response fractions diverged"
-                );
-                assert_eq!(r.cycles, seq.cycles, "{label}: modeled cycles diverged");
-                assert_eq!(r.ops_total, seq.ops_total, "{label}");
-                assert_eq!(r.ops_main_start, seq.ops_main_start, "{label}");
-                assert_eq!(r.persist_ops, seq.persist_ops, "{label}");
-                assert_eq!(r.recomputability(), seq.recomputability(), "{label}");
                 // The aggregates come from the designated full-run worker
                 // (every other worker early-stops): they must still match
                 // the sequential run bit for bit.
-                assert_eq!(r.stats, seq.stats, "{label}: HierStats diverged");
-                assert_eq!(r.persist_cycles, seq.persist_cycles, "{label}");
-                assert_eq!(r.region_cycles, seq.region_cycles, "{label}");
+                assert_bit_identical(&r, &seq, &format!("{app_name} plan{p} shards={shards}"));
             }
         }
+    }
+}
+
+fn assert_bit_identical(r: &CampaignResult, seq: &CampaignResult, label: &str) {
+    assert_eq!(r.records, seq.records, "{label}: records diverged");
+    assert_eq!(
+        r.response_fractions(),
+        seq.response_fractions(),
+        "{label}: response fractions diverged"
+    );
+    assert_eq!(r.recomputability(), seq.recomputability(), "{label}");
+    assert_eq!(r.cycles, seq.cycles, "{label}: modeled cycles diverged");
+    assert_eq!(r.region_cycles, seq.region_cycles, "{label}");
+    assert_eq!(r.ops_total, seq.ops_total, "{label}");
+    assert_eq!(r.ops_main_start, seq.ops_main_start, "{label}");
+    assert_eq!(r.persist_ops, seq.persist_ops, "{label}");
+    assert_eq!(r.persist_cycles, seq.persist_cycles, "{label}");
+    assert_eq!(r.stats, seq.stats, "{label}: HierStats diverged");
+}
+
+/// Satellite: the FULL registry — all 11 paper apps plus the extras
+/// (toy, adi, fft), 14 apps — passes sequential-vs-sharded bit-parity
+/// on a tiny campaign, so no app's access pattern (CSR gathers, chain
+/// walks, Thomas sweeps, butterflies, leapfrog hydro, ...) can break
+/// the early-stop worker schedule or the lane-split draw.
+#[test]
+fn full_fourteen_app_matrix_sharded_equals_sequential() {
+    let tests = 6;
+    let seed = 0x14;
+    let mut covered = Vec::new();
+    for app in apps::all().into_iter().chain(apps::extras()) {
+        let app = app.as_ref();
+        let plan = PersistPlan::none();
+        let mut eng = NativeEngine::new();
+        let seq = Campaign::new(tests, seed).run(app, &plan, &mut eng);
+        assert_eq!(seq.records.len(), tests, "{}", app.name());
+        for shards in SHARD_COUNTS {
+            let r = ShardedCampaign::new(tests, seed, shards).run(app, &plan);
+            assert_bit_identical(&r, &seq, &format!("{} shards={shards}", app.name()));
+        }
+        covered.push(app.name());
+    }
+    assert_eq!(covered.len(), 14, "the full matrix must cover 14 apps: {covered:?}");
+    for name in [
+        "cg", "mg", "ft", "is", "bt", "lu", "sp", "ep", "botsspar", "lulesh", "kmeans", "toy",
+        "adi", "fft",
+    ] {
+        assert!(covered.contains(&name), "missing {name}");
     }
 }
 

@@ -1,0 +1,328 @@
+//! Monte Carlo failure-timeline simulator vs the §7 closed-form model.
+//!
+//! The statistical acceptance gate of the trace subsystem: for each of
+//! the paper's T_chk scenarios at MTBF = 12 h, the sharded Monte Carlo
+//! efficiency (10⁴ trials, Exponential failures, recomputability
+//! *measured* by a crash campaign) must match
+//! `model::efficiency::evaluate` within 2% absolute; trace results must
+//! be bit-identical across shard counts {1, 2, 4, 8}; and the analytic
+//! degenerate cases must hold exactly (R = 0 ≡ CheckpointOnly,
+//! MTBF → ∞ ⇒ efficiency → 1/(1+t_s)). See DESIGN.md §Model for the
+//! tolerance methodology.
+
+use easycrash::api::{ExperimentSpec, Runner, TraceSpec};
+use easycrash::easycrash::PlanSpec;
+use easycrash::model::efficiency::{evaluate, EfficiencyInput};
+// The same scenario constant the `efficiency` pipeline iterates, so this
+// gate can never drift from what the subcommand actually runs.
+use easycrash::model::sweep::T_CHK_SCENARIOS;
+use easycrash::model::trace::{FailureDist, RecoveryPolicy, TraceInput, TraceSim};
+use easycrash::util::json::Json;
+
+const MTBF_12H: f64 = 12.0 * 3600.0;
+
+/// Measured recomputability: a small `toy` campaign under the `all`
+/// plan, through the same Runner wiring the `efficiency` subcommand
+/// uses.
+fn measured_r() -> f64 {
+    let spec = ExperimentSpec::builder()
+        .app("toy")
+        .tests(60)
+        .seed(0xEC)
+        .build()
+        .unwrap();
+    let runner = Runner::new(spec).unwrap();
+    let app = easycrash::apps::by_name("toy").unwrap();
+    let plan = runner.resolve_plan(app.as_ref(), &PlanSpec::All).unwrap();
+    runner.campaign(app.as_ref(), &plan, false).recomputability()
+}
+
+/// Acceptance: MC means converge to Eq. 6 (CheckpointOnly) and Eq. 8
+/// (EasyCrash + checkpoint) within 2% absolute for every T_chk scenario,
+/// at the campaign-measured R.
+#[test]
+fn monte_carlo_matches_the_analytic_model_within_2pct() {
+    let r = measured_r();
+    assert!(
+        r > 0.0 && r <= 1.0,
+        "toy's all-candidates campaign must recompute sometimes, got R={r}"
+    );
+    let sim = TraceSim {
+        trials: 10_000,
+        seed: 7,
+        shards: 4,
+    };
+    for t_chk in T_CHK_SCENARIOS {
+        let model = EfficiencyInput::paper(MTBF_12H, t_chk, r, 0.015, 0.9).unwrap();
+        let analytic = evaluate(&model).unwrap();
+        let scenario = |policy| TraceInput {
+            model,
+            policy,
+            dist: FailureDist::Exponential,
+            work: 60.0 * 86_400.0,
+            interval: None,
+        };
+        let base = sim.run(&scenario(RecoveryPolicy::CheckpointOnly)).unwrap();
+        assert!(
+            (base.mean_efficiency - analytic.base).abs() < 0.02,
+            "T_chk={t_chk}: MC base {} vs Eq.6 {} (SE {})",
+            base.mean_efficiency,
+            analytic.base,
+            base.std_error()
+        );
+        let ec = sim
+            .run(&scenario(RecoveryPolicy::EasyCrashPlusCheckpoint))
+            .unwrap();
+        assert!(
+            (ec.mean_efficiency - analytic.easycrash).abs() < 0.02,
+            "T_chk={t_chk}: MC easycrash {} vs Eq.8 {} (SE {})",
+            ec.mean_efficiency,
+            analytic.easycrash,
+            ec.std_error()
+        );
+        // The sampling error itself must be far inside the tolerance,
+        // so the assertion tests the model, not the noise.
+        assert!(base.std_error() < 0.004, "{}", base.std_error());
+        assert!(ec.std_error() < 0.004, "{}", ec.std_error());
+    }
+}
+
+/// The lane-split invariant: per-trial outcomes — and therefore every
+/// aggregate — are bit-identical for shard counts {1, 2, 4, 8}, for
+/// every policy and both interarrival distributions.
+#[test]
+fn trace_results_are_bit_identical_across_shard_counts() {
+    let model = EfficiencyInput::paper(MTBF_12H, 320.0, 0.8, 0.015, 0.9).unwrap();
+    for policy in [
+        RecoveryPolicy::CheckpointOnly,
+        RecoveryPolicy::EasyCrashPlusCheckpoint,
+        RecoveryPolicy::NvmRestartOnly,
+    ] {
+        for dist in [FailureDist::Exponential, FailureDist::Weibull { shape: 0.7 }] {
+            let inp = TraceInput {
+                model,
+                policy,
+                dist,
+                work: 10.0 * 86_400.0,
+                interval: None,
+            };
+            let seq = TraceSim {
+                trials: 2_000,
+                seed: 0xEC,
+                shards: 1,
+            }
+            .run(&inp)
+            .unwrap();
+            assert_eq!(seq.outcomes.len(), 2_000);
+            for shards in [2usize, 4, 8] {
+                let sh = TraceSim {
+                    trials: 2_000,
+                    seed: 0xEC,
+                    shards,
+                }
+                .run(&inp)
+                .unwrap();
+                assert_eq!(sh, seq, "{policy:?}/{dist:?} shards={shards} diverged");
+            }
+        }
+    }
+}
+
+/// Degenerate case 1: with R = 0 and t_s = 0, EasyCrash+checkpoint and
+/// plain CheckpointOnly consume identical RNG streams (the restart coin
+/// is drawn by both and can never land below 0) and use the same Young
+/// interval — the timelines must be bit-identical, not just close.
+#[test]
+fn r_zero_easycrash_reduces_to_checkpoint_only() {
+    let model = EfficiencyInput::paper(MTBF_12H, 320.0, 0.0, 0.0, 0.9).unwrap();
+    let sim = TraceSim {
+        trials: 3_000,
+        seed: 5,
+        shards: 4,
+    };
+    let scenario = |policy| TraceInput {
+        model,
+        policy,
+        dist: FailureDist::Exponential,
+        work: 20.0 * 86_400.0,
+        interval: None,
+    };
+    let ec = sim
+        .run(&scenario(RecoveryPolicy::EasyCrashPlusCheckpoint))
+        .unwrap();
+    let chk = sim.run(&scenario(RecoveryPolicy::CheckpointOnly)).unwrap();
+    assert_eq!(ec.outcomes, chk.outcomes);
+    assert_eq!(ec.mean_efficiency, chk.mean_efficiency);
+    assert_eq!(ec.interval, chk.interval, "R=0 keeps the base Young interval");
+    assert_eq!(ec.nvm_restarts, 0, "R=0 can never restart from NVM");
+    assert!(ec.rollbacks > 0, "20 days at 12h MTBF must roll back");
+}
+
+/// Degenerate case 2: as MTBF → ∞ no failure ever lands inside the job
+/// and the Young interval exceeds the job, so the only cost left is the
+/// persistence overhead: efficiency → 1/(1+t_s) (exactly 1 for plain
+/// C/R, which pays no t_s).
+#[test]
+fn infinite_mtbf_efficiency_approaches_one_over_one_plus_ts() {
+    let ts = 0.03;
+    let model = EfficiencyInput::paper(1e15, 320.0, 0.8, ts, 0.9).unwrap();
+    let sim = TraceSim {
+        trials: 200,
+        seed: 1,
+        shards: 2,
+    };
+    let scenario = |policy| TraceInput {
+        model,
+        policy,
+        dist: FailureDist::Exponential,
+        work: 86_400.0,
+        interval: None,
+    };
+    for policy in [
+        RecoveryPolicy::EasyCrashPlusCheckpoint,
+        RecoveryPolicy::NvmRestartOnly,
+    ] {
+        let res = sim.run(&scenario(policy)).unwrap();
+        assert_eq!(res.failures, 0, "{policy:?}");
+        assert_eq!(res.checkpoints, 0, "{policy:?}: Young interval >> job");
+        assert!(
+            (res.mean_efficiency - 1.0 / (1.0 + ts)).abs() < 1e-12,
+            "{policy:?}: {} vs {}",
+            res.mean_efficiency,
+            1.0 / (1.0 + ts)
+        );
+    }
+    let res = sim.run(&scenario(RecoveryPolicy::CheckpointOnly)).unwrap();
+    assert!((res.mean_efficiency - 1.0).abs() < 1e-12, "{}", res.mean_efficiency);
+}
+
+/// The paper's qualitative claim, statistically: at high recomputability
+/// and expensive checkpoints, the simulated EasyCrash policy beats the
+/// simulated plain C/R policy.
+#[test]
+fn easycrash_beats_checkpoint_only_at_high_recomputability() {
+    let model = EfficiencyInput::paper(MTBF_12H, 3200.0, 0.85, 0.015, 0.9).unwrap();
+    let sim = TraceSim {
+        trials: 4_000,
+        seed: 3,
+        shards: 4,
+    };
+    let scenario = |policy| TraceInput {
+        model,
+        policy,
+        dist: FailureDist::Exponential,
+        work: 30.0 * 86_400.0,
+        interval: None,
+    };
+    let base = sim.run(&scenario(RecoveryPolicy::CheckpointOnly)).unwrap();
+    let ec = sim
+        .run(&scenario(RecoveryPolicy::EasyCrashPlusCheckpoint))
+        .unwrap();
+    assert!(
+        ec.mean_efficiency > base.mean_efficiency + 0.05,
+        "EasyCrash must clearly win at R=0.85, T_chk=3200: {} vs {}",
+        ec.mean_efficiency,
+        base.mean_efficiency
+    );
+}
+
+// -- the efficiency-trace cell type (spec -> Runner -> trace/v1 JSON) -------
+
+#[test]
+fn spec_trace_section_round_trips_and_validates() {
+    let spec = ExperimentSpec::builder()
+        .app("toy")
+        .trace(TraceSpec {
+            trials: 1234,
+            work: 1000.0,
+            mtbf: 21_600.0,
+            dist: FailureDist::Weibull { shape: 0.7 },
+            t_r_nvm: 2.0,
+        })
+        .build()
+        .unwrap();
+    let back = ExperimentSpec::from_json(&spec.to_json().to_pretty()).unwrap();
+    assert_eq!(back, spec);
+    // A spec without a trace section stays trace-free through the round
+    // trip (older spec files keep meaning exactly what they said).
+    let plain = ExperimentSpec::builder().app("toy").build().unwrap();
+    assert!(plain.trace.is_none());
+    assert!(ExperimentSpec::from_json(&plain.to_json().to_string()).unwrap().trace.is_none());
+    // Invalid trace sections are rejected at parse time.
+    for bad in [
+        r#"{"apps":["toy"],"trace":{"trials":0}}"#,
+        r#"{"apps":["toy"],"trace":{"work":-5.0}}"#,
+        r#"{"apps":["toy"],"trace":{"mtbf":0}}"#,
+        r#"{"apps":["toy"],"trace":{"dist":"weibull:0"}}"#,
+        r#"{"apps":["toy"],"trace":{"dist":"gauss"}}"#,
+        r#"{"apps":["toy"],"trace":{"nope":1}}"#,
+        r#"{"apps":["toy"],"trace":[1]}"#,
+    ] {
+        assert!(ExperimentSpec::from_json(bad).is_err(), "`{bad}` must be rejected");
+    }
+}
+
+/// The `efficiency` subcommand's document: valid `easycrash.trace/v1`
+/// JSON with one cell per (app, plan, T_chk), each carrying the
+/// analytic and the simulated efficiencies — and the two agree loosely
+/// even at smoke volume.
+#[test]
+fn efficiency_report_emits_valid_trace_v1_json() {
+    let spec = ExperimentSpec::builder()
+        .app("toy")
+        .tests(20)
+        .seed(3)
+        .shards(2)
+        .trace(TraceSpec {
+            trials: 300,
+            work: 10.0 * 86_400.0,
+            ..Default::default()
+        })
+        .build()
+        .unwrap();
+    let runner = Runner::new(spec).unwrap();
+    let report = runner.efficiency().unwrap();
+    assert_eq!(report.cells.len(), 3, "1 app x 1 plan x 3 T_chk scenarios");
+
+    let doc = Json::parse(&report.to_json().to_pretty()).expect("report JSON must parse");
+    assert_eq!(
+        doc.get("schema").and_then(Json::as_str),
+        Some("easycrash.trace/v1")
+    );
+    assert!(doc.get("spec").is_some());
+    assert_eq!(
+        doc.get("trace").and_then(|t| t.get("trials")).and_then(Json::as_usize),
+        Some(300)
+    );
+    let cells = doc.get("cells").and_then(Json::as_arr).expect("cells array");
+    assert_eq!(cells.len(), 3);
+    for cell in cells {
+        for key in ["app", "plan", "plan_resolved", "r_measured", "t_chk", "analytic", "simulated"]
+        {
+            assert!(cell.get(key).is_some(), "cell is missing `{key}`");
+        }
+        let r = cell.get("r_measured").and_then(Json::as_f64).unwrap();
+        assert!((0.0..=1.0).contains(&r));
+        let analytic = cell.get("analytic").unwrap();
+        let simulated = cell.get("simulated").unwrap();
+        for side in ["base", "easycrash"] {
+            let a = analytic.get(side).and_then(Json::as_f64).unwrap();
+            let s = simulated
+                .get(side)
+                .and_then(|x| x.get("mean_efficiency"))
+                .and_then(Json::as_f64)
+                .unwrap();
+            assert!(a > 0.0 && a <= 1.0, "{side}: analytic {a}");
+            assert!(s > 0.0 && s <= 1.0, "{side}: simulated {s}");
+            // Loose agreement at 300 trials; the 2% gate runs above.
+            assert!((a - s).abs() < 0.05, "{side}: analytic {a} vs simulated {s}");
+            for key in ["policy", "trials", "failures", "rollbacks", "nvm_restarts", "checkpoints"]
+            {
+                assert!(
+                    simulated.get(side).and_then(|x| x.get(key)).is_some(),
+                    "simulated.{side} is missing `{key}`"
+                );
+            }
+        }
+    }
+}

@@ -212,6 +212,92 @@ fn prop_knapsack_respects_budget() {
     });
 }
 
+/// §7 analytic model: under the paper's parameter coupling
+/// (T_r = T_chk, T_sync = T_chk/2) and any sane regime, both
+/// efficiencies live in (0, 1], grow (weakly) with MTBF and shrink
+/// (weakly) with T_chk — the shape every figure and the Monte Carlo
+/// validation rely on.
+#[test]
+fn prop_efficiency_bounds_and_monotonicity() {
+    use easycrash::model::efficiency::{evaluate, EfficiencyInput};
+    check(0xD8, 80, |g| {
+        let t_chk = g.f64(5.0, 2000.0);
+        // Keep 4x the checkpoint cost well under the MTBF so the model
+        // stays out of its saturated (efficiency 0) corner.
+        let mtbf = g.f64(t_chk * 20.0, t_chk * 2000.0);
+        let r = g.f64(0.0, 1.0);
+        let ts = g.f64(0.001, 0.05);
+        let t_r_nvm = g.f64(0.0, 30.0);
+        let point = |mtbf: f64, t_chk: f64| {
+            evaluate(&EfficiencyInput::paper(mtbf, t_chk, r, ts, t_r_nvm).unwrap()).unwrap()
+        };
+        let m = point(mtbf, t_chk);
+        prop_assert!(m.base > 0.0 && m.base <= 1.0, "base {}", m.base);
+        prop_assert!(
+            m.easycrash > 0.0 && m.easycrash <= 1.0,
+            "easycrash {}",
+            m.easycrash
+        );
+        // Monotone non-decreasing in MTBF.
+        let better = point(mtbf * g.f64(1.1, 4.0), t_chk);
+        prop_assert!(better.base >= m.base - 1e-12, "{} < {}", better.base, m.base);
+        prop_assert!(
+            better.easycrash >= m.easycrash - 1e-12,
+            "{} < {}",
+            better.easycrash,
+            m.easycrash
+        );
+        // Monotone non-increasing in T_chk.
+        let worse = point(mtbf, t_chk * g.f64(1.1, 4.0));
+        prop_assert!(worse.base <= m.base + 1e-12, "{} > {}", worse.base, m.base);
+        prop_assert!(
+            worse.easycrash <= m.easycrash + 1e-12,
+            "{} > {}",
+            worse.easycrash,
+            m.easycrash
+        );
+        Ok(())
+    });
+}
+
+/// `EfficiencyInput` validation rejects NaN and non-positive inputs via
+/// `util::error::Error` — no `assert!` panics anywhere on the path.
+#[test]
+fn model_validation_rejects_bad_inputs_via_error() {
+    use easycrash::model::efficiency::{evaluate, tau_threshold, EfficiencyInput};
+    use easycrash::model::young_interval;
+    // young_interval: the old implementation panicked here.
+    assert!(young_interval(0.0, 43_200.0).is_err());
+    assert!(young_interval(-32.0, 43_200.0).is_err());
+    assert!(young_interval(32.0, -1.0).is_err());
+    assert!(young_interval(f64::NAN, 43_200.0).is_err());
+    assert!(young_interval(32.0, f64::NAN).is_err());
+    assert!(young_interval(f64::INFINITY, 43_200.0).is_err());
+    assert!(young_interval(32.0, 43_200.0).is_ok());
+    // EfficiencyInput::paper funnels through validate().
+    assert!(EfficiencyInput::paper(f64::NAN, 320.0, 0.5, 0.015, 0.9).is_err());
+    assert!(EfficiencyInput::paper(0.0, 320.0, 0.5, 0.015, 0.9).is_err());
+    assert!(EfficiencyInput::paper(43_200.0, 0.0, 0.5, 0.015, 0.9).is_err());
+    assert!(EfficiencyInput::paper(43_200.0, f64::NAN, 0.5, 0.015, 0.9).is_err());
+    assert!(EfficiencyInput::paper(43_200.0, 320.0, -0.1, 0.015, 0.9).is_err());
+    assert!(EfficiencyInput::paper(43_200.0, 320.0, 1.1, 0.015, 0.9).is_err());
+    assert!(EfficiencyInput::paper(43_200.0, 320.0, f64::NAN, 0.015, 0.9).is_err());
+    assert!(EfficiencyInput::paper(43_200.0, 320.0, 0.5, -0.01, 0.9).is_err());
+    assert!(EfficiencyInput::paper(43_200.0, 320.0, 0.5, 0.015, f64::NAN).is_err());
+    // Hand-built structs with poisoned fields fail at evaluate /
+    // tau_threshold instead of propagating NaN into figures.
+    let mut bad = EfficiencyInput::paper(43_200.0, 320.0, 0.5, 0.015, 0.9).unwrap();
+    bad.t_r = f64::NAN;
+    assert!(evaluate(&bad).is_err());
+    assert!(tau_threshold(&bad).is_err());
+    let mut bad = EfficiencyInput::paper(43_200.0, 320.0, 0.5, 0.015, 0.9).unwrap();
+    bad.t_sync = -1.0;
+    assert!(evaluate(&bad).is_err());
+    // Boundary values are fine: zero overheads, R at both ends.
+    assert!(EfficiencyInput::paper(43_200.0, 320.0, 0.0, 0.0, 0.0).is_ok());
+    assert!(EfficiencyInput::paper(43_200.0, 320.0, 1.0, 0.0, 0.0).is_ok());
+}
+
 /// Spearman is symmetric in rank transformations and bounded.
 #[test]
 fn prop_spearman_bounds_and_monotone_invariance() {
