@@ -39,7 +39,7 @@ fn main() -> easycrash::util::error::Result<()> {
         seed: 42,
         ..Default::default()
     };
-    let rep = wf.run(app.as_ref(), &mut engine);
+    let rep = wf.run(app.as_ref(), &mut engine)?;
     println!("  critical data objects: {:?}", rep.critical);
     println!("  plan: {:?}", rep.plan.entries);
     println!(

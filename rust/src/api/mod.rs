@@ -23,15 +23,22 @@
 //!   through the §7 closed form and the [`crate::model::trace`] Monte
 //!   Carlo simulator, serialized as `easycrash.trace/v1` ([`TraceSpec`]
 //!   is the spec's optional `trace` section).
+//! * [`PlannerMatrixReport`] — the planner-strategy sweep
+//!   (`easycrash planner-matrix`): selector × placer pairs
+//!   ([`PlannerSpec`](crate::easycrash::PlannerSpec)) run as full
+//!   workflows per app, serialized round-trippably as
+//!   `easycrash.planner/v1`.
 //!
 //! See DESIGN.md §API for the layering, memoization keys and the
 //! determinism guarantee.
 
+mod planner;
 mod report;
 mod runner;
 mod spec;
 mod trace;
 
+pub use planner::{PlannerCell, PlannerMatrixReport, PLANNER_SCHEMA};
 pub use report::{ExperimentCell, ExperimentReport};
 pub use runner::Runner;
 pub use spec::{EngineKind, ExperimentSpec, SpecBuilder};

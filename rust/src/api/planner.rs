@@ -1,0 +1,184 @@
+//! The typed result of a planner-strategy sweep (`easycrash
+//! planner-matrix`): selector × placer pairs run as full workflows over
+//! the spec's apps, serialized as `easycrash.planner/v1` — and parsed
+//! back, so downstream tooling can diff strategy sweeps without
+//! re-running them.
+
+use crate::easycrash::workflow::{WorkflowReport, WorkflowSummary};
+use crate::easycrash::PlannerSpec;
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+
+use super::spec::ExperimentSpec;
+
+/// Version tag written into planner-matrix JSON documents.
+pub const PLANNER_SCHEMA: &str = "easycrash.planner/v1";
+
+/// One cell of the strategy matrix: `(app, selector+placer)` and the
+/// headline outcome of the workflow that pair produced.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlannerCell {
+    pub app: String,
+    pub planner: PlannerSpec,
+    /// The selector's critical-object names, in selection-row order.
+    pub critical: Vec<String>,
+    /// The shipped production plan, in canonical plan DSL.
+    pub plan: String,
+    /// Measured recomputabilities (base / costly-best / production).
+    pub summary: WorkflowSummary,
+    /// The §5.2 analytic prediction attached to the knapsack solution.
+    pub predicted_y: f64,
+    pub predicted_overhead: f64,
+    pub meets_tau: bool,
+}
+
+impl PlannerCell {
+    /// Project a workflow report down to the matrix cell.
+    pub fn from_report(wf: &WorkflowReport) -> PlannerCell {
+        PlannerCell {
+            app: wf.app.clone(),
+            planner: wf.planner,
+            critical: wf.critical.clone(),
+            plan: wf.plan.dsl(),
+            summary: wf.summary(),
+            predicted_y: wf.region_sel.predicted_y,
+            predicted_overhead: wf.region_sel.predicted_overhead,
+            meets_tau: wf.region_sel.meets_tau,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set("app", self.app.as_str())
+            .set("planner", self.planner.to_string())
+            .set("critical", self.critical.clone())
+            .set("plan", self.plan.as_str())
+            .set("base", self.summary.base)
+            .set("best", self.summary.best)
+            .set("final", self.summary.final_)
+            .set("predicted_y", self.predicted_y)
+            .set("predicted_overhead", self.predicted_overhead)
+            .set("meets_tau", self.meets_tau)
+    }
+
+    fn from_json(j: &Json) -> Result<PlannerCell> {
+        let str_of = |key: &str| -> Result<String> {
+            j.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| crate::err!("planner cell needs string `{key}`"))
+        };
+        let f64_of = |key: &str| -> Result<f64> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| crate::err!("planner cell needs number `{key}`"))
+        };
+        let critical = j
+            .get("critical")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| crate::err!("planner cell needs array `critical`"))?
+            .iter()
+            .map(|v| {
+                v.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| crate::err!("`critical` must hold strings"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(PlannerCell {
+            app: str_of("app")?,
+            planner: PlannerSpec::parse(&str_of("planner")?)?,
+            critical,
+            plan: str_of("plan")?,
+            summary: WorkflowSummary {
+                base: f64_of("base")?,
+                best: f64_of("best")?,
+                final_: f64_of("final")?,
+            },
+            predicted_y: f64_of("predicted_y")?,
+            predicted_overhead: f64_of("predicted_overhead")?,
+            meets_tau: j
+                .get("meets_tau")
+                .and_then(Json::as_bool)
+                .ok_or_else(|| crate::err!("planner cell needs boolean `meets_tau`"))?,
+        })
+    }
+}
+
+/// A full strategy sweep: the spec it ran under, the swept pairs, and
+/// one cell per (app, pair) in matrix order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlannerMatrixReport {
+    pub spec: ExperimentSpec,
+    pub planners: Vec<PlannerSpec>,
+    pub cells: Vec<PlannerCell>,
+}
+
+impl PlannerMatrixReport {
+    /// Serialize the sweep (schema + spec + pairs + cells) — the
+    /// `easycrash planner-matrix --out` document and the CI artifact.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("schema", PLANNER_SCHEMA)
+            .set("spec", self.spec.to_json())
+            .set(
+                "planners",
+                self.planners
+                    .iter()
+                    .map(|p| p.to_string())
+                    .collect::<Vec<_>>(),
+            )
+            .set(
+                "cells",
+                Json::Arr(self.cells.iter().map(PlannerCell::to_json).collect()),
+            )
+    }
+
+    /// Parse a planner-matrix document — the exact inverse of
+    /// [`PlannerMatrixReport::to_json`] (round-trip asserted in
+    /// `rust/tests/planner.rs`).
+    pub fn from_json(text: &str) -> Result<PlannerMatrixReport> {
+        let j = Json::parse(text)?;
+        let schema = j
+            .get("schema")
+            .and_then(Json::as_str)
+            .ok_or_else(|| crate::err!("planner report needs a `schema` string"))?;
+        crate::ensure!(
+            schema == PLANNER_SCHEMA,
+            "unsupported planner report schema `{schema}` (expected {PLANNER_SCHEMA})"
+        );
+        let spec_j = j
+            .get("spec")
+            .ok_or_else(|| crate::err!("planner report needs an embedded `spec`"))?;
+        let spec = ExperimentSpec::from_json(&spec_j.to_string())?;
+        let planners = j
+            .get("planners")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| crate::err!("planner report needs a `planners` array"))?
+            .iter()
+            .map(|v| {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| crate::err!("`planners` must hold strings"))?;
+                PlannerSpec::parse(s)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let cells = j
+            .get("cells")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| crate::err!("planner report needs a `cells` array"))?
+            .iter()
+            .map(PlannerCell::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(PlannerMatrixReport {
+            spec,
+            planners,
+            cells,
+        })
+    }
+
+    /// Write the pretty-printed JSON document to `path`.
+    pub fn write_json(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().to_pretty())
+            .with_context(|| format!("writing planner matrix report to {path}"))
+    }
+}

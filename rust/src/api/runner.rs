@@ -6,7 +6,9 @@ use std::sync::{Arc, Mutex};
 
 use crate::apps::{self, CrashApp};
 use crate::easycrash::workflow::{Workflow, WorkflowReport};
-use crate::easycrash::{Campaign, CampaignResult, PersistPlan, PlanSpec, ShardedCampaign};
+use crate::easycrash::{
+    Campaign, CampaignResult, PersistPlan, PlanSpec, PlannerSpec, ShardedCampaign,
+};
 use crate::model::efficiency::{evaluate, EfficiencyInput};
 use crate::model::sweep::T_CHK_SCENARIOS;
 use crate::model::trace::{RecoveryPolicy, TraceInput, TraceResult, TraceSim};
@@ -14,6 +16,7 @@ use crate::runtime::StepEngine;
 use crate::sim::SimConfig;
 use crate::util::error::Result;
 
+use super::planner::{PlannerCell, PlannerMatrixReport};
 use super::report::{ExperimentCell, ExperimentReport};
 use super::spec::ExperimentSpec;
 use super::trace::{EfficiencyReport, TraceCell};
@@ -31,8 +34,11 @@ use super::trace::{EfficiencyReport, TraceCell};
 ///   one `Arc<CampaignResult>`;
 /// * profiles (no-crash runs) — key `app :: plan.dsl() :: cfg`, since
 ///   profile-only consumers sweep NVM configs;
-/// * workflows — key `app`; the workflow's four step campaigns run
-///   through the campaign cache above, so step 1 *is* the `none` cell.
+/// * workflows — key `app :: planner` (the canonical `selector+placer`
+///   DSL): different strategy pairs are different decisions, but their
+///   step campaigns still run through the campaign cache above, so step
+///   1 *is* the `none` cell and two planners sharing a plan share its
+///   campaign.
 ///
 /// Goldens are memoized inside each app (`OnceLock`), engines live one
 /// per worker inside [`ShardedCampaign`].
@@ -183,7 +189,7 @@ impl Runner {
         match spec {
             PlanSpec::None => Ok(PersistPlan::none()),
             PlanSpec::All => Ok(self.plan_all_candidates(app)),
-            PlanSpec::Critical => Ok(self.plan_critical_iter_end(app)),
+            PlanSpec::Critical => self.plan_critical_iter_end(app),
             PlanSpec::Entries(entries) => {
                 let plan = PersistPlan {
                     entries: entries.clone(),
@@ -205,13 +211,12 @@ impl Runner {
     }
 
     /// Candidate object names of an app, excluding the iterator bookmark
-    /// (from the memoized no-persistence profile).
+    /// — by the bookmark's resolved object id, not its name (from the
+    /// memoized no-persistence profile).
     pub fn candidate_names(&self, app: &dyn CrashApp) -> Vec<String> {
-        self.profile(app, &PersistPlan::none(), self.spec.cfg)
-            .candidates
-            .iter()
+        let prof = self.profile(app, &PersistPlan::none(), self.spec.cfg);
+        prof.selectable_candidates()
             .map(|(_, n, _)| n.clone())
-            .filter(|n| n != "it")
             .collect()
     }
 
@@ -226,26 +231,27 @@ impl Runner {
     }
 
     /// The `critical` shorthand: the workflow-selected critical objects
-    /// at iteration end (no-op plan when nothing was selected).
-    pub fn plan_critical_iter_end(&self, app: &dyn CrashApp) -> PersistPlan {
-        let wf = self.workflow(app);
+    /// at iteration end (no-op plan when nothing was selected). Which
+    /// objects are critical is the spec planner's decision.
+    pub fn plan_critical_iter_end(&self, app: &dyn CrashApp) -> Result<PersistPlan> {
+        let wf = self.workflow(app)?;
         let refs: Vec<&str> = wf.critical.iter().map(|s| s.as_str()).collect();
-        if refs.is_empty() {
+        Ok(if refs.is_empty() {
             PersistPlan::none()
         } else {
             PersistPlan::at_iter_end(&refs, app.regions().len(), 1)
-        }
+        })
     }
 
     /// The costly best configuration: critical objects at every region.
-    pub fn plan_best(&self, app: &dyn CrashApp) -> PersistPlan {
-        let wf = self.workflow(app);
+    pub fn plan_best(&self, app: &dyn CrashApp) -> Result<PersistPlan> {
+        let wf = self.workflow(app)?;
         let refs: Vec<&str> = wf.critical.iter().map(|s| s.as_str()).collect();
-        if refs.is_empty() {
+        Ok(if refs.is_empty() {
             PersistPlan::none()
         } else {
             PersistPlan::at_every_region(&refs, app.regions().len())
-        }
+        })
     }
 
     // -- cell execution ----------------------------------------------------
@@ -359,16 +365,31 @@ impl Runner {
         .profile(app, plan)
     }
 
-    /// Memoized four-step workflow (§5.3). Steps 1–4 are spec cells: the
-    /// workflow runs through [`Workflow::run_cells`] with this runner's
-    /// memoized campaign executor, so its step campaigns are the same
-    /// `Arc`s the figures see (step 1 == the `none` cell).
-    pub fn workflow(&self, app: &dyn CrashApp) -> Arc<WorkflowReport> {
-        if let Some(w) = self.workflows.lock().unwrap().get(app.name()) {
-            return w.clone();
+    /// Memoized four-step workflow (§5.3) under the spec's planner.
+    /// Steps 1–4 are spec cells: the workflow runs through
+    /// [`Workflow::run_cells`] with this runner's memoized campaign
+    /// executor, so its step campaigns are the same `Arc`s the figures
+    /// see (step 1 == the `none` cell).
+    pub fn workflow(&self, app: &dyn CrashApp) -> Result<Arc<WorkflowReport>> {
+        self.workflow_with(app, self.spec.planner)
+    }
+
+    /// Memoized workflow under an explicit strategy pair — the
+    /// `planner-matrix` sweep's cell executor. Memo key:
+    /// `app :: planner` (canonical DSL), because the pair determines the
+    /// decision; the step campaigns still share the campaign cache, so
+    /// two planners agreeing on a plan share its simulation.
+    pub fn workflow_with(
+        &self,
+        app: &dyn CrashApp,
+        planner: PlannerSpec,
+    ) -> Result<Arc<WorkflowReport>> {
+        let key = format!("{}::{planner}", app.name());
+        if let Some(w) = self.workflows.lock().unwrap().get(&key) {
+            return Ok(w.clone());
         }
         if self.verbose {
-            eprintln!("[workflow] {}", app.name());
+            eprintln!("[workflow] {key}");
         }
         let wf = Workflow {
             tests: self.spec.tests,
@@ -376,12 +397,37 @@ impl Runner {
             ts: self.spec.ts,
             tau: self.spec.tau,
             cfg: self.spec.cfg,
+            planner,
         };
-        let rep = Arc::new(wf.run_cells(app, &mut |plan| self.campaign(app, plan, false)));
-        self.workflows
-            .lock()
-            .unwrap()
-            .insert(app.name().to_string(), rep.clone());
-        rep
+        let rep = Arc::new(wf.run_cells(app, &mut |plan| self.campaign(app, plan, false))?);
+        self.workflows.lock().unwrap().insert(key, rep.clone());
+        Ok(rep)
+    }
+
+    /// Run the planner-strategy sweep: every spec app × every
+    /// `(selector, placer)` pair, one workflow per cell (memoized, so
+    /// pairs that agree on intermediate plans share campaigns), typed as
+    /// a [`PlannerMatrixReport`] (`easycrash.planner/v1`).
+    pub fn planner_matrix(&self, planners: &[PlannerSpec]) -> Result<PlannerMatrixReport> {
+        crate::ensure!(
+            !planners.is_empty(),
+            "planner matrix needs at least one selector+placer pair"
+        );
+        for p in planners {
+            p.validate()?;
+        }
+        let mut cells = Vec::new();
+        for name in &self.spec.apps {
+            let app = apps::by_name(name).expect("spec validated app names");
+            for planner in planners {
+                let wf = self.workflow_with(app.as_ref(), *planner)?;
+                cells.push(PlannerCell::from_report(&wf));
+            }
+        }
+        Ok(PlannerMatrixReport {
+            spec: self.spec.clone(),
+            planners: planners.to_vec(),
+            cells,
+        })
     }
 }

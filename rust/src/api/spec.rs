@@ -1,6 +1,6 @@
 //! The serializable experiment specification and its fluent builder.
 
-use crate::easycrash::PlanSpec;
+use crate::easycrash::{PlanSpec, PlannerSpec};
 use crate::model::trace::FailureDist;
 use crate::runtime::{NativeEngine, StepEngine};
 use crate::sim::{CacheGeom, NvmProfile, SimConfig};
@@ -73,6 +73,10 @@ pub struct ExperimentSpec {
     /// efficiency threshold `τ`.
     pub ts: f64,
     pub tau: f64,
+    /// The planning strategy pair (`selector+placer` DSL) every workflow
+    /// in this experiment composes — the `critical` plan shorthand, the
+    /// `workflow` subcommand and the figures all resolve through it.
+    pub planner: PlannerSpec,
     /// Simulator configuration shared by every cell.
     pub cfg: SimConfig,
     /// Monte Carlo failure-trace parameters (the `efficiency`
@@ -93,6 +97,7 @@ impl Default for ExperimentSpec {
             verified: false,
             ts: 0.03,
             tau: 0.10,
+            planner: PlannerSpec::default(),
             cfg: SimConfig::mini(),
             trace: None,
         }
@@ -134,6 +139,7 @@ impl ExperimentSpec {
             self.tau >= 0.0 && self.tau.is_finite(),
             "tau must be non-negative and finite"
         );
+        self.planner.validate()?;
         // JSON integers are i64; keeping the seed in that range preserves
         // the spec's serialization round-trip.
         crate::ensure!(
@@ -147,8 +153,9 @@ impl ExperimentSpec {
     }
 
     /// Build a spec from CLI flags (`--apps a,b --plans "none;all" --tests
-    /// N --seed S --shards N --engine E --ts F --tau F --verified /
-    /// --no-verified --nvm P`), starting from `self` as the defaults — so
+    /// N --seed S --shards N --engine E --ts F --tau F --planner SEL+PL
+    /// --verified / --no-verified --nvm P`), starting from `self` as the
+    /// defaults — so
     /// a spec file loaded with [`ExperimentSpec::from_json`] can be
     /// overridden per-flag. Only keys present in `args` change
     /// (`--paper-scale` affects the defaults path in
@@ -185,6 +192,9 @@ impl ExperimentSpec {
         }
         self.ts = args.f64_or("ts", self.ts)?;
         self.tau = args.f64_or("tau", self.tau)?;
+        if let Some(p) = args.get("planner") {
+            self.planner = PlannerSpec::parse(p)?;
+        }
         if let Some(nvm) = args.get("nvm") {
             self.cfg.nvm = NvmProfile::by_name(nvm)
                 .ok_or_else(|| crate::err!("unknown NVM profile `{nvm}`"))?;
@@ -254,6 +264,7 @@ impl ExperimentSpec {
             .set("verified", self.verified)
             .set("ts", self.ts)
             .set("tau", self.tau)
+            .set("planner", self.planner.to_string())
             .set("geometry", self.geometry_name())
             .set("nvm", self.cfg.nvm.name);
         if self.geometry_name() == "custom" {
@@ -285,7 +296,7 @@ impl ExperimentSpec {
         // silently fall back to a default and run the wrong experiment.
         const KNOWN: &[&str] = &[
             "schema", "apps", "plans", "tests", "seed", "shards", "engine", "verified", "ts",
-            "tau", "geometry", "cache", "nvm", "trace",
+            "tau", "planner", "geometry", "cache", "nvm", "trace",
         ];
         for (i, (key, _)) in fields.iter().enumerate() {
             crate::ensure!(
@@ -359,6 +370,12 @@ impl ExperimentSpec {
         };
         spec.ts = f64_field("ts", spec.ts)?;
         spec.tau = f64_field("tau", spec.tau)?;
+        if let Some(v) = j.get("planner") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| crate::err!("`planner` must be a string"))?;
+            spec.planner = PlannerSpec::parse(s)?;
+        }
         if j.get("cache").is_some() {
             crate::ensure!(
                 j.get("geometry").and_then(Json::as_str) == Some("custom"),
@@ -485,6 +502,18 @@ impl SpecBuilder {
     pub fn tau(mut self, tau: f64) -> SpecBuilder {
         self.spec.tau = tau;
         self
+    }
+
+    pub fn planner(mut self, planner: PlannerSpec) -> SpecBuilder {
+        self.spec.planner = planner;
+        self
+    }
+
+    /// Set the planner in DSL form (`selector[+placer]`, e.g.
+    /// `topk(3)+iterend`).
+    pub fn planner_str(mut self, dsl: &str) -> Result<SpecBuilder> {
+        self.spec.planner = PlannerSpec::parse(dsl)?;
+        Ok(self)
     }
 
     pub fn cfg(mut self, cfg: SimConfig) -> SpecBuilder {

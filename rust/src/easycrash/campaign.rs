@@ -76,6 +76,15 @@ pub struct CampaignResult {
     pub records: Vec<TestRecord>,
     /// Candidate objects: (id, name, bytes).
     pub candidates: Vec<(ObjId, String, usize)>,
+    /// The loop-iterator bookmark's object id — resolved by the *same*
+    /// registry lookup that installs its flush hook, so selection can
+    /// exclude the bookmark by identity instead of by the literal name
+    /// `"it"`: an app object that merely shares the name is *analyzed*.
+    /// (Persistence plans remain name-addressed: `PersistPlan::resolve`
+    /// rejects a name shared by several registered objects rather than
+    /// guessing, so *persisting* a same-named non-bookmark object fails
+    /// loud instead of silently flushing the wrong one.)
+    pub iter_obj: Option<ObjId>,
     /// Total instrumented ops / ops at main-loop start.
     pub ops_total: u64,
     pub ops_main_start: u64,
@@ -172,6 +181,19 @@ impl CampaignResult {
         } else {
             self.region_cycles[k] / self.cycles
         }
+    }
+
+    /// Is `id` the persisted loop-iterator bookmark? The single
+    /// exclusion rule every candidate filter shares (selection,
+    /// [`crate::api::Runner::candidate_names`], Table 1).
+    pub fn is_bookmark(&self, id: ObjId) -> bool {
+        self.iter_obj == Some(id)
+    }
+
+    /// Candidate objects a selector may choose from: the campaign's
+    /// candidates minus the iterator bookmark.
+    pub fn selectable_candidates(&self) -> impl Iterator<Item = &(ObjId, String, usize)> {
+        self.candidates.iter().filter(|(id, _, _)| !self.is_bookmark(*id))
     }
 
     /// Inconsistency/success vectors for candidate `j` (Spearman input).
@@ -473,6 +495,10 @@ impl Campaign {
                 (id, o.spec.name.to_string(), o.spec.bytes())
             })
             .collect();
+        // Mirror of the lookup `PersistPlan::resolve` uses for the
+        // iteration-end bookmark hook: whatever object that hook persists
+        // is the one selection must never treat as a candidate question.
+        let iter_obj = layout.by_name("it");
 
         let (core, records) = match engine {
             Some(engine) => {
@@ -515,6 +541,7 @@ impl Campaign {
             plan: plan.clone(),
             records,
             candidates,
+            iter_obj,
             ops_total: core.ops_total,
             ops_main_start: core.ops_main_start,
             cycles: core.cycles,

@@ -1,9 +1,12 @@
 //! The EasyCrash framework (the paper's §5 contribution): crash-test
 //! campaigns, outcome classification, statistical selection of critical
-//! data objects, code-region selection and the end-to-end workflow.
+//! data objects, code-region selection, pluggable planning strategies
+//! ([`planner`]: selector/placer pairs named by a DSL) and the
+//! end-to-end workflow composed over them.
 
 pub mod campaign;
 pub mod plan;
+pub mod planner;
 pub mod regions;
 pub mod selection;
 pub mod stats;
@@ -11,4 +14,5 @@ pub mod workflow;
 
 pub use campaign::{Campaign, CampaignResult, ShardedCampaign, TestRecord};
 pub use plan::{PersistPlan, PlanSpec};
+pub use planner::{PlacerSpec, PlannerSpec, SelectorSpec};
 pub use workflow::{Workflow, WorkflowSummary};

@@ -291,6 +291,20 @@ impl PersistPlan {
             .by_name("it")
             .map(|id| FlushEntry::for_object(reg.get(id), 1));
         for e in &self.entries {
+            // Entries are name-addressed; a name shared by several
+            // registered objects cannot be resolved faithfully (the
+            // first match might be the always-persisted bookmark, making
+            // the entry a silent no-op) — reject instead of guessing.
+            let matches = reg
+                .objects
+                .iter()
+                .filter(|o| o.spec.name == e.object)
+                .count();
+            crate::ensure!(
+                matches <= 1,
+                "plan references ambiguous object name `{}` ({matches} registered objects share it)",
+                e.object
+            );
             let id = reg
                 .by_name(&e.object)
                 .ok_or_else(|| crate::err!("plan references unknown object `{}`", e.object))?;
@@ -342,6 +356,19 @@ mod tests {
     fn unknown_object_is_error() {
         let plan = PersistPlan::at_iter_end(&["nope"], 2, 1);
         assert!(plan.resolve(&reg(), 2).is_err());
+    }
+
+    #[test]
+    fn ambiguous_object_name_is_error() {
+        // Two registered objects sharing a name cannot be addressed by a
+        // plan entry — resolve must reject, not pick the first match.
+        let mut r = reg();
+        r.register(ObjSpec::f64("u", 4, false));
+        let plan = PersistPlan::at_iter_end(&["u"], 2, 1);
+        let err = plan.resolve(&r, 2).unwrap_err();
+        assert!(err.to_string().contains("ambiguous"), "{err}");
+        // Unambiguous names still resolve.
+        assert!(PersistPlan::at_iter_end(&["r"], 2, 1).resolve(&r, 2).is_ok());
     }
 
     #[test]

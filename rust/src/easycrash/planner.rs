@@ -1,0 +1,695 @@
+//! Pluggable planning strategies — the §5 decision procedure as an API.
+//!
+//! EasyCrash's central contribution is *deciding* what to persist and
+//! where. This module splits that decision into two first-class strategy
+//! traits so alternative policies can be expressed, compared and swept:
+//!
+//! * [`Selector`] — characterization campaign → the critical-object set
+//!   (step 2 of the §5.3 workflow);
+//! * [`Placer`] — region model → candidate [`PersistPlan`]s (step 4);
+//!   the workflow measures each candidate with a crash campaign and
+//!   keeps the best.
+//!
+//! A [`PlannerSpec`] names one `(selector, placer)` pair in a compact
+//! DSL the CLI, spec files and reports share:
+//!
+//! ```text
+//! planner  := selector [ "+" placer ]
+//! selector := "spearman" [ "(p=" FLOAT ")" ]   §5.1 (default p = 0.01)
+//!           | "topk" "(" INT ")"               k highest mean inconsistency
+//!           | "all"                            every candidate object
+//!           | "random" "(" INT ")"             seeded coin — floor baseline
+//! placer   := "knapsack-vs-iterend"            §5.2 knapsack AND the
+//!                                              budget-fit iteration-end
+//!                                              plan, best measured wins
+//!                                              (the paper workflow;
+//!                                              default when omitted)
+//!           | "knapsack"                       §5.2 multi-choice knapsack
+//!           | "iterend"                        iteration end at a
+//!                                              budget-fitting frequency
+//!           | "greedy"                         greedy gain/cost frequency
+//!                                              search under t_s
+//! ```
+//!
+//! Parsing and `Display` round-trip exactly (`parse(format(s)) == s`),
+//! and the rendered string is canonical — [`crate::api::Runner`] keys
+//! its workflow memo on `app :: planner` with it. The default pair
+//! `spearman+knapsack-vs-iterend` reproduces the pre-strategy-API
+//! hardwired workflow bit-identically (`rust/tests/planner.rs`).
+//! [`SELECTORS`] / [`PLACERS`] are the named registry backing help text
+//! and unknown-name errors.
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+use super::campaign::CampaignResult;
+use super::plan::{PersistPlan, PlanEntry};
+use super::regions::{region_options, RegionChoice, RegionModel, RegionOption, RegionSelection};
+use super::selection::{
+    correlation_rows, mean_inconsistencies, select_critical_with, SelectionRow, P_THRESHOLD,
+};
+
+// ---------------------------------------------------------------------------
+// Strategy traits
+// ---------------------------------------------------------------------------
+
+/// Step-2 strategy: analyse a (no-persistence) characterization campaign
+/// and flag the critical-object set. Implementations must be
+/// deterministic functions of the campaign result (plus their own
+/// parameters) — campaign results are seed-deterministic, so the whole
+/// workflow stays reproducible. The iterator bookmark is never offered
+/// (see [`crate::easycrash::selection::candidate_indices`]).
+pub trait Selector: Send + Sync {
+    /// One row per selectable candidate, `selected` marking the choice.
+    fn select(&self, base: &CampaignResult) -> Result<Vec<SelectionRow>>;
+}
+
+/// Everything a placer may consult (it must not run campaigns itself —
+/// measuring is the workflow's job).
+pub struct PlacerCtx<'a> {
+    /// The §5.2 analytical model measured from steps 1 + 3.
+    pub model: &'a RegionModel,
+    /// The knapsack's own solution (always computed — it is the report's
+    /// analytic baseline even for non-knapsack placers).
+    pub region_sel: &'a RegionSelection,
+    /// The selector's critical-object names (never empty: the workflow
+    /// short-circuits an empty selection to the baseline plan).
+    pub critical: &'a [String],
+    /// Runtime-overhead budget `t_s`.
+    pub ts: f64,
+    /// §7 efficiency threshold `τ`.
+    pub tau: f64,
+    pub num_regions: usize,
+}
+
+/// Step-4 strategy: produce candidate plans, in evaluation order. The
+/// workflow runs one crash campaign per candidate and keeps the first
+/// best-measured plan (later candidates replace earlier ones only when
+/// strictly better), so a single-plan placer costs one campaign.
+pub trait Placer: Send + Sync {
+    fn place(&self, ctx: &PlacerCtx<'_>) -> Result<Vec<PersistPlan>>;
+}
+
+// ---------------------------------------------------------------------------
+// Selectors
+// ---------------------------------------------------------------------------
+
+/// §5.1: negative, significant Spearman correlation (the paper policy).
+pub struct SpearmanSelector {
+    pub p_threshold: f64,
+}
+
+impl Selector for SpearmanSelector {
+    fn select(&self, base: &CampaignResult) -> Result<Vec<SelectionRow>> {
+        Ok(select_critical_with(base, self.p_threshold))
+    }
+}
+
+/// The `k` candidates with the highest mean data-inconsistent rate —
+/// "persist what is most often torn", no statistics required. Ties break
+/// toward registration order; `k` beyond the candidate count selects
+/// everything.
+pub struct TopKSelector {
+    pub k: usize,
+}
+
+impl Selector for TopKSelector {
+    fn select(&self, base: &CampaignResult) -> Result<Vec<SelectionRow>> {
+        let mut rows = correlation_rows(base);
+        let means = mean_inconsistencies(base);
+        let mut order: Vec<usize> = (0..rows.len()).collect();
+        order.sort_by(|&a, &b| means[b].total_cmp(&means[a]).then(a.cmp(&b)));
+        for &i in order.iter().take(self.k) {
+            rows[i].selected = true;
+        }
+        Ok(rows)
+    }
+}
+
+/// Every candidate object — the paper's costly "no selection" ceiling.
+pub struct AllSelector;
+
+impl Selector for AllSelector {
+    fn select(&self, base: &CampaignResult) -> Result<Vec<SelectionRow>> {
+        let mut rows = correlation_rows(base);
+        for r in &mut rows {
+            r.selected = true;
+        }
+        Ok(rows)
+    }
+}
+
+/// A seeded fair coin per candidate — the floor any informed policy must
+/// beat. Deterministic given the seed (and the app's fixed candidate
+/// order), independent of the campaign's measurements.
+pub struct RandomSelector {
+    pub seed: u64,
+}
+
+impl Selector for RandomSelector {
+    fn select(&self, base: &CampaignResult) -> Result<Vec<SelectionRow>> {
+        let mut rows = correlation_rows(base);
+        let mut rng = Rng::new(self.seed);
+        for r in &mut rows {
+            r.selected = rng.f64() < 0.5;
+        }
+        Ok(rows)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Placers
+// ---------------------------------------------------------------------------
+
+/// Expand region choices into the critical-objects-at-those-regions plan
+/// (choice order, then object order — the knapsack plan's historical
+/// entry order, kept so default-planner runs stay bit-identical).
+fn plan_from_choices(choices: &[RegionChoice], critical: &[String]) -> PersistPlan {
+    PersistPlan {
+        entries: choices
+            .iter()
+            .flat_map(|ch| {
+                critical.iter().map(move |o| PlanEntry {
+                    object: o.clone(),
+                    region: ch.region,
+                    every_x: ch.x,
+                })
+            })
+            .collect(),
+        clwb: false,
+    }
+}
+
+/// The §5.2 budget-fit iteration-end plan: all critical objects at the
+/// last region, every `x_fit` iterations with `x_fit = ⌈l_last / t_s⌉`.
+fn iter_end_plan(ctx: &PlacerCtx<'_>) -> PersistPlan {
+    let last = ctx.num_regions - 1;
+    let x_fit = (ctx.model.l[last] / ctx.ts).ceil().max(1.0) as u32;
+    PersistPlan {
+        entries: ctx
+            .critical
+            .iter()
+            .map(|o| PlanEntry {
+                object: o.clone(),
+                region: last,
+                every_x: x_fit,
+            })
+            .collect(),
+        clwb: false,
+    }
+}
+
+/// §5.2's multi-choice knapsack solution, taken as-is.
+pub struct KnapsackPlacer;
+
+impl Placer for KnapsackPlacer {
+    fn place(&self, ctx: &PlacerCtx<'_>) -> Result<Vec<PersistPlan>> {
+        Ok(vec![plan_from_choices(&ctx.region_sel.choices, ctx.critical)])
+    }
+}
+
+/// The natural iteration-end placement at a budget-fitting frequency.
+pub struct IterEndPlacer;
+
+impl Placer for IterEndPlacer {
+    fn place(&self, ctx: &PlacerCtx<'_>) -> Result<Vec<PersistPlan>> {
+        Ok(vec![iter_end_plan(ctx)])
+    }
+}
+
+/// The paper workflow's step 4: evaluate the knapsack plan AND the
+/// iteration-end plan, keep whichever campaign measures better (the
+/// knapsack's per-region gains inherit §5.2's measurement inaccuracy —
+/// persisting in one region changes another region's recomputability).
+pub struct KnapsackVsIterEndPlacer;
+
+impl Placer for KnapsackVsIterEndPlacer {
+    fn place(&self, ctx: &PlacerCtx<'_>) -> Result<Vec<PersistPlan>> {
+        Ok(vec![
+            plan_from_choices(&ctx.region_sel.choices, ctx.critical),
+            iter_end_plan(ctx),
+        ])
+    }
+}
+
+/// Greedy frequency search: repeatedly take the `(region, x)` option
+/// with the best modeled gain per unit overhead that still fits the
+/// remaining `t_s` budget (at most one frequency per region — same
+/// option menu as the knapsack, Eq. 5). Pseudo-linear where the knapsack
+/// DP is pseudo-polynomial; the classic density heuristic it bounds.
+pub struct GreedyPlacer;
+
+impl Placer for GreedyPlacer {
+    fn place(&self, ctx: &PlacerCtx<'_>) -> Result<Vec<PersistPlan>> {
+        let menu = region_options(ctx.model);
+        let mut budget = ctx.ts;
+        let mut taken = vec![false; ctx.num_regions];
+        let mut choices: Vec<RegionChoice> = Vec::new();
+        loop {
+            let mut best: Option<(f64, &RegionOption)> = None; // (density, option)
+            for o in &menu {
+                if taken[o.region] || o.weight > budget {
+                    continue;
+                }
+                let density = if o.weight > 0.0 { o.gain / o.weight } else { f64::INFINITY };
+                let better = match &best {
+                    None => true,
+                    Some((d, _)) => density > *d,
+                };
+                if better {
+                    best = Some((density, o));
+                }
+            }
+            match best {
+                None => break,
+                Some((_, o)) => {
+                    taken[o.region] = true;
+                    budget -= o.weight;
+                    choices.push(RegionChoice { region: o.region, x: o.x });
+                }
+            }
+        }
+        choices.sort_by_key(|c| c.region);
+        Ok(vec![plan_from_choices(&choices, ctx.critical)])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Specs: the parsed DSL
+// ---------------------------------------------------------------------------
+
+/// A selector, as written in the DSL.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SelectorSpec {
+    /// §5.1 Spearman selection at significance `p` (default 0.01).
+    Spearman { p: f64 },
+    /// The `k` candidates with the highest mean inconsistency.
+    TopK { k: usize },
+    /// Every candidate object.
+    All,
+    /// A seeded fair coin per candidate (floor baseline).
+    Random { seed: u64 },
+}
+
+/// A placer, as written in the DSL.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacerSpec {
+    /// Knapsack and budget-fit iteration end, best measured wins (the
+    /// paper workflow; the default).
+    KnapsackVsIterEnd,
+    /// §5.2 multi-choice knapsack only.
+    Knapsack,
+    /// Budget-fit iteration-end placement only.
+    IterEnd,
+    /// Greedy gain/cost frequency search under `t_s`.
+    Greedy,
+}
+
+/// One named `(selector, placer)` strategy pair.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlannerSpec {
+    pub selector: SelectorSpec,
+    pub placer: PlacerSpec,
+}
+
+/// One registry row: the strategy's name, its DSL syntax and what it
+/// does (help text and unknown-name errors render these).
+pub struct StrategyInfo {
+    pub name: &'static str,
+    pub syntax: &'static str,
+    pub summary: &'static str,
+}
+
+/// The named selector registry.
+pub const SELECTORS: &[StrategyInfo] = &[
+    StrategyInfo {
+        name: "spearman",
+        syntax: "spearman[(p=F)]",
+        summary: "§5.1 negative significant Spearman correlation (default p=0.01)",
+    },
+    StrategyInfo {
+        name: "topk",
+        syntax: "topk(K)",
+        summary: "the K candidates with the highest mean inconsistency",
+    },
+    StrategyInfo {
+        name: "all",
+        syntax: "all",
+        summary: "every candidate object (no selection)",
+    },
+    StrategyInfo {
+        name: "random",
+        syntax: "random(SEED)",
+        summary: "seeded fair coin per candidate (floor baseline)",
+    },
+];
+
+/// The named placer registry.
+pub const PLACERS: &[StrategyInfo] = &[
+    StrategyInfo {
+        name: "knapsack-vs-iterend",
+        syntax: "knapsack-vs-iterend",
+        summary: "knapsack AND budget-fit iteration end, best measured wins (default)",
+    },
+    StrategyInfo {
+        name: "knapsack",
+        syntax: "knapsack",
+        summary: "§5.2 multi-choice knapsack over regions x frequencies",
+    },
+    StrategyInfo {
+        name: "iterend",
+        syntax: "iterend",
+        summary: "iteration end at a budget-fitting frequency",
+    },
+    StrategyInfo {
+        name: "greedy",
+        syntax: "greedy",
+        summary: "greedy gain/cost frequency search under t_s",
+    },
+];
+
+fn known(registry: &[StrategyInfo]) -> String {
+    registry
+        .iter()
+        .map(|s| s.syntax)
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// Split `name(args)` into `(name, Some(args))`, or `(s, None)` when no
+/// parenthesis is present.
+fn call_args(s: &str) -> Result<(&str, Option<&str>)> {
+    match s.find('(') {
+        None => Ok((s, None)),
+        Some(i) => {
+            crate::ensure!(
+                s.ends_with(')') && s.len() > i + 1,
+                "bad strategy `{s}`: unbalanced parentheses"
+            );
+            Ok((&s[..i], Some(s[i + 1..s.len() - 1].trim())))
+        }
+    }
+}
+
+impl SelectorSpec {
+    pub fn parse(s: &str) -> Result<SelectorSpec> {
+        let (name, args) = call_args(s)?;
+        match name {
+            "spearman" => {
+                let p = match args {
+                    None => P_THRESHOLD,
+                    Some(a) => {
+                        let v = a.strip_prefix("p=").ok_or_else(|| {
+                            crate::err!("bad selector `{s}`: expected spearman(p=F)")
+                        })?;
+                        v.trim().parse::<f64>().map_err(|_| {
+                            crate::err!("bad selector `{s}`: `{v}` is not a number")
+                        })?
+                    }
+                };
+                let spec = SelectorSpec::Spearman { p };
+                spec.validate()?;
+                Ok(spec)
+            }
+            "topk" => {
+                let a = args
+                    .filter(|a| !a.is_empty())
+                    .ok_or_else(|| crate::err!("bad selector `{s}`: expected topk(K)"))?;
+                let k = a
+                    .parse::<usize>()
+                    .map_err(|_| crate::err!("bad selector `{s}`: `{a}` is not an integer"))?;
+                let spec = SelectorSpec::TopK { k };
+                spec.validate()?;
+                Ok(spec)
+            }
+            "all" => {
+                crate::ensure!(args.is_none(), "bad selector `{s}`: `all` takes no arguments");
+                Ok(SelectorSpec::All)
+            }
+            "random" => {
+                let a = args
+                    .filter(|a| !a.is_empty())
+                    .ok_or_else(|| crate::err!("bad selector `{s}`: expected random(SEED)"))?;
+                let seed = a
+                    .parse::<u64>()
+                    .map_err(|_| crate::err!("bad selector `{s}`: `{a}` is not an integer"))?;
+                Ok(SelectorSpec::Random { seed })
+            }
+            other => crate::bail!(
+                "unknown selector `{other}` (known: {})",
+                known(SELECTORS)
+            ),
+        }
+    }
+
+    /// Parameter invariants (parse enforces them; programmatic
+    /// constructions funnel through [`PlannerSpec::validate`]).
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            SelectorSpec::Spearman { p } => {
+                crate::ensure!(
+                    p.is_finite() && *p > 0.0 && *p <= 1.0,
+                    "spearman p-threshold must be in (0, 1], got {p}"
+                );
+            }
+            SelectorSpec::TopK { k } => {
+                crate::ensure!(*k >= 1, "topk needs k >= 1");
+            }
+            SelectorSpec::All | SelectorSpec::Random { .. } => {}
+        }
+        Ok(())
+    }
+
+    /// Instantiate the strategy this spec names.
+    pub fn instantiate(&self) -> Box<dyn Selector> {
+        match *self {
+            SelectorSpec::Spearman { p } => Box::new(SpearmanSelector { p_threshold: p }),
+            SelectorSpec::TopK { k } => Box::new(TopKSelector { k }),
+            SelectorSpec::All => Box::new(AllSelector),
+            SelectorSpec::Random { seed } => Box::new(RandomSelector { seed }),
+        }
+    }
+}
+
+impl fmt::Display for SelectorSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SelectorSpec::Spearman { p } if *p == P_THRESHOLD => f.write_str("spearman"),
+            SelectorSpec::Spearman { p } => write!(f, "spearman(p={p})"),
+            SelectorSpec::TopK { k } => write!(f, "topk({k})"),
+            SelectorSpec::All => f.write_str("all"),
+            SelectorSpec::Random { seed } => write!(f, "random({seed})"),
+        }
+    }
+}
+
+impl PlacerSpec {
+    pub fn parse(s: &str) -> Result<PlacerSpec> {
+        match s {
+            "knapsack-vs-iterend" => Ok(PlacerSpec::KnapsackVsIterEnd),
+            "knapsack" => Ok(PlacerSpec::Knapsack),
+            "iterend" => Ok(PlacerSpec::IterEnd),
+            "greedy" => Ok(PlacerSpec::Greedy),
+            other => crate::bail!("unknown placer `{other}` (known: {})", known(PLACERS)),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PlacerSpec::KnapsackVsIterEnd => "knapsack-vs-iterend",
+            PlacerSpec::Knapsack => "knapsack",
+            PlacerSpec::IterEnd => "iterend",
+            PlacerSpec::Greedy => "greedy",
+        }
+    }
+
+    /// Instantiate the strategy this spec names.
+    pub fn instantiate(&self) -> Box<dyn Placer> {
+        match self {
+            PlacerSpec::KnapsackVsIterEnd => Box::new(KnapsackVsIterEndPlacer),
+            PlacerSpec::Knapsack => Box::new(KnapsackPlacer),
+            PlacerSpec::IterEnd => Box::new(IterEndPlacer),
+            PlacerSpec::Greedy => Box::new(GreedyPlacer),
+        }
+    }
+}
+
+impl fmt::Display for PlacerSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl Default for PlannerSpec {
+    /// The paper workflow: `spearman+knapsack-vs-iterend`.
+    fn default() -> PlannerSpec {
+        PlannerSpec {
+            selector: SelectorSpec::Spearman { p: P_THRESHOLD },
+            placer: PlacerSpec::KnapsackVsIterEnd,
+        }
+    }
+}
+
+impl PlannerSpec {
+    /// Parse `selector[+placer]`; an omitted placer means the default
+    /// `knapsack-vs-iterend`.
+    pub fn parse(s: &str) -> Result<PlannerSpec> {
+        let s = s.trim();
+        crate::ensure!(
+            !s.is_empty(),
+            "empty planner spec (try `spearman+knapsack-vs-iterend`; selectors: {}; placers: {})",
+            known(SELECTORS),
+            known(PLACERS)
+        );
+        let (sel, placer) = match s.split_once('+') {
+            Some((sel, pl)) => (sel.trim(), PlacerSpec::parse(pl.trim())?),
+            None => (s, PlacerSpec::KnapsackVsIterEnd),
+        };
+        Ok(PlannerSpec {
+            selector: SelectorSpec::parse(sel)?,
+            placer,
+        })
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.selector.validate()
+    }
+
+    /// The default sweep of the `planner-matrix` report: the three
+    /// single-plan placers crossed with the three informed selectors
+    /// (3 × 3 pairs).
+    pub fn default_matrix() -> Vec<PlannerSpec> {
+        let selectors = [
+            SelectorSpec::Spearman { p: P_THRESHOLD },
+            SelectorSpec::TopK { k: 3 },
+            SelectorSpec::All,
+        ];
+        let placers = [PlacerSpec::Knapsack, PlacerSpec::IterEnd, PlacerSpec::Greedy];
+        selectors
+            .iter()
+            .flat_map(|&selector| {
+                placers.iter().map(move |&placer| PlannerSpec { selector, placer })
+            })
+            .collect()
+    }
+}
+
+/// Canonical rendering (always `selector+placer`); the exact inverse of
+/// [`PlannerSpec::parse`] and the runner's workflow memo-key component.
+impl fmt::Display for PlannerSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}+{}", self.selector, self.placer)
+    }
+}
+
+impl FromStr for PlannerSpec {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<PlannerSpec> {
+        PlannerSpec::parse(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dsl_round_trips_canonically() {
+        for (src, canon) in [
+            ("spearman", "spearman+knapsack-vs-iterend"),
+            ("spearman(p=0.01)", "spearman+knapsack-vs-iterend"),
+            ("spearman(p=0.05)+knapsack", "spearman(p=0.05)+knapsack"),
+            ("topk(3)+iterend", "topk(3)+iterend"),
+            ("all+greedy", "all+greedy"),
+            ("random(7)", "random(7)+knapsack-vs-iterend"),
+            (" topk(1) + greedy ", "topk(1)+greedy"),
+        ] {
+            let spec = PlannerSpec::parse(src).unwrap();
+            assert_eq!(spec.to_string(), canon, "`{src}`");
+            assert_eq!(PlannerSpec::parse(canon).unwrap(), spec, "`{src}` reparse");
+        }
+    }
+
+    #[test]
+    fn dsl_rejects_malformed_specs() {
+        for bad in [
+            "",
+            "   ",
+            "nope",
+            "spearman+nope",
+            "spearman+knapsack+greedy",
+            "spearman(p=)",
+            "spearman(q=0.01)",
+            "spearman(p=0)",
+            "spearman(p=2)",
+            "spearman(",
+            "topk",
+            "topk()",
+            "topk(0)",
+            "topk(x)",
+            "all(3)",
+            "random",
+            "random()",
+            "random(-1)",
+            "+knapsack",
+        ] {
+            assert!(PlannerSpec::parse(bad).is_err(), "`{bad}` must be rejected");
+        }
+    }
+
+    #[test]
+    fn default_matrix_is_three_by_three() {
+        let m = PlannerSpec::default_matrix();
+        assert_eq!(m.len(), 9);
+        let rendered: Vec<String> = m.iter().map(|p| p.to_string()).collect();
+        assert!(rendered.contains(&"spearman+knapsack".to_string()));
+        assert!(rendered.contains(&"topk(3)+iterend".to_string()));
+        assert!(rendered.contains(&"all+greedy".to_string()));
+        // All distinct.
+        let mut dedup = rendered.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 9);
+    }
+
+    #[test]
+    fn greedy_respects_budget_and_region_uniqueness() {
+        let model = RegionModel {
+            a: vec![0.5, 0.3, 0.2],
+            c: vec![0.2, 0.4, 0.9],
+            cmax: vec![0.9, 0.8, 0.95],
+            l: vec![0.02, 0.025, 0.01],
+            is_loop: vec![true, true, false],
+        };
+        let region_sel = super::super::regions::select_regions(&model, 0.03, 0.0);
+        let critical = vec!["u".to_string()];
+        let ctx = PlacerCtx {
+            model: &model,
+            region_sel: &region_sel,
+            critical: &critical,
+            ts: 0.03,
+            tau: 0.0,
+            num_regions: 3,
+        };
+        let plans = GreedyPlacer.place(&ctx).unwrap();
+        assert_eq!(plans.len(), 1);
+        let plan = &plans[0];
+        assert!(!plan.entries.is_empty(), "positive gains fit the budget");
+        let overhead: f64 = plan
+            .entries
+            .iter()
+            .map(|e| model.l[e.region] / e.every_x as f64)
+            .sum();
+        assert!(overhead <= 0.03 + 1e-12, "overhead {overhead}");
+        let mut regions: Vec<usize> = plan.entries.iter().map(|e| e.region).collect();
+        regions.dedup();
+        let mut sorted = regions.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(regions.len(), sorted.len(), "at most one frequency per region");
+    }
+}

@@ -4,7 +4,7 @@
 
 /// Inputs to the region model, all measured from two crash-test campaigns
 //  (§5.3 steps 1+3) and the flush-cost estimate.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RegionModel {
     /// `a_k`: time ratio of each region (Eq. 1 weights).
     pub a: Vec<f64>,
@@ -30,7 +30,7 @@ pub struct RegionChoice {
 }
 
 /// Outcome of the selection.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RegionSelection {
     pub choices: Vec<RegionChoice>,
     /// Predicted application recomputability Y′ (Eq. 2).
@@ -42,8 +42,9 @@ pub struct RegionSelection {
 }
 
 /// Frequencies considered for loop regions (x=1 maximizes `c_k^x`;
-/// higher x trades recomputability for overhead, Eq. 5).
-const FREQS: [u32; 4] = [1, 2, 4, 8];
+/// higher x trades recomputability for overhead, Eq. 5). Every placement
+/// strategy searches this menu through [`region_options`].
+pub const FREQS: [u32; 4] = [1, 2, 4, 8];
 
 /// Baseline recomputability Y (Eq. 1).
 pub fn baseline_y(m: &RegionModel) -> f64 {
@@ -53,6 +54,37 @@ pub fn baseline_y(m: &RegionModel) -> f64 {
 /// `c_k^x` by linear interpolation (Eq. 5).
 pub fn c_at_freq(c: f64, cmax: f64, x: u32) -> f64 {
     (cmax - c) / x as f64 + c
+}
+
+/// One candidate persistence option: region `k` at frequency `x`, with
+/// its modeled overhead `weight = l_k / x` and recomputability gain
+/// `gain = a_k * (c_k^x - c_k)` (Eq. 5).
+#[derive(Clone, Copy, Debug)]
+pub struct RegionOption {
+    pub region: usize,
+    pub x: u32,
+    pub weight: f64,
+    pub gain: f64,
+}
+
+/// Enumerate every positive-gain (region, frequency) option — the one
+/// menu all placement strategies search, so the knapsack DP and the
+/// greedy placer ([`crate::easycrash::planner`]) can never disagree on
+/// what is choosable. Regions ascending, frequencies in [`FREQS`] order;
+/// non-loop regions only support `x = 1`.
+pub fn region_options(m: &RegionModel) -> Vec<RegionOption> {
+    let mut out = Vec::new();
+    for k in 0..m.a.len() {
+        let freqs: &[u32] = if m.is_loop[k] { &FREQS } else { &[1] };
+        for &x in freqs {
+            let weight = m.l[k] / x as f64;
+            let gain = m.a[k] * (c_at_freq(m.c[k], m.cmax[k], x) - m.c[k]);
+            if gain > 0.0 {
+                out.push(RegionOption { region: k, x, weight, gain });
+            }
+        }
+    }
+    out
 }
 
 /// Solve the multi-choice knapsack: pick at most one frequency per region
@@ -69,23 +101,14 @@ pub fn select_regions(m: &RegionModel, ts: f64, tau: f64) -> RegionSelection {
     const STEPS: usize = 2000;
     let scale = STEPS as f64 / ts.max(1e-12);
 
-    // Options per region: (weight_steps, value, x).
-    let mut options: Vec<Vec<(usize, f64, u32)>> = Vec::with_capacity(w);
-    for k in 0..w {
-        let mut opts = Vec::new();
-        let freqs: &[u32] = if m.is_loop[k] { &FREQS } else { &[1] };
-        for &x in freqs {
-            let weight = m.l[k] / x as f64;
-            let gain = m.a[k] * (c_at_freq(m.c[k], m.cmax[k], x) - m.c[k]);
-            if gain <= 0.0 {
-                continue;
-            }
-            let wsteps = (weight * scale).ceil() as usize;
-            if wsteps <= STEPS {
-                opts.push((wsteps, gain, x));
-            }
+    // Options per region: (weight_steps, value, x) — the shared
+    // [`region_options`] menu, discretized for the DP.
+    let mut options: Vec<Vec<(usize, f64, u32)>> = vec![Vec::new(); w];
+    for o in region_options(m) {
+        let wsteps = (o.weight * scale).ceil() as usize;
+        if wsteps <= STEPS {
+            options[o.region].push((wsteps, o.gain, o.x));
         }
-        options.push(opts);
     }
 
     // Multi-choice knapsack DP, keeping every layer for backtracking.
@@ -165,6 +188,19 @@ mod tests {
         assert_eq!(c_at_freq(0.2, 0.8, 1), 0.8);
         assert!((c_at_freq(0.2, 0.8, 2) - 0.5).abs() < 1e-12);
         assert!((c_at_freq(0.2, 0.8, 4) - 0.35).abs() < 1e-12);
+    }
+
+    #[test]
+    fn options_menu_is_ordered_and_positive_gain_only() {
+        let mut m = model();
+        m.cmax[1] = m.c[1]; // region 1: zero gain at every frequency
+        let opts = region_options(&m);
+        assert!(opts.iter().all(|o| o.gain > 0.0));
+        assert!(opts.iter().all(|o| o.region != 1), "zero-gain region dropped");
+        // Region 2 is not a loop: only x = 1 is offered.
+        assert_eq!(opts.iter().filter(|o| o.region == 2).count(), 1);
+        // Regions ascend; frequencies ascend within a region (FREQS order).
+        assert!(opts.windows(2).all(|w| (w[0].region, w[0].x) < (w[1].region, w[1].x)));
     }
 
     #[test]

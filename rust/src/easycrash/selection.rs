@@ -1,12 +1,16 @@
 //! Critical-data-object selection (§5.1): Spearman rank correlation
 //! between each candidate's data inconsistent rate and recomputation
 //! success over a crash-test campaign.
+//!
+//! The Spearman policy is one [`crate::easycrash::planner::Selector`]
+//! among several; this module keeps the §5.1 statistics plus the shared
+//! row machinery every selector builds on.
 
 use super::campaign::CampaignResult;
 use super::stats::spearman;
 
 /// Correlation analysis of one candidate object.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SelectionRow {
     pub name: String,
     pub bytes: usize,
@@ -19,31 +23,72 @@ pub struct SelectionRow {
 /// a very strong correlation in our study").
 pub const P_THRESHOLD: f64 = 0.01;
 
+/// Indices (into `result.candidates` / `TestRecord::inconsistency`) of
+/// the candidates a selector may choose from. The loop-iterator bookmark
+/// is excluded *by object id* — the id the campaign resolved with the
+/// same lookup that installs the bookmark's flush hook — never by the
+/// literal name `"it"`, so an app object that merely shares the name is
+/// still analyzed. The bookmark itself is always persisted (footnote 3),
+/// so it is never a selection question.
+pub fn candidate_indices(result: &CampaignResult) -> Vec<usize> {
+    result
+        .candidates
+        .iter()
+        .enumerate()
+        .filter(|(_, (id, _, _))| !result.is_bookmark(*id))
+        .map(|(j, _)| j)
+        .collect()
+}
+
+/// One [`SelectionRow`] per selectable candidate (bookmark excluded),
+/// carrying the §5.1 correlation statistics with `selected = false` —
+/// the shared starting point every selector marks up.
+pub fn correlation_rows(result: &CampaignResult) -> Vec<SelectionRow> {
+    candidate_indices(result)
+        .into_iter()
+        .map(|j| {
+            let (_, name, bytes) = &result.candidates[j];
+            let (xs, ys) = result.vectors_for(j);
+            let c = spearman(&xs, &ys);
+            SelectionRow {
+                name: name.clone(),
+                bytes: *bytes,
+                rs: c.rs,
+                p: c.p,
+                selected: false,
+            }
+        })
+        .collect()
+}
+
+/// Mean data-inconsistent rate per selectable candidate, aligned with
+/// [`correlation_rows`] (the top-k-by-inconsistency selector's ranking
+/// metric).
+pub fn mean_inconsistencies(result: &CampaignResult) -> Vec<f64> {
+    candidate_indices(result)
+        .into_iter()
+        .map(|j| {
+            if result.records.is_empty() {
+                0.0
+            } else {
+                result.records.iter().map(|t| t.inconsistency[j]).sum::<f64>()
+                    / result.records.len() as f64
+            }
+        })
+        .collect()
+}
+
 /// Run the §5.1 selection over a (no-persistence) characterization
 /// campaign. A candidate is critical iff its correlation coefficient is
 /// negative (more inconsistency ⇒ less recomputability) and significant.
-///
-/// The loop-iterator bookmark is excluded: it is always persisted
-/// (footnote 3), so it is never a selection question.
 pub fn select_critical(result: &CampaignResult) -> Vec<SelectionRow> {
     select_critical_with(result, P_THRESHOLD)
 }
 
 pub fn select_critical_with(result: &CampaignResult, p_threshold: f64) -> Vec<SelectionRow> {
-    let mut rows = Vec::new();
-    for (j, (_, name, bytes)) in result.candidates.iter().enumerate() {
-        if name == "it" {
-            continue;
-        }
-        let (xs, ys) = result.vectors_for(j);
-        let c = spearman(&xs, &ys);
-        rows.push(SelectionRow {
-            name: name.clone(),
-            bytes: *bytes,
-            rs: c.rs,
-            p: c.p,
-            selected: c.rs < 0.0 && c.p < p_threshold,
-        });
+    let mut rows = correlation_rows(result);
+    for r in &mut rows {
+        r.selected = r.rs < 0.0 && r.p < p_threshold;
     }
     rows
 }
@@ -74,7 +119,7 @@ mod tests {
     fn synthetic_result() -> CampaignResult {
         // Candidate 0 ("u"): success anti-correlates with inconsistency.
         // Candidate 1 ("r"): independent noise.
-        // Candidate 2 ("it"): excluded from selection.
+        // Candidate 2 ("it"): the bookmark, excluded from selection.
         let mut rng = Rng::new(42);
         let mut records = Vec::new();
         for _ in 0..400 {
@@ -100,6 +145,7 @@ mod tests {
                 (1, "r".into(), 2048),
                 (2, "it".into(), 8),
             ],
+            iter_obj: Some(2),
             ops_total: 1,
             ops_main_start: 0,
             cycles: 1.0,
@@ -115,7 +161,7 @@ mod tests {
     #[test]
     fn selects_correlated_object_only() {
         let rows = select_critical(&synthetic_result());
-        assert_eq!(rows.len(), 2, "`it` excluded");
+        assert_eq!(rows.len(), 2, "the bookmark is excluded");
         let u = rows.iter().find(|r| r.name == "u").unwrap();
         let r = rows.iter().find(|r| r.name == "r").unwrap();
         assert!(u.selected, "u: rs={} p={}", u.rs, u.p);
@@ -123,6 +169,33 @@ mod tests {
         assert!(!r.selected, "r: rs={} p={}", r.rs, r.p);
         assert_eq!(critical_names(&rows), vec!["u"]);
         assert_eq!(critical_bytes(&rows), 1024);
+    }
+
+    #[test]
+    fn bookmark_excluded_by_id_not_by_name() {
+        // An app object that happens to be *named* `it` but is not the
+        // bookmark (different ObjId) must still be analyzed — the old
+        // name-based filter silently skipped it.
+        let mut res = synthetic_result();
+        res.candidates[1].1 = "it".to_string(); // candidate 1 renamed
+        let rows = select_critical(&res);
+        assert_eq!(rows.len(), 2, "only the bookmark id is excluded");
+        assert!(rows.iter().any(|r| r.name == "it"), "app's own `it` analyzed");
+        // And if the campaign resolved no bookmark, nothing is excluded.
+        res.iter_obj = None;
+        assert_eq!(select_critical(&res).len(), 3);
+    }
+
+    #[test]
+    fn helper_vectors_align_with_rows() {
+        let res = synthetic_result();
+        let rows = correlation_rows(&res);
+        let means = mean_inconsistencies(&res);
+        assert_eq!(rows.len(), means.len());
+        assert_eq!(rows[0].name, "u");
+        // u's inconsistency draws are uniform [0,1): mean near 0.5.
+        assert!((means[0] - 0.5).abs() < 0.1, "mean {}", means[0]);
+        assert!(rows.iter().all(|r| !r.selected));
     }
 
     #[test]

@@ -1,12 +1,22 @@
-//! The end-to-end EasyCrash workflow (§5.3):
+//! The end-to-end EasyCrash workflow (§5.3), expressed as a thin
+//! composition over a pluggable [`PlannerSpec`] strategy pair:
 //!
 //! 1. characterization campaign (no persistence) — inconsistency rates +
 //!    per-region recomputability `c_k`,
-//! 2. critical-data-object selection (Spearman, §5.1),
+//! 2. critical-data-object selection — the planner's
+//!    [`Selector`](crate::easycrash::planner::Selector) (§5.1 Spearman
+//!    by default),
 //! 3. a second campaign persisting the critical objects at every region —
 //!    `c_k^max`, plus the analytical `l_k` overhead estimates and the
 //!    knapsack region selection (§5.2),
-//! 4. the production persistence plan (and its evaluation campaign).
+//! 4. the production persistence plan — the planner's
+//!    [`Placer`](crate::easycrash::planner::Placer) proposes candidate
+//!    plans, each is evaluated by a campaign and the best-measured one
+//!    ships.
+//!
+//! The default pair (`spearman+knapsack-vs-iterend`) reproduces the
+//! pre-strategy-API hardwired workflow bit-identically
+//! (`rust/tests/planner.rs`).
 
 use std::sync::Arc;
 
@@ -14,11 +24,13 @@ use crate::apps::CrashApp;
 use crate::runtime::StepEngine;
 use crate::sim::timing::Costs;
 use crate::sim::{SimConfig, LINE};
+use crate::util::error::Result;
 
 use super::campaign::{Campaign, CampaignResult, ShardedCampaign};
-use super::plan::{PersistPlan, PlanEntry};
+use super::plan::PersistPlan;
+use super::planner::{PlacerCtx, PlannerSpec};
 use super::regions::{select_regions, RegionModel, RegionSelection};
-use super::selection::{critical_names, select_critical, SelectionRow};
+use super::selection::{critical_names, SelectionRow};
 
 /// Workflow configuration.
 #[derive(Clone, Copy, Debug)]
@@ -30,6 +42,8 @@ pub struct Workflow {
     /// System-efficiency recomputability threshold `τ` (§7).
     pub tau: f64,
     pub cfg: SimConfig,
+    /// The `(selector, placer)` strategy pair steps 2 and 4 compose.
+    pub planner: PlannerSpec,
 }
 
 impl Default for Workflow {
@@ -40,6 +54,7 @@ impl Default for Workflow {
             ts: 0.03,
             tau: 0.10,
             cfg: SimConfig::mini(),
+            planner: PlannerSpec::default(),
         }
     }
 }
@@ -50,14 +65,20 @@ impl Default for Workflow {
 /// cells the figures consume.
 pub struct WorkflowReport {
     pub app: String,
+    /// The strategy pair that produced this report.
+    pub planner: PlannerSpec,
     /// Step 1: characterization campaign, no persistence.
     pub base: Arc<CampaignResult>,
-    /// Step 2: per-candidate correlation analysis.
+    /// Step 2: per-candidate analysis rows from the selector.
     pub selection: Vec<SelectionRow>,
     pub critical: Vec<String>,
     /// Step 3: campaign persisting critical objects at every region.
+    /// When nothing was selected this IS the step-1 `Arc` (an empty plan
+    /// simulates identically to the baseline).
     pub best: Arc<CampaignResult>,
     pub model: RegionModel,
+    /// The §5.2 knapsack solution — always computed, as the analytic
+    /// baseline even when the placer ignores it.
     pub region_sel: RegionSelection,
     /// Step 4: the production plan and its evaluation campaign.
     pub plan: PersistPlan,
@@ -127,7 +148,11 @@ impl Workflow {
     }
 
     /// Run the full workflow for one application (sequential campaigns).
-    pub fn run(&self, app: &dyn CrashApp, engine: &mut dyn StepEngine) -> WorkflowReport {
+    pub fn run(
+        &self,
+        app: &dyn CrashApp,
+        engine: &mut dyn StepEngine,
+    ) -> Result<WorkflowReport> {
         let campaign = self.campaign();
         self.run_cells(app, &mut |plan| {
             Arc::new(campaign.run(app, plan, &mut *engine))
@@ -139,15 +164,15 @@ impl Workflow {
     /// are bit-identical to [`Workflow::run`] under the same seed — the
     /// campaigns inherit `ShardedCampaign`'s determinism guarantee, and
     /// its early-stop schedule: every non-final shard worker replays only
-    /// up to its own last crash point, so the workflow's four campaigns
-    /// each cost roughly one full replay plus partial replays
+    /// up to its own last crash point, so the workflow's campaigns each
+    /// cost roughly one full replay plus partial replays
     /// (DESIGN.md §Perf "early-stop workers").
     pub fn run_sharded(
         &self,
         app: &dyn CrashApp,
         shards: usize,
         make_engine: &(dyn Fn() -> Box<dyn StepEngine> + Sync),
-    ) -> WorkflowReport {
+    ) -> Result<WorkflowReport> {
         let sharded = ShardedCampaign {
             campaign: self.campaign(),
             shards,
@@ -164,33 +189,50 @@ impl Workflow {
     /// cell executor here, which makes the workflow's step campaigns and
     /// the figures' campaigns literally the same `Arc`s; [`Workflow::run`]
     /// and [`Workflow::run_sharded`] pass plain executors.
+    ///
+    /// The decision procedure itself is the planner's: the selector
+    /// flags the critical set over the step-1 campaign, the placer turns
+    /// the §5.2 model into candidate plans, and each candidate is
+    /// measured by a campaign — later candidates replace earlier ones
+    /// only when strictly better, so a deterministic placer order yields
+    /// a deterministic plan.
     pub fn run_cells(
         &self,
         app: &dyn CrashApp,
         run_campaign: &mut dyn FnMut(&PersistPlan) -> Arc<CampaignResult>,
-    ) -> WorkflowReport {
+    ) -> Result<WorkflowReport> {
         let regions = app.regions();
         let num_regions = regions.len();
+        // Steps 3–4 index the last region (`num_regions - 1`, `l[last]`);
+        // a region-less app cannot host an iteration-end flush at all.
+        crate::ensure!(
+            num_regions >= 1,
+            "app `{}` declares no code regions — the workflow needs at least one",
+            app.name()
+        );
+        let selector = self.planner.selector.instantiate();
+        let placer = self.planner.placer.instantiate();
 
         // Step 1: characterization.
         let base = run_campaign(&PersistPlan::none());
 
         // Step 2: data-object selection.
-        let selection = select_critical(&base);
+        let selection = selector.select(&base)?;
         let critical: Vec<String> = critical_names(&selection)
             .into_iter()
             .map(|s| s.to_string())
             .collect();
         let crit_refs: Vec<&str> = critical.iter().map(|s| s.as_str()).collect();
 
-        // Step 3: measure c_k^max with critical objects persisted at every
-        // region (if nothing was selected this equals the baseline).
-        let best_plan = if crit_refs.is_empty() {
-            PersistPlan::none()
+        // Step 3: measure c_k^max with critical objects persisted at
+        // every region. If nothing was selected the plan is empty and
+        // simulates identically to the baseline — reuse the step-1 cell
+        // instead of paying a second bit-identical campaign.
+        let best = if crit_refs.is_empty() {
+            base.clone()
         } else {
-            PersistPlan::at_every_region(&crit_refs, num_regions)
+            run_campaign(&PersistPlan::at_every_region(&crit_refs, num_regions))
         };
-        let best = run_campaign(&best_plan);
 
         let overall_c = base.recomputability();
         let overall_cmax = best.recomputability();
@@ -215,54 +257,44 @@ impl Workflow {
         };
         let region_sel = select_regions(&model, self.ts, self.tau);
 
-        // Step 4: the production plan. The knapsack's per-region gains
-        // inherit the paper's §5.2 measurement inaccuracy (persisting in
-        // one region changes another region's recomputability), so we also
-        // evaluate the natural iteration-end placement at a budget-fitting
-        // frequency and keep whichever campaign measures better — both
-        // evaluations are part of step 3's crash-test campaign anyway.
-        let knapsack_plan = PersistPlan {
-            entries: region_sel
-                .choices
-                .iter()
-                .flat_map(|ch| {
-                    critical.iter().map(move |o| PlanEntry {
-                        object: o.clone(),
-                        region: ch.region,
-                        every_x: ch.x,
-                    })
-                })
-                .collect(),
-            clwb: false,
-        };
+        // Step 4: the production plan. An empty selection means the empty
+        // plan — which is the characterization cell itself, so reuse the
+        // step-1 `Arc` rather than re-running an identical campaign.
         let (plan, final_result) = if critical.is_empty() {
-            let res = run_campaign(&knapsack_plan);
-            (knapsack_plan, res)
+            (PersistPlan::none(), base.clone())
         } else {
-            let last = num_regions - 1;
-            let x_fit = (model.l[last] / self.ts).ceil().max(1.0) as u32;
-            let iter_end_plan = PersistPlan {
-                entries: critical
-                    .iter()
-                    .map(|o| PlanEntry {
-                        object: o.clone(),
-                        region: last,
-                        every_x: x_fit,
-                    })
-                    .collect(),
-                clwb: false,
+            let ctx = PlacerCtx {
+                model: &model,
+                region_sel: &region_sel,
+                critical: &critical,
+                ts: self.ts,
+                tau: self.tau,
+                num_regions,
             };
-            let a = run_campaign(&knapsack_plan);
-            let b = run_campaign(&iter_end_plan);
-            if b.recomputability() > a.recomputability() {
-                (iter_end_plan, b)
-            } else {
-                (knapsack_plan, a)
+            let candidates = placer.place(&ctx)?;
+            crate::ensure!(
+                !candidates.is_empty(),
+                "placer `{}` produced no candidate plans for app `{}`",
+                self.planner.placer,
+                app.name()
+            );
+            let mut chosen: Option<(PersistPlan, Arc<CampaignResult>)> = None;
+            for cand in candidates {
+                let res = run_campaign(&cand);
+                let better = match &chosen {
+                    None => true,
+                    Some((_, cur)) => res.recomputability() > cur.recomputability(),
+                };
+                if better {
+                    chosen = Some((cand, res));
+                }
             }
+            chosen.expect("at least one candidate plan was evaluated")
         };
 
-        WorkflowReport {
+        Ok(WorkflowReport {
             app: app.name().to_string(),
+            planner: self.planner,
             base,
             selection,
             critical,
@@ -271,7 +303,7 @@ impl Workflow {
             region_sel,
             plan,
             final_result,
-        }
+        })
     }
 }
 
@@ -290,7 +322,7 @@ mod tests {
             ..Default::default()
         };
         let mut eng = NativeEngine::new();
-        let rep = wf.run(app.as_ref(), &mut eng);
+        let rep = wf.run(app.as_ref(), &mut eng).unwrap();
         assert_eq!(rep.base.records.len(), 120);
         assert_eq!(rep.final_result.records.len(), 120);
         // The workflow must never make things worse than baseline by more
@@ -300,6 +332,8 @@ mod tests {
         assert!(s.best + 0.15 >= s.base);
         // Overhead must respect t_s at the modeled level.
         assert!(rep.region_sel.predicted_overhead <= wf.ts + 1e-9);
+        // The report names the pair that produced it.
+        assert_eq!(rep.planner, PlannerSpec::default());
     }
 
     #[test]
@@ -311,7 +345,7 @@ mod tests {
             ..Default::default()
         };
         let mut eng = NativeEngine::new();
-        let rep = wf.run(app.as_ref(), &mut eng);
+        let rep = wf.run(app.as_ref(), &mut eng).unwrap();
         for e in &rep.plan.entries {
             assert!(rep.critical.contains(&e.object));
         }

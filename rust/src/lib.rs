@@ -14,8 +14,12 @@
 //!   IS/BT/SP/LU/EP, botsspar, LULESH, kmeans), re-implemented as mini-class
 //!   kernels instrumented through the simulator.
 //! * [`easycrash`] — the paper's contribution: crash-test campaigns,
-//!   Spearman-based critical-data-object selection, knapsack-based
-//!   code-region selection and the end-to-end workflow. Campaigns run
+//!   critical-data-object selection, code-region selection and the
+//!   end-to-end workflow — composed over pluggable
+//!   [`easycrash::planner`] strategies (`Selector`/`Placer` pairs named
+//!   by a DSL, e.g. `spearman+knapsack-vs-iterend`, `topk(3)+iterend`;
+//!   the default pair is the paper's §5 procedure, bit-identical to the
+//!   pre-strategy-API workflow). Campaigns run
 //!   single-pass (all crash points harvested in one instrumented
 //!   execution) and, via `easycrash::ShardedCampaign`, multi-core: crash
 //!   points are drawn from fixed, non-overlapping RNG lanes
@@ -28,7 +32,9 @@
 //!   ([`easycrash::PlanSpec`], `obj@region/x` + `none`/`all`/`critical`),
 //!   and the one [`api::Runner`] behind the CLI, the report generators
 //!   and the benches — memoizing profiles/workflows/campaigns across
-//!   scenario cells with bit-identical results to direct wiring.
+//!   scenario cells with bit-identical results to direct wiring, plus
+//!   the `planner-matrix` strategy sweep ([`api::PlannerMatrixReport`],
+//!   schema `easycrash.planner/v1`).
 //! * [`model`] — the §7 system-efficiency emulator (Young's formula,
 //!   Eq. 6–9) plus `model::trace`, a discrete-event Monte Carlo
 //!   failure-timeline simulator that validates the closed form

@@ -13,12 +13,13 @@ use std::time::Instant;
 
 use easycrash::api::{ExperimentSpec, Runner};
 use easycrash::apps;
+use easycrash::easycrash::PlannerSpec;
 use easycrash::util::cli::Args;
 use easycrash::util::error::{Context, Result};
 
 const VALUED: &[&str] = &[
-    "app", "apps", "tests", "seed", "engine", "plan", "plans", "spec", "ts", "tau", "mtbf",
-    "tchk", "nvm", "out", "shards", "trials", "work", "dist",
+    "app", "apps", "tests", "seed", "engine", "plan", "plans", "planner", "planners", "spec",
+    "ts", "tau", "mtbf", "tchk", "nvm", "out", "shards", "trials", "work", "dist",
 ];
 
 fn main() -> Result<()> {
@@ -31,6 +32,7 @@ fn main() -> Result<()> {
         "campaign" => cmd_campaign(&args),
         "experiment" => cmd_experiment(&args),
         "efficiency" => cmd_efficiency(&args),
+        "planner-matrix" => cmd_planner_matrix(&args),
         "list" => {
             for a in apps::all() {
                 println!("{:<10} {}", a.name(), a.description());
@@ -44,11 +46,22 @@ fn main() -> Result<()> {
     }
 }
 
+/// Reject an option this subcommand would otherwise silently drop (same
+/// fail-loud rule as `single_cell_spec`'s list rejection).
+fn reject_option(args: &Args, key: &str, hint: &str) -> Result<()> {
+    easycrash::ensure!(
+        args.get(key).is_none(),
+        "--{key} is not used by this subcommand — {hint}"
+    );
+    Ok(())
+}
+
 /// Spec from flags with a subcommand-specific default test count
 /// (`probe` 100, `campaign` 400); `--app`/`--plan` select the single
 /// cell these commands run — lists belong to `experiment`, so they are
 /// rejected here instead of silently dropping all but the first value.
 fn single_cell_spec(args: &Args, tests: usize) -> Result<ExperimentSpec> {
+    reject_option(args, "planners", "did you mean --planner (the workflow strategy pair)?")?;
     let spec = ExperimentSpec {
         tests,
         ..ExperimentSpec::default()
@@ -149,6 +162,7 @@ fn spec_from_file_or_flags(args: &Args) -> Result<ExperimentSpec> {
 /// (`--spec exp.json`, overridable per-flag) or entirely from flags
 /// (`--apps mg,cg --plans "none;all;u@3/1"`).
 fn cmd_experiment(args: &Args) -> Result<()> {
+    reject_option(args, "planners", "did you mean --planner (the workflow strategy pair)?")?;
     let spec = spec_from_file_or_flags(args)?;
     let runner = Runner::new(spec)?.verbose(args.flag("verbose"));
     let t0 = Instant::now();
@@ -181,6 +195,53 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The planner-strategy sweep: every spec app × every `selector+placer`
+/// pair (`--planners "p1;p2;..."`, default the 3 selector × 3 placer
+/// grid), each pair run as a full 4-step workflow, written as the
+/// round-trippable `easycrash.planner/v1` document.
+fn cmd_planner_matrix(args: &Args) -> Result<()> {
+    // The sweep axis is `--planners`; a lone `--planner` here would be
+    // embedded in the report's spec yet sweep nothing — fail loud.
+    reject_option(args, "planner", "use --planners \"S1+P1;S2+P2\" to choose the swept pairs")?;
+    let spec = spec_from_file_or_flags(args)?;
+    let pairs: Vec<PlannerSpec> = match args.get("planners") {
+        Some(list) => list
+            .split(';')
+            .map(|s| PlannerSpec::parse(s.trim()))
+            .collect::<Result<Vec<_>>>()?,
+        None => PlannerSpec::default_matrix(),
+    };
+    let runner = Runner::new(spec)?.verbose(args.flag("verbose"));
+    let t0 = Instant::now();
+    let report = runner.planner_matrix(&pairs)?;
+    println!(
+        "== planner matrix: {} app(s) x {} pair(s), {} tests, seed {:#x}, {} shard(s) ==",
+        runner.spec().apps.len(),
+        pairs.len(),
+        runner.spec().tests,
+        runner.spec().seed,
+        runner.spec().shards,
+    );
+    for cell in &report.cells {
+        println!(
+            "{:<10} {:<32} base={} best={} final={}  overhead={:.2}% tau_ok={}  plan={}",
+            cell.app,
+            cell.planner.to_string(),
+            easycrash::util::pct(cell.summary.base),
+            easycrash::util::pct(cell.summary.best),
+            easycrash::util::pct(cell.summary.final_),
+            cell.predicted_overhead * 100.0,
+            cell.meets_tau,
+            cell.plan,
+        );
+    }
+    println!("wall={:.2?}", t0.elapsed());
+    let out = args.get_or("out", "planner_matrix.json");
+    report.write_json(out)?;
+    println!("[json] {out}");
+    Ok(())
+}
+
 /// The efficiency-trace pipeline (§7 + `model::trace`): per (app, plan)
 /// cell, measure recomputability with a crash campaign, feed it into the
 /// closed-form model AND the Monte Carlo failure-timeline simulator for
@@ -188,6 +249,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 /// document. Monte Carlo knobs: `--trials N --work SECS --mtbf SECS
 /// --dist exp|weibull:K` (§7 defaults otherwise).
 fn cmd_efficiency(args: &Args) -> Result<()> {
+    reject_option(args, "planners", "did you mean --planner (the workflow strategy pair)?")?;
     let mut spec = spec_from_file_or_flags(args)?;
     if spec.trace.is_none() {
         spec.trace = Some(Default::default());

@@ -17,6 +17,7 @@ use crate::easycrash::workflow::WorkflowReport;
 use crate::easycrash::{CampaignResult, PersistPlan};
 use crate::sim::SimConfig;
 use crate::util::cli::Args;
+use crate::util::error::Result;
 
 pub struct ReportCtx {
     pub tests: usize,
@@ -36,7 +37,7 @@ pub struct ReportCtx {
 }
 
 impl ReportCtx {
-    pub fn from_args(args: &Args) -> crate::util::error::Result<ReportCtx> {
+    pub fn from_args(args: &Args) -> Result<ReportCtx> {
         let spec = ExperimentSpec::from_args(args)?;
         let runner = Runner::new(spec)?.verbose(args.flag("verbose"));
         let s = runner.spec();
@@ -57,8 +58,9 @@ impl ReportCtx {
         &self.runner
     }
 
-    /// Memoized full workflow for one app.
-    pub fn workflow(&self, app: &dyn CrashApp) -> Arc<WorkflowReport> {
+    /// Memoized full workflow for one app (under the spec's planner —
+    /// `--planner` swaps the strategy pair for every figure at once).
+    pub fn workflow(&self, app: &dyn CrashApp) -> Result<Arc<WorkflowReport>> {
         self.runner.workflow(app)
     }
 
@@ -95,11 +97,11 @@ impl ReportCtx {
         self.runner.plan_all_candidates(app)
     }
 
-    pub fn plan_critical_iter_end(&self, app: &dyn CrashApp) -> PersistPlan {
+    pub fn plan_critical_iter_end(&self, app: &dyn CrashApp) -> Result<PersistPlan> {
         self.runner.plan_critical_iter_end(app)
     }
 
-    pub fn plan_best(&self, app: &dyn CrashApp) -> PersistPlan {
+    pub fn plan_best(&self, app: &dyn CrashApp) -> Result<PersistPlan> {
         self.runner.plan_best(app)
     }
 
@@ -113,12 +115,15 @@ impl ReportCtx {
 
     /// Average EasyCrash recomputability across the eval set (drives the
     /// §7 model and MTBF_EasyCrash).
-    pub fn avg_final_recomputability(&self) -> f64 {
+    pub fn avg_final_recomputability(&self) -> Result<f64> {
         let apps = self.eval_apps();
         let vals: Vec<f64> = apps
             .iter()
-            .map(|a| self.workflow(a.as_ref()).final_result.recomputability())
-            .collect();
-        crate::util::mean(&vals)
+            .map(|a| {
+                self.workflow(a.as_ref())
+                    .map(|wf| wf.final_result.recomputability())
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(crate::util::mean(&vals))
     }
 }

@@ -46,7 +46,7 @@ pub(super) fn simulated_ec(
 }
 
 pub fn run(ctx: &ReportCtx) -> crate::util::error::Result<Table> {
-    let rows = fig6::rows(ctx);
+    let rows = fig6::rows(ctx)?;
     let lo = rows
         .iter()
         .min_by(|a, b| a.easycrash.total_cmp(&b.easycrash))

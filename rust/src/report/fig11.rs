@@ -12,7 +12,7 @@ use super::fig10::simulated_ec;
 
 pub fn run(ctx: &ReportCtx) -> crate::util::error::Result<Table> {
     let cg = crate::apps::by_name("cg").expect("cg registered");
-    let r = ctx.workflow(cg.as_ref()).final_result.recomputability();
+    let r = ctx.workflow(cg.as_ref())?.final_result.recomputability();
     let t_r_nvm = t_r_nvm_seconds(96e9);
     let mut cols: Vec<&str> = vec!["nodes", "MTBF", "T_chk", "base", "EasyCrash", "improve"];
     if ctx.with_trace {

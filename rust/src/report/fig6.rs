@@ -17,11 +17,11 @@ pub struct Fig6Row {
     pub verified: f64,
 }
 
-pub fn rows(ctx: &ReportCtx) -> Vec<Fig6Row> {
+pub fn rows(ctx: &ReportCtx) -> crate::util::error::Result<Vec<Fig6Row>> {
     let mut out = Vec::new();
     for app in ctx.eval_apps() {
-        let wf = ctx.workflow(app.as_ref());
-        let sel_plan = ctx.plan_critical_iter_end(app.as_ref());
+        let wf = ctx.workflow(app.as_ref())?;
+        let sel_plan = ctx.plan_critical_iter_end(app.as_ref())?;
         let sel = ctx.campaign(app.as_ref(), &sel_plan, false);
         let vfy = ctx.campaign(app.as_ref(), &PersistPlan::none(), true);
         out.push(Fig6Row {
@@ -33,11 +33,11 @@ pub fn rows(ctx: &ReportCtx) -> Vec<Fig6Row> {
             verified: vfy.recomputability(),
         });
     }
-    out
+    Ok(out)
 }
 
 pub fn run(ctx: &ReportCtx) -> crate::util::error::Result<Table> {
-    let rows = rows(ctx);
+    let rows = rows(ctx)?;
     let mut t = Table::new(&["app", "w/o EC", "+select DOs", "EC (full)", "best", "VFY"]);
     for r in &rows {
         t.row(vec![

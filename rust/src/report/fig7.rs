@@ -22,7 +22,7 @@ pub fn run(ctx: &ReportCtx, profiles: &[NvmProfile]) -> crate::util::error::Resu
     let mut per_profile_ec: Vec<Vec<f64>> = vec![Vec::new(); profiles.len()];
     let mut per_profile_all: Vec<Vec<f64>> = vec![Vec::new(); profiles.len()];
     for app in ctx.eval_apps() {
-        let wf = ctx.workflow(app.as_ref());
+        let wf = ctx.workflow(app.as_ref())?;
         let all_plan = ctx.plan_all_candidates(app.as_ref());
         let mut row = vec![app.name().to_string()];
         for (i, p) in profiles.iter().enumerate() {

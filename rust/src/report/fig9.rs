@@ -63,7 +63,7 @@ pub fn run(ctx: &ReportCtx) -> crate::util::error::Result<Table> {
     ]);
     let (mut ecs, mut crits, mut alls) = (Vec::new(), Vec::new(), Vec::new());
     for app in ctx.eval_apps() {
-        let wf = ctx.workflow(app.as_ref());
+        let wf = ctx.workflow(app.as_ref())?;
         let base = ctx.profile(app.as_ref(), &PersistPlan::none(), ctx.cfg);
         let w0 = base.stats.nvm_writes().max(1);
         let ec = ctx.profile(app.as_ref(), &wf.plan, ctx.cfg);

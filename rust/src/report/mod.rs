@@ -34,14 +34,14 @@ fn cmd_workflow(ctx: &ReportCtx, args: &Args) -> crate::util::error::Result<()> 
     let name = args.get_or("app", "mg");
     let app = crate::apps::by_name(name)
         .ok_or_else(|| crate::err!("unknown app `{name}`"))?;
-    let wf = ctx.workflow(app.as_ref());
-    println!("== EasyCrash workflow for {name} ==");
+    let wf = ctx.workflow(app.as_ref())?;
+    println!("== EasyCrash workflow for {name} (planner: {}) ==", wf.planner);
     println!("step 1: characterization campaign ({} tests)", wf.base.records.len());
     println!(
         "  recomputability without persistence: {}",
         crate::util::pct(wf.base.recomputability())
     );
-    println!("step 2: data-object selection (Spearman, p<0.01):");
+    println!("step 2: data-object selection ({}):", wf.planner.selector);
     let mut t = Table::new(&["object", "bytes", "Rs", "p", "critical"]);
     for r in &wf.selection {
         t.row(vec![
@@ -97,7 +97,7 @@ fn cmd_sensitivity(base_args: &Args) -> crate::util::error::Result<()> {
         let ctx = ReportCtx::from_args(&args)?;
         let mut t = Table::new(&["app", "Y' predicted", "overhead", "meets tau"]);
         for app in ctx.eval_apps() {
-            let wf = ctx.workflow(app.as_ref());
+            let wf = ctx.workflow(app.as_ref())?;
             t.row(vec![
                 app.name().into(),
                 crate::util::pct(wf.region_sel.predicted_y),
@@ -186,7 +186,8 @@ fn print_help() {
         "easycrash — reproduction of 'EasyCrash: Exploring Non-Volatility of NVM for HPC Under Failures'
 
 USAGE: easycrash <command> [--tests N] [--seed S] [--engine native|pjrt]
-                 [--shards N] [--ts F] [--tau F] [--paper-scale] [--verbose]
+                 [--shards N] [--ts F] [--tau F] [--planner SEL[+PLACER]]
+                 [--paper-scale] [--verbose]
 
 --shards N runs every crash campaign across N worker threads; results are
 bit-identical to --shards 1 under the same seed (native engine only).
@@ -195,6 +196,19 @@ plans are written in the plan DSL: `none`, `all` (all candidate objects at
 iteration end), `critical` (workflow-selected objects at iteration end), or
 explicit `obj@region/x` entries separated by commas (persist `obj` at the
 end of region `region` every `x` iterations; `/x` defaults to `/1`).
+
+planners are written in the planner DSL `selector[+placer]` and swap the
+workflow's decision procedure everywhere (`critical` plans, `workflow`,
+figures):
+  selectors: spearman[(p=F)]  §5.1 correlation selection (default p=0.01)
+             topk(K)          K highest mean-inconsistency candidates
+             all              every candidate object
+             random(SEED)     seeded coin per candidate (floor baseline)
+  placers:   knapsack-vs-iterend  knapsack AND budget-fit iteration end,
+                                  best measured wins (default)
+             knapsack             §5.2 multi-choice knapsack only
+             iterend              budget-fit iteration-end placement
+             greedy               greedy gain/cost frequency search
 
 paper artifacts:
   table1 fig3 fig4 fig5 fig6 table4 fig7 fig8 fig9 fig10 fig11
@@ -217,6 +231,12 @@ tools:
              validate the §7 model with the Monte Carlo failure-timeline
              simulator at T_chk in {{32,320,3200}}s; writes the
              `easycrash.trace/v1` JSON document
-  workflow --app A             run + display the 4-step EasyCrash workflow"
+  planner-matrix [--apps A,B] [--planners \"S1+P1;S2+P2;..\"] [--out F]
+             sweep selector+placer strategy pairs (default: the 3x3 grid
+             spearman|topk(3)|all x knapsack|iterend|greedy), one full
+             workflow per (app, pair); writes the round-trippable
+             `easycrash.planner/v1` JSON document
+  workflow --app A [--planner S[+P]]
+             run + display the 4-step EasyCrash workflow"
     );
 }

@@ -26,18 +26,15 @@ pub fn run(ctx: &ReportCtx) -> crate::util::error::Result<Table> {
         } else {
             format!("1:{:.0}", stores as f64 / loads as f64)
         };
-        let cand_bytes: usize = base
-            .candidates
-            .iter()
-            .filter(|(_, n, _)| n != "it")
-            .map(|(_, _, b)| *b)
-            .sum();
+        // Candidate size excludes the iterator bookmark by its resolved
+        // object id (same rule as selection — never the literal name).
+        let cand_bytes: usize = base.selectable_candidates().map(|(_, _, b)| *b).sum();
         // Critical DO size: EP is excluded from the EasyCrash evaluation
         // (its selection finds nothing usable, §6/§8).
         let crit = if app.name() == "ep" {
             "n/a".to_string()
         } else {
-            let wf = ctx.workflow(app.as_ref());
+            let wf = ctx.workflow(app.as_ref())?;
             human_bytes(critical_bytes(&wf.selection) as u64)
         };
         // "Ave. # of extra iter. to restart": the paper reports N/A with

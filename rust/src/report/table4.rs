@@ -19,14 +19,14 @@ pub struct T4Row {
     pub norm_best: f64,
 }
 
-pub fn rows(ctx: &ReportCtx) -> Vec<T4Row> {
+pub fn rows(ctx: &ReportCtx) -> crate::util::error::Result<Vec<T4Row>> {
     let mut out = Vec::new();
     for app in ctx.eval_apps() {
         let base = ctx.profile(app.as_ref(), &PersistPlan::none(), ctx.cfg);
-        let wf = ctx.workflow(app.as_ref());
+        let wf = ctx.workflow(app.as_ref())?;
         let ec = ctx.profile(app.as_ref(), &wf.plan, ctx.cfg);
         let all = ctx.profile(app.as_ref(), &ctx.plan_all_candidates(app.as_ref()), ctx.cfg);
-        let best = ctx.profile(app.as_ref(), &ctx.plan_best(app.as_ref()), ctx.cfg);
+        let best = ctx.profile(app.as_ref(), &ctx.plan_best(app.as_ref())?, ctx.cfg);
         let persist_once = if ec.persist_ops > 0 {
             ec.persist_cycles / ec.persist_ops as f64 / 2.6e9
         } else {
@@ -41,11 +41,11 @@ pub fn rows(ctx: &ReportCtx) -> Vec<T4Row> {
             norm_best: best.cycles / base.cycles,
         });
     }
-    out
+    Ok(out)
 }
 
 pub fn run(ctx: &ReportCtx) -> crate::util::error::Result<Table> {
-    let rows = rows(ctx);
+    let rows = rows(ctx)?;
     let mut t = Table::new(&[
         "app",
         "persist once",

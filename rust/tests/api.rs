@@ -155,6 +155,8 @@ fn spec_round_trips_through_json() {
         .verified(true)
         .ts(0.05)
         .tau(0.2)
+        .planner_str("topk(2)+greedy")
+        .unwrap()
         .build()
         .unwrap();
     let text = spec.to_json().to_pretty();
@@ -200,9 +202,11 @@ fn spec_from_json_validates() {
     assert!(
         ExperimentSpec::from_json(r#"{"apps":["toy"],"engine":"pjrt","shards":4}"#).is_err()
     );
-    // Unknown NVM profile / geometry.
+    // Unknown NVM profile / geometry / planner strategy.
     assert!(ExperimentSpec::from_json(r#"{"apps":["toy"],"nvm":"flux"}"#).is_err());
     assert!(ExperimentSpec::from_json(r#"{"apps":["toy"],"geometry":"huge"}"#).is_err());
+    assert!(ExperimentSpec::from_json(r#"{"apps":["toy"],"planner":"nope+knapsack"}"#).is_err());
+    assert!(ExperimentSpec::from_json(r#"{"apps":["toy"],"planner":"spearman+nope"}"#).is_err());
     // Seeds beyond i64 can't round-trip through JSON integers.
     assert!(ExperimentSpec::from_json(r#"{"apps":["toy"],"seed":1e300}"#).is_err());
     // Integral-float fields outside f64's exact range are rejected, not
@@ -383,13 +387,13 @@ fn runner_memoizes_cells_and_shares_them_with_the_workflow() {
     let v = runner.campaign(app.as_ref(), &PersistPlan::none(), true);
     assert!(!Arc::ptr_eq(&a, &v));
     // The workflow's characterization campaign is the shared `none` cell.
-    let wf = runner.workflow(app.as_ref());
+    let wf = runner.workflow(app.as_ref()).unwrap();
     assert!(
         Arc::ptr_eq(&wf.base, &a),
         "workflow step 1 must be the memoized characterization cell"
     );
-    // And the workflow itself is memoized.
-    assert!(Arc::ptr_eq(&wf, &runner.workflow(app.as_ref())));
+    // And the workflow itself is memoized (per strategy pair).
+    assert!(Arc::ptr_eq(&wf, &runner.workflow(app.as_ref()).unwrap()));
 }
 
 /// `experiment` writes a parseable document whose cells agree with the

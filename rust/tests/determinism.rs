@@ -22,10 +22,8 @@ const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
 fn plans_for(app: &dyn CrashApp) -> Vec<PersistPlan> {
     let prof = Campaign::new(0, 1).profile(app, &PersistPlan::none());
     let names: Vec<String> = prof
-        .candidates
-        .iter()
+        .selectable_candidates()
         .map(|(_, n, _)| n.clone())
-        .filter(|n| n != "it")
         .collect();
     let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
     vec![
@@ -117,8 +115,10 @@ fn sharded_workflow_equals_sequential_workflow() {
         ..Default::default()
     };
     let mut eng = NativeEngine::new();
-    let seq = wf.run(app.as_ref(), &mut eng);
-    let sh = wf.run_sharded(app.as_ref(), 4, &|| Box::new(NativeEngine::new()));
+    let seq = wf.run(app.as_ref(), &mut eng).unwrap();
+    let sh = wf
+        .run_sharded(app.as_ref(), 4, &|| Box::new(NativeEngine::new()))
+        .unwrap();
     assert_eq!(seq.critical, sh.critical);
     assert_eq!(seq.plan.entries, sh.plan.entries);
     assert_eq!(seq.base.records, sh.base.records);

@@ -99,7 +99,7 @@ fn workflow_full_pipeline_on_mg() {
         seed: 1,
         ..Default::default()
     };
-    let rep = wf.run(app.as_ref(), &mut eng);
+    let rep = wf.run(app.as_ref(), &mut eng).unwrap();
     // The paper's MG findings: u is critical, r is not (recomputed each
     // iteration from u).
     let u = rep.selection.iter().find(|r| r.name == "u").unwrap();

@@ -1,0 +1,495 @@
+//! The pluggable planner API.
+//!
+//! * **Strategy parity** — the default `spearman+knapsack-vs-iterend`
+//!   planner reproduces the pre-refactor hardwired workflow
+//!   bit-identically: an oracle in this file re-implements the old
+//!   `Workflow::run_cells` verbatim (Spearman selection, the knapsack
+//!   plan vs. the budget-fit iteration-end plan, strictly-better-wins),
+//!   and every field of the report is compared across the full 14-app
+//!   matrix × shards {1, 4}.
+//! * **DSL** — `PlannerSpec` round-trips through its pretty-printer and
+//!   rejects malformed input.
+//! * **Determinism** — the `random(seed)` floor selector is a pure
+//!   function of its seed, sequential or sharded.
+//! * **planner-matrix** — the 3 selector × 3 placer default sweep runs
+//!   end to end and its `easycrash.planner/v1` document round-trips.
+
+use std::sync::Arc;
+
+use easycrash::api::{ExperimentSpec, PlannerMatrixReport, Runner};
+use easycrash::apps::{self, by_name, CrashApp};
+use easycrash::easycrash::plan::PlanEntry;
+use easycrash::easycrash::regions::{select_regions, RegionModel, RegionSelection};
+use easycrash::easycrash::selection::{critical_names, select_critical, SelectionRow};
+use easycrash::easycrash::workflow::WorkflowReport;
+use easycrash::easycrash::{Campaign, CampaignResult, PersistPlan, PlannerSpec, Workflow};
+use easycrash::runtime::NativeEngine;
+use easycrash::sim::timing::Costs;
+use easycrash::sim::{SimConfig, LINE};
+
+// ---------------------------------------------------------------------------
+// The pre-refactor workflow, re-implemented verbatim as the parity oracle
+// ---------------------------------------------------------------------------
+
+struct OracleReport {
+    base: Arc<CampaignResult>,
+    selection: Vec<SelectionRow>,
+    critical: Vec<String>,
+    best: Arc<CampaignResult>,
+    model: RegionModel,
+    region_sel: RegionSelection,
+    plan: PersistPlan,
+    final_result: Arc<CampaignResult>,
+}
+
+/// The old private `Workflow::estimate_l`, copied.
+fn oracle_estimate_l(
+    cfg: &SimConfig,
+    base: &CampaignResult,
+    critical: &[&str],
+    iters: u64,
+    num_regions: usize,
+) -> Vec<f64> {
+    let costs = Costs::from_profile(&cfg.nvm);
+    let blocks: usize = base
+        .candidates
+        .iter()
+        .filter(|(_, name, _)| critical.contains(&name.as_str()))
+        .map(|(_, _, bytes)| (bytes + LINE - 1) / LINE)
+        .sum();
+    let per_persist = blocks as f64 * costs.flush_dirty;
+    let total = per_persist * iters as f64;
+    let ratio = total / base.cycles.max(1.0);
+    vec![ratio; num_regions]
+}
+
+/// The old `Workflow::run_cells` body (steps 1–4 hardwired to Spearman
+/// selection and the knapsack-vs-iteration-end comparison), copied.
+fn oracle_run_cells(
+    wf: &Workflow,
+    app: &dyn CrashApp,
+    run_campaign: &mut dyn FnMut(&PersistPlan) -> Arc<CampaignResult>,
+) -> OracleReport {
+    let regions = app.regions();
+    let num_regions = regions.len();
+
+    let base = run_campaign(&PersistPlan::none());
+
+    let selection = select_critical(&base);
+    let critical: Vec<String> = critical_names(&selection)
+        .into_iter()
+        .map(|s| s.to_string())
+        .collect();
+    let crit_refs: Vec<&str> = critical.iter().map(|s| s.as_str()).collect();
+
+    let best_plan = if crit_refs.is_empty() {
+        PersistPlan::none()
+    } else {
+        PersistPlan::at_every_region(&crit_refs, num_regions)
+    };
+    let best = run_campaign(&best_plan);
+
+    let overall_c = base.recomputability();
+    let overall_cmax = best.recomputability();
+    let c: Vec<f64> = (0..num_regions)
+        .map(|k| base.region_recomputability(k).unwrap_or(overall_c))
+        .collect();
+    let cmax: Vec<f64> = (0..num_regions)
+        .map(|k| {
+            best.region_recomputability(k)
+                .unwrap_or(overall_cmax)
+                .max(c[k])
+        })
+        .collect();
+    let a: Vec<f64> = (0..num_regions).map(|k| base.a(k)).collect();
+    let l = oracle_estimate_l(&wf.cfg, &base, &crit_refs, app.nominal_iters(), num_regions);
+    let model = RegionModel {
+        a,
+        c,
+        cmax,
+        l,
+        is_loop: regions.iter().map(|r| r.is_loop).collect(),
+    };
+    let region_sel = select_regions(&model, wf.ts, wf.tau);
+
+    let knapsack_plan = PersistPlan {
+        entries: region_sel
+            .choices
+            .iter()
+            .flat_map(|ch| {
+                critical.iter().map(move |o| PlanEntry {
+                    object: o.clone(),
+                    region: ch.region,
+                    every_x: ch.x,
+                })
+            })
+            .collect(),
+        clwb: false,
+    };
+    let (plan, final_result) = if critical.is_empty() {
+        let res = run_campaign(&knapsack_plan);
+        (knapsack_plan, res)
+    } else {
+        let last = num_regions - 1;
+        let x_fit = (model.l[last] / wf.ts).ceil().max(1.0) as u32;
+        let iter_end_plan = PersistPlan {
+            entries: critical
+                .iter()
+                .map(|o| PlanEntry {
+                    object: o.clone(),
+                    region: last,
+                    every_x: x_fit,
+                })
+                .collect(),
+            clwb: false,
+        };
+        let a = run_campaign(&knapsack_plan);
+        let b = run_campaign(&iter_end_plan);
+        if b.recomputability() > a.recomputability() {
+            (iter_end_plan, b)
+        } else {
+            (knapsack_plan, a)
+        }
+    };
+
+    OracleReport {
+        base,
+        selection,
+        critical,
+        best,
+        model,
+        region_sel,
+        plan,
+        final_result,
+    }
+}
+
+fn oracle_run(wf: &Workflow, app: &dyn CrashApp) -> OracleReport {
+    let campaign = Campaign {
+        tests: wf.tests,
+        seed: wf.seed,
+        cfg: wf.cfg,
+        verified: false,
+    };
+    let mut engine = NativeEngine::new();
+    oracle_run_cells(wf, app, &mut |plan| {
+        Arc::new(campaign.run(app, plan, &mut engine))
+    })
+}
+
+fn assert_campaigns_bit_identical(a: &CampaignResult, b: &CampaignResult, label: &str) {
+    assert_eq!(a.records, b.records, "{label}: records diverged");
+    assert_eq!(a.candidates, b.candidates, "{label}: candidates diverged");
+    assert_eq!(a.iter_obj, b.iter_obj, "{label}: iter_obj diverged");
+    assert_eq!(a.cycles, b.cycles, "{label}: cycles diverged");
+    assert_eq!(a.region_cycles, b.region_cycles, "{label}: region cycles diverged");
+    assert_eq!(a.ops_total, b.ops_total, "{label}: ops_total diverged");
+    assert_eq!(a.persist_ops, b.persist_ops, "{label}: persist ops diverged");
+    assert_eq!(a.persist_cycles, b.persist_cycles, "{label}: persist cycles diverged");
+    assert_eq!(a.stats, b.stats, "{label}: stats diverged");
+}
+
+fn assert_matches_oracle(rep: &WorkflowReport, oracle: &OracleReport, label: &str) {
+    assert_campaigns_bit_identical(&rep.base, &oracle.base, &format!("{label}/base"));
+    assert_eq!(rep.selection, oracle.selection, "{label}: selection rows diverged");
+    assert_eq!(rep.critical, oracle.critical, "{label}: critical set diverged");
+    assert_campaigns_bit_identical(&rep.best, &oracle.best, &format!("{label}/best"));
+    assert_eq!(rep.model, oracle.model, "{label}: region model diverged");
+    assert_eq!(rep.region_sel, oracle.region_sel, "{label}: region selection diverged");
+    assert_eq!(rep.plan.entries, oracle.plan.entries, "{label}: plan diverged");
+    assert_eq!(rep.plan.clwb, oracle.plan.clwb, "{label}: clwb diverged");
+    assert_campaigns_bit_identical(
+        &rep.final_result,
+        &oracle.final_result,
+        &format!("{label}/final"),
+    );
+}
+
+/// Acceptance: the default planner pair reproduces the pre-refactor
+/// workflow bit-identically on every app of the 14-app matrix, both
+/// sequentially and with 4-way sharded campaigns.
+#[test]
+fn default_planner_matches_prerefactor_oracle_across_the_matrix() {
+    let wf = Workflow {
+        tests: 10,
+        seed: 0x51,
+        ..Default::default()
+    };
+    assert_eq!(wf.planner, PlannerSpec::default());
+    let mut covered = 0;
+    for app in apps::all().into_iter().chain(apps::extras()) {
+        let app = app.as_ref();
+        let oracle = oracle_run(&wf, app);
+        let mut eng = NativeEngine::new();
+        let seq = wf.run(app, &mut eng).unwrap();
+        assert_matches_oracle(&seq, &oracle, &format!("{}/shards1", app.name()));
+        let sharded = wf
+            .run_sharded(app, 4, &|| Box::new(NativeEngine::new()))
+            .unwrap();
+        assert_matches_oracle(&sharded, &oracle, &format!("{}/shards4", app.name()));
+        covered += 1;
+    }
+    assert_eq!(covered, 14, "the parity matrix must cover all 14 apps");
+}
+
+/// A deeper parity run at a campaign size where selection actually fires
+/// (MG selects `u`), so the knapsack-vs-iterend comparison path is
+/// exercised with a non-empty critical set.
+#[test]
+fn default_planner_matches_oracle_with_nonempty_selection() {
+    let wf = Workflow {
+        tests: 60,
+        seed: 1,
+        ..Default::default()
+    };
+    for name in ["toy", "mg"] {
+        let app = by_name(name).unwrap();
+        let oracle = oracle_run(&wf, app.as_ref());
+        let mut eng = NativeEngine::new();
+        let seq = wf.run(app.as_ref(), &mut eng).unwrap();
+        assert_matches_oracle(&seq, &oracle, name);
+        let sharded = wf
+            .run_sharded(app.as_ref(), 4, &|| Box::new(NativeEngine::new()))
+            .unwrap();
+        assert_matches_oracle(&sharded, &oracle, &format!("{name}/shards4"));
+    }
+    // MG's critical set must be non-empty for this test to mean anything.
+    let app = by_name("mg").unwrap();
+    let mut eng = NativeEngine::new();
+    let rep = wf.run(app.as_ref(), &mut eng).unwrap();
+    assert!(!rep.critical.is_empty(), "MG must select critical objects");
+}
+
+// ---------------------------------------------------------------------------
+// DSL
+// ---------------------------------------------------------------------------
+
+#[test]
+fn planner_dsl_round_trips_and_rejects() {
+    for src in [
+        "spearman",
+        "spearman(p=0.05)+knapsack",
+        "topk(3)+iterend",
+        "all+greedy",
+        "random(7)",
+        "topk(1)+knapsack-vs-iterend",
+    ] {
+        let spec = PlannerSpec::parse(src).unwrap();
+        let printed = spec.to_string();
+        assert_eq!(
+            PlannerSpec::parse(&printed).unwrap(),
+            spec,
+            "`{src}` -> `{printed}` must reparse equal"
+        );
+    }
+    // Canonical rendering always names the placer.
+    assert_eq!(
+        PlannerSpec::parse("spearman").unwrap().to_string(),
+        "spearman+knapsack-vs-iterend"
+    );
+    for bad in [
+        "",
+        "nope",
+        "spearman+nope",
+        "topk(0)",
+        "topk()",
+        "spearman(p=0)",
+        "spearman(q=1)",
+        "random(x)",
+        "all+knapsack+greedy",
+    ] {
+        assert!(PlannerSpec::parse(bad).is_err(), "`{bad}` must be rejected");
+    }
+}
+
+#[test]
+fn planner_flag_threads_into_the_spec() {
+    let argv: Vec<String> = ["--app", "toy", "--planner", "topk(1)+greedy"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let args = easycrash::util::cli::Args::parse(&argv, &["app", "planner"]).unwrap();
+    let spec = ExperimentSpec::from_args(&args).unwrap();
+    assert_eq!(spec.planner, PlannerSpec::parse("topk(1)+greedy").unwrap());
+    // And a bad pair is rejected at spec build time.
+    let argv: Vec<String> = ["--app", "toy", "--planner", "bogus"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let args = easycrash::util::cli::Args::parse(&argv, &["app", "planner"]).unwrap();
+    assert!(ExperimentSpec::from_args(&args).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Alternative strategies
+// ---------------------------------------------------------------------------
+
+#[test]
+fn topk_and_all_selectors_select_as_documented() {
+    let spec = ExperimentSpec::builder()
+        .app("toy")
+        .tests(30)
+        .seed(9)
+        .build()
+        .unwrap();
+    let runner = Runner::new(spec).unwrap();
+    let app = by_name("toy").unwrap();
+    // toy has exactly two selectable candidates (x, y); the bookmark is
+    // never offered.
+    let top1 = runner
+        .workflow_with(app.as_ref(), PlannerSpec::parse("topk(1)+iterend").unwrap())
+        .unwrap();
+    assert_eq!(top1.critical.len(), 1);
+    assert!(top1.selection.iter().all(|r| r.name != "it"));
+    let all = runner
+        .workflow_with(app.as_ref(), PlannerSpec::parse("all+iterend").unwrap())
+        .unwrap();
+    assert_eq!(all.critical, runner.candidate_names(app.as_ref()));
+    // k beyond the candidate count selects everything.
+    let topn = runner
+        .workflow_with(app.as_ref(), PlannerSpec::parse("topk(99)+iterend").unwrap())
+        .unwrap();
+    assert_eq!(topn.critical, all.critical);
+}
+
+#[test]
+fn random_selector_is_deterministic_sequential_and_sharded() {
+    let planner = PlannerSpec::parse("random(123)+iterend").unwrap();
+    let wf = Workflow {
+        tests: 24,
+        seed: 7,
+        planner,
+        ..Default::default()
+    };
+    let app = by_name("toy").unwrap();
+    let mut eng = NativeEngine::new();
+    let a = wf.run(app.as_ref(), &mut eng).unwrap();
+    let mut eng2 = NativeEngine::new();
+    let b = wf.run(app.as_ref(), &mut eng2).unwrap();
+    let c = wf
+        .run_sharded(app.as_ref(), 4, &|| Box::new(NativeEngine::new()))
+        .unwrap();
+    assert_eq!(a.selection, b.selection, "same seed, same selection");
+    assert_eq!(a.critical, b.critical);
+    assert_eq!(a.plan.entries, b.plan.entries);
+    assert_eq!(a.selection, c.selection, "shard count must not change the draw");
+    assert_eq!(a.critical, c.critical);
+    assert_eq!(a.plan.entries, c.plan.entries);
+    // The coin only ever picks real candidates.
+    let names: Vec<String> = a.selection.iter().map(|r| r.name.clone()).collect();
+    assert!(a.critical.iter().all(|n| names.contains(n)));
+}
+
+/// Satellite: an empty selection short-circuits — the step-3 and step-4
+/// cells ARE the step-1 characterization `Arc`, not re-run campaigns.
+/// A seeded random selector that flips no candidate produces the case
+/// deterministically (toy has 2 candidates, so ~1/4 of seeds qualify).
+#[test]
+fn empty_selection_reuses_the_characterization_cell() {
+    let app = by_name("toy").unwrap();
+    let mut found = None;
+    for sel_seed in 0..64u64 {
+        let planner = PlannerSpec::parse(&format!("random({sel_seed})+iterend")).unwrap();
+        let wf = Workflow {
+            tests: 20,
+            seed: 2,
+            planner,
+            ..Default::default()
+        };
+        let mut eng = NativeEngine::new();
+        let rep = wf.run(app.as_ref(), &mut eng).unwrap();
+        if rep.critical.is_empty() {
+            found = Some(rep);
+            break;
+        }
+    }
+    let rep = found.expect("some seed in 0..64 must select no candidates");
+    assert!(Arc::ptr_eq(&rep.base, &rep.final_result), "step 4 reuses step 1");
+    assert!(Arc::ptr_eq(&rep.base, &rep.best), "step 3 reuses step 1");
+    assert!(rep.plan.is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// planner-matrix report
+// ---------------------------------------------------------------------------
+
+#[test]
+fn planner_matrix_runs_the_default_grid_and_round_trips() {
+    let spec = ExperimentSpec::builder()
+        .app("toy")
+        .tests(20)
+        .seed(5)
+        .build()
+        .unwrap();
+    let runner = Runner::new(spec).unwrap();
+    let pairs = PlannerSpec::default_matrix();
+    assert_eq!(pairs.len(), 9, "3 selectors x 3 placers");
+    let report = runner.planner_matrix(&pairs).unwrap();
+    assert_eq!(report.cells.len(), 9);
+    for (cell, pair) in report.cells.iter().zip(&pairs) {
+        assert_eq!(cell.app, "toy");
+        assert_eq!(cell.planner, *pair, "cells stay in matrix order");
+        assert!((0.0..=1.0).contains(&cell.summary.base));
+        assert!((0.0..=1.0).contains(&cell.summary.final_));
+    }
+
+    // The document carries the schema tag and round-trips exactly.
+    let text = report.to_json().to_pretty();
+    assert!(text.contains("easycrash.planner/v1"));
+    let back = PlannerMatrixReport::from_json(&text).unwrap();
+    assert_eq!(back, report);
+
+    // Rejections: a wrong schema and a malformed cell.
+    assert!(PlannerMatrixReport::from_json(r#"{"schema":"easycrash.planner/v0"}"#).is_err());
+    assert!(PlannerMatrixReport::from_json(r#"{"schema":"easycrash.planner/v1"}"#).is_err());
+}
+
+/// Strategy pairs that agree on an intermediate plan share its campaign:
+/// `spearman+knapsack` and `spearman+iterend` both start from the same
+/// characterization cell.
+#[test]
+fn matrix_pairs_share_memoized_campaigns() {
+    let spec = ExperimentSpec::builder()
+        .app("toy")
+        .tests(20)
+        .seed(5)
+        .build()
+        .unwrap();
+    let runner = Runner::new(spec).unwrap();
+    let app = by_name("toy").unwrap();
+    let a = runner
+        .workflow_with(app.as_ref(), PlannerSpec::parse("spearman+knapsack").unwrap())
+        .unwrap();
+    let b = runner
+        .workflow_with(app.as_ref(), PlannerSpec::parse("spearman+iterend").unwrap())
+        .unwrap();
+    assert!(Arc::ptr_eq(&a.base, &b.base), "step-1 cells are shared");
+    // Distinct pairs are distinct workflow memo entries.
+    assert!(!std::ptr::eq(a.as_ref(), b.as_ref()));
+}
+
+/// The sharded execution path used by `--shards` reports: a planner
+/// sweep through a sharded runner equals the sequential one (the
+/// campaigns inherit the determinism guarantee).
+#[test]
+fn planner_matrix_is_shard_invariant() {
+    let pairs = [
+        PlannerSpec::parse("spearman+knapsack").unwrap(),
+        PlannerSpec::parse("topk(1)+iterend").unwrap(),
+    ];
+    let run = |shards: usize| {
+        let spec = ExperimentSpec::builder()
+            .app("toy")
+            .tests(24)
+            .seed(11)
+            .shards(shards)
+            .build()
+            .unwrap();
+        Runner::new(spec).unwrap().planner_matrix(&pairs).unwrap()
+    };
+    let seq = run(1);
+    let sharded = run(4);
+    // The embedded specs differ in `shards` by construction, so compare
+    // the cells, not the whole reports.
+    assert_eq!(seq.cells, sharded.cells, "planner cells must be shard-invariant");
+}
