@@ -21,9 +21,11 @@
 //! CI uploads it as an artifact.
 
 use easycrash::api::{ExperimentSpec, Runner};
-use easycrash::apps;
+use easycrash::apps::{self, toy::Toy};
 use easycrash::benchlib::Bench;
-use easycrash::easycrash::PersistPlan;
+use easycrash::easycrash::{Campaign, PersistPlan};
+use easycrash::runtime::NativeEngine;
+use easycrash::sim::SimConfig;
 
 fn runner(app: &str, tests: usize, shards: usize) -> Runner {
     let spec = ExperimentSpec::builder()
@@ -42,7 +44,9 @@ fn main() {
         let app = apps::by_name(name).unwrap();
         let r = runner(name, 0, 1);
         b.run_throughput(&format!("profile_{name}"), || {
-            let res = r.execute_profile(app.as_ref(), &PersistPlan::none(), r.spec().cfg);
+            let res = r
+                .execute_profile(app.as_ref(), &PersistPlan::none(), r.spec().cfg)
+                .expect("bench profile");
             let ops = res.ops_total;
             std::hint::black_box(res);
             ops
@@ -52,7 +56,9 @@ fn main() {
         let app = apps::by_name(name).unwrap();
         let r = runner(name, 100, 1);
         b.run_throughput(&format!("campaign100_{name}"), || {
-            let res = r.execute_cell(app.as_ref(), &PersistPlan::none(), false);
+            let res = r
+                .execute_cell(app.as_ref(), &PersistPlan::none(), false)
+                .expect("bench campaign");
             let ops = res.ops_total;
             std::hint::black_box(res);
             ops
@@ -73,13 +79,80 @@ fn main() {
             b.run_throughput(
                 &format!("sharded{shards}_campaign400_{name} (hw={workers})"),
                 || {
-                    let res = r.execute_cell_threaded(app.as_ref(), &PersistPlan::none(), false);
+                    let res = r
+                        .execute_cell_threaded(app.as_ref(), &PersistPlan::none(), false)
+                        .expect("bench campaign");
                     let ops = res.ops_total;
                     std::hint::black_box(res);
                     ops
                 },
             );
         }
+    }
+    // Snapshot-accelerated harvesting (ISSUE 6 tentpole evidence): a
+    // 200-test campaign on a long-iteration toy instance (n=512, 1500
+    // iterations) replays far fewer instrumented ops when the harvest
+    // pass resumes from the profile run's snapshot tape instead of
+    // replaying from op 0. Cases cover snapshots off plus two tape
+    // intervals; each case label embeds the measured replayed-op counts
+    // so the JSON artifact carries the comparison directly (the
+    // acceptance bar is >=5x fewer at interval 1).
+    let long_toy = {
+        let mut t = Toy::default();
+        t.n = 512;
+        t.iters = 1500;
+        t
+    };
+    let replayed_with = |every: Option<u64>| {
+        let mut c = Campaign::new(200, 0xEC);
+        c.cfg = SimConfig::mini().with_snapshot_every(every);
+        let mut eng = NativeEngine::new();
+        let res = c
+            .run(&long_toy, &PersistPlan::none(), &mut eng)
+            .expect("bench campaign");
+        res.replayed_ops
+    };
+    let scratch_ops = replayed_with(None);
+    for (tag, every) in [("off", None), ("k1", Some(1)), ("k4000", Some(4000))] {
+        let replayed = replayed_with(every);
+        let label = format!(
+            "snapshot_{tag}_campaign200_toy1500 (replayed {replayed} of {scratch_ops} scratch ops, {:.1}x fewer)",
+            scratch_ops as f64 / replayed.max(1) as f64
+        );
+        let mut c = Campaign::new(200, 0xEC);
+        c.cfg = SimConfig::mini().with_snapshot_every(every);
+        b.run_throughput(&label, || {
+            let mut eng = NativeEngine::new();
+            let res = c
+                .run(&long_toy, &PersistPlan::none(), &mut eng)
+                .expect("bench campaign");
+            let ops = res.replayed_ops;
+            std::hint::black_box(res);
+            ops
+        });
+    }
+    // CI smoke pair: the same 200-test campaign on mg with snapshots on
+    // vs off, through the spec/Runner wiring (`--snapshot-interval`), so
+    // the artifact always holds an apples-to-apples on/off comparison on
+    // a registry app too.
+    for (tag, every) in [("off", None), ("on", Some(1))] {
+        let spec = ExperimentSpec::builder()
+            .app("mg")
+            .tests(200)
+            .seed(1)
+            .snapshot_interval(every)
+            .build()
+            .expect("bench spec is valid");
+        let r = Runner::new(spec).expect("native engine");
+        let app = apps::by_name("mg").unwrap();
+        b.run_throughput(&format!("snapshot_{tag}_campaign200_mg"), || {
+            let res = r
+                .execute_cell(app.as_ref(), &PersistPlan::none(), false)
+                .expect("bench campaign");
+            let ops = res.replayed_ops;
+            std::hint::black_box(res);
+            ops
+        });
     }
     if let Err(e) = b.write_json("BENCH_campaign.json") {
         eprintln!("warning: could not write BENCH_campaign.json: {e}");

@@ -53,7 +53,7 @@ fn main() -> Result<()> {
     println!(
         "== characterization campaign: {app_name}, {tests} crash tests, {shards} shard(s) =="
     );
-    let base = runner.campaign(app.as_ref(), &PersistPlan::none(), false);
+    let base = runner.campaign(app.as_ref(), &PersistPlan::none(), false)?;
     let f = base.response_fractions();
     println!(
         "responses: S1={} S2={} S3={} S4={}  (recomputability {})",
@@ -85,7 +85,7 @@ fn main() -> Result<()> {
 
     if !critical.is_empty() {
         let plan = PersistPlan::at_iter_end(&critical, app.regions().len(), 1);
-        let with = runner.campaign(app.as_ref(), &plan, false);
+        let with = runner.campaign(app.as_ref(), &plan, false)?;
         println!(
             "\nwith critical objects persisted at iteration end: {} (persist ops: {})",
             pct(with.recomputability()),

@@ -25,7 +25,7 @@ fn main() -> easycrash::util::error::Result<()> {
 
     println!("\n== kmeans crash campaign, restarts recomputed via PJRT ==");
     let t0 = Instant::now();
-    let r_pjrt = campaign.run(app.as_ref(), &plan, &mut pjrt);
+    let r_pjrt = campaign.run(app.as_ref(), &plan, &mut pjrt)?;
     let wall_pjrt = t0.elapsed();
     println!(
         "pjrt engine:   recomputability={}  ({} XLA executions, wall {:.2?})",
@@ -36,7 +36,7 @@ fn main() -> easycrash::util::error::Result<()> {
 
     let mut native = NativeEngine::new();
     let t1 = Instant::now();
-    let r_native = campaign.run(app.as_ref(), &plan, &mut native);
+    let r_native = campaign.run(app.as_ref(), &plan, &mut native)?;
     println!(
         "native engine: recomputability={}  (wall {:.2?})",
         pct(r_native.recomputability()),

@@ -20,7 +20,7 @@ fn main() -> easycrash::util::error::Result<()> {
 
     println!("== 1. a handful of crash tests without persistence ==");
     let campaign = Campaign::new(20, 42);
-    let base = campaign.run(app.as_ref(), &PersistPlan::none(), &mut engine);
+    let base = campaign.run(app.as_ref(), &PersistPlan::none(), &mut engine)?;
     for (i, t) in base.records.iter().take(5).enumerate() {
         println!(
             "  crash {i}: op {} iter {} region R{} -> {} ({} extra iters)",

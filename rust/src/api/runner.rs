@@ -93,7 +93,7 @@ impl Runner {
             let app = apps::by_name(name).expect("spec validated app names");
             for plan_spec in &self.spec.plans {
                 let plan = self.resolve_plan(app.as_ref(), plan_spec)?;
-                let result = self.campaign(app.as_ref(), &plan, self.spec.verified);
+                let result = self.campaign(app.as_ref(), &plan, self.spec.verified)?;
                 cells.push(ExperimentCell {
                     app: name.clone(),
                     plan: plan_spec.clone(),
@@ -135,7 +135,7 @@ impl Runner {
             let app = apps::by_name(name).expect("spec validated app names");
             for plan_spec in &self.spec.plans {
                 let plan = self.resolve_plan(app.as_ref(), plan_spec)?;
-                let campaign = self.campaign(app.as_ref(), &plan, self.spec.verified);
+                let campaign = self.campaign(app.as_ref(), &plan, self.spec.verified)?;
                 let r = campaign.recomputability();
                 for &t_chk in &T_CHK_SCENARIOS {
                     let model =
@@ -188,23 +188,23 @@ impl Runner {
     pub fn resolve_plan(&self, app: &dyn CrashApp, spec: &PlanSpec) -> Result<PersistPlan> {
         match spec {
             PlanSpec::None => Ok(PersistPlan::none()),
-            PlanSpec::All => Ok(self.plan_all_candidates(app)),
+            PlanSpec::All => self.plan_all_candidates(app),
             PlanSpec::Critical => self.plan_critical_iter_end(app),
             PlanSpec::Entries(entries) => {
                 let plan = PersistPlan {
                     entries: entries.clone(),
                     clwb: false,
                 };
-                // Validate with the same resolver the campaign will use,
-                // against a cheap halted registry probe — so *any*
-                // registered object is accepted (bt's non-candidate
-                // `forcing` etc.), errors surface at resolve time, and
-                // this path can never disagree with the campaign's own
-                // check.
+                // Validate with the same resolver (and the same layout
+                // probe) the campaign will use — so *any* registered
+                // object is accepted (bt's non-candidate `forcing` etc.),
+                // errors surface at resolve time, and this path can never
+                // disagree with the campaign's own check.
                 let num_regions = app.regions().len();
-                let layout =
-                    crate::easycrash::campaign::probe_layout(app, &self.spec.cfg, num_regions);
-                plan.resolve(&layout, num_regions)?;
+                let probe = app.probe_layout().map_err(|s| {
+                    crate::err!("app {}: layout probe failed with {s:?}", app.name())
+                })?;
+                plan.resolve_for(&probe.reg, num_regions, probe.iter_obj)?;
                 Ok(plan)
             }
         }
@@ -213,21 +213,22 @@ impl Runner {
     /// Candidate object names of an app, excluding the iterator bookmark
     /// — by the bookmark's resolved object id, not its name (from the
     /// memoized no-persistence profile).
-    pub fn candidate_names(&self, app: &dyn CrashApp) -> Vec<String> {
-        let prof = self.profile(app, &PersistPlan::none(), self.spec.cfg);
-        prof.selectable_candidates()
+    pub fn candidate_names(&self, app: &dyn CrashApp) -> Result<Vec<String>> {
+        let prof = self.profile(app, &PersistPlan::none(), self.spec.cfg)?;
+        Ok(prof
+            .selectable_candidates()
             .map(|(_, n, _)| n.clone())
-            .collect()
+            .collect())
     }
 
     /// The `all` shorthand: every candidate object (minus the iterator
     /// bookmark) persisted at the end of every main-loop iteration — the
     /// one construction `main.rs` and the report context used to
     /// duplicate.
-    pub fn plan_all_candidates(&self, app: &dyn CrashApp) -> PersistPlan {
-        let names = self.candidate_names(app);
+    pub fn plan_all_candidates(&self, app: &dyn CrashApp) -> Result<PersistPlan> {
+        let names = self.candidate_names(app)?;
         let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
-        PersistPlan::at_iter_end(&refs, app.regions().len(), 1)
+        Ok(PersistPlan::at_iter_end(&refs, app.regions().len(), 1))
     }
 
     /// The `critical` shorthand: the workflow-selected critical objects
@@ -264,7 +265,7 @@ impl Runner {
         app: &dyn CrashApp,
         plan: &PersistPlan,
         verified: bool,
-    ) -> Arc<CampaignResult> {
+    ) -> Result<Arc<CampaignResult>> {
         let key = format!(
             "{}::{}{}",
             app.name(),
@@ -272,14 +273,14 @@ impl Runner {
             if verified { "::vfy" } else { "" }
         );
         if let Some(c) = self.campaigns.lock().unwrap().get(&key) {
-            return c.clone();
+            return Ok(c.clone());
         }
         if self.verbose {
             eprintln!("[campaign] {key}");
         }
-        let res = Arc::new(self.execute_cell(app, plan, verified));
+        let res = Arc::new(self.execute_cell(app, plan, verified)?);
         self.campaigns.lock().unwrap().insert(key, res.clone());
-        res
+        Ok(res)
     }
 
     /// Uncached cell execution — the exact pre-API wiring: a [`Campaign`]
@@ -293,7 +294,7 @@ impl Runner {
         app: &dyn CrashApp,
         plan: &PersistPlan,
         verified: bool,
-    ) -> CampaignResult {
+    ) -> Result<CampaignResult> {
         let campaign = Campaign {
             tests: self.spec.tests,
             seed: self.spec.seed,
@@ -309,14 +310,19 @@ impl Runner {
 
     /// Memoized profile run (no crashes) under a plan + simulator config
     /// (profile consumers sweep NVM profiles, hence the cfg key).
-    pub fn profile(&self, app: &dyn CrashApp, plan: &PersistPlan, cfg: SimConfig) -> Arc<CampaignResult> {
+    pub fn profile(
+        &self,
+        app: &dyn CrashApp,
+        plan: &PersistPlan,
+        cfg: SimConfig,
+    ) -> Result<Arc<CampaignResult>> {
         let key = format!("{}::{}::{:?}", app.name(), plan.dsl(), cfg);
         if let Some(p) = self.profiles.lock().unwrap().get(&key) {
-            return p.clone();
+            return Ok(p.clone());
         }
-        let res = Arc::new(self.execute_profile(app, plan, cfg));
+        let res = Arc::new(self.execute_profile(app, plan, cfg)?);
         self.profiles.lock().unwrap().insert(key, res.clone());
-        res
+        Ok(res)
     }
 
     /// Uncached cell execution forced through the sharded worker-thread
@@ -329,7 +335,7 @@ impl Runner {
         app: &dyn CrashApp,
         plan: &PersistPlan,
         verified: bool,
-    ) -> CampaignResult {
+    ) -> Result<CampaignResult> {
         assert_eq!(
             self.spec.engine,
             super::spec::EngineKind::Native,
@@ -355,7 +361,7 @@ impl Runner {
         app: &dyn CrashApp,
         plan: &PersistPlan,
         cfg: SimConfig,
-    ) -> CampaignResult {
+    ) -> Result<CampaignResult> {
         Campaign {
             tests: 0,
             seed: self.spec.seed,

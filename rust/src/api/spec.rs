@@ -199,6 +199,12 @@ impl ExperimentSpec {
             self.cfg.nvm = NvmProfile::by_name(nvm)
                 .ok_or_else(|| crate::err!("unknown NVM profile `{nvm}`"))?;
         }
+        // Snapshot-tape recording interval for campaigns (`0` disables,
+        // i.e. scratch replay).
+        if args.get("snapshot-interval").is_some() {
+            let every = args.u64_or("snapshot-interval", 0)?;
+            self.cfg.snapshot_every = (every > 0).then_some(every);
+        }
         // Efficiency-trace knobs: any of them materializes the optional
         // trace section (starting from the file's values or the §7
         // defaults).
@@ -267,6 +273,9 @@ impl ExperimentSpec {
             .set("planner", self.planner.to_string())
             .set("geometry", self.geometry_name())
             .set("nvm", self.cfg.nvm.name);
+        if let Some(every) = self.cfg.snapshot_every {
+            j = j.set("snapshot_interval", every);
+        }
         if self.geometry_name() == "custom" {
             let geom = |g: CacheGeom| Json::obj().set("size", g.size).set("ways", g.ways);
             j = j.set(
@@ -296,7 +305,7 @@ impl ExperimentSpec {
         // silently fall back to a default and run the wrong experiment.
         const KNOWN: &[&str] = &[
             "schema", "apps", "plans", "tests", "seed", "shards", "engine", "verified", "ts",
-            "tau", "planner", "geometry", "cache", "nvm", "trace",
+            "tau", "planner", "geometry", "cache", "nvm", "snapshot_interval", "trace",
         ];
         for (i, (key, _)) in fields.iter().enumerate() {
             crate::ensure!(
@@ -384,6 +393,7 @@ impl ExperimentSpec {
         }
         if let Some(v) = j.get("geometry") {
             let nvm = spec.cfg.nvm;
+            let snap = spec.cfg.snapshot_every;
             spec.cfg = match v.as_str() {
                 Some("mini") => SimConfig::mini(),
                 Some("paper") => SimConfig::paper(),
@@ -417,18 +427,26 @@ impl ExperimentSpec {
                         l2: geom("l2")?,
                         l3: geom("l3")?,
                         nvm,
+                        snapshot_every: snap,
                     }
                 }
                 other => crate::bail!(
                     "`geometry` must be \"mini\", \"paper\" or \"custom\", got {other:?}"
                 ),
             }
-            .with_nvm(nvm);
+            .with_nvm(nvm)
+            .with_snapshot_every(snap);
         }
         if let Some(v) = j.get("nvm") {
             let name = v.as_str().ok_or_else(|| crate::err!("`nvm` must be a string"))?;
             spec.cfg.nvm = NvmProfile::by_name(name)
                 .ok_or_else(|| crate::err!("unknown NVM profile `{name}`"))?;
+        }
+        if let Some(v) = j.get("snapshot_interval") {
+            let every = v.as_u64().ok_or_else(|| {
+                crate::err!("`snapshot_interval` must be a non-negative integer")
+            })?;
+            spec.cfg.snapshot_every = (every > 0).then_some(every);
         }
         if let Some(v) = j.get("trace") {
             spec.trace = Some(TraceSpec::from_json(v)?);
@@ -518,6 +536,13 @@ impl SpecBuilder {
 
     pub fn cfg(mut self, cfg: SimConfig) -> SpecBuilder {
         self.spec.cfg = cfg;
+        self
+    }
+
+    /// Snapshot-tape recording interval in instrumented ops (`None`
+    /// disables recording — campaigns replay from scratch).
+    pub fn snapshot_interval(mut self, every: Option<u64>) -> SpecBuilder {
+        self.spec.cfg = self.spec.cfg.with_snapshot_every(every);
         self
     }
 

@@ -14,7 +14,7 @@
 use std::sync::OnceLock;
 
 use crate::runtime::StepEngine;
-use crate::sim::{Buf, Env, ObjId, RawEnv, Signal, SimEnv};
+use crate::sim::{Buf, Env, LayoutEnv, LayoutProbe, ObjId, RawEnv, Signal, SimEnv};
 
 pub mod adi;
 pub mod bt;
@@ -157,6 +157,24 @@ pub trait CrashApp: Send + Sync {
     /// halt-at-crash mode.
     fn run_sim(&self, env: &mut SimEnv) -> Result<(), Signal>;
 
+    /// Resume an instrumented run on an env restored from an
+    /// [`EnvSnapshot`](crate::sim::EnvSnapshot): runs main-loop iterations
+    /// `start_it..iters()` with the exact loop body of [`CrashApp::run_sim`]
+    /// (step, bookmark store, `iter_end`). The app's opaque handle state is
+    /// rebuilt on a throwaway [`LayoutEnv`] whose allocation layout matches
+    /// `SimEnv`'s, so the handles are valid for the restored env while the
+    /// rebuild touches neither its images nor its counters. `start_it` must
+    /// be the snapshot's [`iter()`](crate::sim::EnvSnapshot::iter) — i.e.
+    /// an iteration boundary, the only resumable points.
+    fn run_sim_from(&self, env: &mut SimEnv, start_it: u64) -> Result<(), Signal>;
+
+    /// Learn the app's object layout and bookmark identity without an
+    /// instrumented run: build on a throwaway [`LayoutEnv`] and return the
+    /// registry plus the `ObjId` of the loop-iterator bookmark. Config-
+    /// independent (no caches involved), so one probe serves every
+    /// (plan, worker) of a campaign.
+    fn probe_layout(&self) -> Result<LayoutProbe, Signal>;
+
     /// Reference run (memoized).
     fn golden(&self) -> Golden;
 
@@ -198,6 +216,30 @@ impl<T: AppCore + Send + Sync> CrashApp for T {
             env.iter_end(it)?;
         }
         Ok(())
+    }
+
+    fn run_sim_from(&self, env: &mut SimEnv, start_it: u64) -> Result<(), Signal> {
+        let mut lay = LayoutEnv::new();
+        let st = self.build(&mut lay)?;
+        debug_assert_eq!(
+            lay.reg.footprint(),
+            env.reg.footprint(),
+            "restored env must carry the layout run_sim would build"
+        );
+        let it_buf = Self::iter_buf(&st);
+        for it in start_it..self.iters() {
+            self.step(env, &st, it)?;
+            env.sti(it_buf, 0, (it + 1) as i64)?;
+            env.iter_end(it)?;
+        }
+        Ok(())
+    }
+
+    fn probe_layout(&self) -> Result<LayoutProbe, Signal> {
+        let mut lay = LayoutEnv::new();
+        let st = self.build(&mut lay)?;
+        let iter_obj = Some(Self::iter_buf(&st).id);
+        Ok(LayoutProbe { reg: lay.reg, iter_obj })
     }
 
     fn golden(&self) -> Golden {

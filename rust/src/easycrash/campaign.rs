@@ -45,9 +45,15 @@
 //! spans ≥ the test count — every real app; `partition_points` keeps
 //! duplicate draws in one batch regardless).
 
+use std::sync::Arc;
+
 use crate::apps::{CrashApp, Golden, Response, Snapshot};
 use crate::runtime::{NativeEngine, StepEngine};
-use crate::sim::{CrashInfo, CrashObserver, HierStats, ObjId, Signal, SimConfig, SimEnv};
+use crate::sim::{
+    CrashInfo, CrashObserver, FlushHooks, HierStats, ObjId, Registry, Signal, SimConfig, SimEnv,
+    SnapshotTape,
+};
+use crate::util::error::{Context, Result};
 use crate::util::rng::Rng;
 
 use super::plan::PersistPlan;
@@ -76,14 +82,15 @@ pub struct CampaignResult {
     pub records: Vec<TestRecord>,
     /// Candidate objects: (id, name, bytes).
     pub candidates: Vec<(ObjId, String, usize)>,
-    /// The loop-iterator bookmark's object id — resolved by the *same*
-    /// registry lookup that installs its flush hook, so selection can
-    /// exclude the bookmark by identity instead of by the literal name
-    /// `"it"`: an app object that merely shares the name is *analyzed*.
-    /// (Persistence plans remain name-addressed: `PersistPlan::resolve`
-    /// rejects a name shared by several registered objects rather than
-    /// guessing, so *persisting* a same-named non-bookmark object fails
-    /// loud instead of silently flushing the wrong one.)
+    /// The loop-iterator bookmark's object id — the identity of the object
+    /// the iteration-end flush hook persists, taken from the app's own
+    /// `iter_buf` handle via `CrashApp::probe_layout`. Never resolved by
+    /// the literal name `"it"`: an app object that merely shares the name
+    /// is *analyzed* as an ordinary candidate. (Persistence plans remain
+    /// name-addressed: `PersistPlan::resolve` rejects a name shared by
+    /// several registered objects rather than guessing, so *persisting* a
+    /// same-named non-bookmark object fails loud instead of silently
+    /// flushing the wrong one.)
     pub iter_obj: Option<ObjId>,
     /// Total instrumented ops / ops at main-loop start.
     pub ops_total: u64,
@@ -99,6 +106,15 @@ pub struct CampaignResult {
     pub stats: HierStats,
     pub footprint: usize,
     pub num_regions: usize,
+    /// Instrumented ops executed while *harvesting* crash points (summed
+    /// over all replay segments and shard workers; 0 for profile-only
+    /// results). The profile pass is excluded — it costs the same with or
+    /// without snapshots — so this is exactly the quantity the snapshot
+    /// tape reduces: scratch replay pays ~n per full-run worker, restore
+    /// pays ~(points × interval) plus one tail window. Excluded from all
+    /// bit-identity parity comparisons by construction (it measures work,
+    /// not results).
+    pub replayed_ops: u64,
 }
 
 impl CampaignResult {
@@ -404,22 +420,18 @@ impl EnvCore {
     }
 }
 
-/// Registry layout learned from a probe env halted at the app's very
-/// first memory access — by convention every app registers all of its
-/// objects before its first data access, and allocation order is
-/// deterministic, so the probe layout's ids match the real run's. Used
-/// by [`Campaign::pass`] to resolve flush hooks and by
-/// [`crate::api::Runner`] to validate plan entries without paying an
-/// instrumented replay.
-pub(crate) fn probe_layout(
-    app: &dyn CrashApp,
-    cfg: &SimConfig,
-    num_regions: usize,
-) -> crate::sim::Registry {
-    let mut probe = SimEnv::new(cfg, num_regions);
-    probe.halt_at = Some(1);
-    let _ = app.run_sim(&mut probe);
-    probe.reg
+/// Per-(app, plan, cfg) preparation shared by the profile pass and every
+/// harvest worker: the probed registry layout, the resolved flush hooks,
+/// the candidate list, and the bookmark's object identity. Built once by
+/// [`Campaign::prepare`] — the sharded runner hands one instance to all
+/// of its workers instead of letting each re-probe the layout and
+/// re-resolve the plan.
+pub(crate) struct PassCtx {
+    pub(crate) layout: Registry,
+    pub(crate) hooks: FlushHooks,
+    pub(crate) candidates: Vec<(ObjId, String, usize)>,
+    pub(crate) iter_obj: Option<ObjId>,
+    pub(crate) num_regions: usize,
 }
 
 impl Campaign {
@@ -432,11 +444,73 @@ impl Campaign {
         }
     }
 
+    /// Probe the app's layout (one un-instrumented `build` against a
+    /// [`crate::sim::LayoutEnv`] — no cache model, no replay) and resolve
+    /// `plan` against it. The iteration-end bookmark is identified by the
+    /// app's own `iter_buf` handle, never by the literal name `"it"`.
+    pub(crate) fn prepare(&self, app: &dyn CrashApp, plan: &PersistPlan) -> Result<PassCtx> {
+        let num_regions = app.regions().len();
+        let probe = app.probe_layout().map_err(|s| {
+            crate::err!("campaign {}: layout probe failed with {s:?}", app.name())
+        })?;
+        let hooks = plan
+            .resolve_for(&probe.reg, num_regions, probe.iter_obj)
+            .with_context(|| {
+                format!(
+                    "campaign {}: plan `{}` does not resolve against the app's registry",
+                    app.name(),
+                    plan.dsl()
+                )
+            })?;
+        let candidates: Vec<(ObjId, String, usize)> = probe
+            .reg
+            .candidates()
+            .into_iter()
+            .map(|id| {
+                let o = probe.reg.get(id);
+                (id, o.spec.name.to_string(), o.spec.bytes())
+            })
+            .collect();
+        Ok(PassCtx {
+            layout: probe.reg,
+            hooks,
+            candidates,
+            iter_obj: probe.iter_obj,
+            num_regions,
+        })
+    }
+
     /// Profile run only: execute the app under `plan` with no crashes and
     /// return the (records-empty) result — the timing/write side of the
     /// campaign, used by Table 4 / Fig. 7-9 and the `l_k` estimates.
-    pub fn profile(&self, app: &dyn CrashApp, plan: &PersistPlan) -> CampaignResult {
-        self.pass(app, plan, Vec::new(), None, None)
+    pub fn profile(&self, app: &dyn CrashApp, plan: &PersistPlan) -> Result<CampaignResult> {
+        let ctx = self.prepare(app, plan)?;
+        let (res, _tape) = self.profile_with(app, plan, &ctx)?;
+        Ok(res)
+    }
+
+    /// The profile pass proper. When `cfg.snapshot_every` is set the env
+    /// additionally records an [`EnvSnapshot`](crate::sim::EnvSnapshot)
+    /// tape at iteration boundaries — the forward run the campaign pays
+    /// for anyway doubles as the snapshot donor, so the tape is free
+    /// modulo the capture copies themselves.
+    pub(crate) fn profile_with(
+        &self,
+        app: &dyn CrashApp,
+        plan: &PersistPlan,
+        ctx: &PassCtx,
+    ) -> Result<(CampaignResult, SnapshotTape)> {
+        let mut env = SimEnv::new(&self.cfg, ctx.num_regions);
+        env.set_hooks(ctx.hooks.clone());
+        if let Some(every) = self.cfg.snapshot_every {
+            env.record_snapshots(every);
+        }
+        app.run_sim(&mut env).map_err(|s| {
+            crate::err!("campaign {}: profile run failed with {s:?}", app.name())
+        })?;
+        let tape = env.take_tape();
+        let core = EnvCore::of(&mut env);
+        Ok((self.result_of(app, plan, ctx, core, Vec::new(), 0), tape))
     }
 
     /// Full campaign: profile + crash harvesting + inline classification.
@@ -445,103 +519,34 @@ impl Campaign {
         app: &dyn CrashApp,
         plan: &PersistPlan,
         engine: &mut dyn StepEngine,
-    ) -> CampaignResult {
-        // Pass 1 (profile) to learn the op-count range of the main loop.
-        let profile = self.profile(app, plan);
+    ) -> Result<CampaignResult> {
+        let ctx = self.prepare(app, plan)?;
+        // Pass 1 (profile) to learn the op-count range of the main loop —
+        // and, with `snapshot_every` set, to record the snapshot tape.
+        let (profile, tape) = self.profile_with(app, plan, &ctx)?;
         let points =
             draw_crash_points(self.seed, self.tests, profile.ops_main_start, profile.ops_total);
         // Pass 2: harvest.
-        let mut res = self.pass(app, plan, points, Some(engine), None);
+        let mut res = self.harvest(app, plan, points, engine, None, &ctx, &tape)?;
         res.ops_main_start = profile.ops_main_start;
-        res
+        Ok(res)
     }
 
-    /// One instrumented execution. With an engine, every point in the
-    /// (sorted) `points` batch is harvested and classified inline; without
-    /// one this is a pure profile pass. This is the unit of work a shard
-    /// worker executes.
-    ///
-    /// `halt_at` is the early-stop hook (DESIGN.md §Perf "early-stop
-    /// workers"): when set, the replay raises `Signal::Crash` the moment
-    /// op `halt_at` is reached and the pass returns whatever was harvested
-    /// so far. Callers that set it (shard workers pass
-    /// `last_point + 1`) get exact records for every point `< halt_at` but
-    /// *truncated* aggregates (`cycles`, `stats`, `ops_total`, …) — the
-    /// sharded merge therefore takes aggregates only from its designated
-    /// full-run worker.
-    pub(crate) fn pass(
+    fn result_of(
         &self,
         app: &dyn CrashApp,
         plan: &PersistPlan,
-        points: Vec<u64>,
-        engine: Option<&mut dyn StepEngine>,
-        halt_at: Option<u64>,
+        ctx: &PassCtx,
+        core: EnvCore,
+        records: Vec<TestRecord>,
+        replayed_ops: u64,
     ) -> CampaignResult {
-        let num_regions = app.regions().len();
-
-        // Hooks can only resolve after `build` registers the objects, but
-        // `run_sim` does both build and the main loop — so learn the
-        // registry layout from a cheap halted probe first.
-        let layout = probe_layout(app, &self.cfg, num_regions);
-        let hooks = plan
-            .resolve(&layout, num_regions)
-            .expect("plan must resolve against the app's registry");
-
-        let candidates: Vec<(ObjId, String, usize)> = layout
-            .candidates()
-            .into_iter()
-            .map(|id| {
-                let o = layout.get(id);
-                (id, o.spec.name.to_string(), o.spec.bytes())
-            })
-            .collect();
-        // Mirror of the lookup `PersistPlan::resolve` uses for the
-        // iteration-end bookmark hook: whatever object that hook persists
-        // is the one selection must never treat as a candidate question.
-        let iter_obj = layout.by_name("it");
-
-        let (core, records) = match engine {
-            Some(engine) => {
-                let golden = app.golden();
-                let mut harvest = Harvest {
-                    records: Vec::new(),
-                    engine,
-                    app,
-                    golden,
-                    candidates: &candidates,
-                    verified: self.verified,
-                };
-                let core;
-                {
-                    let mut env = SimEnv::new(&self.cfg, num_regions);
-                    env.set_hooks(hooks);
-                    env.set_crash_points(points, &mut harvest);
-                    env.halt_at = halt_at;
-                    match app.run_sim(&mut env) {
-                        Ok(()) => {}
-                        // Requested early stop: every batch point fired
-                        // before the halt op by construction.
-                        Err(Signal::Crash) if halt_at.is_some() => {}
-                        Err(s) => panic!("campaign run must complete, got {s:?}"),
-                    }
-                    core = EnvCore::of(&mut env);
-                } // env dropped: the observer borrow ends here
-                (core, harvest.records)
-            }
-            None => {
-                let mut env = SimEnv::new(&self.cfg, num_regions);
-                env.set_hooks(hooks);
-                app.run_sim(&mut env).expect("profile run must complete");
-                (EnvCore::of(&mut env), Vec::new())
-            }
-        };
-
         CampaignResult {
             app: app.name().to_string(),
             plan: plan.clone(),
             records,
-            candidates,
-            iter_obj,
+            candidates: ctx.candidates.clone(),
+            iter_obj: ctx.iter_obj,
             ops_total: core.ops_total,
             ops_main_start: core.ops_main_start,
             cycles: core.cycles,
@@ -550,8 +555,174 @@ impl Campaign {
             persist_cycles: core.persist_cycles,
             stats: core.stats,
             footprint: core.footprint,
-            num_regions,
+            num_regions: ctx.num_regions,
+            replayed_ops,
         }
+    }
+
+    /// One harvest pass: every point in the (sorted) `points` batch is
+    /// replayed to, crashed at, and classified inline. This is the unit of
+    /// work a shard worker executes.
+    ///
+    /// ### Snapshot-accelerated replay
+    ///
+    /// With a non-empty `tape` the batch is serviced in **segments**: the
+    /// points are grouped by the latest snapshot *strictly before* each
+    /// one ([`SnapshotTape::index_before`] — strict, because a snapshot
+    /// taken exactly at a crash op would skip that crash), and each group
+    /// gets a fresh `SimEnv` restored from its snapshot, resumed at the
+    /// snapshot's iteration boundary via [`CrashApp::run_sim_from`], and
+    /// halted right after its own last point. Points before the first
+    /// snapshot form a scratch group replayed from op 0. Snapshot windows
+    /// containing no points are never replayed. Restores are bit-exact and
+    /// replay is deterministic, so every observation (and, for the
+    /// designated full-run segment, every aggregate) is bit-identical to a
+    /// scratch replay — the tape only removes redundant work, it never
+    /// changes state.
+    ///
+    /// `halt_at` is the early-stop hook (DESIGN.md §Perf "early-stop
+    /// workers"): when set, the replay raises `Signal::Crash` the moment
+    /// op `halt_at` is reached and the pass returns whatever was harvested
+    /// so far. Callers that set it (shard workers pass `last_point + 1`)
+    /// get exact records for every point `< halt_at` but *truncated*
+    /// aggregates (`cycles`, `stats`, `ops_total`, …) — the sharded merge
+    /// therefore takes aggregates only from its designated full-run
+    /// worker. With `halt_at == None` the final segment always runs to
+    /// completion (a point-less tail segment is appended off the latest
+    /// snapshot if needed) so the aggregates cover the whole execution.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn harvest(
+        &self,
+        app: &dyn CrashApp,
+        plan: &PersistPlan,
+        points: Vec<u64>,
+        engine: &mut dyn StepEngine,
+        halt_at: Option<u64>,
+        ctx: &PassCtx,
+        tape: &SnapshotTape,
+    ) -> Result<CampaignResult> {
+        debug_assert!(points.windows(2).all(|w| w[0] <= w[1]));
+
+        // Segment schedule: (restore source, points, halt op).
+        struct Segment {
+            snap: Option<usize>,
+            points: Vec<u64>,
+            halt: Option<u64>,
+        }
+        let mut segments: Vec<Segment> = Vec::new();
+        if tape.is_empty() {
+            // Scratch mode: the whole batch in one replay from op 0 —
+            // exactly the pre-snapshot schedule.
+            segments.push(Segment {
+                snap: None,
+                points,
+                halt: halt_at,
+            });
+        } else {
+            for p in points {
+                let idx = tape.index_before(p);
+                match segments.last_mut() {
+                    Some(s) if s.snap == idx => s.points.push(p),
+                    _ => segments.push(Segment {
+                        snap: idx,
+                        points: vec![p],
+                        halt: None,
+                    }),
+                }
+            }
+            for s in segments.iter_mut() {
+                s.halt = s.points.last().map(|&p| p + 1);
+            }
+            match halt_at {
+                // Early-stop worker: its halt op is its last point + 1,
+                // which is what the final segment already carries — but
+                // honor the caller's value as the contract.
+                Some(_) => {
+                    if let Some(last) = segments.last_mut() {
+                        last.halt = halt_at;
+                    }
+                }
+                // Full-run pass: the final segment must reach completion
+                // so the aggregates cover the whole execution. If the last
+                // occupied window is already the tape's newest, extend it;
+                // otherwise append a point-less tail segment off the
+                // newest snapshot (cheaper than replaying every window in
+                // between).
+                None => {
+                    let tail = Some(tape.len() - 1);
+                    match segments.last_mut() {
+                        Some(s) if s.snap == tail => s.halt = None,
+                        _ => segments.push(Segment {
+                            snap: tail,
+                            points: Vec::new(),
+                            halt: None,
+                        }),
+                    }
+                }
+            }
+            if segments.is_empty() {
+                // Unreachable with the halt-schedule above (the `None` arm
+                // always leaves a tail segment), kept for the degenerate
+                // halted-and-pointless caller.
+                segments.push(Segment {
+                    snap: None,
+                    points: Vec::new(),
+                    halt: halt_at,
+                });
+            }
+        }
+
+        let golden = app.golden();
+        let mut harvest = Harvest {
+            records: Vec::new(),
+            engine,
+            app,
+            golden,
+            candidates: &ctx.candidates,
+            verified: self.verified,
+        };
+        let n_segments = segments.len();
+        let mut replayed_ops: u64 = 0;
+        let mut core: Option<EnvCore> = None;
+        for (i, seg) in segments.into_iter().enumerate() {
+            let mut env = SimEnv::new(&self.cfg, ctx.num_regions);
+            let resume = seg.snap.map(|idx| {
+                let snap = tape.get(idx);
+                env.restore(snap);
+                (snap.ops(), snap.iter())
+            });
+            env.set_hooks(ctx.hooks.clone());
+            let seg_halt = seg.halt;
+            env.set_crash_points(seg.points, &mut harvest);
+            env.halt_at = seg_halt;
+            let start_ops = resume.map_or(0, |(ops, _)| ops);
+            let run = match resume {
+                Some((_, start_it)) => app.run_sim_from(&mut env, start_it),
+                None => app.run_sim(&mut env),
+            };
+            match run {
+                Ok(()) => {}
+                // Requested early stop: every segment point fired before
+                // the halt op by construction.
+                Err(Signal::Crash) if seg_halt.is_some() => {}
+                Err(s) => crate::bail!(
+                    "campaign {}: instrumented run failed with {s:?}",
+                    app.name()
+                ),
+            }
+            replayed_ops += env.ops() - start_ops;
+            if i + 1 == n_segments {
+                // The final segment is the aggregate donor: with
+                // `halt_at == None` it ran to completion off cumulative
+                // restored state, so its counters equal the full run's
+                // bit-for-bit; with a halt it carries the truncated
+                // aggregates the early-stop contract documents.
+                core = Some(EnvCore::of(&mut env));
+            }
+        } // last env dropped: the observer borrow ends here
+        let core = core.expect("harvest executes at least one segment");
+        let records = harvest.records;
+        Ok(self.result_of(app, plan, ctx, core, records, replayed_ops))
     }
 }
 
@@ -581,7 +752,7 @@ impl ShardedCampaign {
     }
 
     /// Run with [`NativeEngine`] recomputation (the common case).
-    pub fn run(&self, app: &dyn CrashApp, plan: &PersistPlan) -> CampaignResult {
+    pub fn run(&self, app: &dyn CrashApp, plan: &PersistPlan) -> Result<CampaignResult> {
         self.run_with(app, plan, &|| Box::new(NativeEngine::new()))
     }
 
@@ -600,7 +771,7 @@ impl ShardedCampaign {
         app: &dyn CrashApp,
         plan: &PersistPlan,
         engine: &mut dyn StepEngine,
-    ) -> CampaignResult {
+    ) -> Result<CampaignResult> {
         if self.shards > 1 && engine.name() == "native" {
             self.run(app, plan)
         } else {
@@ -629,10 +800,15 @@ impl ShardedCampaign {
         app: &dyn CrashApp,
         plan: &PersistPlan,
         make_engine: &(dyn Fn() -> Box<dyn StepEngine> + Sync),
-    ) -> CampaignResult {
+    ) -> Result<CampaignResult> {
         let shards = self.shards.max(1);
         let c = self.campaign;
-        let profile = c.profile(app, plan);
+        // One probe + one plan resolution for the whole fleet: the
+        // prepared context (layout, hooks, candidates, bookmark id) is
+        // shared by reference across all workers instead of each paying a
+        // throwaway probe env of its own.
+        let ctx = c.prepare(app, plan)?;
+        let (profile, tape) = c.profile_with(app, plan, &ctx)?;
         let points =
             draw_crash_points(c.seed, c.tests, profile.ops_main_start, profile.ops_total);
         let mut batches = partition_points(&points, shards);
@@ -651,7 +827,13 @@ impl ShardedCampaign {
         // wall-clock free of one serialized warm-up.
         let _ = app.golden();
 
-        let mut results: Vec<CampaignResult> = std::thread::scope(|scope| {
+        // The step-1 snapshot tape is shared read-only by every worker:
+        // each restores from the same immutable snapshots, so a T-test
+        // campaign replays ~T·interval ops instead of ~T·n/2.
+        let tape = Arc::new(tape);
+        let ctx_ref = &ctx;
+
+        let results: Vec<Result<CampaignResult>> = std::thread::scope(|scope| {
             let handles: Vec<_> = batches
                 .into_iter()
                 .enumerate()
@@ -663,9 +845,10 @@ impl ShardedCampaign {
                     } else {
                         batch.last().map(|&p| p + 1)
                     };
+                    let tape = Arc::clone(&tape);
                     scope.spawn(move || {
                         let mut engine = make_engine();
-                        c.pass(app, plan, batch, Some(engine.as_mut()), halt)
+                        c.harvest(app, plan, batch, engine.as_mut(), halt, ctx_ref, &tape)
                     })
                 })
                 .collect();
@@ -674,12 +857,15 @@ impl ShardedCampaign {
                 .map(|h| h.join().expect("shard worker panicked"))
                 .collect()
         });
+        let mut results = results.into_iter().collect::<Result<Vec<CampaignResult>>>()?;
 
         // Aggregates come from the designated full-run worker (the last
         // one); records are the shard batches concatenated in shard order
         // — contiguous slices of one sorted draw, so the result is the
-        // sequential record list bit-for-bit.
+        // sequential record list bit-for-bit. `replayed_ops` measures work,
+        // not results, so it alone is *summed* across workers.
         let mut merged = results.pop().expect("at least one worker");
+        merged.replayed_ops += results.iter().map(|r| r.replayed_ops).sum::<u64>();
         let tail = std::mem::take(&mut merged.records);
         let mut records =
             Vec::with_capacity(results.iter().map(|r| r.records.len()).sum::<usize>() + tail.len());
@@ -693,7 +879,7 @@ impl ShardedCampaign {
         );
         merged.records = records;
         merged.ops_main_start = profile.ops_main_start;
-        merged
+        Ok(merged)
     }
 }
 
@@ -707,7 +893,7 @@ mod tests {
     fn profile_measures_ops_and_cycles() {
         let app = by_name("toy").unwrap();
         let c = Campaign::new(0, 1);
-        let r = c.profile(app.as_ref(), &PersistPlan::none());
+        let r = c.profile(app.as_ref(), &PersistPlan::none()).unwrap();
         assert!(r.ops_total > r.ops_main_start);
         assert!(r.ops_main_start > 0);
         assert!(r.cycles > 0.0);
@@ -720,7 +906,7 @@ mod tests {
         let app = by_name("toy").unwrap();
         let c = Campaign::new(50, 2);
         let mut eng = NativeEngine::new();
-        let r = c.run(app.as_ref(), &PersistPlan::none(), &mut eng);
+        let r = c.run(app.as_ref(), &PersistPlan::none(), &mut eng).unwrap();
         assert_eq!(r.records.len(), 50);
         // Crash points were restricted to the main loop.
         assert!(r.records.iter().all(|t| t.op >= r.ops_main_start));
@@ -738,9 +924,9 @@ mod tests {
         let app = by_name("toy").unwrap();
         let c = Campaign::new(120, 3);
         let mut eng = NativeEngine::new();
-        let base = c.run(app.as_ref(), &PersistPlan::none(), &mut eng);
+        let base = c.run(app.as_ref(), &PersistPlan::none(), &mut eng).unwrap();
         let plan = PersistPlan::at_iter_end(&["x", "y"], 2, 1);
-        let with = c.run(app.as_ref(), &plan, &mut eng);
+        let with = c.run(app.as_ref(), &plan, &mut eng).unwrap();
         assert!(
             with.recomputability() >= base.recomputability(),
             "persistence must not hurt: {} vs {}",
@@ -755,8 +941,8 @@ mod tests {
         let app = by_name("toy").unwrap();
         let c = Campaign::new(40, 7);
         let mut eng = NativeEngine::new();
-        let a = c.run(app.as_ref(), &PersistPlan::none(), &mut eng);
-        let b = c.run(app.as_ref(), &PersistPlan::none(), &mut eng);
+        let a = c.run(app.as_ref(), &PersistPlan::none(), &mut eng).unwrap();
+        let b = c.run(app.as_ref(), &PersistPlan::none(), &mut eng).unwrap();
         assert_eq!(a.records, b.records);
         assert_eq!(a.recomputability(), b.recomputability());
         assert_eq!(a.ops_total, b.ops_total);
@@ -767,7 +953,7 @@ mod tests {
         let app = by_name("toy").unwrap();
         let c = Campaign::new(60, 9);
         let mut eng = NativeEngine::new();
-        let r = c.run(app.as_ref(), &PersistPlan::none(), &mut eng);
+        let r = c.run(app.as_ref(), &PersistPlan::none(), &mut eng).unwrap();
         let f = r.response_fractions();
         assert!((f.iter().sum::<f64>() - 1.0).abs() < 1e-12);
     }
@@ -779,7 +965,7 @@ mod tests {
         let app = by_name("toy").unwrap();
         let c = Campaign::new(0, 4);
         let mut eng = NativeEngine::new();
-        let r = c.run(app.as_ref(), &PersistPlan::none(), &mut eng);
+        let r = c.run(app.as_ref(), &PersistPlan::none(), &mut eng).unwrap();
         assert!(r.records.is_empty());
         assert_eq!(r.recomputability(), 0.0, "empty campaign recomputes nothing");
         assert_eq!(r.response_fractions(), [0.0; 4]);
@@ -794,7 +980,7 @@ mod tests {
         let app = by_name("toy").unwrap();
         let c = Campaign::new(1, 5);
         let mut eng = NativeEngine::new();
-        let r = c.run(app.as_ref(), &PersistPlan::none(), &mut eng);
+        let r = c.run(app.as_ref(), &PersistPlan::none(), &mut eng).unwrap();
         assert_eq!(r.records.len(), 1);
         let rec = &r.records[0];
         assert!(rec.op >= r.ops_main_start && rec.op <= r.ops_total);
@@ -813,7 +999,7 @@ mod tests {
         // Synthetic result: records exist but none is S2.
         let app = by_name("toy").unwrap();
         let c = Campaign::new(0, 6);
-        let mut base = c.profile(app.as_ref(), &PersistPlan::none());
+        let mut base = c.profile(app.as_ref(), &PersistPlan::none()).unwrap();
         base.records = vec![
             TestRecord {
                 op: 1,
@@ -890,11 +1076,212 @@ mod tests {
     fn sharded_run_matches_sequential_on_toy() {
         let app = by_name("toy").unwrap();
         let mut eng = NativeEngine::new();
-        let seq = Campaign::new(30, 13).run(app.as_ref(), &PersistPlan::none(), &mut eng);
-        let sh = ShardedCampaign::new(30, 13, 4).run(app.as_ref(), &PersistPlan::none());
+        let seq = Campaign::new(30, 13)
+            .run(app.as_ref(), &PersistPlan::none(), &mut eng)
+            .unwrap();
+        let sh = ShardedCampaign::new(30, 13, 4)
+            .run(app.as_ref(), &PersistPlan::none())
+            .unwrap();
         assert_eq!(seq.records, sh.records);
         assert_eq!(seq.cycles, sh.cycles);
         assert_eq!(seq.ops_total, sh.ops_total);
         assert_eq!(seq.ops_main_start, sh.ops_main_start);
+    }
+
+    // -- error paths --------------------------------------------------------
+
+    #[test]
+    fn unresolvable_plan_is_an_error_not_a_panic() {
+        let app = by_name("toy").unwrap();
+        let plan = PersistPlan::at_iter_end(&["no_such_object"], 2, 1);
+        let c = Campaign::new(4, 3);
+        let mut eng = NativeEngine::new();
+        let err = c.run(app.as_ref(), &plan, &mut eng).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("does not resolve"), "got: {msg}");
+        assert!(msg.contains("toy"), "error names the app: {msg}");
+        assert!(c.profile(app.as_ref(), &plan).is_err());
+        assert!(ShardedCampaign::new(4, 3, 2).run(app.as_ref(), &plan).is_err());
+    }
+
+    // -- bookmark identity --------------------------------------------------
+
+    /// App whose *data* includes an object legitimately named `"it"` — the
+    /// bookmark is a differently-named third object. Regression guard for
+    /// the old `layout.by_name("it")` bookmark lookup, which would have
+    /// pinned the data array instead.
+    struct DecoyIt {
+        gold: std::sync::OnceLock<Golden>,
+    }
+
+    struct DecoySt {
+        decoy: crate::sim::Buf,
+        x: crate::sim::Buf,
+        bm: crate::sim::Buf,
+    }
+
+    impl crate::apps::AppCore for DecoyIt {
+        type St = DecoySt;
+
+        fn name(&self) -> &'static str {
+            "decoy-it"
+        }
+        fn description(&self) -> &'static str {
+            "test app with a non-bookmark object named \"it\""
+        }
+        fn region_specs(&self) -> Vec<crate::apps::RegionSpec> {
+            vec![crate::apps::RegionSpec::l("r0")]
+        }
+        fn iters(&self) -> u64 {
+            4
+        }
+
+        fn build<E: crate::sim::Env>(&self, env: &mut E) -> Result<DecoySt, Signal> {
+            use crate::sim::ObjSpec;
+            let decoy = env.alloc(ObjSpec::f64("it", 64, true));
+            let x = env.alloc(ObjSpec::f64("x", 64, true));
+            let bm = env.alloc(ObjSpec::i64("bookmark", 1, true));
+            for i in 0..64 {
+                env.st(decoy, i, (i % 7) as f64)?;
+                env.st(x, i, 1.0)?;
+            }
+            env.sti(bm, 0, 0)?;
+            Ok(DecoySt { decoy, x, bm })
+        }
+
+        fn step<E: crate::sim::Env>(
+            &self,
+            env: &mut E,
+            st: &DecoySt,
+            _it: u64,
+        ) -> Result<(), Signal> {
+            env.region(0)?;
+            for i in 0..64 {
+                let v = env.ld(st.x, i)? + 0.5 * env.ld(st.decoy, i)?;
+                env.st(st.x, i, 0.5 * v)?;
+                env.st(st.decoy, i, 0.25 * v)?;
+            }
+            Ok(())
+        }
+
+        fn metric<E: crate::sim::Env>(&self, env: &mut E, st: &DecoySt) -> Result<f64, Signal> {
+            let mut s = 0.0;
+            for i in 0..64 {
+                s += env.ld(st.x, i)?;
+            }
+            Ok(s)
+        }
+
+        fn accept(&self, metric: f64, golden: &Golden) -> bool {
+            (metric - golden.metric).abs() <= 1e-9
+        }
+
+        fn iter_buf(st: &DecoySt) -> crate::sim::Buf {
+            st.bm
+        }
+
+        fn golden_cell(&self) -> &std::sync::OnceLock<Golden> {
+            &self.gold
+        }
+    }
+
+    #[test]
+    fn bookmark_resolves_by_identity_when_a_data_object_is_named_it() {
+        let app = DecoyIt {
+            gold: std::sync::OnceLock::new(),
+        };
+        let mut eng = NativeEngine::new();
+        let r = Campaign::new(12, 19)
+            .run(&app, &PersistPlan::none(), &mut eng)
+            .unwrap();
+        // The bookmark is the third-registered object ("bookmark", id 2),
+        // not the data array that happens to be named "it" (id 0).
+        assert_eq!(r.iter_obj, Some(2));
+        assert!(r.is_bookmark(2));
+        assert!(!r.is_bookmark(0));
+        // The decoy stays an ordinary candidate selection may consider.
+        assert!(r
+            .selectable_candidates()
+            .any(|(id, name, _)| *id == 0 && name == "it"));
+        assert!(r.selectable_candidates().all(|(id, _, _)| *id != 2));
+        assert_eq!(r.records.len(), 12);
+    }
+
+    // -- snapshot-accelerated harvest (full matrix in tests/determinism.rs)
+
+    #[test]
+    fn snapshot_harvest_is_bit_identical_and_replays_fewer_ops() {
+        let app = by_name("toy").unwrap();
+        let plan = PersistPlan::at_iter_end(&["x"], 2, 1);
+        let mut eng = NativeEngine::new();
+        let scratch = Campaign::new(25, 31)
+            .run(app.as_ref(), &plan, &mut eng)
+            .unwrap();
+        let mut snapc = Campaign::new(25, 31);
+        snapc.cfg = snapc.cfg.with_snapshot_every(Some(1));
+        let snap = snapc.run(app.as_ref(), &plan, &mut eng).unwrap();
+        assert_eq!(scratch.records, snap.records);
+        assert_eq!(scratch.cycles.to_bits(), snap.cycles.to_bits());
+        for (a, b) in scratch.region_cycles.iter().zip(&snap.region_cycles) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(scratch.stats, snap.stats);
+        assert_eq!(scratch.ops_total, snap.ops_total);
+        assert_eq!(scratch.ops_main_start, snap.ops_main_start);
+        assert_eq!(scratch.persist_ops, snap.persist_ops);
+        assert_eq!(scratch.persist_cycles.to_bits(), snap.persist_cycles.to_bits());
+        assert_eq!(scratch.footprint, snap.footprint);
+        assert!(
+            snap.replayed_ops < scratch.replayed_ops,
+            "snapshot restore must replay fewer ops: {} vs {}",
+            snap.replayed_ops,
+            scratch.replayed_ops
+        );
+    }
+
+    #[test]
+    fn replayed_ops_counts_harvest_work_only() {
+        let app = by_name("toy").unwrap();
+        let c = Campaign::new(5, 23);
+        let p = c.profile(app.as_ref(), &PersistPlan::none()).unwrap();
+        assert_eq!(p.replayed_ops, 0, "profile-only results replay nothing");
+        let mut eng = NativeEngine::new();
+        let r = c.run(app.as_ref(), &PersistPlan::none(), &mut eng).unwrap();
+        // Scratch sequential harvest = exactly one full replay.
+        assert_eq!(r.replayed_ops, r.ops_total);
+    }
+
+    // -- merge hygiene ------------------------------------------------------
+
+    /// No truncated aggregate from an early-stopped worker may leak into
+    /// the merged result — under scratch replay AND snapshot restore
+    /// (where even halted workers start from cumulative restored state).
+    #[test]
+    fn merged_aggregates_never_leak_from_halted_workers() {
+        let app = by_name("toy").unwrap();
+        let mut eng = NativeEngine::new();
+        let seq = Campaign::new(40, 21)
+            .run(app.as_ref(), &PersistPlan::none(), &mut eng)
+            .unwrap();
+        for every in [None, Some(1)] {
+            let mut sh = ShardedCampaign::new(40, 21, 4);
+            sh.campaign.cfg = sh.campaign.cfg.with_snapshot_every(every);
+            let m = sh.run(app.as_ref(), &PersistPlan::none()).unwrap();
+            assert_eq!(m.records, seq.records, "snapshot_every={every:?}");
+            assert_eq!(m.cycles.to_bits(), seq.cycles.to_bits(), "snapshot_every={every:?}");
+            for (a, b) in m.region_cycles.iter().zip(&seq.region_cycles) {
+                assert_eq!(a.to_bits(), b.to_bits(), "snapshot_every={every:?}");
+            }
+            assert_eq!(m.ops_total, seq.ops_total, "snapshot_every={every:?}");
+            assert_eq!(m.ops_main_start, seq.ops_main_start, "snapshot_every={every:?}");
+            assert_eq!(m.persist_ops, seq.persist_ops, "snapshot_every={every:?}");
+            assert_eq!(
+                m.persist_cycles.to_bits(),
+                seq.persist_cycles.to_bits(),
+                "snapshot_every={every:?}"
+            );
+            assert_eq!(m.stats, seq.stats, "snapshot_every={every:?}");
+            assert_eq!(m.footprint, seq.footprint, "snapshot_every={every:?}");
+        }
     }
 }

@@ -280,16 +280,31 @@ impl PersistPlan {
     /// is lookup-, clone- and allocation-free (DESIGN.md §Perf "flush
     /// hooks"). Unknown object names are an error (they indicate a
     /// plan/app mismatch).
+    ///
+    /// The bookmark falls back to a `by_name("it")` lookup — callers that
+    /// know the bookmark's identity (from `CrashApp::probe_layout`) should
+    /// use [`PersistPlan::resolve_for`] instead, which is immune to app
+    /// objects that merely share the name.
     pub fn resolve(&self, reg: &Registry, num_regions: usize) -> Result<FlushHooks> {
+        self.resolve_for(reg, num_regions, reg.by_name("it"))
+    }
+
+    /// Like [`PersistPlan::resolve`], with the loop-iterator bookmark
+    /// identified by `ObjId` rather than name.
+    pub fn resolve_for(
+        &self,
+        reg: &Registry,
+        num_regions: usize,
+        bookmark: Option<crate::sim::ObjId>,
+    ) -> Result<FlushHooks> {
         let mut hooks = FlushHooks::none(num_regions);
         hooks.kind = if self.clwb {
             FlushKind::Clwb
         } else {
             FlushKind::ClflushOpt
         };
-        hooks.iter_hook = reg
-            .by_name("it")
-            .map(|id| FlushEntry::for_object(reg.get(id), 1));
+        hooks.iter_obj = bookmark;
+        hooks.iter_hook = bookmark.map(|id| FlushEntry::for_object(reg.get(id), 1));
         for e in &self.entries {
             // Entries are name-addressed; a name shared by several
             // registered objects cannot be resolved faithfully (the
@@ -382,5 +397,16 @@ mod tests {
         let hooks = PersistPlan::none().resolve(&reg(), 2).unwrap();
         assert!(hooks.iter_hook.is_some());
         assert!(hooks.at_region_end.iter().all(|v| v.is_empty()));
+    }
+
+    #[test]
+    fn resolve_for_carries_bookmark_identity() {
+        let r = reg();
+        let hooks = PersistPlan::none().resolve_for(&r, 2, Some(2)).unwrap();
+        assert_eq!(hooks.iter_obj, Some(2));
+        assert_eq!(hooks.iter_hook.unwrap().base, r.get(2).base);
+        // No bookmark: neither hook nor identity.
+        let hooks = PersistPlan::none().resolve_for(&r, 2, None).unwrap();
+        assert!(hooks.iter_hook.is_none() && hooks.iter_obj.is_none());
     }
 }

@@ -155,7 +155,7 @@ impl Workflow {
     ) -> Result<WorkflowReport> {
         let campaign = self.campaign();
         self.run_cells(app, &mut |plan| {
-            Arc::new(campaign.run(app, plan, &mut *engine))
+            Ok(Arc::new(campaign.run(app, plan, &mut *engine)?))
         })
     }
 
@@ -178,7 +178,7 @@ impl Workflow {
             shards,
         };
         self.run_cells(app, &mut |plan| {
-            Arc::new(sharded.run_with(app, plan, make_engine))
+            Ok(Arc::new(sharded.run_with(app, plan, make_engine)?))
         })
     }
 
@@ -199,7 +199,7 @@ impl Workflow {
     pub fn run_cells(
         &self,
         app: &dyn CrashApp,
-        run_campaign: &mut dyn FnMut(&PersistPlan) -> Arc<CampaignResult>,
+        run_campaign: &mut dyn FnMut(&PersistPlan) -> Result<Arc<CampaignResult>>,
     ) -> Result<WorkflowReport> {
         let regions = app.regions();
         let num_regions = regions.len();
@@ -214,7 +214,7 @@ impl Workflow {
         let placer = self.planner.placer.instantiate();
 
         // Step 1: characterization.
-        let base = run_campaign(&PersistPlan::none());
+        let base = run_campaign(&PersistPlan::none())?;
 
         // Step 2: data-object selection.
         let selection = selector.select(&base)?;
@@ -231,7 +231,7 @@ impl Workflow {
         let best = if crit_refs.is_empty() {
             base.clone()
         } else {
-            run_campaign(&PersistPlan::at_every_region(&crit_refs, num_regions))
+            run_campaign(&PersistPlan::at_every_region(&crit_refs, num_regions))?
         };
 
         let overall_c = base.recomputability();
@@ -280,7 +280,7 @@ impl Workflow {
             );
             let mut chosen: Option<(PersistPlan, Arc<CampaignResult>)> = None;
             for cand in candidates {
-                let res = run_campaign(&cand);
+                let res = run_campaign(&cand)?;
                 let better = match &chosen {
                     None => true,
                     Some((_, cur)) => res.recomputability() > cur.recomputability(),

@@ -20,6 +20,7 @@ use easycrash::util::error::{Context, Result};
 const VALUED: &[&str] = &[
     "app", "apps", "tests", "seed", "engine", "plan", "plans", "planner", "planners", "spec",
     "ts", "tau", "mtbf", "tchk", "nvm", "out", "shards", "trials", "work", "dist",
+    "snapshot-interval",
 ];
 
 fn main() -> Result<()> {
@@ -83,7 +84,7 @@ fn probe(args: &Args) -> Result<()> {
     let app = apps::by_name(&name).expect("spec validated app names");
     let plan = runner.resolve_plan(app.as_ref(), &spec.plans[0])?;
     let t0 = Instant::now();
-    let prof = runner.profile(app.as_ref(), &plan, spec.cfg);
+    let prof = runner.profile(app.as_ref(), &plan, spec.cfg)?;
     let t_prof = t0.elapsed();
     println!(
         "{name}: ops={} ({:.1}M) footprint={} cycles={:.3e} profile_wall={:.2?} ({:.1}M ops/s)",
@@ -98,7 +99,7 @@ fn probe(args: &Args) -> Result<()> {
     // `--plan critical` the memoized cell would be a cache hit (plan
     // resolution already ran the workflow's campaigns).
     let t1 = Instant::now();
-    let res = runner.execute_cell(app.as_ref(), &plan, spec.verified);
+    let res = runner.execute_cell(app.as_ref(), &plan, spec.verified)?;
     println!(
         "campaign({tests}, shards={shards}): wall={:.2?} recomputability={} fractions={:?}",
         t1.elapsed(),
@@ -120,7 +121,7 @@ fn cmd_campaign(args: &Args) -> Result<()> {
     // a memoized hit — `wall` reports the command's actual work.
     let t0 = Instant::now();
     let plan = runner.resolve_plan(app.as_ref(), &spec.plans[0])?;
-    let res = runner.campaign(app.as_ref(), &plan, spec.verified);
+    let res = runner.campaign(app.as_ref(), &plan, spec.verified)?;
     let f = res.response_fractions();
     println!("app={name} tests={tests} shards={shards} wall={:.2?}", t0.elapsed());
     println!(

@@ -71,7 +71,7 @@ impl ReportCtx {
         app: &dyn CrashApp,
         plan: &PersistPlan,
         verified: bool,
-    ) -> Arc<CampaignResult> {
+    ) -> Result<Arc<CampaignResult>> {
         self.runner.campaign(app, plan, verified)
     }
 
@@ -82,18 +82,18 @@ impl ReportCtx {
         app: &dyn CrashApp,
         plan: &PersistPlan,
         cfg: SimConfig,
-    ) -> Arc<CampaignResult> {
+    ) -> Result<Arc<CampaignResult>> {
         self.runner.profile(app, plan, cfg)
     }
 
     /// Candidate object names of an app (excluding the iterator bookmark).
-    pub fn candidate_names(&self, app: &dyn CrashApp) -> Vec<String> {
+    pub fn candidate_names(&self, app: &dyn CrashApp) -> Result<Vec<String>> {
         self.runner.candidate_names(app)
     }
 
     /// The paper's three standard plans for an app: none / critical-at-
     /// iteration-end / all-candidates-at-iteration-end.
-    pub fn plan_all_candidates(&self, app: &dyn CrashApp) -> PersistPlan {
+    pub fn plan_all_candidates(&self, app: &dyn CrashApp) -> Result<PersistPlan> {
         self.runner.plan_all_candidates(app)
     }
 

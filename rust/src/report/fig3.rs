@@ -12,7 +12,7 @@ pub fn run(ctx: &ReportCtx) -> crate::util::error::Result<Table> {
     let mut sums = [0.0; 4];
     let apps = ctx.all_apps();
     for app in &apps {
-        let r = ctx.campaign(app.as_ref(), &PersistPlan::none(), false);
+        let r = ctx.campaign(app.as_ref(), &PersistPlan::none(), false)?;
         let f = r.response_fractions();
         for (s, x) in sums.iter_mut().zip(f) {
             *s += x;

@@ -13,11 +13,11 @@ pub fn run(ctx: &ReportCtx) -> crate::util::error::Result<(Table, Table)> {
 
     // (a) persist one object at a time at iteration end.
     let mut ta = Table::new(&["persisted object", "recomputability"]);
-    let base = ctx.campaign(app.as_ref(), &PersistPlan::none(), false);
+    let base = ctx.campaign(app.as_ref(), &PersistPlan::none(), false)?;
     ta.row(vec!["none".into(), pct(base.recomputability())]);
     for obj in ["it", "u", "r"] {
         let plan = PersistPlan::at_iter_end(&[obj], regions, 1);
-        let r = ctx.campaign(app.as_ref(), &plan, false);
+        let r = ctx.campaign(app.as_ref(), &plan, false)?;
         ta.row(vec![obj.into(), pct(r.recomputability())]);
     }
 
@@ -27,7 +27,7 @@ pub fn run(ctx: &ReportCtx) -> crate::util::error::Result<(Table, Table)> {
     let names: Vec<String> = app.regions().iter().map(|r| r.name.to_string()).collect();
     for k in 0..regions {
         let plan = PersistPlan::at_region(&["u"], k, 1);
-        let r = ctx.campaign(app.as_ref(), &plan, false);
+        let r = ctx.campaign(app.as_ref(), &plan, false)?;
         tb.row(vec![format!("R{} ({})", k + 1, names[k]), pct(r.recomputability())]);
     }
     Ok((ta, tb))

@@ -12,11 +12,11 @@ pub fn run(ctx: &ReportCtx) -> crate::util::error::Result<Table> {
     let mut t = Table::new(&["app", "no persist", "selected DOs", "all candidate DOs", "|Δ(2,3)|"]);
     let mut max_gap = 0.0f64;
     for app in ctx.eval_apps() {
-        let base = ctx.campaign(app.as_ref(), &PersistPlan::none(), false);
+        let base = ctx.campaign(app.as_ref(), &PersistPlan::none(), false)?;
         let sel_plan = ctx.plan_critical_iter_end(app.as_ref())?;
-        let sel = ctx.campaign(app.as_ref(), &sel_plan, false);
-        let all_plan = ctx.plan_all_candidates(app.as_ref());
-        let all = ctx.campaign(app.as_ref(), &all_plan, false);
+        let sel = ctx.campaign(app.as_ref(), &sel_plan, false)?;
+        let all_plan = ctx.plan_all_candidates(app.as_ref())?;
+        let all = ctx.campaign(app.as_ref(), &all_plan, false)?;
         let gap = (sel.recomputability() - all.recomputability()).abs();
         max_gap = max_gap.max(gap);
         t.row(vec![

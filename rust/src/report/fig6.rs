@@ -22,8 +22,8 @@ pub fn rows(ctx: &ReportCtx) -> crate::util::error::Result<Vec<Fig6Row>> {
     for app in ctx.eval_apps() {
         let wf = ctx.workflow(app.as_ref())?;
         let sel_plan = ctx.plan_critical_iter_end(app.as_ref())?;
-        let sel = ctx.campaign(app.as_ref(), &sel_plan, false);
-        let vfy = ctx.campaign(app.as_ref(), &PersistPlan::none(), true);
+        let sel = ctx.campaign(app.as_ref(), &sel_plan, false)?;
+        let vfy = ctx.campaign(app.as_ref(), &PersistPlan::none(), true)?;
         out.push(Fig6Row {
             app: app.name().to_string(),
             base: wf.base.recomputability(),

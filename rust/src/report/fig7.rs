@@ -23,13 +23,13 @@ pub fn run(ctx: &ReportCtx, profiles: &[NvmProfile]) -> crate::util::error::Resu
     let mut per_profile_all: Vec<Vec<f64>> = vec![Vec::new(); profiles.len()];
     for app in ctx.eval_apps() {
         let wf = ctx.workflow(app.as_ref())?;
-        let all_plan = ctx.plan_all_candidates(app.as_ref());
+        let all_plan = ctx.plan_all_candidates(app.as_ref())?;
         let mut row = vec![app.name().to_string()];
         for (i, p) in profiles.iter().enumerate() {
             let cfg = ctx.cfg.with_nvm(*p);
-            let base = ctx.profile(app.as_ref(), &PersistPlan::none(), cfg);
-            let ec = ctx.profile(app.as_ref(), &wf.plan, cfg);
-            let all = ctx.profile(app.as_ref(), &all_plan, cfg);
+            let base = ctx.profile(app.as_ref(), &PersistPlan::none(), cfg)?;
+            let ec = ctx.profile(app.as_ref(), &wf.plan, cfg)?;
+            let all = ctx.profile(app.as_ref(), &all_plan, cfg)?;
             let (ne, na) = (ec.cycles / base.cycles, all.cycles / base.cycles);
             per_profile_ec[i].push(ne);
             per_profile_all[i].push(na);

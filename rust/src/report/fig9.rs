@@ -64,13 +64,13 @@ pub fn run(ctx: &ReportCtx) -> crate::util::error::Result<Table> {
     let (mut ecs, mut crits, mut alls) = (Vec::new(), Vec::new(), Vec::new());
     for app in ctx.eval_apps() {
         let wf = ctx.workflow(app.as_ref())?;
-        let base = ctx.profile(app.as_ref(), &PersistPlan::none(), ctx.cfg);
+        let base = ctx.profile(app.as_ref(), &PersistPlan::none(), ctx.cfg)?;
         let w0 = base.stats.nvm_writes().max(1);
-        let ec = ctx.profile(app.as_ref(), &wf.plan, ctx.cfg);
+        let ec = ctx.profile(app.as_ref(), &wf.plan, ctx.cfg)?;
         let ec_extra = ec.stats.nvm_writes().saturating_sub(w0) as f64 / w0 as f64;
 
         let crit_names: Vec<String> = wf.critical.clone();
-        let all_names: Vec<String> = ctx.candidate_names(app.as_ref());
+        let all_names: Vec<String> = ctx.candidate_names(app.as_ref())?;
         let (b1, w1) = checkpoint_writes(ctx, app.as_ref(), &crit_names);
         let (b2, w2) = checkpoint_writes(ctx, app.as_ref(), &all_names);
         let cr_crit = (w1 - b1) as f64 / b1.max(1) as f64;

@@ -187,10 +187,15 @@ fn print_help() {
 
 USAGE: easycrash <command> [--tests N] [--seed S] [--engine native|pjrt]
                  [--shards N] [--ts F] [--tau F] [--planner SEL[+PLACER]]
-                 [--paper-scale] [--verbose]
+                 [--snapshot-interval N] [--paper-scale] [--verbose]
 
 --shards N runs every crash campaign across N worker threads; results are
 bit-identical to --shards 1 under the same seed (native engine only).
+
+--snapshot-interval N records an environment snapshot every N instrumented
+ops during the campaign's profile pass; crash harvesting then resumes each
+batch from the nearest preceding snapshot instead of replaying from op 0.
+Results stay bit-identical to scratch replay (0 or omitted disables).
 
 plans are written in the plan DSL: `none`, `all` (all candidate objects at
 iteration end), `critical` (workflow-selected objects at iteration end), or

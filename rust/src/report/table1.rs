@@ -18,7 +18,7 @@ pub fn run(ctx: &ReportCtx) -> crate::util::error::Result<Table> {
         "#iters",
     ]);
     for app in ctx.all_apps() {
-        let base = ctx.campaign(app.as_ref(), &PersistPlan::none(), false);
+        let base = ctx.campaign(app.as_ref(), &PersistPlan::none(), false)?;
         let loads = base.stats.loads.max(1);
         let stores = base.stats.stores.max(1);
         let ratio = if loads >= stores {

@@ -22,11 +22,11 @@ pub struct T4Row {
 pub fn rows(ctx: &ReportCtx) -> crate::util::error::Result<Vec<T4Row>> {
     let mut out = Vec::new();
     for app in ctx.eval_apps() {
-        let base = ctx.profile(app.as_ref(), &PersistPlan::none(), ctx.cfg);
+        let base = ctx.profile(app.as_ref(), &PersistPlan::none(), ctx.cfg)?;
         let wf = ctx.workflow(app.as_ref())?;
-        let ec = ctx.profile(app.as_ref(), &wf.plan, ctx.cfg);
-        let all = ctx.profile(app.as_ref(), &ctx.plan_all_candidates(app.as_ref()), ctx.cfg);
-        let best = ctx.profile(app.as_ref(), &ctx.plan_best(app.as_ref())?, ctx.cfg);
+        let ec = ctx.profile(app.as_ref(), &wf.plan, ctx.cfg)?;
+        let all = ctx.profile(app.as_ref(), &ctx.plan_all_candidates(app.as_ref())?, ctx.cfg)?;
+        let best = ctx.profile(app.as_ref(), &ctx.plan_best(app.as_ref())?, ctx.cfg)?;
         let persist_once = if ec.persist_ops > 0 {
             ec.persist_cycles / ec.persist_ops as f64 / 2.6e9
         } else {

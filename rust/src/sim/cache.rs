@@ -3,6 +3,8 @@
 //! architectural image, see [`crate::sim::memory`]).
 
 use super::config::CacheGeom;
+use super::snapshot::{put_bool, put_u64, put_u8, put_usize, Reader};
+use crate::util::error::Result;
 
 const INVALID: u64 = u64::MAX;
 
@@ -194,6 +196,57 @@ impl Cache {
 
     pub fn sets(&self) -> usize {
         self.sets
+    }
+
+    /// Serialize the full metadata state (snapshot binary format).
+    pub(crate) fn encode(&self, out: &mut Vec<u8>) {
+        put_usize(out, self.sets);
+        put_usize(out, self.ways);
+        for &t in &self.tags {
+            put_u64(out, t);
+        }
+        for &d in &self.dirty {
+            put_bool(out, d);
+        }
+        for &l in &self.lru {
+            put_u8(out, l);
+        }
+    }
+
+    /// Inverse of [`Cache::encode`].
+    pub(crate) fn decode(r: &mut Reader) -> Result<Cache> {
+        let sets = r.usize()?;
+        let ways = r.usize()?;
+        crate::ensure!(
+            sets.is_power_of_two() && ways >= 1 && ways <= u8::MAX as usize,
+            "snapshot decode: bad cache geometry {sets} sets x {ways} ways"
+        );
+        let n = sets * ways;
+        let mut tags = Vec::with_capacity(n);
+        for _ in 0..n {
+            tags.push(r.u64()?);
+        }
+        let mut dirty = Vec::with_capacity(n);
+        for _ in 0..n {
+            dirty.push(r.bool()?);
+        }
+        let mut lru = Vec::with_capacity(n);
+        for _ in 0..n {
+            let rank = r.u8()?;
+            crate::ensure!(
+                (rank as usize) < ways,
+                "snapshot decode: LRU rank {rank} out of range for {ways} ways"
+            );
+            lru.push(rank);
+        }
+        Ok(Cache {
+            sets,
+            ways,
+            set_mask: (sets - 1) as u64,
+            tags,
+            dirty,
+            lru,
+        })
     }
 }
 

@@ -116,6 +116,13 @@ pub struct SimConfig {
     pub l2: CacheGeom,
     pub l3: CacheGeom,
     pub nvm: NvmProfile,
+    /// Snapshot-tape recording interval for crash campaigns: record an
+    /// [`crate::sim::snapshot::EnvSnapshot`] at the first iteration
+    /// boundary after every `K` instrumented ops, so a harvest pass can
+    /// restore the nearest preceding snapshot instead of replaying from
+    /// op 0 (DESIGN.md §Perf "Snapshots"). `None` disables recording
+    /// (scratch replay, the historical behavior).
+    pub snapshot_every: Option<u64>,
 }
 
 impl SimConfig {
@@ -129,6 +136,7 @@ impl SimConfig {
             l2: CacheGeom::new(64 * 1024, 8),
             l3: CacheGeom::new(256 * 1024, 16),
             nvm: NvmProfile::DRAM,
+            snapshot_every: None,
         }
     }
 
@@ -141,11 +149,18 @@ impl SimConfig {
             l2: CacheGeom::new(1024 * 1024, 16),
             l3: CacheGeom::new(16 * 1024 * 1024, 16),
             nvm: NvmProfile::DRAM,
+            snapshot_every: None,
         }
     }
 
     pub fn with_nvm(mut self, nvm: NvmProfile) -> SimConfig {
         self.nvm = nvm;
+        self
+    }
+
+    /// Set the snapshot-tape recording interval (`None` = off).
+    pub fn with_snapshot_every(mut self, every: Option<u64>) -> SimConfig {
+        self.snapshot_every = every;
         self
     }
 }

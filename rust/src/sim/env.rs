@@ -17,6 +17,7 @@
 use super::hierarchy::{FlushKind, Hierarchy};
 use super::memory::Memory;
 use super::objects::{ObjId, ObjSpec, Registry, Ty};
+use super::snapshot::{EnvSnapshot, SnapshotTape, MAX_SNAPSHOTS};
 use super::timing::Clock;
 use super::SimConfig;
 
@@ -163,6 +164,12 @@ pub struct FlushHooks {
     /// The loop-iterator bookmark object, flushed at every iteration end
     /// (`every_x` is ignored — the bookmark persists unconditionally).
     pub iter_hook: Option<FlushEntry>,
+    /// Identity of the bookmark object `iter_hook` persists. Carried
+    /// alongside the resolved entry so downstream consumers (candidate
+    /// exclusion in campaign results) identify the bookmark by `ObjId`
+    /// rather than re-looking it up by name — a name lookup silently picks
+    /// the first match when an app object happens to share the name.
+    pub iter_obj: Option<ObjId>,
     pub kind: FlushKind,
 }
 
@@ -171,6 +178,7 @@ impl FlushHooks {
         FlushHooks {
             at_region_end: vec![Vec::new(); num_regions],
             iter_hook: None,
+            iter_obj: None,
             kind: FlushKind::ClflushOpt,
         }
     }
@@ -340,6 +348,15 @@ pub struct SimEnv<'a> {
     /// drawn within the main loop only, per §3 "code regions where crashes
     /// can happen").
     main_start: Option<u64>,
+    /// Snapshot-tape recording interval in ops (`None` = off). Enabled by
+    /// [`SimEnv::record_snapshots`] on the campaign's profile run only —
+    /// harvest replays must never re-record.
+    snap_every: Option<u64>,
+    /// Op index of the most recent tape capture.
+    snap_last_ops: u64,
+    /// Snapshots recorded at iteration boundaries during this run
+    /// (extracted with [`SimEnv::take_tape`]).
+    tape: SnapshotTape,
 }
 
 impl<'a> SimEnv<'a> {
@@ -363,7 +380,68 @@ impl<'a> SimEnv<'a> {
             persist_ops: 0,
             persist_cycles: 0.0,
             main_start: None,
+            snap_every: None,
+            snap_last_ops: 0,
+            tape: SnapshotTape::new(),
         }
+    }
+
+    /// Enable snapshot-tape recording: capture an [`EnvSnapshot`] at the
+    /// first iteration boundary after every `every` instrumented ops (the
+    /// tape is bounded by [`MAX_SNAPSHOTS`]; recording stops silently once
+    /// full). Campaigns enable this on the profile run only.
+    pub fn record_snapshots(&mut self, every: u64) {
+        self.snap_every = Some(every.max(1));
+    }
+
+    /// Extract the recorded snapshot tape, leaving an empty one behind.
+    pub fn take_tape(&mut self) -> SnapshotTape {
+        std::mem::take(&mut self.tape)
+    }
+
+    /// Capture the complete replay-relevant state of this env. Pure
+    /// observation: the pending cycle accumulator is captured as-is (not
+    /// drained), so taking a snapshot never perturbs the donor run's f64
+    /// accumulation order. Crash points, the observer borrow, `halt_at`,
+    /// the resolved hooks, and the tape itself are campaign configuration,
+    /// not program state — they are not captured (see `sim::snapshot`).
+    pub fn snapshot(&self) -> EnvSnapshot {
+        EnvSnapshot {
+            mem: self.mem.clone(),
+            hier: self.hier.clone(),
+            reg: self.reg.clone(),
+            clock: self.clock.clone(),
+            acc: self.acc,
+            num_regions: self.num_regions,
+            cur_region: self.cur_region,
+            cur_iter: self.cur_iter,
+            ops: self.ops,
+            persist_ops: self.persist_ops,
+            persist_cycles: self.persist_cycles,
+            main_start: self.main_start,
+        }
+    }
+
+    /// Overwrite this env's program state with a snapshot's. Replaying the
+    /// ops that followed the capture then reproduces the original run
+    /// bit-for-bit. Hooks, crash points, observer, and `halt_at` are left
+    /// untouched: install them (per harvest segment) after restoring.
+    pub fn restore(&mut self, snap: &EnvSnapshot) {
+        assert_eq!(
+            snap.num_regions, self.num_regions,
+            "snapshot restored into an env with a different region count"
+        );
+        self.mem = snap.mem.clone();
+        self.hier = snap.hier.clone();
+        self.reg = snap.reg.clone();
+        self.clock = snap.clock.clone();
+        self.acc = snap.acc;
+        self.cur_region = snap.cur_region;
+        self.cur_iter = snap.cur_iter;
+        self.ops = snap.ops;
+        self.persist_ops = snap.persist_ops;
+        self.persist_cycles = snap.persist_cycles;
+        self.main_start = snap.main_start;
     }
 
     /// Record that initialization finished and the main loop begins now.
@@ -670,6 +748,17 @@ impl<'a> Env for SimEnv<'a> {
         }
         self.cur_iter += 1;
         self.cur_region = self.num_regions;
+        // Tape recording (campaign profile runs only): capture at the
+        // iteration boundary once `snap_every` ops have passed since the
+        // last capture. Boundaries are the only resumable points — `step`
+        // is opaque, so a restored run re-enters at `cur_iter`.
+        if let Some(every) = self.snap_every {
+            if self.ops - self.snap_last_ops >= every && self.tape.len() < MAX_SNAPSHOTS {
+                let snap = self.snapshot();
+                self.snap_last_ops = self.ops;
+                self.tape.push(snap);
+            }
+        }
         Ok(())
     }
 

@@ -9,8 +9,10 @@
 use super::cache::Cache;
 use super::config::SimConfig;
 use super::memory::Memory;
+use super::snapshot::{put_bool, put_f64, put_u64, Reader};
 use super::timing::Costs;
 use super::LINE_SHIFT;
+use crate::util::error::Result;
 
 /// Cache-flush instruction flavor (§2.1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -54,6 +56,7 @@ impl HierStats {
 const MEMO_NONE: u64 = u64::MAX;
 
 /// The cache hierarchy.
+#[derive(Clone)]
 pub struct Hierarchy {
     l1: Cache,
     l2: Cache,
@@ -289,6 +292,75 @@ impl Hierarchy {
         }
     }
 
+    /// Serialize the complete hierarchy state — all three levels' metadata,
+    /// modeled costs, event counters, and the last-line memo (snapshot
+    /// binary format).
+    pub(crate) fn encode(&self, out: &mut Vec<u8>) {
+        self.l1.encode(out);
+        self.l2.encode(out);
+        self.l3.encode(out);
+        for c in [
+            self.costs.cpu_op,
+            self.costs.l1_hit,
+            self.costs.l2_hit,
+            self.costs.l3_hit,
+            self.costs.mem_read,
+            self.costs.mem_write,
+            self.costs.flush_clean,
+            self.costs.flush_dirty,
+        ] {
+            put_f64(out, c);
+        }
+        for s in [
+            self.stats.loads,
+            self.stats.stores,
+            self.stats.l1_hits,
+            self.stats.l2_hits,
+            self.stats.l3_hits,
+            self.stats.mem_reads,
+            self.stats.nvm_writes_evict,
+            self.stats.nvm_writes_flush,
+            self.stats.flushes_dirty,
+            self.stats.flushes_clean,
+        ] {
+            put_u64(out, s);
+        }
+        put_u64(out, self.last_line);
+        put_bool(out, self.last_dirty);
+    }
+
+    /// Inverse of [`Hierarchy::encode`].
+    pub(crate) fn decode(r: &mut Reader) -> Result<Hierarchy> {
+        let l1 = Cache::decode(r)?;
+        let l2 = Cache::decode(r)?;
+        let l3 = Cache::decode(r)?;
+        let costs = Costs {
+            cpu_op: r.f64()?,
+            l1_hit: r.f64()?,
+            l2_hit: r.f64()?,
+            l3_hit: r.f64()?,
+            mem_read: r.f64()?,
+            mem_write: r.f64()?,
+            flush_clean: r.f64()?,
+            flush_dirty: r.f64()?,
+        };
+        let stats = HierStats {
+            loads: r.u64()?,
+            stores: r.u64()?,
+            l1_hits: r.u64()?,
+            l2_hits: r.u64()?,
+            l3_hits: r.u64()?,
+            mem_reads: r.u64()?,
+            nvm_writes_evict: r.u64()?,
+            nvm_writes_flush: r.u64()?,
+            flushes_dirty: r.u64()?,
+            flushes_clean: r.u64()?,
+        };
+        let last_line = r.u64()?;
+        let last_dirty = r.bool()?;
+        Ok(Hierarchy { l1, l2, l3, costs, stats, last_line, last_dirty })
+    }
+
     /// Dirty bytes per object range `[base, base+len)`: the numerator of
     /// the paper's data inconsistent rate. Exact because divergence only
     /// exists on dirty lines.
@@ -319,6 +391,7 @@ mod tests {
             l2: CacheGeom::new(8 * 64, 2),  // 4 sets x 2 ways
             l3: CacheGeom::new(16 * 64, 4), // 4 sets x 4 ways
             nvm: NvmProfile::DRAM,
+            snapshot_every: None,
         }
     }
 

@@ -35,6 +35,7 @@ pub mod env;
 pub mod hierarchy;
 pub mod memory;
 pub mod objects;
+pub mod snapshot;
 pub mod timing;
 
 pub use config::{CacheGeom, NvmProfile, SimConfig};
@@ -44,6 +45,7 @@ pub use env::{
 pub use hierarchy::{FlushKind, HierStats, Hierarchy};
 pub use memory::Memory;
 pub use objects::{ObjId, ObjSpec, Registry, Ty};
+pub use snapshot::{EnvSnapshot, LayoutEnv, LayoutProbe, SnapshotTape};
 
 /// Cache line size in bytes (fixed, like the paper's 64 B lines).
 pub const LINE: usize = 64;

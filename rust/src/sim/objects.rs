@@ -7,7 +7,9 @@
 //! distinct objects never share a cache line — matching the paper's
 //! object-granularity accounting.
 
+use super::snapshot::{put_bool, put_str, put_u8, put_usize, Reader};
 use super::LINE;
+use crate::util::error::Result;
 
 /// Element type of a data object.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -132,6 +134,48 @@ impl Registry {
             .filter(|o| o.spec.candidate)
             .map(|o| o.spec.bytes())
             .sum()
+    }
+
+    /// Serialize the registry — every object's spec + base, and the bump
+    /// cursor (snapshot binary format).
+    pub(crate) fn encode(&self, out: &mut Vec<u8>) {
+        put_usize(out, self.objects.len());
+        for o in &self.objects {
+            put_str(out, o.spec.name);
+            put_u8(out, match o.spec.ty {
+                Ty::F64 => 0,
+                Ty::F32 => 1,
+                Ty::I64 => 2,
+            });
+            put_usize(out, o.spec.len);
+            put_bool(out, o.spec.candidate);
+            put_usize(out, o.base);
+        }
+        put_usize(out, self.cursor);
+    }
+
+    /// Inverse of [`Registry::encode`]. Object names are interned with
+    /// `Box::leak` to satisfy the `&'static str` spec field — snapshots
+    /// are decoded a handful of times per process (tooling / replay), so
+    /// the few bytes per name are a non-issue.
+    pub(crate) fn decode(r: &mut Reader) -> Result<Registry> {
+        let n = r.usize()?;
+        let mut objects = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name: &'static str = Box::leak(r.str()?.into_boxed_str());
+            let ty = match r.u8()? {
+                0 => Ty::F64,
+                1 => Ty::F32,
+                2 => Ty::I64,
+                t => crate::bail!("snapshot decode: unknown object type tag {t}"),
+            };
+            let len = r.usize()?;
+            let candidate = r.bool()?;
+            let base = r.usize()?;
+            objects.push(Object { spec: ObjSpec { name, ty, len, candidate }, base });
+        }
+        let cursor = r.usize()?;
+        Ok(Registry { objects, cursor })
     }
 
     /// Map a byte address to the object containing it (objects are sorted

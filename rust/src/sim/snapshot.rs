@@ -1,0 +1,624 @@
+//! Snapshot/restore of the instrumented environment (DESIGN.md §Perf
+//! "Snapshots").
+//!
+//! An [`EnvSnapshot`] captures the complete replay-relevant state of a
+//! [`SimEnv`](super::SimEnv): both memory images (architectural + NVM),
+//! the object registry with its bump-allocator cursor, the full cache
+//! hierarchy (tags, dirty bits, LRU ranks, the last-line memo and its
+//! dirtiness), the per-region clock plus the pending access-cycle
+//! accumulator, the modeled costs, and the op/iteration/region counters.
+//! Restoring a snapshot and replaying the remaining ops reproduces the
+//! original run *bit-for-bit* — cycles are f64 prefix sums restored
+//! exactly, and the replayed suffix repeats the identical add sequence —
+//! which is what lets a crash campaign service a sorted crash-point batch
+//! from the nearest preceding snapshot instead of replaying from op 0.
+//!
+//! Crash-point state (`crash_points`, the observer borrow, `halt_at`) and
+//! the resolved flush hooks are deliberately *not* part of a snapshot:
+//! they are harvest-pass configuration, installed per restore, not
+//! program state. Observer bookkeeping lives outside the env entirely
+//! (owned by the caller), so restore never perturbs it.
+//!
+//! Snapshots are serializable via [`EnvSnapshot::encode`] /
+//! [`EnvSnapshot::decode`] — a versioned little-endian binary layout that
+//! composes the per-component encoders in `cache.rs` / `hierarchy.rs` /
+//! `objects.rs` / `timing.rs`.
+//!
+//! The module also provides [`LayoutEnv`], the zero-instrumentation
+//! environment used to (a) learn an app's registry layout and bookmark
+//! identity without an instrumented probe run and (b) rebuild the app's
+//! opaque handle state when resuming a restored env mid-run (see
+//! `CrashApp::run_sim_from`).
+
+use super::env::{Buf, Env, Signal};
+use super::hierarchy::Hierarchy;
+use super::memory::Memory;
+use super::objects::{ObjId, ObjSpec, Registry};
+use super::timing::Clock;
+use crate::util::error::Result;
+
+/// Hard cap on recorded snapshots per tape: a runaway interval cannot
+/// exhaust memory; recording simply stops once the tape is full (restores
+/// from a truncated tape remain correct — later crash points just replay
+/// from the last recorded snapshot).
+pub const MAX_SNAPSHOTS: usize = 4096;
+
+/// Serialization format version (bumped on any layout change).
+const SNAP_VERSION: u16 = 1;
+/// Format magic: "ECSN" (EasyCrash SNapshot).
+const SNAP_MAGIC: [u8; 4] = *b"ECSN";
+
+// ---------------------------------------------------------------------------
+// Little-endian byte IO shared by the per-component encoders
+// ---------------------------------------------------------------------------
+
+pub(crate) fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+pub(crate) fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_usize(out: &mut Vec<u8>, v: usize) {
+    put_u64(out, v as u64);
+}
+
+pub(crate) fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+pub(crate) fn put_bool(out: &mut Vec<u8>, v: bool) {
+    out.push(v as u8);
+}
+
+pub(crate) fn put_bytes(out: &mut Vec<u8>, v: &[u8]) {
+    put_usize(out, v.len());
+    out.extend_from_slice(v);
+}
+
+pub(crate) fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_bytes(out, s.as_bytes());
+}
+
+/// Bounds-checked decoder over an encoded snapshot.
+pub(crate) struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            crate::bail!(
+                "snapshot decode: truncated input (need {} bytes at offset {}, have {})",
+                n,
+                self.pos,
+                self.buf.len() - self.pos
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub(crate) fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub(crate) fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8-byte slice")))
+    }
+
+    pub(crate) fn usize(&mut self) -> Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+
+    pub(crate) fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub(crate) fn bool(&mut self) -> Result<bool> {
+        Ok(self.u8()? != 0)
+    }
+
+    pub(crate) fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.usize()?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub(crate) fn str(&mut self) -> Result<String> {
+        let b = self.bytes()?;
+        String::from_utf8(b).map_err(|e| crate::util::error::Error::msg(format!(
+            "snapshot decode: invalid utf-8 string: {e}"
+        )))
+    }
+
+    fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            crate::bail!(
+                "snapshot decode: {} trailing bytes after payload",
+                self.buf.len() - self.pos
+            );
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// EnvSnapshot
+// ---------------------------------------------------------------------------
+
+/// Complete replay-relevant state of a `SimEnv` at one instant. Created by
+/// [`SimEnv::snapshot`](super::SimEnv::snapshot), consumed by
+/// [`SimEnv::restore`](super::SimEnv::restore).
+#[derive(Clone)]
+pub struct EnvSnapshot {
+    pub(crate) mem: Memory,
+    pub(crate) hier: Hierarchy,
+    pub(crate) reg: Registry,
+    pub(crate) clock: Clock,
+    /// Pending access cycles not yet drained into the clock. Captured
+    /// as-is (not drained) so taking a snapshot never perturbs the
+    /// donor env's later f64 accumulation order.
+    pub(crate) acc: f64,
+    pub(crate) num_regions: usize,
+    pub(crate) cur_region: usize,
+    pub(crate) cur_iter: u64,
+    pub(crate) ops: u64,
+    pub(crate) persist_ops: u64,
+    pub(crate) persist_cycles: f64,
+    pub(crate) main_start: Option<u64>,
+}
+
+impl EnvSnapshot {
+    /// Op index at capture time.
+    pub fn ops(&self) -> u64 {
+        self.ops
+    }
+
+    /// Main-loop iteration at capture time. Snapshots are recorded at
+    /// iteration boundaries (after `iter_end` bumped the counter), so a
+    /// resumed replay starts at exactly this iteration.
+    pub fn iter(&self) -> u64 {
+        self.cur_iter
+    }
+
+    /// Serialize to the versioned binary format.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&SNAP_MAGIC);
+        out.extend_from_slice(&SNAP_VERSION.to_le_bytes());
+        put_bytes(&mut out, &self.mem.arch);
+        put_bytes(&mut out, &self.mem.nvm);
+        self.hier.encode(&mut out);
+        self.reg.encode(&mut out);
+        self.clock.encode(&mut out);
+        put_f64(&mut out, self.acc);
+        put_usize(&mut out, self.num_regions);
+        put_usize(&mut out, self.cur_region);
+        put_u64(&mut out, self.cur_iter);
+        put_u64(&mut out, self.ops);
+        put_u64(&mut out, self.persist_ops);
+        put_f64(&mut out, self.persist_cycles);
+        put_bool(&mut out, self.main_start.is_some());
+        put_u64(&mut out, self.main_start.unwrap_or(0));
+        out
+    }
+
+    /// Deserialize from [`EnvSnapshot::encode`]'s format.
+    pub fn decode(bytes: &[u8]) -> Result<EnvSnapshot> {
+        let mut r = Reader::new(bytes);
+        let magic = r.take(4)?;
+        if magic != SNAP_MAGIC {
+            crate::bail!("snapshot decode: bad magic {magic:?} (expected {SNAP_MAGIC:?})");
+        }
+        let ver = u16::from_le_bytes(r.take(2)?.try_into().expect("2-byte slice"));
+        if ver != SNAP_VERSION {
+            crate::bail!("snapshot decode: unsupported version {ver} (expected {SNAP_VERSION})");
+        }
+        let arch = r.bytes()?;
+        let nvm = r.bytes()?;
+        if arch.len() != nvm.len() {
+            crate::bail!(
+                "snapshot decode: image length mismatch (arch {} vs nvm {})",
+                arch.len(),
+                nvm.len()
+            );
+        }
+        let hier = Hierarchy::decode(&mut r)?;
+        let reg = Registry::decode(&mut r)?;
+        let clock = Clock::decode(&mut r)?;
+        let acc = r.f64()?;
+        let num_regions = r.usize()?;
+        let cur_region = r.usize()?;
+        let cur_iter = r.u64()?;
+        let ops = r.u64()?;
+        let persist_ops = r.u64()?;
+        let persist_cycles = r.f64()?;
+        let has_main_start = r.bool()?;
+        let main_start_val = r.u64()?;
+        let main_start = has_main_start.then_some(main_start_val);
+        r.finish()?;
+        let snap = EnvSnapshot {
+            mem: Memory { arch, nvm },
+            hier,
+            reg,
+            clock,
+            acc,
+            num_regions,
+            cur_region,
+            cur_iter,
+            ops,
+            persist_ops,
+            persist_cycles,
+            main_start,
+        };
+        Ok(snap)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SnapshotTape
+// ---------------------------------------------------------------------------
+
+/// The ordered sequence of snapshots recorded by one forward run
+/// (ascending `ops`). Produced by the campaign's profile pass
+/// ([`SimEnv::take_tape`](super::SimEnv::take_tape)), shared read-only
+/// across harvest workers.
+#[derive(Default)]
+pub struct SnapshotTape {
+    snaps: Vec<EnvSnapshot>,
+}
+
+impl SnapshotTape {
+    pub fn new() -> SnapshotTape {
+        SnapshotTape::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.snaps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.snaps.is_empty()
+    }
+
+    pub fn get(&self, i: usize) -> &EnvSnapshot {
+        &self.snaps[i]
+    }
+
+    pub(crate) fn push(&mut self, snap: EnvSnapshot) {
+        debug_assert!(
+            self.snaps.last().map_or(true, |s| s.ops < snap.ops),
+            "tape snapshots must be recorded in ascending op order"
+        );
+        self.snaps.push(snap);
+    }
+
+    /// Index of the latest snapshot taken *strictly before* op `op`, if
+    /// any. Strict: restoring a snapshot taken exactly at `op` would skip
+    /// the crash drawn there (the op counter ticks before the crash
+    /// compare), so only earlier snapshots are valid restore points.
+    pub fn index_before(&self, op: u64) -> Option<usize> {
+        self.snaps.partition_point(|s| s.ops < op).checked_sub(1)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LayoutEnv — uninstrumented layout/handle probe
+// ---------------------------------------------------------------------------
+
+/// Result of probing an app's build phase on a [`LayoutEnv`]: the full
+/// registry layout plus the identity of the loop-iterator bookmark.
+pub struct LayoutProbe {
+    pub reg: Registry,
+    /// The object `AppCore::iter_buf` designates as the persisted
+    /// loop-iterator bookmark — resolved by *identity* (the handle the
+    /// app itself returned), never by the literal name `"it"`, so an app
+    /// object that merely shares the name is not mistaken for it.
+    pub iter_obj: Option<ObjId>,
+}
+
+/// Zero-instrumentation environment sharing [`SimEnv`](super::SimEnv)'s
+/// address-space layout: `alloc` runs the same 64 B-aligned
+/// [`Registry`] bump allocator, so the `Buf` handles it mints (ids *and*
+/// byte-address bases) are exactly the ones an instrumented run would
+/// produce. Data accesses hit a plain byte arena — no caches, no clock,
+/// no op counter — which makes a full `build` probe cheaper than even a
+/// one-op halted `SimEnv` probe.
+///
+/// Two uses:
+/// * layout/bookmark probing (`CrashApp::probe_layout`);
+/// * rebuilding an app's opaque handle state when resuming a restored
+///   env mid-run (`CrashApp::run_sim_from`): `build` re-runs here (its
+///   writes land in this throwaway arena, not the restored images) and
+///   the returned state's handles are valid for the restored `SimEnv`
+///   because the layouts coincide.
+pub struct LayoutEnv {
+    pub reg: Registry,
+    mem: Memory,
+}
+
+impl LayoutEnv {
+    pub fn new() -> LayoutEnv {
+        LayoutEnv {
+            reg: Registry::new(),
+            mem: Memory::new(0),
+        }
+    }
+}
+
+impl Default for LayoutEnv {
+    fn default() -> LayoutEnv {
+        LayoutEnv::new()
+    }
+}
+
+impl Env for LayoutEnv {
+    fn alloc(&mut self, spec: ObjSpec) -> Buf {
+        // Mirrors SimEnv::alloc exactly (same registry, same growth rule)
+        // so bases and ids coincide with an instrumented run's.
+        let len = spec.len as u32;
+        let ty = spec.ty;
+        let bytes = spec.bytes();
+        let id = self.reg.register(spec);
+        let base = self.reg.get(id).base;
+        let need = self.reg.footprint().max(base + bytes);
+        let need = (need + super::LINE - 1) & !(super::LINE - 1);
+        if need > self.mem.len() {
+            self.mem.arch.resize(need, 0);
+            self.mem.nvm.resize(need, 0);
+        }
+        Buf { id, len, ty, base }
+    }
+
+    #[inline]
+    fn ld(&mut self, b: Buf, i: usize) -> Result<f64, Signal> {
+        if i >= b.len as usize {
+            return Err(Signal::Interrupt);
+        }
+        Ok(self.mem.ld_f64(b.base + i * 8))
+    }
+
+    #[inline]
+    fn st(&mut self, b: Buf, i: usize, v: f64) -> Result<(), Signal> {
+        if i >= b.len as usize {
+            return Err(Signal::Interrupt);
+        }
+        self.mem.st_f64(b.base + i * 8, v);
+        Ok(())
+    }
+
+    #[inline]
+    fn ldf(&mut self, b: Buf, i: usize) -> Result<f32, Signal> {
+        if i >= b.len as usize {
+            return Err(Signal::Interrupt);
+        }
+        Ok(self.mem.ld_f32(b.base + i * 4))
+    }
+
+    #[inline]
+    fn stf(&mut self, b: Buf, i: usize, v: f32) -> Result<(), Signal> {
+        if i >= b.len as usize {
+            return Err(Signal::Interrupt);
+        }
+        self.mem.st_f32(b.base + i * 4, v);
+        Ok(())
+    }
+
+    #[inline]
+    fn ldi(&mut self, b: Buf, i: usize) -> Result<i64, Signal> {
+        if i >= b.len as usize {
+            return Err(Signal::Interrupt);
+        }
+        Ok(self.mem.ld_i64(b.base + i * 8))
+    }
+
+    #[inline]
+    fn sti(&mut self, b: Buf, i: usize, v: i64) -> Result<(), Signal> {
+        if i >= b.len as usize {
+            return Err(Signal::Interrupt);
+        }
+        self.mem.st_i64(b.base + i * 8, v);
+        Ok(())
+    }
+
+    fn region(&mut self, _k: usize) -> Result<(), Signal> {
+        Ok(())
+    }
+
+    fn iter_end(&mut self, _it: u64) -> Result<(), Signal> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{SimConfig, SimEnv};
+
+    /// A small driver exercised identically on two envs (generic over Env).
+    fn drive<E: Env>(env: &mut E) -> (Buf, Buf, Buf) {
+        let x = env.alloc(ObjSpec::f64("x", 96, true));
+        let y = env.alloc(ObjSpec::f32("y", 33, false));
+        let z = env.alloc(ObjSpec::i64("z", 7, true));
+        for i in 0..96 {
+            env.st(x, i, i as f64 * 0.5).unwrap();
+        }
+        for i in 0..33 {
+            env.stf(y, i, i as f32).unwrap();
+        }
+        env.sti(z, 0, 41).unwrap();
+        (x, y, z)
+    }
+
+    #[test]
+    fn layout_env_matches_sim_env_layout() {
+        let cfg = SimConfig::mini();
+        let mut sim = SimEnv::new(&cfg, 1);
+        let mut lay = LayoutEnv::new();
+        let (sx, sy, sz) = drive(&mut sim);
+        let (lx, ly, lz) = drive(&mut lay);
+        assert_eq!((sx, sy, sz), (lx, ly, lz), "identical Buf handles");
+        assert_eq!(sim.reg.footprint(), lay.reg.footprint());
+        // Data written through LayoutEnv reads back (build probes depend
+        // on this: apps may read their own initialization).
+        assert_eq!(lay.ld(lx, 10).unwrap(), 5.0);
+        assert_eq!(lay.ldi(lz, 0).unwrap(), 41);
+        assert_eq!(lay.ld(lx, 96).unwrap_err(), Signal::Interrupt);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_through_encode_decode() {
+        let cfg = SimConfig::mini();
+        let mut env = SimEnv::new(&cfg, 2);
+        let x = env.alloc(ObjSpec::f64("x", 128, true));
+        let it = env.alloc(ObjSpec::i64("it", 1, true));
+        env.mark_main_start();
+        for i in 0..128 {
+            env.st(x, i, (i as f64).sin()).unwrap();
+        }
+        env.region(0).unwrap();
+        for i in 0..64 {
+            let v = env.ld(x, i).unwrap();
+            env.st(x, 127 - i, v * 1.5).unwrap();
+        }
+        env.sti(it, 0, 1).unwrap();
+        env.iter_end(0).unwrap();
+        let snap = env.snapshot();
+        let bytes = snap.encode();
+        let back = EnvSnapshot::decode(&bytes).expect("decode must succeed");
+        // Re-encoding the decoded snapshot must reproduce the exact bytes:
+        // every field (incl. private cache/registry internals and f64
+        // bit patterns) survived the round trip.
+        assert_eq!(back.encode(), bytes, "encode∘decode must be identity");
+        assert_eq!(back.ops(), snap.ops());
+        assert_eq!(back.iter(), snap.iter());
+        // Corrupt inputs report typed errors, not panics.
+        assert!(EnvSnapshot::decode(&bytes[..bytes.len() - 1]).is_err());
+        assert!(EnvSnapshot::decode(b"NOPE").is_err());
+    }
+
+    #[test]
+    fn restore_then_replay_is_bit_identical_to_uninterrupted_run() {
+        let cfg = SimConfig::mini();
+        // Phase A: run 3 "iterations", snapshot after the first.
+        let run = |upto_snapshot_only: bool| {
+            let mut env = SimEnv::new(&cfg, 1);
+            let x = env.alloc(ObjSpec::f64("x", 600, true));
+            for i in 0..600 {
+                env.st(x, i, i as f64).unwrap();
+            }
+            env.mark_main_start();
+            let mut snap = None;
+            for it in 0..3u64 {
+                env.region(0).unwrap();
+                for i in 0..600 {
+                    let v = env.ld(x, i).unwrap();
+                    env.st(x, (i * 7 + 13) % 600, v * 0.99 + 0.5).unwrap();
+                }
+                env.iter_end(it).unwrap();
+                if it == 0 {
+                    snap = Some(env.snapshot());
+                    if upto_snapshot_only {
+                        return (env, x, snap);
+                    }
+                }
+            }
+            (env, x, snap)
+        };
+        let (full, _fx, snap) = run(false);
+        let snap = snap.expect("snapshot at iter 1");
+
+        // Phase B: fresh env, restore, replay iterations 1..3 only.
+        let mut env = SimEnv::new(&cfg, 1);
+        env.restore(&snap);
+        // Handles are re-derived from the restored registry (same layout).
+        let x = Buf {
+            id: 0,
+            len: 600,
+            ty: super::super::objects::Ty::F64,
+            base: env.reg.get(0).base,
+        };
+        assert_eq!(env.cur_iter(), 1, "resume at the snapshot's iteration");
+        for it in 1..3u64 {
+            env.region(0).unwrap();
+            for i in 0..600 {
+                let v = env.ld(x, i).unwrap();
+                env.st(x, (i * 7 + 13) % 600, v * 0.99 + 0.5).unwrap();
+            }
+            env.iter_end(it).unwrap();
+        }
+
+        let mut full = full;
+        full.sync_clock();
+        env.sync_clock();
+        assert_eq!(env.ops(), full.ops(), "op counter");
+        assert_eq!(env.hier.stats, full.hier.stats, "HierStats");
+        assert_eq!(
+            env.clock.cycles.to_bits(),
+            full.clock.cycles.to_bits(),
+            "modeled cycles bit-identical"
+        );
+        let bits = |v: &[f64]| v.iter().map(|c| c.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&env.clock.by_region), bits(&full.clock.by_region));
+        assert_eq!(env.mem.arch, full.mem.arch, "architectural image");
+        assert_eq!(env.mem.nvm, full.mem.nvm, "persisted image");
+    }
+
+    #[test]
+    fn tape_index_before_is_strict() {
+        let cfg = SimConfig::mini();
+        let mut env = SimEnv::new(&cfg, 1);
+        let x = env.alloc(ObjSpec::f64("x", 8, true));
+        let mut tape = SnapshotTape::new();
+        for round in 0..3 {
+            for i in 0..8 {
+                env.st(x, i, round as f64).unwrap();
+            }
+            tape.push(env.snapshot()); // ops = 8, 16, 24
+        }
+        assert_eq!(tape.len(), 3);
+        assert_eq!(tape.index_before(8), None, "strictly-before: ops==8 excluded");
+        assert_eq!(tape.index_before(9), Some(0));
+        assert_eq!(tape.index_before(16), Some(0));
+        assert_eq!(tape.index_before(17), Some(1));
+        assert_eq!(tape.index_before(u64::MAX), Some(2));
+        assert_eq!(tape.index_before(0), None);
+    }
+
+    #[test]
+    fn sim_env_records_tape_at_iteration_boundaries() {
+        let cfg = SimConfig::mini();
+        let mut env = SimEnv::new(&cfg, 1);
+        env.record_snapshots(10); // ~10 ops per snapshot, captured at iter_end
+        let x = env.alloc(ObjSpec::f64("x", 16, true));
+        for it in 0..6u64 {
+            env.region(0).unwrap();
+            for i in 0..16 {
+                env.st(x, i, it as f64).unwrap();
+            }
+            env.iter_end(it).unwrap();
+        }
+        let tape = env.take_tape();
+        assert!(!tape.is_empty(), "snapshots recorded");
+        assert!(tape.len() <= 6, "at most one snapshot per iteration");
+        for i in 0..tape.len() {
+            assert_eq!(
+                tape.get(i).ops() % 16,
+                0,
+                "snapshots land exactly on iteration boundaries"
+            );
+            if i > 0 {
+                assert!(tape.get(i).ops() > tape.get(i - 1).ops() );
+            }
+        }
+        assert!(env.take_tape().is_empty(), "take_tape drains the tape");
+    }
+}

@@ -13,6 +13,8 @@
 //! profile scales the memory component (Fig. 7's shape).
 
 use super::config::NvmProfile;
+use super::snapshot::{put_f64, put_usize, Reader};
+use crate::util::error::Result;
 
 /// DRAM load-to-use latency (87 ns @ 2.6 GHz ≈ 226 cycles).
 const MEM_READ_LAT: f64 = 226.0;
@@ -104,6 +106,27 @@ impl Clock {
     /// Seconds at the modeled 2.6 GHz.
     pub fn seconds(&self) -> f64 {
         self.cycles / 2.6e9
+    }
+
+    /// Serialize the accumulated cycles, bit-exact (snapshot binary
+    /// format — f64s round-trip through their bit patterns).
+    pub(crate) fn encode(&self, out: &mut Vec<u8>) {
+        put_f64(out, self.cycles);
+        put_usize(out, self.by_region.len());
+        for &c in &self.by_region {
+            put_f64(out, c);
+        }
+    }
+
+    /// Inverse of [`Clock::encode`].
+    pub(crate) fn decode(r: &mut Reader) -> Result<Clock> {
+        let cycles = r.f64()?;
+        let n = r.usize()?;
+        let mut by_region = Vec::with_capacity(n);
+        for _ in 0..n {
+            by_region.push(r.f64()?);
+        }
+        Ok(Clock { cycles, by_region })
     }
 }
 

@@ -157,11 +157,27 @@ fn spec_round_trips_through_json() {
         .tau(0.2)
         .planner_str("topk(2)+greedy")
         .unwrap()
+        .snapshot_interval(Some(4096))
         .build()
         .unwrap();
     let text = spec.to_json().to_pretty();
     let back = ExperimentSpec::from_json(&text).unwrap();
     assert_eq!(back, spec);
+    assert_eq!(back.cfg.snapshot_every, Some(4096));
+
+    // Snapshots off (the default) omits the key and still round-trips.
+    let off = ExperimentSpec::builder().app("toy").build().unwrap();
+    let text = off.to_json().to_pretty();
+    assert!(!text.contains("snapshot_interval"));
+    assert_eq!(ExperimentSpec::from_json(&text).unwrap(), off);
+
+    // `--snapshot-interval 0` disables; a JSON `0` means the same.
+    let z = ExperimentSpec::from_json(r#"{"apps":["toy"],"snapshot_interval":0}"#).unwrap();
+    assert_eq!(z.cfg.snapshot_every, None);
+    assert!(
+        ExperimentSpec::from_json(r#"{"apps":["toy"],"snapshot_interval":-3}"#).is_err(),
+        "negative intervals must be rejected"
+    );
 }
 
 #[test]
@@ -349,14 +365,14 @@ fn runner_campaigns_match_direct_wiring_bit_for_bit() {
                 let plan = runner
                     .resolve_plan(app.as_ref(), &PlanSpec::parse(plan_dsl).unwrap())
                     .unwrap();
-                let via_api = runner.campaign(app.as_ref(), &plan, false);
+                let via_api = runner.campaign(app.as_ref(), &plan, false).unwrap();
 
                 // The pre-redesign wiring, assembled by hand.
                 let direct = if shards == 1 {
                     let mut eng = NativeEngine::new();
-                    Campaign::new(tests, seed).run(app.as_ref(), &plan, &mut eng)
+                    Campaign::new(tests, seed).run(app.as_ref(), &plan, &mut eng).unwrap()
                 } else {
-                    ShardedCampaign::new(tests, seed, shards).run(app.as_ref(), &plan)
+                    ShardedCampaign::new(tests, seed, shards).run(app.as_ref(), &plan).unwrap()
                 };
                 assert_bit_identical(
                     &via_api,
@@ -380,11 +396,11 @@ fn runner_memoizes_cells_and_shares_them_with_the_workflow() {
         .build()
         .unwrap();
     let runner = Runner::new(spec).unwrap();
-    let a = runner.campaign(app.as_ref(), &PersistPlan::none(), false);
-    let b = runner.campaign(app.as_ref(), &PersistPlan::none(), false);
+    let a = runner.campaign(app.as_ref(), &PersistPlan::none(), false).unwrap();
+    let b = runner.campaign(app.as_ref(), &PersistPlan::none(), false).unwrap();
     assert!(Arc::ptr_eq(&a, &b), "same plan key must hit the cache");
     // Verified campaigns are distinct cells.
-    let v = runner.campaign(app.as_ref(), &PersistPlan::none(), true);
+    let v = runner.campaign(app.as_ref(), &PersistPlan::none(), true).unwrap();
     assert!(!Arc::ptr_eq(&a, &v));
     // The workflow's characterization campaign is the shared `none` cell.
     let wf = runner.workflow(app.as_ref()).unwrap();

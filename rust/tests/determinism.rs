@@ -13,6 +13,7 @@ use easycrash::apps::{self, by_name, CrashApp};
 use easycrash::easycrash::campaign::{draw_crash_points, partition_points};
 use easycrash::easycrash::{Campaign, CampaignResult, PersistPlan, ShardedCampaign, Workflow};
 use easycrash::runtime::NativeEngine;
+use easycrash::sim::SimConfig;
 use easycrash::util::rng::Rng;
 
 const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
@@ -20,7 +21,7 @@ const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
 /// The two plans each app is exercised under: no persistence, and all
 /// candidate objects persisted at iteration end.
 fn plans_for(app: &dyn CrashApp) -> Vec<PersistPlan> {
-    let prof = Campaign::new(0, 1).profile(app, &PersistPlan::none());
+    let prof = Campaign::new(0, 1).profile(app, &PersistPlan::none()).unwrap();
     let names: Vec<String> = prof
         .selectable_candidates()
         .map(|(_, n, _)| n.clone())
@@ -42,11 +43,11 @@ fn sharded_equals_sequential_across_apps_plans_and_shard_counts() {
         let app = by_name(app_name).unwrap();
         for (p, plan) in plans_for(app.as_ref()).iter().enumerate() {
             let mut eng = NativeEngine::new();
-            let seq = Campaign::new(tests, seed).run(app.as_ref(), plan, &mut eng);
+            let seq = Campaign::new(tests, seed).run(app.as_ref(), plan, &mut eng).unwrap();
             assert_eq!(seq.records.len(), tests, "{app_name} plan{p}");
             for shards in SHARD_COUNTS {
                 let sc = ShardedCampaign::new(tests, seed, shards);
-                let r = sc.run(app.as_ref(), plan);
+                let r = sc.run(app.as_ref(), plan).unwrap();
                 // The aggregates come from the designated full-run worker
                 // (every other worker early-stops): they must still match
                 // the sequential run bit for bit.
@@ -87,10 +88,10 @@ fn full_fourteen_app_matrix_sharded_equals_sequential() {
         let app = app.as_ref();
         let plan = PersistPlan::none();
         let mut eng = NativeEngine::new();
-        let seq = Campaign::new(tests, seed).run(app, &plan, &mut eng);
+        let seq = Campaign::new(tests, seed).run(app, &plan, &mut eng).unwrap();
         assert_eq!(seq.records.len(), tests, "{}", app.name());
         for shards in SHARD_COUNTS {
-            let r = ShardedCampaign::new(tests, seed, shards).run(app, &plan);
+            let r = ShardedCampaign::new(tests, seed, shards).run(app, &plan).unwrap();
             assert_bit_identical(&r, &seq, &format!("{} shards={shards}", app.name()));
         }
         covered.push(app.name());
@@ -102,6 +103,53 @@ fn full_fourteen_app_matrix_sharded_equals_sequential() {
     ] {
         assert!(covered.contains(&name), "missing {name}");
     }
+}
+
+/// Tentpole: snapshot-restore harvesting is bit-identical to scratch
+/// replay across the FULL 14-app matrix, sequential and sharded alike.
+/// The sequential scratch run (snapshots off) is the reference; with the
+/// tape recorded at every iteration end (interval 1, the adversarial
+/// maximum) the campaign must reproduce every result field bit for bit
+/// for shard counts {1, 2, 4, 8} — while replaying strictly fewer
+/// instrumented ops than the scratch pass.
+#[test]
+fn snapshot_restore_is_bit_identical_to_scratch_across_the_matrix() {
+    let tests = 6;
+    let seed = 0x5A;
+    let snap_cfg = SimConfig::mini().with_snapshot_every(Some(1));
+    let mut covered = 0;
+    for app in apps::all().into_iter().chain(apps::extras()) {
+        let app = app.as_ref();
+        let plan = PersistPlan::none();
+        let mut eng = NativeEngine::new();
+        let scratch = Campaign::new(tests, seed).run(app, &plan, &mut eng).unwrap();
+
+        let mut snap_c = Campaign::new(tests, seed);
+        snap_c.cfg = snap_cfg;
+        let mut eng2 = NativeEngine::new();
+        let snap = snap_c.run(app, &plan, &mut eng2).unwrap();
+        assert_bit_identical(&snap, &scratch, &format!("{} snap-vs-scratch", app.name()));
+        assert!(
+            snap.replayed_ops < scratch.replayed_ops,
+            "{}: snapshot harvest must replay fewer ops ({} vs {})",
+            app.name(),
+            snap.replayed_ops,
+            scratch.replayed_ops
+        );
+
+        for shards in SHARD_COUNTS {
+            let mut sc = ShardedCampaign::new(tests, seed, shards);
+            sc.campaign.cfg = snap_cfg;
+            let r = sc.run(app, &plan).unwrap();
+            assert_bit_identical(
+                &r,
+                &scratch,
+                &format!("{} snap-vs-scratch shards={shards}", app.name()),
+            );
+        }
+        covered += 1;
+    }
+    assert_eq!(covered, 14, "the parity matrix must cover all 14 apps");
 }
 
 /// The full 4-step workflow inherits the guarantee: sharded campaigns
@@ -134,7 +182,7 @@ fn sharded_workflow_equals_sequential_workflow() {
 #[test]
 fn shard_batches_share_no_ops_in_a_1000_test_campaign() {
     let app = by_name("toy").unwrap();
-    let prof = Campaign::new(1000, 7).profile(app.as_ref(), &PersistPlan::none());
+    let prof = Campaign::new(1000, 7).profile(app.as_ref(), &PersistPlan::none()).unwrap();
     assert!(
         prof.ops_total - prof.ops_main_start >= 1000,
         "main loop must be wider than the test count for the structural guarantee"
@@ -184,7 +232,7 @@ fn rng_lane_streams_are_disjoint() {
 #[test]
 fn crash_point_draw_is_reproducible_and_bounded() {
     let app = by_name("is").unwrap();
-    let prof = Campaign::new(0, 2).profile(app.as_ref(), &PersistPlan::none());
+    let prof = Campaign::new(0, 2).profile(app.as_ref(), &PersistPlan::none()).unwrap();
     let (lo, hi) = (prof.ops_main_start, prof.ops_total);
     let a = draw_crash_points(2, 500, lo, hi);
     let b = draw_crash_points(2, 500, lo, hi);

@@ -49,7 +49,14 @@ fn build_env<'a>(cfg: &SimConfig) -> (SimEnv<'a>, Buf, Buf, Buf) {
 const ITERS: u64 = 3;
 
 fn scalar_driver(env: &mut SimEnv, x: Buf, y: Buf, z: Buf) {
-    for it in 0..ITERS {
+    scalar_driver_from(env, x, y, z, 0);
+}
+
+/// The same element sequence resumed at iteration `start` — the replay
+/// half of the snapshot/restore parity proof (snapshots are captured at
+/// iteration boundaries, so `start` is the snapshot's `iter()`).
+fn scalar_driver_from(env: &mut SimEnv, x: Buf, y: Buf, z: Buf, start: u64) {
+    for it in start..ITERS {
         env.region(0).unwrap();
         for i in 0..200 {
             env.st(x, 3 + i, i as f64 * 1.5 - it as f64).unwrap();
@@ -170,10 +177,52 @@ fn bulk_api_is_bit_identical_to_scalar_expansion() {
     }
 }
 
+/// Tentpole: a snapshot taken at an iteration boundary, restored into a
+/// fresh allocation-identical env and replayed to completion, reproduces
+/// the uninterrupted run's architectural image, persisted NVM image,
+/// `HierStats`, op count and modeled cycles bit for bit — for every
+/// snapshot on the tape.
+#[test]
+fn snapshot_restore_replay_is_bit_identical_at_image_level() {
+    let cfg = SimConfig::mini();
+    let (tape, ops_a, stats_a, cycles_a, arch_a, nvm_a) = {
+        let (mut env, x, y, z) = build_env(&cfg);
+        env.record_snapshots(1);
+        scalar_driver(&mut env, x, y, z);
+        env.sync_clock();
+        (
+            env.take_tape(),
+            env.ops(),
+            env.hier.stats,
+            env.clock.cycles,
+            env.mem.arch.clone(),
+            env.mem.nvm.clone(),
+        )
+    };
+    assert!(!tape.is_empty(), "interval 1 must record at iteration ends");
+    for i in 0..tape.len() {
+        let snap = tape.get(i);
+        let (mut env, x, y, z) = build_env(&cfg);
+        env.restore(snap);
+        assert_eq!(env.ops(), snap.ops(), "snapshot {i}: restored op index");
+        scalar_driver_from(&mut env, x, y, z, snap.iter());
+        env.sync_clock();
+        assert_eq!(env.ops(), ops_a, "snapshot {i}: op count");
+        assert_eq!(env.hier.stats, stats_a, "snapshot {i}: HierStats");
+        assert_eq!(
+            env.clock.cycles.to_bits(),
+            cycles_a.to_bits(),
+            "snapshot {i}: modeled cycles"
+        );
+        assert_eq!(env.mem.arch, arch_a, "snapshot {i}: architectural image");
+        assert_eq!(env.mem.nvm, nvm_a, "snapshot {i}: persisted image");
+    }
+}
+
 /// The two plans each app is exercised under: no persistence, and all
 /// candidate objects persisted at iteration end.
 fn plans_for(app: &dyn CrashApp) -> Vec<PersistPlan> {
-    let prof = Campaign::new(0, 1).profile(app, &PersistPlan::none());
+    let prof = Campaign::new(0, 1).profile(app, &PersistPlan::none()).unwrap();
     let names: Vec<String> = prof
         .candidates
         .iter()
@@ -200,10 +249,10 @@ fn early_stop_shards_match_sequential_bit_for_bit() {
         let app = by_name(app_name).unwrap();
         for (p, plan) in plans_for(app.as_ref()).iter().enumerate() {
             let mut eng = NativeEngine::new();
-            let seq = Campaign::new(tests, seed).run(app.as_ref(), plan, &mut eng);
+            let seq = Campaign::new(tests, seed).run(app.as_ref(), plan, &mut eng).unwrap();
             assert_eq!(seq.records.len(), tests, "{app_name} plan{p}");
             for shards in [1usize, 2, 4, 8] {
-                let r = ShardedCampaign::new(tests, seed, shards).run(app.as_ref(), plan);
+                let r = ShardedCampaign::new(tests, seed, shards).run(app.as_ref(), plan).unwrap();
                 let label = format!("{app_name} plan{p} shards={shards}");
                 assert_eq!(r.records, seq.records, "{label}: records");
                 assert_eq!(r.stats, seq.stats, "{label}: HierStats");

@@ -10,14 +10,14 @@ const TESTS: usize = 40; // small but meaningful; campaigns are deterministic
 fn run(app: &str, plan: &PersistPlan, seed: u64) -> easycrash::easycrash::CampaignResult {
     let a = apps::by_name(app).unwrap();
     let mut eng = NativeEngine::new();
-    Campaign::new(TESTS, seed).run(a.as_ref(), plan, &mut eng)
+    Campaign::new(TESTS, seed).run(a.as_ref(), plan, &mut eng).unwrap()
 }
 
 #[test]
 fn every_app_survives_a_campaign() {
     for app in apps::all() {
         let mut eng = NativeEngine::new();
-        let r = Campaign::new(10, 3).run(app.as_ref(), &PersistPlan::none(), &mut eng);
+        let r = Campaign::new(10, 3).run(app.as_ref(), &PersistPlan::none(), &mut eng).unwrap();
         assert_eq!(r.records.len(), 10, "{}", app.name());
         assert!(r.ops_total > 0);
         assert!(r.cycles > 0.0);
@@ -128,9 +128,9 @@ fn verified_mode_is_at_least_as_good_for_ft() {
     let app = apps::by_name("ft").unwrap();
     let mut eng = NativeEngine::new();
     let mut c = Campaign::new(TESTS, 31);
-    let normal = c.run(app.as_ref(), &PersistPlan::none(), &mut eng);
+    let normal = c.run(app.as_ref(), &PersistPlan::none(), &mut eng).unwrap();
     c.verified = true;
-    let verified = c.run(app.as_ref(), &PersistPlan::none(), &mut eng);
+    let verified = c.run(app.as_ref(), &PersistPlan::none(), &mut eng).unwrap();
     assert!(
         verified.recomputability() + 0.10 >= normal.recomputability(),
         "verified {} vs normal {}",

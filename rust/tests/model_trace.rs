@@ -34,7 +34,7 @@ fn measured_r() -> f64 {
     let runner = Runner::new(spec).unwrap();
     let app = easycrash::apps::by_name("toy").unwrap();
     let plan = runner.resolve_plan(app.as_ref(), &PlanSpec::All).unwrap();
-    runner.campaign(app.as_ref(), &plan, false).recomputability()
+    runner.campaign(app.as_ref(), &plan, false).unwrap().recomputability()
 }
 
 /// Acceptance: MC means converge to Eq. 6 (CheckpointOnly) and Eq. 8

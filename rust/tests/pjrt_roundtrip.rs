@@ -114,9 +114,9 @@ fn pjrt_campaign_on_kmeans_matches_native_shape() {
     let app = by_name("kmeans").unwrap();
     let c = easycrash::easycrash::Campaign::new(40, 17);
     let plan = easycrash::easycrash::PersistPlan::none();
-    let r_pjrt = c.run(app.as_ref(), &plan, &mut eng);
+    let r_pjrt = c.run(app.as_ref(), &plan, &mut eng).unwrap();
     let mut native = easycrash::runtime::NativeEngine::new();
-    let r_nat = c.run(app.as_ref(), &plan, &mut native);
+    let r_nat = c.run(app.as_ref(), &plan, &mut native).unwrap();
     let d = (r_pjrt.recomputability() - r_nat.recomputability()).abs();
     assert!(d <= 0.25, "pjrt {} vs native {}", r_pjrt.recomputability(), r_nat.recomputability());
     assert!(eng.calls() > 0);

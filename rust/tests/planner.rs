@@ -173,7 +173,7 @@ fn oracle_run(wf: &Workflow, app: &dyn CrashApp) -> OracleReport {
     };
     let mut engine = NativeEngine::new();
     oracle_run_cells(wf, app, &mut |plan| {
-        Arc::new(campaign.run(app, plan, &mut engine))
+        Arc::new(campaign.run(app, plan, &mut engine).unwrap())
     })
 }
 

@@ -17,6 +17,7 @@ fn random_cfg(g: &mut Gen) -> SimConfig {
         l2: CacheGeom::new(l2_sets * 4 * 64, 4),
         l3: CacheGeom::new(l3_sets * 8 * 64, 8),
         nvm: easycrash::sim::NvmProfile::DRAM,
+        snapshot_every: None,
     }
 }
 
