@@ -6,7 +6,7 @@
 
 use crate::easycrash::workflow::{WorkflowReport, WorkflowSummary};
 use crate::easycrash::PlannerSpec;
-use crate::util::error::{Context, Result};
+use crate::util::error::{Error, Result};
 use crate::util::json::Json;
 
 use super::spec::ExperimentSpec;
@@ -179,6 +179,6 @@ impl PlannerMatrixReport {
     /// Write the pretty-printed JSON document to `path`.
     pub fn write_json(&self, path: &str) -> Result<()> {
         std::fs::write(path, self.to_json().to_pretty())
-            .with_context(|| format!("writing planner matrix report to {path}"))
+            .map_err(|e| Error::io(path, "writing planner matrix report to", e))
     }
 }

@@ -3,7 +3,7 @@
 use std::sync::Arc;
 
 use crate::easycrash::{CampaignResult, PlanSpec};
-use crate::util::error::{Context, Result};
+use crate::util::error::{Error, Result};
 use crate::util::json::Json;
 use crate::util::mean;
 
@@ -103,6 +103,6 @@ impl ExperimentReport {
     /// Write the pretty-printed JSON document to `path`.
     pub fn write_json(&self, path: &str) -> Result<()> {
         std::fs::write(path, self.to_json().to_pretty())
-            .with_context(|| format!("writing experiment report to {path}"))
+            .map_err(|e| Error::io(path, "writing experiment report to", e))
     }
 }

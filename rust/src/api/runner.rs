@@ -7,7 +7,7 @@ use std::sync::{Arc, Mutex};
 use crate::apps::{self, CrashApp};
 use crate::easycrash::workflow::{Workflow, WorkflowReport};
 use crate::easycrash::{
-    Campaign, CampaignResult, PersistPlan, PlanSpec, PlannerSpec, ShardedCampaign,
+    Campaign, CampaignResult, KillCampaign, PersistPlan, PlanSpec, PlannerSpec, ShardedCampaign,
 };
 use crate::model::efficiency::{evaluate, EfficiencyInput};
 use crate::model::sweep::T_CHK_SCENARIOS;
@@ -295,6 +295,19 @@ impl Runner {
         plan: &PersistPlan,
         verified: bool,
     ) -> Result<CampaignResult> {
+        if self.spec.engine == super::spec::EngineKind::Pool {
+            // Spec validation rejects verified + pool, so `verified` can
+            // only be false here; the pool path has no architectural
+            // image to verify against.
+            let kc = KillCampaign {
+                tests: self.spec.tests,
+                seed: self.spec.seed,
+                cfg: self.spec.cfg,
+                ..KillCampaign::default()
+            };
+            let pool = Self::pool_path(app.name(), plan);
+            return kc.run_in_process(app, plan, &pool, self.engine.lock().unwrap().as_mut());
+        }
         let campaign = Campaign {
             tests: self.spec.tests,
             seed: self.spec.seed,
@@ -306,6 +319,19 @@ impl Runner {
             shards: self.spec.shards,
         }
         .run_or_seq(app, plan, self.engine.lock().unwrap().as_mut())
+    }
+
+    /// Scratch pool-file path for a `--engine pool` cell: unique per
+    /// (process, app, plan) so concurrent runners never share a file.
+    /// The file itself is removed by the campaign after its last test.
+    fn pool_path(app: &str, plan: &PersistPlan) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("easycrash-pools");
+        let _ = std::fs::create_dir_all(&dir);
+        let tag: String = format!("{app}-{}", plan.dsl())
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+            .collect();
+        dir.join(format!("{tag}-{}.pool", std::process::id()))
     }
 
     /// Memoized profile run (no crashes) under a plan + simulator config

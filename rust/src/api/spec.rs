@@ -23,6 +23,11 @@ pub enum EngineKind {
     /// AOT-compiled JAX/Pallas step functions through PJRT (behind the
     /// `pjrt` cargo feature; a stub otherwise).
     Pjrt,
+    /// The durable-pool backend: every campaign test runs against an
+    /// mmap'd pool file and is recovered by a two-phase restart from
+    /// what the file retained (see [`crate::sim::pool`]). Recomputation
+    /// uses the native kernels.
+    Pool,
 }
 
 impl EngineKind {
@@ -30,6 +35,7 @@ impl EngineKind {
         match self {
             EngineKind::Native => "native",
             EngineKind::Pjrt => "pjrt",
+            EngineKind::Pool => "pool",
         }
     }
 
@@ -37,7 +43,8 @@ impl EngineKind {
         match name {
             "native" => Ok(EngineKind::Native),
             "pjrt" => Ok(EngineKind::Pjrt),
-            other => crate::bail!("unknown engine `{other}` (native|pjrt)"),
+            "pool" => Ok(EngineKind::Pool),
+            other => crate::bail!("unknown engine `{other}` (native|pjrt|pool)"),
         }
     }
 
@@ -47,6 +54,7 @@ impl EngineKind {
         match self {
             EngineKind::Native => Ok(Box::new(NativeEngine::new())),
             EngineKind::Pjrt => Ok(Box::new(crate::runtime::PjrtEngine::from_default_dir()?)),
+            EngineKind::Pool => Ok(Box::new(crate::runtime::PoolEngine::new())),
         }
     }
 }
@@ -130,6 +138,13 @@ impl ExperimentSpec {
         crate::ensure!(
             self.shards == 1 || self.engine == EngineKind::Native,
             "shards > 1 requires the native engine (one engine per worker)"
+        );
+        // A real crash cannot snapshot the architectural image — it is
+        // exactly what dies with the process.
+        crate::ensure!(
+            !(self.verified && self.engine == EngineKind::Pool),
+            "verified mode is incompatible with the pool engine (a real crash \
+             loses the architectural image)"
         );
         crate::ensure!(
             self.ts > 0.0 && self.ts.is_finite(),

@@ -16,7 +16,7 @@ use std::sync::Arc;
 use crate::model::efficiency::{t_r_nvm_seconds, EfficiencyModel};
 use crate::model::trace::{FailureDist, TraceResult, DEFAULT_TRIALS, DEFAULT_WORK};
 use crate::easycrash::PlanSpec;
-use crate::util::error::{Context, Result};
+use crate::util::error::{Error, Result};
 use crate::util::json::Json;
 
 use super::spec::ExperimentSpec;
@@ -217,6 +217,6 @@ impl EfficiencyReport {
     /// Write the pretty-printed JSON document to `path`.
     pub fn write_json(&self, path: &str) -> Result<()> {
         std::fs::write(path, self.to_json().to_pretty())
-            .with_context(|| format!("writing efficiency trace to {path}"))
+            .map_err(|e| Error::io(path, "writing efficiency trace to", e))
     }
 }

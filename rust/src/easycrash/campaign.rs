@@ -532,6 +532,26 @@ impl Campaign {
         Ok(res)
     }
 
+    /// [`Campaign::run`] with explicitly chosen crash points instead of
+    /// the seeded draw — the hook the pool-parity crash matrix uses to
+    /// pin crashes to exact flush boundaries. `self.tests` is ignored;
+    /// one record is produced per point (duplicates included), in
+    /// ascending op order.
+    pub fn run_at(
+        &self,
+        app: &dyn CrashApp,
+        plan: &PersistPlan,
+        mut points: Vec<u64>,
+        engine: &mut dyn StepEngine,
+    ) -> Result<CampaignResult> {
+        points.sort_unstable();
+        let ctx = self.prepare(app, plan)?;
+        let (profile, tape) = self.profile_with(app, plan, &ctx)?;
+        let mut res = self.harvest(app, plan, points, engine, None, &ctx, &tape)?;
+        res.ops_main_start = profile.ops_main_start;
+        Ok(res)
+    }
+
     fn result_of(
         &self,
         app: &dyn CrashApp,

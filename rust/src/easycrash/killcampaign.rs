@@ -1,0 +1,696 @@
+//! Real-process crash harness over the durable pool.
+//!
+//! Where [`super::campaign`] *simulates* crashes (the observer fires and
+//! execution continues), this module actually loses the architectural
+//! state: the app runs against an mmap'd [`PoolEnv`](crate::sim::PoolEnv)
+//! and is destroyed at a chosen op index — either by dropping the env
+//! in-process ([`KillCampaign::run_in_process`]) or by spawning a child
+//! process and delivering SIGKILL ([`KillCampaign::run_killed`], the
+//! FIRST-style spawn→kill→restart loop of SNIPPETS.md §2). Recovery is
+//! the pool's two-phase restart: reopen, validate the durable metadata
+//! (pinned to the generation observed at kill time), read the surviving
+//! object images + iteration bookmark, recompute and classify.
+//!
+//! Crash points come from the same [`draw_crash_points`] sampler as the
+//! simulated campaign and results feed the same [`CampaignResult`], so a
+//! simulated and a pool campaign over identical `(app, plan, seed,
+//! tests)` are directly comparable — the crash-matrix parity tests
+//! assert they agree record-by-record.
+//!
+//! ## Watchdog and retry policy
+//!
+//! Child phases are watched over a line channel: a reader thread
+//! forwards the child's stdout, and the parent waits for the protocol
+//! sentinel with a deadline ([`KillCampaign::timeout`]). A run child
+//! that never reaches its kill point, or a recovery child that hangs, is
+//! killed by the watchdog. Recovery (and only recovery) is retried with
+//! linear backoff up to [`KillCampaign::retries`] times — recovery never
+//! mutates a resumable pool, so a killed recovery attempt is always
+//! safely re-runnable (the double-kill test exercises exactly this).
+
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+use std::time::Duration;
+
+use crate::apps::{self, CrashApp, Response, Snapshot};
+use crate::runtime::{NativeEngine, StepEngine};
+use crate::sim::{PoolEnv, RecoveryOutcome, Signal, SimConfig, SimEnv};
+use crate::util::error::{Error, Result};
+
+use super::campaign::{draw_crash_points, Campaign, CampaignResult, TestRecord};
+use super::plan::{PersistPlan, PlanSpec};
+
+/// Stdout sentinel a run child prints once it halted at its kill point.
+pub const HALT_SENTINEL: &str = "EC-POOL-HALT";
+/// Stdout sentinel a run child prints if it finished before the point.
+pub const DONE_SENTINEL: &str = "EC-POOL-DONE";
+/// Stdout sentinel a recovery child prints with its outcome.
+pub const RECOVERY_SENTINEL: &str = "EC-RECOVERY";
+
+/// Resolve a plan DSL against an app without a full [`crate::api::Runner`]
+/// — the standalone resolution the spawned children (and the harness
+/// itself) use. Matches the runner's expansion exactly for `none`, `all`
+/// and explicit entries; `critical` needs a workflow's selection and is
+/// rejected here.
+pub fn resolve_plan_basic(app: &dyn CrashApp, dsl: &str) -> Result<PersistPlan> {
+    let num_regions = app.regions().len();
+    let probe = app
+        .probe_layout()
+        .map_err(|s| crate::err!("app {}: layout probe failed with {s:?}", app.name()))?;
+    match PlanSpec::parse(dsl)? {
+        PlanSpec::None => Ok(PersistPlan::none()),
+        PlanSpec::All => {
+            let names: Vec<&str> = probe
+                .reg
+                .candidates()
+                .into_iter()
+                .filter(|id| Some(*id) != probe.iter_obj)
+                .map(|id| probe.reg.get(id).spec.name)
+                .collect();
+            Ok(PersistPlan::at_iter_end(&names, num_regions, 1))
+        }
+        PlanSpec::Critical => crate::bail!(
+            "plan `critical` needs a workflow's selection; pass explicit entries to the kill harness"
+        ),
+        PlanSpec::Entries(entries) => {
+            let plan = PersistPlan { entries, clwb: false };
+            plan.resolve_for(&probe.reg, num_regions, probe.iter_obj)?;
+            Ok(plan)
+        }
+    }
+}
+
+/// The kill-campaign configuration: the simulated campaign's sampling
+/// knobs plus the process-harness policy.
+#[derive(Clone, Copy, Debug)]
+pub struct KillCampaign {
+    pub tests: usize,
+    pub seed: u64,
+    pub cfg: SimConfig,
+    /// Watchdog deadline per child phase (reaching the kill point;
+    /// finishing recovery).
+    pub timeout: Duration,
+    /// Recovery retry budget after the first attempt.
+    pub retries: u32,
+    /// Base backoff between recovery attempts (linear: `backoff × n`).
+    pub backoff: Duration,
+    /// Test knob: recovery children sleep this long *after* the offline
+    /// phase before reporting — exercises the watchdog and the
+    /// crash-during-recovery path. 0 in normal operation.
+    pub stall_recovery_ms: u64,
+}
+
+impl Default for KillCampaign {
+    fn default() -> KillCampaign {
+        KillCampaign {
+            tests: 5,
+            seed: 0xEC,
+            cfg: SimConfig::mini(),
+            timeout: Duration::from_secs(60),
+            retries: 2,
+            backoff: Duration::from_millis(200),
+            stall_recovery_ms: 0,
+        }
+    }
+}
+
+/// What a run child reports at its kill point (parsed from the
+/// [`HALT_SENTINEL`] line).
+#[derive(Clone, Debug)]
+struct HaltReport {
+    op: u64,
+    iter: u64,
+    region: usize,
+    generation: u64,
+    inconsistency: Vec<f64>,
+}
+
+/// What a recovery child reports (parsed from [`RECOVERY_SENTINEL`]).
+#[derive(Clone, Debug)]
+pub struct RecoveryReport {
+    pub resumed: bool,
+    pub generation: u64,
+    pub iter: u64,
+    pub response: Option<Response>,
+    pub extra_iters: u64,
+    pub reason: String,
+}
+
+impl KillCampaign {
+    /// The simulated-campaign twin (same sampling inputs, `verified`
+    /// never applies to a real crash).
+    fn base(&self) -> Campaign {
+        Campaign {
+            tests: self.tests,
+            seed: self.seed,
+            cfg: self.cfg,
+            verified: false,
+        }
+    }
+
+    // -- in-process kills ---------------------------------------------------
+
+    /// Crash campaign over the durable pool, in-process: each test runs
+    /// the app against a fresh pool mapping, halts at the sampled op,
+    /// discards the architectural state (drops the env), and recovers
+    /// from the pool file alone. Points are drawn by the same sampler as
+    /// [`Campaign::run`], so the result is record-comparable with the
+    /// simulated engine's.
+    pub fn run_in_process(
+        &self,
+        app: &dyn CrashApp,
+        plan: &PersistPlan,
+        pool_path: &Path,
+        engine: &mut dyn StepEngine,
+    ) -> Result<CampaignResult> {
+        let profile = self.base().profile(app, plan)?;
+        let points =
+            draw_crash_points(self.seed, self.tests, profile.ops_main_start, profile.ops_total);
+        self.run_in_process_at(app, plan, points, pool_path, engine)
+    }
+
+    /// [`KillCampaign::run_in_process`] with explicitly chosen kill
+    /// points (the flush-boundary parity tests pin these).
+    pub fn run_in_process_at(
+        &self,
+        app: &dyn CrashApp,
+        plan: &PersistPlan,
+        mut points: Vec<u64>,
+        pool_path: &Path,
+        engine: &mut dyn StepEngine,
+    ) -> Result<CampaignResult> {
+        points.sort_unstable();
+        let base = self.base();
+        let ctx = base.prepare(app, plan)?;
+        let (mut result, _tape) = base.profile_with(app, plan, &ctx)?;
+        let golden = app.golden();
+        let mut replayed = 0u64;
+        let mut records = Vec::with_capacity(points.len());
+        for &p in &points {
+            let mut pool =
+                PoolEnv::create(pool_path, app.name(), &ctx.layout, ctx.iter_obj, ctx.num_regions)?;
+            pool.begin_run()?;
+            let generation = pool.generation();
+            let mut env = SimEnv::new(&self.cfg, ctx.num_regions);
+            env.set_hooks(ctx.hooks.clone());
+            pool.attach(&mut env)?;
+            env.halt_at = Some(p);
+            match app.run_sim(&mut env) {
+                Err(Signal::Crash) => {}
+                Ok(()) => crate::bail!(
+                    "kill point {p} lies beyond the end of {}'s run",
+                    app.name()
+                ),
+                Err(s) => crate::bail!(
+                    "{}: run failed with {s:?} before the kill point {p}",
+                    app.name()
+                ),
+            }
+            let op = env.ops();
+            let iter = env.cur_iter();
+            let region = env.cur_region();
+            let inconsistency: Vec<f64> = ctx
+                .candidates
+                .iter()
+                .map(|(id, _, _)| env.inconsistent_rate(*id))
+                .collect();
+            replayed += op;
+            // Process death: the architectural state and the modeled
+            // caches are gone; only the pool file remains.
+            drop(env);
+            drop(pool);
+            // Two-phase restart, pinned to the killed run's generation.
+            let (pool, outcome) = PoolEnv::open_expecting(
+                pool_path,
+                app.name(),
+                &ctx.layout,
+                ctx.iter_obj,
+                ctx.num_regions,
+                Some(generation),
+            )?;
+            let RecoveryOutcome::Resumed { .. } = outcome else {
+                crate::bail!(
+                    "pool recovery for {} cold-started unexpectedly at op {p}: {outcome:?}",
+                    app.name()
+                )
+            };
+            let (snap_iter, objs) = pool.surviving_objects()?;
+            let snap = Snapshot {
+                iter: snap_iter,
+                objs,
+            };
+            let (response, extra) = app.recompute(&snap, &golden, engine);
+            records.push(TestRecord {
+                op,
+                iter,
+                region,
+                response,
+                extra_iters: extra,
+                inconsistency,
+            });
+        }
+        let _ = std::fs::remove_file(pool_path);
+        result.records = records;
+        result.replayed_ops = replayed;
+        Ok(result)
+    }
+
+    // -- real-process kills -------------------------------------------------
+
+    /// Full spawn→SIGKILL→restart campaign: for each sampled point,
+    /// spawn `exe pool-child run` against the pool file, kill it the
+    /// moment it reports the halt sentinel, then spawn `exe pool-child
+    /// recover` (watchdog + bounded retry) and collect its verdict.
+    /// `exe` is this binary (`current_exe`, or `CARGO_BIN_EXE_easycrash`
+    /// in tests).
+    pub fn run_killed(
+        &self,
+        exe: &Path,
+        app: &dyn CrashApp,
+        plan_dsl: &str,
+        pool_path: &Path,
+    ) -> Result<CampaignResult> {
+        let plan = resolve_plan_basic(app, plan_dsl)?;
+        let mut result = self.base().profile(app, &plan)?;
+        let points =
+            draw_crash_points(self.seed, self.tests, result.ops_main_start, result.ops_total);
+        let mut records = Vec::with_capacity(points.len());
+        for &p in &points {
+            records.push(self.kill_once(exe, app.name(), plan_dsl, pool_path, p)?);
+        }
+        let _ = std::fs::remove_file(pool_path);
+        result.records = records;
+        Ok(result)
+    }
+
+    /// One spawn→SIGKILL→recover cycle at kill point `p`.
+    pub fn kill_once(
+        &self,
+        exe: &Path,
+        app_name: &str,
+        plan_dsl: &str,
+        pool_path: &Path,
+        p: u64,
+    ) -> Result<TestRecord> {
+        let _ = std::fs::remove_file(pool_path);
+        let halt = self.spawn_until_halt(exe, app_name, plan_dsl, pool_path, p)?;
+        let report = self.recover_with_retry(exe, app_name, pool_path, halt.generation)?;
+        crate::ensure!(
+            report.resumed,
+            "recovery of {app_name} at op {p} cold-started: {}",
+            report.reason
+        );
+        let response = report
+            .response
+            .ok_or_else(|| crate::err!("recovery of {app_name} reported no response class"))?;
+        Ok(TestRecord {
+            op: halt.op,
+            iter: halt.iter,
+            region: halt.region,
+            response,
+            extra_iters: report.extra_iters,
+            inconsistency: halt.inconsistency,
+        })
+    }
+
+    /// Spawn the run child and watch its stdout until it reports the
+    /// halt sentinel, then SIGKILL it mid-flight.
+    fn spawn_until_halt(
+        &self,
+        exe: &Path,
+        app_name: &str,
+        plan_dsl: &str,
+        pool_path: &Path,
+        p: u64,
+    ) -> Result<HaltReport> {
+        let mut child = Command::new(exe)
+            .args([
+                "pool-child",
+                "run",
+                "--app",
+                app_name,
+                "--plan",
+                plan_dsl,
+                "--pool",
+                &pool_path.display().to_string(),
+                "--halt",
+                &p.to_string(),
+            ])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .map_err(|e| Error::io(exe, "spawning pool run child from", e))?;
+        let rx = line_channel(&mut child);
+        let line = loop {
+            match rx.recv_timeout(self.timeout) {
+                Ok(l) if l.starts_with(HALT_SENTINEL) => break l,
+                Ok(l) if l.starts_with(DONE_SENTINEL) => {
+                    let _ = child.wait();
+                    crate::bail!(
+                        "pool run child finished before kill point {p} ({app_name})"
+                    );
+                }
+                Ok(_) => continue,
+                Err(_) => {
+                    kill_and_reap(&mut child);
+                    crate::bail!(
+                        "watchdog: pool run child did not reach kill point {p} within {:?}",
+                        self.timeout
+                    );
+                }
+            }
+        };
+        // The child parks after reporting; this delivers SIGKILL on unix
+        // — the architectural state dies with the process, the MAP_SHARED
+        // pool pages survive in the page cache.
+        kill_and_reap(&mut child);
+        parse_halt(&line)
+    }
+
+    /// Spawn recovery children until one reports in time, with linear
+    /// backoff, up to the retry budget.
+    fn recover_with_retry(
+        &self,
+        exe: &Path,
+        app_name: &str,
+        pool_path: &Path,
+        generation: u64,
+    ) -> Result<RecoveryReport> {
+        let mut attempt = 0u32;
+        loop {
+            match self.spawn_recovery(exe, app_name, pool_path, Some(generation)) {
+                Ok(report) => return Ok(report),
+                Err(_) if attempt < self.retries => {
+                    attempt += 1;
+                    std::thread::sleep(self.backoff * attempt);
+                }
+                Err(e) => {
+                    return Err(e.wrap(format!(
+                        "pool recovery of {app_name} failed after {} attempts",
+                        attempt + 1
+                    )))
+                }
+            }
+        }
+    }
+
+    /// One recovery child, watchdogged. Public so tests can drive the
+    /// double-kill scenario (spawn, kill mid-recovery, recover again).
+    pub fn spawn_recovery(
+        &self,
+        exe: &Path,
+        app_name: &str,
+        pool_path: &Path,
+        expect_generation: Option<u64>,
+    ) -> Result<RecoveryReport> {
+        let mut args = vec![
+            "pool-child".to_string(),
+            "recover".to_string(),
+            "--app".to_string(),
+            app_name.to_string(),
+            "--pool".to_string(),
+            pool_path.display().to_string(),
+        ];
+        if let Some(g) = expect_generation {
+            args.push("--expect-generation".to_string());
+            args.push(g.to_string());
+        }
+        if self.stall_recovery_ms > 0 {
+            args.push("--stall-ms".to_string());
+            args.push(self.stall_recovery_ms.to_string());
+        }
+        let mut child = Command::new(exe)
+            .args(&args)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .map_err(|e| Error::io(exe, "spawning pool recovery child from", e))?;
+        let rx = line_channel(&mut child);
+        loop {
+            match rx.recv_timeout(self.timeout) {
+                Ok(l) if l.starts_with(RECOVERY_SENTINEL) => {
+                    let _ = child.wait();
+                    return parse_recovery(&l);
+                }
+                Ok(_) => continue,
+                Err(_) => {
+                    kill_and_reap(&mut child);
+                    crate::bail!(
+                        "watchdog: pool recovery child reported nothing within {:?}",
+                        self.timeout
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Child-side entrypoints (invoked via the hidden `pool-child` subcommand)
+// ---------------------------------------------------------------------------
+
+/// `pool-child run`: run `app` under `plan` against the pool at `path`,
+/// halt at op `halt`, report the halt sentinel and park until killed.
+/// If the run completes first, finish the pool cleanly and report done.
+pub fn child_run(app_name: &str, plan_dsl: &str, pool_path: &Path, halt: u64) -> Result<()> {
+    let app = apps::by_name(app_name).ok_or_else(|| crate::err!("unknown app {app_name}"))?;
+    let app = app.as_ref();
+    let plan = resolve_plan_basic(app, plan_dsl)?;
+    let num_regions = app.regions().len();
+    let probe = app
+        .probe_layout()
+        .map_err(|s| crate::err!("app {app_name}: layout probe failed with {s:?}"))?;
+    let hooks = plan.resolve_for(&probe.reg, num_regions, probe.iter_obj)?;
+    let candidates = probe.reg.candidates();
+    let mut pool = PoolEnv::create(pool_path, app_name, &probe.reg, probe.iter_obj, num_regions)?;
+    pool.begin_run()?;
+    let mut env = SimEnv::new(&SimConfig::mini(), num_regions);
+    env.set_hooks(hooks);
+    pool.attach(&mut env)?;
+    env.halt_at = Some(halt);
+    match app.run_sim(&mut env) {
+        Err(Signal::Crash) => {
+            // Inconsistency rendered as f64 bit patterns (hex): exact
+            // round-trip through the pipe, no decimal truncation.
+            let inc: Vec<String> = candidates
+                .iter()
+                .map(|id| format!("{:016x}", env.inconsistent_rate(*id).to_bits()))
+                .collect();
+            println!(
+                "{HALT_SENTINEL} op={} iter={} region={} gen={} inc={}",
+                env.ops(),
+                env.cur_iter(),
+                env.cur_region(),
+                pool.generation(),
+                inc.join(",")
+            );
+            // Park, holding the dirty pool mapping, until SIGKILLed. The
+            // cap bounds the orphan's life if the parent dies first.
+            for _ in 0..3000 {
+                std::thread::sleep(Duration::from_millis(100));
+            }
+            crate::bail!("pool run child was never killed")
+        }
+        Ok(()) => {
+            pool.finish_run()?;
+            println!("{DONE_SENTINEL}");
+            Ok(())
+        }
+        Err(s) => crate::bail!("{app_name}: run failed with {s:?} before the kill point"),
+    }
+}
+
+/// `pool-child recover`: the two-phase restart as a process. Opens the
+/// pool (offline validation, generation pinned if given), optionally
+/// stalls (`--stall-ms`, the watchdog/double-kill test knob), then reads
+/// the surviving state, recomputes and reports the verdict. Recovery
+/// never mutates a resumable pool, so killing this child at any point
+/// leaves the pool recoverable.
+pub fn child_recover(
+    app_name: &str,
+    pool_path: &Path,
+    expect_generation: Option<u64>,
+    stall_ms: u64,
+) -> Result<()> {
+    let app = apps::by_name(app_name).ok_or_else(|| crate::err!("unknown app {app_name}"))?;
+    let app = app.as_ref();
+    let num_regions = app.regions().len();
+    let probe = app
+        .probe_layout()
+        .map_err(|s| crate::err!("app {app_name}: layout probe failed with {s:?}"))?;
+    let (pool, outcome) = PoolEnv::open_expecting(
+        pool_path,
+        app_name,
+        &probe.reg,
+        probe.iter_obj,
+        num_regions,
+        expect_generation,
+    )?;
+    if stall_ms > 0 {
+        std::thread::sleep(Duration::from_millis(stall_ms));
+    }
+    match outcome {
+        RecoveryOutcome::Resumed { generation, iter } => {
+            let (snap_iter, objs) = pool.surviving_objects()?;
+            let snap = Snapshot {
+                iter: snap_iter,
+                objs,
+            };
+            let mut engine = NativeEngine::new();
+            let (response, extra) = app.recompute(&snap, &app.golden(), &mut engine);
+            println!(
+                "{RECOVERY_SENTINEL} outcome=resumed gen={generation} iter={iter} response={} extra={extra}",
+                response.label()
+            );
+        }
+        RecoveryOutcome::ColdStart(reason) => {
+            println!("{RECOVERY_SENTINEL} outcome=coldstart reason=\"{reason}\"");
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Plumbing: line channel, kill, protocol parsing
+// ---------------------------------------------------------------------------
+
+/// Forward a child's stdout lines over a channel so the parent can wait
+/// with a deadline. The reader thread ends when the pipe closes (child
+/// exit or kill); it is detached — nothing joins it — so a stuck child
+/// never wedges the parent.
+fn line_channel(child: &mut Child) -> mpsc::Receiver<String> {
+    let (tx, rx) = mpsc::channel();
+    let stdout = child.stdout.take().expect("child spawned with piped stdout");
+    std::thread::spawn(move || {
+        let reader = BufReader::new(stdout);
+        for line in reader.lines() {
+            let Ok(line) = line else { break };
+            if tx.send(line).is_err() {
+                break;
+            }
+        }
+    });
+    rx
+}
+
+/// SIGKILL (on unix) and reap the child. Errors are ignored: the child
+/// may already have exited, and the wait only exists to avoid zombies.
+fn kill_and_reap(child: &mut Child) {
+    let _ = child.kill();
+    let _ = child.wait();
+}
+
+/// Pull `key=` value out of a sentinel line.
+fn field<'a>(line: &'a str, key: &str) -> Result<&'a str> {
+    line.split_whitespace()
+        .find_map(|tok| tok.strip_prefix(key).and_then(|t| t.strip_prefix('=')))
+        .ok_or_else(|| crate::err!("pool child protocol: missing `{key}=` in `{line}`"))
+}
+
+fn parse_halt(line: &str) -> Result<HaltReport> {
+    let inc_raw = field(line, "inc")?;
+    let inconsistency = if inc_raw.is_empty() {
+        Vec::new()
+    } else {
+        inc_raw
+            .split(',')
+            .map(|h| {
+                u64::from_str_radix(h, 16)
+                    .map(f64::from_bits)
+                    .map_err(|e| crate::err!("pool child protocol: bad inc bits `{h}`: {e}"))
+            })
+            .collect::<Result<Vec<f64>>>()?
+    };
+    Ok(HaltReport {
+        op: field(line, "op")?.parse()?,
+        iter: field(line, "iter")?.parse()?,
+        region: field(line, "region")?.parse()?,
+        generation: field(line, "gen")?.parse()?,
+        inconsistency,
+    })
+}
+
+fn parse_response(s: &str) -> Result<Response> {
+    Ok(match s {
+        "S1" => Response::S1,
+        "S2" => Response::S2,
+        "S3" => Response::S3,
+        "S4" => Response::S4,
+        other => crate::bail!("pool child protocol: unknown response class `{other}`"),
+    })
+}
+
+fn parse_recovery(line: &str) -> Result<RecoveryReport> {
+    let resumed = field(line, "outcome")? == "resumed";
+    if resumed {
+        Ok(RecoveryReport {
+            resumed: true,
+            generation: field(line, "gen")?.parse()?,
+            iter: field(line, "iter")?.parse()?,
+            response: Some(parse_response(field(line, "response")?)?),
+            extra_iters: field(line, "extra")?.parse()?,
+            reason: String::new(),
+        })
+    } else {
+        // The reason is quoted free text; everything after `reason="`.
+        let reason = line
+            .split_once("reason=\"")
+            .map(|(_, r)| r.trim_end_matches('"').to_string())
+            .unwrap_or_default();
+        Ok(RecoveryReport {
+            resumed: false,
+            generation: 0,
+            iter: 0,
+            response: None,
+            extra_iters: 0,
+            reason,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn protocol_lines_round_trip() {
+        let h = parse_halt(&format!(
+            "{HALT_SENTINEL} op=123 iter=4 region=1 gen=2 inc={:016x},{:016x}",
+            0.25f64.to_bits(),
+            0f64.to_bits()
+        ))
+        .unwrap();
+        assert_eq!((h.op, h.iter, h.region, h.generation), (123, 4, 1, 2));
+        assert_eq!(h.inconsistency, vec![0.25, 0.0]);
+
+        let r = parse_recovery(&format!(
+            "{RECOVERY_SENTINEL} outcome=resumed gen=2 iter=4 response=S2 extra=3"
+        ))
+        .unwrap();
+        assert!(r.resumed);
+        assert_eq!((r.generation, r.iter, r.extra_iters), (2, 4, 3));
+        assert_eq!(r.response, Some(Response::S2));
+
+        let r = parse_recovery(&format!(
+            "{RECOVERY_SENTINEL} outcome=coldstart reason=\"pool header checksum mismatch\""
+        ))
+        .unwrap();
+        assert!(!r.resumed);
+        assert_eq!(r.reason, "pool header checksum mismatch");
+
+        assert!(parse_halt("EC-POOL-HALT op=1").is_err(), "missing fields");
+        assert!(parse_recovery("EC-RECOVERY outcome=resumed gen=1 iter=0 response=S9 extra=0").is_err());
+    }
+
+    #[test]
+    fn basic_plan_resolution_matches_runner_shorthands() {
+        let app = apps::by_name("toy").expect("toy app registered");
+        let none = resolve_plan_basic(app.as_ref(), "none").unwrap();
+        assert_eq!(none.dsl(), "none");
+        let all = resolve_plan_basic(app.as_ref(), "all").unwrap();
+        assert!(!all.entries.is_empty(), "toy has candidates beyond the bookmark");
+        assert!(resolve_plan_basic(app.as_ref(), "critical").is_err());
+    }
+}

@@ -5,6 +5,7 @@
 //! end-to-end workflow composed over them.
 
 pub mod campaign;
+pub mod killcampaign;
 pub mod plan;
 pub mod planner;
 pub mod regions;
@@ -13,6 +14,7 @@ pub mod stats;
 pub mod workflow;
 
 pub use campaign::{Campaign, CampaignResult, ShardedCampaign, TestRecord};
+pub use killcampaign::KillCampaign;
 pub use plan::{PersistPlan, PlanSpec};
 pub use planner::{PlacerSpec, PlannerSpec, SelectorSpec};
 pub use workflow::{Workflow, WorkflowSummary};

@@ -15,12 +15,13 @@ use easycrash::api::{ExperimentSpec, Runner};
 use easycrash::apps;
 use easycrash::easycrash::PlannerSpec;
 use easycrash::util::cli::Args;
-use easycrash::util::error::{Context, Result};
+use easycrash::util::error::Result;
 
 const VALUED: &[&str] = &[
     "app", "apps", "tests", "seed", "engine", "plan", "plans", "planner", "planners", "spec",
     "ts", "tau", "mtbf", "tchk", "nvm", "out", "shards", "trials", "work", "dist",
-    "snapshot-interval",
+    "snapshot-interval", "pool", "halt", "timeout-secs", "retries", "backoff-ms", "stall-ms",
+    "expect-generation",
 ];
 
 fn main() -> Result<()> {
@@ -31,6 +32,8 @@ fn main() -> Result<()> {
     match cmd {
         "probe" => probe(&args),
         "campaign" => cmd_campaign(&args),
+        "kill-campaign" => cmd_kill_campaign(&args),
+        "pool-child" => cmd_pool_child(&args),
         "experiment" => cmd_experiment(&args),
         "efficiency" => cmd_efficiency(&args),
         "planner-matrix" => cmd_planner_matrix(&args),
@@ -145,13 +148,96 @@ fn cmd_campaign(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The real-process crash campaign: for each sampled kill point, spawn
+/// this binary as a `pool-child run` against a durable pool file,
+/// SIGKILL it mid-flight, restart with `pool-child recover` (watchdog +
+/// bounded retry) and classify the recovery. `--plan` takes the DSL
+/// minus `critical` (no workflow selection in the children).
+fn cmd_kill_campaign(args: &Args) -> Result<()> {
+    use easycrash::easycrash::KillCampaign;
+    let name = args.get_or("app", "toy").to_string();
+    let plan_dsl = args.get_or("plan", "all").to_string();
+    let app = apps::by_name(&name).ok_or_else(|| easycrash::err!("unknown app `{name}`"))?;
+    let kc = KillCampaign {
+        tests: args.usize_or("tests", 5)?,
+        seed: args.u64_or("seed", 0xEC)?,
+        timeout: std::time::Duration::from_secs(args.u64_or("timeout-secs", 60)?),
+        retries: args.u64_or("retries", 2)? as u32,
+        backoff: std::time::Duration::from_millis(args.u64_or("backoff-ms", 200)?),
+        ..KillCampaign::default()
+    };
+    let exe = std::env::current_exe()
+        .map_err(|e| easycrash::util::error::Error::io("argv[0]", "resolving", e))?;
+    let default_pool = std::env::temp_dir()
+        .join(format!("easycrash-kill-{}.pool", std::process::id()));
+    let pool = std::path::PathBuf::from(
+        args.get_or("pool", &default_pool.display().to_string()).to_string(),
+    );
+    let t0 = Instant::now();
+    let res = kc.run_killed(&exe, app.as_ref(), &plan_dsl, &pool)?;
+    for r in &res.records {
+        println!(
+            "kill op={} iter={} region={} response={} extra_iters={}",
+            r.op,
+            r.iter,
+            r.region,
+            r.response.label(),
+            r.extra_iters
+        );
+    }
+    let f = res.response_fractions();
+    println!(
+        "recovery summary: app={name} plan={plan_dsl} tests={} recomputability={} \
+         S1={} S2={} S3={} S4={} wall={:.2?}",
+        kc.tests,
+        easycrash::util::pct(res.recomputability()),
+        easycrash::util::pct(f[0]),
+        easycrash::util::pct(f[1]),
+        easycrash::util::pct(f[2]),
+        easycrash::util::pct(f[3]),
+        t0.elapsed(),
+    );
+    Ok(())
+}
+
+/// Hidden child-side entrypoint of the kill harness (`pool-child
+/// run|recover`) — see `easycrash::easycrash::killcampaign`. Not listed
+/// in help: only the harness spawns it.
+fn cmd_pool_child(args: &Args) -> Result<()> {
+    use easycrash::easycrash::killcampaign;
+    let mode = args.positional.get(1).map(|s| s.as_str()).unwrap_or("");
+    let name = args
+        .get("app")
+        .ok_or_else(|| easycrash::err!("pool-child requires --app"))?;
+    let pool = std::path::Path::new(
+        args.get("pool")
+            .ok_or_else(|| easycrash::err!("pool-child requires --pool"))?,
+    );
+    match mode {
+        "run" => {
+            let plan = args.get_or("plan", "none");
+            let halt = args.u64_or("halt", 0)?;
+            easycrash::ensure!(halt > 0, "pool-child run requires --halt <op>");
+            killcampaign::child_run(name, plan, pool, halt)
+        }
+        "recover" => {
+            let expect = match args.get("expect-generation") {
+                None => None,
+                Some(_) => Some(args.u64_or("expect-generation", 0)?),
+            };
+            killcampaign::child_recover(name, pool, expect, args.u64_or("stall-ms", 0)?)
+        }
+        other => easycrash::bail!("pool-child mode must be `run` or `recover`, got `{other}`"),
+    }
+}
+
 /// Spec from a file (`--spec exp.json`, overridable per-flag) or
 /// entirely from flags — shared by `experiment` and `efficiency`.
 fn spec_from_file_or_flags(args: &Args) -> Result<ExperimentSpec> {
     match args.get("spec") {
         Some(path) => {
             let text = std::fs::read_to_string(path)
-                .with_context(|| format!("reading spec file {path}"))?;
+                .map_err(|e| easycrash::util::error::Error::io(path, "reading spec file", e))?;
             ExperimentSpec::from_json(&text)?.with_args(args)
         }
         None => ExperimentSpec::from_args(args),

@@ -185,9 +185,14 @@ fn print_help() {
     println!(
         "easycrash — reproduction of 'EasyCrash: Exploring Non-Volatility of NVM for HPC Under Failures'
 
-USAGE: easycrash <command> [--tests N] [--seed S] [--engine native|pjrt]
+USAGE: easycrash <command> [--tests N] [--seed S] [--engine native|pjrt|pool]
                  [--shards N] [--ts F] [--tau F] [--planner SEL[+PLACER]]
                  [--snapshot-interval N] [--paper-scale] [--verbose]
+
+--engine pool runs every campaign test against a durable mmap-backed pool
+file: the app is halted at the sampled op, its architectural state is
+discarded, and recovery is a two-phase restart from what the pool file
+retained (shards must stay 1; verified mode does not apply).
 
 --shards N runs every crash campaign across N worker threads; results are
 bit-identical to --shards 1 under the same seed (native engine only).
@@ -225,6 +230,12 @@ tools:
   list                         list benchmarks
   probe    --app A [--tests N] [--shards N] timing probe for one app
   campaign --app A --plan none|all|critical|obj@region/x[,..] [--shards N]
+  kill-campaign --app A [--plan none|all|obj@region/x[,..]] [--tests N]
+             [--seed S] [--pool FILE] [--timeout-secs N] [--retries N]
+             [--backoff-ms N]
+             real-process crash campaign: spawn a child per kill point,
+             SIGKILL it against the pool file, restart and classify the
+             two-phase recovery (watchdog + bounded retry)
   experiment [--spec FILE.json] [--apps A,B] [--plans P1;P2;..] [--out F]
              [--verified|--no-verified]
              run an apps x plans experiment spec end to end and write the

@@ -60,6 +60,34 @@ impl StepEngine for NativeEngine {
     }
 }
 
+/// Marker engine for the durable-pool backend (`--engine pool`): crash
+/// campaigns run each test against an mmap'd pool file and recover from
+/// what survived (see [`crate::sim::pool`] and
+/// [`crate::easycrash::killcampaign`]). Recomputation itself uses the
+/// apps' native kernels, so AOT calls are not served.
+#[derive(Default)]
+pub struct PoolEngine;
+
+impl PoolEngine {
+    pub fn new() -> PoolEngine {
+        PoolEngine
+    }
+}
+
+impl StepEngine for PoolEngine {
+    fn name(&self) -> &'static str {
+        "pool"
+    }
+
+    fn supports(&self, _fname: &str) -> bool {
+        false
+    }
+
+    fn call_f32(&mut self, fname: &str, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        crate::bail!("pool engine does not serve AOT calls (asked for `{fname}`)")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

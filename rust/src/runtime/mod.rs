@@ -9,5 +9,5 @@
 pub mod engine;
 pub mod pjrt;
 
-pub use engine::{NativeEngine, StepEngine};
+pub use engine::{NativeEngine, PoolEngine, StepEngine};
 pub use pjrt::PjrtEngine;

@@ -350,10 +350,14 @@ pub struct SimEnv<'a> {
     main_start: Option<u64>,
     /// Snapshot-tape recording interval in ops (`None` = off). Enabled by
     /// [`SimEnv::record_snapshots`] on the campaign's profile run only —
-    /// harvest replays must never re-record.
+    /// harvest replays must never re-record. Doubles whenever the tape
+    /// overflows `snap_cap` and gets thinned.
     snap_every: Option<u64>,
     /// Op index of the most recent tape capture.
     snap_last_ops: u64,
+    /// Tape length bound ([`MAX_SNAPSHOTS`] normally; tests shrink it to
+    /// exercise the thinning path cheaply).
+    snap_cap: usize,
     /// Snapshots recorded at iteration boundaries during this run
     /// (extracted with [`SimEnv::take_tape`]).
     tape: SnapshotTape,
@@ -382,16 +386,26 @@ impl<'a> SimEnv<'a> {
             main_start: None,
             snap_every: None,
             snap_last_ops: 0,
+            snap_cap: MAX_SNAPSHOTS,
             tape: SnapshotTape::new(),
         }
     }
 
     /// Enable snapshot-tape recording: capture an [`EnvSnapshot`] at the
-    /// first iteration boundary after every `every` instrumented ops (the
-    /// tape is bounded by [`MAX_SNAPSHOTS`]; recording stops silently once
-    /// full). Campaigns enable this on the profile run only.
+    /// first iteration boundary after every `every` instrumented ops. The
+    /// tape is bounded by [`MAX_SNAPSHOTS`]: when a capture would exceed
+    /// the bound the tape is thinned (every other entry dropped) and the
+    /// interval doubles, so recording degrades in density instead of
+    /// stopping. Campaigns enable this on the profile run only.
     pub fn record_snapshots(&mut self, every: u64) {
         self.snap_every = Some(every.max(1));
+    }
+
+    /// [`SimEnv::record_snapshots`] with an explicit tape bound — test
+    /// hook for the overflow/thinning path (a real tape is 4096 envs).
+    pub(crate) fn record_snapshots_capped(&mut self, every: u64, cap: usize) {
+        self.snap_every = Some(every.max(1));
+        self.snap_cap = cap.max(2);
     }
 
     /// Extract the recorded snapshot tape, leaving an empty one behind.
@@ -753,7 +767,14 @@ impl<'a> Env for SimEnv<'a> {
         // last capture. Boundaries are the only resumable points — `step`
         // is opaque, so a restored run re-enters at `cur_iter`.
         if let Some(every) = self.snap_every {
-            if self.ops - self.snap_last_ops >= every && self.tape.len() < MAX_SNAPSHOTS {
+            if self.ops - self.snap_last_ops >= every {
+                // Graceful overflow: instead of silently stopping at the
+                // bound, halve the tape and double the interval — long
+                // runs keep full-span (coarser) coverage.
+                if self.tape.len() >= self.snap_cap {
+                    self.tape.thin();
+                    self.snap_every = Some(every.saturating_mul(2));
+                }
                 let snap = self.snapshot();
                 self.snap_last_ops = self.ops;
                 self.tape.push(snap);

@@ -4,6 +4,9 @@
 //! this exact: divergence between the two images happens only on lines that
 //! are currently dirty in the (metadata-only) cache hierarchy.
 
+use std::sync::Arc;
+
+use super::pool::PoolMap;
 use super::{LINE, LINE_SHIFT};
 
 /// The simulated main memory.
@@ -15,6 +18,12 @@ pub struct Memory {
     /// Persisted image: updated only by LLC write-backs and flushes. After a
     /// crash, this is all that survives.
     pub nvm: Vec<u8>,
+    /// Durable mirror of the `nvm` image (pool engine): every line
+    /// write-back is also applied to the mmap'd pool arena, so killing
+    /// the process loses exactly the lines that were still dirty in the
+    /// modeled hierarchy — the pool file *is* the `nvm` image on disk.
+    /// `None` for ordinary in-process simulation.
+    pub(crate) mirror: Option<Arc<PoolMap>>,
 }
 
 impl Memory {
@@ -24,7 +33,14 @@ impl Memory {
         Memory {
             arch: vec![0u8; sz],
             nvm: vec![0u8; sz],
+            mirror: None,
         }
+    }
+
+    /// Attach a durable pool arena that mirrors every subsequent line
+    /// write-back (the pool engine's env construction path).
+    pub(crate) fn set_mirror(&mut self, map: Arc<PoolMap>) {
+        self.mirror = Some(map);
     }
 
     #[inline]
@@ -75,10 +91,15 @@ impl Memory {
     // ----- persistence -----
 
     /// Write line `line_idx` back to NVM (the only way `nvm` changes).
+    /// With a pool mirror attached the line also lands in the mmap'd
+    /// arena, at the same cache-line granularity the hierarchy models.
     #[inline]
     pub fn writeback_line(&mut self, line_idx: usize) {
         let off = line_idx << LINE_SHIFT;
         self.nvm[off..off + LINE].copy_from_slice(&self.arch[off..off + LINE]);
+        if let Some(m) = &self.mirror {
+            m.write_arena(off, &self.arch[off..off + LINE]);
+        }
     }
 
     /// Bytes at which the two images differ within `[base, base+len)` —

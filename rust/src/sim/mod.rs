@@ -35,6 +35,7 @@ pub mod env;
 pub mod hierarchy;
 pub mod memory;
 pub mod objects;
+pub mod pool;
 pub mod snapshot;
 pub mod timing;
 
@@ -45,6 +46,7 @@ pub use env::{
 pub use hierarchy::{FlushKind, HierStats, Hierarchy};
 pub use memory::Memory;
 pub use objects::{ObjId, ObjSpec, Registry, Ty};
+pub use pool::{ColdStartReason, PoolEnv, PoolHeader, PoolMap, RecoveryOutcome};
 pub use snapshot::{EnvSnapshot, LayoutEnv, LayoutProbe, SnapshotTape};
 
 /// Cache line size in bytes (fixed, like the paper's 64 B lines).

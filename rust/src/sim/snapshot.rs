@@ -246,7 +246,7 @@ impl EnvSnapshot {
         let main_start = has_main_start.then_some(main_start_val);
         r.finish()?;
         let snap = EnvSnapshot {
-            mem: Memory { arch, nvm },
+            mem: Memory { arch, nvm, mirror: None },
             hier,
             reg,
             clock,
@@ -307,6 +307,21 @@ impl SnapshotTape {
     /// compare), so only earlier snapshots are valid restore points.
     pub fn index_before(&self, op: u64) -> Option<usize> {
         self.snaps.partition_point(|s| s.ops < op).checked_sub(1)
+    }
+
+    /// Halve the tape in place by dropping every other entry (the odd
+    /// indices), keeping the first. Called when recording would exceed
+    /// the tape bound: the surviving entries stay strictly ascending in
+    /// `ops` — they are a subsequence — so [`SnapshotTape::index_before`]
+    /// keeps returning a valid (merely older) restore point. The caller
+    /// doubles its recording interval to match the new density.
+    pub(crate) fn thin(&mut self) {
+        let mut i = 0;
+        self.snaps.retain(|_| {
+            let keep = i % 2 == 0;
+            i += 1;
+            keep
+        });
     }
 }
 
@@ -620,5 +635,77 @@ mod tests {
             }
         }
         assert!(env.take_tape().is_empty(), "take_tape drains the tape");
+    }
+
+    #[test]
+    fn tape_thinning_keeps_index_before_correct() {
+        let cfg = SimConfig::mini();
+        let mut env = SimEnv::new(&cfg, 1);
+        let x = env.alloc(ObjSpec::f64("x", 8, true));
+        let mut tape = SnapshotTape::new();
+        for round in 0..7 {
+            for i in 0..8 {
+                env.st(x, i, round as f64).unwrap();
+            }
+            tape.push(env.snapshot()); // ops = 8, 16, .., 56
+        }
+        tape.thin();
+        // Even indices survive: ops 8, 24, 40, 56 — still strictly
+        // ascending, so the strictly-before rule holds on the thinned
+        // tape (just with older restore points).
+        assert_eq!(tape.len(), 4);
+        let ops: Vec<u64> = (0..tape.len()).map(|i| tape.get(i).ops()).collect();
+        assert_eq!(ops, vec![8, 24, 40, 56]);
+        assert!(ops.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(tape.index_before(8), None);
+        assert_eq!(tape.index_before(9), Some(0));
+        assert_eq!(tape.index_before(24), Some(0), "strictly before ops==24");
+        assert_eq!(tape.index_before(25), Some(1));
+        assert_eq!(tape.index_before(41), Some(2));
+        assert_eq!(tape.index_before(u64::MAX), Some(3));
+        // A second thin keeps halving without disturbing order.
+        tape.thin();
+        assert_eq!(tape.len(), 2);
+        assert_eq!(tape.get(0).ops(), 8);
+        assert_eq!(tape.get(1).ops(), 40);
+        assert_eq!(tape.index_before(40), Some(0));
+        assert_eq!(tape.index_before(41), Some(1));
+    }
+
+    #[test]
+    fn overflowing_tape_thins_instead_of_stopping() {
+        let cfg = SimConfig::mini();
+        let mut env = SimEnv::new(&cfg, 1);
+        // Interval 1 op + tiny cap: every iteration wants a capture, so
+        // the cap is hit repeatedly and the interval keeps doubling.
+        env.record_snapshots_capped(1, 4);
+        let x = env.alloc(ObjSpec::f64("x", 16, true));
+        let iters = 40u64;
+        for it in 0..iters {
+            env.region(0).unwrap();
+            for i in 0..16 {
+                env.st(x, i, it as f64).unwrap();
+            }
+            env.iter_end(it).unwrap();
+        }
+        let last_ops = env.ops();
+        let tape = env.take_tape();
+        assert!(tape.len() <= 4, "tape bounded by the cap, got {}", tape.len());
+        assert!(!tape.is_empty());
+        let ops: Vec<u64> = (0..tape.len()).map(|i| tape.get(i).ops()).collect();
+        assert!(ops.windows(2).all(|w| w[0] < w[1]), "ascending after thinning");
+        // Recording never stopped: the newest snapshot is from the later
+        // half of the run, not frozen at the pre-overflow prefix.
+        assert!(
+            *ops.last().unwrap() > last_ops / 2,
+            "tape covers the full run (last capture at op {} of {})",
+            ops.last().unwrap(),
+            last_ops
+        );
+        // And index_before still answers correctly against the kept set.
+        for (i, &o) in ops.iter().enumerate() {
+            assert_eq!(tape.index_before(o + 1), Some(i));
+        }
+        assert_eq!(tape.index_before(ops[0]), None);
     }
 }

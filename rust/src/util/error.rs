@@ -26,6 +26,16 @@ impl Error {
             msg: format!("{c}: {}", self.msg),
         }
     }
+
+    /// An IO failure with its path and the operation that failed
+    /// (`op path: source`). The single constructor every file/mmap
+    /// error site funnels through, so failures always say *which* file
+    /// and *what* was being done to it.
+    pub fn io(path: impl AsRef<std::path::Path>, op: &str, source: impl fmt::Display) -> Error {
+        Error {
+            msg: format!("{op} {}: {source}", path.as_ref().display()),
+        }
+    }
 }
 
 impl fmt::Display for Error {
@@ -108,6 +118,15 @@ mod tests {
     fn question_mark_converts_std_errors() {
         let e = io_fail().unwrap_err();
         assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn io_carries_path_and_operation() {
+        let e = Error::io("/tmp/x.pool", "opening pool file", "permission denied");
+        assert_eq!(e.to_string(), "opening pool file /tmp/x.pool: permission denied");
+        let src = std::fs::read("/definitely/not/a/path").unwrap_err();
+        let e = Error::io(std::path::Path::new("/definitely/not/a/path"), "reading", src);
+        assert!(e.to_string().starts_with("reading /definitely/not/a/path: "));
     }
 
     #[test]

@@ -1,0 +1,129 @@
+//! Real-process kill harness: spawn this crate's binary against a pool
+//! file, SIGKILL it at the sampled op, restart and classify — and the
+//! crash-during-recovery (double kill) / watchdog-timeout paths.
+//!
+//! These tests exec `CARGO_BIN_EXE_easycrash`, so they only run through
+//! `cargo test` (which builds the binary first).
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use easycrash::apps::{self, CrashApp};
+use easycrash::easycrash::killcampaign::resolve_plan_basic;
+use easycrash::easycrash::KillCampaign;
+use easycrash::runtime::NativeEngine;
+use easycrash::sim::{PoolEnv, RecoveryOutcome, Signal, SimConfig, SimEnv};
+
+fn exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_easycrash"))
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("easycrash-killtest-{}-{name}.pool", std::process::id()))
+}
+
+/// Halt a run mid-flight in-process and abandon it, leaving the same
+/// dirty pool file a SIGKILLed child leaves. Returns its generation.
+fn dirty_pool(path: &Path, app: &dyn CrashApp, halt: u64) -> u64 {
+    let plan = resolve_plan_basic(app, "all").unwrap();
+    let probe = app.probe_layout().unwrap();
+    let num_regions = app.regions().len();
+    let hooks = plan.resolve_for(&probe.reg, num_regions, probe.iter_obj).unwrap();
+    let mut pool =
+        PoolEnv::create(path, app.name(), &probe.reg, probe.iter_obj, num_regions).unwrap();
+    pool.begin_run().unwrap();
+    let generation = pool.generation();
+    let mut env = SimEnv::new(&SimConfig::mini(), num_regions);
+    env.set_hooks(hooks);
+    pool.attach(&mut env).unwrap();
+    env.halt_at = Some(halt);
+    assert!(matches!(app.run_sim(&mut env), Err(Signal::Crash)));
+    generation
+}
+
+/// The acceptance smoke: a spawn→SIGKILL→restart→verify campaign on the
+/// toy app completes deterministically and agrees record-by-record with
+/// the in-process pool campaign over the same seed.
+#[test]
+fn sigkill_campaign_matches_the_in_process_pool_campaign() {
+    let app = apps::by_name("toy").unwrap();
+    let app = app.as_ref();
+    let plan = resolve_plan_basic(app, "all").unwrap();
+    let kc = KillCampaign { tests: 3, seed: 0x417, ..KillCampaign::default() };
+    let killed = kc.run_killed(&exe(), app, "all", &tmp("killed")).unwrap();
+    let mut engine = NativeEngine::new();
+    let in_process = kc.run_in_process(app, &plan, &tmp("inproc"), &mut engine).unwrap();
+    assert_eq!(killed.records.len(), 3);
+    assert_eq!(killed.records, in_process.records);
+    // Every kill recovered into a classified response.
+    assert!(killed.records.iter().all(|r| r.op > 0));
+}
+
+/// Crash during recovery: a recovery child is SIGKILLed mid-restart (the
+/// watchdog fires during its stall); the pool must stay resumable — the
+/// offline phase never mutates a resumable pool — and a second recovery
+/// must succeed.
+#[test]
+fn double_kill_leaves_the_pool_recoverable() {
+    let app = apps::by_name("toy").unwrap();
+    let app = app.as_ref();
+    let path = tmp("doublekill");
+    let generation = dirty_pool(&path, app, 20_000);
+
+    // First recovery attempt: stalled child, short watchdog — the parent
+    // SIGKILLs it mid-recovery and reports the timeout.
+    let stalled = KillCampaign {
+        timeout: Duration::from_millis(500),
+        stall_recovery_ms: 5_000,
+        ..KillCampaign::default()
+    };
+    let err = stalled.spawn_recovery(&exe(), "toy", &path, Some(generation));
+    assert!(err.is_err(), "the watchdog must kill the stalled recovery");
+
+    // Second recovery: the pool survived the killed recovery attempt.
+    let kc = KillCampaign::default();
+    let report = kc.spawn_recovery(&exe(), "toy", &path, Some(generation)).unwrap();
+    assert!(report.resumed, "second recovery must resume: {}", report.reason);
+    assert_eq!(report.generation, generation);
+    assert!(report.response.is_some());
+
+    // And the in-process two-phase restart agrees.
+    let probe = app.probe_layout().unwrap();
+    let (_, outcome) = PoolEnv::open_expecting(
+        &path,
+        "toy",
+        &probe.reg,
+        probe.iter_obj,
+        app.regions().len(),
+        Some(generation),
+    )
+    .unwrap();
+    assert!(matches!(outcome, RecoveryOutcome::Resumed { generation: g, .. } if g == generation));
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The retry/backoff loop: with a stalled recovery child and a retry
+/// budget of 0, the harness reports the watchdog error; with the stall
+/// removed the same pool recovers on the first attempt.
+#[test]
+fn recovery_watchdog_times_out_and_reports() {
+    let app = apps::by_name("toy").unwrap();
+    let app = app.as_ref();
+    let path = tmp("watchdog");
+    let generation = dirty_pool(&path, app, 20_000);
+    let stalled = KillCampaign {
+        timeout: Duration::from_millis(400),
+        retries: 0,
+        stall_recovery_ms: 5_000,
+        ..KillCampaign::default()
+    };
+    let err = stalled.spawn_recovery(&exe(), "toy", &path, Some(generation)).unwrap_err();
+    assert!(
+        err.to_string().contains("watchdog"),
+        "error must name the watchdog: {err}"
+    );
+    let ok = KillCampaign::default();
+    let report = ok.spawn_recovery(&exe(), "toy", &path, Some(generation)).unwrap();
+    assert!(report.resumed);
+    let _ = std::fs::remove_file(&path);
+}

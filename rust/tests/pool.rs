@@ -1,0 +1,239 @@
+//! Durable-pool engine acceptance: the crash matrix where the simulated
+//! campaign and the pool engine must agree record-by-record, pinned
+//! flush-boundary kills, recovery over damaged pool files (typed cold
+//! starts, never panics) and the `--engine pool` spec round-trip.
+
+use std::path::{Path, PathBuf};
+
+use easycrash::api::{EngineKind, ExperimentSpec, Runner};
+use easycrash::apps::{self, CrashApp};
+use easycrash::easycrash::killcampaign::resolve_plan_basic;
+use easycrash::easycrash::{Campaign, KillCampaign, PersistPlan, PlanSpec};
+use easycrash::runtime::NativeEngine;
+use easycrash::sim::{ColdStartReason, PoolEnv, RecoveryOutcome, Signal, SimConfig, SimEnv};
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("easycrash-pooltest-{}-{name}.pool", std::process::id()))
+}
+
+/// The iteration counter the app would report if halted at op `p` —
+/// monotone in `p`, so a binary search over it finds the exact op at
+/// which an iteration (and with it the plan's iteration-end flush)
+/// completes.
+fn iter_at(app: &dyn CrashApp, plan: &PersistPlan, p: u64) -> u64 {
+    let probe = app.probe_layout().unwrap();
+    let num_regions = app.regions().len();
+    let hooks = plan.resolve_for(&probe.reg, num_regions, probe.iter_obj).unwrap();
+    let mut env = SimEnv::new(&SimConfig::mini(), num_regions);
+    env.set_hooks(hooks);
+    env.halt_at = Some(p);
+    match app.run_sim(&mut env) {
+        Err(Signal::Crash) => env.cur_iter(),
+        other => panic!("expected a halt at op {p}, got {other:?}"),
+    }
+}
+
+/// Leave a *dirty* pool file behind, as a killed process would: begin a
+/// run, halt mid-flight, drop everything without `finish_run`. Returns
+/// the generation the run wrote.
+fn dirty_pool(path: &Path, app: &dyn CrashApp, plan: &PersistPlan, halt: u64) -> u64 {
+    let probe = app.probe_layout().unwrap();
+    let num_regions = app.regions().len();
+    let hooks = plan.resolve_for(&probe.reg, num_regions, probe.iter_obj).unwrap();
+    let mut pool =
+        PoolEnv::create(path, app.name(), &probe.reg, probe.iter_obj, num_regions).unwrap();
+    pool.begin_run().unwrap();
+    let generation = pool.generation();
+    let mut env = SimEnv::new(&SimConfig::mini(), num_regions);
+    env.set_hooks(hooks);
+    pool.attach(&mut env).unwrap();
+    env.halt_at = Some(halt);
+    assert!(matches!(app.run_sim(&mut env), Err(Signal::Crash)));
+    generation
+}
+
+// -- crash-matrix parity ----------------------------------------------------
+
+/// The ISSUE's acceptance matrix: 3 apps x 2 plans, seeded kill points;
+/// the simulated engine (discard dirty lines, keep running) and the pool
+/// engine (write-through file, real two-phase restart) must produce
+/// identical records — op, iter, region, response class, extra
+/// iterations and the per-candidate inconsistency bits.
+#[test]
+fn pool_and_simulated_engines_agree_on_the_crash_matrix() {
+    for app_name in ["toy", "adi", "fft"] {
+        let app = apps::by_name(app_name).unwrap();
+        let app = app.as_ref();
+        for plan_dsl in ["none", "all"] {
+            let plan = resolve_plan_basic(app, plan_dsl).unwrap();
+            let kc = KillCampaign { tests: 4, seed: 0x5EED, ..KillCampaign::default() };
+            let sim = Campaign { tests: kc.tests, seed: kc.seed, cfg: kc.cfg, verified: false };
+            let mut engine = NativeEngine::new();
+            let simulated = sim.run(app, &plan, &mut engine).unwrap();
+            let pool_path = tmp(&format!("matrix-{app_name}-{plan_dsl}"));
+            let pooled = kc.run_in_process(app, &plan, &pool_path, &mut engine).unwrap();
+            assert_eq!(
+                simulated.records, pooled.records,
+                "simulated vs pool disagree for {app_name}/{plan_dsl}"
+            );
+            assert!(!pool_path.exists(), "campaign must clean up its pool file");
+        }
+    }
+}
+
+/// Kills pinned to an exact flush boundary: one op before the last op of
+/// an iteration, at it, and one op after the iteration-end flush. Both
+/// engines must classify all three identically.
+#[test]
+fn flush_boundary_kills_agree_between_engines() {
+    let app = apps::by_name("toy").unwrap();
+    let app = app.as_ref();
+    let plan = resolve_plan_basic(app, "all").unwrap();
+    let kc = KillCampaign { tests: 3, seed: 0xB0B, ..KillCampaign::default() };
+    let sim = Campaign { tests: kc.tests, seed: kc.seed, cfg: kc.cfg, verified: false };
+    let profile = sim.profile(app, &plan).unwrap();
+    // Find the smallest op at which the first main-loop iteration has
+    // completed (and its iteration-end flush has run).
+    let target = iter_at(app, &plan, profile.ops_main_start + 1) + 1;
+    let (mut lo, mut hi) = (profile.ops_main_start + 1, profile.ops_total - 1);
+    assert!(iter_at(app, &plan, hi) >= target, "run must span an iteration end");
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if iter_at(app, &plan, mid) >= target {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    let boundary = lo;
+    let points = vec![boundary - 1, boundary, boundary + 1];
+    let mut engine = NativeEngine::new();
+    let simulated = sim.run_at(app, &plan, points.clone(), &mut engine).unwrap();
+    let pool_path = tmp("boundary");
+    let pooled = kc.run_in_process_at(app, &plan, points, &pool_path, &mut engine).unwrap();
+    assert_eq!(simulated.records, pooled.records);
+    // The probe really straddles the boundary: the iteration counter
+    // differs across the three records.
+    assert!(simulated.records[0].iter < simulated.records[2].iter);
+}
+
+// -- recovery edge cases (never panic, always typed) ------------------------
+
+#[test]
+fn recovery_degrades_gracefully_on_damaged_pools() {
+    let app = apps::by_name("toy").unwrap();
+    let app = app.as_ref();
+    let probe = app.probe_layout().unwrap();
+    let num_regions = app.regions().len();
+    let open = |path: &Path| PoolEnv::open(path, "toy", &probe.reg, probe.iter_obj, num_regions);
+    let path = tmp("damage");
+
+    // Missing file: a first boot, not an error.
+    let _ = std::fs::remove_file(&path);
+    let (_, outcome) = open(&path).unwrap();
+    assert!(matches!(outcome, RecoveryOutcome::ColdStart(ColdStartReason::NoPool)));
+
+    // Zero-length pool file.
+    std::fs::write(&path, b"").unwrap();
+    let (_, outcome) = open(&path).unwrap();
+    assert!(matches!(outcome, RecoveryOutcome::ColdStart(ColdStartReason::EmptyPool)));
+
+    // Header truncated mid-field.
+    std::fs::write(&path, b"ECPL\x01\x00\x00").unwrap();
+    let (_, outcome) = open(&path).unwrap();
+    assert!(matches!(
+        outcome,
+        RecoveryOutcome::ColdStart(ColdStartReason::TruncatedHeader { len: 7 })
+    ));
+
+    // A genuinely dirty pool, then: generation pinning, version skew and
+    // checksum damage, each a typed cold start (or skew error path) with
+    // no panic.
+    let generation = dirty_pool(&path, app, &plan_all(app), 20_000);
+    assert_eq!(generation, 1);
+    let (_, outcome) = PoolEnv::open_expecting(
+        &path,
+        "toy",
+        &probe.reg,
+        probe.iter_obj,
+        num_regions,
+        Some(999),
+    )
+    .unwrap();
+    assert!(matches!(
+        outcome,
+        RecoveryOutcome::ColdStart(ColdStartReason::GenerationSkew { expected: 999, found: 1 })
+    ));
+
+    dirty_pool(&path, app, &plan_all(app), 20_000);
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[4] = 99; // version field
+    std::fs::write(&path, &bytes).unwrap();
+    let (_, outcome) = open(&path).unwrap();
+    assert!(matches!(
+        outcome,
+        RecoveryOutcome::ColdStart(ColdStartReason::VersionSkew { found: 99 })
+    ));
+
+    dirty_pool(&path, app, &plan_all(app), 20_000);
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[40] ^= 0xFF; // inside the checksummed header body
+    std::fs::write(&path, &bytes).unwrap();
+    let (_, outcome) = open(&path).unwrap();
+    assert!(matches!(outcome, RecoveryOutcome::ColdStart(ColdStartReason::BadChecksum)));
+
+    // And a dirty pool opened under a *different* app's layout.
+    dirty_pool(&path, app, &plan_all(app), 20_000);
+    let other = apps::by_name("adi").unwrap();
+    let oprobe = other.probe_layout().unwrap();
+    let (_, outcome) = PoolEnv::open(
+        &path,
+        "adi",
+        &oprobe.reg,
+        oprobe.iter_obj,
+        other.regions().len(),
+    )
+    .unwrap();
+    assert!(matches!(
+        outcome,
+        RecoveryOutcome::ColdStart(ColdStartReason::AppMismatch { .. })
+    ));
+
+    let _ = std::fs::remove_file(&path);
+}
+
+fn plan_all(app: &dyn CrashApp) -> PersistPlan {
+    resolve_plan_basic(app, "all").unwrap()
+}
+
+// -- spec threading ---------------------------------------------------------
+
+#[test]
+fn engine_pool_round_trips_and_runs_through_the_api() {
+    let spec = ExperimentSpec {
+        apps: vec!["toy".into()],
+        plans: vec![PlanSpec::parse("all").unwrap()],
+        tests: 3,
+        engine: EngineKind::Pool,
+        ..ExperimentSpec::default()
+    };
+    // JSON round-trip keeps the engine.
+    let back = ExperimentSpec::from_json(&spec.to_json().to_pretty()).unwrap();
+    assert_eq!(back, spec);
+    assert_eq!(back.engine, EngineKind::Pool);
+    assert_eq!(EngineKind::from_name("pool").unwrap(), EngineKind::Pool);
+
+    // Validation: no verified mode, no sharding on the pool engine.
+    let verified = ExperimentSpec { verified: true, ..spec.clone() };
+    assert!(verified.validate().is_err());
+    let sharded = ExperimentSpec { shards: 2, ..spec.clone() };
+    assert!(sharded.validate().is_err());
+
+    // End-to-end: the runner's pool cell matches the native cell.
+    let runner = Runner::new(spec).unwrap();
+    let report = runner.run().unwrap();
+    assert_eq!(report.cells.len(), 1);
+    let native = ExperimentSpec { engine: EngineKind::Native, ..runner.spec().clone() };
+    let native_report = Runner::new(native).unwrap().run().unwrap();
+    assert_eq!(report.cells[0].result.records, native_report.cells[0].result.records);
+}
