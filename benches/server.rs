@@ -1,0 +1,124 @@
+//! Store + job-server benchmarks (`BENCH_server.json`): the §Store /
+//! §Server perf evidence.
+//!
+//! * `cell_cold_toy40` — the real simulation a cold cell pays (the
+//!   baseline everything below is compared against);
+//! * `store_save_toy40` / `store_load_hit_toy40` — raw entry encode +
+//!   atomic publish, and read + checksum + decode;
+//! * `cell_warm_memo_toy40` / `cell_warm_store_toy40` — a warm cell
+//!   through the cache's two hit paths (in-memory single-flight memo vs
+//!   durable read-through from disk);
+//! * `server_warm_jobs` — end-to-end jobs/s against a live in-process
+//!   `easycrash serve` on a unix socket (HTTP parse, cell fan-out,
+//!   NDJSON stream), with every cell warm — the serving overhead itself;
+//! * `server_cache_hit_rate` — gauge: fraction of the last job's cells
+//!   served without simulation (1.0 when the cache is doing its job).
+
+use easycrash::api::{ExperimentSpec, Runner};
+use easycrash::apps;
+use easycrash::benchlib::Bench;
+use easycrash::easycrash::PersistPlan;
+use easycrash::server::{self, client, ServeConfig};
+use easycrash::store::{CellCache, CellKey, Lookup, Store};
+use easycrash::util::json::Json;
+
+fn main() {
+    let mut b = Bench::new("server");
+    let dir = std::env::temp_dir().join(format!("easycrash-bench-server-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("bench temp dir");
+
+    let spec = ExperimentSpec::builder()
+        .app("toy")
+        .tests(40)
+        .seed(1)
+        .build()
+        .expect("bench spec is valid");
+    let runner = Runner::new(spec.clone()).expect("native engine");
+    let app = apps::by_name("toy").unwrap();
+    let plan = PersistPlan::none();
+
+    // The cold baseline: what every cache hit below is saving.
+    b.run_throughput("cell_cold_toy40", || {
+        let res = runner
+            .execute_cell(app.as_ref(), &plan, false)
+            .expect("bench campaign");
+        let ops = res.ops_total;
+        std::hint::black_box(res);
+        ops
+    });
+
+    // Raw store entry round-trip on a real result.
+    let result = runner
+        .execute_cell(app.as_ref(), &plan, false)
+        .expect("bench campaign");
+    let key = CellKey::campaign("toy", &plan.dsl(), false, spec.tests, spec.seed, "native", &spec.cfg);
+    let store = Store::open(dir.join("store")).expect("bench store");
+    b.run("store_save_toy40", || {
+        store.save(&key, &result).expect("store save");
+    });
+    b.run("store_load_hit_toy40", || match store.load(&key) {
+        Lookup::Hit(r) => {
+            std::hint::black_box(r);
+        }
+        Lookup::Miss(m) => panic!("expected store hit, got {m}"),
+    });
+
+    // Warm cell latency through the cache's two hit paths. The memo case
+    // reuses one cache; the store case opens a fresh cache per iteration
+    // so every lookup pays the full disk read + checksum + decode.
+    let memo = CellCache::new(None);
+    memo.get_or_compute(&key, || runner.execute_cell(app.as_ref(), &plan, false))
+        .expect("seed memo");
+    b.run("cell_warm_memo_toy40", || {
+        let (r, _) = memo
+            .get_or_compute(&key, || Err(easycrash::err!("memo hit expected")))
+            .expect("memo hit");
+        std::hint::black_box(r);
+    });
+    b.run("cell_warm_store_toy40", || {
+        let cache = CellCache::new(Some(Store::open(dir.join("store")).expect("bench store")));
+        let (r, _) = cache
+            .get_or_compute(&key, || Err(easycrash::err!("store hit expected")))
+            .expect("store hit");
+        std::hint::black_box(r);
+    });
+
+    // End-to-end warm jobs against a live server on a unix socket.
+    let addr = format!("unix:{}", dir.join("serve.sock").display());
+    let srv = server::start(ServeConfig {
+        addr: addr.clone(),
+        store: None,
+        workers: 2,
+        verbose: false,
+    })
+    .expect("bench server");
+    let job = ExperimentSpec::builder()
+        .apps(["toy", "is"])
+        .plan_str("none")
+        .and_then(|s| s.plan_str("all"))
+        .expect("bench plans")
+        .tests(40)
+        .seed(1)
+        .build()
+        .expect("bench spec is valid");
+    client::submit(&addr, &job, |_| {}).expect("warmup job"); // all cells computed once
+    let mut last_done = Json::Null;
+    b.run_throughput("server_warm_jobs", || {
+        last_done = client::submit(&addr, &job, |_| {}).expect("warm job");
+        1 // units = jobs
+    });
+    let count = |k: &str| last_done.get(k).and_then(Json::as_u64).unwrap_or(0) as f64;
+    let cells = count("cells").max(1.0);
+    b.gauge(
+        "server_cache_hit_rate",
+        (count("memo_hits") + count("store_hits")) / cells,
+    );
+    srv.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    if let Err(e) = b.write_json("BENCH_server.json") {
+        eprintln!("warning: could not write BENCH_server.json: {e}");
+    } else {
+        println!("wrote BENCH_server.json");
+    }
+}

@@ -2,7 +2,7 @@
 //! the report generators and the benches.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::apps::{self, CrashApp};
 use crate::easycrash::workflow::{Workflow, WorkflowReport};
@@ -12,9 +12,10 @@ use crate::easycrash::{
 use crate::model::efficiency::{evaluate, EfficiencyInput};
 use crate::model::sweep::T_CHK_SCENARIOS;
 use crate::model::trace::{RecoveryPolicy, TraceInput, TraceResult, TraceSim};
-use crate::runtime::StepEngine;
 use crate::sim::SimConfig;
+use crate::store::{CellCache, CellKey, CellSource, Store};
 use crate::util::error::Result;
+use crate::util::flight::SingleFlight;
 
 use super::planner::{PlannerCell, PlannerMatrixReport};
 use super::report::{ExperimentCell, ExperimentReport};
@@ -26,22 +27,33 @@ use super::trace::{EfficiencyReport, TraceCell};
 /// ## Memoization
 ///
 /// Cells of the matrix share measurements, so the runner caches
-/// everything keyed by *what is simulated*, never by who asked:
+/// everything keyed by *what is simulated*, never by who asked. Campaign
+/// and profile cells go through a [`CellCache`] — per-key single-flight
+/// memoization (concurrent requesters of one key compute it once and
+/// share the `Arc`; distinct keys never contend), optionally read-through
+/// / write-back against the durable on-disk [`Store`] — under canonical
+/// [`CellKey`]s:
 ///
-/// * campaigns — key `app :: plan.dsl() [:: vfy]`; a plan's canonical
-///   DSL rendering determines the simulation bit-for-bit, so two cells
-///   (or a workflow step and a figure) asking for the same plan share
-///   one `Arc<CampaignResult>`;
-/// * profiles (no-crash runs) — key `app :: plan.dsl() :: cfg`, since
-///   profile-only consumers sweep NVM configs;
+/// * campaigns — `CellKey::campaign(app, plan.dsl(), verified, tests,
+///   seed, engine, cfg)`; a plan's canonical DSL rendering determines the
+///   simulation bit-for-bit, so two cells (or a workflow step and a
+///   figure) asking for the same plan share one `Arc<CampaignResult>`,
+///   and — with a store attached — any *process* that ever computed the
+///   cell against the same store root;
+/// * profiles (no-crash runs) — `CellKey::profile(app, plan.dsl(), cfg)`,
+///   since profile-only consumers sweep NVM configs (seed/tests/engine
+///   cannot reach a profile's result and are normalized out);
 /// * workflows — key `app :: planner` (the canonical `selector+placer`
-///   DSL): different strategy pairs are different decisions, but their
-///   step campaigns still run through the campaign cache above, so step
-///   1 *is* the `none` cell and two planners sharing a plan share its
-///   campaign.
+///   DSL) in a process-local [`SingleFlight`]: different strategy pairs
+///   are different decisions, but their step campaigns still run through
+///   the cell cache above, so step 1 *is* the `none` cell and two
+///   planners sharing a plan share its campaign.
 ///
-/// Goldens are memoized inside each app (`OnceLock`), engines live one
-/// per worker inside [`ShardedCampaign`].
+/// Goldens are memoized inside each app (`OnceLock`); engines are
+/// constructed per cell ([`Runner::execute_cell`]) or one per worker
+/// inside [`ShardedCampaign`] — the runner holds none, which keeps it
+/// `Sync` and lets `easycrash serve` share one runner across its worker
+/// threads.
 ///
 /// ## Determinism
 ///
@@ -53,25 +65,20 @@ use super::trace::{EfficiencyReport, TraceCell};
 pub struct Runner {
     spec: ExperimentSpec,
     verbose: bool,
-    /// The spec's engine, shared by sequential cells. Sharded cells
-    /// build one native engine per worker instead (ShardedCampaign).
-    engine: Mutex<Box<dyn StepEngine>>,
-    profiles: Mutex<HashMap<String, Arc<CampaignResult>>>,
-    campaigns: Mutex<HashMap<String, Arc<CampaignResult>>>,
-    workflows: Mutex<HashMap<String, Arc<WorkflowReport>>>,
+    /// Campaign + profile cells: single-flight memo, optionally durable.
+    /// `Arc` so the job server can share one cache across many runners.
+    cache: Arc<CellCache>,
+    workflows: SingleFlight<WorkflowReport>,
 }
 
 impl Runner {
     pub fn new(spec: ExperimentSpec) -> Result<Runner> {
         spec.validate()?;
-        let engine = spec.engine.create()?;
         Ok(Runner {
             spec,
             verbose: false,
-            engine: Mutex::new(engine),
-            profiles: Mutex::new(HashMap::new()),
-            campaigns: Mutex::new(HashMap::new()),
-            workflows: Mutex::new(HashMap::new()),
+            cache: Arc::new(CellCache::new(None)),
+            workflows: SingleFlight::new(),
         })
     }
 
@@ -79,6 +86,29 @@ impl Runner {
     pub fn verbose(mut self, on: bool) -> Runner {
         self.verbose = on;
         self
+    }
+
+    /// Attach a durable store: campaign/profile cells read through it and
+    /// write back, so they survive process restarts. `None` is a no-op
+    /// (keeps the in-memory-only cache), which lets call sites pass
+    /// `store::from_args(args)?` straight through.
+    pub fn with_store(mut self, store: Option<Store>) -> Runner {
+        if store.is_some() {
+            self.cache = Arc::new(CellCache::new(store));
+        }
+        self
+    }
+
+    /// Share an existing cell cache (the job server's: one cache across
+    /// every concurrent job, so identical cells dedup server-wide).
+    pub fn with_cache(mut self, cache: Arc<CellCache>) -> Runner {
+        self.cache = cache;
+        self
+    }
+
+    /// The runner's cell cache (hit counters, attached store).
+    pub fn cache(&self) -> &Arc<CellCache> {
+        &self.cache
     }
 
     pub fn spec(&self) -> &ExperimentSpec {
@@ -257,30 +287,45 @@ impl Runner {
 
     // -- cell execution ----------------------------------------------------
 
-    /// Memoized crash campaign for one cell. The key is the plan's
-    /// canonical DSL (plus the verified flag) — the full simulation
-    /// input, given the spec's shared `(tests, seed, cfg, shards)`.
+    /// Memoized crash campaign for one cell. The cache key renders the
+    /// full simulation input — app, the plan's canonical DSL, the
+    /// verified flag and the spec's `(tests, seed, engine, cfg)` — with
+    /// the result-irrelevant axes (`shards`, `snapshot_every`) normalized
+    /// out, so the same cell is one entry across processes.
     pub fn campaign(
         &self,
         app: &dyn CrashApp,
         plan: &PersistPlan,
         verified: bool,
     ) -> Result<Arc<CampaignResult>> {
-        let key = format!(
-            "{}::{}{}",
+        Ok(self.campaign_traced(app, plan, verified)?.0)
+    }
+
+    /// [`Runner::campaign`] plus where the result came from (memo hit,
+    /// durable-store hit, or computed here) — the `serve` job server and
+    /// the CLI surface the source per cell.
+    pub fn campaign_traced(
+        &self,
+        app: &dyn CrashApp,
+        plan: &PersistPlan,
+        verified: bool,
+    ) -> Result<(Arc<CampaignResult>, CellSource)> {
+        let key = CellKey::campaign(
             app.name(),
-            plan.dsl(),
-            if verified { "::vfy" } else { "" }
+            &plan.dsl(),
+            verified,
+            self.spec.tests,
+            self.spec.seed,
+            self.spec.engine.name(),
+            &self.spec.cfg,
         );
-        if let Some(c) = self.campaigns.lock().unwrap().get(&key) {
-            return Ok(c.clone());
-        }
+        let (res, source) = self
+            .cache
+            .get_or_compute(&key, || self.execute_cell(app, plan, verified))?;
         if self.verbose {
-            eprintln!("[campaign] {key}");
+            eprintln!("[campaign] {} ({})", key.short(), source.label());
         }
-        let res = Arc::new(self.execute_cell(app, plan, verified)?);
-        self.campaigns.lock().unwrap().insert(key, res.clone());
-        Ok(res)
+        Ok((res, source))
     }
 
     /// Uncached cell execution — the exact pre-API wiring: a [`Campaign`]
@@ -295,6 +340,13 @@ impl Runner {
         plan: &PersistPlan,
         verified: bool,
     ) -> Result<CampaignResult> {
+        // One engine per cell, created here rather than held by the
+        // runner: engines are deliberately not `Send` (DESIGN.md §API),
+        // and a shared `Mutex<Box<dyn StepEngine>>` would both make the
+        // runner `!Sync` and serialize *unrelated* cells for the whole
+        // campaign. Native/pool engines are free to construct; sharded
+        // cells build one per worker inside `ShardedCampaign` anyway.
+        let mut engine = self.spec.engine.create()?;
         if self.spec.engine == super::spec::EngineKind::Pool {
             // Spec validation rejects verified + pool, so `verified` can
             // only be false here; the pool path has no architectural
@@ -306,7 +358,7 @@ impl Runner {
                 ..KillCampaign::default()
             };
             let pool = Self::pool_path(app.name(), plan);
-            return kc.run_in_process(app, plan, &pool, self.engine.lock().unwrap().as_mut());
+            return kc.run_in_process(app, plan, &pool, engine.as_mut());
         }
         let campaign = Campaign {
             tests: self.spec.tests,
@@ -318,7 +370,7 @@ impl Runner {
             campaign,
             shards: self.spec.shards,
         }
-        .run_or_seq(app, plan, self.engine.lock().unwrap().as_mut())
+        .run_or_seq(app, plan, engine.as_mut())
     }
 
     /// Scratch pool-file path for a `--engine pool` cell: unique per
@@ -335,19 +387,19 @@ impl Runner {
     }
 
     /// Memoized profile run (no crashes) under a plan + simulator config
-    /// (profile consumers sweep NVM profiles, hence the cfg key).
+    /// (profile consumers sweep NVM profiles, hence the cfg key). Shares
+    /// the campaign cell cache — `profile::`-prefixed keys can never
+    /// collide with `campaign::` ones — so profiles are durable too.
     pub fn profile(
         &self,
         app: &dyn CrashApp,
         plan: &PersistPlan,
         cfg: SimConfig,
     ) -> Result<Arc<CampaignResult>> {
-        let key = format!("{}::{}::{:?}", app.name(), plan.dsl(), cfg);
-        if let Some(p) = self.profiles.lock().unwrap().get(&key) {
-            return Ok(p.clone());
-        }
-        let res = Arc::new(self.execute_profile(app, plan, cfg)?);
-        self.profiles.lock().unwrap().insert(key, res.clone());
+        let key = CellKey::profile(app.name(), &plan.dsl(), &cfg);
+        let (res, _source) = self
+            .cache
+            .get_or_compute(&key, || self.execute_profile(app, plan, cfg))?;
         Ok(res)
     }
 
@@ -417,22 +469,25 @@ impl Runner {
         planner: PlannerSpec,
     ) -> Result<Arc<WorkflowReport>> {
         let key = format!("{}::{planner}", app.name());
-        if let Some(w) = self.workflows.lock().unwrap().get(&key) {
-            return Ok(w.clone());
-        }
-        if self.verbose {
-            eprintln!("[workflow] {key}");
-        }
-        let wf = Workflow {
-            tests: self.spec.tests,
-            seed: self.spec.seed,
-            ts: self.spec.ts,
-            tau: self.spec.tau,
-            cfg: self.spec.cfg,
-            planner,
-        };
-        let rep = Arc::new(wf.run_cells(app, &mut |plan| self.campaign(app, plan, false))?);
-        self.workflows.lock().unwrap().insert(key, rep.clone());
+        let (rep, fresh) = self.workflows.get_or_try_init(&key, || {
+            if self.verbose {
+                eprintln!("[workflow] {key}");
+            }
+            let wf = Workflow {
+                tests: self.spec.tests,
+                seed: self.spec.seed,
+                ts: self.spec.ts,
+                tau: self.spec.tau,
+                cfg: self.spec.cfg,
+                planner,
+            };
+            // No lock-order hazard: the workflow's step campaigns go
+            // through the *cell* cache's per-key gates, and no cell
+            // compute ever re-enters a workflow.
+            wf.run_cells(app, &mut |plan| self.campaign(app, plan, false))
+                .map(Arc::new)
+        })?;
+        let _ = fresh;
         Ok(rep)
     }
 

@@ -148,6 +148,26 @@ impl Bench {
         m
     }
 
+    /// Record a plain scalar (e.g. a cache hit rate, jobs per second
+    /// measured externally) as a case with no timing samples: `iters`
+    /// is 0 and the value rides in `units_per_s`, so gauges flow through
+    /// the same JSON report and baseline-delta machinery as timings.
+    pub fn gauge(&mut self, case: &str, value: f64) {
+        println!(
+            "bench {:<40} gauge {value:.3}",
+            format!("{}/{}", self.name, case)
+        );
+        self.records.push(CaseRecord {
+            case: case.to_string(),
+            iters: 0,
+            mean_ns: 0,
+            p50_ns: 0,
+            p95_ns: 0,
+            wall_ns: 0,
+            units_per_s: Some(value),
+        });
+    }
+
     /// All cases recorded so far.
     pub fn records(&self) -> &[CaseRecord] {
         &self.records
@@ -183,9 +203,53 @@ impl Bench {
 
     /// Write the JSON report (machine-readable op/s + wall-clock per
     /// case). Bench binaries run with the package root as CWD, so a bare
-    /// filename lands at the repo root.
-    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+    /// filename lands at the repo root — where the committed
+    /// `BENCH_*.json` baselines live: if `path` already holds a parseable
+    /// previous report, a delta-vs-baseline line is printed per matching
+    /// case before the file is replaced.
+    pub fn write_json(&self, path: &str) -> crate::util::error::Result<()> {
+        self.print_deltas(path);
         std::fs::write(path, self.to_json())
+            .map_err(|e| crate::util::error::Error::io(path, "writing bench report to", e))
+    }
+
+    /// Compare this run against the baseline report at `path`, if one
+    /// exists and parses; unreadable or unrelated baselines are silently
+    /// skipped (a delta is advisory, never a failure).
+    fn print_deltas(&self, path: &str) {
+        use crate::util::json::Json;
+        let Ok(old) = std::fs::read_to_string(path) else { return };
+        let Ok(j) = Json::parse(&old) else { return };
+        let Some(cases) = j.get("cases").and_then(Json::as_arr) else { return };
+        for r in &self.records {
+            let Some(base) = cases
+                .iter()
+                .find(|c| c.get("case").and_then(Json::as_str) == Some(r.case.as_str()))
+            else {
+                continue;
+            };
+            let pct = |new: f64, old: f64| (new - old) / old * 100.0;
+            let mut parts = Vec::new();
+            if let Some(old_mean) = base.get("mean_ns").and_then(Json::as_f64) {
+                if old_mean > 0.0 && r.iters > 0 {
+                    parts.push(format!("mean {:+.1}%", pct(r.mean_ns as f64, old_mean)));
+                }
+            }
+            if let (Some(new_u), Some(old_u)) =
+                (r.units_per_s, base.get("units_per_s").and_then(Json::as_f64))
+            {
+                if old_u > 0.0 {
+                    parts.push(format!("units/s {:+.1}%", pct(new_u, old_u)));
+                }
+            }
+            if !parts.is_empty() {
+                println!(
+                    "bench {:<40} delta vs baseline: {}",
+                    format!("{}/{}", self.name, r.case),
+                    parts.join("  ")
+                );
+            }
+        }
     }
 }
 
@@ -245,5 +309,20 @@ mod tests {
     #[test]
     fn escape_handles_specials() {
         assert_eq!(escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+
+    #[test]
+    fn gauge_records_and_baseline_delta_is_harmless() {
+        std::env::set_var("EC_BENCH_MS", "40");
+        let mut b = Bench::new("selftest");
+        b.gauge("hit_rate", 0.75);
+        assert_eq!(b.records()[0].iters, 0);
+        assert_eq!(b.records()[0].units_per_s, Some(0.75));
+        let dir = std::env::temp_dir().join(format!("ec-benchlib-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bench.json").display().to_string();
+        b.write_json(&path).unwrap(); // no baseline yet — nothing to diff
+        b.write_json(&path).unwrap(); // identical baseline — zero deltas
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -179,7 +179,7 @@ impl FromStr for PlanSpec {
 }
 
 /// A complete persistence plan.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct PersistPlan {
     pub entries: Vec<PlanEntry>,
     /// Which flush instruction the production run uses. The paper uses

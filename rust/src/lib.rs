@@ -50,6 +50,20 @@
 //!   build is dependency-free and compiles a stub engine.
 //! * [`report`] — generators for every table and figure in the paper's
 //!   evaluation.
+//! * [`store`] — the durable content-addressed result store: campaign /
+//!   profile cells cached on disk behind versioned checksummed entries
+//!   (typed misses, atomic rename publish), keyed by a canonical FNV-1a
+//!   cell hash that normalizes out everything proven result-irrelevant
+//!   (shard count, snapshot interval). The [`api::Runner`] reads through
+//!   and writes back transparently, so repeated cells are hits across
+//!   process restarts and CI runs.
+//! * [`server`] — `easycrash serve`: a long-lived job server accepting
+//!   `easycrash.spec/v1` jobs over a unix socket or HTTP/1.1 on
+//!   localhost (hand-rolled, std-only), decomposing each spec into
+//!   cells, deduplicating identical in-flight cells across concurrent
+//!   clients (single-flight), scheduling on a global work-stealing cell
+//!   pool and streaming per-cell progress; the CLI turns into a thin
+//!   client with `experiment --server ADDR`.
 //!
 //! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
@@ -62,4 +76,6 @@ pub mod api;
 pub mod model;
 pub mod runtime;
 pub mod report;
+pub mod store;
+pub mod server;
 pub mod benchlib;

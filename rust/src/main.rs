@@ -16,12 +16,13 @@ use easycrash::apps;
 use easycrash::easycrash::PlannerSpec;
 use easycrash::util::cli::Args;
 use easycrash::util::error::Result;
+use easycrash::util::json::Json;
 
 const VALUED: &[&str] = &[
     "app", "apps", "tests", "seed", "engine", "plan", "plans", "planner", "planners", "spec",
     "ts", "tau", "mtbf", "tchk", "nvm", "out", "shards", "trials", "work", "dist",
     "snapshot-interval", "pool", "halt", "timeout-secs", "retries", "backoff-ms", "stall-ms",
-    "expect-generation",
+    "expect-generation", "server", "store-dir", "addr", "workers",
 ];
 
 fn main() -> Result<()> {
@@ -37,6 +38,7 @@ fn main() -> Result<()> {
         "experiment" => cmd_experiment(&args),
         "efficiency" => cmd_efficiency(&args),
         "planner-matrix" => cmd_planner_matrix(&args),
+        "serve" => cmd_serve(&args),
         "list" => {
             for a in apps::all() {
                 println!("{:<10} {}", a.name(), a.description());
@@ -115,7 +117,8 @@ fn probe(args: &Args) -> Result<()> {
 /// One (app, plan) cell: `--plan` takes the DSL (`none`, `all`,
 /// `critical`, or `obj@region/x,...` — see `easycrash::easycrash::plan`).
 fn cmd_campaign(args: &Args) -> Result<()> {
-    let runner = Runner::new(single_cell_spec(args, 400)?)?;
+    let runner = Runner::new(single_cell_spec(args, 400)?)?
+        .with_store(easycrash::store::from_args(args)?);
     let spec = runner.spec();
     let (name, tests, shards) = (spec.apps[0].clone(), spec.tests, spec.shards);
     let app = apps::by_name(&name).expect("spec validated app names");
@@ -251,7 +254,12 @@ fn spec_from_file_or_flags(args: &Args) -> Result<ExperimentSpec> {
 fn cmd_experiment(args: &Args) -> Result<()> {
     reject_option(args, "planners", "did you mean --planner (the workflow strategy pair)?")?;
     let spec = spec_from_file_or_flags(args)?;
-    let runner = Runner::new(spec)?.verbose(args.flag("verbose"));
+    if let Some(addr) = args.get("server") {
+        return experiment_via_server(args, addr, spec);
+    }
+    let runner = Runner::new(spec)?
+        .verbose(args.flag("verbose"))
+        .with_store(easycrash::store::from_args(args)?);
     let t0 = Instant::now();
     let report = runner.run()?;
     println!(
@@ -275,11 +283,78 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             easycrash::util::pct(f[3]),
         );
     }
+    let s = runner.cache().stats();
+    println!(
+        "cells: {} computed, {} store hit(s), {} memo hit(s)",
+        s.computed, s.store_hits, s.memo_hits
+    );
     println!("wall={:.2?}", t0.elapsed());
     let out = args.get_or("out", "experiment_report.json");
     report.write_json(out)?;
     println!("[json] {out}");
     Ok(())
+}
+
+/// The `--server ADDR` client path: submit the spec as one job, narrate
+/// the streamed per-cell events, and write the embedded report — the
+/// bytes match a local run exactly (the server sends the same
+/// serialization this command would produce).
+fn experiment_via_server(args: &Args, addr: &str, spec: ExperimentSpec) -> Result<()> {
+    easycrash::ensure!(
+        !args.flag("no-store") && args.get("store-dir").is_none(),
+        "--store-dir/--no-store configure a local run — the server owns the store in --server mode"
+    );
+    println!(
+        "== experiment via {addr}: {} app(s) x {} plan(s), {} tests, seed {:#x} ==",
+        spec.apps.len(),
+        spec.plans.len(),
+        spec.tests,
+        spec.seed,
+    );
+    let t0 = Instant::now();
+    let done = easycrash::server::client::submit(addr, &spec, |ev| {
+        if ev.get("event").and_then(Json::as_str) == Some("cell") {
+            let get = |k: &str| ev.get(k).and_then(Json::as_str).unwrap_or("?").to_string();
+            let source = get("source");
+            let hit = if source == "computed" { "" } else { " (cache hit)" };
+            println!(
+                "[cell] {}/{} source={source}{hit} ({} ms)",
+                get("app"),
+                get("plan_resolved"),
+                ev.get("ms").and_then(Json::as_u64).unwrap_or(0),
+            );
+        }
+    })?;
+    let count = |k: &str| done.get(k).and_then(Json::as_u64).unwrap_or(0);
+    let cells = count("cells");
+    println!(
+        "cache hits: {}/{} cells",
+        count("memo_hits") + count("store_hits"),
+        cells
+    );
+    println!("wall={:.2?}", t0.elapsed());
+    let report = done
+        .get("report")
+        .ok_or_else(|| easycrash::err!("server `done` event carried no report"))?;
+    let out = args.get_or("out", "experiment_report.json");
+    std::fs::write(out, report.to_pretty())
+        .map_err(|e| easycrash::util::error::Error::io(out, "writing experiment report to", e))?;
+    println!("[json] {out}");
+    Ok(())
+}
+
+/// The long-lived job server (`easycrash serve`): accept spec jobs on a
+/// unix socket (`--addr unix:/path.sock`) or localhost TCP, share one
+/// durable store + cell cache across every job, and stream per-cell
+/// progress to each client.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = easycrash::server::ServeConfig {
+        addr: args.get_or("addr", easycrash::server::DEFAULT_ADDR).to_string(),
+        store: easycrash::store::from_args(args)?,
+        workers: args.usize_or("workers", 0)?,
+        verbose: args.flag("verbose"),
+    };
+    easycrash::server::serve(cfg)
 }
 
 /// The planner-strategy sweep: every spec app × every `selector+placer`
@@ -298,7 +373,9 @@ fn cmd_planner_matrix(args: &Args) -> Result<()> {
             .collect::<Result<Vec<_>>>()?,
         None => PlannerSpec::default_matrix(),
     };
-    let runner = Runner::new(spec)?.verbose(args.flag("verbose"));
+    let runner = Runner::new(spec)?
+        .verbose(args.flag("verbose"))
+        .with_store(easycrash::store::from_args(args)?);
     let t0 = Instant::now();
     let report = runner.planner_matrix(&pairs)?;
     println!(
@@ -341,7 +418,9 @@ fn cmd_efficiency(args: &Args) -> Result<()> {
     if spec.trace.is_none() {
         spec.trace = Some(Default::default());
     }
-    let runner = Runner::new(spec)?.verbose(args.flag("verbose"));
+    let runner = Runner::new(spec)?
+        .verbose(args.flag("verbose"))
+        .with_store(easycrash::store::from_args(args)?);
     let t0 = Instant::now();
     let report = runner.efficiency()?;
     println!(

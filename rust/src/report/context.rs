@@ -39,7 +39,12 @@ pub struct ReportCtx {
 impl ReportCtx {
     pub fn from_args(args: &Args) -> Result<ReportCtx> {
         let spec = ExperimentSpec::from_args(args)?;
-        let runner = Runner::new(spec)?.verbose(args.flag("verbose"));
+        // Figures read through the durable store like every other
+        // consumer (`--no-store` opts out), so regenerating a report
+        // after a restart reuses every previously simulated cell.
+        let runner = Runner::new(spec)?
+            .verbose(args.flag("verbose"))
+            .with_store(crate::store::from_args(args)?);
         let s = runner.spec();
         Ok(ReportCtx {
             tests: s.tests,

@@ -188,6 +188,14 @@ fn print_help() {
 USAGE: easycrash <command> [--tests N] [--seed S] [--engine native|pjrt|pool]
                  [--shards N] [--ts F] [--tau F] [--planner SEL[+PLACER]]
                  [--snapshot-interval N] [--paper-scale] [--verbose]
+                 [--store-dir DIR | --no-store]
+
+campaign and profile results are cached in a durable content-addressed
+store (default `.easycrash-store/`, or $EASYCRASH_STORE, or --store-dir
+DIR): any command that repeats a cell — across runs, restarts and
+processes — reads the stored result instead of re-simulating. Corrupt or
+version-skewed entries are detected (checksummed entries) and silently
+recomputed. --no-store disables the cache for one run.
 
 --engine pool runs every campaign test against a durable mmap-backed pool
 file: the app is halted at the sampled op, its architectural state is
@@ -237,10 +245,21 @@ tools:
              SIGKILL it against the pool file, restart and classify the
              two-phase recovery (watchdog + bounded retry)
   experiment [--spec FILE.json] [--apps A,B] [--plans P1;P2;..] [--out F]
-             [--verified|--no-verified]
+             [--verified|--no-verified] [--server ADDR]
              run an apps x plans experiment spec end to end and write the
              typed JSON report (flags override spec-file fields; plans are
-             `;`-separated DSL entries)
+             `;`-separated DSL entries). With --server ADDR the spec is
+             submitted to a running `easycrash serve` instead of executing
+             locally; the streamed report is written byte-identically to a
+             local run's --out file
+  serve      [--addr HOST:PORT|unix:/path.sock] [--workers N]
+             [--store-dir DIR | --no-store]
+             long-lived job server: POST an experiment spec to /jobs and
+             stream per-cell NDJSON progress plus the finished report.
+             Identical cells across concurrent jobs simulate once
+             (single-flight), one worker pool schedules all jobs' cells,
+             and the durable store serves previously computed cells
+             instantly (default addr 127.0.0.1:7979)
   efficiency [--spec FILE.json] [--apps A,B] [--plans P1;..] [--out F]
              [--trials N] [--work SECS] [--mtbf SECS] [--dist exp|weibull:K]
              measure recomputability per cell with a crash campaign, then

@@ -1,0 +1,106 @@
+//! The thin client behind `easycrash experiment --server ADDR`: submit
+//! the spec as a `/jobs` request and stream the server's NDJSON events.
+//!
+//! The returned `done` event embeds the full experiment report — the
+//! same [`ExperimentReport::to_json`](crate::api::ExperimentReport)
+//! serialization the CLI writes — so the caller pretty-prints it to the
+//! `--out` path and gets a byte-identical file to a local run.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::time::{Duration, Instant};
+
+use crate::api::ExperimentSpec;
+use crate::util::error::Result;
+use crate::util::json::Json;
+
+/// How long [`submit`] keeps retrying the initial dial — covers the
+/// race of a client starting just before its server finished binding.
+const CONNECT_WINDOW: Duration = Duration::from_secs(5);
+
+/// Dial `addr`, retrying refused connections inside the window (a
+/// missing unix-socket *file* also reads as an immediate refusal).
+fn connect_with_retry(addr: &str) -> Result<super::Conn> {
+    let deadline = Instant::now() + CONNECT_WINDOW;
+    loop {
+        match super::connect(addr) {
+            Ok(c) => return Ok(c),
+            Err(e) if Instant::now() < deadline => {
+                let _ = e;
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            Err(e) => crate::bail!("connecting to server {addr}: {e}"),
+        }
+    }
+}
+
+/// Submit `spec` as one job; invoke `on_event` for every streamed event
+/// (including `accepted` and the final one) and return the `done` event
+/// — `get("report")` is the embedded experiment report,
+/// `get("memo_hits")` / `get("store_hits")` / `get("computed")` the
+/// job's cell-source counts.
+pub fn submit(
+    addr: &str,
+    spec: &ExperimentSpec,
+    mut on_event: impl FnMut(&Json),
+) -> Result<Json> {
+    let body = spec.to_json().to_string();
+    let mut conn = connect_with_retry(addr)?;
+    write!(
+        conn,
+        "POST /jobs HTTP/1.1\r\nHost: easycrash\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .map_err(|e| crate::err!("sending job to {addr}: {e}"))?;
+    conn.flush().map_err(|e| crate::err!("sending job to {addr}: {e}"))?;
+
+    let mut r = BufReader::new(conn);
+    let mut status = String::new();
+    r.read_line(&mut status)
+        .map_err(|e| crate::err!("reading server response: {e}"))?;
+    let code = status.split_whitespace().nth(1).unwrap_or("");
+    if code != "200" {
+        // The error body is short and fixed-length; surface it whole.
+        let mut rest = String::new();
+        let _ = r.read_to_string(&mut rest);
+        let detail = rest.rsplit("\r\n\r\n").next().unwrap_or("").trim();
+        crate::bail!("server rejected job ({}): {detail}", status.trim());
+    }
+    // Skip response headers up to the blank line.
+    loop {
+        let mut line = String::new();
+        let n = r
+            .read_line(&mut line)
+            .map_err(|e| crate::err!("reading server response: {e}"))?;
+        crate::ensure!(n > 0, "server closed the connection before the body");
+        if line.trim_end().is_empty() {
+            break;
+        }
+    }
+    // The NDJSON event stream, terminated by `done`, `error` or close.
+    loop {
+        let mut line = String::new();
+        let n = r
+            .read_line(&mut line)
+            .map_err(|e| crate::err!("reading job stream: {e}"))?;
+        crate::ensure!(n > 0, "server closed the job stream before `done`");
+        let line = line.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        let event = Json::parse(line)
+            .map_err(|e| crate::err!("bad event line from server: {e} (`{line}`)"))?;
+        on_event(&event);
+        match event.get("event").and_then(Json::as_str) {
+            Some("done") => return Ok(event),
+            Some("error") => {
+                let msg = event
+                    .get("message")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unknown server error");
+                crate::bail!("server job failed: {msg}");
+            }
+            _ => {}
+        }
+    }
+}

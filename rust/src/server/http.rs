@@ -1,0 +1,167 @@
+//! A deliberately small HTTP/1.1 subset (the registry is offline, so no
+//! hyper/axum): enough to parse one request per connection and write
+//! either a fixed-length response or a streamed NDJSON body terminated
+//! by connection close. Both the TCP and the unix-socket transports
+//! speak this framing, so `curl --unix-socket` works against a socket
+//! server too.
+
+use std::io::{BufRead, Read, Write};
+
+use crate::util::error::Result;
+
+/// Parse limits: a localhost job server never sees legitimate requests
+/// beyond these, and bounding them keeps a garbage client from making
+/// the server allocate unboundedly.
+const MAX_LINE: usize = 8 * 1024;
+const MAX_HEADERS: usize = 100;
+const MAX_BODY: usize = 8 * 1024 * 1024;
+
+/// One parsed request: method, path, and the (possibly empty) body.
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+/// Read one CRLF- (or bare-LF-) terminated line, bounded by [`MAX_LINE`].
+fn read_line(r: &mut impl BufRead) -> Result<String> {
+    let mut buf = Vec::new();
+    loop {
+        let mut byte = [0u8; 1];
+        match r.read(&mut byte) {
+            Ok(0) => break,
+            Ok(_) => {
+                if byte[0] == b'\n' {
+                    break;
+                }
+                buf.push(byte[0]);
+                crate::ensure!(buf.len() <= MAX_LINE, "request line too long");
+            }
+            Err(e) => crate::bail!("reading request: {e}"),
+        }
+    }
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    String::from_utf8(buf).map_err(|_| crate::err!("request line is not UTF-8"))
+}
+
+/// Read and parse one request (request line, headers, Content-Length
+/// body). Returns `None` on an immediately-closed connection (a health
+/// probe that dialed and hung up).
+pub fn read_request(r: &mut impl BufRead) -> Result<Option<Request>> {
+    let line = read_line(r)?;
+    if line.is_empty() {
+        return Ok(None);
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    crate::ensure!(
+        !method.is_empty() && !path.is_empty() && version.starts_with("HTTP/1."),
+        "malformed request line `{line}`"
+    );
+    let mut content_length: usize = 0;
+    for _ in 0..MAX_HEADERS {
+        let h = read_line(r)?;
+        if h.is_empty() {
+            let mut body = vec![0u8; content_length];
+            r.read_exact(&mut body)
+                .map_err(|e| crate::err!("reading request body: {e}"))?;
+            return Ok(Some(Request { method, path, body }));
+        }
+        let Some((name, value)) = h.split_once(':') else {
+            crate::bail!("malformed header `{h}`");
+        };
+        if name.eq_ignore_ascii_case("content-length") {
+            content_length = value
+                .trim()
+                .parse()
+                .map_err(|_| crate::err!("bad Content-Length `{}`", value.trim()))?;
+            crate::ensure!(content_length <= MAX_BODY, "request body too large");
+        }
+    }
+    crate::bail!("too many request headers")
+}
+
+/// Write a complete fixed-length response.
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    body: &[u8],
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Write the head of a streamed response: no Content-Length — per
+/// HTTP/1.1 the body then runs until the server closes the connection,
+/// which lets job progress stream line by line.
+pub fn write_stream_head(w: &mut impl Write, content_type: &str) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 200 OK\r\nContent-Type: {content_type}\r\nConnection: close\r\n\r\n"
+    )?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse(raw: &[u8]) -> Result<Option<Request>> {
+        read_request(&mut BufReader::new(raw))
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let req = parse(b"POST /jobs HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd")
+            .unwrap()
+            .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/jobs");
+        assert_eq!(req.body, b"abcd");
+    }
+
+    #[test]
+    fn parses_get_without_body_and_bare_lf() {
+        let req = parse(b"GET /health HTTP/1.1\nHost: x\n\n").unwrap().unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/health");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn empty_connection_is_none() {
+        assert!(parse(b"").unwrap().is_none());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse(b"not http at all\r\n\r\n").is_err());
+        assert!(parse(b"POST /jobs HTTP/1.1\r\nContent-Length: zap\r\n\r\n").is_err());
+        assert!(parse(b"POST /jobs HTTP/1.1\r\nContent-Length: 99999999999\r\n\r\n").is_err());
+        // Truncated body: Content-Length promises more than arrives.
+        assert!(parse(b"POST /jobs HTTP/1.1\r\nContent-Length: 9\r\n\r\nab").is_err());
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, "OK", "text/plain", b"ok\n").unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(s.contains("Content-Length: 3\r\n"));
+        assert!(s.ends_with("\r\n\r\nok\n"));
+    }
+}

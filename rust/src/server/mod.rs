@@ -1,0 +1,528 @@
+//! `easycrash serve` — campaigns as a service.
+//!
+//! A long-lived job server: clients POST an `easycrash.spec/v1` document
+//! to `/jobs` and get the per-cell progress and the finished experiment
+//! report streamed back as NDJSON (DESIGN.md §Server). The value over
+//! running the CLI directly is *shared state across jobs*:
+//!
+//! * one [`CellCache`] backs every job, so identical cells submitted by
+//!   different clients — even concurrently — simulate **once**
+//!   (single-flight) and every later request is a memo hit;
+//! * with a store attached, cells computed by any past process against
+//!   the same store root are served from disk without simulating;
+//! * one shared worker pool runs all cells: an idle worker takes the
+//!   next queued cell regardless of which job submitted it, so a small
+//!   job's cells interleave with (steal slots from) a big job's instead
+//!   of queueing behind it.
+//!
+//! Transport is localhost-only by design: a unix socket (`unix:/path`)
+//! or TCP (`host:port`), both speaking the same minimal HTTP/1.1 subset
+//! ([`http`]), hand-rolled over `std::net` / `std::os::unix::net`
+//! because the crate registry is unavailable offline.
+//!
+//! ## Wire protocol
+//!
+//! * `POST /jobs` body = spec JSON → `200` NDJSON stream (`Connection:
+//!   close`; the body ends when the server closes the socket):
+//!   `{"event":"accepted","cells":N}`, one
+//!   `{"event":"cell","index":i,"app":..,"plan":..,"plan_resolved":..,
+//!   "source":"memo|store|computed","ms":..}` per finished cell in
+//!   *completion* order, then `{"event":"done",...,"report":{...}}`
+//!   carrying the complete `easycrash.experiment/v1` report — or
+//!   `{"event":"error","message":..}` and close. A malformed spec is a
+//!   plain `400`.
+//! * `GET /health` → `200 ok`; `GET /stats` → cache counters as JSON.
+//!
+//! The embedded report is the *same* serialization the CLI writes, so a
+//! client pretty-printing it produces a byte-identical `--out` file
+//! (`rust/tests/server.rs` asserts this).
+
+pub mod client;
+pub mod http;
+
+use std::collections::VecDeque;
+use std::io::{BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::api::{ExperimentCell, ExperimentReport, ExperimentSpec, Runner};
+use crate::apps;
+use crate::easycrash::PlanSpec;
+use crate::store::{CellCache, CellSource, Store};
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Default TCP listen address of `easycrash serve`.
+pub const DEFAULT_ADDR: &str = "127.0.0.1:7979";
+
+// -- transport ---------------------------------------------------------------
+
+/// A parsed listen/dial address: `unix:/path/to.sock` or a TCP
+/// `host:port`.
+enum Target {
+    Unix(PathBuf),
+    Tcp(String),
+}
+
+fn parse_addr(addr: &str) -> Target {
+    match addr.strip_prefix("unix:") {
+        Some(path) => Target::Unix(PathBuf::from(path)),
+        None => Target::Tcp(addr.to_string()),
+    }
+}
+
+/// One accepted or dialed connection, unix or TCP.
+pub(crate) enum Conn {
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Unix(s) => s.read(buf),
+            Conn::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Unix(s) => s.write(buf),
+            Conn::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Conn::Unix(s) => s.flush(),
+            Conn::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// Dial a server address (the client mode and the stop wake-up).
+pub(crate) fn connect(addr: &str) -> std::io::Result<Conn> {
+    match parse_addr(addr) {
+        Target::Unix(p) => UnixStream::connect(p).map(Conn::Unix),
+        Target::Tcp(a) => TcpStream::connect(a).map(Conn::Tcp),
+    }
+}
+
+enum Listener {
+    Unix(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    fn accept(&self) -> std::io::Result<Conn> {
+        match self {
+            Listener::Unix(l) => l.accept().map(|(s, _)| Conn::Unix(s)),
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Conn::Tcp(s)),
+        }
+    }
+}
+
+/// Bind the listen address. A unix socket path left behind by a killed
+/// server reads as `AddrInUse`; if nothing answers a dial, the socket is
+/// stale — remove and rebind. If something answers, a live server owns
+/// it and binding is a real error.
+fn bind(addr: &str) -> Result<Listener> {
+    match parse_addr(addr) {
+        Target::Tcp(a) => Ok(Listener::Tcp(
+            TcpListener::bind(&a).map_err(|e| crate::err!("binding {a}: {e}"))?,
+        )),
+        Target::Unix(p) => match UnixListener::bind(&p) {
+            Ok(l) => Ok(Listener::Unix(l)),
+            Err(e) if e.kind() == std::io::ErrorKind::AddrInUse => {
+                crate::ensure!(
+                    UnixStream::connect(&p).is_err(),
+                    "a server is already listening on unix:{}",
+                    p.display()
+                );
+                std::fs::remove_file(&p)
+                    .map_err(|e| Error::io(&p, "removing stale socket", e))?;
+                Ok(Listener::Unix(UnixListener::bind(&p).map_err(|e| {
+                    Error::io(&p, "binding unix socket", e)
+                })?))
+            }
+            Err(e) => Err(Error::io(&p, "binding unix socket", e)),
+        },
+    }
+}
+
+// -- the shared cell pool ----------------------------------------------------
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolInner {
+    queue: Mutex<VecDeque<Task>>,
+    ready: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// The server-wide worker pool: one run queue for *all* jobs' cells.
+/// Workers pull whatever is next, so cells from concurrent jobs
+/// interleave instead of running job-by-job.
+#[derive(Clone)]
+struct WorkPool {
+    inner: Arc<PoolInner>,
+    workers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl WorkPool {
+    fn start(workers: usize) -> WorkPool {
+        let inner = Arc::new(PoolInner {
+            queue: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..workers.max(1))
+            .map(|_| {
+                let inner = inner.clone();
+                std::thread::spawn(move || loop {
+                    let task = {
+                        let mut q = inner.queue.lock().unwrap();
+                        loop {
+                            if inner.shutdown.load(Ordering::SeqCst) {
+                                return;
+                            }
+                            match q.pop_front() {
+                                Some(t) => break t,
+                                None => q = inner.ready.wait(q).unwrap(),
+                            }
+                        }
+                    };
+                    // A panicking cell must not take its worker down;
+                    // the job's channel sender drops with the closure,
+                    // which the waiting connection reports as an error.
+                    let _ = catch_unwind(AssertUnwindSafe(task));
+                })
+            })
+            .collect();
+        WorkPool {
+            inner,
+            workers: Arc::new(Mutex::new(handles)),
+        }
+    }
+
+    fn submit(&self, task: Task) {
+        self.inner.queue.lock().unwrap().push_back(task);
+        self.inner.ready.notify_one();
+    }
+
+    fn shutdown(&self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        self.inner.ready.notify_all();
+        for h in self.workers.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// -- the server --------------------------------------------------------------
+
+/// Everything a connection handler needs, shared across all of them.
+struct Shared {
+    cache: Arc<CellCache>,
+    pool: WorkPool,
+    verbose: bool,
+}
+
+/// `easycrash serve` configuration (see `cmd_serve` in `main.rs`).
+pub struct ServeConfig {
+    /// Listen address: `unix:/path/to.sock` or TCP `host:port`.
+    pub addr: String,
+    /// Durable store shared by every job (`None` = in-memory only).
+    pub store: Option<Store>,
+    /// Cell worker threads (0 = one per available core).
+    pub workers: usize,
+    pub verbose: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: DEFAULT_ADDR.to_string(),
+            store: None,
+            workers: 0,
+            verbose: false,
+        }
+    }
+}
+
+/// A running server; dropping it does NOT stop the threads — call
+/// [`ServerHandle::stop`] (tests) or [`ServerHandle::join`] (the CLI,
+/// which serves until the process dies).
+pub struct ServerHandle {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    pool: WorkPool,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Serve until the accept loop dies (i.e. forever — the CLI path).
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting, drain the workers and remove a unix socket file.
+    /// In-flight connections finish on their own threads.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the accept loop with a throwaway connection.
+        let _ = connect(&self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        self.pool.shutdown();
+        if let Target::Unix(p) = parse_addr(&self.addr) {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+/// Start the server in background threads and return its handle.
+pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
+    let listener = bind(&cfg.addr)?;
+    let workers = if cfg.workers == 0 {
+        std::thread::available_parallelism().map_or(2, |n| n.get())
+    } else {
+        cfg.workers
+    };
+    let store_desc = match &cfg.store {
+        Some(s) => format!("store {}", s.root().display()),
+        None => "no store".to_string(),
+    };
+    eprintln!("[serve] listening on {} ({workers} workers, {store_desc})", cfg.addr);
+    let pool = WorkPool::start(workers);
+    let shared = Arc::new(Shared {
+        cache: Arc::new(CellCache::new(cfg.store)),
+        pool: pool.clone(),
+        verbose: cfg.verbose,
+    });
+    let stop = Arc::new(AtomicBool::new(false));
+    let accept = {
+        let stop = stop.clone();
+        std::thread::spawn(move || loop {
+            match listener.accept() {
+                Ok(conn) => {
+                    if stop.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    let shared = shared.clone();
+                    // One thread per connection: it parses the request,
+                    // fans the job's cells out to the shared pool and
+                    // streams completions. Detached — a connection
+                    // outliving `stop()` just finishes by itself.
+                    std::thread::spawn(move || handle_conn(&shared, conn));
+                }
+                Err(_) if stop.load(Ordering::SeqCst) => return,
+                Err(e) => eprintln!("[serve] accept failed: {e}"),
+            }
+        })
+    };
+    Ok(ServerHandle {
+        addr: cfg.addr,
+        stop,
+        accept: Some(accept),
+        pool,
+    })
+}
+
+/// Run the server in the foreground (the `easycrash serve` subcommand).
+pub fn serve(cfg: ServeConfig) -> Result<()> {
+    start(cfg)?.join();
+    Ok(())
+}
+
+// -- request handling --------------------------------------------------------
+
+fn send_event(conn: &mut Conn, event: &Json) -> std::io::Result<()> {
+    conn.write_all(event.to_string().as_bytes())?;
+    conn.write_all(b"\n")?;
+    conn.flush()
+}
+
+fn handle_conn(shared: &Shared, mut conn: Conn) {
+    let req = {
+        let mut r = BufReader::new(&mut conn);
+        match http::read_request(&mut r) {
+            Ok(Some(req)) => req,
+            Ok(None) => return, // dial-and-hangup (health probes, stop wake-up)
+            Err(e) => {
+                let _ = http::write_response(
+                    &mut conn,
+                    400,
+                    "Bad Request",
+                    "text/plain",
+                    format!("{e}\n").as_bytes(),
+                );
+                return;
+            }
+        }
+    };
+    let outcome = match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/health") => {
+            http::write_response(&mut conn, 200, "OK", "text/plain", b"ok\n")
+        }
+        ("GET", "/stats") => {
+            let s = shared.cache.stats();
+            let body = Json::obj()
+                .set("memo_hits", s.memo_hits)
+                .set("store_hits", s.store_hits)
+                .set("computed", s.computed)
+                .set("store_errors", s.store_errors)
+                .to_string();
+            http::write_response(
+                &mut conn,
+                200,
+                "OK",
+                "application/json",
+                format!("{body}\n").as_bytes(),
+            )
+        }
+        ("POST", "/jobs") => handle_job(shared, &req.body, &mut conn),
+        _ => http::write_response(
+            &mut conn,
+            404,
+            "Not Found",
+            "text/plain",
+            format!("no route {} {}\n", req.method, req.path).as_bytes(),
+        ),
+    };
+    if let Err(e) = outcome {
+        // The client hung up mid-stream; nothing to salvage.
+        if shared.verbose {
+            eprintln!("[serve] connection dropped: {e}");
+        }
+    }
+}
+
+/// What one finished cell task reports back to its job's connection.
+type CellDone = (usize, Result<(String, Arc<crate::easycrash::CampaignResult>, CellSource)>, u64);
+
+fn handle_job(shared: &Shared, body: &[u8], conn: &mut Conn) -> std::io::Result<()> {
+    let bad = |conn: &mut Conn, msg: String| {
+        http::write_response(conn, 400, "Bad Request", "text/plain", format!("{msg}\n").as_bytes())
+    };
+    let Ok(text) = std::str::from_utf8(body) else {
+        return bad(conn, "job body is not UTF-8".to_string());
+    };
+    let spec = match ExperimentSpec::from_json(text) {
+        Ok(s) => s,
+        Err(e) => return bad(conn, format!("bad job spec: {e}")),
+    };
+    let runner = match Runner::new(spec.clone()) {
+        Ok(r) => Arc::new(r.verbose(shared.verbose).with_cache(shared.cache.clone())),
+        Err(e) => return bad(conn, format!("bad job spec: {e}")),
+    };
+    // The job's cells, in the spec's matrix order (= report order).
+    let cells: Vec<(String, PlanSpec)> = spec
+        .apps
+        .iter()
+        .flat_map(|a| spec.plans.iter().map(move |p| (a.clone(), p.clone())))
+        .collect();
+    let n = cells.len();
+    http::write_stream_head(conn, "application/x-ndjson")?;
+    send_event(conn, &Json::obj().set("event", "accepted").set("cells", n))?;
+    let (tx, rx) = mpsc::channel::<CellDone>();
+    for (i, (app_name, plan_spec)) in cells.iter().cloned().enumerate() {
+        let runner = runner.clone();
+        let tx = tx.clone();
+        let verified = spec.verified;
+        shared.pool.submit(Box::new(move || {
+            let t0 = Instant::now();
+            let out = (|| {
+                let app = apps::by_name(&app_name)
+                    .ok_or_else(|| crate::err!("unknown app `{app_name}`"))?;
+                let plan = runner.resolve_plan(app.as_ref(), &plan_spec)?;
+                let (result, source) = runner.campaign_traced(app.as_ref(), &plan, verified)?;
+                Ok((plan.dsl(), result, source))
+            })();
+            let _ = tx.send((i, out, t0.elapsed().as_millis() as u64));
+        }));
+    }
+    drop(tx);
+    let mut finished: Vec<Option<ExperimentCell>> = (0..n).map(|_| None).collect();
+    let (mut memo, mut store, mut computed) = (0u64, 0u64, 0u64);
+    for _ in 0..n {
+        let (i, out, ms) = match rx.recv() {
+            Ok(v) => v,
+            // Every sender dropped without reporting: a cell panicked or
+            // the pool shut down under us.
+            Err(_) => {
+                return send_event(
+                    conn,
+                    &Json::obj()
+                        .set("event", "error")
+                        .set("message", "cell execution aborted"),
+                );
+            }
+        };
+        let (app_name, plan_spec) = &cells[i];
+        match out {
+            Ok((plan_resolved, result, source)) => {
+                match source {
+                    CellSource::Memo => memo += 1,
+                    CellSource::Store => store += 1,
+                    CellSource::Computed => computed += 1,
+                }
+                send_event(
+                    conn,
+                    &Json::obj()
+                        .set("event", "cell")
+                        .set("index", i)
+                        .set("app", app_name.as_str())
+                        .set("plan", plan_spec.to_string())
+                        .set("plan_resolved", plan_resolved.as_str())
+                        .set("source", source.label())
+                        .set("ms", ms),
+                )?;
+                finished[i] = Some(ExperimentCell {
+                    app: app_name.clone(),
+                    plan: plan_spec.clone(),
+                    plan_resolved,
+                    verified: spec.verified,
+                    result,
+                });
+            }
+            Err(e) => {
+                return send_event(
+                    conn,
+                    &Json::obj()
+                        .set("event", "error")
+                        .set("message", format!("cell {app_name}/{plan_spec}: {e}")),
+                );
+            }
+        }
+    }
+    let report = ExperimentReport {
+        spec,
+        cells: finished.into_iter().map(|c| c.expect("all cells finished")).collect(),
+    };
+    send_event(
+        conn,
+        &Json::obj()
+            .set("event", "done")
+            .set("cells", n)
+            .set("memo_hits", memo)
+            .set("store_hits", store)
+            .set("computed", computed)
+            .set("report", report.to_json()),
+    )
+}

@@ -61,7 +61,9 @@ pub const POOL_VERSION: u64 = 1;
 pub const POOL_HEADER_SPACE: usize = 4096;
 
 /// FNV-1a, the header checksum (dependency-free, stable across builds).
-fn fnv1a64(bytes: &[u8]) -> u64 {
+/// Also the content hash of [`crate::store`]'s canonical cell keys — the
+/// two durable formats share one hash discipline.
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for &b in bytes {
         h ^= b as u64;

@@ -139,7 +139,7 @@ impl<'a> Reader<'a> {
         )))
     }
 
-    fn finish(self) -> Result<()> {
+    pub(crate) fn finish(self) -> Result<()> {
         if self.pos != self.buf.len() {
             crate::bail!(
                 "snapshot decode: {} trailing bytes after payload",

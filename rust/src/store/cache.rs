@@ -1,0 +1,137 @@
+//! The read-through / write-back cell cache: single-flight in-memory
+//! memoization layered over the durable [`Store`].
+//!
+//! One `CellCache` can back many [`Runner`](crate::api::Runner)s at once
+//! — the `easycrash serve` job server shares a single cache across every
+//! concurrent job, so identical cells submitted by different clients
+//! dedup to one computation (single-flight) and any cell ever computed
+//! by any process against the same store root is a disk hit.
+//!
+//! Lookup order per key: memo (`SingleFlight`) → store → compute, with
+//! the store consulted and written back *inside* the key's flight gate,
+//! so racing requesters of one key perform one disk read and at most one
+//! compute between them. A store write-back failure degrades to a
+//! warning — the computed result is still served and memoized.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::easycrash::CampaignResult;
+use crate::util::error::Result;
+use crate::util::flight::SingleFlight;
+
+use super::{CellKey, Lookup, Store, StoreMiss};
+
+/// Where a served cell came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CellSource {
+    /// In-memory hit (including waiters of an in-flight computation).
+    Memo,
+    /// Durable store hit (this process never simulated the cell).
+    Store,
+    /// Computed here and now.
+    Computed,
+}
+
+impl CellSource {
+    pub fn label(self) -> &'static str {
+        match self {
+            CellSource::Memo => "memo",
+            CellSource::Store => "store",
+            CellSource::Computed => "computed",
+        }
+    }
+
+    /// Anything that skipped the simulation counts as a cache hit.
+    pub fn is_hit(self) -> bool {
+        self != CellSource::Computed
+    }
+}
+
+/// Monotonic cache counters (one snapshot per call).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub memo_hits: u64,
+    pub store_hits: u64,
+    pub computed: u64,
+    /// Store entries that existed but read as typed misses (corrupt,
+    /// truncated, version-skewed, ...) and were recomputed + repaired.
+    pub store_errors: u64,
+}
+
+pub struct CellCache {
+    flight: SingleFlight<CampaignResult>,
+    store: Option<Store>,
+    memo_hits: AtomicU64,
+    store_hits: AtomicU64,
+    computed: AtomicU64,
+    store_errors: AtomicU64,
+}
+
+impl CellCache {
+    pub fn new(store: Option<Store>) -> CellCache {
+        CellCache {
+            flight: SingleFlight::new(),
+            store,
+            memo_hits: AtomicU64::new(0),
+            store_hits: AtomicU64::new(0),
+            computed: AtomicU64::new(0),
+            store_errors: AtomicU64::new(0),
+        }
+    }
+
+    pub fn store(&self) -> Option<&Store> {
+        self.store.as_ref()
+    }
+
+    /// Serve `key` from memo or store, or compute (once per key across
+    /// all concurrent callers) and write back.
+    pub fn get_or_compute(
+        &self,
+        key: &CellKey,
+        compute: impl FnOnce() -> Result<CampaignResult>,
+    ) -> Result<(Arc<CampaignResult>, CellSource)> {
+        let mut source = CellSource::Computed;
+        let (res, fresh) = self.flight.get_or_try_init(key.canonical(), || {
+            if let Some(store) = &self.store {
+                match store.load(key) {
+                    Lookup::Hit(res) => {
+                        source = CellSource::Store;
+                        return Ok(Arc::new(res));
+                    }
+                    Lookup::Miss(StoreMiss::NotFound) => {}
+                    Lookup::Miss(miss) => {
+                        self.store_errors.fetch_add(1, Ordering::Relaxed);
+                        eprintln!("[store] {}: {miss} — recomputing", key.short());
+                    }
+                }
+            }
+            let res = Arc::new(compute()?);
+            if let Some(store) = &self.store {
+                if let Err(e) = store.save(key, &res) {
+                    eprintln!("[store] {}: write-back failed: {e}", key.short());
+                }
+            }
+            Ok(res)
+        })?;
+        if !fresh {
+            source = CellSource::Memo;
+        }
+        match source {
+            CellSource::Memo => &self.memo_hits,
+            CellSource::Store => &self.store_hits,
+            CellSource::Computed => &self.computed,
+        }
+        .fetch_add(1, Ordering::Relaxed);
+        Ok((res, source))
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            memo_hits: self.memo_hits.load(Ordering::Relaxed),
+            store_hits: self.store_hits.load(Ordering::Relaxed),
+            computed: self.computed.load(Ordering::Relaxed),
+            store_errors: self.store_errors.load(Ordering::Relaxed),
+        }
+    }
+}

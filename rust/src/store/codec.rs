@@ -1,0 +1,249 @@
+//! Bit-exact binary codec for [`CampaignResult`] store payloads.
+//!
+//! The store cannot round-trip results through report JSON: the JSON
+//! writer maps NaN to `null` and the reports are summary-level anyway.
+//! This codec serializes the *complete* result — every per-test record,
+//! every f64 as raw bits — with the same little-endian `put_*`/`Reader`
+//! helpers the snapshot format composes, so a decoded result is
+//! indistinguishable from the freshly computed one (asserted field-by-
+//! field, bitwise for floats, in `rust/tests/store.rs`).
+//!
+//! Versioning lives in the entry header ([`super::STORE_VERSION`]); any
+//! payload layout change bumps it there and old entries become typed
+//! version-skew misses.
+
+use crate::apps::Response;
+use crate::easycrash::{CampaignResult, TestRecord};
+use crate::easycrash::plan::{PersistPlan, PlanEntry};
+use crate::sim::HierStats;
+use crate::sim::snapshot::{put_bool, put_f64, put_str, put_u8, put_u64, put_usize, Reader};
+use crate::util::error::Result;
+
+fn put_response(out: &mut Vec<u8>, r: Response) {
+    put_u8(
+        out,
+        match r {
+            Response::S1 => 0,
+            Response::S2 => 1,
+            Response::S3 => 2,
+            Response::S4 => 3,
+        },
+    );
+}
+
+fn read_response(r: &mut Reader) -> Result<Response> {
+    Ok(match r.u8()? {
+        0 => Response::S1,
+        1 => Response::S2,
+        2 => Response::S3,
+        3 => Response::S4,
+        other => crate::bail!("invalid response tag {other}"),
+    })
+}
+
+/// Guard pre-allocation against absurd counts. The entry checksum already
+/// vets the bytes, so this is belt-and-braces against a future decode
+/// path that skips it.
+fn cap(n: usize) -> usize {
+    n.min(1 << 20)
+}
+
+/// Serialize a complete campaign result.
+pub fn encode_result(res: &CampaignResult) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_str(&mut out, &res.app);
+    put_usize(&mut out, res.plan.entries.len());
+    for e in &res.plan.entries {
+        put_str(&mut out, &e.object);
+        put_usize(&mut out, e.region);
+        put_u64(&mut out, e.every_x as u64);
+    }
+    put_bool(&mut out, res.plan.clwb);
+    put_usize(&mut out, res.records.len());
+    for t in &res.records {
+        put_u64(&mut out, t.op);
+        put_u64(&mut out, t.iter);
+        put_usize(&mut out, t.region);
+        put_response(&mut out, t.response);
+        put_u64(&mut out, t.extra_iters);
+        put_usize(&mut out, t.inconsistency.len());
+        for &x in &t.inconsistency {
+            put_f64(&mut out, x);
+        }
+    }
+    put_usize(&mut out, res.candidates.len());
+    for (id, name, bytes) in &res.candidates {
+        put_u64(&mut out, *id as u64);
+        put_str(&mut out, name);
+        put_usize(&mut out, *bytes);
+    }
+    put_bool(&mut out, res.iter_obj.is_some());
+    put_u64(&mut out, res.iter_obj.unwrap_or(0) as u64);
+    put_u64(&mut out, res.ops_total);
+    put_u64(&mut out, res.ops_main_start);
+    put_f64(&mut out, res.cycles);
+    put_usize(&mut out, res.region_cycles.len());
+    for &c in &res.region_cycles {
+        put_f64(&mut out, c);
+    }
+    put_u64(&mut out, res.persist_ops);
+    put_f64(&mut out, res.persist_cycles);
+    let s = &res.stats;
+    for v in [
+        s.loads,
+        s.stores,
+        s.l1_hits,
+        s.l2_hits,
+        s.l3_hits,
+        s.mem_reads,
+        s.nvm_writes_evict,
+        s.nvm_writes_flush,
+        s.flushes_dirty,
+        s.flushes_clean,
+    ] {
+        put_u64(&mut out, v);
+    }
+    put_usize(&mut out, res.footprint);
+    put_usize(&mut out, res.num_regions);
+    put_u64(&mut out, res.replayed_ops);
+    out
+}
+
+/// Decode a payload produced by [`encode_result`]. Any failure (truncated
+/// buffer, bad tag, trailing bytes) is an error the store maps to a typed
+/// miss — never a panic.
+pub fn decode_result(bytes: &[u8]) -> Result<CampaignResult> {
+    let mut r = Reader::new(bytes);
+    let app = r.str()?;
+    let n_entries = r.usize()?;
+    let mut entries = Vec::with_capacity(cap(n_entries));
+    for _ in 0..n_entries {
+        entries.push(PlanEntry {
+            object: r.str()?,
+            region: r.usize()?,
+            every_x: u32::try_from(r.u64()?).map_err(|_| crate::err!("every_x out of range"))?,
+        });
+    }
+    let plan = PersistPlan {
+        entries,
+        clwb: r.bool()?,
+    };
+    let n_records = r.usize()?;
+    let mut records = Vec::with_capacity(cap(n_records));
+    for _ in 0..n_records {
+        let op = r.u64()?;
+        let iter = r.u64()?;
+        let region = r.usize()?;
+        let response = read_response(&mut r)?;
+        let extra_iters = r.u64()?;
+        let n_inc = r.usize()?;
+        let mut inconsistency = Vec::with_capacity(cap(n_inc));
+        for _ in 0..n_inc {
+            inconsistency.push(r.f64()?);
+        }
+        records.push(TestRecord {
+            op,
+            iter,
+            region,
+            response,
+            extra_iters,
+            inconsistency,
+        });
+    }
+    let n_cand = r.usize()?;
+    let mut candidates = Vec::with_capacity(cap(n_cand));
+    for _ in 0..n_cand {
+        let id = u32::try_from(r.u64()?).map_err(|_| crate::err!("object id out of range"))?;
+        let name = r.str()?;
+        let bytes = r.usize()?;
+        candidates.push((id, name, bytes));
+    }
+    let has_iter_obj = r.bool()?;
+    let iter_obj_raw = r.u64()?;
+    let iter_obj = if has_iter_obj {
+        Some(u32::try_from(iter_obj_raw).map_err(|_| crate::err!("iter_obj out of range"))?)
+    } else {
+        None
+    };
+    let ops_total = r.u64()?;
+    let ops_main_start = r.u64()?;
+    let cycles = r.f64()?;
+    let n_rc = r.usize()?;
+    let mut region_cycles = Vec::with_capacity(cap(n_rc));
+    for _ in 0..n_rc {
+        region_cycles.push(r.f64()?);
+    }
+    let persist_ops = r.u64()?;
+    let persist_cycles = r.f64()?;
+    let stats = HierStats {
+        loads: r.u64()?,
+        stores: r.u64()?,
+        l1_hits: r.u64()?,
+        l2_hits: r.u64()?,
+        l3_hits: r.u64()?,
+        mem_reads: r.u64()?,
+        nvm_writes_evict: r.u64()?,
+        nvm_writes_flush: r.u64()?,
+        flushes_dirty: r.u64()?,
+        flushes_clean: r.u64()?,
+    };
+    let footprint = r.usize()?;
+    let num_regions = r.usize()?;
+    let replayed_ops = r.u64()?;
+    r.finish()?;
+    Ok(CampaignResult {
+        app,
+        plan,
+        records,
+        candidates,
+        iter_obj,
+        ops_total,
+        ops_main_start,
+        cycles,
+        region_cycles,
+        persist_ops,
+        persist_cycles,
+        stats,
+        footprint,
+        num_regions,
+        replayed_ops,
+    })
+}
+
+/// Field-by-field equality with *bitwise* float comparison — the parity
+/// predicate the round-trip tests assert (NaN-safe, unlike `==`).
+pub fn results_bit_identical(a: &CampaignResult, b: &CampaignResult) -> bool {
+    let f_eq = |x: f64, y: f64| x.to_bits() == y.to_bits();
+    let recs_eq = a.records.len() == b.records.len()
+        && a.records.iter().zip(&b.records).all(|(x, y)| {
+            x.op == y.op
+                && x.iter == y.iter
+                && x.region == y.region
+                && x.response == y.response
+                && x.extra_iters == y.extra_iters
+                && x.inconsistency.len() == y.inconsistency.len()
+                && x.inconsistency
+                    .iter()
+                    .zip(&y.inconsistency)
+                    .all(|(&p, &q)| f_eq(p, q))
+        });
+    a.app == b.app
+        && a.plan == b.plan
+        && recs_eq
+        && a.candidates == b.candidates
+        && a.iter_obj == b.iter_obj
+        && a.ops_total == b.ops_total
+        && a.ops_main_start == b.ops_main_start
+        && f_eq(a.cycles, b.cycles)
+        && a.region_cycles.len() == b.region_cycles.len()
+        && a.region_cycles
+            .iter()
+            .zip(&b.region_cycles)
+            .all(|(&p, &q)| f_eq(p, q))
+        && a.persist_ops == b.persist_ops
+        && f_eq(a.persist_cycles, b.persist_cycles)
+        && a.stats == b.stats
+        && a.footprint == b.footprint
+        && a.num_regions == b.num_regions
+        && a.replayed_ops == b.replayed_ops
+}

@@ -1,0 +1,159 @@
+//! Canonical cell keys for the durable result store.
+//!
+//! A [`CellKey`] renders everything that determines a cell's result
+//! bit-for-bit — and *nothing else* — into one canonical string, then
+//! FNV-1a-hashes it into the on-disk entry name. The normalization rules
+//! come straight from the executor's proven invariants:
+//!
+//! * `shards` is **excluded**: sharded campaigns are bit-identical to the
+//!   sequential run for any worker count (`rust/tests/determinism.rs`).
+//! * `snapshot_every` is **excluded**: snapshot-restore harvesting is
+//!   bit-identical to scratch replay (`rust/tests/fastpath_parity.rs`),
+//!   so the tape interval changes *work*, never results. (`replayed_ops`
+//!   does vary with the interval; it measures work and is excluded from
+//!   all parity comparisons by construction.)
+//! * profile keys additionally exclude `seed`, `tests` and the engine:
+//!   a profile pass draws no crash points and never recovers, so none of
+//!   the three can reach its result.
+//!
+//! Everything else — app, canonical plan DSL, verified flag, test count,
+//! seed, engine, cache geometry and the NVM timing profile — is rendered
+//! explicitly. Floats use Rust's shortest-round-trip `Display`, so equal
+//! bits always render equally.
+
+use crate::sim::SimConfig;
+
+/// The canonical identity of one storable cell (campaign or profile).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CellKey {
+    canonical: String,
+    hash: u64,
+}
+
+/// Canonical rendering of the simulator config *as a store key
+/// component*: geometry + NVM timing, `snapshot_every` deliberately
+/// omitted (see the module docs).
+fn cfg_canonical(cfg: &SimConfig) -> String {
+    format!(
+        "l1={}x{}|l2={}x{}|l3={}x{}|nvm={}:{}:{}:{}",
+        cfg.l1.size,
+        cfg.l1.ways,
+        cfg.l2.size,
+        cfg.l2.ways,
+        cfg.l3.size,
+        cfg.l3.ways,
+        cfg.nvm.name,
+        cfg.nvm.read_lat_x,
+        cfg.nvm.write_lat_x,
+        cfg.nvm.bw_div,
+    )
+}
+
+impl CellKey {
+    fn new(canonical: String) -> CellKey {
+        let hash = crate::sim::pool::fnv1a64(canonical.as_bytes());
+        CellKey { canonical, hash }
+    }
+
+    /// Key of a crash-campaign cell. `plan_dsl` must be the *resolved*
+    /// plan's canonical DSL (shorthands expanded) — the planner that
+    /// produced it is irrelevant to the simulation and is not part of
+    /// the key, so two planners agreeing on a plan share one entry.
+    pub fn campaign(
+        app: &str,
+        plan_dsl: &str,
+        verified: bool,
+        tests: usize,
+        seed: u64,
+        engine: &str,
+        cfg: &SimConfig,
+    ) -> CellKey {
+        CellKey::new(format!(
+            "campaign::{app}::{plan_dsl}::vfy={}::tests={tests}::seed={seed:#x}::engine={engine}::{}",
+            verified as u8,
+            cfg_canonical(cfg),
+        ))
+    }
+
+    /// Key of a profile-only cell (no crashes — seed, test count and
+    /// engine cannot reach the result and are normalized out).
+    pub fn profile(app: &str, plan_dsl: &str, cfg: &SimConfig) -> CellKey {
+        CellKey::new(format!("profile::{app}::{plan_dsl}::{}", cfg_canonical(cfg)))
+    }
+
+    /// The full canonical key string (stored inside the entry so a hash
+    /// collision reads as a typed miss, never as wrong data).
+    pub fn canonical(&self) -> &str {
+        &self.canonical
+    }
+
+    /// FNV-1a hash of the canonical string — the entry's address.
+    pub fn hash(&self) -> u64 {
+        self.hash
+    }
+
+    /// On-disk entry file name under the store root.
+    pub fn file_name(&self) -> String {
+        format!("{:016x}.ecst", self.hash)
+    }
+
+    /// A short human label for log lines (`app::plan`).
+    pub fn short(&self) -> String {
+        let mut parts = self.canonical.split("::");
+        let kind = parts.next().unwrap_or("?");
+        let app = parts.next().unwrap_or("?");
+        let plan = parts.next().unwrap_or("?");
+        format!("{kind} {app}::{plan}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::ExperimentSpec;
+
+    #[test]
+    fn snapshot_interval_and_shards_are_normalized_out() {
+        let base = ExperimentSpec::default();
+        let mut snap = base.clone();
+        snap.cfg.snapshot_every = Some(1000);
+        snap.shards = 8;
+        let k1 = CellKey::campaign("mg", "none", false, base.tests, base.seed, "native", &base.cfg);
+        let k2 = CellKey::campaign("mg", "none", false, snap.tests, snap.seed, "native", &snap.cfg);
+        assert_eq!(k1, k2);
+        assert_eq!(k1.file_name(), k2.file_name());
+    }
+
+    #[test]
+    fn result_relevant_fields_differentiate() {
+        let cfg = ExperimentSpec::default().cfg;
+        let k = |app: &str, plan: &str, vfy: bool, tests: usize, seed: u64, eng: &str| {
+            CellKey::campaign(app, plan, vfy, tests, seed, eng, &cfg)
+        };
+        let base = k("mg", "none", false, 200, 0xEC, "native");
+        assert_ne!(base, k("cg", "none", false, 200, 0xEC, "native"));
+        assert_ne!(base, k("mg", "all", false, 200, 0xEC, "native"));
+        assert_ne!(base, k("mg", "none", true, 200, 0xEC, "native"));
+        assert_ne!(base, k("mg", "none", false, 400, 0xEC, "native"));
+        assert_ne!(base, k("mg", "none", false, 200, 7, "native"));
+        assert_ne!(base, k("mg", "none", false, 200, 0xEC, "pool"));
+        let mut other = cfg;
+        other.nvm = crate::sim::NvmProfile::by_name("lat4x").unwrap();
+        assert_ne!(
+            base,
+            CellKey::campaign("mg", "none", false, 200, 0xEC, "native", &other)
+        );
+    }
+
+    #[test]
+    fn profile_keys_exclude_campaign_axes() {
+        let cfg = ExperimentSpec::default().cfg;
+        let p = CellKey::profile("mg", "none", &cfg);
+        assert!(p.canonical().starts_with("profile::"));
+        assert!(!p.canonical().contains("seed"));
+        assert!(!p.canonical().contains("tests"));
+        // Campaign and profile keys can never collide on canonical text.
+        let c = CellKey::campaign("mg", "none", false, 200, 0xEC, "native", &cfg);
+        assert_ne!(p.canonical(), c.canonical());
+    }
+}

@@ -1,0 +1,245 @@
+//! `easycrash::store` — the durable content-addressed result store.
+//!
+//! Campaign and profile results are deterministic functions of their
+//! [`CellKey`] (DESIGN.md §Store), so they are cached on disk across
+//! process restarts: any CLI run, report figure, bench or `easycrash
+//! serve` job that repeats a cell gets the stored result instead of
+//! re-simulating it.
+//!
+//! ## Entry format
+//!
+//! One file per cell under the store root, named by the FNV-1a hash of
+//! the canonical key (`<hash:016x>.ecst`), little-endian:
+//!
+//! | field    | bytes | contents                                    |
+//! |----------|-------|---------------------------------------------|
+//! | magic    | 4     | `"ECST"`                                    |
+//! | version  | 8     | [`STORE_VERSION`]                           |
+//! | key hash | 8     | FNV-1a of the canonical key string          |
+//! | key      | 8 + n | length-prefixed canonical key string        |
+//! | payload  | 8 + n | length-prefixed [`codec`] result encoding   |
+//! | checksum | 8     | FNV-1a over every preceding byte            |
+//!
+//! The same header discipline as `sim::pool`'s `ECPL` pool format: a
+//! trailing whole-entry checksum, an explicit version, and *typed*
+//! misses — a corrupt, truncated or version-skewed entry classifies as a
+//! [`StoreMiss`] that triggers recompute; no decode path can panic.
+//! Storing the full canonical key makes a hash collision a
+//! [`StoreMiss::KeyMismatch`] instead of silently wrong data.
+//!
+//! ## Concurrency
+//!
+//! Writers publish atomically: encode to a unique temp file in the store
+//! root, then `rename(2)` onto the final name. Racing writers of the
+//! same key each publish a complete entry and the last rename wins —
+//! results are deterministic per key, so every version has identical
+//! contents. Readers therefore only ever observe absent or complete
+//! entries.
+
+pub mod cache;
+pub mod codec;
+pub mod key;
+
+pub use cache::{CacheStats, CellCache, CellSource};
+pub use key::CellKey;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::easycrash::CampaignResult;
+use crate::sim::pool::fnv1a64;
+use crate::util::cli::Args;
+use crate::util::error::{Error, Result};
+
+/// Entry magic: "ECST" (EasyCrash STore).
+pub const STORE_MAGIC: [u8; 4] = *b"ECST";
+/// Entry format version — bump on any header or payload layout change;
+/// older entries then read as typed [`StoreMiss::VersionSkew`] misses.
+pub const STORE_VERSION: u64 = 1;
+/// Default store root when neither `--store-dir` nor `EASYCRASH_STORE`
+/// is set (relative to the invocation directory, like `results/`).
+pub const DEFAULT_ROOT: &str = ".easycrash-store";
+
+/// Why a load did not produce a result. Every variant triggers recompute
+/// (and write-back repairs the entry); none is an error, none panics.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StoreMiss {
+    /// No entry file — the ordinary cold miss.
+    NotFound,
+    /// The entry exists but could not be read (permissions, I/O error).
+    Unreadable(String),
+    /// Entry shorter than its framing claims (e.g. a torn copy).
+    TruncatedEntry,
+    /// The file is not a store entry at all.
+    BadMagic,
+    /// Entry written by a different format version.
+    VersionSkew { found: u64 },
+    /// Whole-entry FNV-1a mismatch: bit rot or a torn write.
+    BadChecksum,
+    /// Hash collision: the stored canonical key is a different cell.
+    KeyMismatch,
+    /// Framing was intact but the payload codec rejected the bytes.
+    Undecodable(String),
+}
+
+impl fmt::Display for StoreMiss {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StoreMiss::NotFound => write!(f, "no entry"),
+            StoreMiss::Unreadable(e) => write!(f, "unreadable entry: {e}"),
+            StoreMiss::TruncatedEntry => write!(f, "truncated entry"),
+            StoreMiss::BadMagic => write!(f, "bad entry magic"),
+            StoreMiss::VersionSkew { found } => {
+                write!(f, "entry version {found} (this build reads {STORE_VERSION})")
+            }
+            StoreMiss::BadChecksum => write!(f, "entry checksum mismatch"),
+            StoreMiss::KeyMismatch => write!(f, "key hash collision"),
+            StoreMiss::Undecodable(e) => write!(f, "undecodable payload: {e}"),
+        }
+    }
+}
+
+/// Outcome of a [`Store::load`]: either the complete stored result or a
+/// typed reason to recompute.
+pub enum Lookup {
+    Hit(CampaignResult),
+    Miss(StoreMiss),
+}
+
+/// The on-disk store: a directory of self-validating entries.
+pub struct Store {
+    root: PathBuf,
+}
+
+/// Per-process temp-name disambiguator (concurrent writers in one
+/// process must not share a temp file; the pid splits processes).
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+impl Store {
+    /// Open (creating if needed) a store rooted at `root`.
+    pub fn open(root: impl Into<PathBuf>) -> Result<Store> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)
+            .map_err(|e| Error::io(&root, "creating store root", e))?;
+        Ok(Store { root })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Path of the entry for `key` (whether or not it exists).
+    pub fn entry_path(&self, key: &CellKey) -> PathBuf {
+        self.root.join(key.file_name())
+    }
+
+    /// Read the entry for `key`. All failure modes are typed misses.
+    pub fn load(&self, key: &CellKey) -> Lookup {
+        let path = self.entry_path(key);
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Lookup::Miss(StoreMiss::NotFound)
+            }
+            Err(e) => return Lookup::Miss(StoreMiss::Unreadable(e.to_string())),
+        };
+        match decode_entry(key, &bytes) {
+            Ok(res) => Lookup::Hit(res),
+            Err(miss) => Lookup::Miss(miss),
+        }
+    }
+
+    /// Write the entry for `key`, publishing atomically via rename.
+    /// Returns the published path.
+    pub fn save(&self, key: &CellKey, res: &CampaignResult) -> Result<PathBuf> {
+        let bytes = encode_entry(key, res);
+        let path = self.entry_path(key);
+        let tmp = self.root.join(format!(
+            "{}.tmp.{}.{}",
+            key.file_name(),
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed),
+        ));
+        std::fs::write(&tmp, &bytes).map_err(|e| Error::io(&tmp, "writing store entry", e))?;
+        std::fs::rename(&tmp, &path).map_err(|e| {
+            let _ = std::fs::remove_file(&tmp);
+            Error::io(&path, "publishing store entry", e)
+        })?;
+        Ok(path)
+    }
+}
+
+/// Encode one complete entry (header + payload + trailing checksum).
+pub(crate) fn encode_entry(key: &CellKey, res: &CampaignResult) -> Vec<u8> {
+    use crate::sim::snapshot::{put_bytes, put_str, put_u64};
+    let mut out = Vec::new();
+    out.extend_from_slice(&STORE_MAGIC);
+    put_u64(&mut out, STORE_VERSION);
+    put_u64(&mut out, key.hash());
+    put_str(&mut out, key.canonical());
+    put_bytes(&mut out, &codec::encode_result(res));
+    let sum = fnv1a64(&out);
+    put_u64(&mut out, sum);
+    out
+}
+
+/// Decode one entry, validating frame, version, checksum and key before
+/// touching the payload. Errors are the typed misses `load` reports.
+pub(crate) fn decode_entry(key: &CellKey, bytes: &[u8]) -> Result<CampaignResult, StoreMiss> {
+    // Fixed frame: magic + version + key hash + two length prefixes +
+    // trailing checksum.
+    if bytes.len() < 4 {
+        return Err(StoreMiss::TruncatedEntry);
+    }
+    if bytes[..4] != STORE_MAGIC {
+        return Err(StoreMiss::BadMagic);
+    }
+    if bytes.len() < 4 + 8 + 8 + 8 {
+        return Err(StoreMiss::TruncatedEntry);
+    }
+    let rd_u64 = |off: usize| u64::from_le_bytes(bytes[off..off + 8].try_into().expect("8 bytes"));
+    let version = rd_u64(4);
+    if version != STORE_VERSION {
+        return Err(StoreMiss::VersionSkew { found: version });
+    }
+    let body = &bytes[..bytes.len() - 8];
+    let sum = rd_u64(bytes.len() - 8);
+    if fnv1a64(body) != sum {
+        return Err(StoreMiss::BadChecksum);
+    }
+    let key_hash = rd_u64(12);
+    // Past the checksum everything is authenticated; framing errors can
+    // still arise from entries written by a buggy encoder, so keep the
+    // reads bounds-checked and typed.
+    let mut r = crate::sim::snapshot::Reader::new(&body[20..]);
+    let stored_key = r.str().map_err(|_| StoreMiss::TruncatedEntry)?;
+    if key_hash != key.hash() || stored_key != key.canonical() {
+        return Err(StoreMiss::KeyMismatch);
+    }
+    let payload = r.bytes().map_err(|_| StoreMiss::TruncatedEntry)?;
+    r.finish().map_err(|_| StoreMiss::TruncatedEntry)?;
+    codec::decode_result(&payload).map_err(|e| StoreMiss::Undecodable(e.to_string()))
+}
+
+/// Resolve the store the CLI flags ask for: `--no-store` disables it,
+/// `--store-dir DIR` overrides the root, the `EASYCRASH_STORE`
+/// environment variable overrides the default
+/// [`.easycrash-store`](DEFAULT_ROOT).
+pub fn from_args(args: &Args) -> Result<Option<Store>> {
+    crate::ensure!(
+        !(args.flag("no-store") && args.get("store-dir").is_some()),
+        "--no-store and --store-dir are mutually exclusive"
+    );
+    if args.flag("no-store") {
+        return Ok(None);
+    }
+    let root = match args.get("store-dir") {
+        Some(d) => PathBuf::from(d),
+        None => match std::env::var_os("EASYCRASH_STORE") {
+            Some(d) => PathBuf::from(d),
+            None => PathBuf::from(DEFAULT_ROOT),
+        },
+    };
+    Ok(Some(Store::open(root)?))
+}

@@ -1,0 +1,162 @@
+//! Per-key single-flight memoization (the lock-granularity fix behind
+//! every `Runner` memo map).
+//!
+//! The old memo shape — one `Mutex<HashMap<String, Arc<T>>>` checked
+//! before and written after compute — had two defects under concurrency:
+//! two racers asking for the *same* key both computed it, and any shared
+//! compute resource guarded alongside the map serialized *unrelated*
+//! keys. [`SingleFlight`] fixes both: the map lock is only ever held to
+//! fetch-or-insert a per-key slot, and each slot carries its own compute
+//! gate — so distinct keys never contend, and an in-flight key blocks
+//! only its duplicates, which then all share the one computed `Arc`.
+//!
+//! A failed compute leaves the slot empty and releases the gate: the
+//! next caller retries instead of caching the error. Mutex poisoning
+//! (a panicking compute) is deliberately ignored — the slot value is
+//! only ever set *after* a successful compute, so a poisoned gate
+//! guards nothing.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use crate::util::error::Result;
+
+struct Slot<T> {
+    done: OnceLock<Arc<T>>,
+    gate: Mutex<()>,
+}
+
+impl<T> Default for Slot<T> {
+    fn default() -> Slot<T> {
+        Slot {
+            done: OnceLock::new(),
+            gate: Mutex::new(()),
+        }
+    }
+}
+
+/// A concurrent memo map with per-key compute deduplication.
+pub struct SingleFlight<T> {
+    slots: Mutex<HashMap<String, Arc<Slot<T>>>>,
+}
+
+fn relock<'a, U>(m: &'a Mutex<U>) -> MutexGuard<'a, U> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+impl<T> SingleFlight<T> {
+    pub fn new() -> SingleFlight<T> {
+        SingleFlight {
+            slots: Mutex::new(HashMap::new()),
+        }
+    }
+
+    fn slot(&self, key: &str) -> Arc<Slot<T>> {
+        relock(&self.slots)
+            .entry(key.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Non-blocking peek: the memoized value, if any compute finished.
+    pub fn get(&self, key: &str) -> Option<Arc<T>> {
+        relock(&self.slots).get(key).and_then(|s| s.done.get().cloned())
+    }
+
+    /// Return the memoized value for `key`, computing it via `init` if
+    /// absent. Exactly one concurrent caller per key runs `init`; the
+    /// rest block on that key's gate only and share the result. The
+    /// `bool` is `true` for the caller whose `init` actually ran.
+    pub fn get_or_try_init(
+        &self,
+        key: &str,
+        init: impl FnOnce() -> Result<Arc<T>>,
+    ) -> Result<(Arc<T>, bool)> {
+        let slot = self.slot(key);
+        if let Some(v) = slot.done.get() {
+            return Ok((v.clone(), false));
+        }
+        let _gate = relock(&slot.gate);
+        // A racer may have finished while we waited on the gate.
+        if let Some(v) = slot.done.get() {
+            return Ok((v.clone(), false));
+        }
+        let v = init()?;
+        let _ = slot.done.set(v.clone());
+        Ok((v, true))
+    }
+}
+
+impl<T> Default for SingleFlight<T> {
+    fn default() -> SingleFlight<T> {
+        SingleFlight::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn identical_keys_compute_once() {
+        let sf = Arc::new(SingleFlight::<usize>::new());
+        let computes = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let sf = sf.clone();
+                let computes = computes.clone();
+                s.spawn(move || {
+                    let (v, _) = sf
+                        .get_or_try_init("k", || {
+                            computes.fetch_add(1, Ordering::SeqCst);
+                            std::thread::sleep(std::time::Duration::from_millis(20));
+                            Ok(Arc::new(42))
+                        })
+                        .unwrap();
+                    assert_eq!(*v, 42);
+                });
+            }
+        });
+        assert_eq!(computes.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn distinct_keys_do_not_serialize() {
+        // Two keys whose computes each block until the *other* has
+        // started: deadlocks (and times the test out) unless the flights
+        // run concurrently, i.e. per-key gates instead of one map lock.
+        use std::sync::Barrier;
+        let sf = Arc::new(SingleFlight::<usize>::new());
+        let barrier = Arc::new(Barrier::new(2));
+        std::thread::scope(|s| {
+            for (i, key) in ["a", "b"].into_iter().enumerate() {
+                let sf = sf.clone();
+                let barrier = barrier.clone();
+                s.spawn(move || {
+                    let (v, fresh) = sf
+                        .get_or_try_init(key, || {
+                            barrier.wait();
+                            Ok(Arc::new(i))
+                        })
+                        .unwrap();
+                    assert!(fresh);
+                    assert_eq!(*v, i);
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn failed_compute_retries() {
+        let sf = SingleFlight::<u32>::new();
+        assert!(sf.get_or_try_init("k", || crate::bail!("boom")).is_err());
+        assert!(sf.get("k").is_none());
+        let (v, fresh) = sf.get_or_try_init("k", || Ok(Arc::new(7))).unwrap();
+        assert!(fresh);
+        assert_eq!(*v, 7);
+        let (v, fresh) = sf.get_or_try_init("k", || Ok(Arc::new(8))).unwrap();
+        assert!(!fresh);
+        assert_eq!(*v, 7);
+    }
+}

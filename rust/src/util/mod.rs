@@ -7,6 +7,7 @@
 
 pub mod cli;
 pub mod error;
+pub mod flight;
 pub mod json;
 pub mod quickcheck;
 pub mod rng;

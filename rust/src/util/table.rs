@@ -83,11 +83,12 @@ impl Table {
     }
 
     /// Write the CSV under `results/<name>.csv` (directory created lazily).
-    pub fn save_csv(&self, name: &str) -> std::io::Result<std::path::PathBuf> {
+    pub fn save_csv(&self, name: &str) -> crate::util::error::Result<std::path::PathBuf> {
+        use crate::util::error::Error;
         let dir = std::path::Path::new("results");
-        std::fs::create_dir_all(dir)?;
+        std::fs::create_dir_all(dir).map_err(|e| Error::io(dir, "creating results dir", e))?;
         let path = dir.join(format!("{name}.csv"));
-        std::fs::write(&path, self.to_csv())?;
+        std::fs::write(&path, self.to_csv()).map_err(|e| Error::io(&path, "writing csv to", e))?;
         Ok(path)
     }
 }

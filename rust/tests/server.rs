@@ -1,0 +1,191 @@
+//! End-to-end tests for `easycrash serve` + the `--server` client
+//! (ISSUE §Server): a second identical job recomputes nothing, the
+//! embedded report is byte-identical to a direct local run, concurrent
+//! identical jobs single-flight each cell, a server restart over the
+//! same store root serves from disk, and malformed jobs get a plain 400.
+
+use std::io::{Read, Write};
+use std::os::unix::net::UnixStream;
+use std::path::PathBuf;
+
+use easycrash::api::{ExperimentSpec, Runner};
+use easycrash::server::{self, client, ServeConfig};
+use easycrash::store::Store;
+use easycrash::util::json::Json;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("easycrash-serve-test-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).expect("test tmpdir");
+    d
+}
+
+/// The 2-apps × 2-plans acceptance matrix, sized for test speed.
+fn job_spec() -> ExperimentSpec {
+    ExperimentSpec::builder()
+        .apps(["toy", "is"])
+        .plan_str("none")
+        .and_then(|s| s.plan_str("all"))
+        .expect("plans")
+        .tests(10)
+        .seed(0xEC)
+        .build()
+        .expect("job spec")
+}
+
+fn start_on(dir: &std::path::Path, store: Option<Store>) -> (server::ServerHandle, String) {
+    let addr = format!("unix:{}", dir.join("serve.sock").display());
+    let srv = server::start(ServeConfig {
+        addr: addr.clone(),
+        store,
+        workers: 2,
+        verbose: false,
+    })
+    .expect("server start");
+    (srv, addr)
+}
+
+fn counts(done: &Json) -> (u64, u64, u64) {
+    let n = |k| done.get(k).and_then(Json::as_u64).unwrap_or(u64::MAX);
+    (n("memo_hits"), n("store_hits"), n("computed"))
+}
+
+fn report_pretty(done: &Json) -> String {
+    done.get("report").expect("done carries the report").to_pretty()
+}
+
+#[test]
+fn second_identical_job_recomputes_nothing_and_matches_a_local_run() {
+    let dir = tmpdir("rerun");
+    let (srv, addr) = start_on(&dir, None);
+    let spec = job_spec();
+
+    let mut cell_events = 0usize;
+    let first = client::submit(&addr, &spec, |ev| {
+        if ev.get("event").and_then(Json::as_str) == Some("cell") {
+            cell_events += 1;
+            assert!(ev.get("source").and_then(Json::as_str).is_some());
+        }
+    })
+    .expect("first job");
+    assert_eq!(cell_events, 4, "one cell event per matrix cell");
+    let (_, _, computed) = counts(&first);
+    assert_eq!(computed, 4, "a cold server simulates every cell");
+
+    let second = client::submit(&addr, &spec, |_| {}).expect("second job");
+    assert_eq!(counts(&second), (4, 0, 0), "warm job must be all memo hits");
+    assert_eq!(
+        report_pretty(&first),
+        report_pretty(&second),
+        "served reports must be byte-identical across submissions"
+    );
+
+    // Parity with a direct in-process run: the served document is the
+    // same serialization the CLI writes with `--out`.
+    let local = Runner::new(spec).unwrap().run().expect("local run");
+    assert_eq!(
+        report_pretty(&first),
+        local.to_json().to_pretty(),
+        "server must serve the exact local-run report document"
+    );
+    srv.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn concurrent_identical_jobs_single_flight_every_cell() {
+    let dir = tmpdir("flight");
+    let (srv, addr) = start_on(&dir, None);
+    let spec = job_spec();
+    let (done_a, done_b) = std::thread::scope(|s| {
+        let a = s.spawn(|| client::submit(&addr, &spec, |_| {}).expect("job a"));
+        let b = s.spawn(|| client::submit(&addr, &spec, |_| {}).expect("job b"));
+        (a.join().unwrap(), b.join().unwrap())
+    });
+    let (memo_a, _, computed_a) = counts(&done_a);
+    let (memo_b, _, computed_b) = counts(&done_b);
+    // Single-flight across concurrent jobs: each of the 4 cells is
+    // simulated exactly once server-wide; the other job's request for
+    // that cell is a memo hit (possibly a waiter on the in-flight one).
+    assert_eq!(computed_a + computed_b, 4, "each cell simulates once");
+    assert_eq!(memo_a + memo_b, 4, "the duplicate requests all hit");
+    assert_eq!(report_pretty(&done_a), report_pretty(&done_b));
+    srv.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn restarted_server_serves_from_the_store_without_recomputing() {
+    let dir = tmpdir("restart");
+    let store_root = dir.join("store");
+    let spec = job_spec();
+
+    let (srv, addr) = start_on(&dir, Some(Store::open(&store_root).unwrap()));
+    let first = client::submit(&addr, &spec, |_| {}).expect("first job");
+    assert_eq!(counts(&first).2, 4, "cold store: everything simulates");
+    srv.stop(); // removes the socket file; the store root stays
+
+    let (srv, addr) = start_on(&dir, Some(Store::open(&store_root).unwrap()));
+    let second = client::submit(&addr, &spec, |_| {}).expect("job after restart");
+    assert_eq!(
+        counts(&second),
+        (0, 4, 0),
+        "a restarted server must serve every cell from the durable store"
+    );
+    assert_eq!(report_pretty(&first), report_pretty(&second));
+    srv.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Raw-socket checks of the HTTP surface: health, stats, 400 on a
+/// malformed job, 404 on an unknown route.
+#[test]
+fn http_surface_answers_health_stats_and_rejects_garbage() {
+    let dir = tmpdir("http");
+    let (srv, addr) = start_on(&dir, None);
+    let sock = addr.strip_prefix("unix:").unwrap().to_string();
+    let raw = |request: String| {
+        let mut s = UnixStream::connect(&sock).expect("dial server");
+        s.write_all(request.as_bytes()).unwrap();
+        let mut resp = String::new();
+        s.read_to_string(&mut resp).unwrap();
+        resp
+    };
+
+    let health = raw("GET /health HTTP/1.1\r\n\r\n".to_string());
+    assert!(health.starts_with("HTTP/1.1 200 OK\r\n"), "got: {health}");
+    assert!(health.ends_with("ok\n"));
+
+    let stats = raw("GET /stats HTTP/1.1\r\n\r\n".to_string());
+    assert!(stats.starts_with("HTTP/1.1 200 OK\r\n"));
+    let body = stats.rsplit("\r\n\r\n").next().unwrap().trim();
+    let j = Json::parse(body).expect("stats is JSON");
+    assert!(j.get("computed").and_then(Json::as_u64).is_some());
+
+    let body = "this is not a spec";
+    let bad = raw(format!(
+        "POST /jobs HTTP/1.1\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    ));
+    assert!(bad.starts_with("HTTP/1.1 400 "), "got: {bad}");
+    assert!(bad.contains("bad job spec"));
+
+    let missing = raw("GET /nope HTTP/1.1\r\n\r\n".to_string());
+    assert!(missing.starts_with("HTTP/1.1 404 "), "got: {missing}");
+
+    // The client surfaces a rejected job as a typed error, not a hang.
+    let invalid = ExperimentSpec::builder()
+        .app("toy")
+        .tests(10)
+        .build()
+        .unwrap();
+    let mut broken = invalid;
+    broken.apps = vec!["no-such-app".to_string()];
+    let err = client::submit(&addr, &broken, |_| {}).unwrap_err();
+    assert!(
+        err.to_string().contains("server rejected job"),
+        "got: {err}"
+    );
+    srv.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,316 @@
+//! Robustness and durability tests for `easycrash::store` (ISSUE §Store):
+//! bit-identical round-trips, the typed-miss corruption matrix (every
+//! damaged entry classifies — nothing panics, everything recomputes and
+//! repairs), concurrent same-key writers, and cross-process read-through
+//! at the `Runner` level (second process recomputes nothing and emits a
+//! byte-identical report).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use easycrash::api::{ExperimentSpec, Runner};
+use easycrash::apps;
+use easycrash::easycrash::{CampaignResult, PersistPlan};
+use easycrash::store::codec::{decode_result, encode_result, results_bit_identical};
+use easycrash::store::{CellCache, CellKey, Lookup, Store, StoreMiss, STORE_VERSION};
+
+/// Fresh per-test scratch dir (tests in one binary run concurrently).
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("easycrash-store-test-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).expect("test tmpdir");
+    d
+}
+
+/// One real computed toy campaign cell + its canonical key.
+fn toy_cell() -> (CampaignResult, CellKey, ExperimentSpec) {
+    let spec = ExperimentSpec::builder()
+        .app("toy")
+        .tests(16)
+        .seed(7)
+        .build()
+        .expect("toy spec");
+    let runner = Runner::new(spec.clone()).expect("runner");
+    let app = apps::by_name("toy").unwrap();
+    let plan = PersistPlan::none();
+    let res = runner
+        .execute_cell(app.as_ref(), &plan, false)
+        .expect("toy campaign");
+    let key = CellKey::campaign(
+        "toy",
+        &plan.dsl(),
+        false,
+        spec.tests,
+        spec.seed,
+        "native",
+        &spec.cfg,
+    );
+    (res, key, spec)
+}
+
+/// Same FNV-1a as `sim::pool` / the store (reimplemented here so the
+/// tests can forge whole entries, checksum included, from outside the
+/// crate).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_01b3);
+    }
+    h
+}
+
+fn load_miss(store: &Store, key: &CellKey) -> StoreMiss {
+    match store.load(key) {
+        Lookup::Miss(m) => m,
+        Lookup::Hit(_) => panic!("expected a typed miss, got a hit"),
+    }
+}
+
+#[test]
+fn codec_round_trip_is_bit_identical() {
+    let (res, _, _) = toy_cell();
+    let bytes = encode_result(&res);
+    let back = decode_result(&bytes).expect("decode freshly encoded result");
+    assert!(
+        results_bit_identical(&res, &back),
+        "codec round-trip must preserve every field bit-for-bit"
+    );
+}
+
+#[test]
+fn store_round_trip_is_bit_identical_and_misses_are_cold() {
+    let dir = tmpdir("roundtrip");
+    let (res, key, _) = toy_cell();
+    let store = Store::open(&dir).unwrap();
+    assert_eq!(load_miss(&store, &key), StoreMiss::NotFound);
+    let path = store.save(&key, &res).unwrap();
+    assert_eq!(path, store.entry_path(&key));
+    match store.load(&key) {
+        Lookup::Hit(back) => assert!(results_bit_identical(&res, &back)),
+        Lookup::Miss(m) => panic!("expected hit after save, got {m}"),
+    }
+    // No stray temp files after a clean publish.
+    let stray: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+        .collect();
+    assert!(stray.is_empty(), "temp files must not outlive a save");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The corruption matrix: each damaged shape classifies as its typed
+/// miss — never a panic, never wrong data.
+#[test]
+fn damaged_entries_classify_as_typed_misses() {
+    let dir = tmpdir("corrupt");
+    let (res, key, spec) = toy_cell();
+    let store = Store::open(&dir).unwrap();
+    store.save(&key, &res).unwrap();
+    let path = store.entry_path(&key);
+    let good = std::fs::read(&path).unwrap();
+
+    let with = |bytes: &[u8], f: &mut dyn FnMut(&mut Vec<u8>)| {
+        let mut b = bytes.to_vec();
+        f(&mut b);
+        std::fs::write(&path, &b).unwrap();
+        load_miss(&store, &key)
+    };
+
+    // Shorter than the magic itself.
+    assert_eq!(
+        with(&good, &mut |b| b.truncate(3)),
+        StoreMiss::TruncatedEntry
+    );
+    // Magic intact but the fixed frame is cut off (a torn copy).
+    assert_eq!(
+        with(&good, &mut |b| b.truncate(10)),
+        StoreMiss::TruncatedEntry
+    );
+    // Not a store entry at all.
+    assert_eq!(
+        with(&good, &mut |b| b[..4].copy_from_slice(b"NOPE")),
+        StoreMiss::BadMagic
+    );
+    // Version skew is detected before the checksum, so a bare version
+    // patch classifies (no forged checksum needed).
+    assert_eq!(
+        with(&good, &mut |b| b[4..12]
+            .copy_from_slice(&(STORE_VERSION + 1).to_le_bytes())),
+        StoreMiss::VersionSkew {
+            found: STORE_VERSION + 1
+        }
+    );
+    // One flipped payload bit: whole-entry checksum catches it.
+    assert_eq!(
+        with(&good, &mut |b| {
+            let mid = b.len() - 16; // inside the payload, before the checksum
+            b[mid] ^= 0x01;
+        }),
+        StoreMiss::BadChecksum
+    );
+    // Truncated *and* re-checksummed == still truncated framing.
+    assert_eq!(
+        with(&good, &mut |b| {
+            b.truncate(40);
+            let sum = fnv1a64(&b[..32]);
+            b[32..40].copy_from_slice(&sum.to_le_bytes());
+        }),
+        StoreMiss::TruncatedEntry
+    );
+    // A perfectly framed entry whose payload the codec rejects.
+    let forged = with(&good, &mut |b| {
+        b.clear();
+        b.extend_from_slice(b"ECST");
+        b.extend_from_slice(&STORE_VERSION.to_le_bytes());
+        b.extend_from_slice(&key.hash().to_le_bytes());
+        let k = key.canonical().as_bytes();
+        b.extend_from_slice(&(k.len() as u64).to_le_bytes());
+        b.extend_from_slice(k);
+        let garbage = [0xFFu8; 16];
+        b.extend_from_slice(&(garbage.len() as u64).to_le_bytes());
+        b.extend_from_slice(&garbage);
+        let sum = fnv1a64(b);
+        b.extend_from_slice(&sum.to_le_bytes());
+    });
+    assert!(
+        matches!(forged, StoreMiss::Undecodable(_)),
+        "forged payload must classify as Undecodable, got {forged}"
+    );
+
+    // An entry legitimately written under a *different* key, landed on
+    // this key's path (hash collision stand-in): typed mismatch, never
+    // the wrong cell's data.
+    let other = CellKey::campaign("toy", "none", false, 999, 7, "native", &spec.cfg);
+    store.save(&other, &res).unwrap();
+    std::fs::copy(store.entry_path(&other), &path).unwrap();
+    assert_eq!(load_miss(&store, &key), StoreMiss::KeyMismatch);
+
+    // Restore the good bytes: loads cleanly again (damage was all ours).
+    std::fs::write(&path, &good).unwrap();
+    assert!(matches!(store.load(&key), Lookup::Hit(_)));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A damaged entry behind the cache recomputes (counted as a store
+/// error) and the write-back repairs the entry on disk.
+#[test]
+fn cache_recomputes_and_repairs_damaged_entries() {
+    let dir = tmpdir("repair");
+    let (res, key, _) = toy_cell();
+    {
+        let store = Store::open(&dir).unwrap();
+        store.save(&key, &res).unwrap();
+        // Damage it: flip one payload byte.
+        let path = store.entry_path(&key);
+        let mut b = std::fs::read(&path).unwrap();
+        let mid = b.len() - 16;
+        b[mid] ^= 0x01;
+        std::fs::write(&path, &b).unwrap();
+    }
+    let cache = CellCache::new(Some(Store::open(&dir).unwrap()));
+    let (served, source) = cache
+        .get_or_compute(&key, || Ok(res.clone()))
+        .expect("recompute through damaged entry");
+    assert_eq!(source.label(), "computed");
+    assert!(results_bit_identical(&served, &res));
+    let s = cache.stats();
+    assert_eq!((s.computed, s.store_hits, s.store_errors), (1, 0, 1));
+    // The write-back repaired the entry for the next process.
+    match Store::open(&dir).unwrap().load(&key) {
+        Lookup::Hit(back) => assert!(results_bit_identical(&back, &res)),
+        Lookup::Miss(m) => panic!("entry not repaired: {m}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Racing same-key writers (atomic tmp + rename) always leave one
+/// complete, valid entry — results are deterministic per key, so last
+/// rename winning is indistinguishable from any other winner.
+#[test]
+fn concurrent_writers_publish_atomically() {
+    let dir = tmpdir("race");
+    let (res, key, _) = toy_cell();
+    let res = Arc::new(res);
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            let store = Store::open(&dir).unwrap();
+            let (key, res) = (&key, Arc::clone(&res));
+            s.spawn(move || {
+                for _ in 0..20 {
+                    store.save(key, &res).unwrap();
+                }
+            });
+        }
+        // A racing reader must only ever see NotFound or a complete entry.
+        let store = Store::open(&dir).unwrap();
+        let key = &key;
+        s.spawn(move || {
+            for _ in 0..100 {
+                match store.load(key) {
+                    Lookup::Hit(_) | Lookup::Miss(StoreMiss::NotFound) => {}
+                    Lookup::Miss(m) => panic!("reader observed a torn entry: {m}"),
+                }
+            }
+        });
+    });
+    match Store::open(&dir).unwrap().load(&key) {
+        Lookup::Hit(back) => assert!(results_bit_identical(&back, &res)),
+        Lookup::Miss(m) => panic!("expected hit after the race, got {m}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The acceptance check: process A computes a 2-apps × 2-plans matrix
+/// against a store; a fresh process (stand-in: a fresh `Runner` +
+/// `Store` on the same root) replays the spec with **zero** campaign
+/// recomputation and a byte-identical report document.
+#[test]
+fn second_process_recomputes_nothing_and_reports_identically() {
+    let dir = tmpdir("crossproc");
+    let spec = ExperimentSpec::builder()
+        .apps(["toy", "is"])
+        .plan_str("none")
+        .and_then(|s| s.plan_str("all"))
+        .expect("plans")
+        .tests(12)
+        .seed(0xEC)
+        .build()
+        .expect("spec");
+
+    let runner_a = Runner::new(spec.clone())
+        .unwrap()
+        .with_store(Some(Store::open(&dir).unwrap()));
+    let report_a = runner_a.run().expect("first run").to_json().to_pretty();
+    assert!(runner_a.cache().stats().computed > 0, "first run simulates");
+
+    let runner_b = Runner::new(spec)
+        .unwrap()
+        .with_store(Some(Store::open(&dir).unwrap()));
+    let report_b = runner_b.run().expect("second run").to_json().to_pretty();
+    let s = runner_b.cache().stats();
+    assert_eq!(s.computed, 0, "second process must recompute nothing");
+    assert!(s.store_hits >= 4, "all 4 campaign cells served from disk");
+    assert_eq!(report_a, report_b, "report documents must be byte-identical");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `--store-dir` style relocation: the store root is just a directory —
+/// moving it wholesale keeps every entry valid (names and checksums are
+/// root-relative).
+#[test]
+fn store_root_is_relocatable() {
+    let dir = tmpdir("reloc");
+    let (res, key, _) = toy_cell();
+    let a = dir.join("a");
+    let b = dir.join("b");
+    Store::open(&a).unwrap().save(&key, &res).unwrap();
+    std::fs::rename(&a, &b).unwrap();
+    match Store::open(&b).unwrap().load(&key) {
+        Lookup::Hit(back) => assert!(results_bit_identical(&back, &res)),
+        Lookup::Miss(m) => panic!("relocated store must still hit: {m}"),
+    }
+    assert!(!a.exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}
