@@ -23,7 +23,7 @@
 use easycrash::api::{ExperimentSpec, Runner};
 use easycrash::apps::{self, toy::Toy};
 use easycrash::benchlib::Bench;
-use easycrash::easycrash::{Campaign, PersistPlan};
+use easycrash::easycrash::{Campaign, PersistPlan, SamplerSpec};
 use easycrash::runtime::NativeEngine;
 use easycrash::sim::SimConfig;
 
@@ -153,6 +153,92 @@ fn main() {
             std::hint::black_box(res);
             ops
         });
+    }
+    // Sampler comparison (ISSUE 9 tentpole evidence): the class-reduced
+    // campaign tests one representative per persistence-distinct crash
+    // state and weights aggregates by class width, so it reaches 100%
+    // class coverage on a budget the uniform draw cannot approach —
+    // while estimating the same recomputability. Both labels embed the
+    // test counts, coverage and recomputability estimates so the JSON
+    // artifact carries the comparison directly.
+    {
+        let app = apps::by_name("toy").unwrap();
+        let plan = {
+            let prof = Campaign::new(0, 1)
+                .profile(app.as_ref(), &PersistPlan::none())
+                .expect("bench profile");
+            let names: Vec<String> = prof
+                .selectable_candidates()
+                .map(|(_, n, _)| n.clone())
+                .collect();
+            let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+            PersistPlan::at_iter_end(&refs, app.regions().len(), 1)
+        };
+        let run_with = |sampler: &str, tests: usize| {
+            let mut c = Campaign::new(tests, 0xEC);
+            c.sampler = SamplerSpec::parse(sampler).expect("sampler DSL");
+            let mut eng = NativeEngine::new();
+            c.run(app.as_ref(), &plan, &mut eng).expect("bench campaign")
+        };
+        // Budget = the class count: `classes` covers 100% by
+        // construction; find how many tests `uniform` needs to merely
+        // reach 95% of the persistence-distinct crash states.
+        let total = run_with("classes", 4)
+            .coverage
+            .as_ref()
+            .expect("coverage")
+            .classes_total;
+        let classes = run_with("classes", total);
+        let ccov = classes.coverage.as_ref().expect("coverage");
+        let mut uniform_tests = total;
+        while uniform_tests < total * 64
+            && run_with("uniform", uniform_tests)
+                .coverage
+                .as_ref()
+                .expect("coverage")
+                .covered()
+                < 0.95
+        {
+            uniform_tests *= 2;
+        }
+        let uniform = run_with("uniform", uniform_tests);
+        let ucov = uniform.coverage.as_ref().expect("coverage");
+        let cases = [
+            (
+                "classes",
+                total,
+                format!(
+                    "sampler_classes_campaign_toy ({total} tests cover {}/{} classes, recomputability {:.3})",
+                    ccov.classes_tested,
+                    ccov.classes_total,
+                    classes.recomputability()
+                ),
+            ),
+            (
+                "uniform",
+                uniform_tests,
+                format!(
+                    "sampler_uniform_campaign_toy ({uniform_tests} tests for {:.0}% of {} classes, recomputability {:.3}, {:.1}x the class budget)",
+                    ucov.covered() * 100.0,
+                    ucov.classes_total,
+                    uniform.recomputability(),
+                    uniform_tests as f64 / total as f64
+                ),
+            ),
+        ];
+        for (sampler, tests, label) in cases {
+            let mut c = Campaign::new(tests, 0xEC);
+            c.sampler = SamplerSpec::parse(sampler).expect("sampler DSL");
+            b.run_throughput(&label, || {
+                let mut eng = NativeEngine::new();
+                let res = c
+                    .run(app.as_ref(), &plan, &mut eng)
+                    .expect("bench campaign");
+                let replayed = res.records.len() as u64;
+                std::hint::black_box(res);
+                replayed
+            });
+        }
     }
     if let Err(e) = b.write_json("BENCH_campaign.json") {
         eprintln!("warning: could not write BENCH_campaign.json: {e}");

@@ -51,7 +51,9 @@ fn main() {
     let result = runner
         .execute_cell(app.as_ref(), &plan, false)
         .expect("bench campaign");
-    let key = CellKey::campaign("toy", &plan.dsl(), false, spec.tests, spec.seed, "native", &spec.cfg);
+    let key = CellKey::campaign(
+        "toy", &plan.dsl(), false, spec.tests, spec.seed, "uniform", "native", &spec.cfg,
+    );
     let store = Store::open(dir.join("store")).expect("bench store");
     b.run("store_save_toy40", || {
         store.save(&key, &result).expect("store save");

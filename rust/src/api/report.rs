@@ -61,7 +61,7 @@ impl ExperimentCell {
                 })
                 .collect(),
         );
-        Json::obj()
+        let mut j = Json::obj()
             .set("app", self.app.as_str())
             .set("plan", self.plan.to_string())
             .set("plan_resolved", self.plan_resolved.as_str())
@@ -83,7 +83,11 @@ impl ExperimentCell {
             .set("footprint", r.footprint)
             .set("num_regions", r.num_regions)
             .set("region_recomputability", regions)
-            .set("candidates", candidates)
+            .set("candidates", candidates);
+        if let Some(cov) = &r.coverage {
+            j = j.set("coverage", cov.to_json());
+        }
+        j
     }
 }
 

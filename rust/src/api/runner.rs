@@ -35,7 +35,7 @@ use super::trace::{EfficiencyReport, TraceCell};
 /// [`CellKey`]s:
 ///
 /// * campaigns — `CellKey::campaign(app, plan.dsl(), verified, tests,
-///   seed, engine, cfg)`; a plan's canonical DSL rendering determines the
+///   seed, sampler, engine, cfg)`; a plan's canonical DSL rendering determines the
 ///   simulation bit-for-bit, so two cells (or a workflow step and a
 ///   figure) asking for the same plan share one `Arc<CampaignResult>`,
 ///   and — with a store attached — any *process* that ever computed the
@@ -316,6 +316,7 @@ impl Runner {
             verified,
             self.spec.tests,
             self.spec.seed,
+            &self.spec.sampler.to_string(),
             self.spec.engine.name(),
             &self.spec.cfg,
         );
@@ -365,6 +366,7 @@ impl Runner {
             seed: self.spec.seed,
             cfg: self.spec.cfg,
             verified,
+            sampler: self.spec.sampler,
         };
         ShardedCampaign {
             campaign,
@@ -424,6 +426,7 @@ impl Runner {
             seed: self.spec.seed,
             cfg: self.spec.cfg,
             verified,
+            sampler: self.spec.sampler,
         };
         ShardedCampaign {
             campaign,
@@ -444,7 +447,7 @@ impl Runner {
             tests: 0,
             seed: self.spec.seed,
             cfg,
-            verified: false,
+            ..Campaign::default()
         }
         .profile(app, plan)
     }

@@ -1,6 +1,6 @@
 //! The serializable experiment specification and its fluent builder.
 
-use crate::easycrash::{PlanSpec, PlannerSpec};
+use crate::easycrash::{PlanSpec, PlannerSpec, SamplerSpec};
 use crate::model::trace::FailureDist;
 use crate::runtime::{NativeEngine, StepEngine};
 use crate::sim::{CacheGeom, NvmProfile, SimConfig};
@@ -85,6 +85,11 @@ pub struct ExperimentSpec {
     /// in this experiment composes — the `critical` plan shorthand, the
     /// `workflow` subcommand and the figures all resolve through it.
     pub planner: PlannerSpec,
+    /// Crash-point exploration strategy (`--sampler` DSL): `uniform`
+    /// (default), `classes` (one test per crash-equivalence class,
+    /// width-weighted) or `adaptive(R)` (successive halving over R op
+    /// ranges).
+    pub sampler: SamplerSpec,
     /// Simulator configuration shared by every cell.
     pub cfg: SimConfig,
     /// Monte Carlo failure-trace parameters (the `efficiency`
@@ -106,6 +111,7 @@ impl Default for ExperimentSpec {
             ts: 0.03,
             tau: 0.10,
             planner: PlannerSpec::default(),
+            sampler: SamplerSpec::Uniform,
             cfg: SimConfig::mini(),
             trace: None,
         }
@@ -155,6 +161,23 @@ impl ExperimentSpec {
             "tau must be non-negative and finite"
         );
         self.planner.validate()?;
+        self.sampler.validate()?;
+        // The non-uniform samplers rely on crash points being
+        // persistence-equivalent within a class: verified mode snapshots
+        // the architectural image (changes at every op), and the pool
+        // engine's kill harness bypasses the sampled campaign path.
+        crate::ensure!(
+            self.sampler == SamplerSpec::Uniform || !self.verified,
+            "--sampler {} is incompatible with verified mode (the architectural \
+             image changes at every op; no two crash points are equivalent)",
+            self.sampler
+        );
+        crate::ensure!(
+            self.sampler == SamplerSpec::Uniform || self.engine != EngineKind::Pool,
+            "--sampler {} is incompatible with the pool engine (kill campaigns \
+             always use the uniform draw)",
+            self.sampler
+        );
         // JSON integers are i64; keeping the seed in that range preserves
         // the spec's serialization round-trip.
         crate::ensure!(
@@ -209,6 +232,9 @@ impl ExperimentSpec {
         self.tau = args.f64_or("tau", self.tau)?;
         if let Some(p) = args.get("planner") {
             self.planner = PlannerSpec::parse(p)?;
+        }
+        if let Some(s) = args.get("sampler") {
+            self.sampler = SamplerSpec::parse(s)?;
         }
         if let Some(nvm) = args.get("nvm") {
             self.cfg.nvm = NvmProfile::by_name(nvm)
@@ -286,6 +312,7 @@ impl ExperimentSpec {
             .set("ts", self.ts)
             .set("tau", self.tau)
             .set("planner", self.planner.to_string())
+            .set("sampler", self.sampler.to_string())
             .set("geometry", self.geometry_name())
             .set("nvm", self.cfg.nvm.name);
         if let Some(every) = self.cfg.snapshot_every {
@@ -320,7 +347,8 @@ impl ExperimentSpec {
         // silently fall back to a default and run the wrong experiment.
         const KNOWN: &[&str] = &[
             "schema", "apps", "plans", "tests", "seed", "shards", "engine", "verified", "ts",
-            "tau", "planner", "geometry", "cache", "nvm", "snapshot_interval", "trace",
+            "tau", "planner", "sampler", "geometry", "cache", "nvm", "snapshot_interval",
+            "trace",
         ];
         for (i, (key, _)) in fields.iter().enumerate() {
             crate::ensure!(
@@ -399,6 +427,12 @@ impl ExperimentSpec {
                 .as_str()
                 .ok_or_else(|| crate::err!("`planner` must be a string"))?;
             spec.planner = PlannerSpec::parse(s)?;
+        }
+        if let Some(v) = j.get("sampler") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| crate::err!("`sampler` must be a string"))?;
+            spec.sampler = SamplerSpec::parse(s)?;
         }
         if j.get("cache").is_some() {
             crate::ensure!(
@@ -546,6 +580,18 @@ impl SpecBuilder {
     /// `topk(3)+iterend`).
     pub fn planner_str(mut self, dsl: &str) -> Result<SpecBuilder> {
         self.spec.planner = PlannerSpec::parse(dsl)?;
+        Ok(self)
+    }
+
+    pub fn sampler(mut self, sampler: SamplerSpec) -> SpecBuilder {
+        self.spec.sampler = sampler;
+        self
+    }
+
+    /// Set the crash-point sampler in DSL form (`uniform` / `classes` /
+    /// `adaptive(R)`).
+    pub fn sampler_str(mut self, dsl: &str) -> Result<SpecBuilder> {
+        self.spec.sampler = SamplerSpec::parse(dsl)?;
         Ok(self)
     }
 

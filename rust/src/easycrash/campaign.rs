@@ -45,8 +45,6 @@
 //! spans ≥ the test count — every real app; `partition_points` keeps
 //! duplicate draws in one batch regardless).
 
-use std::sync::Arc;
-
 use crate::apps::{CrashApp, Golden, Response, Snapshot};
 use crate::runtime::{NativeEngine, StepEngine};
 use crate::sim::{
@@ -57,6 +55,10 @@ use crate::util::error::{Context, Result};
 use crate::util::rng::Rng;
 
 use super::plan::PersistPlan;
+use super::sampler::{
+    self, class_points, halving_budgets, outcome_impurity, region_bounds, region_of, ClassMap,
+    Coverage, SamplerSpec,
+};
 
 /// One crash test's outcome.
 #[derive(Clone, Debug, PartialEq)]
@@ -115,41 +117,86 @@ pub struct CampaignResult {
     /// bit-identity parity comparisons by construction (it measures work,
     /// not results).
     pub replayed_ops: u64,
+    /// Per-record aggregation weights for non-uniform samplers (empty ⇒
+    /// every record counts equally, the historical behavior). The
+    /// `classes` sampler weights each representative by its equivalence
+    /// class's op width; `adaptive` weights each sample by
+    /// `region_width / region_samples`. Either way the weighted
+    /// aggregates below are unbiased estimates of the same op-uniform
+    /// quantities the uniform draw estimates — `classes` is *exact* over
+    /// the tested span, since the outcome is constant within a class.
+    pub weights: Vec<f64>,
+    /// Crash-state coverage report (`easycrash.coverage/v1`): present for
+    /// seeded campaign runs (any sampler), absent for profile-only
+    /// results and explicit-point runs.
+    pub coverage: Option<Coverage>,
 }
 
 impl CampaignResult {
     /// Application recomputability (§2.2): fraction of tests that
-    /// recompute successfully with no extra iterations (S1).
+    /// recompute successfully with no extra iterations (S1). With
+    /// [`weights`](CampaignResult::weights) populated this is the
+    /// weighted fraction (op-span share, not record share).
     pub fn recomputability(&self) -> f64 {
         if self.records.is_empty() {
             return 0.0;
         }
-        self.records
-            .iter()
-            .filter(|r| r.response.recomputes())
-            .count() as f64
-            / self.records.len() as f64
+        if self.weights.is_empty() {
+            return self
+                .records
+                .iter()
+                .filter(|r| r.response.recomputes())
+                .count() as f64
+                / self.records.len() as f64;
+        }
+        let (mut ok, mut total) = (0.0f64, 0.0f64);
+        for (r, &w) in self.records.iter().zip(&self.weights) {
+            total += w;
+            if r.response.recomputes() {
+                ok += w;
+            }
+        }
+        if total == 0.0 {
+            0.0
+        } else {
+            ok / total
+        }
     }
 
-    /// Fraction of each response class [S1, S2, S3, S4] (Fig. 3).
+    /// Fraction of each response class [S1, S2, S3, S4] (Fig. 3),
+    /// weighted when [`weights`](CampaignResult::weights) is populated.
     pub fn response_fractions(&self) -> [f64; 4] {
-        let mut c = [0usize; 4];
-        for r in &self.records {
-            let i = match r.response {
-                Response::S1 => 0,
-                Response::S2 => 1,
-                Response::S3 => 2,
-                Response::S4 => 3,
-            };
-            c[i] += 1;
+        if self.weights.is_empty() {
+            let mut c = [0usize; 4];
+            for r in &self.records {
+                c[Self::response_slot(r.response)] += 1;
+            }
+            let n = self.records.len().max(1) as f64;
+            return [
+                c[0] as f64 / n,
+                c[1] as f64 / n,
+                c[2] as f64 / n,
+                c[3] as f64 / n,
+            ];
         }
-        let n = self.records.len().max(1) as f64;
-        [
-            c[0] as f64 / n,
-            c[1] as f64 / n,
-            c[2] as f64 / n,
-            c[3] as f64 / n,
-        ]
+        let mut c = [0.0f64; 4];
+        for (r, &w) in self.records.iter().zip(&self.weights) {
+            c[Self::response_slot(r.response)] += w;
+        }
+        let n: f64 = c.iter().sum();
+        if n == 0.0 {
+            return [0.0; 4];
+        }
+        [c[0] / n, c[1] / n, c[2] / n, c[3] / n]
+    }
+
+    fn response_slot(r: Response) -> usize {
+        match r {
+            Response::S1 => 0,
+            Response::S2 => 1,
+            Response::S3 => 2,
+            Response::S4 => 3,
+        }
     }
 
     /// Recomputability of crashes that landed in region `k` (`c_k`).
@@ -157,36 +204,66 @@ impl CampaignResult {
     /// Single pass, no intermediate collect — `report/` calls this per
     /// region per figure.
     pub fn region_recomputability(&self, k: usize) -> Option<f64> {
-        let (mut hits, mut ok) = (0usize, 0usize);
-        for r in &self.records {
+        if self.weights.is_empty() {
+            let (mut hits, mut ok) = (0usize, 0usize);
+            for r in &self.records {
+                if r.region == k {
+                    hits += 1;
+                    if r.response.recomputes() {
+                        ok += 1;
+                    }
+                }
+            }
+            return if hits == 0 {
+                None
+            } else {
+                Some(ok as f64 / hits as f64)
+            };
+        }
+        let (mut hits, mut ok) = (0.0f64, 0.0f64);
+        for (r, &w) in self.records.iter().zip(&self.weights) {
             if r.region == k {
-                hits += 1;
+                hits += w;
                 if r.response.recomputes() {
-                    ok += 1;
+                    ok += w;
                 }
             }
         }
-        if hits == 0 {
+        if hits == 0.0 {
             None
         } else {
-            Some(ok as f64 / hits as f64)
+            Some(ok / hits)
         }
     }
 
     /// Mean extra iterations over successful-with-overhead tests (Table 1
     /// "Ave. # of extra iter."). Single pass, no intermediate collect.
     pub fn mean_extra_iters(&self) -> Option<f64> {
-        let (mut n, mut sum) = (0u64, 0u64);
-        for r in &self.records {
+        if self.weights.is_empty() {
+            let (mut n, mut sum) = (0u64, 0u64);
+            for r in &self.records {
+                if r.response == Response::S2 {
+                    n += 1;
+                    sum += r.extra_iters;
+                }
+            }
+            return if n == 0 {
+                None
+            } else {
+                Some(sum as f64 / n as f64)
+            };
+        }
+        let (mut n, mut sum) = (0.0f64, 0.0f64);
+        for (r, &w) in self.records.iter().zip(&self.weights) {
             if r.response == Response::S2 {
-                n += 1;
-                sum += r.extra_iters;
+                n += w;
+                sum += w * r.extra_iters as f64;
             }
         }
-        if n == 0 {
+        if n == 0.0 {
             None
         } else {
-            Some(sum as f64 / n as f64)
+            Some(sum / n)
         }
     }
 
@@ -373,8 +450,14 @@ pub struct Campaign {
     /// §6 "result verification" mode: snapshot the *architectural* image
     /// instead of NVM at each crash (the physical-machine methodology
     /// where copying data forces consistency). Reported as "VFY" in
-    /// Fig. 6.
+    /// Fig. 6. Incompatible with the non-uniform samplers: the
+    /// architectural image changes at every op, so crash points are
+    /// never persistence-equivalent under verification.
     pub verified: bool,
+    /// Crash-point exploration strategy (`--sampler`): the historical
+    /// uniform draw, equivalence-class reduction, or adaptive successive
+    /// halving. See [`super::sampler`].
+    pub sampler: SamplerSpec,
 }
 
 impl Default for Campaign {
@@ -384,6 +467,7 @@ impl Default for Campaign {
             seed: 0xEC,
             cfg: SimConfig::mini(),
             verified: false,
+            sampler: SamplerSpec::Uniform,
         }
     }
 }
@@ -434,13 +518,25 @@ pub(crate) struct PassCtx {
     pub(crate) num_regions: usize,
 }
 
+/// Everything one profile pass produces: the records-empty result (the
+/// timing/write aggregates), the snapshot tape (empty unless
+/// `cfg.snapshot_every` was set), and the exploration observations —
+/// ops at which a recovery-relevant persisted byte range changed, plus
+/// the code-region transition marks (both empty for `tests == 0`
+/// profile-only campaigns, which skip the recording).
+pub(crate) struct ProfilePass {
+    pub(crate) result: CampaignResult,
+    pub(crate) tape: SnapshotTape,
+    pub(crate) mutations: Vec<u64>,
+    pub(crate) marks: Vec<(u64, usize)>,
+}
+
 impl Campaign {
     pub fn new(tests: usize, seed: u64) -> Campaign {
         Campaign {
             tests,
             seed,
-            cfg: SimConfig::mini(),
-            verified: false,
+            ..Campaign::default()
         }
     }
 
@@ -485,35 +581,66 @@ impl Campaign {
     /// campaign, used by Table 4 / Fig. 7-9 and the `l_k` estimates.
     pub fn profile(&self, app: &dyn CrashApp, plan: &PersistPlan) -> Result<CampaignResult> {
         let ctx = self.prepare(app, plan)?;
-        let (res, _tape) = self.profile_with(app, plan, &ctx)?;
-        Ok(res)
+        Ok(self.profile_with(app, plan, &ctx)?.result)
     }
 
     /// The profile pass proper. When `cfg.snapshot_every` is set the env
     /// additionally records an [`EnvSnapshot`](crate::sim::EnvSnapshot)
     /// tape at iteration boundaries — the forward run the campaign pays
     /// for anyway doubles as the snapshot donor, so the tape is free
-    /// modulo the capture copies themselves.
+    /// modulo the capture copies themselves. For seeded campaigns
+    /// (`tests > 0`) the pass also records the persistent-state mutation
+    /// ops and code-region marks the exploration layer needs (class maps
+    /// and coverage reports) — observation only, nothing about the
+    /// simulated execution changes.
     pub(crate) fn profile_with(
         &self,
         app: &dyn CrashApp,
         plan: &PersistPlan,
         ctx: &PassCtx,
-    ) -> Result<(CampaignResult, SnapshotTape)> {
+    ) -> Result<ProfilePass> {
         let mut env = SimEnv::new(&self.cfg, ctx.num_regions);
         env.set_hooks(ctx.hooks.clone());
         if let Some(every) = self.cfg.snapshot_every {
             env.record_snapshots(every);
         }
+        if self.tests > 0 {
+            // Watch every recovery-relevant byte range: a crash outcome is
+            // a function of the candidates' persisted bytes plus the
+            // bookmark, so only write-backs overlapping these ranges are
+            // class boundaries.
+            let mut watch: Vec<(usize, usize)> = ctx
+                .candidates
+                .iter()
+                .map(|&(id, _, _)| {
+                    let o = ctx.layout.get(id);
+                    (o.base, o.end())
+                })
+                .collect();
+            if let Some(it) = ctx.iter_obj {
+                if !ctx.candidates.iter().any(|&(id, _, _)| id == it) {
+                    let o = ctx.layout.get(it);
+                    watch.push((o.base, o.end()));
+                }
+            }
+            env.record_mutations(watch);
+        }
         app.run_sim(&mut env).map_err(|s| {
             crate::err!("campaign {}: profile run failed with {s:?}", app.name())
         })?;
         let tape = env.take_tape();
+        let (mutations, marks) = env.take_mutations();
         let core = EnvCore::of(&mut env);
-        Ok((self.result_of(app, plan, ctx, core, Vec::new(), 0), tape))
+        Ok(ProfilePass {
+            result: self.result_of(app, plan, ctx, core, Vec::new(), 0),
+            tape,
+            mutations,
+            marks,
+        })
     }
 
     /// Full campaign: profile + crash harvesting + inline classification.
+    /// Crash points come from the configured [`sampler`](Campaign::sampler).
     pub fn run(
         &self,
         app: &dyn CrashApp,
@@ -521,15 +648,14 @@ impl Campaign {
         engine: &mut dyn StepEngine,
     ) -> Result<CampaignResult> {
         let ctx = self.prepare(app, plan)?;
-        // Pass 1 (profile) to learn the op-count range of the main loop —
-        // and, with `snapshot_every` set, to record the snapshot tape.
-        let (profile, tape) = self.profile_with(app, plan, &ctx)?;
-        let points =
-            draw_crash_points(self.seed, self.tests, profile.ops_main_start, profile.ops_total);
-        // Pass 2: harvest.
-        let mut res = self.harvest(app, plan, points, engine, None, &ctx, &tape)?;
-        res.ops_main_start = profile.ops_main_start;
-        Ok(res)
+        // Pass 1 (profile) to learn the op-count range of the main loop,
+        // the mutation/region observations — and, with `snapshot_every`
+        // set, to record the snapshot tape.
+        let pass = self.profile_with(app, plan, &ctx)?;
+        // Pass 2: harvest, one sequential round per sampler request.
+        self.run_sampled(&pass, &mut |points| {
+            self.harvest(app, plan, points, engine, None, &ctx, &pass.tape)
+        })
     }
 
     /// [`Campaign::run`] with explicitly chosen crash points instead of
@@ -546,9 +672,150 @@ impl Campaign {
     ) -> Result<CampaignResult> {
         points.sort_unstable();
         let ctx = self.prepare(app, plan)?;
-        let (profile, tape) = self.profile_with(app, plan, &ctx)?;
-        let mut res = self.harvest(app, plan, points, engine, None, &ctx, &tape)?;
-        res.ops_main_start = profile.ops_main_start;
+        let pass = self.profile_with(app, plan, &ctx)?;
+        let mut res = self.harvest(app, plan, points, engine, None, &ctx, &pass.tape)?;
+        res.ops_main_start = pass.result.ops_main_start;
+        Ok(res)
+    }
+
+    /// Dispatch one full campaign harvest through the configured
+    /// [`sampler`](Campaign::sampler). `harvest_round` executes one
+    /// harvest pass over a sorted point batch and returns a result with
+    /// full-run aggregates (the sequential [`Campaign::harvest`] or the
+    /// sharded fan-out); `uniform` and `classes` call it exactly once,
+    /// `adaptive(R)` once per halving round. Every draw happens *here*,
+    /// from the profile observations alone — never inside a round — so
+    /// all samplers inherit the uniform draw's shard-count invariance.
+    pub(crate) fn run_sampled(
+        &self,
+        pass: &ProfilePass,
+        harvest_round: &mut dyn FnMut(Vec<u64>) -> Result<CampaignResult>,
+    ) -> Result<CampaignResult> {
+        crate::ensure!(
+            !self.verified || self.sampler == SamplerSpec::Uniform,
+            "sampler `{}` needs persistence-equivalent crash points, which verified \
+             mode breaks (the architectural image changes at every op); use --sampler uniform",
+            self.sampler
+        );
+        let (lo, hi) = (pass.result.ops_main_start, pass.result.ops_total);
+        let num_regions = pass.result.num_regions;
+        let mut res = match self.sampler {
+            SamplerSpec::Uniform => {
+                let points = draw_crash_points(self.seed, self.tests, lo, hi);
+                let mut res = harvest_round(points.clone())?;
+                if self.tests > 0 {
+                    // Coverage is reported for the uniform draw too, so
+                    // equal-budget sampler comparisons are one subtraction.
+                    let map = ClassMap::build(&pass.mutations, lo, hi);
+                    res.coverage =
+                        Some(Coverage::compute(&map, &points, &pass.marks, num_regions));
+                }
+                res
+            }
+            SamplerSpec::Classes => {
+                let map = ClassMap::build(&pass.mutations, lo, hi);
+                let points = class_points(&map, self.tests, self.seed);
+                let mut res = harvest_round(points.clone())?;
+                // One representative stands for its whole class: weight it
+                // by the class's op width. The outcome is constant within
+                // a class, so the weighted aggregates equal the exact
+                // op-uniform quantities over the tested span.
+                res.weights = res
+                    .records
+                    .iter()
+                    .map(|r| map.width(map.class_of(r.op)) as f64)
+                    .collect();
+                if self.tests > 0 {
+                    res.coverage =
+                        Some(Coverage::compute(&map, &points, &pass.marks, num_regions));
+                }
+                res
+            }
+            SamplerSpec::Adaptive { regions } => self.run_adaptive(regions, pass, harvest_round)?,
+        };
+        res.ops_main_start = lo;
+        Ok(res)
+    }
+
+    /// Successive halving over `regions` contiguous op ranges: each round
+    /// spreads its budget slice uniformly over the surviving ranges,
+    /// outcomes are tallied per range, and the half with the most mixed
+    /// responses (Gini impurity over S1..S4) survives to the next round —
+    /// budget flows toward the ranges where the classification is still
+    /// uncertain. Draws are pure functions of `(seed, round, region)` and
+    /// the halving decisions are deterministic functions of the tallies,
+    /// so results are bit-reproducible per seed and shard-count invariant.
+    fn run_adaptive(
+        &self,
+        regions: usize,
+        pass: &ProfilePass,
+        harvest_round: &mut dyn FnMut(Vec<u64>) -> Result<CampaignResult>,
+    ) -> Result<CampaignResult> {
+        let (lo, hi) = (pass.result.ops_main_start, pass.result.ops_total);
+        let bounds = region_bounds(lo, hi, regions);
+        let budgets = halving_budgets(regions, self.tests);
+        let mut active: Vec<usize> = (0..regions).collect();
+        let mut tagged: Vec<(usize, TestRecord)> = Vec::new();
+        let mut counts = vec![[0usize; 4]; regions];
+        let mut replayed: u64 = 0;
+        let mut agg: Option<CampaignResult> = None;
+        for (round, &budget) in budgets.iter().enumerate() {
+            if budget > 0 {
+                let mut points = Vec::with_capacity(budget);
+                for (j, &reg) in active.iter().enumerate() {
+                    let quota = budget / active.len() + usize::from(j < budget % active.len());
+                    let (s, e) = (bounds[reg], bounds[reg + 1]);
+                    let mut rng = Rng::new(sampler::round_seed(self.seed, round, reg));
+                    for _ in 0..quota {
+                        points.push(if e > s { s + rng.below(e - s) } else { s });
+                    }
+                }
+                points.sort_unstable();
+                let res = harvest_round(points)?;
+                replayed += res.replayed_ops;
+                for rec in &res.records {
+                    let reg = region_of(&bounds, rec.op);
+                    counts[reg][CampaignResult::response_slot(rec.response)] += 1;
+                    tagged.push((reg, rec.clone()));
+                }
+                agg = Some(res);
+            }
+            if active.len() > 1 {
+                active = sampler::halve(&active, |r| outcome_impurity(counts[r]));
+            }
+        }
+        let mut res = match agg {
+            Some(res) => res,
+            // tests == 0: no round drew anything; one empty pass supplies
+            // the full-run aggregates (mirrors the uniform empty campaign).
+            None => {
+                let res = harvest_round(Vec::new())?;
+                replayed += res.replayed_ops;
+                res
+            }
+        };
+        // Interleave the rounds back into one ascending record list
+        // (stable sort: equal ops keep draw order, matching the
+        // duplicate-point behavior of a single harvest pass).
+        tagged.sort_by_key(|(_, rec)| rec.op);
+        let mut n_per = vec![0usize; regions];
+        for (reg, _) in &tagged {
+            n_per[*reg] += 1;
+        }
+        // Stratified weights: each sample stands for an equal share of
+        // its region's op span, making the weighted aggregates unbiased
+        // for the same op-uniform quantities the uniform draw estimates.
+        res.weights = tagged
+            .iter()
+            .map(|&(reg, _)| (bounds[reg + 1] - bounds[reg]) as f64 / n_per[reg] as f64)
+            .collect();
+        if self.tests > 0 {
+            let map = ClassMap::build(&pass.mutations, lo, hi);
+            let ops: Vec<u64> = tagged.iter().map(|(_, rec)| rec.op).collect();
+            res.coverage = Some(Coverage::compute(&map, &ops, &pass.marks, pass.result.num_regions));
+        }
+        res.records = tagged.into_iter().map(|(_, rec)| rec).collect();
+        res.replayed_ops = replayed;
         Ok(res)
     }
 
@@ -577,6 +844,8 @@ impl Campaign {
             footprint: core.footprint,
             num_regions: ctx.num_regions,
             replayed_ops,
+            weights: Vec::new(),
+            coverage: None,
         }
     }
 
@@ -828,18 +1097,7 @@ impl ShardedCampaign {
         // shared by reference across all workers instead of each paying a
         // throwaway probe env of its own.
         let ctx = c.prepare(app, plan)?;
-        let (profile, tape) = c.profile_with(app, plan, &ctx)?;
-        let points =
-            draw_crash_points(c.seed, c.tests, profile.ops_main_start, profile.ops_total);
-        let mut batches = partition_points(&points, shards);
-        // An empty batch would still cost a worker a (partial) replay that
-        // harvests nothing (reachable when shards > points); drop them,
-        // keeping one pass alive for the aggregate side.
-        batches.retain(|b| !b.is_empty());
-        if batches.is_empty() {
-            batches.push(Vec::new());
-        }
-        let n_batches = batches.len();
+        let pass = c.profile_with(app, plan, &ctx)?;
 
         // Front-load the golden run before spawning: `OnceLock` already
         // guarantees exactly-once initialization (racers block, never
@@ -847,59 +1105,76 @@ impl ShardedCampaign {
         // wall-clock free of one serialized warm-up.
         let _ = app.golden();
 
-        // The step-1 snapshot tape is shared read-only by every worker:
-        // each restores from the same immutable snapshots, so a T-test
-        // campaign replays ~T·interval ops instead of ~T·n/2.
-        let tape = Arc::new(tape);
         let ctx_ref = &ctx;
+        // The step-1 snapshot tape is shared read-only by every worker
+        // (scoped threads borrow it): each restores from the same
+        // immutable snapshots, so a T-test campaign replays ~T·interval
+        // ops instead of ~T·n/2.
+        let tape_ref = &pass.tape;
 
-        let results: Vec<Result<CampaignResult>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = batches
-                .into_iter()
-                .enumerate()
-                .map(|(s, batch)| {
-                    // Last batch = designated full-run worker (aggregates);
-                    // everyone else stops right after their final point.
-                    let halt = if s + 1 == n_batches {
-                        None
-                    } else {
-                        batch.last().map(|&p| p + 1)
-                    };
-                    let tape = Arc::clone(&tape);
-                    scope.spawn(move || {
-                        let mut engine = make_engine();
-                        c.harvest(app, plan, batch, engine.as_mut(), halt, ctx_ref, &tape)
+        // The sampler chooses the points (one batch for uniform/classes,
+        // one per halving round for adaptive); this closure is the
+        // parallel harvest it dispatches each batch through.
+        c.run_sampled(&pass, &mut |points: Vec<u64>| {
+            let mut batches = partition_points(&points, shards);
+            // An empty batch would still cost a worker a (partial) replay
+            // that harvests nothing (reachable when shards > points);
+            // drop them, keeping one pass alive for the aggregate side.
+            batches.retain(|b| !b.is_empty());
+            if batches.is_empty() {
+                batches.push(Vec::new());
+            }
+            let n_batches = batches.len();
+
+            let results: Vec<Result<CampaignResult>> = std::thread::scope(|scope| {
+                let handles: Vec<_> = batches
+                    .into_iter()
+                    .enumerate()
+                    .map(|(s, batch)| {
+                        // Last batch = designated full-run worker
+                        // (aggregates); everyone else stops right after
+                        // their final point.
+                        let halt = if s + 1 == n_batches {
+                            None
+                        } else {
+                            batch.last().map(|&p| p + 1)
+                        };
+                        scope.spawn(move || {
+                            let mut engine = make_engine();
+                            c.harvest(app, plan, batch, engine.as_mut(), halt, ctx_ref, tape_ref)
+                        })
                     })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("shard worker panicked"))
-                .collect()
-        });
-        let mut results = results.into_iter().collect::<Result<Vec<CampaignResult>>>()?;
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("shard worker panicked"))
+                    .collect()
+            });
+            let mut results = results.into_iter().collect::<Result<Vec<CampaignResult>>>()?;
 
-        // Aggregates come from the designated full-run worker (the last
-        // one); records are the shard batches concatenated in shard order
-        // — contiguous slices of one sorted draw, so the result is the
-        // sequential record list bit-for-bit. `replayed_ops` measures work,
-        // not results, so it alone is *summed* across workers.
-        let mut merged = results.pop().expect("at least one worker");
-        merged.replayed_ops += results.iter().map(|r| r.replayed_ops).sum::<u64>();
-        let tail = std::mem::take(&mut merged.records);
-        let mut records =
-            Vec::with_capacity(results.iter().map(|r| r.records.len()).sum::<usize>() + tail.len());
-        for r in results {
-            records.extend(r.records);
-        }
-        records.extend(tail);
-        debug_assert!(
-            records.windows(2).all(|w| w[0].op <= w[1].op),
-            "shard record batches must concatenate in sorted op order"
-        );
-        merged.records = records;
-        merged.ops_main_start = profile.ops_main_start;
-        Ok(merged)
+            // Aggregates come from the designated full-run worker (the
+            // last one); records are the shard batches concatenated in
+            // shard order — contiguous slices of one sorted batch, so the
+            // result is the sequential record list bit-for-bit.
+            // `replayed_ops` measures work, not results, so it alone is
+            // *summed* across workers.
+            let mut merged = results.pop().expect("at least one worker");
+            merged.replayed_ops += results.iter().map(|r| r.replayed_ops).sum::<u64>();
+            let tail = std::mem::take(&mut merged.records);
+            let mut records = Vec::with_capacity(
+                results.iter().map(|r| r.records.len()).sum::<usize>() + tail.len(),
+            );
+            for r in results {
+                records.extend(r.records);
+            }
+            records.extend(tail);
+            debug_assert!(
+                records.windows(2).all(|w| w[0].op <= w[1].op),
+                "shard record batches must concatenate in sorted op order"
+            );
+            merged.records = records;
+            Ok(merged)
+        })
     }
 }
 

@@ -142,11 +142,14 @@ impl KillCampaign {
     /// The simulated-campaign twin (same sampling inputs, `verified`
     /// never applies to a real crash).
     fn base(&self) -> Campaign {
+        // Always the uniform draw: kill campaigns bypass `Campaign::run`,
+        // so the exploration samplers do not apply here (the API spec
+        // rejects `--engine pool` with a non-uniform `--sampler`).
         Campaign {
             tests: self.tests,
             seed: self.seed,
             cfg: self.cfg,
-            verified: false,
+            ..Campaign::default()
         }
     }
 
@@ -184,7 +187,7 @@ impl KillCampaign {
         points.sort_unstable();
         let base = self.base();
         let ctx = base.prepare(app, plan)?;
-        let (mut result, _tape) = base.profile_with(app, plan, &ctx)?;
+        let mut result = base.profile_with(app, plan, &ctx)?.result;
         let golden = app.golden();
         let mut replayed = 0u64;
         let mut records = Vec::with_capacity(points.len());

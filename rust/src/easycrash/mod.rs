@@ -9,6 +9,7 @@ pub mod killcampaign;
 pub mod plan;
 pub mod planner;
 pub mod regions;
+pub mod sampler;
 pub mod selection;
 pub mod stats;
 pub mod workflow;
@@ -17,4 +18,5 @@ pub use campaign::{Campaign, CampaignResult, ShardedCampaign, TestRecord};
 pub use killcampaign::KillCampaign;
 pub use plan::{PersistPlan, PlanSpec};
 pub use planner::{PlacerSpec, PlannerSpec, SelectorSpec};
+pub use sampler::{ClassMap, Coverage, RegionCoverage, SamplerSpec};
 pub use workflow::{Workflow, WorkflowSummary};

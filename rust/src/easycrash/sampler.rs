@@ -1,0 +1,659 @@
+//! Crash-point exploration strategies (ROADMAP item 1).
+//!
+//! The uniform draw treats every main-loop op as a distinct crash state,
+//! but recovery only reads the *persisted* image — two crash points with
+//! no persistent-state mutation between them restart from identical NVM
+//! bytes and classify identically. This module exploits that:
+//!
+//! * [`ClassMap`] partitions the main-loop op span into crash-equivalence
+//!   classes bounded by the mutation ops the profile pass records
+//!   ([`crate::sim::SimEnv::record_mutations`]): a mutation at op `q`
+//!   first becomes visible to a crash at op `q + 1`, so every class is a
+//!   half-open window `[b_i, b_{i+1})` between consecutive visibility
+//!   boundaries.
+//! * [`SamplerSpec`] is the named strategy registry (mirroring the
+//!   planner's selector/placer registry): `uniform` is the historical
+//!   draw, `classes` tests one seeded representative per class and
+//!   weights each record by its class width (equivalent in expectation
+//!   to uniform — the outcome is constant within a class — with zero
+//!   within-class sampling variance), `adaptive(R)` runs successive
+//!   halving over `R` contiguous op ranges, reallocating the budget
+//!   toward ranges with mixed S1/S2/S3/S4 outcomes.
+//! * [`Coverage`] is the typed report (`easycrash.coverage/v1`): how many
+//!   persistence-distinct crash states exist, how many were tested, and
+//!   the per-code-region breakdown.
+//!
+//! Everything here is a pure function of `(seed, profile observations)` —
+//! no draw ever depends on the shard count, so campaign results stay
+//! bit-reproducible across `--shards` for every sampler.
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::util::error::Result;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::planner::StrategyInfo;
+
+/// Schema tag of the coverage report.
+pub const COVERAGE_SCHEMA: &str = "easycrash.coverage/v1";
+
+/// Default region count for `adaptive` when none is given.
+pub const ADAPTIVE_DEFAULT_REGIONS: usize = 8;
+
+/// Salt for the per-class representative draw (distinct from the uniform
+/// draw's `POINT_SALT` so `classes` and `uniform` never share a stream).
+const CLASS_SALT: u64 = 0xC1A5_5E5A_D17E_C7ED;
+
+/// Salt for the adaptive sampler's per-(round, region) draws.
+const ADAPTIVE_SALT: u64 = 0xADA7_1F3B_5C91_6E4D;
+
+// ---------------------------------------------------------------------------
+// SamplerSpec (the named strategy registry)
+// ---------------------------------------------------------------------------
+
+/// A crash-point sampler, as written in the `--sampler` DSL.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SamplerSpec {
+    /// The historical stratified-uniform draw over the main-loop op span.
+    Uniform,
+    /// One seeded representative per crash-equivalence class, records
+    /// weighted by class width (100% class coverage whenever the budget
+    /// covers the class count).
+    Classes,
+    /// Successive halving over `regions` contiguous op ranges: each round
+    /// spends an equal budget slice on the surviving ranges, then keeps
+    /// the half with the most mixed outcomes.
+    Adaptive { regions: usize },
+}
+
+/// The named sampler registry (help text and unknown-name errors render
+/// these, like [`super::planner::SELECTORS`]).
+pub const SAMPLERS: &[StrategyInfo] = &[
+    StrategyInfo {
+        name: "uniform",
+        syntax: "uniform",
+        summary: "stratified-uniform draw over the main-loop op span (default)",
+    },
+    StrategyInfo {
+        name: "classes",
+        syntax: "classes",
+        summary: "one representative per crash-equivalence class, width-weighted",
+    },
+    StrategyInfo {
+        name: "adaptive",
+        syntax: "adaptive[(R)]",
+        summary: "successive halving over R op ranges toward mixed outcomes (default R=8)",
+    },
+];
+
+fn known() -> String {
+    SAMPLERS
+        .iter()
+        .map(|s| s.syntax)
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// Split `name(args)` into `(name, Some(args))`, or `(s, None)` when no
+/// parenthesis is present (same grammar as the planner DSL).
+fn call_args(s: &str) -> Result<(&str, Option<&str>)> {
+    match s.find('(') {
+        None => Ok((s, None)),
+        Some(i) => {
+            crate::ensure!(
+                s.ends_with(')') && s.len() > i + 1,
+                "bad strategy `{s}`: unbalanced parentheses"
+            );
+            Ok((&s[..i], Some(s[i + 1..s.len() - 1].trim())))
+        }
+    }
+}
+
+impl SamplerSpec {
+    pub fn parse(s: &str) -> Result<SamplerSpec> {
+        let s = s.trim();
+        let (name, args) = call_args(s)?;
+        match name {
+            "uniform" => {
+                crate::ensure!(args.is_none(), "bad sampler `{s}`: `uniform` takes no arguments");
+                Ok(SamplerSpec::Uniform)
+            }
+            "classes" => {
+                crate::ensure!(args.is_none(), "bad sampler `{s}`: `classes` takes no arguments");
+                Ok(SamplerSpec::Classes)
+            }
+            "adaptive" => {
+                let regions = match args {
+                    None => ADAPTIVE_DEFAULT_REGIONS,
+                    Some(a) if a.is_empty() => {
+                        crate::bail!("bad sampler `{s}`: expected adaptive(R)")
+                    }
+                    Some(a) => a.parse::<usize>().map_err(|_| {
+                        crate::err!("bad sampler `{s}`: `{a}` is not an integer")
+                    })?,
+                };
+                let spec = SamplerSpec::Adaptive { regions };
+                spec.validate()?;
+                Ok(spec)
+            }
+            other => crate::bail!("unknown sampler `{other}` (known: {})", known()),
+        }
+    }
+
+    /// Parameter invariants (parse enforces them; programmatic
+    /// constructions funnel through spec validation).
+    pub fn validate(&self) -> Result<()> {
+        if let SamplerSpec::Adaptive { regions } = self {
+            crate::ensure!(
+                (2..=1024).contains(regions),
+                "adaptive needs 2 <= R <= 1024 regions, got {regions}"
+            );
+        }
+        Ok(())
+    }
+
+    /// Does this sampler need the profile pass to record persistent-state
+    /// mutations (the class map inputs)?
+    pub fn needs_classes(&self) -> bool {
+        !matches!(self, SamplerSpec::Uniform)
+    }
+}
+
+impl fmt::Display for SamplerSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SamplerSpec::Uniform => f.write_str("uniform"),
+            SamplerSpec::Classes => f.write_str("classes"),
+            SamplerSpec::Adaptive { regions } if *regions == ADAPTIVE_DEFAULT_REGIONS => {
+                f.write_str("adaptive")
+            }
+            SamplerSpec::Adaptive { regions } => write!(f, "adaptive({regions})"),
+        }
+    }
+}
+
+impl FromStr for SamplerSpec {
+    type Err = crate::util::error::Error;
+
+    fn from_str(s: &str) -> Result<SamplerSpec> {
+        SamplerSpec::parse(s)
+    }
+}
+
+impl Default for SamplerSpec {
+    fn default() -> SamplerSpec {
+        SamplerSpec::Uniform
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ClassMap (crash-equivalence classes)
+// ---------------------------------------------------------------------------
+
+/// The crash-equivalence partition of one main-loop op span `[lo, hi)`.
+///
+/// Built from the mutation ops the profile pass records: a write-back
+/// that changes a recovery-relevant persisted byte range at op `q` makes
+/// crashes at `p >= q + 1` observe a different NVM image than crashes at
+/// `p <= q` (the op counter advances *before* the access effect), so
+/// `q + 1` is a class boundary. Crash points inside one class restart
+/// from bit-identical persisted state and classify identically — the
+/// parity tests in `rust/tests/sampler.rs` assert exactly that.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClassMap {
+    lo: u64,
+    hi: u64,
+    /// Ascending class start ops; `starts[0] == lo`, all `< hi`. Class
+    /// `i` is `[starts[i], starts[i+1])` (last class ends at `hi`).
+    starts: Vec<u64>,
+}
+
+impl ClassMap {
+    /// Partition `[lo, hi)` at every visibility boundary `q + 1` derived
+    /// from the recorded mutation ops `q`. Boundaries outside the span
+    /// are dropped; duplicates collapse.
+    pub fn build(mutations: &[u64], lo: u64, hi: u64) -> ClassMap {
+        let hi = hi.max(lo + 1);
+        let mut starts = vec![lo];
+        // The env records mutations in ascending op order; stay defensive
+        // about order anyway since this is a public constructor.
+        let mut bounds: Vec<u64> = mutations.iter().map(|&q| q + 1).collect();
+        bounds.sort_unstable();
+        for b in bounds {
+            if b > lo && b < hi && starts.last() != Some(&b) {
+                starts.push(b);
+            }
+        }
+        ClassMap { lo, hi, starts }
+    }
+
+    /// Number of equivalence classes (>= 1).
+    pub fn len(&self) -> usize {
+        self.starts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.starts.is_empty()
+    }
+
+    pub fn lo(&self) -> u64 {
+        self.lo
+    }
+
+    pub fn hi(&self) -> u64 {
+        self.hi
+    }
+
+    /// Total op span covered.
+    pub fn span(&self) -> u64 {
+        self.hi - self.lo
+    }
+
+    /// Index of the class containing `op` (clamped into the span).
+    pub fn class_of(&self, op: u64) -> usize {
+        match self.starts.binary_search(&op.max(self.lo)) {
+            Ok(i) => i,
+            Err(i) => i - 1, // i >= 1: starts[0] == lo <= op
+        }
+    }
+
+    /// Half-open bounds `[start, end)` of class `i`.
+    pub fn bounds(&self, i: usize) -> (u64, u64) {
+        let s = self.starts[i];
+        let e = self.starts.get(i + 1).copied().unwrap_or(self.hi);
+        (s, e)
+    }
+
+    /// Width (op count) of class `i`; always >= 1.
+    pub fn width(&self, i: usize) -> u64 {
+        let (s, e) = self.bounds(i);
+        e - s
+    }
+}
+
+/// The `classes` sampler's draw: one seeded representative per selected
+/// class, in ascending class order (hence ascending op order). When the
+/// budget covers every class the whole partition is tested (100% class
+/// coverage with `map.len()` tests); otherwise the `tests` *widest*
+/// classes are tested (ties break toward the earlier class), since wide
+/// classes carry the most aggregate weight.
+///
+/// The draw depends only on `(map, tests, seed)` — it happens before any
+/// shard partitioning, so it is shard-count invariant by construction.
+pub fn class_points(map: &ClassMap, tests: usize, seed: u64) -> Vec<u64> {
+    if tests == 0 || map.is_empty() {
+        return Vec::new();
+    }
+    let selected: Vec<usize> = if tests >= map.len() {
+        (0..map.len()).collect()
+    } else {
+        let mut idx: Vec<usize> = (0..map.len()).collect();
+        idx.sort_by(|&a, &b| map.width(b).cmp(&map.width(a)).then(a.cmp(&b)));
+        let mut sel = idx[..tests].to_vec();
+        sel.sort_unstable();
+        sel
+    };
+    let mut rng = Rng::new(seed ^ CLASS_SALT);
+    selected
+        .iter()
+        .map(|&i| {
+            let (s, e) = map.bounds(i);
+            s + rng.below(e - s)
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Adaptive sampler helpers (successive halving)
+// ---------------------------------------------------------------------------
+
+/// The `regions + 1` boundary ops of `regions` contiguous, near-equal
+/// sub-ranges of `[lo, hi)` (u128 keeps the products exact).
+pub fn region_bounds(lo: u64, hi: u64, regions: usize) -> Vec<u64> {
+    let hi = hi.max(lo + 1);
+    let span = (hi - lo) as u128;
+    (0..=regions)
+        .map(|i| lo + (span * i as u128 / regions as u128) as u64)
+        .collect()
+}
+
+/// Index of the sub-range containing `op` (clamped into the span).
+pub fn region_of(bounds: &[u64], op: u64) -> usize {
+    let last = bounds.len() - 2;
+    match bounds.binary_search(&op) {
+        Ok(i) => i.min(last),
+        Err(0) => 0,
+        Err(i) => (i - 1).min(last),
+    }
+}
+
+/// Per-round budgets of a successive-halving schedule: `tests` split
+/// near-equally over `ceil(log2(regions)) + 1` rounds (remainder to the
+/// early rounds, which face the most surviving regions).
+pub fn halving_budgets(regions: usize, tests: usize) -> Vec<usize> {
+    let regions = regions.max(1);
+    let rounds = (usize::BITS - (regions - 1).leading_zeros()) as usize + 1;
+    let (base, rem) = (tests / rounds, tests % rounds);
+    (0..rounds).map(|i| base + usize::from(i < rem)).collect()
+}
+
+/// Seed of the draw for `(round, region)` — derived, like the uniform
+/// draw's lanes, so no two cells share an RNG stream.
+pub(crate) fn round_seed(seed: u64, round: usize, region: usize) -> u64 {
+    seed ^ ADAPTIVE_SALT
+        ^ (round as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (region as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9)
+}
+
+/// Gini impurity of a 4-way outcome histogram: 0 for pure regions (all
+/// tests classify alike — nothing left to learn), up to 0.75 for a
+/// maximally mixed S1/S2/S3/S4 split.
+pub fn outcome_impurity(counts: [usize; 4]) -> f64 {
+    let n: usize = counts.iter().sum();
+    if n == 0 {
+        // Never-yet-sampled regions score above every sampled one so the
+        // halving keeps exploring them first.
+        return 2.0;
+    }
+    let n = n as f64;
+    1.0 - counts
+        .iter()
+        .map(|&c| (c as f64 / n) * (c as f64 / n))
+        .sum::<f64>()
+}
+
+/// One halving step: keep the `ceil(n/2)` regions with the highest
+/// impurity (ties break toward the lower region index), returned in
+/// ascending index order. Fully deterministic — the scores are exact
+/// functions of deterministic outcome counts.
+pub fn halve(active: &[usize], impurity_of: impl Fn(usize) -> f64) -> Vec<usize> {
+    let mut scored: Vec<(usize, f64)> =
+        active.iter().map(|&r| (r, impurity_of(r))).collect();
+    scored.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(&b.0))
+    });
+    let keep = active.len().div_ceil(2);
+    let mut kept: Vec<usize> = scored[..keep].iter().map(|&(r, _)| r).collect();
+    kept.sort_unstable();
+    kept
+}
+
+// ---------------------------------------------------------------------------
+// Coverage (the typed report)
+// ---------------------------------------------------------------------------
+
+/// Per-code-region slice of the coverage report: how many equivalence
+/// classes *start* in region `region`, and how many of those were tested.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RegionCoverage {
+    /// Code region index (`num_regions` = the out-of-region slot).
+    pub region: usize,
+    pub total: usize,
+    pub tested: usize,
+}
+
+/// The typed coverage report (`easycrash.coverage/v1`): what fraction of
+/// the persistence-distinct crash states a campaign actually exercised.
+/// Computed for every sampler, so equal-budget comparisons (the CI smoke
+/// job) are one subtraction.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Coverage {
+    /// Equivalence classes in the main-loop span.
+    pub classes_total: usize,
+    /// Classes containing at least one tested crash point.
+    pub classes_tested: usize,
+    /// Op-weighted coverage: the tested classes' share of the span.
+    pub tested_weight: f64,
+    /// Breakdown by the code region each class starts in (regions with no
+    /// classes are omitted).
+    pub per_region: Vec<RegionCoverage>,
+}
+
+impl Coverage {
+    /// Fraction of persistence-distinct crash states covered.
+    pub fn covered(&self) -> f64 {
+        if self.classes_total == 0 {
+            0.0
+        } else {
+            self.classes_tested as f64 / self.classes_total as f64
+        }
+    }
+
+    /// Compute coverage of `tested` crash points against a class map.
+    /// `marks` are the profile pass's region-transition marks
+    /// (`(first_op, region)`, ascending); classes starting before the
+    /// first mark attribute to the out-of-region slot `num_regions`.
+    pub fn compute(
+        map: &ClassMap,
+        tested: &[u64],
+        marks: &[(u64, usize)],
+        num_regions: usize,
+    ) -> Coverage {
+        let region_at = |op: u64| -> usize {
+            let i = marks.partition_point(|&(o, _)| o <= op);
+            if i == 0 {
+                num_regions
+            } else {
+                marks[i - 1].1
+            }
+        };
+        let mut hit = vec![false; map.len()];
+        for &p in tested {
+            hit[map.class_of(p)] = true;
+        }
+        let mut per: Vec<RegionCoverage> = (0..=num_regions)
+            .map(|region| RegionCoverage { region, total: 0, tested: 0 })
+            .collect();
+        let (mut total_w, mut tested_w) = (0u64, 0u64);
+        for (i, &h) in hit.iter().enumerate() {
+            let w = map.width(i);
+            total_w += w;
+            let slot = &mut per[region_at(map.bounds(i).0)];
+            slot.total += 1;
+            if h {
+                tested_w += w;
+                slot.tested += 1;
+            }
+        }
+        per.retain(|rc| rc.total > 0);
+        Coverage {
+            classes_total: map.len(),
+            classes_tested: hit.iter().filter(|&&h| h).count(),
+            tested_weight: if total_w == 0 {
+                0.0
+            } else {
+                tested_w as f64 / total_w as f64
+            },
+            per_region: per,
+        }
+    }
+
+    /// The `easycrash.coverage/v1` JSON object (report cells and the
+    /// server's `coverage` NDJSON event both embed this).
+    pub fn to_json(&self) -> Json {
+        let per: Vec<Json> = self
+            .per_region
+            .iter()
+            .map(|r| {
+                Json::obj()
+                    .set("region", r.region)
+                    .set("total", r.total)
+                    .set("tested", r.tested)
+            })
+            .collect();
+        Json::obj()
+            .set("schema", COVERAGE_SCHEMA)
+            .set("classes_total", self.classes_total)
+            .set("classes_tested", self.classes_tested)
+            .set("covered", self.covered())
+            .set("tested_weight", self.tested_weight)
+            .set("per_region", per)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // -- DSL ---------------------------------------------------------------
+
+    #[test]
+    fn dsl_round_trips_canonically() {
+        for (src, canon) in [
+            ("uniform", "uniform"),
+            ("classes", "classes"),
+            (" classes ", "classes"),
+            ("adaptive", "adaptive"),
+            ("adaptive(8)", "adaptive"), // default R elided
+            ("adaptive(16)", "adaptive(16)"),
+            ("adaptive( 4 )", "adaptive(4)"),
+        ] {
+            let spec = SamplerSpec::parse(src).unwrap();
+            assert_eq!(spec.to_string(), canon, "src: {src}");
+            assert_eq!(SamplerSpec::parse(canon).unwrap(), spec, "canon re-parses");
+        }
+    }
+
+    #[test]
+    fn dsl_rejects_malformed_specs() {
+        for bad in [
+            "",
+            "unifrom",
+            "uniform(3)",
+            "classes(2)",
+            "adaptive(",
+            "adaptive)",
+            "adaptive()",
+            "adaptive(x)",
+            "adaptive(1)",    // needs >= 2 regions to halve
+            "adaptive(9999)", // above the cap
+            "adaptive(-3)",
+        ] {
+            assert!(SamplerSpec::parse(bad).is_err(), "must reject `{bad}`");
+        }
+    }
+
+    // -- ClassMap ----------------------------------------------------------
+
+    #[test]
+    fn class_map_partitions_at_visibility_boundaries() {
+        // Mutations at ops 10 and 20 split [5, 30) at 11 and 21.
+        let map = ClassMap::build(&[10, 20], 5, 30);
+        assert_eq!(map.len(), 3);
+        assert_eq!(map.bounds(0), (5, 11));
+        assert_eq!(map.bounds(1), (11, 21));
+        assert_eq!(map.bounds(2), (21, 30));
+        assert_eq!(map.span(), 25);
+        // A crash at the mutation op itself still sees the OLD image.
+        assert_eq!(map.class_of(10), 0);
+        assert_eq!(map.class_of(11), 1);
+        assert_eq!(map.class_of(29), 2);
+        assert_eq!(map.width(0) + map.width(1) + map.width(2), map.span());
+    }
+
+    #[test]
+    fn class_map_clamps_and_dedups_boundaries() {
+        // Out-of-span and duplicate mutations collapse; unsorted input ok.
+        let map = ClassMap::build(&[50, 3, 7, 7, 2, 100], 5, 20);
+        // boundaries: 4 (below lo, dropped), 8, 8 (dup), 51/101 (above hi).
+        assert_eq!(map.len(), 2);
+        assert_eq!(map.bounds(0), (5, 8));
+        assert_eq!(map.bounds(1), (8, 20));
+        // No mutations at all: one class spanning everything.
+        let one = ClassMap::build(&[], 5, 20);
+        assert_eq!(one.len(), 1);
+        assert_eq!(one.bounds(0), (5, 20));
+    }
+
+    #[test]
+    fn class_points_cover_every_class_within_budget() {
+        let map = ClassMap::build(&[10, 20, 30], 5, 50);
+        let pts = class_points(&map, 10, 0xEC);
+        assert_eq!(pts.len(), map.len(), "budget >= classes: one rep each");
+        assert!(pts.windows(2).all(|w| w[0] < w[1]), "ascending, distinct classes");
+        for (i, &p) in pts.iter().enumerate() {
+            let (s, e) = map.bounds(i);
+            assert!(p >= s && p < e, "rep {p} inside class {i} [{s},{e})");
+        }
+        // Deterministic per seed.
+        assert_eq!(pts, class_points(&map, 10, 0xEC));
+    }
+
+    #[test]
+    fn class_points_prefer_widest_classes_under_budget() {
+        // widths: 6, 10, 20, 10 — budget 2 must pick classes 2 and 1
+        // (width ties break toward the earlier class).
+        let map = ClassMap::build(&[10, 20, 40], 5, 61);
+        let pts = class_points(&map, 2, 1);
+        assert_eq!(pts.len(), 2);
+        assert_eq!(map.class_of(pts[0]), 1);
+        assert_eq!(map.class_of(pts[1]), 2);
+        assert!(class_points(&map, 0, 1).is_empty());
+    }
+
+    // -- adaptive helpers --------------------------------------------------
+
+    #[test]
+    fn region_bounds_tile_the_span_exactly() {
+        let b = region_bounds(100, 1000, 7);
+        assert_eq!(b.len(), 8);
+        assert_eq!(b[0], 100);
+        assert_eq!(b[7], 1000);
+        assert!(b.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(region_of(&b, 100), 0);
+        assert_eq!(region_of(&b, 999), 6);
+        assert_eq!(region_of(&b, 50), 0, "below-span ops clamp");
+        assert_eq!(region_of(&b, 5000), 6, "above-span ops clamp");
+    }
+
+    #[test]
+    fn halving_budgets_split_over_log_rounds() {
+        // 8 regions -> ceil(log2 8) + 1 = 4 rounds.
+        let b = halving_budgets(8, 100);
+        assert_eq!(b.len(), 4);
+        assert_eq!(b.iter().sum::<usize>(), 100);
+        assert!(b.windows(2).all(|w| w[0] >= w[1]), "remainder lands early");
+        assert_eq!(halving_budgets(2, 10), vec![5, 5]);
+    }
+
+    #[test]
+    fn halve_keeps_most_impure_half_deterministically() {
+        // region -> impurity; 2 and 0 tie at the top: lower index wins
+        // the last slot alongside clear-winner 3.
+        let imp = [0.5, 0.1, 0.5, 0.7];
+        let kept = halve(&[0, 1, 2, 3], |r| imp[r]);
+        assert_eq!(kept, vec![0, 3]);
+        assert_eq!(halve(&[0, 3], |r| imp[r]), vec![3]);
+        assert_eq!(outcome_impurity([4, 0, 0, 0]), 0.0);
+        assert!(outcome_impurity([1, 1, 1, 1]) > 0.74);
+        assert_eq!(outcome_impurity([0, 0, 0, 0]), 2.0, "unsampled explores first");
+    }
+
+    // -- coverage ----------------------------------------------------------
+
+    #[test]
+    fn coverage_counts_classes_and_regions() {
+        let map = ClassMap::build(&[10, 20], 5, 30); // classes at 5, 11, 21
+        let marks = vec![(5, 0), (15, 1)];
+        let cov = Coverage::compute(&map, &[7, 25], &marks, 2);
+        assert_eq!(cov.classes_total, 3);
+        assert_eq!(cov.classes_tested, 2);
+        assert!((cov.covered() - 2.0 / 3.0).abs() < 1e-12);
+        // widths 6, 10, 9: tested 6 + 9 of 25.
+        assert!((cov.tested_weight - 15.0 / 25.0).abs() < 1e-12);
+        // classes starting at 5 and 11 are in region 0, at 21 in region 1.
+        assert_eq!(
+            cov.per_region,
+            vec![
+                RegionCoverage { region: 0, total: 2, tested: 1 },
+                RegionCoverage { region: 1, total: 1, tested: 1 },
+            ]
+        );
+        let j = cov.to_json().to_string();
+        assert!(j.contains(COVERAGE_SCHEMA), "schema tag present: {j}");
+    }
+}

@@ -139,11 +139,14 @@ impl Workflow {
     }
 
     fn campaign(&self) -> Campaign {
+        // Workflow campaigns stay on the uniform draw: the selector's
+        // rank statistics (Spearman over per-record vectors) assume
+        // equally-weighted observations.
         Campaign {
             tests: self.tests,
             seed: self.seed,
             cfg: self.cfg,
-            verified: false,
+            ..Campaign::default()
         }
     }
 

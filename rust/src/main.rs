@@ -19,8 +19,8 @@ use easycrash::util::error::Result;
 use easycrash::util::json::Json;
 
 const VALUED: &[&str] = &[
-    "app", "apps", "tests", "seed", "engine", "plan", "plans", "planner", "planners", "spec",
-    "ts", "tau", "mtbf", "tchk", "nvm", "out", "shards", "trials", "work", "dist",
+    "app", "apps", "tests", "seed", "engine", "plan", "plans", "planner", "planners", "sampler",
+    "spec", "ts", "tau", "mtbf", "tchk", "nvm", "out", "shards", "trials", "work", "dist",
     "snapshot-interval", "pool", "halt", "timeout-secs", "retries", "backoff-ms", "stall-ms",
     "expect-generation", "server", "store-dir", "addr", "workers",
 ];
@@ -138,6 +138,15 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         easycrash::util::pct(f[2]),
         easycrash::util::pct(f[3]),
     );
+    if let Some(cov) = &res.coverage {
+        println!(
+            "coverage: {}/{} classes ({}), op-weight {}",
+            cov.classes_tested,
+            cov.classes_total,
+            easycrash::util::pct(cov.covered()),
+            easycrash::util::pct(cov.tested_weight),
+        );
+    }
     for (j, (_, n, bytes)) in res.candidates.iter().enumerate() {
         let mean_inc = easycrash::util::mean(
             &res.records.iter().map(|r| r.inconsistency[j]).collect::<Vec<_>>(),
@@ -282,6 +291,16 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             easycrash::util::pct(f[2]),
             easycrash::util::pct(f[3]),
         );
+        if let Some(cov) = &cell.result.coverage {
+            println!(
+                "{:<10} coverage: {}/{} classes ({}), op-weight {}",
+                "",
+                cov.classes_tested,
+                cov.classes_total,
+                easycrash::util::pct(cov.covered()),
+                easycrash::util::pct(cov.tested_weight),
+            );
+        }
     }
     let s = runner.cache().stats();
     println!(
@@ -313,16 +332,31 @@ fn experiment_via_server(args: &Args, addr: &str, spec: ExperimentSpec) -> Resul
     );
     let t0 = Instant::now();
     let done = easycrash::server::client::submit(addr, &spec, |ev| {
-        if ev.get("event").and_then(Json::as_str) == Some("cell") {
-            let get = |k: &str| ev.get(k).and_then(Json::as_str).unwrap_or("?").to_string();
-            let source = get("source");
-            let hit = if source == "computed" { "" } else { " (cache hit)" };
-            println!(
-                "[cell] {}/{} source={source}{hit} ({} ms)",
-                get("app"),
-                get("plan_resolved"),
-                ev.get("ms").and_then(Json::as_u64).unwrap_or(0),
-            );
+        match ev.get("event").and_then(Json::as_str) {
+            Some("cell") => {
+                let get = |k: &str| ev.get(k).and_then(Json::as_str).unwrap_or("?").to_string();
+                let source = get("source");
+                let hit = if source == "computed" { "" } else { " (cache hit)" };
+                println!(
+                    "[cell] {}/{} source={source}{hit} ({} ms)",
+                    get("app"),
+                    get("plan_resolved"),
+                    ev.get("ms").and_then(Json::as_u64).unwrap_or(0),
+                );
+            }
+            Some("coverage") => {
+                let cov = ev.get("coverage");
+                let n = |k: &str| {
+                    cov.and_then(|c| c.get(k)).and_then(Json::as_u64).unwrap_or(0)
+                };
+                println!(
+                    "[coverage] {} {}/{} classes",
+                    ev.get("app").and_then(Json::as_str).unwrap_or("?"),
+                    n("classes_tested"),
+                    n("classes_total"),
+                );
+            }
+            _ => {}
         }
     })?;
     let count = |k: &str| done.get(k).and_then(Json::as_u64).unwrap_or(0);

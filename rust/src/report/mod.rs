@@ -187,6 +187,7 @@ fn print_help() {
 
 USAGE: easycrash <command> [--tests N] [--seed S] [--engine native|pjrt|pool]
                  [--shards N] [--ts F] [--tau F] [--planner SEL[+PLACER]]
+                 [--sampler uniform|classes|adaptive[(R)]]
                  [--snapshot-interval N] [--paper-scale] [--verbose]
                  [--store-dir DIR | --no-store]
 
@@ -227,6 +228,17 @@ figures):
              knapsack             §5.2 multi-choice knapsack only
              iterend              budget-fit iteration-end placement
              greedy               greedy gain/cost frequency search
+
+samplers choose which crash points a campaign tests (`--sampler`); every
+sampled campaign reports `easycrash.coverage/v1` class coverage:
+  uniform      stratified-uniform draw over the main-loop ops (default)
+  classes      one representative per crash-equivalence class (crash points
+               between consecutive persistent-state mutations recover
+               identically), aggregates weighted by class width
+  adaptive[(R)] successive halving over R op-range regions (default 8),
+               reallocating tests toward regions with mixed S1-S4 outcomes
+  (classes/adaptive need persistence-equivalent points: native engine
+  only, not --verified)
 
 paper artifacts:
   table1 fig3 fig4 fig5 fig6 table4 fig7 fig8 fig9 fig10 fig11

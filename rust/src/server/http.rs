@@ -81,6 +81,16 @@ pub fn read_request(r: &mut impl BufRead) -> Result<Option<Request>> {
                 .map_err(|_| crate::err!("bad Content-Length `{}`", value.trim()))?;
             crate::ensure!(content_length <= MAX_BODY, "request body too large");
         }
+        // This subset frames bodies by Content-Length only. Without this
+        // check a chunked body would silently read as *empty* (its bytes
+        // left unparsed on the socket) and the job would fail with a
+        // misleading "bad job spec" — reject it up front with the reason.
+        if name.eq_ignore_ascii_case("transfer-encoding") {
+            crate::bail!(
+                "Transfer-Encoding ({}) is not supported: send a Content-Length body",
+                value.trim()
+            );
+        }
     }
     crate::bail!("too many request headers")
 }
@@ -153,6 +163,17 @@ mod tests {
         assert!(parse(b"POST /jobs HTTP/1.1\r\nContent-Length: 99999999999\r\n\r\n").is_err());
         // Truncated body: Content-Length promises more than arrives.
         assert!(parse(b"POST /jobs HTTP/1.1\r\nContent-Length: 9\r\n\r\nab").is_err());
+    }
+
+    #[test]
+    fn rejects_chunked_transfer_encoding_with_a_clear_reason() {
+        let err = parse(
+            b"POST /jobs HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n4\r\nabcd\r\n0\r\n\r\n",
+        )
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("Transfer-Encoding (chunked) is not supported"), "got: {msg}");
+        assert!(msg.contains("Content-Length"), "got: {msg}");
     }
 
     #[test]

@@ -27,7 +27,10 @@
 //!   `{"event":"accepted","cells":N}`, one
 //!   `{"event":"cell","index":i,"app":..,"plan":..,"plan_resolved":..,
 //!   "source":"memo|store|computed","ms":..}` per finished cell in
-//!   *completion* order, then `{"event":"done",...,"report":{...}}`
+//!   *completion* order — followed by a
+//!   `{"event":"coverage","index":i,..,"coverage":{...}}` event carrying
+//!   the cell's `easycrash.coverage/v1` report when the campaign
+//!   produced one — then `{"event":"done",...,"report":{...}}`
 //!   carrying the complete `easycrash.experiment/v1` report — or
 //!   `{"event":"error","message":..}` and close. A malformed spec is a
 //!   plain `400`.
@@ -168,6 +171,16 @@ struct PoolInner {
     shutdown: AtomicBool,
 }
 
+/// Take the queue lock, recovering from poisoning. The queue holds plain
+/// `VecDeque` state that is consistent at every await point; a panic
+/// inside a *task* is already contained by `catch_unwind`, so a poisoned
+/// lock here only means some thread panicked while merely holding the
+/// guard — the data is still sound, and refusing to serve (the old
+/// `unwrap`) would wedge every other job on the server.
+fn lock_queue(inner: &PoolInner) -> std::sync::MutexGuard<'_, VecDeque<Task>> {
+    inner.queue.lock().unwrap_or_else(|p| p.into_inner())
+}
+
 /// The server-wide worker pool: one run queue for *all* jobs' cells.
 /// Workers pull whatever is next, so cells from concurrent jobs
 /// interleave instead of running job-by-job.
@@ -189,14 +202,19 @@ impl WorkPool {
                 let inner = inner.clone();
                 std::thread::spawn(move || loop {
                     let task = {
-                        let mut q = inner.queue.lock().unwrap();
+                        let mut q = lock_queue(&inner);
                         loop {
                             if inner.shutdown.load(Ordering::SeqCst) {
                                 return;
                             }
                             match q.pop_front() {
                                 Some(t) => break t,
-                                None => q = inner.ready.wait(q).unwrap(),
+                                None => {
+                                    q = match inner.ready.wait(q) {
+                                        Ok(g) => g,
+                                        Err(p) => p.into_inner(),
+                                    }
+                                }
                             }
                         }
                     };
@@ -214,14 +232,18 @@ impl WorkPool {
     }
 
     fn submit(&self, task: Task) {
-        self.inner.queue.lock().unwrap().push_back(task);
+        lock_queue(&self.inner).push_back(task);
         self.inner.ready.notify_one();
     }
 
     fn shutdown(&self) {
         self.inner.shutdown.store(true, Ordering::SeqCst);
         self.inner.ready.notify_all();
-        for h in self.workers.lock().unwrap().drain(..) {
+        let mut workers = self
+            .workers
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        for h in workers.drain(..) {
             let _ = h.join();
         }
     }
@@ -493,6 +515,21 @@ fn handle_job(shared: &Shared, body: &[u8], conn: &mut Conn) -> std::io::Result<
                         .set("source", source.label())
                         .set("ms", ms),
                 )?;
+                // Non-uniform samplers (and uniform cells asked for a
+                // coverage baseline) carry an `easycrash.coverage/v1`
+                // report — stream it as its own event so clients can
+                // watch exploration progress per cell.
+                if let Some(cov) = &result.coverage {
+                    send_event(
+                        conn,
+                        &Json::obj()
+                            .set("event", "coverage")
+                            .set("index", i)
+                            .set("app", app_name.as_str())
+                            .set("plan", plan_spec.to_string())
+                            .set("coverage", cov.to_json()),
+                    )?;
+                }
                 finished[i] = Some(ExperimentCell {
                     app: app_name.clone(),
                     plan: plan_spec.clone(),
@@ -511,10 +548,27 @@ fn handle_job(shared: &Shared, body: &[u8], conn: &mut Conn) -> std::io::Result<
             }
         }
     }
-    let report = ExperimentReport {
-        spec,
-        cells: finished.into_iter().map(|c| c.expect("all cells finished")).collect(),
-    };
+    // Every receive above filled one slot, but a duplicate or stray
+    // index (a task double-reporting) could leave a hole — that must be
+    // a typed error event on the stream, never a panic that kills the
+    // connection thread mid-response.
+    let mut done_cells = Vec::with_capacity(n);
+    for (i, c) in finished.into_iter().enumerate() {
+        match c {
+            Some(c) => done_cells.push(c),
+            None => {
+                let (app_name, plan_spec) = &cells[i];
+                return send_event(
+                    conn,
+                    &Json::obj().set("event", "error").set(
+                        "message",
+                        format!("cell {app_name}/{plan_spec} never reported a result"),
+                    ),
+                );
+            }
+        }
+    }
+    let report = ExperimentReport { spec, cells: done_cells };
     send_event(
         conn,
         &Json::obj()
@@ -525,4 +579,35 @@ fn handle_job(shared: &Shared, body: &[u8], conn: &mut Conn) -> std::io::Result<
             .set("computed", computed)
             .set("report", report.to_json()),
     )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::time::Duration;
+
+    /// A task that panics must neither kill its worker nor poison the
+    /// pool into refusing later work: tasks submitted afterwards still
+    /// run to completion.
+    #[test]
+    fn pool_survives_panicking_tasks() {
+        let pool = WorkPool::start(2);
+        for _ in 0..4 {
+            pool.submit(Box::new(|| panic!("deliberate task panic")));
+        }
+        let done = Arc::new(AtomicUsize::new(0));
+        for _ in 0..8 {
+            let done = done.clone();
+            pool.submit(Box::new(move || {
+                done.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while done.load(Ordering::SeqCst) < 8 {
+            assert!(Instant::now() < deadline, "pool wedged after panicking tasks");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        pool.shutdown();
+    }
 }

@@ -256,6 +256,10 @@ macro_rules! sim_bulk {
             $self.ops += run;
             let cost = $self.hier.access(&mut $self.mem, addr, false);
             $self.acc += cost;
+            // Any write-back this access caused happened at element 0's
+            // op index (the later elements are guaranteed L1 hits that
+            // cannot evict) — exactly where the scalar loop evicts.
+            $self.note_writebacks($self.ops - run + 1);
             $buf[k] = $self.mem.$mem_ld(addr);
             $self.hier.bulk_l1_hits(run - 1, false);
             for kk in k + 1..k_end {
@@ -298,6 +302,7 @@ macro_rules! sim_bulk {
             $self.mem.$mem_st(addr, $vals[k]);
             let cost = $self.hier.access(&mut $self.mem, addr, true);
             $self.acc += cost;
+            $self.note_writebacks($self.ops - run + 1);
             $self.hier.bulk_l1_hits(run - 1, true);
             for kk in k + 1..k_end {
                 $self.acc += hit_cost;
@@ -361,6 +366,20 @@ pub struct SimEnv<'a> {
     /// Snapshots recorded at iteration boundaries during this run
     /// (extracted with [`SimEnv::take_tape`]).
     tape: SnapshotTape,
+    /// Byte ranges whose persisted image matters to recovery (candidate
+    /// objects + the iterator bookmark). Only write-backs overlapping a
+    /// watched range count as mutations. Set by
+    /// [`SimEnv::record_mutations`]; empty otherwise.
+    mut_watch: Vec<(usize, usize)>,
+    /// Ascending op indices at which a watched range's persisted bytes
+    /// changed (deduplicated). The campaign's class map derives its
+    /// equivalence-class boundaries from this.
+    mut_ops: Vec<u64>,
+    /// Region-transition marks `(first_op, region)` recorded alongside
+    /// mutations: a crash at op `p` is in the region of the last mark
+    /// with `first_op <= p` (coverage attributes untested classes to
+    /// regions with this).
+    mut_marks: Vec<(u64, usize)>,
 }
 
 impl<'a> SimEnv<'a> {
@@ -388,6 +407,64 @@ impl<'a> SimEnv<'a> {
             snap_last_ops: 0,
             snap_cap: MAX_SNAPSHOTS,
             tape: SnapshotTape::new(),
+            mut_watch: Vec::new(),
+            mut_ops: Vec::new(),
+            mut_marks: Vec::new(),
+        }
+    }
+
+    /// Enable persistent-mutation recording: every line write-back that
+    /// overlaps one of the watched `(base, end)` byte ranges logs the op
+    /// index at which the persisted image changed. Campaigns enable this
+    /// on the profile run only (like the snapshot tape) — the resulting
+    /// op list is what [`crate::easycrash::ClassMap`] partitions into
+    /// crash-equivalence classes.
+    pub fn record_mutations(&mut self, watch: Vec<(usize, usize)>) {
+        self.mut_watch = watch;
+        self.mut_ops.clear();
+        self.mut_marks.clear();
+        self.mem.wb_log = Some(Vec::new());
+    }
+
+    /// Extract the recorded mutation ops and region marks, disabling
+    /// further recording.
+    pub fn take_mutations(&mut self) -> (Vec<u64>, Vec<(u64, usize)>) {
+        self.mem.wb_log = None;
+        self.mut_watch.clear();
+        (
+            std::mem::take(&mut self.mut_ops),
+            std::mem::take(&mut self.mut_marks),
+        )
+    }
+
+    /// Drain the write-back log accumulated since the last call,
+    /// recording `op` as a mutation if any drained line overlaps a
+    /// watched range. No-op (one predictable branch) when recording is
+    /// off — called on every access path, so it must stay cheap.
+    #[inline]
+    fn note_writebacks(&mut self, op: u64) {
+        let Some(log) = &mut self.mem.wb_log else {
+            return;
+        };
+        if log.is_empty() {
+            return;
+        }
+        let watch = &self.mut_watch;
+        let hit = log
+            .iter()
+            .any(|&off| watch.iter().any(|&(b, e)| off < e && off + super::LINE > b));
+        log.clear();
+        if hit && self.mut_ops.last() != Some(&op) {
+            self.mut_ops.push(op);
+        }
+    }
+
+    /// Record a region-transition mark (recording runs only): ops from
+    /// `self.ops + 1` onward execute in `region`.
+    #[inline]
+    fn note_region_mark(&mut self, region: usize) {
+        if self.mem.wb_log.is_some() {
+            self.mut_marks.push((self.ops + 1, region));
         }
     }
 
@@ -420,8 +497,12 @@ impl<'a> SimEnv<'a> {
     /// the resolved hooks, and the tape itself are campaign configuration,
     /// not program state — they are not captured (see `sim::snapshot`).
     pub fn snapshot(&self) -> EnvSnapshot {
+        // The mutation log is recording machinery, not program state —
+        // strip it so restored envs never resume recording.
+        let mut mem = self.mem.clone();
+        mem.wb_log = None;
         EnvSnapshot {
-            mem: self.mem.clone(),
+            mem,
             hier: self.hier.clone(),
             reg: self.reg.clone(),
             clock: self.clock.clone(),
@@ -446,6 +527,7 @@ impl<'a> SimEnv<'a> {
             "snapshot restored into an env with a different region count"
         );
         self.mem = snap.mem.clone();
+        self.mem.wb_log = None;
         self.hier = snap.hier.clone();
         self.reg = snap.reg.clone();
         self.clock = snap.clock.clone();
@@ -467,6 +549,7 @@ impl<'a> SimEnv<'a> {
     pub fn mark_main_start(&mut self) {
         if self.main_start.is_none() {
             self.hier.drain(&mut self.mem);
+            self.note_writebacks(self.ops);
             self.main_start = Some(self.ops);
         }
     }
@@ -625,6 +708,7 @@ impl<'a> SimEnv<'a> {
             self.persist_ops += 1;
             self.persist_cycles += cost;
             self.clock.add(k, cost);
+            self.note_writebacks(self.ops);
         }
     }
 
@@ -640,6 +724,7 @@ impl<'a> SimEnv<'a> {
             .flush_range(&mut self.mem, base, bytes, self.hooks.kind);
         let r = self.cur_region.min(self.num_regions);
         self.clock.add(r, cost);
+        self.note_writebacks(self.ops);
     }
 }
 
@@ -669,6 +754,7 @@ impl<'a> Env for SimEnv<'a> {
         self.tick()?;
         let cost = self.hier.access(&mut self.mem, addr, false);
         self.acc += cost;
+        self.note_writebacks(self.ops);
         Ok(self.mem.ld_f64(addr))
     }
 
@@ -682,6 +768,7 @@ impl<'a> Env for SimEnv<'a> {
         self.mem.st_f64(addr, v);
         let cost = self.hier.access(&mut self.mem, addr, true);
         self.acc += cost;
+        self.note_writebacks(self.ops);
         Ok(())
     }
 
@@ -694,6 +781,7 @@ impl<'a> Env for SimEnv<'a> {
         self.tick()?;
         let cost = self.hier.access(&mut self.mem, addr, false);
         self.acc += cost;
+        self.note_writebacks(self.ops);
         Ok(self.mem.ld_f32(addr))
     }
 
@@ -707,6 +795,7 @@ impl<'a> Env for SimEnv<'a> {
         self.mem.st_f32(addr, v);
         let cost = self.hier.access(&mut self.mem, addr, true);
         self.acc += cost;
+        self.note_writebacks(self.ops);
         Ok(())
     }
 
@@ -719,6 +808,7 @@ impl<'a> Env for SimEnv<'a> {
         self.tick()?;
         let cost = self.hier.access(&mut self.mem, addr, false);
         self.acc += cost;
+        self.note_writebacks(self.ops);
         Ok(self.mem.ld_i64(addr))
     }
 
@@ -732,6 +822,7 @@ impl<'a> Env for SimEnv<'a> {
         self.mem.st_i64(addr, v);
         let cost = self.hier.access(&mut self.mem, addr, true);
         self.acc += cost;
+        self.note_writebacks(self.ops);
         Ok(())
     }
 
@@ -743,6 +834,7 @@ impl<'a> Env for SimEnv<'a> {
             self.end_region(prev);
         }
         self.cur_region = k;
+        self.note_region_mark(k);
         Ok(())
     }
 
@@ -759,9 +851,11 @@ impl<'a> Env for SimEnv<'a> {
                 .hier
                 .flush_range(&mut self.mem, e.base, e.bytes, self.hooks.kind);
             self.clock.add(prev.min(self.num_regions), cost);
+            self.note_writebacks(self.ops);
         }
         self.cur_iter += 1;
         self.cur_region = self.num_regions;
+        self.note_region_mark(self.num_regions);
         // Tape recording (campaign profile runs only): capture at the
         // iteration boundary once `snap_every` ops have passed since the
         // last capture. Boundaries are the only resumable points — `step`

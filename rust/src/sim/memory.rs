@@ -24,6 +24,11 @@ pub struct Memory {
     /// modeled hierarchy — the pool file *is* the `nvm` image on disk.
     /// `None` for ordinary in-process simulation.
     pub(crate) mirror: Option<Arc<PoolMap>>,
+    /// Mutation log: byte offsets of every line written back since the
+    /// last drain, recorded only while a profile pass asked for it
+    /// (`None` otherwise — the campaign's classes/adaptive samplers use
+    /// this to find the ops at which the persisted image changes).
+    pub(crate) wb_log: Option<Vec<usize>>,
 }
 
 impl Memory {
@@ -34,6 +39,7 @@ impl Memory {
             arch: vec![0u8; sz],
             nvm: vec![0u8; sz],
             mirror: None,
+            wb_log: None,
         }
     }
 
@@ -97,6 +103,9 @@ impl Memory {
     pub fn writeback_line(&mut self, line_idx: usize) {
         let off = line_idx << LINE_SHIFT;
         self.nvm[off..off + LINE].copy_from_slice(&self.arch[off..off + LINE]);
+        if let Some(log) = &mut self.wb_log {
+            log.push(off);
+        }
         if let Some(m) = &self.mirror {
             m.write_arena(off, &self.arch[off..off + LINE]);
         }

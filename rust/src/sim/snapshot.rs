@@ -246,7 +246,7 @@ impl EnvSnapshot {
         let main_start = has_main_start.then_some(main_start_val);
         r.finish()?;
         let snap = EnvSnapshot {
-            mem: Memory { arch, nvm, mirror: None },
+            mem: Memory { arch, nvm, mirror: None, wb_log: None },
             hier,
             reg,
             clock,

@@ -13,7 +13,7 @@
 //! version-skew misses.
 
 use crate::apps::Response;
-use crate::easycrash::{CampaignResult, TestRecord};
+use crate::easycrash::{CampaignResult, Coverage, RegionCoverage, TestRecord};
 use crate::easycrash::plan::{PersistPlan, PlanEntry};
 use crate::sim::HierStats;
 use crate::sim::snapshot::{put_bool, put_f64, put_str, put_u8, put_u64, put_usize, Reader};
@@ -106,6 +106,22 @@ pub fn encode_result(res: &CampaignResult) -> Vec<u8> {
     put_usize(&mut out, res.footprint);
     put_usize(&mut out, res.num_regions);
     put_u64(&mut out, res.replayed_ops);
+    put_usize(&mut out, res.weights.len());
+    for &w in &res.weights {
+        put_f64(&mut out, w);
+    }
+    put_bool(&mut out, res.coverage.is_some());
+    if let Some(cov) = &res.coverage {
+        put_usize(&mut out, cov.classes_total);
+        put_usize(&mut out, cov.classes_tested);
+        put_f64(&mut out, cov.tested_weight);
+        put_usize(&mut out, cov.per_region.len());
+        for r in &cov.per_region {
+            put_usize(&mut out, r.region);
+            put_usize(&mut out, r.total);
+            put_usize(&mut out, r.tested);
+        }
+    }
     out
 }
 
@@ -190,6 +206,33 @@ pub fn decode_result(bytes: &[u8]) -> Result<CampaignResult> {
     let footprint = r.usize()?;
     let num_regions = r.usize()?;
     let replayed_ops = r.u64()?;
+    let n_weights = r.usize()?;
+    let mut weights = Vec::with_capacity(cap(n_weights));
+    for _ in 0..n_weights {
+        weights.push(r.f64()?);
+    }
+    let coverage = if r.bool()? {
+        let classes_total = r.usize()?;
+        let classes_tested = r.usize()?;
+        let tested_weight = r.f64()?;
+        let n_pr = r.usize()?;
+        let mut per_region = Vec::with_capacity(cap(n_pr));
+        for _ in 0..n_pr {
+            per_region.push(RegionCoverage {
+                region: r.usize()?,
+                total: r.usize()?,
+                tested: r.usize()?,
+            });
+        }
+        Some(Coverage {
+            classes_total,
+            classes_tested,
+            tested_weight,
+            per_region,
+        })
+    } else {
+        None
+    };
     r.finish()?;
     Ok(CampaignResult {
         app,
@@ -207,6 +250,8 @@ pub fn decode_result(bytes: &[u8]) -> Result<CampaignResult> {
         footprint,
         num_regions,
         replayed_ops,
+        weights,
+        coverage,
     })
 }
 
@@ -246,4 +291,20 @@ pub fn results_bit_identical(a: &CampaignResult, b: &CampaignResult) -> bool {
         && a.footprint == b.footprint
         && a.num_regions == b.num_regions
         && a.replayed_ops == b.replayed_ops
+        && a.weights.len() == b.weights.len()
+        && a.weights.iter().zip(&b.weights).all(|(&p, &q)| f_eq(p, q))
+        && coverage_bit_identical(a.coverage.as_ref(), b.coverage.as_ref())
+}
+
+fn coverage_bit_identical(a: Option<&Coverage>, b: Option<&Coverage>) -> bool {
+    match (a, b) {
+        (None, None) => true,
+        (Some(x), Some(y)) => {
+            x.classes_total == y.classes_total
+                && x.classes_tested == y.classes_tested
+                && x.tested_weight.to_bits() == y.tested_weight.to_bits()
+                && x.per_region == y.per_region
+        }
+        _ => false,
+    }
 }

@@ -59,17 +59,21 @@ impl CellKey {
     /// plan's canonical DSL (shorthands expanded) — the planner that
     /// produced it is irrelevant to the simulation and is not part of
     /// the key, so two planners agreeing on a plan share one entry.
+    /// `sampler` is the canonical `--sampler` DSL: it changes which crash
+    /// points are drawn (and the record weights), so it is a result axis.
+    #[allow(clippy::too_many_arguments)]
     pub fn campaign(
         app: &str,
         plan_dsl: &str,
         verified: bool,
         tests: usize,
         seed: u64,
+        sampler: &str,
         engine: &str,
         cfg: &SimConfig,
     ) -> CellKey {
         CellKey::new(format!(
-            "campaign::{app}::{plan_dsl}::vfy={}::tests={tests}::seed={seed:#x}::engine={engine}::{}",
+            "campaign::{app}::{plan_dsl}::vfy={}::tests={tests}::seed={seed:#x}::sampler={sampler}::engine={engine}::{}",
             verified as u8,
             cfg_canonical(cfg),
         ))
@@ -118,8 +122,12 @@ mod tests {
         let mut snap = base.clone();
         snap.cfg.snapshot_every = Some(1000);
         snap.shards = 8;
-        let k1 = CellKey::campaign("mg", "none", false, base.tests, base.seed, "native", &base.cfg);
-        let k2 = CellKey::campaign("mg", "none", false, snap.tests, snap.seed, "native", &snap.cfg);
+        let k1 = CellKey::campaign(
+            "mg", "none", false, base.tests, base.seed, "uniform", "native", &base.cfg,
+        );
+        let k2 = CellKey::campaign(
+            "mg", "none", false, snap.tests, snap.seed, "uniform", "native", &snap.cfg,
+        );
         assert_eq!(k1, k2);
         assert_eq!(k1.file_name(), k2.file_name());
     }
@@ -127,21 +135,23 @@ mod tests {
     #[test]
     fn result_relevant_fields_differentiate() {
         let cfg = ExperimentSpec::default().cfg;
-        let k = |app: &str, plan: &str, vfy: bool, tests: usize, seed: u64, eng: &str| {
-            CellKey::campaign(app, plan, vfy, tests, seed, eng, &cfg)
+        let k = |app: &str, plan: &str, vfy: bool, tests: usize, seed: u64, smp: &str, eng: &str| {
+            CellKey::campaign(app, plan, vfy, tests, seed, smp, eng, &cfg)
         };
-        let base = k("mg", "none", false, 200, 0xEC, "native");
-        assert_ne!(base, k("cg", "none", false, 200, 0xEC, "native"));
-        assert_ne!(base, k("mg", "all", false, 200, 0xEC, "native"));
-        assert_ne!(base, k("mg", "none", true, 200, 0xEC, "native"));
-        assert_ne!(base, k("mg", "none", false, 400, 0xEC, "native"));
-        assert_ne!(base, k("mg", "none", false, 200, 7, "native"));
-        assert_ne!(base, k("mg", "none", false, 200, 0xEC, "pool"));
+        let base = k("mg", "none", false, 200, 0xEC, "uniform", "native");
+        assert_ne!(base, k("cg", "none", false, 200, 0xEC, "uniform", "native"));
+        assert_ne!(base, k("mg", "all", false, 200, 0xEC, "uniform", "native"));
+        assert_ne!(base, k("mg", "none", true, 200, 0xEC, "uniform", "native"));
+        assert_ne!(base, k("mg", "none", false, 400, 0xEC, "uniform", "native"));
+        assert_ne!(base, k("mg", "none", false, 200, 7, "uniform", "native"));
+        assert_ne!(base, k("mg", "none", false, 200, 0xEC, "classes", "native"));
+        assert_ne!(base, k("mg", "none", false, 200, 0xEC, "adaptive", "native"));
+        assert_ne!(base, k("mg", "none", false, 200, 0xEC, "uniform", "pool"));
         let mut other = cfg;
         other.nvm = crate::sim::NvmProfile::by_name("lat4x").unwrap();
         assert_ne!(
             base,
-            CellKey::campaign("mg", "none", false, 200, 0xEC, "native", &other)
+            CellKey::campaign("mg", "none", false, 200, 0xEC, "uniform", "native", &other)
         );
     }
 
@@ -153,7 +163,7 @@ mod tests {
         assert!(!p.canonical().contains("seed"));
         assert!(!p.canonical().contains("tests"));
         // Campaign and profile keys can never collide on canonical text.
-        let c = CellKey::campaign("mg", "none", false, 200, 0xEC, "native", &cfg);
+        let c = CellKey::campaign("mg", "none", false, 200, 0xEC, "uniform", "native", &cfg);
         assert_ne!(p.canonical(), c.canonical());
     }
 }

@@ -56,7 +56,8 @@ use crate::util::error::{Error, Result};
 pub const STORE_MAGIC: [u8; 4] = *b"ECST";
 /// Entry format version — bump on any header or payload layout change;
 /// older entries then read as typed [`StoreMiss::VersionSkew`] misses.
-pub const STORE_VERSION: u64 = 1;
+/// v2: campaign results carry sampling weights and a coverage report.
+pub const STORE_VERSION: u64 = 2;
 /// Default store root when neither `--store-dir` nor `EASYCRASH_STORE`
 /// is set (relative to the invocation directory, like `results/`).
 pub const DEFAULT_ROOT: &str = ".easycrash-store";
@@ -117,11 +118,14 @@ pub struct Store {
 static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
 
 impl Store {
-    /// Open (creating if needed) a store rooted at `root`.
+    /// Open (creating if needed) a store rooted at `root`, sweeping temp
+    /// files abandoned by dead writers (a writer killed between `write`
+    /// and `rename` litters the root forever otherwise).
     pub fn open(root: impl Into<PathBuf>) -> Result<Store> {
         let root = root.into();
         std::fs::create_dir_all(&root)
             .map_err(|e| Error::io(&root, "creating store root", e))?;
+        sweep_stale_tmp(&root);
         Ok(Store { root })
     }
 
@@ -167,6 +171,45 @@ impl Store {
             Error::io(&path, "publishing store entry", e)
         })?;
         Ok(path)
+    }
+}
+
+/// Remove `*.tmp.<pid>.<seq>` files whose writer process is gone. A save
+/// interrupted between the temp write and the rename (crash, kill -9)
+/// leaves its temp file behind; nothing ever reads them, so they only
+/// waste space. Live writers are spared: our own pid always, and any pid
+/// that still exists in `/proc` (on platforms without `/proc`, everything
+/// non-ours is treated as live — the sweep is best-effort). All errors
+/// are ignored: a failed sweep must never block opening the store.
+fn sweep_stale_tmp(root: &Path) {
+    let Ok(entries) = std::fs::read_dir(root) else {
+        return;
+    };
+    let own_pid = std::process::id();
+    let proc_exists = Path::new("/proc").is_dir();
+    for entry in entries.filter_map(|e| e.ok()) {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        // Shape: <entry>.ecst.tmp.<pid>.<seq>
+        let mut rev = name.rsplit('.');
+        let Some(seq) = rev.next() else { continue };
+        let Some(pid) = rev.next() else { continue };
+        if rev.next() != Some("tmp") {
+            continue;
+        }
+        if seq.parse::<u64>().is_err() {
+            continue;
+        }
+        let Ok(pid) = pid.parse::<u32>() else { continue };
+        if pid == own_pid {
+            continue;
+        }
+        if proc_exists && Path::new(&format!("/proc/{pid}")).exists() {
+            continue;
+        }
+        if proc_exists {
+            let _ = std::fs::remove_file(entry.path());
+        }
     }
 }
 

@@ -67,7 +67,8 @@ fn pool_and_simulated_engines_agree_on_the_crash_matrix() {
         for plan_dsl in ["none", "all"] {
             let plan = resolve_plan_basic(app, plan_dsl).unwrap();
             let kc = KillCampaign { tests: 4, seed: 0x5EED, ..KillCampaign::default() };
-            let sim = Campaign { tests: kc.tests, seed: kc.seed, cfg: kc.cfg, verified: false };
+            let sim =
+                Campaign { tests: kc.tests, seed: kc.seed, cfg: kc.cfg, ..Campaign::default() };
             let mut engine = NativeEngine::new();
             let simulated = sim.run(app, &plan, &mut engine).unwrap();
             let pool_path = tmp(&format!("matrix-{app_name}-{plan_dsl}"));
@@ -90,7 +91,7 @@ fn flush_boundary_kills_agree_between_engines() {
     let app = app.as_ref();
     let plan = resolve_plan_basic(app, "all").unwrap();
     let kc = KillCampaign { tests: 3, seed: 0xB0B, ..KillCampaign::default() };
-    let sim = Campaign { tests: kc.tests, seed: kc.seed, cfg: kc.cfg, verified: false };
+    let sim = Campaign { tests: kc.tests, seed: kc.seed, cfg: kc.cfg, ..Campaign::default() };
     let profile = sim.profile(app, &plan).unwrap();
     // Find the smallest op at which the first main-loop iteration has
     // completed (and its iteration-end flush has run).

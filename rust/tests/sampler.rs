@@ -1,0 +1,158 @@
+//! Exploration-layer acceptance (ISSUE §Sampler): crash-equivalence
+//! classes are real (any member of a class recovers like its
+//! representative), the class sampler hits 100% class coverage on a
+//! budget uniform sampling cannot match, and the adaptive sampler is
+//! bit-reproducible for every shard count.
+
+use easycrash::apps::by_name;
+use easycrash::easycrash::{Campaign, PersistPlan, SamplerSpec, ShardedCampaign};
+use easycrash::runtime::NativeEngine;
+
+fn campaign(tests: usize, seed: u64, sampler: &str) -> Campaign {
+    let mut c = Campaign::new(tests, seed);
+    c.sampler = SamplerSpec::parse(sampler).expect("sampler DSL");
+    c
+}
+
+fn plan_all(app: &dyn easycrash::apps::CrashApp) -> PersistPlan {
+    let prof = Campaign::new(0, 1).profile(app, &PersistPlan::none()).unwrap();
+    let names: Vec<String> = prof
+        .selectable_candidates()
+        .map(|(_, n, _)| n.clone())
+        .collect();
+    let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    PersistPlan::at_iter_end(&refs, app.regions().len(), 1)
+}
+
+/// The equivalence-class claim itself, on toy/mg/ft: the class map is a
+/// pure function of the profile (seed-independent), and `class_points`
+/// under budget picks the same (widest) classes for any seed — so two
+/// class campaigns with different seeds test the *same* classes through
+/// *different* member crash points, and every pair of same-class members
+/// must classify identically. Only the persistence-derived fields are
+/// compared: `iter`, `region` and the arch-vs-NVM inconsistency all
+/// legitimately vary with the exact crash op inside a class.
+#[test]
+fn class_members_recover_identically_to_their_representative() {
+    for app_name in ["toy", "mg", "ft"] {
+        let app = by_name(app_name).unwrap();
+        let app = app.as_ref();
+        for plan in [PersistPlan::none(), plan_all(app)] {
+            let tests = 10;
+            let mut eng = NativeEngine::new();
+            let a = campaign(tests, 0xA, "classes").run(app, &plan, &mut eng).unwrap();
+            let b = campaign(tests, 0xB, "classes").run(app, &plan, &mut eng).unwrap();
+            assert_eq!(a.records.len(), b.records.len(), "{app_name}: same class set");
+            assert_eq!(a.weights, b.weights, "{app_name}: class widths are seed-free");
+            assert_eq!(a.coverage, b.coverage, "{app_name}: coverage is seed-free");
+            for (i, (ra, rb)) in a.records.iter().zip(&b.records).enumerate() {
+                assert_eq!(
+                    (ra.response, ra.extra_iters),
+                    (rb.response, rb.extra_iters),
+                    "{app_name}: class {i} members at ops {} vs {} diverged",
+                    ra.op,
+                    rb.op
+                );
+            }
+            // The claim is only exercised if the representatives actually
+            // moved between the seeds.
+            assert!(
+                a.records.iter().zip(&b.records).any(|(ra, rb)| ra.op != rb.op),
+                "{app_name}: both seeds drew identical representatives"
+            );
+        }
+    }
+}
+
+/// Same seed, same campaign — records, weights and coverage reproduce
+/// bit for bit (the memo/store layers key on this).
+#[test]
+fn classes_sampler_is_bit_reproducible_per_seed() {
+    let app = by_name("toy").unwrap();
+    let plan = PersistPlan::none();
+    let mut eng = NativeEngine::new();
+    let a = campaign(12, 0xEC, "classes").run(app.as_ref(), &plan, &mut eng).unwrap();
+    let b = campaign(12, 0xEC, "classes").run(app.as_ref(), &plan, &mut eng).unwrap();
+    assert_eq!(a.records, b.records);
+    assert_eq!(a.weights, b.weights);
+    assert_eq!(a.coverage, b.coverage);
+    assert_eq!(a.weights.len(), a.records.len(), "one weight per record");
+    assert!(a.weights.iter().all(|&w| w > 0.0));
+    assert_eq!(a.cycles.to_bits(), b.cycles.to_bits());
+}
+
+/// The acceptance bar: on toy, the class sampler reports 100% class
+/// coverage at a budget of exactly `classes_total` tests, while the
+/// uniform draw at that same budget stays below 95% — i.e. uniform
+/// needs strictly more tests to reach 95% of the persistence-distinct
+/// crash states than classes needs for all of them.
+#[test]
+fn classes_reach_full_toy_coverage_on_a_budget_uniform_cannot() {
+    let app = by_name("toy").unwrap();
+    let plan = plan_all(app.as_ref());
+    let mut eng = NativeEngine::new();
+
+    // Learn the class count from a probe-sized class campaign.
+    let probe = campaign(4, 0xEC, "classes").run(app.as_ref(), &plan, &mut eng).unwrap();
+    let total = probe.coverage.as_ref().expect("classes emits coverage").classes_total;
+    assert!(total > 4, "toy must have a non-trivial class structure, got {total}");
+
+    let full = campaign(total, 0xEC, "classes").run(app.as_ref(), &plan, &mut eng).unwrap();
+    let cov = full.coverage.as_ref().expect("coverage");
+    assert_eq!(cov.classes_tested, total, "budget == classes → every class tested");
+    assert_eq!(cov.covered(), 1.0);
+    assert_eq!(full.records.len(), total, "one test per class, none wasted");
+
+    let uniform = campaign(total, 0xEC, "uniform").run(app.as_ref(), &plan, &mut eng).unwrap();
+    let ucov = uniform.coverage.as_ref().expect("uniform also reports coverage");
+    assert_eq!(ucov.classes_total, total, "both samplers see one class map");
+    assert!(
+        ucov.covered() < 0.95,
+        "uniform at the class budget must stay under the 95% bar, got {}",
+        ucov.covered()
+    );
+}
+
+/// The adaptive sampler inherits the executor's shard invariance: every
+/// draw is a pure function of (seed, round, region), decided before any
+/// harvesting is dispatched — so shard counts {1, 2, 4, 8} must
+/// reproduce the sequential run bit for bit, coverage included.
+#[test]
+fn adaptive_sampler_is_bit_reproducible_across_shard_counts() {
+    let app = by_name("toy").unwrap();
+    let plan = PersistPlan::none();
+    let mut eng = NativeEngine::new();
+    let seq = campaign(24, 0x5EED, "adaptive(4)").run(app.as_ref(), &plan, &mut eng).unwrap();
+    assert_eq!(seq.weights.len(), seq.records.len());
+    let cov = seq.coverage.as_ref().expect("adaptive emits coverage");
+    assert!(cov.classes_tested > 0);
+    for shards in [1usize, 2, 4, 8] {
+        let mut sc = ShardedCampaign::new(24, 0x5EED, shards);
+        sc.campaign.sampler = SamplerSpec::parse("adaptive(4)").unwrap();
+        let r = sc.run(app.as_ref(), &plan).unwrap();
+        assert_eq!(r.records, seq.records, "shards={shards}: records diverged");
+        assert_eq!(r.weights, seq.weights, "shards={shards}: weights diverged");
+        assert_eq!(r.coverage, seq.coverage, "shards={shards}: coverage diverged");
+        assert_eq!(r.cycles.to_bits(), seq.cycles.to_bits(), "shards={shards}");
+        assert_eq!(r.stats, seq.stats, "shards={shards}");
+    }
+}
+
+/// Verified mode snapshots the architectural image, which changes at
+/// every op — no two crash points are equivalent, so the non-uniform
+/// samplers must refuse rather than report meaningless classes.
+#[test]
+fn non_uniform_samplers_reject_verified_mode() {
+    let app = by_name("toy").unwrap();
+    let plan = PersistPlan::none();
+    for sampler in ["classes", "adaptive"] {
+        let mut c = campaign(8, 0xEC, sampler);
+        c.verified = true;
+        let mut eng = NativeEngine::new();
+        let err = c.run(app.as_ref(), &plan, &mut eng).unwrap_err();
+        assert!(
+            err.to_string().contains("verified"),
+            "{sampler}: error must name verified mode, got: {err}"
+        );
+    }
+}

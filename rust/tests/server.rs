@@ -173,6 +173,21 @@ fn http_surface_answers_health_stats_and_rejects_garbage() {
     let missing = raw("GET /nope HTTP/1.1\r\n\r\n".to_string());
     assert!(missing.starts_with("HTTP/1.1 404 "), "got: {missing}");
 
+    // A chunked body cannot be framed by this server's Content-Length
+    // subset: it must answer 400 with the reason, not read an empty body
+    // and blame the spec.
+    let chunked = raw(
+        "POST /jobs HTTP/1.1\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n\
+         4\r\nspec\r\n0\r\n\r\n"
+            .to_string(),
+    );
+    assert!(chunked.starts_with("HTTP/1.1 400 "), "got: {chunked}");
+    assert!(
+        chunked.contains("Transfer-Encoding (chunked) is not supported"),
+        "got: {chunked}"
+    );
+    assert!(chunked.contains("Content-Length"), "got: {chunked}");
+
     // The client surfaces a rejected job as a typed error, not a hang.
     let invalid = ExperimentSpec::builder()
         .app("toy")
@@ -185,6 +200,50 @@ fn http_surface_answers_health_stats_and_rejects_garbage() {
     assert!(
         err.to_string().contains("server rejected job"),
         "got: {err}"
+    );
+    srv.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A `--sampler classes` job streams one `easycrash.coverage/v1` event
+/// per cell alongside the cell events, and the client's event loop
+/// tolerates (and surfaces) them.
+#[test]
+fn classes_job_streams_coverage_events() {
+    let dir = tmpdir("coverage");
+    let (srv, addr) = start_on(&dir, None);
+    let spec = ExperimentSpec::builder()
+        .app("toy")
+        .plan_str("all")
+        .expect("plan")
+        .tests(10)
+        .seed(0xEC)
+        .sampler_str("classes")
+        .expect("sampler")
+        .build()
+        .expect("spec");
+
+    let mut coverage_events = Vec::new();
+    let done = client::submit(&addr, &spec, |ev| {
+        if ev.get("event").and_then(Json::as_str) == Some("coverage") {
+            coverage_events.push(ev.clone());
+        }
+    })
+    .expect("classes job");
+
+    assert_eq!(coverage_events.len(), 1, "one coverage event per cell");
+    let cov = coverage_events[0].get("coverage").expect("coverage payload");
+    assert_eq!(
+        cov.get("schema").and_then(Json::as_str),
+        Some("easycrash.coverage/v1")
+    );
+    assert!(cov.get("classes_total").and_then(Json::as_u64).unwrap() > 0);
+    // The embedded report carries the same coverage block.
+    let report = done.get("report").expect("report");
+    let cell = &report.get("cells").and_then(Json::as_arr).expect("cells")[0];
+    assert_eq!(
+        cell.get("coverage").and_then(|c| c.get("schema")).and_then(Json::as_str),
+        Some("easycrash.coverage/v1")
     );
     srv.stop();
     let _ = std::fs::remove_dir_all(&dir);

@@ -42,6 +42,7 @@ fn toy_cell() -> (CampaignResult, CellKey, ExperimentSpec) {
         false,
         spec.tests,
         spec.seed,
+        "uniform",
         "native",
         &spec.cfg,
     );
@@ -182,7 +183,7 @@ fn damaged_entries_classify_as_typed_misses() {
     // An entry legitimately written under a *different* key, landed on
     // this key's path (hash collision stand-in): typed mismatch, never
     // the wrong cell's data.
-    let other = CellKey::campaign("toy", "none", false, 999, 7, "native", &spec.cfg);
+    let other = CellKey::campaign("toy", "none", false, 999, 7, "uniform", "native", &spec.cfg);
     store.save(&other, &res).unwrap();
     std::fs::copy(store.entry_path(&other), &path).unwrap();
     assert_eq!(load_miss(&store, &key), StoreMiss::KeyMismatch);
@@ -293,6 +294,40 @@ fn second_process_recomputes_nothing_and_reports_identically() {
     assert_eq!(s.computed, 0, "second process must recompute nothing");
     assert!(s.store_hits >= 4, "all 4 campaign cells served from disk");
     assert_eq!(report_a, report_b, "report documents must be byte-identical");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `Store::open` sweeps temp files abandoned by dead writers — and only
+/// those: temps of live writers (any pid still in `/proc`, plus our own
+/// in-flight ones) and published entries survive untouched.
+#[test]
+fn open_sweeps_stale_temp_files_from_dead_writers() {
+    let dir = tmpdir("sweep");
+    let (res, key, _) = toy_cell();
+    Store::open(&dir).unwrap().save(&key, &res).unwrap();
+
+    // A writer killed between the temp write and the rename leaves
+    // exactly this shape behind. pid_max caps real pids at 2^22, so
+    // u32::MAX can never name a live process.
+    let dead = dir.join(format!("{}.tmp.{}.7", key.file_name(), u32::MAX));
+    let live = dir.join(format!("{}.tmp.1.0", key.file_name())); // pid 1
+    let own = dir.join(format!("{}.tmp.{}.3", key.file_name(), std::process::id()));
+    let not_tmp = dir.join("README.txt");
+    for p in [&dead, &live, &own, &not_tmp] {
+        std::fs::write(p, b"abandoned").unwrap();
+    }
+
+    let store = Store::open(&dir).unwrap();
+    if std::path::Path::new("/proc").is_dir() {
+        assert!(!dead.exists(), "a dead writer's temp file must be swept");
+    }
+    assert!(live.exists(), "a live writer's temp file must be spared");
+    assert!(own.exists(), "our own in-flight temp files must be spared");
+    assert!(not_tmp.exists(), "non-temp files are never touched");
+    match store.load(&key) {
+        Lookup::Hit(back) => assert!(results_bit_identical(&back, &res)),
+        Lookup::Miss(m) => panic!("published entry must survive the sweep: {m}"),
+    }
     let _ = std::fs::remove_dir_all(&dir);
 }
 
