@@ -7,7 +7,8 @@ use std::sync::Arc;
 use crate::apps::{self, CrashApp};
 use crate::easycrash::workflow::{Workflow, WorkflowReport};
 use crate::easycrash::{
-    Campaign, CampaignResult, KillCampaign, PersistPlan, PlanSpec, PlannerSpec, ShardedCampaign,
+    Campaign, CampaignResult, KillCampaign, PersistPlan, PlanSpec, PlannerSpec, RankCampaign,
+    ShardedCampaign,
 };
 use crate::model::efficiency::{evaluate, EfficiencyInput};
 use crate::model::sweep::T_CHK_SCENARIOS;
@@ -35,7 +36,7 @@ use super::trace::{EfficiencyReport, TraceCell};
 /// [`CellKey`]s:
 ///
 /// * campaigns — `CellKey::campaign(app, plan.dsl(), verified, tests,
-///   seed, sampler, engine, cfg)`; a plan's canonical DSL rendering determines the
+///   seed, sampler, engine, ranks, recovery, cfg)`; a plan's canonical DSL rendering determines the
 ///   simulation bit-for-bit, so two cells (or a workflow step and a
 ///   figure) asking for the same plan share one `Arc<CampaignResult>`,
 ///   and — with a store attached — any *process* that ever computed the
@@ -318,6 +319,8 @@ impl Runner {
             self.spec.seed,
             &self.spec.sampler.to_string(),
             self.spec.engine.name(),
+            self.spec.ranks,
+            self.spec.recovery.label(),
             &self.spec.cfg,
         );
         let (res, source) = self
@@ -341,6 +344,26 @@ impl Runner {
         plan: &PersistPlan,
         verified: bool,
     ) -> Result<CampaignResult> {
+        // Multi-rank cells route through the rank harness: the dcg app's
+        // lockstep executor with per-rank envs, the spec's recovery mode
+        // deciding what survivors contribute. Spec validation pins this
+        // path to dcg, uniform sampling, shards == 1 and !verified.
+        if self.spec.ranks > 1 {
+            let rc = RankCampaign {
+                ranks: self.spec.ranks,
+                tests: self.spec.tests,
+                seed: self.spec.seed,
+                cfg: self.spec.cfg,
+                recovery: self.spec.recovery,
+                shards: 1,
+            };
+            let res = if self.spec.engine == super::spec::EngineKind::Pool {
+                rc.run_pooled(plan, &Self::pool_path(app.name(), plan))?
+            } else {
+                rc.run(plan)?
+            };
+            return Ok(res.result);
+        }
         // One engine per cell, created here rather than held by the
         // runner: engines are deliberately not `Send` (DESIGN.md §API),
         // and a shared `Mutex<Box<dyn StepEngine>>` would both make the

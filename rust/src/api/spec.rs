@@ -1,6 +1,6 @@
 //! The serializable experiment specification and its fluent builder.
 
-use crate::easycrash::{PlanSpec, PlannerSpec, SamplerSpec};
+use crate::easycrash::{PlanSpec, PlannerSpec, RecoveryMode, SamplerSpec};
 use crate::model::trace::FailureDist;
 use crate::runtime::{NativeEngine, StepEngine};
 use crate::sim::{CacheGeom, NvmProfile, SimConfig};
@@ -73,6 +73,13 @@ pub struct ExperimentSpec {
     pub seed: u64,
     /// Campaign worker threads (`> 1` requires the native engine).
     pub shards: usize,
+    /// Simulated ranks (`--ranks N`): `1` = the historical whole-process
+    /// campaigns; `> 1` routes cells through [`crate::easycrash::rank`]'s
+    /// multi-rank harness (dcg only, crash points name `(rank, op)`).
+    pub ranks: usize,
+    /// Partial-failure recovery mode for `ranks > 1` (`--recovery
+    /// local|assisted|global`); ignored at `ranks == 1`.
+    pub recovery: RecoveryMode,
     pub engine: EngineKind,
     /// §6 "result verification" mode (snapshot the architectural image).
     pub verified: bool,
@@ -106,6 +113,8 @@ impl Default for ExperimentSpec {
             tests: 200,
             seed: 0xEC,
             shards: 1,
+            ranks: 1,
+            recovery: RecoveryMode::Global,
             engine: EngineKind::Native,
             verified: false,
             ts: 0.03,
@@ -145,6 +154,50 @@ impl ExperimentSpec {
             self.shards == 1 || self.engine == EngineKind::Native,
             "shards > 1 requires the native engine (one engine per worker)"
         );
+        crate::ensure!(
+            (1..=crate::apps::dcg::MAX_RANKS).contains(&self.ranks),
+            "ranks must be 1..={}, got {}",
+            crate::apps::dcg::MAX_RANKS,
+            self.ranks
+        );
+        if self.ranks > 1 {
+            // The rank harness is the dcg app's: every other app is a
+            // single-address-space kernel with no row-block partition.
+            for name in &self.apps {
+                crate::ensure!(
+                    name == "dcg",
+                    "--ranks > 1 is only supported for the dcg app (got `{name}`)"
+                );
+            }
+            // Verified mode snapshots the architectural image at the
+            // crash op; with R envs there are R images and no defined
+            // composite instant — rejected until that semantics is
+            // pinned down (mirrors the pool-engine guard above).
+            crate::ensure!(
+                !self.verified,
+                "--ranks > 1 is incompatible with verified mode (no single \
+                 architectural image exists across ranks)"
+            );
+            // Spec-level sharding of rank campaigns is held back until
+            // the shard-invariance proof in rust/tests/rank.rs has been
+            // exercised against the store/runner path too.
+            crate::ensure!(
+                self.shards == 1,
+                "--ranks > 1 is incompatible with --shards > 1 (rank campaigns \
+                 shard internally; not yet proven invariant through the runner)"
+            );
+            crate::ensure!(
+                self.engine != EngineKind::Pjrt,
+                "--ranks > 1 is incompatible with the pjrt engine (rank \
+                 recovery recomputes on the native kernels)"
+            );
+            crate::ensure!(
+                self.sampler == SamplerSpec::Uniform,
+                "--sampler {} is incompatible with --ranks > 1 (rank campaigns \
+                 always use the uniform draw)",
+                self.sampler
+            );
+        }
         // A real crash cannot snapshot the architectural image — it is
         // exactly what dies with the process.
         crate::ensure!(
@@ -212,6 +265,10 @@ impl ExperimentSpec {
         self.tests = args.usize_or("tests", self.tests)?;
         self.seed = args.u64_or("seed", self.seed)?;
         self.shards = args.shards_or(self.shards)?;
+        self.ranks = args.usize_or("ranks", self.ranks)?;
+        if let Some(r) = args.get("recovery") {
+            self.recovery = r.parse()?;
+        }
         if let Some(e) = args.get("engine") {
             self.engine = EngineKind::from_name(e)?;
         }
@@ -307,6 +364,8 @@ impl ExperimentSpec {
             .set("tests", self.tests)
             .set("seed", self.seed)
             .set("shards", self.shards)
+            .set("ranks", self.ranks)
+            .set("recovery", self.recovery.to_string())
             .set("engine", self.engine.name())
             .set("verified", self.verified)
             .set("ts", self.ts)
@@ -346,9 +405,9 @@ impl ExperimentSpec {
         // Reject unknown keys: a typo (`"test"` for `"tests"`) must not
         // silently fall back to a default and run the wrong experiment.
         const KNOWN: &[&str] = &[
-            "schema", "apps", "plans", "tests", "seed", "shards", "engine", "verified", "ts",
-            "tau", "planner", "sampler", "geometry", "cache", "nvm", "snapshot_interval",
-            "trace",
+            "schema", "apps", "plans", "tests", "seed", "shards", "ranks", "recovery", "engine",
+            "verified", "ts", "tau", "planner", "sampler", "geometry", "cache", "nvm",
+            "snapshot_interval", "trace",
         ];
         for (i, (key, _)) in fields.iter().enumerate() {
             crate::ensure!(
@@ -398,6 +457,13 @@ impl ExperimentSpec {
         };
         spec.tests = usize_field("tests", spec.tests)?;
         spec.shards = usize_field("shards", spec.shards)?;
+        spec.ranks = usize_field("ranks", spec.ranks)?;
+        if let Some(v) = j.get("recovery") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| crate::err!("`recovery` must be a string"))?;
+            spec.recovery = s.parse()?;
+        }
         if let Some(v) = j.get("seed") {
             spec.seed = v
                 .as_u64()
@@ -548,6 +614,16 @@ impl SpecBuilder {
 
     pub fn shards(mut self, shards: usize) -> SpecBuilder {
         self.spec.shards = shards;
+        self
+    }
+
+    pub fn ranks(mut self, ranks: usize) -> SpecBuilder {
+        self.spec.ranks = ranks;
+        self
+    }
+
+    pub fn recovery(mut self, recovery: RecoveryMode) -> SpecBuilder {
+        self.spec.recovery = recovery;
         self
     }
 

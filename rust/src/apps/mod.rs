@@ -20,6 +20,7 @@ pub mod adi;
 pub mod bt;
 pub mod botsspar;
 pub mod cg;
+pub mod dcg;
 pub mod ep;
 pub mod fft;
 pub mod ft;
@@ -335,16 +336,17 @@ pub fn eval_set() -> Vec<Box<dyn CrashApp>> {
     all().into_iter().filter(|a| a.name() != "ep").collect()
 }
 
-/// Non-paper extras: the `toy` test kernel plus the `adi` and `fft`
-/// substrate mini apps. Resolvable by name and part of the full
-/// determinism matrix (`rust/tests/determinism.rs` covers
-/// `all() + extras()` — 14 apps), but excluded from the Table-1
-/// registry the figures sweep.
+/// Non-paper extras: the `toy` test kernel, the `adi` and `fft`
+/// substrate mini apps, and the multi-rank `dcg` solver. Resolvable by
+/// name and part of the full determinism matrix
+/// (`rust/tests/determinism.rs` covers `all() + extras()` — 15 apps),
+/// but excluded from the Table-1 registry the figures sweep.
 pub fn extras() -> Vec<Box<dyn CrashApp>> {
     vec![
         Box::new(toy::Toy::default()),
         Box::new(adi::Adi::default()),
         Box::new(fft::Fft::default()),
+        Box::new(dcg::Dcg::default()),
     ]
 }
 
@@ -386,16 +388,17 @@ mod tests {
     }
 
     #[test]
-    fn extras_complete_the_fourteen_app_matrix() {
+    fn extras_complete_the_fifteen_app_matrix() {
         let ex = extras();
         let names: Vec<_> = ex.iter().map(|a| a.name()).collect();
-        assert_eq!(names, vec!["toy", "adi", "fft"]);
+        assert_eq!(names, vec!["toy", "adi", "fft", "dcg"]);
         assert!(by_name("adi").is_some());
         assert!(by_name("fft").is_some());
+        assert!(by_name("dcg").is_some());
         // No name collides with the paper registry, and the full matrix
-        // is 14 apps.
+        // is 15 apps.
         let all_names: Vec<_> = all().iter().map(|a| a.name()).collect();
         assert!(names.iter().all(|n| !all_names.contains(n)));
-        assert_eq!(all().len() + ex.len(), 14);
+        assert_eq!(all().len() + ex.len(), 15);
     }
 }

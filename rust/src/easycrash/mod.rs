@@ -8,6 +8,7 @@ pub mod campaign;
 pub mod killcampaign;
 pub mod plan;
 pub mod planner;
+pub mod rank;
 pub mod regions;
 pub mod sampler;
 pub mod selection;
@@ -18,5 +19,8 @@ pub use campaign::{Campaign, CampaignResult, ShardedCampaign, TestRecord};
 pub use killcampaign::KillCampaign;
 pub use plan::{PersistPlan, PlanSpec};
 pub use planner::{PlacerSpec, PlannerSpec, SelectorSpec};
+pub use rank::{
+    Exchange, MsgRecord, Phase, RankCampaign, RankCampaignResult, RankProfile, RecoveryMode,
+};
 pub use sampler::{ClassMap, Coverage, RegionCoverage, SamplerSpec};
 pub use workflow::{Workflow, WorkflowSummary};

@@ -1,0 +1,1542 @@
+//! `easycrash::rank` — multi-rank crash campaigns with partial-failure
+//! recovery.
+//!
+//! Every other campaign in this crate models a *whole-process* crash: one
+//! `SimEnv`, one NVM image, one restart. Real HPC failures take out **one
+//! rank of many** — the survivors keep live, consistent state that can
+//! assist recovery (Fridman et al., *Recovery of Distributed Iterative
+//! Solvers for Linear Systems Using NVRAM*). This module reproduces that
+//! shape for the [`dcg`](crate::apps::dcg) distributed-CG app:
+//!
+//! * **one `SimEnv` per rank** — each rank owns its row block of the CSR
+//!   system, its own persistence hooks (the plan projected onto its
+//!   `.r<k>`-suffixed objects) and, under [`RankCampaign::run_pooled`],
+//!   its own durable pool file `<base>.rank<k>`;
+//! * **a deterministic exchange layer** — halo planes for SpMV and the
+//!   two dot-product allreduces move through [`Exchange`], which logs
+//!   every message (sender, receiver, payload digest) so a replay of the
+//!   same seed is bit-reproducible and auditable;
+//! * **crash points name `(rank, op)`** — the global draw reuses
+//!   [`draw_crash_points`] over the *concatenation* of the per-rank
+//!   main-loop op spans, then maps each drawn point to the owning rank's
+//!   local op. At `ranks == 1` the mapping is the identity, so a
+//!   single-rank campaign draws — and records — exactly what the
+//!   whole-process [`Campaign`] does (test-enforced in
+//!   `rust/tests/rank.rs`);
+//! * **three recovery modes**, each classified into the existing S1–S4
+//!   taxonomy ([`RecoveryMode`]): `local` (the crashed rank restarts from
+//!   its NVM image alone while survivors wait at the exchange barrier),
+//!   `assisted` (survivors rebuild the lost transient state from their
+//!   consistent `x` via [`Dcg::assisted_rebuild`]), and `global` (all
+//!   ranks roll back to their own NVM images, resuming at the oldest
+//!   persisted bookmark).
+//!
+//! # Harvesting
+//!
+//! A batch is harvested in one lockstep pass over the per-rank envs. At
+//! the start of every iteration that still has pending points, the
+//! **barrier state** of all ranks (architectural + NVM images of the
+//! candidate objects, NVM bookmarks) is captured — that is the state
+//! survivors "wait with" when a peer dies mid-iteration. Each per-rank
+//! kernel call is then bracketed: snapshot, run canonically, and for
+//! every pending point inside the call's op window restore → re-run
+//! under `halt_at` → capture the crashed rank's NVM image → restore →
+//! re-run canonically. The outcome of a point therefore depends only on
+//! the deterministic trajectory, never on batch grouping: campaigns are
+//! bit-identical for any shard count (`partition_points` keeps the
+//! batches contiguous, so concatenating them reproduces the sequential
+//! record list).
+
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+
+use crate::apps::dcg::{self, Dcg, HaloOut, RankSt, NUM_REGIONS};
+use crate::apps::{AppCore, CrashApp, Golden, Response};
+use crate::sim::pool::fnv1a64;
+use crate::sim::{
+    Env, FlushHooks, LayoutEnv, ObjId, PoolEnv, RawEnv, Registry, Signal, SimConfig, SimEnv,
+};
+use crate::util::error::Result;
+
+use super::campaign::{draw_crash_points, partition_points, Campaign, CampaignResult, TestRecord};
+use super::plan::{PersistPlan, PlanEntry};
+use super::sampler::SamplerSpec;
+
+// ---------------------------------------------------------------------------
+// Recovery modes
+// ---------------------------------------------------------------------------
+
+/// What happens after a single rank dies mid-campaign.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RecoveryMode {
+    /// The crashed rank restarts from its own NVM image; survivors wait
+    /// at the exchange barrier with their architectural state intact. No
+    /// data moves between ranks — the crashed block re-enters stale.
+    Local,
+    /// Survivors recompute the lost transient state from consistent data
+    /// (the NVRAM-solvers recovery): after overlaying the crashed rank's
+    /// NVM image, [`Dcg::assisted_rebuild`] reconstructs `r`, `p` and ρ
+    /// from the surviving solution vector `x` on every rank.
+    Assisted,
+    /// All ranks roll back to their own NVM images and resume from the
+    /// oldest persisted iteration bookmark — the whole-process semantics
+    /// of the single-env campaign, generalized per rank.
+    Global,
+}
+
+impl RecoveryMode {
+    /// All modes, in sweep order.
+    pub fn all() -> [RecoveryMode; 3] {
+        [
+            RecoveryMode::Local,
+            RecoveryMode::Assisted,
+            RecoveryMode::Global,
+        ]
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            RecoveryMode::Local => "local",
+            RecoveryMode::Assisted => "assisted",
+            RecoveryMode::Global => "global",
+        }
+    }
+}
+
+impl std::fmt::Display for RecoveryMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+impl std::str::FromStr for RecoveryMode {
+    type Err = crate::util::error::Error;
+
+    fn from_str(s: &str) -> Result<RecoveryMode> {
+        match s.trim() {
+            "local" => Ok(RecoveryMode::Local),
+            "assisted" => Ok(RecoveryMode::Assisted),
+            "global" => Ok(RecoveryMode::Global),
+            other => Err(crate::err!(
+                "unknown recovery mode '{other}' (expected local|assisted|global)"
+            )),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exchange layer: logged, digest-checked messages
+// ---------------------------------------------------------------------------
+
+/// Sender/receiver id of a collective message (both dots reduce globally).
+pub const COLLECTIVE: usize = usize::MAX;
+
+/// The per-rank kernel phases of one dcg iteration, in execution order.
+/// Crash points land *inside* these windows; `region()`/`iter_end()`
+/// boundaries cost no ops.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    HaloSend,
+    HaloRecv,
+    Spmv,
+    DotPq,
+    AxpyX,
+    AxpyR,
+    DotRr,
+    UpdateP,
+    Bookmark,
+}
+
+/// One logged exchange message.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MsgRecord {
+    pub iter: u64,
+    pub phase: Phase,
+    /// Sending rank, or [`COLLECTIVE`] for an allreduce.
+    pub from: usize,
+    /// Receiving rank, or [`COLLECTIVE`] for an allreduce.
+    pub to: usize,
+    /// Payload length in f32 elements.
+    pub len: usize,
+    /// FNV-1a over the payload's little-endian bytes.
+    pub digest: u64,
+}
+
+/// The message log of one profiled run. Routing itself is pure
+/// ([`dcg::route_halos`]); the log exists so replays can be audited for
+/// bit-reproducibility — same seed, same [`Exchange::digest`].
+#[derive(Clone, Debug, Default)]
+pub struct Exchange {
+    pub log: Vec<MsgRecord>,
+}
+
+impl Exchange {
+    fn plane_digest(plane: &[f32]) -> u64 {
+        let mut bytes = Vec::with_capacity(plane.len() * 4);
+        for v in plane {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        fnv1a64(&bytes)
+    }
+
+    /// Log the halo planes every rank published this iteration.
+    pub fn record_halos(&mut self, it: u64, outs: &[HaloOut]) {
+        for (k, out) in outs.iter().enumerate() {
+            if let Some(plane) = &out.lo {
+                self.log.push(MsgRecord {
+                    iter: it,
+                    phase: Phase::HaloSend,
+                    from: k,
+                    to: k - 1,
+                    len: plane.len(),
+                    digest: Self::plane_digest(plane),
+                });
+            }
+            if let Some(plane) = &out.hi {
+                self.log.push(MsgRecord {
+                    iter: it,
+                    phase: Phase::HaloSend,
+                    from: k,
+                    to: k + 1,
+                    len: plane.len(),
+                    digest: Self::plane_digest(plane),
+                });
+            }
+        }
+    }
+
+    /// Log one allreduce result (already folded in fixed rank order).
+    pub fn record_allreduce(&mut self, it: u64, phase: Phase, value: f32) {
+        self.log.push(MsgRecord {
+            iter: it,
+            phase,
+            from: COLLECTIVE,
+            to: COLLECTIVE,
+            len: 1,
+            digest: fnv1a64(&value.to_le_bytes()),
+        });
+    }
+
+    /// Order-sensitive digest of the whole log.
+    pub fn digest(&self) -> u64 {
+        let mut bytes = Vec::with_capacity(self.log.len() * 41);
+        for m in &self.log {
+            bytes.extend_from_slice(&m.iter.to_le_bytes());
+            bytes.push(m.phase as u8);
+            bytes.extend_from_slice(&(m.from as u64).to_le_bytes());
+            bytes.extend_from_slice(&(m.to as u64).to_le_bytes());
+            bytes.extend_from_slice(&(m.len as u64).to_le_bytes());
+            bytes.extend_from_slice(&m.digest.to_le_bytes());
+        }
+        fnv1a64(&bytes)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Profile: per-rank op geometry
+// ---------------------------------------------------------------------------
+
+/// One per-rank kernel call's op window `(lo, hi]` — a crash point `p`
+/// fires inside this call iff `lo < p <= hi` (ops tick before an access
+/// applies, exactly like the single-env campaign's halt mode).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PhaseWindow {
+    pub phase: Phase,
+    pub iter: u64,
+    pub lo: u64,
+    pub hi: u64,
+}
+
+/// Deterministic op geometry of one multi-rank run: where each rank's
+/// main loop starts, how many main-loop ops it executes, and the exact
+/// window of every kernel call (so tests can pin crash points
+/// mid-allreduce). The global crash-point space is the concatenation of
+/// the per-rank spans, offset by rank 0's main start — at `ranks == 1`
+/// it coincides with the single-env campaign's `[main_start, ops_total)`.
+#[derive(Clone, Debug)]
+pub struct RankProfile {
+    pub ranks: usize,
+    /// Per-rank ops at main-loop start (after build).
+    pub main_start: Vec<u64>,
+    /// Per-rank total instrumented ops of the full run.
+    pub ops_total: Vec<u64>,
+    /// Per-rank main-loop op span (`ops_total - main_start`).
+    pub spans: Vec<u64>,
+    /// Per-rank kernel-call windows in execution order.
+    pub phase_windows: Vec<Vec<PhaseWindow>>,
+    /// The exchange message log of the profiled run.
+    pub messages: Vec<MsgRecord>,
+    /// Order-sensitive digest of `messages`.
+    pub msg_digest: u64,
+    pub iters: u64,
+}
+
+impl RankProfile {
+    /// Low end of the global crash-point space.
+    pub fn lo(&self) -> u64 {
+        self.main_start[0]
+    }
+
+    /// Width of the global crash-point space (sum of the rank spans).
+    pub fn total_span(&self) -> u64 {
+        self.spans.iter().sum()
+    }
+
+    /// Map a global crash point to `(rank, local op)`.
+    pub fn locate(&self, g: u64) -> Option<(usize, u64)> {
+        let mut off = g.checked_sub(self.lo())?;
+        for k in 0..self.ranks {
+            if off < self.spans[k] {
+                return Some((k, self.main_start[k] + off));
+            }
+            off -= self.spans[k];
+        }
+        None
+    }
+
+    /// Inverse of [`locate`](RankProfile::locate).
+    pub fn global_of(&self, rank: usize, local: u64) -> Option<u64> {
+        if rank >= self.ranks {
+            return None;
+        }
+        let off = local.checked_sub(self.main_start[rank])?;
+        if off >= self.spans[rank] {
+            return None;
+        }
+        let before: u64 = self.spans[..rank].iter().sum();
+        Some(self.lo() + before + off)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lockstep driver
+// ---------------------------------------------------------------------------
+
+/// One per-rank kernel call, re-runnable by the driver (replay-to-halt).
+type Body<'b> = dyn FnMut(&mut SimEnv<'static>, &RankSt) -> std::result::Result<(), Signal> + 'b;
+
+/// Hooks around the lockstep execution of the dcg iteration across all
+/// rank envs. The phase *sequence* lives in [`lockstep`] alone, so the
+/// profile, harvest and pooled passes cannot drift apart.
+trait Driver {
+    /// Called at the start of every iteration; `false` stops the run.
+    fn iter_start(
+        &mut self,
+        _envs: &mut [SimEnv<'static>],
+        _sts: &[RankSt],
+        _it: u64,
+    ) -> Result<bool> {
+        Ok(true)
+    }
+
+    /// Run (and possibly replay) one rank's kernel call.
+    fn call(
+        &mut self,
+        env: &mut SimEnv<'static>,
+        rs: &RankSt,
+        k: usize,
+        it: u64,
+        phase: Phase,
+        body: &mut Body<'_>,
+    ) -> Result<()>;
+
+    /// Early-exit flag, checked after every call (pooled halt).
+    fn stopped(&self) -> bool {
+        false
+    }
+
+    fn halos(&mut self, _it: u64, _outs: &[HaloOut]) {}
+
+    fn allreduce(&mut self, _it: u64, _phase: Phase, _value: f32) {}
+
+    /// Called after `iter_end` on every rank.
+    fn iter_done(
+        &mut self,
+        _envs: &mut [SimEnv<'static>],
+        _sts: &[RankSt],
+        _it: u64,
+    ) -> Result<()> {
+        Ok(())
+    }
+}
+
+fn enter_region(envs: &mut [SimEnv<'static>], j: usize) -> Result<()> {
+    for (k, env) in envs.iter_mut().enumerate() {
+        env.region(j)
+            .map_err(|s| crate::err!("dcg rank {k}: region {j} failed with {s:?}"))?;
+    }
+    Ok(())
+}
+
+/// Drive all rank envs through one full dcg run in lockstep, mirroring
+/// [`Dcg`]'s `step` phase for phase (same kernels, same fold order), so a
+/// single-rank lockstep run emits the native app's access stream bit for
+/// bit.
+fn lockstep(
+    iters: u64,
+    envs: &mut [SimEnv<'static>],
+    sts: &[RankSt],
+    d: &mut dyn Driver,
+) -> Result<()> {
+    let ranks = sts.len();
+    for it in 0..iters {
+        if !d.iter_start(envs, sts, it)? {
+            return Ok(());
+        }
+        // R0: halo exchange, then q = A p.
+        enter_region(envs, 0)?;
+        let mut outs: Vec<HaloOut> = Vec::with_capacity(ranks);
+        for k in 0..ranks {
+            let mut sent = None;
+            d.call(&mut envs[k], &sts[k], k, it, Phase::HaloSend, &mut |e, rs| {
+                sent = Some(dcg::halo_send(e, rs)?);
+                Ok(())
+            })?;
+            if d.stopped() {
+                return Ok(());
+            }
+            outs.push(sent.expect("halo_send completed"));
+        }
+        d.halos(it, &outs);
+        let ins = dcg::route_halos(&outs);
+        for k in 0..ranks {
+            d.call(&mut envs[k], &sts[k], k, it, Phase::HaloRecv, &mut |e, rs| {
+                dcg::halo_recv(e, rs, &ins[k])
+            })?;
+            if d.stopped() {
+                return Ok(());
+            }
+        }
+        for k in 0..ranks {
+            d.call(&mut envs[k], &sts[k], k, it, Phase::Spmv, &mut |e, rs| {
+                dcg::spmv_rank(e, rs)
+            })?;
+            if d.stopped() {
+                return Ok(());
+            }
+        }
+        // R1: allreduce p·q (rank-order left fold), α = ρ / (p·q).
+        enter_region(envs, 1)?;
+        let mut pq = 0.0f32;
+        let mut rho = 0.0f32;
+        for k in 0..ranks {
+            let mut part = None;
+            d.call(&mut envs[k], &sts[k], k, it, Phase::DotPq, &mut |e, rs| {
+                part = Some(dcg::dot_pq_rank(e, rs)?);
+                Ok(())
+            })?;
+            if d.stopped() {
+                return Ok(());
+            }
+            let (pqk, rhok) = part.expect("dot_pq completed");
+            pq += pqk;
+            rho = rhok;
+        }
+        d.allreduce(it, Phase::DotPq, pq);
+        let alpha = dcg::alpha_of(rho, pq);
+        // R2: x += α p.
+        enter_region(envs, 2)?;
+        for k in 0..ranks {
+            d.call(&mut envs[k], &sts[k], k, it, Phase::AxpyX, &mut |e, rs| {
+                dcg::axpy_x_rank(e, rs, alpha)
+            })?;
+            if d.stopped() {
+                return Ok(());
+            }
+        }
+        // R3: r −= α q.
+        enter_region(envs, 3)?;
+        for k in 0..ranks {
+            d.call(&mut envs[k], &sts[k], k, it, Phase::AxpyR, &mut |e, rs| {
+                dcg::axpy_r_rank(e, rs, alpha)
+            })?;
+            if d.stopped() {
+                return Ok(());
+            }
+        }
+        // R4: allreduce ρ' = r·r.
+        enter_region(envs, 4)?;
+        let mut rho_new = 0.0f32;
+        for k in 0..ranks {
+            let mut part = None;
+            d.call(&mut envs[k], &sts[k], k, it, Phase::DotRr, &mut |e, rs| {
+                part = Some(dcg::dot_rr_rank(e, rs)?);
+                Ok(())
+            })?;
+            if d.stopped() {
+                return Ok(());
+            }
+            rho_new += part.expect("dot_rr completed");
+        }
+        d.allreduce(it, Phase::DotRr, rho_new);
+        // R5: β = ρ'/ρ; p = r + β p; carry ρ'.
+        enter_region(envs, 5)?;
+        for k in 0..ranks {
+            d.call(&mut envs[k], &sts[k], k, it, Phase::UpdateP, &mut |e, rs| {
+                dcg::update_p_rank(e, rs, rho, rho_new)
+            })?;
+            if d.stopped() {
+                return Ok(());
+            }
+        }
+        // Per-rank loop bookmark, then the iteration-end flush hooks.
+        for k in 0..ranks {
+            d.call(&mut envs[k], &sts[k], k, it, Phase::Bookmark, &mut |e, rs| {
+                e.sti(rs.it, 0, (it + 1) as i64)
+            })?;
+            if d.stopped() {
+                return Ok(());
+            }
+        }
+        for (k, env) in envs.iter_mut().enumerate() {
+            env.iter_end(it)
+                .map_err(|s| crate::err!("dcg rank {k}: iter_end({it}) failed with {s:?}"))?;
+        }
+        d.iter_done(envs, sts, it)?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Per-rank layout, plan projection, env construction
+// ---------------------------------------------------------------------------
+
+/// One rank's probed object layout.
+struct RankLayout {
+    reg: Registry,
+    /// The rank's own loop-bookmark object (`it` / `it.r<k>`).
+    iter_obj: ObjId,
+    /// The rank's candidate objects, registry order.
+    cands: Vec<ObjId>,
+}
+
+fn probe_ranks(ranks: usize) -> Result<Vec<RankLayout>> {
+    (0..ranks)
+        .map(|k| {
+            let mut lay = LayoutEnv::new();
+            let rs = dcg::build_rank(&mut lay, ranks, k)
+                .map_err(|s| crate::err!("dcg rank {k}/{ranks}: layout probe failed with {s:?}"))?;
+            let cands = lay.reg.candidates();
+            Ok(RankLayout {
+                reg: lay.reg,
+                iter_obj: rs.it.id,
+                cands,
+            })
+        })
+        .collect()
+}
+
+/// Project a plan onto one rank: suffixed entries (`x.r2@5`) bind to that
+/// rank alone; plain base names (`x@5`) bind to every rank's twin. Marks
+/// which input entries found at least one home.
+fn project_plan(plan: &PersistPlan, ranks: usize, k: usize, matched: &mut [bool]) -> PersistPlan {
+    let names = dcg::rank_object_names(ranks, k);
+    let base = dcg::rank_object_names(1, 0);
+    let mut entries = Vec::new();
+    for (i, e) in plan.entries.iter().enumerate() {
+        let object = if names.contains(&e.object.as_str()) {
+            Some(e.object.clone())
+        } else {
+            base.iter()
+                .position(|b| *b == e.object)
+                .map(|pos| names[pos].to_string())
+        };
+        if let Some(object) = object {
+            matched[i] = true;
+            entries.push(PlanEntry {
+                object,
+                region: e.region,
+                every_x: e.every_x,
+            });
+        }
+    }
+    PersistPlan {
+        entries,
+        clwb: plan.clwb,
+    }
+}
+
+/// Resolve the plan into per-rank flush hooks; every input entry must
+/// name a dcg object on at least one rank.
+fn rank_hooks(plan: &PersistPlan, layouts: &[RankLayout]) -> Result<Vec<FlushHooks>> {
+    let ranks = layouts.len();
+    let mut matched = vec![false; plan.entries.len()];
+    let mut hooks = Vec::with_capacity(ranks);
+    for (k, lay) in layouts.iter().enumerate() {
+        let proj = project_plan(plan, ranks, k, &mut matched);
+        hooks.push(proj.resolve_for(&lay.reg, NUM_REGIONS, Some(lay.iter_obj))?);
+    }
+    for (e, ok) in plan.entries.iter().zip(&matched) {
+        crate::ensure!(
+            *ok,
+            "plan entry '{}' names no dcg object on any of {ranks} ranks",
+            e.object
+        );
+    }
+    Ok(hooks)
+}
+
+/// The union of all per-rank projections — the plan as the *composite*
+/// single-env dcg registry resolves it (used for the aggregate profile).
+fn composite_plan(plan: &PersistPlan, ranks: usize) -> PersistPlan {
+    let mut matched = vec![false; plan.entries.len()];
+    let mut entries = Vec::new();
+    for k in 0..ranks {
+        entries.extend(project_plan(plan, ranks, k, &mut matched).entries);
+    }
+    PersistPlan {
+        entries,
+        clwb: plan.clwb,
+    }
+}
+
+fn make_envs(cfg: &SimConfig, hooks: &[FlushHooks]) -> Vec<SimEnv<'static>> {
+    hooks
+        .iter()
+        .map(|h| {
+            let mut env = SimEnv::new(cfg, NUM_REGIONS);
+            env.set_hooks(h.clone());
+            env
+        })
+        .collect()
+}
+
+fn build_all(dcg: &Dcg, envs: &mut [SimEnv<'static>]) -> Result<Vec<RankSt>> {
+    let ranks = envs.len();
+    let mut sts = Vec::with_capacity(ranks);
+    for (k, env) in envs.iter_mut().enumerate() {
+        let rs = dcg::build_rank(env, ranks, k)
+            .map_err(|s| crate::err!("dcg rank {k}/{ranks}: build failed with {s:?}"))?;
+        env.mark_main_start();
+        sts.push(rs);
+    }
+    Ok(sts)
+}
+
+// ---------------------------------------------------------------------------
+// Profile pass
+// ---------------------------------------------------------------------------
+
+struct ProfileDriver {
+    windows: Vec<Vec<PhaseWindow>>,
+    exchange: Exchange,
+}
+
+impl Driver for ProfileDriver {
+    fn call(
+        &mut self,
+        env: &mut SimEnv<'static>,
+        rs: &RankSt,
+        k: usize,
+        it: u64,
+        phase: Phase,
+        body: &mut Body<'_>,
+    ) -> Result<()> {
+        let lo = env.ops();
+        body(env, rs)
+            .map_err(|s| crate::err!("dcg rank {k}: {phase:?} failed at iter {it}: {s:?}"))?;
+        self.windows[k].push(PhaseWindow {
+            phase,
+            iter: it,
+            lo,
+            hi: env.ops(),
+        });
+        Ok(())
+    }
+
+    fn halos(&mut self, it: u64, outs: &[HaloOut]) {
+        self.exchange.record_halos(it, outs);
+    }
+
+    fn allreduce(&mut self, it: u64, phase: Phase, value: f32) {
+        self.exchange.record_allreduce(it, phase, value);
+    }
+}
+
+fn profile_run(dcg: &Dcg, cfg: &SimConfig, hooks: &[FlushHooks]) -> Result<RankProfile> {
+    let ranks = dcg.ranks;
+    let mut envs = make_envs(cfg, hooks);
+    let sts = build_all(dcg, &mut envs)?;
+    let mut drv = ProfileDriver {
+        windows: vec![Vec::new(); ranks],
+        exchange: Exchange::default(),
+    };
+    lockstep(dcg.iters, &mut envs, &sts, &mut drv)?;
+    let main_start: Vec<u64> = envs.iter().map(|e| e.main_start_ops()).collect();
+    let ops_total: Vec<u64> = envs.iter().map(|e| e.ops()).collect();
+    let spans = main_start
+        .iter()
+        .zip(&ops_total)
+        .map(|(&m, &t)| t - m)
+        .collect();
+    Ok(RankProfile {
+        ranks,
+        main_start,
+        ops_total,
+        spans,
+        phase_windows: drv.windows,
+        msg_digest: drv.exchange.digest(),
+        messages: drv.exchange.log,
+        iters: dcg.iters,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Crash capture, barrier state, classification
+// ---------------------------------------------------------------------------
+
+/// What the crashed rank leaves behind.
+struct CrashCapture {
+    /// Global crash point (ordering key).
+    g: u64,
+    rank: usize,
+    /// Local op at which the halt actually fired.
+    op: u64,
+    iter: u64,
+    region: usize,
+    /// NVM images of the rank's candidate objects (local ids).
+    nvm: Vec<(ObjId, Vec<u8>)>,
+    /// The rank's persisted loop bookmark.
+    nvm_iter: u64,
+    /// Inconsistent rate per candidate (rank-local candidate order).
+    inconsistency: Vec<f64>,
+}
+
+/// All ranks' state at the start of the crash iteration — what survivors
+/// hold when a peer dies mid-iteration.
+struct Barrier {
+    iter: u64,
+    /// Per rank: architectural images of the candidate objects.
+    arch: Vec<Vec<(ObjId, Vec<u8>)>>,
+    /// Per rank: NVM images of the candidate objects.
+    nvm: Vec<Vec<(ObjId, Vec<u8>)>>,
+    /// Per rank: persisted loop bookmark.
+    nvm_iter: Vec<u64>,
+}
+
+impl Barrier {
+    fn empty(ranks: usize) -> Barrier {
+        Barrier {
+            iter: 0,
+            arch: vec![Vec::new(); ranks],
+            nvm: vec![Vec::new(); ranks],
+            nvm_iter: vec![0; ranks],
+        }
+    }
+}
+
+fn capture_barrier(envs: &[SimEnv<'static>], layouts: &[RankLayout], it: u64) -> Barrier {
+    Barrier {
+        iter: it,
+        arch: envs
+            .iter()
+            .zip(layouts)
+            .map(|(e, l)| l.cands.iter().map(|&id| (id, e.arch_bytes(id))).collect())
+            .collect(),
+        nvm: envs
+            .iter()
+            .zip(layouts)
+            .map(|(e, l)| l.cands.iter().map(|&id| (id, e.nvm_bytes(id))).collect())
+            .collect(),
+        nvm_iter: envs.iter().map(|e| e.nvm_iter()).collect(),
+    }
+}
+
+fn capture_crash(env: &SimEnv<'static>, cands: &[ObjId], rank: usize, g: u64) -> CrashCapture {
+    CrashCapture {
+        g,
+        rank,
+        op: env.ops(),
+        iter: env.cur_iter(),
+        region: env.cur_region(),
+        nvm: cands.iter().map(|&id| (id, env.nvm_bytes(id))).collect(),
+        nvm_iter: env.nvm_iter(),
+        inconsistency: cands.iter().map(|&id| env.inconsistent_rate(id)).collect(),
+    }
+}
+
+/// Restart the composite system on a scratch [`RawEnv`] under `mode`,
+/// classify into S1–S4 and report extra iterations — the multi-rank
+/// mirror of the blanket `CrashApp::recompute`. Rank `j`'s local object
+/// `l` lives at composite id `objs_per_rank * j + l` (allocation order).
+fn classify(
+    dcg: &Dcg,
+    golden: &Golden,
+    mode: RecoveryMode,
+    cap: &CrashCapture,
+    bar: &Barrier,
+    objs_per_rank: usize,
+) -> (Response, u64) {
+    let mut raw = RawEnv::new();
+    let st = match AppCore::build(dcg, &mut raw) {
+        Ok(st) => st,
+        Err(_) => return (Response::S3, 0),
+    };
+    fn overlay(
+        raw: &mut RawEnv,
+        objs_per_rank: usize,
+        rank: usize,
+        objs: &[(ObjId, Vec<u8>)],
+    ) -> bool {
+        for (local, bytes) in objs {
+            let id = (objs_per_rank * rank) as ObjId + *local;
+            match raw.buf_of(id) {
+                Some(buf) if buf.len as usize * buf.ty.bytes() == bytes.len() => {
+                    raw.load_bytes(buf, bytes);
+                }
+                _ => return false,
+            }
+        }
+        true
+    }
+    let start = match mode {
+        RecoveryMode::Local | RecoveryMode::Assisted => {
+            // Survivors keep their architectural barrier state; the
+            // crashed rank re-enters from NVM alone.
+            for (j, objs) in bar.arch.iter().enumerate() {
+                if j == cap.rank {
+                    continue;
+                }
+                if !overlay(&mut raw, objs_per_rank, j, objs) {
+                    return (Response::S3, 0);
+                }
+            }
+            if !overlay(&mut raw, objs_per_rank, cap.rank, &cap.nvm) {
+                return (Response::S3, 0);
+            }
+            if mode == RecoveryMode::Assisted && dcg.assisted_rebuild(&mut raw, &st).is_err() {
+                return (Response::S3, 0);
+            }
+            bar.iter
+        }
+        RecoveryMode::Global => {
+            let mut resume = cap.nvm_iter;
+            for (j, objs) in bar.nvm.iter().enumerate() {
+                if j == cap.rank {
+                    continue;
+                }
+                if !overlay(&mut raw, objs_per_rank, j, objs) {
+                    return (Response::S3, 0);
+                }
+                resume = resume.min(bar.nvm_iter[j]);
+            }
+            if !overlay(&mut raw, objs_per_rank, cap.rank, &cap.nvm) {
+                return (Response::S3, 0);
+            }
+            resume
+        }
+    };
+    let nominal = dcg.iters;
+    let start = start.min(nominal);
+    for it in start..nominal {
+        if AppCore::step(dcg, &mut raw, &st, it).is_err() {
+            return (Response::S3, 0);
+        }
+    }
+    match AppCore::metric(dcg, &mut raw, &st) {
+        Ok(m) if dcg.accept(m, golden) => return (Response::S1, 0),
+        Ok(_) => {}
+        Err(_) => return (Response::S3, 0),
+    }
+    let max = nominal * 2;
+    for it in nominal..max {
+        if AppCore::step(dcg, &mut raw, &st, it).is_err() {
+            return (Response::S3, it - nominal);
+        }
+        match AppCore::metric(dcg, &mut raw, &st) {
+            Ok(m) if dcg.accept(m, golden) => return (Response::S2, it - nominal + 1),
+            Ok(_) => {}
+            Err(_) => return (Response::S3, it - nominal),
+        }
+    }
+    (Response::S4, max - nominal)
+}
+
+// ---------------------------------------------------------------------------
+// Harvest pass (simulated engine)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+struct MappedPoint {
+    g: u64,
+    rank: usize,
+    local: u64,
+}
+
+struct HarvestDriver<'a> {
+    dcg: &'a Dcg,
+    golden: &'a Golden,
+    mode: RecoveryMode,
+    layouts: &'a [RankLayout],
+    objs_per_rank: usize,
+    /// Per rank: pending `(global, local)` points, ascending.
+    pending: Vec<VecDeque<(u64, u64)>>,
+    remaining: usize,
+    barrier: Barrier,
+    fired: Vec<CrashCapture>,
+    out: Vec<(u64, usize, TestRecord)>,
+    replayed: u64,
+}
+
+impl Driver for HarvestDriver<'_> {
+    fn iter_start(
+        &mut self,
+        envs: &mut [SimEnv<'static>],
+        _sts: &[RankSt],
+        it: u64,
+    ) -> Result<bool> {
+        if self.remaining == 0 {
+            return Ok(false);
+        }
+        self.barrier = capture_barrier(envs, self.layouts, it);
+        Ok(true)
+    }
+
+    fn call(
+        &mut self,
+        env: &mut SimEnv<'static>,
+        rs: &RankSt,
+        k: usize,
+        it: u64,
+        phase: Phase,
+        body: &mut Body<'_>,
+    ) -> Result<()> {
+        if self.pending[k].is_empty() {
+            let before = env.ops();
+            body(env, rs)
+                .map_err(|s| crate::err!("dcg rank {k}: {phase:?} failed at iter {it}: {s:?}"))?;
+            self.replayed += env.ops() - before;
+            return Ok(());
+        }
+        let snap = env.snapshot();
+        let snap_ops = env.ops();
+        body(env, rs)
+            .map_err(|s| crate::err!("dcg rank {k}: {phase:?} failed at iter {it}: {s:?}"))?;
+        self.replayed += env.ops() - snap_ops;
+        while let Some(&(g, p)) = self.pending[k].front() {
+            if p > env.ops() {
+                break;
+            }
+            self.pending[k].pop_front();
+            self.remaining -= 1;
+            // Replay the call under halt, capture the wreckage, then
+            // restore and re-run canonically so the trajectory (and with
+            // it every later point's outcome) is batch-independent.
+            env.restore(&snap);
+            env.halt_at = Some(p);
+            let halted = body(env, rs);
+            env.halt_at = None;
+            self.replayed += env.ops() - snap_ops;
+            match halted {
+                Err(Signal::Crash) => {
+                    self.fired
+                        .push(capture_crash(env, &self.layouts[k].cands, k, g));
+                }
+                Ok(()) => crate::bail!(
+                    "dcg rank {k}: crash point {p} did not fire inside its \
+                     {phase:?} window at iter {it} (window ends at {})",
+                    env.ops()
+                ),
+                Err(s) => crate::bail!(
+                    "dcg rank {k}: replay to crash point {p} failed with {s:?}"
+                ),
+            }
+            env.restore(&snap);
+            body(env, rs).map_err(|s| {
+                crate::err!("dcg rank {k}: {phase:?} re-run failed at iter {it}: {s:?}")
+            })?;
+            self.replayed += env.ops() - snap_ops;
+        }
+        Ok(())
+    }
+
+    fn iter_done(
+        &mut self,
+        _envs: &mut [SimEnv<'static>],
+        _sts: &[RankSt],
+        _it: u64,
+    ) -> Result<()> {
+        if self.fired.is_empty() {
+            return Ok(());
+        }
+        let fired = std::mem::take(&mut self.fired);
+        for cap in fired {
+            let (response, extra_iters) = classify(
+                self.dcg,
+                self.golden,
+                self.mode,
+                &cap,
+                &self.barrier,
+                self.objs_per_rank,
+            );
+            let total: usize = self.layouts.iter().map(|l| l.cands.len()).sum();
+            let base: usize = self.layouts[..cap.rank]
+                .iter()
+                .map(|l| l.cands.len())
+                .sum();
+            let mut inconsistency = vec![0.0f64; total];
+            inconsistency[base..base + cap.inconsistency.len()]
+                .copy_from_slice(&cap.inconsistency);
+            self.out.push((
+                cap.g,
+                cap.rank,
+                TestRecord {
+                    op: cap.op,
+                    iter: cap.iter,
+                    region: cap.region,
+                    response,
+                    extra_iters,
+                    inconsistency,
+                },
+            ));
+        }
+        Ok(())
+    }
+}
+
+fn harvest_batch(
+    dcg: &Dcg,
+    cfg: &SimConfig,
+    hooks: &[FlushHooks],
+    layouts: &[RankLayout],
+    mode: RecoveryMode,
+    golden: &Golden,
+    points: &[MappedPoint],
+) -> Result<(Vec<(u64, usize, TestRecord)>, u64)> {
+    let ranks = dcg.ranks;
+    let mut envs = make_envs(cfg, hooks);
+    let sts = build_all(dcg, &mut envs)?;
+    let mut pending: Vec<VecDeque<(u64, u64)>> = vec![VecDeque::new(); ranks];
+    for mp in points {
+        pending[mp.rank].push_back((mp.g, mp.local));
+    }
+    let mut drv = HarvestDriver {
+        dcg,
+        golden,
+        mode,
+        layouts,
+        objs_per_rank: layouts[0].reg.objects.len(),
+        pending,
+        remaining: points.len(),
+        barrier: Barrier::empty(ranks),
+        fired: Vec::new(),
+        out: Vec::with_capacity(points.len()),
+        replayed: 0,
+    };
+    lockstep(dcg.iters, &mut envs, &sts, &mut drv)?;
+    crate::ensure!(
+        drv.remaining == 0,
+        "{} crash points never fired within the dcg run",
+        drv.remaining
+    );
+    let mut out = drv.out;
+    out.sort_by_key(|(g, _, _)| *g);
+    Ok((out, drv.replayed))
+}
+
+// ---------------------------------------------------------------------------
+// Pooled pass (durable per-rank pool files)
+// ---------------------------------------------------------------------------
+
+/// `<base>.rank<k>` — each rank's own durable pool file.
+pub fn pool_rank_path(base: &Path, k: usize) -> PathBuf {
+    let mut os = base.as_os_str().to_os_string();
+    os.push(format!(".rank{k}"));
+    PathBuf::from(os)
+}
+
+struct PooledDriver<'a> {
+    victim: usize,
+    g: u64,
+    layouts: &'a [RankLayout],
+    barrier: Barrier,
+    capture: Option<CrashCapture>,
+    done: bool,
+}
+
+impl Driver for PooledDriver<'_> {
+    fn iter_start(
+        &mut self,
+        envs: &mut [SimEnv<'static>],
+        _sts: &[RankSt],
+        it: u64,
+    ) -> Result<bool> {
+        if self.done {
+            return Ok(false);
+        }
+        self.barrier = capture_barrier(envs, self.layouts, it);
+        Ok(true)
+    }
+
+    fn call(
+        &mut self,
+        env: &mut SimEnv<'static>,
+        rs: &RankSt,
+        k: usize,
+        it: u64,
+        phase: Phase,
+        body: &mut Body<'_>,
+    ) -> Result<()> {
+        if self.done {
+            return Ok(());
+        }
+        match body(env, rs) {
+            Ok(()) => Ok(()),
+            Err(Signal::Crash) if k == self.victim => {
+                self.capture = Some(capture_crash(env, &self.layouts[k].cands, k, self.g));
+                self.done = true;
+                Ok(())
+            }
+            Err(s) => crate::bail!(
+                "dcg rank {k}: {phase:?} failed at iter {it} with {s:?} (pool run)"
+            ),
+        }
+    }
+
+    fn stopped(&self) -> bool {
+        self.done
+    }
+}
+
+/// Run all ranks against their own pool files, kill the victim rank at
+/// its local crash op, and recover its durable image the way a restarted
+/// process would: reopen the pool expecting the dead generation, require
+/// `Resumed`, and read the surviving objects + bookmark from the file —
+/// not from the simulator. Survivors' barrier state still comes from
+/// their (live) envs.
+fn pooled_crash(
+    dcg: &Dcg,
+    cfg: &SimConfig,
+    hooks: &[FlushHooks],
+    layouts: &[RankLayout],
+    base: &Path,
+    mp: MappedPoint,
+) -> Result<(CrashCapture, Barrier, u64)> {
+    let ranks = dcg.ranks;
+    let mut pools = Vec::with_capacity(ranks);
+    for (k, lay) in layouts.iter().enumerate() {
+        let path = pool_rank_path(base, k);
+        let _ = std::fs::remove_file(&path);
+        let mut pool = PoolEnv::create(&path, "dcg", &lay.reg, Some(lay.iter_obj), NUM_REGIONS)?;
+        pool.begin_run()?;
+        pools.push(pool);
+    }
+    let generation = pools[mp.rank].generation();
+    let mut envs = make_envs(cfg, hooks);
+    for (pool, env) in pools.iter().zip(envs.iter_mut()) {
+        pool.attach(env)?;
+    }
+    let sts = build_all(dcg, &mut envs)?;
+    envs[mp.rank].halt_at = Some(mp.local);
+    let mut drv = PooledDriver {
+        victim: mp.rank,
+        g: mp.g,
+        layouts,
+        barrier: Barrier::empty(ranks),
+        capture: None,
+        done: false,
+    };
+    lockstep(dcg.iters, &mut envs, &sts, &mut drv)?;
+    let mut cap = drv.capture.ok_or_else(|| {
+        crate::err!(
+            "pool rank campaign: crash point {} (rank {}, local op {}) never fired",
+            mp.g,
+            mp.rank,
+            mp.local
+        )
+    })?;
+    let replayed: u64 = envs.iter().map(|e| e.ops()).sum();
+    drop(envs);
+    drop(pools);
+    let path = pool_rank_path(base, mp.rank);
+    let lay = &layouts[mp.rank];
+    let (pool, outcome) = PoolEnv::open_expecting(
+        &path,
+        "dcg",
+        &lay.reg,
+        Some(lay.iter_obj),
+        NUM_REGIONS,
+        Some(generation),
+    )?;
+    crate::ensure!(
+        outcome.resumed(),
+        "pool {} did not resume after the simulated rank kill",
+        path.display()
+    );
+    let (snap_iter, mut objs) = pool.surviving_objects()?;
+    objs.retain(|(id, _)| lay.cands.contains(id));
+    cap.nvm = objs;
+    cap.nvm_iter = snap_iter;
+    Ok((cap, drv.barrier, replayed))
+}
+
+// ---------------------------------------------------------------------------
+// RankCampaign
+// ---------------------------------------------------------------------------
+
+/// A multi-rank crash campaign over the dcg app. The single-env
+/// [`Campaign`] knobs that apply (`tests`, `seed`, `cfg`) keep their
+/// meaning; `recovery` picks the partial-failure semantics and `shards`
+/// splits the harvest across workers (bit-identical for any count).
+#[derive(Clone, Copy, Debug)]
+pub struct RankCampaign {
+    pub ranks: usize,
+    pub tests: usize,
+    pub seed: u64,
+    pub cfg: SimConfig,
+    pub recovery: RecoveryMode,
+    pub shards: usize,
+}
+
+impl RankCampaign {
+    pub fn new(ranks: usize, tests: usize, seed: u64) -> RankCampaign {
+        RankCampaign {
+            ranks,
+            tests,
+            seed,
+            cfg: SimConfig::mini(),
+            recovery: RecoveryMode::Global,
+            shards: 1,
+        }
+    }
+}
+
+/// A [`CampaignResult`] plus the rank axis: which rank each record
+/// killed, the per-rank op spans, and the exchange-log digest of the
+/// profiled run.
+#[derive(Clone, Debug)]
+pub struct RankCampaignResult {
+    pub result: CampaignResult,
+    pub ranks: usize,
+    pub recovery: RecoveryMode,
+    /// Crashed rank per record (parallel to `result.records`).
+    pub rank_of: Vec<usize>,
+    /// Per-rank main-loop op spans (the global draw concatenates these).
+    pub rank_spans: Vec<u64>,
+    /// Exchange messages logged by the profile run.
+    pub messages: usize,
+    /// Order-sensitive digest of the exchange log.
+    pub msg_digest: u64,
+}
+
+impl RankCampaign {
+    /// Profile the multi-rank run: per-rank op geometry, kernel-call
+    /// windows and the exchange log. Public so tests can pin crash
+    /// points inside specific phase windows (e.g. mid-allreduce).
+    pub fn profile(&self, plan: &PersistPlan) -> Result<RankProfile> {
+        let dcg = Dcg::with_ranks(self.ranks);
+        let layouts = probe_ranks(self.ranks)?;
+        let hooks = rank_hooks(plan, &layouts)?;
+        profile_run(&dcg, &self.cfg, &hooks)
+    }
+
+    /// Draw `tests` crash points over the concatenated rank spans and
+    /// harvest them on the simulated engine.
+    pub fn run(&self, plan: &PersistPlan) -> Result<RankCampaignResult> {
+        let (dcg, layouts, hooks, prof) = self.prepare(plan)?;
+        let points = draw_crash_points(self.seed, self.tests, prof.lo(), prof.lo() + prof.total_span());
+        self.finish(&dcg, &layouts, &hooks, &prof, plan, points)
+    }
+
+    /// Harvest an explicit set of global crash points (sorted first, like
+    /// [`Campaign::run_at`]).
+    pub fn run_points(&self, plan: &PersistPlan, mut points: Vec<u64>) -> Result<RankCampaignResult> {
+        let (dcg, layouts, hooks, prof) = self.prepare(plan)?;
+        points.sort_unstable();
+        self.finish(&dcg, &layouts, &hooks, &prof, plan, points)
+    }
+
+    /// The pool-engine path: per-rank durable pool files `<base>.rank<k>`,
+    /// a real mid-run generation for the victim, recovery through
+    /// `PoolEnv::open_expecting` + `surviving_objects`. Sequential (one
+    /// point at a time owns the pool files).
+    pub fn run_pooled(&self, plan: &PersistPlan, pool_base: &Path) -> Result<RankCampaignResult> {
+        let (dcg, layouts, hooks, prof) = self.prepare(plan)?;
+        let points = draw_crash_points(self.seed, self.tests, prof.lo(), prof.lo() + prof.total_span());
+        let golden = dcg.golden();
+        let objs_per_rank = layouts[0].reg.objects.len();
+        let result = self.aggregate_profile(&dcg, plan)?;
+        let mut collected = Vec::with_capacity(points.len());
+        let mut replayed = 0u64;
+        for &g in &points {
+            let (rank, local) = prof
+                .locate(g)
+                .ok_or_else(|| crate::err!("crash point {g} outside the rank op span"))?;
+            let mp = MappedPoint { g, rank, local };
+            let (cap, bar, ops) = pooled_crash(&dcg, &self.cfg, &hooks, &layouts, pool_base, mp)?;
+            replayed += ops;
+            let (response, extra_iters) =
+                classify(&dcg, &golden, self.recovery, &cap, &bar, objs_per_rank);
+            let total: usize = layouts.iter().map(|l| l.cands.len()).sum();
+            let base: usize = layouts[..cap.rank].iter().map(|l| l.cands.len()).sum();
+            let mut inconsistency = vec![0.0f64; total];
+            inconsistency[base..base + cap.inconsistency.len()]
+                .copy_from_slice(&cap.inconsistency);
+            collected.push((
+                cap.g,
+                cap.rank,
+                TestRecord {
+                    op: cap.op,
+                    iter: cap.iter,
+                    region: cap.region,
+                    response,
+                    extra_iters,
+                    inconsistency,
+                },
+            ));
+        }
+        for k in 0..self.ranks {
+            let _ = std::fs::remove_file(pool_rank_path(pool_base, k));
+        }
+        self.assemble(result, &prof, collected, replayed)
+    }
+
+    fn prepare(
+        &self,
+        plan: &PersistPlan,
+    ) -> Result<(Dcg, Vec<RankLayout>, Vec<FlushHooks>, RankProfile)> {
+        crate::ensure!(
+            (1..=dcg::MAX_RANKS).contains(&self.ranks),
+            "rank campaign: ranks must be 1..={}, got {}",
+            dcg::MAX_RANKS,
+            self.ranks
+        );
+        let dcg = Dcg::with_ranks(self.ranks);
+        let layouts = probe_ranks(self.ranks)?;
+        let hooks = rank_hooks(plan, &layouts)?;
+        let prof = profile_run(&dcg, &self.cfg, &hooks)?;
+        Ok((dcg, layouts, hooks, prof))
+    }
+
+    /// Composite-run aggregates (cycles, persist costs, cache stats,
+    /// candidate table): the single-env profile of the same composite
+    /// app+plan — identical access stream, so the §4 cost model carries
+    /// over unchanged.
+    fn aggregate_profile(&self, dcg: &Dcg, plan: &PersistPlan) -> Result<CampaignResult> {
+        let base = Campaign {
+            tests: 0,
+            seed: self.seed,
+            cfg: self.cfg,
+            verified: false,
+            sampler: SamplerSpec::Uniform,
+        };
+        base.profile(dcg, &composite_plan(plan, self.ranks))
+    }
+
+    fn finish(
+        &self,
+        dcg: &Dcg,
+        layouts: &[RankLayout],
+        hooks: &[FlushHooks],
+        prof: &RankProfile,
+        plan: &PersistPlan,
+        points: Vec<u64>,
+    ) -> Result<RankCampaignResult> {
+        // Prime the golden memo before any worker threads need it.
+        let golden = dcg.golden();
+        let result = self.aggregate_profile(dcg, plan)?;
+        let map_batch = |batch: &[u64]| -> Result<Vec<MappedPoint>> {
+            batch
+                .iter()
+                .map(|&g| {
+                    prof.locate(g)
+                        .map(|(rank, local)| MappedPoint { g, rank, local })
+                        .ok_or_else(|| crate::err!("crash point {g} outside the rank op span"))
+                })
+                .collect()
+        };
+        let batches = partition_points(&points, self.shards);
+        let mut collected: Vec<(u64, usize, TestRecord)> = Vec::with_capacity(points.len());
+        let mut replayed = 0u64;
+        if batches.len() <= 1 {
+            for batch in &batches {
+                let mapped = map_batch(batch)?;
+                let (recs, ops) = harvest_batch(
+                    dcg,
+                    &self.cfg,
+                    hooks,
+                    layouts,
+                    self.recovery,
+                    &golden,
+                    &mapped,
+                )?;
+                collected.extend(recs);
+                replayed += ops;
+            }
+        } else {
+            let mode = self.recovery;
+            let cfg = &self.cfg;
+            std::thread::scope(|s| -> Result<()> {
+                let mut handles = Vec::with_capacity(batches.len());
+                for batch in &batches {
+                    let mapped = map_batch(batch)?;
+                    handles.push(s.spawn(move || {
+                        harvest_batch(dcg, cfg, hooks, layouts, mode, &golden, &mapped)
+                    }));
+                }
+                for h in handles {
+                    let (recs, ops) = h
+                        .join()
+                        .map_err(|_| crate::err!("rank harvest worker panicked"))??;
+                    collected.extend(recs);
+                    replayed += ops;
+                }
+                Ok(())
+            })?;
+        }
+        self.assemble(result, prof, collected, replayed)
+    }
+
+    fn assemble(
+        &self,
+        mut result: CampaignResult,
+        prof: &RankProfile,
+        mut collected: Vec<(u64, usize, TestRecord)>,
+        replayed: u64,
+    ) -> Result<RankCampaignResult> {
+        // Batches are contiguous ascending slices of the sorted draw, so
+        // this sort is a no-op for sequential runs and a cheap merge for
+        // sharded ones — either way the record list is the sequential one.
+        collected.sort_by_key(|(g, _, _)| *g);
+        let rank_of = collected.iter().map(|(_, rank, _)| *rank).collect();
+        result.records = collected.into_iter().map(|(_, _, rec)| rec).collect();
+        result.replayed_ops = replayed;
+        Ok(RankCampaignResult {
+            result,
+            ranks: self.ranks,
+            recovery: self.recovery,
+            rank_of,
+            rank_spans: prof.spans.clone(),
+            messages: prof.messages.len(),
+            msg_digest: prof.msg_digest,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovery_mode_roundtrip() {
+        for mode in RecoveryMode::all() {
+            let parsed: RecoveryMode = mode.label().parse().unwrap();
+            assert_eq!(parsed, mode);
+            assert_eq!(format!("{mode}"), mode.label());
+        }
+        assert!("paxos".parse::<RecoveryMode>().is_err());
+    }
+
+    #[test]
+    fn project_plan_maps_plain_and_suffixed_names() {
+        let plan = PersistPlan {
+            entries: vec![
+                PlanEntry {
+                    object: "x".into(),
+                    region: 5,
+                    every_x: 1,
+                },
+                PlanEntry {
+                    object: "q.r2".into(),
+                    region: 0,
+                    every_x: 3,
+                },
+            ],
+            clwb: false,
+        };
+        let mut matched = vec![false; 2];
+        let p0 = project_plan(&plan, 4, 0, &mut matched);
+        assert_eq!(p0.entries.len(), 1);
+        assert_eq!(p0.entries[0].object, "x.r0");
+        let p2 = project_plan(&plan, 4, 2, &mut matched);
+        assert_eq!(p2.entries.len(), 2);
+        assert_eq!(p2.entries[0].object, "x.r2");
+        assert_eq!(p2.entries[1].object, "q.r2");
+        assert!(matched.iter().all(|&m| m));
+        // R=1 projection of a plain name is the identity.
+        let mut m1 = vec![false; 2];
+        let p = project_plan(&plan, 1, 0, &mut m1);
+        assert_eq!(p.entries.len(), 1);
+        assert_eq!(p.entries[0].object, "x");
+    }
+
+    #[test]
+    fn unmatched_plan_entry_is_rejected() {
+        let layouts = probe_ranks(2).unwrap();
+        let plan = PersistPlan {
+            entries: vec![PlanEntry {
+                object: "zeta".into(),
+                region: 0,
+                every_x: 1,
+            }],
+            clwb: false,
+        };
+        let err = rank_hooks(&plan, &layouts).unwrap_err().to_string();
+        assert!(err.contains("zeta"), "error should name the entry: {err}");
+    }
+
+    #[test]
+    fn per_rank_layout_has_six_candidates_and_own_bookmark() {
+        let layouts = probe_ranks(4).unwrap();
+        for lay in &layouts {
+            assert_eq!(lay.cands.len(), 6, "x r p q sc it");
+            assert!(lay.cands.contains(&lay.iter_obj));
+            assert_eq!(lay.reg.objects.len(), 9);
+        }
+    }
+
+    #[test]
+    fn locate_and_global_of_are_inverse() {
+        let prof = RankProfile {
+            ranks: 3,
+            main_start: vec![100, 90, 95],
+            ops_total: vec![600, 580, 610],
+            spans: vec![500, 490, 515],
+            phase_windows: vec![Vec::new(); 3],
+            messages: Vec::new(),
+            msg_digest: 0,
+            iters: 75,
+        };
+        assert_eq!(prof.lo(), 100);
+        assert_eq!(prof.total_span(), 1505);
+        assert_eq!(prof.locate(100), Some((0, 100)));
+        assert_eq!(prof.locate(599), Some((0, 599)));
+        assert_eq!(prof.locate(600), Some((1, 90)));
+        assert_eq!(prof.locate(100 + 500 + 490), Some((2, 95)));
+        assert_eq!(prof.locate(100 + 1505), None);
+        for g in [100, 355, 600, 1089, 1090, 1604] {
+            let (rank, local) = prof.locate(g).unwrap();
+            assert_eq!(prof.global_of(rank, local), Some(g), "g={g}");
+        }
+        assert_eq!(prof.global_of(0, 99), None);
+        assert_eq!(prof.global_of(3, 100), None);
+    }
+
+    #[test]
+    fn exchange_digest_is_payload_sensitive() {
+        let mut a = Exchange::default();
+        let mut b = Exchange::default();
+        let outs = [HaloOut {
+            lo: None,
+            hi: Some([1.0; dcg::EDGE]),
+        }];
+        a.record_halos(0, &outs);
+        b.record_halos(0, &outs);
+        assert_eq!(a.digest(), b.digest());
+        b.record_allreduce(0, Phase::DotPq, 42.0);
+        assert_ne!(a.digest(), b.digest());
+        let outs2 = [HaloOut {
+            lo: None,
+            hi: Some([2.0; dcg::EDGE]),
+        }];
+        let mut c = Exchange::default();
+        c.record_halos(0, &outs2);
+        assert_ne!(a.digest(), c.digest());
+    }
+
+    #[test]
+    fn pool_rank_path_suffixes_base() {
+        let p = pool_rank_path(Path::new("/tmp/pool"), 3);
+        assert_eq!(p, PathBuf::from("/tmp/pool.rank3"));
+    }
+}

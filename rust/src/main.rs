@@ -22,7 +22,7 @@ const VALUED: &[&str] = &[
     "app", "apps", "tests", "seed", "engine", "plan", "plans", "planner", "planners", "sampler",
     "spec", "ts", "tau", "mtbf", "tchk", "nvm", "out", "shards", "trials", "work", "dist",
     "snapshot-interval", "pool", "halt", "timeout-secs", "retries", "backoff-ms", "stall-ms",
-    "expect-generation", "server", "store-dir", "addr", "workers",
+    "expect-generation", "server", "store-dir", "addr", "workers", "ranks", "recovery",
 ];
 
 fn main() -> Result<()> {
@@ -34,6 +34,7 @@ fn main() -> Result<()> {
         "probe" => probe(&args),
         "campaign" => cmd_campaign(&args),
         "kill-campaign" => cmd_kill_campaign(&args),
+        "rank-campaign" => cmd_rank_campaign(&args),
         "pool-child" => cmd_pool_child(&args),
         "experiment" => cmd_experiment(&args),
         "efficiency" => cmd_efficiency(&args),
@@ -209,6 +210,133 @@ fn cmd_kill_campaign(args: &Args) -> Result<()> {
         easycrash::util::pct(f[3]),
         t0.elapsed(),
     );
+    Ok(())
+}
+
+/// The multi-rank crash campaign (`easycrash::rank`): split the dcg
+/// solver across `--ranks N` simulated ranks, kill one rank per sampled
+/// `(rank, op)` crash point and classify recovery under `--recovery
+/// local|assisted|global` (all three when the flag is absent). `--engine
+/// pool` runs each test against per-rank durable pool files
+/// (`<base>.rank<k>`); `--plan` takes the DSL minus `critical`.
+fn cmd_rank_campaign(args: &Args) -> Result<()> {
+    use easycrash::apps::dcg::{self, Dcg};
+    use easycrash::apps::CrashApp;
+    use easycrash::easycrash::{PersistPlan, PlanSpec, RankCampaign, RecoveryMode};
+    use easycrash::sim::{NvmProfile, SimConfig};
+
+    let ranks = args.usize_or("ranks", 4)?;
+    easycrash::ensure!(
+        (1..=dcg::MAX_RANKS).contains(&ranks),
+        "--ranks must be 1..={}, got {ranks}",
+        dcg::MAX_RANKS
+    );
+    let tests = args.usize_or("tests", 24)?;
+    let seed = args.u64_or("seed", 0xEC)?;
+    let shards = args.shards_or(1)?;
+    let mut cfg = SimConfig::mini();
+    if let Some(nvm) = args.get("nvm") {
+        cfg.nvm = NvmProfile::by_name(nvm)
+            .ok_or_else(|| easycrash::err!("unknown NVM profile `{nvm}`"))?;
+    }
+    let engine = args.get_or("engine", "native").to_string();
+    easycrash::ensure!(
+        engine == "native" || engine == "pool",
+        "rank-campaign supports --engine native|pool, got `{engine}`"
+    );
+    let modes: Vec<RecoveryMode> = match args.get("recovery") {
+        Some(m) => vec![m.parse()?],
+        None => RecoveryMode::all().to_vec(),
+    };
+    // Plans resolve against the campaign's own topology so `all` names
+    // the `.r<k>`-suffixed objects of exactly `ranks` ranks.
+    let plan_dsl = args.get_or("plan", "none").to_string();
+    let plan = match PlanSpec::parse(&plan_dsl)? {
+        PlanSpec::None => PersistPlan::none(),
+        PlanSpec::Entries(entries) => PersistPlan { entries, clwb: false },
+        PlanSpec::All => {
+            let dcg = Dcg::with_ranks(ranks);
+            let probe = dcg
+                .probe_layout()
+                .map_err(|s| easycrash::err!("dcg layout probe failed with {s:?}"))?;
+            let names: Vec<&str> = probe
+                .reg
+                .candidates()
+                .into_iter()
+                .filter(|id| Some(*id) != probe.iter_obj)
+                .map(|id| probe.reg.get(id).spec.name)
+                .collect();
+            PersistPlan::at_iter_end(&names, dcg::NUM_REGIONS, 1)
+        }
+        PlanSpec::Critical => easycrash::bail!(
+            "--plan critical needs the selection workflow — rank campaigns take \
+             explicit plans (`none`, `all`, or `obj@region/x,...`)"
+        ),
+    };
+    let mut doc = Json::obj()
+        .set("schema", "easycrash.rank/v1")
+        .set("app", "dcg")
+        .set("ranks", ranks)
+        .set("tests", tests)
+        .set("seed", seed)
+        .set("plan", plan.dsl())
+        .set("engine", engine.as_str());
+    let mut mode_cells = Vec::new();
+    for mode in modes {
+        let rc = RankCampaign {
+            ranks,
+            tests,
+            seed,
+            cfg,
+            recovery: mode,
+            shards,
+        };
+        let t0 = Instant::now();
+        let res = if engine == "pool" {
+            let base = std::env::temp_dir()
+                .join(format!("easycrash-rank-{}.pool", std::process::id()));
+            rc.run_pooled(&plan, &base)?
+        } else {
+            rc.run(&plan)?
+        };
+        let f = res.result.response_fractions();
+        for (r, rank) in res.result.records.iter().zip(&res.rank_of) {
+            println!(
+                "crash rank={rank} op={} iter={} region={} response={} extra_iters={}",
+                r.op,
+                r.iter,
+                r.region,
+                r.response.label(),
+                r.extra_iters
+            );
+        }
+        println!(
+            "recovery summary: mode={mode} ranks={ranks} tests={tests} \
+             recomputability={} S1={} S2={} S3={} S4={} msgs={} wall={:.2?}",
+            easycrash::util::pct(res.result.recomputability()),
+            easycrash::util::pct(f[0]),
+            easycrash::util::pct(f[1]),
+            easycrash::util::pct(f[2]),
+            easycrash::util::pct(f[3]),
+            res.messages,
+            t0.elapsed(),
+        );
+        mode_cells.push(
+            Json::obj()
+                .set("recovery", mode.label())
+                .set("recomputability", res.result.recomputability())
+                .set("fractions", f.to_vec())
+                .set("mean_extra_iters", res.result.mean_extra_iters())
+                .set("rank_spans", res.rank_spans.clone())
+                .set("messages", res.messages)
+                .set("msg_digest", format!("{:#018x}", res.msg_digest)),
+        );
+    }
+    doc = doc.set("modes", mode_cells);
+    let out = args.get_or("out", "rank_campaign.json");
+    std::fs::write(out, doc.to_pretty())
+        .map_err(|e| easycrash::util::error::Error::io(out, "writing rank report to", e))?;
+    println!("[json] {out}");
     Ok(())
 }
 

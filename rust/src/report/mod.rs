@@ -256,6 +256,15 @@ tools:
              real-process crash campaign: spawn a child per kill point,
              SIGKILL it against the pool file, restart and classify the
              two-phase recovery (watchdog + bounded retry)
+  rank-campaign [--ranks N] [--recovery local|assisted|global] [--tests N]
+             [--plan none|all|obj@region/x[,..]] [--engine native|pool]
+             [--shards N] [--out F]
+             multi-rank crash campaign on the dcg solver: kill one of N
+             ranks per sampled (rank, op) point and classify recovery —
+             local (NVM image alone), assisted (survivors rebuild the
+             lost block), global (all ranks roll back); all three modes
+             when --recovery is absent. --engine pool uses per-rank
+             durable pool files (<base>.rank<k>)
   experiment [--spec FILE.json] [--apps A,B] [--plans P1;P2;..] [--out F]
              [--verified|--no-verified] [--server ADDR]
              run an apps x plans experiment spec end to end and write the

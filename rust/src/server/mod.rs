@@ -10,10 +10,11 @@
 //!   (single-flight) and every later request is a memo hit;
 //! * with a store attached, cells computed by any past process against
 //!   the same store root are served from disk without simulating;
-//! * one shared worker pool runs all cells: an idle worker takes the
-//!   next queued cell regardless of which job submitted it, so a small
-//!   job's cells interleave with (steal slots from) a big job's instead
-//!   of queueing behind it.
+//! * one shared worker pool runs all cells, with one run queue *per
+//!   job* rotated round-robin: an idle worker takes one cell from the
+//!   front job, then that job moves to the back of the rotation, so a
+//!   small job's cells interleave with a big job's instead of queueing
+//!   behind it (a single FIFO would drain jobs in submission order).
 //!
 //! Transport is localhost-only by design: a unix socket (`unix:/path`)
 //! or TCP (`host:port`), both speaking the same minimal HTTP/1.1 subset
@@ -24,7 +25,10 @@
 //!
 //! * `POST /jobs` body = spec JSON → `200` NDJSON stream (`Connection:
 //!   close`; the body ends when the server closes the socket):
-//!   `{"event":"accepted","cells":N}`, one
+//!   `{"event":"accepted","cells":N}` — followed, when the spec asks
+//!   for a multi-rank campaign, by
+//!   `{"event":"ranks","ranks":R,"recovery":"local|assisted|global"}`
+//!   so clients learn the rank topology before any cell lands — one
 //!   `{"event":"cell","index":i,"app":..,"plan":..,"plan_resolved":..,
 //!   "source":"memo|store|computed","ms":..}` per finished cell in
 //!   *completion* order — followed by a
@@ -49,7 +53,7 @@ use std::net::{TcpListener, TcpStream};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -165,25 +169,58 @@ fn bind(addr: &str) -> Result<Listener> {
 
 type Task = Box<dyn FnOnce() + Send + 'static>;
 
-struct PoolInner {
-    queue: Mutex<VecDeque<Task>>,
-    ready: Condvar,
-    shutdown: AtomicBool,
+/// Per-job run queues in round-robin rotation. `pop` takes one task
+/// from the front job and, if that job still has work, moves it to the
+/// back of the ring — so with J active jobs, every J-th dispatched cell
+/// belongs to a given job regardless of how many cells each submitted.
+/// The ring never holds an empty per-job queue: `push` creates the
+/// entry with its first task and `pop` drops an entry it drained.
+#[derive(Default)]
+struct JobRing {
+    jobs: VecDeque<(u64, VecDeque<Task>)>,
 }
 
-/// Take the queue lock, recovering from poisoning. The queue holds plain
+impl JobRing {
+    fn push(&mut self, job: u64, task: Task) {
+        match self.jobs.iter_mut().find(|(id, _)| *id == job) {
+            Some((_, q)) => q.push_back(task),
+            None => self.jobs.push_back((job, VecDeque::from([task]))),
+        }
+    }
+
+    fn pop(&mut self) -> Option<Task> {
+        while let Some((id, mut q)) = self.jobs.pop_front() {
+            if let Some(task) = q.pop_front() {
+                if !q.is_empty() {
+                    self.jobs.push_back((id, q));
+                }
+                return Some(task);
+            }
+        }
+        None
+    }
+}
+
+struct PoolInner {
+    queue: Mutex<JobRing>,
+    ready: Condvar,
+    shutdown: AtomicBool,
+    next_job: AtomicU64,
+}
+
+/// Take the queue lock, recovering from poisoning. The ring holds plain
 /// `VecDeque` state that is consistent at every await point; a panic
 /// inside a *task* is already contained by `catch_unwind`, so a poisoned
 /// lock here only means some thread panicked while merely holding the
 /// guard — the data is still sound, and refusing to serve (the old
 /// `unwrap`) would wedge every other job on the server.
-fn lock_queue(inner: &PoolInner) -> std::sync::MutexGuard<'_, VecDeque<Task>> {
+fn lock_queue(inner: &PoolInner) -> std::sync::MutexGuard<'_, JobRing> {
     inner.queue.lock().unwrap_or_else(|p| p.into_inner())
 }
 
-/// The server-wide worker pool: one run queue for *all* jobs' cells.
-/// Workers pull whatever is next, so cells from concurrent jobs
-/// interleave instead of running job-by-job.
+/// The server-wide worker pool: one [`JobRing`] for *all* jobs' cells.
+/// Workers pull round-robin across jobs, so a small job's cells
+/// interleave with a big job's instead of queueing behind it.
 #[derive(Clone)]
 struct WorkPool {
     inner: Arc<PoolInner>,
@@ -193,9 +230,10 @@ struct WorkPool {
 impl WorkPool {
     fn start(workers: usize) -> WorkPool {
         let inner = Arc::new(PoolInner {
-            queue: Mutex::new(VecDeque::new()),
+            queue: Mutex::new(JobRing::default()),
             ready: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            next_job: AtomicU64::new(0),
         });
         let handles = (0..workers.max(1))
             .map(|_| {
@@ -207,7 +245,7 @@ impl WorkPool {
                             if inner.shutdown.load(Ordering::SeqCst) {
                                 return;
                             }
-                            match q.pop_front() {
+                            match q.pop() {
                                 Some(t) => break t,
                                 None => {
                                     q = match inner.ready.wait(q) {
@@ -231,8 +269,14 @@ impl WorkPool {
         }
     }
 
-    fn submit(&self, task: Task) {
-        lock_queue(&self.inner).push_back(task);
+    /// Allocate a fresh job id for [`submit`](WorkPool::submit) — one
+    /// per `/jobs` connection, never reused within a server's lifetime.
+    fn job_id(&self) -> u64 {
+        self.inner.next_job.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn submit(&self, job: u64, task: Task) {
+        lock_queue(&self.inner).push(job, task);
         self.inner.ready.notify_one();
     }
 
@@ -462,12 +506,25 @@ fn handle_job(shared: &Shared, body: &[u8], conn: &mut Conn) -> std::io::Result<
     let n = cells.len();
     http::write_stream_head(conn, "application/x-ndjson")?;
     send_event(conn, &Json::obj().set("event", "accepted").set("cells", n))?;
+    // Multi-rank campaigns change what a "crash point" names (a
+    // (rank, op) pair) and how records classify — announce the topology
+    // up front so stream consumers can interpret the cells.
+    if spec.ranks > 1 {
+        send_event(
+            conn,
+            &Json::obj()
+                .set("event", "ranks")
+                .set("ranks", spec.ranks)
+                .set("recovery", spec.recovery.label()),
+        )?;
+    }
+    let job = shared.pool.job_id();
     let (tx, rx) = mpsc::channel::<CellDone>();
     for (i, (app_name, plan_spec)) in cells.iter().cloned().enumerate() {
         let runner = runner.clone();
         let tx = tx.clone();
         let verified = spec.verified;
-        shared.pool.submit(Box::new(move || {
+        shared.pool.submit(job, Box::new(move || {
             let t0 = Instant::now();
             let out = (|| {
                 let app = apps::by_name(&app_name)
@@ -593,13 +650,14 @@ mod tests {
     #[test]
     fn pool_survives_panicking_tasks() {
         let pool = WorkPool::start(2);
+        let job = pool.job_id();
         for _ in 0..4 {
-            pool.submit(Box::new(|| panic!("deliberate task panic")));
+            pool.submit(job, Box::new(|| panic!("deliberate task panic")));
         }
         let done = Arc::new(AtomicUsize::new(0));
         for _ in 0..8 {
             let done = done.clone();
-            pool.submit(Box::new(move || {
+            pool.submit(job, Box::new(move || {
                 done.fetch_add(1, Ordering::SeqCst);
             }));
         }
@@ -609,5 +667,30 @@ mod tests {
             std::thread::sleep(Duration::from_millis(5));
         }
         pool.shutdown();
+    }
+
+    /// The dispatch order the ring guarantees, checked without any
+    /// worker threads: a 1-cell job submitted after a 6-cell job runs
+    /// second, not seventh.
+    #[test]
+    fn job_ring_interleaves_jobs_round_robin() {
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let mut ring = JobRing::default();
+        let tag = |label: &'static str| -> Task {
+            let order = order.clone();
+            Box::new(move || order.lock().unwrap().push(label))
+        };
+        for _ in 0..6 {
+            ring.push(0, tag("big"));
+        }
+        ring.push(1, tag("small"));
+        while let Some(t) = ring.pop() {
+            t();
+        }
+        assert_eq!(
+            *order.lock().unwrap(),
+            ["big", "small", "big", "big", "big", "big", "big"],
+            "the front job yields one task, then the late job gets a slot"
+        );
     }
 }

@@ -61,6 +61,11 @@ impl CellKey {
     /// the key, so two planners agreeing on a plan share one entry.
     /// `sampler` is the canonical `--sampler` DSL: it changes which crash
     /// points are drawn (and the record weights), so it is a result axis.
+    /// `ranks`/`recovery` are the multi-rank axes: the rank count changes
+    /// the app topology (and the crash-point space) and the recovery mode
+    /// changes every record's classification, so both are result axes —
+    /// at `ranks == 1` the recovery mode cannot reach the result (the
+    /// whole-process path runs) and is normalized to `global`.
     #[allow(clippy::too_many_arguments)]
     pub fn campaign(
         app: &str,
@@ -70,10 +75,13 @@ impl CellKey {
         seed: u64,
         sampler: &str,
         engine: &str,
+        ranks: usize,
+        recovery: &str,
         cfg: &SimConfig,
     ) -> CellKey {
+        let recovery = if ranks > 1 { recovery } else { "global" };
         CellKey::new(format!(
-            "campaign::{app}::{plan_dsl}::vfy={}::tests={tests}::seed={seed:#x}::sampler={sampler}::engine={engine}::{}",
+            "campaign::{app}::{plan_dsl}::vfy={}::tests={tests}::seed={seed:#x}::sampler={sampler}::engine={engine}::ranks={ranks}::recovery={recovery}::{}",
             verified as u8,
             cfg_canonical(cfg),
         ))
@@ -123,20 +131,29 @@ mod tests {
         snap.cfg.snapshot_every = Some(1000);
         snap.shards = 8;
         let k1 = CellKey::campaign(
-            "mg", "none", false, base.tests, base.seed, "uniform", "native", &base.cfg,
+            "mg", "none", false, base.tests, base.seed, "uniform", "native", 1, "global",
+            &base.cfg,
         );
         let k2 = CellKey::campaign(
-            "mg", "none", false, snap.tests, snap.seed, "uniform", "native", &snap.cfg,
+            "mg", "none", false, snap.tests, snap.seed, "uniform", "native", 1, "global",
+            &snap.cfg,
         );
         assert_eq!(k1, k2);
         assert_eq!(k1.file_name(), k2.file_name());
+        // At ranks == 1 the recovery mode cannot reach the result and is
+        // normalized out of the key.
+        let k3 = CellKey::campaign(
+            "mg", "none", false, base.tests, base.seed, "uniform", "native", 1, "assisted",
+            &base.cfg,
+        );
+        assert_eq!(k1, k3);
     }
 
     #[test]
     fn result_relevant_fields_differentiate() {
         let cfg = ExperimentSpec::default().cfg;
         let k = |app: &str, plan: &str, vfy: bool, tests: usize, seed: u64, smp: &str, eng: &str| {
-            CellKey::campaign(app, plan, vfy, tests, seed, smp, eng, &cfg)
+            CellKey::campaign(app, plan, vfy, tests, seed, smp, eng, 1, "global", &cfg)
         };
         let base = k("mg", "none", false, 200, 0xEC, "uniform", "native");
         assert_ne!(base, k("cg", "none", false, 200, 0xEC, "uniform", "native"));
@@ -147,11 +164,22 @@ mod tests {
         assert_ne!(base, k("mg", "none", false, 200, 0xEC, "classes", "native"));
         assert_ne!(base, k("mg", "none", false, 200, 0xEC, "adaptive", "native"));
         assert_ne!(base, k("mg", "none", false, 200, 0xEC, "uniform", "pool"));
+        // The rank axes are result axes once ranks > 1.
+        let rk = |ranks: usize, recovery: &str| {
+            CellKey::campaign(
+                "dcg", "none", false, 200, 0xEC, "uniform", "native", ranks, recovery, &cfg,
+            )
+        };
+        assert_ne!(rk(1, "global"), rk(4, "global"));
+        assert_ne!(rk(4, "global"), rk(4, "assisted"));
+        assert_ne!(rk(4, "assisted"), rk(4, "local"));
         let mut other = cfg;
         other.nvm = crate::sim::NvmProfile::by_name("lat4x").unwrap();
         assert_ne!(
             base,
-            CellKey::campaign("mg", "none", false, 200, 0xEC, "uniform", "native", &other)
+            CellKey::campaign(
+                "mg", "none", false, 200, 0xEC, "uniform", "native", 1, "global", &other
+            )
         );
     }
 
@@ -163,7 +191,9 @@ mod tests {
         assert!(!p.canonical().contains("seed"));
         assert!(!p.canonical().contains("tests"));
         // Campaign and profile keys can never collide on canonical text.
-        let c = CellKey::campaign("mg", "none", false, 200, 0xEC, "uniform", "native", &cfg);
+        let c = CellKey::campaign(
+            "mg", "none", false, 200, 0xEC, "uniform", "native", 1, "global", &cfg,
+        );
         assert_ne!(p.canonical(), c.canonical());
     }
 }

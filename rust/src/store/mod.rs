@@ -57,7 +57,9 @@ pub const STORE_MAGIC: [u8; 4] = *b"ECST";
 /// Entry format version — bump on any header or payload layout change;
 /// older entries then read as typed [`StoreMiss::VersionSkew`] misses.
 /// v2: campaign results carry sampling weights and a coverage report.
-pub const STORE_VERSION: u64 = 2;
+/// v3: campaign keys gained the `ranks`/`recovery` axes, so every v2
+/// canonical key string is stale (same hash, different text).
+pub const STORE_VERSION: u64 = 3;
 /// Default store root when neither `--store-dir` nor `EASYCRASH_STORE`
 /// is set (relative to the invocation directory, like `results/`).
 pub const DEFAULT_ROOT: &str = ".easycrash-store";

@@ -252,6 +252,49 @@ fn flags_path_enforces_the_shards_engine_rule() {
     assert!(ExperimentSpec::from_args(&args).is_err());
 }
 
+/// The rank axis: `ranks`/`recovery` survive the JSON round-trip, and
+/// `validate()` rejects the combinations the rank harness cannot honor
+/// (ISSUE §Ranks bugfix): multi-rank campaigns are dcg-only, have no
+/// single architectural image for `verified` mode, and shard internally
+/// — outer `--shards` composition is rejected until proven invariant.
+#[test]
+fn rank_axis_round_trips_and_rejects_unsupported_combinations() {
+    use easycrash::easycrash::RecoveryMode;
+    let spec = ExperimentSpec::builder()
+        .app("dcg")
+        .tests(6)
+        .ranks(4)
+        .recovery(RecoveryMode::Assisted)
+        .build()
+        .unwrap();
+    let back = ExperimentSpec::from_json(&spec.to_json().to_pretty()).unwrap();
+    assert_eq!(back, spec);
+    assert_eq!(back.ranks, 4);
+    assert_eq!(back.recovery, RecoveryMode::Assisted);
+
+    // Multi-rank campaigns exist only for the distributed app.
+    assert!(ExperimentSpec::from_json(r#"{"apps":["toy"],"ranks":4}"#).is_err());
+    assert!(ExperimentSpec::from_json(r#"{"apps":["dcg","toy"],"ranks":4}"#).is_err());
+    // No single architectural image exists across ranks.
+    assert!(
+        ExperimentSpec::from_json(r#"{"apps":["dcg"],"ranks":4,"verified":true}"#).is_err()
+    );
+    // Rank campaigns shard internally; outer sharding is rejected.
+    assert!(ExperimentSpec::from_json(r#"{"apps":["dcg"],"ranks":4,"shards":2}"#).is_err());
+    // Unknown recovery modes and out-of-range rank counts are typed errors.
+    assert!(ExperimentSpec::from_json(
+        r#"{"apps":["dcg"],"ranks":4,"recovery":"sideways"}"#
+    )
+    .is_err());
+    assert!(ExperimentSpec::from_json(r#"{"apps":["dcg"],"ranks":9}"#).is_err());
+    assert!(ExperimentSpec::from_json(r#"{"apps":["dcg"],"ranks":0}"#).is_err());
+    // ranks == 1 constrains nothing: any app, verified mode allowed.
+    let one =
+        ExperimentSpec::from_json(r#"{"apps":["toy"],"ranks":1,"verified":true}"#).unwrap();
+    assert_eq!(one.ranks, 1);
+    assert_eq!(one.recovery, RecoveryMode::Global);
+}
+
 // -- report golden schema ---------------------------------------------------
 
 #[test]

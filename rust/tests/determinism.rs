@@ -75,12 +75,13 @@ fn assert_bit_identical(r: &CampaignResult, seq: &CampaignResult, label: &str) {
 }
 
 /// Satellite: the FULL registry — all 11 paper apps plus the extras
-/// (toy, adi, fft), 14 apps — passes sequential-vs-sharded bit-parity
-/// on a tiny campaign, so no app's access pattern (CSR gathers, chain
-/// walks, Thomas sweeps, butterflies, leapfrog hydro, ...) can break
-/// the early-stop worker schedule or the lane-split draw.
+/// (toy, adi, fft, dcg), 15 apps — passes sequential-vs-sharded
+/// bit-parity on a tiny campaign, so no app's access pattern (CSR
+/// gathers, chain walks, Thomas sweeps, butterflies, leapfrog hydro,
+/// rank-blocked CG, ...) can break the early-stop worker schedule or
+/// the lane-split draw.
 #[test]
-fn full_fourteen_app_matrix_sharded_equals_sequential() {
+fn full_fifteen_app_matrix_sharded_equals_sequential() {
     let tests = 6;
     let seed = 0x14;
     let mut covered = Vec::new();
@@ -96,17 +97,17 @@ fn full_fourteen_app_matrix_sharded_equals_sequential() {
         }
         covered.push(app.name());
     }
-    assert_eq!(covered.len(), 14, "the full matrix must cover 14 apps: {covered:?}");
+    assert_eq!(covered.len(), 15, "the full matrix must cover 15 apps: {covered:?}");
     for name in [
         "cg", "mg", "ft", "is", "bt", "lu", "sp", "ep", "botsspar", "lulesh", "kmeans", "toy",
-        "adi", "fft",
+        "adi", "fft", "dcg",
     ] {
         assert!(covered.contains(&name), "missing {name}");
     }
 }
 
 /// Tentpole: snapshot-restore harvesting is bit-identical to scratch
-/// replay across the FULL 14-app matrix, sequential and sharded alike.
+/// replay across the FULL 15-app matrix, sequential and sharded alike.
 /// The sequential scratch run (snapshots off) is the reference; with the
 /// tape recorded at every iteration end (interval 1, the adversarial
 /// maximum) the campaign must reproduce every result field bit for bit
@@ -149,7 +150,7 @@ fn snapshot_restore_is_bit_identical_to_scratch_across_the_matrix() {
         }
         covered += 1;
     }
-    assert_eq!(covered, 14, "the parity matrix must cover all 14 apps");
+    assert_eq!(covered, 15, "the parity matrix must cover all 15 apps");
 }
 
 /// The full 4-step workflow inherits the guarantee: sharded campaigns

@@ -1,0 +1,166 @@
+//! Integration tests for `easycrash::rank` (ISSUE §Ranks): the R=1
+//! distributed CG is record-identical to the native single-env CG, rank
+//! campaigns are bit-identical for any shard count × recovery mode, and
+//! assisted recovery survives crash points pinned mid-allreduce.
+
+use easycrash::apps::cg::Cg;
+use easycrash::apps::dcg::{self, Dcg};
+use easycrash::easycrash::{Campaign, PersistPlan, Phase, RankCampaign, RecoveryMode};
+use easycrash::runtime::NativeEngine;
+use easycrash::sim::SimConfig;
+
+/// A plan that persists the live CG vectors at iteration end — the same
+/// DSL resolves on native `cg` and on every rank of `dcg` (plain names
+/// project onto the `.r<k>` suffixed per-rank objects).
+fn plan() -> PersistPlan {
+    PersistPlan::at_iter_end(&["x", "r", "p"], dcg::NUM_REGIONS, 1)
+}
+
+fn mini_campaign(tests: usize) -> Campaign {
+    let mut c = Campaign::new(tests, 0xEC);
+    c.cfg = SimConfig::mini();
+    c
+}
+
+/// ISSUE test (a): at `ranks == 1` the dcg app allocates cg's exact
+/// object set under the same names and emits a bit-identical access
+/// stream, so a campaign over it is record-identical to native CG — and
+/// the rank harness itself (RankCampaign with one rank) reproduces the
+/// same records again through its own windowed replay path.
+#[test]
+fn r1_dcg_campaign_is_record_identical_to_native_cg() {
+    let plan = plan();
+    let camp = mini_campaign(48);
+    let native = camp
+        .run(&Cg::default(), &plan, &mut NativeEngine::new())
+        .expect("native cg campaign");
+    let flat = camp
+        .run(&Dcg::with_ranks(1), &plan, &mut NativeEngine::new())
+        .expect("dcg r=1 campaign");
+    assert_eq!(
+        native.records, flat.records,
+        "dcg at ranks=1 must crash and classify exactly like native cg"
+    );
+    assert_eq!(native.ops_total, flat.ops_total, "identical access streams");
+    assert_eq!(native.ops_main_start, flat.ops_main_start);
+
+    let rc = RankCampaign::new(1, 48, 0xEC);
+    let ranked = rc.run(&plan).expect("rank campaign r=1");
+    assert_eq!(
+        ranked.result.records, flat.records,
+        "the rank harness at one rank must reproduce the single-env campaign"
+    );
+    assert!(ranked.rank_of.iter().all(|&k| k == 0));
+    assert_eq!(ranked.rank_spans.len(), 1);
+    assert_eq!(
+        ranked.rank_spans[0],
+        flat.ops_total - flat.ops_main_start,
+        "the one-rank crash-point span is the single-env main-loop span"
+    );
+}
+
+/// ISSUE test (b): the same campaign split across {1, 2, 4, 8} harvest
+/// shards is bit-identical — records, crashed ranks and the exchange-log
+/// digest — for every recovery mode. (`replayed_ops` is bookkeeping of
+/// how much work the sharding did, not part of the result contract.)
+#[test]
+fn rank_campaigns_are_bit_identical_across_shards_and_recovery_modes() {
+    let plan = plan();
+    for recovery in RecoveryMode::all() {
+        let mut rc = RankCampaign::new(4, 16, 0xEC);
+        rc.recovery = recovery;
+        let base = rc.run(&plan).expect("unsharded rank campaign");
+        assert_eq!(base.result.records.len(), 16);
+        assert_eq!(base.rank_of.len(), 16);
+        for shards in [2usize, 4, 8] {
+            let mut sharded = rc;
+            sharded.shards = shards;
+            let got = sharded.run(&plan).expect("sharded rank campaign");
+            assert_eq!(
+                got.result.records, base.result.records,
+                "{recovery}: records must be bit-identical at {shards} shards"
+            );
+            assert_eq!(got.rank_of, base.rank_of, "{recovery}: crashed ranks");
+            assert_eq!(got.rank_spans, base.rank_spans);
+            assert_eq!(
+                got.msg_digest, base.msg_digest,
+                "{recovery}: exchange log must not depend on sharding"
+            );
+        }
+    }
+}
+
+/// ISSUE test (c): pin one crash point inside every rank's DotPq and
+/// DotRr window of a mid-run iteration — the crash lands after the rank
+/// contributed its partial dot product but before the allreduce
+/// completes — and assisted recovery must classify every one without
+/// panicking or erroring.
+#[test]
+fn assisted_recovery_survives_mid_allreduce_crashes() {
+    let mut rc = RankCampaign::new(4, 0, 0xEC);
+    rc.recovery = RecoveryMode::Assisted;
+    let plan = plan();
+    let prof = rc.profile(&plan).expect("rank profile");
+    assert_eq!(prof.phase_windows.len(), 4);
+
+    let mid_iter = prof.iters / 2;
+    let mut points = Vec::new();
+    let mut expect_ranks = Vec::new();
+    for k in 0..prof.ranks {
+        for w in &prof.phase_windows[k] {
+            if w.iter == mid_iter && matches!(w.phase, Phase::DotPq | Phase::DotRr) {
+                // A point fires inside a window iff lo < p <= hi.
+                let p = w.lo + (w.hi - w.lo).div_ceil(2);
+                let g = prof.global_of(k, p).expect("window point maps globally");
+                assert_eq!(prof.locate(g), Some((k, p)), "locate inverts global_of");
+                points.push(g);
+                expect_ranks.push(k);
+            }
+        }
+    }
+    assert_eq!(points.len(), 8, "one DotPq + one DotRr window per rank");
+
+    rc.tests = points.len();
+    let res = rc
+        .run_points(&plan, points.clone())
+        .expect("assisted recovery must survive mid-allreduce crash points");
+    assert_eq!(res.result.records.len(), points.len());
+    let mut want: Vec<(u64, usize)> =
+        points.iter().copied().zip(expect_ranks).collect();
+    want.sort_unstable();
+    let want_ranks: Vec<usize> = want.iter().map(|&(_, k)| k).collect();
+    assert_eq!(res.rank_of, want_ranks, "each record kills the pinned rank");
+    for (r, &k) in res.result.records.iter().zip(&res.rank_of) {
+        assert!(
+            !r.inconsistency.is_empty() && k < 4,
+            "record classified with a rank-attributed inconsistency vector"
+        );
+    }
+}
+
+/// The pool-engine path: per-rank durable pool files, a real crashed
+/// generation for the victim and recovery from what the files say
+/// survived. Smoke-level — it must complete, classify every drawn point
+/// and attribute crashes to the same ranks as the simulated engine
+/// (the op geometry is shared; the NVM image comes from disk).
+#[test]
+fn pooled_rank_campaign_completes_and_matches_native_rank_attribution() {
+    let mut rc = RankCampaign::new(2, 5, 0xEC);
+    rc.recovery = RecoveryMode::Local;
+    let plan = plan();
+    let native = rc.run(&plan).expect("native rank campaign");
+    let base = std::env::temp_dir().join(format!(
+        "easycrash-rank-test-{}.pool",
+        std::process::id()
+    ));
+    let pooled = rc.run_pooled(&plan, &base).expect("pooled rank campaign");
+    assert_eq!(pooled.result.records.len(), native.result.records.len());
+    assert_eq!(
+        pooled.rank_of, native.rank_of,
+        "pool engine must attribute each crash to the same rank"
+    );
+    for k in 0..2 {
+        let p = easycrash::easycrash::rank::pool_rank_path(&base, k);
+        assert!(!p.exists(), "campaign cleans up its per-rank pool files");
+    }
+}

@@ -205,6 +205,127 @@ fn http_surface_answers_health_stats_and_rejects_garbage() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Two concurrent jobs on a single-worker server: the pool's per-job
+/// round-robin must give the small late job a slot after at most one
+/// more of the big job's cells, instead of queueing it behind all of
+/// them (a plain FIFO would finish the big job first — every one of
+/// its cell events would land before the small job's `done`).
+#[test]
+fn late_small_job_interleaves_with_a_big_jobs_cells() {
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    let dir = tmpdir("fairness");
+    let addr = format!("unix:{}", dir.join("serve.sock").display());
+    let srv = server::start(ServeConfig {
+        addr: addr.clone(),
+        store: None,
+        workers: 1, // serialize cells so dispatch order is observable
+        verbose: false,
+    })
+    .expect("server start");
+
+    // Big job: 4 cells, sized so they cannot all drain in the instant
+    // between its `accepted` event and the small job's submission.
+    let big = ExperimentSpec::builder()
+        .apps(["toy", "is"])
+        .plan_str("none")
+        .and_then(|s| s.plan_str("all"))
+        .expect("plans")
+        .tests(400)
+        .seed(0xEC)
+        .build()
+        .expect("big spec");
+    // Small job: one cheap cell with a different key than any big cell.
+    let small = ExperimentSpec::builder()
+        .app("toy")
+        .plan_str("none")
+        .expect("plan")
+        .tests(5)
+        .seed(0xEC)
+        .build()
+        .expect("small spec");
+
+    let big_accepted = Arc::new(AtomicBool::new(false));
+    let big_cells_done = Arc::new(AtomicUsize::new(0));
+    let cells_when_small_finished = std::thread::scope(|s| {
+        let accepted = big_accepted.clone();
+        let cells = big_cells_done.clone();
+        let addr_big = addr.clone();
+        let big_job = s.spawn(move || {
+            client::submit(&addr_big, &big, |ev| {
+                match ev.get("event").and_then(Json::as_str) {
+                    Some("accepted") => accepted.store(true, Ordering::SeqCst),
+                    Some("cell") => {
+                        cells.fetch_add(1, Ordering::SeqCst);
+                    }
+                    _ => {}
+                }
+            })
+            .expect("big job")
+        });
+        // Submit the small job only once the big one holds the queue.
+        while !big_accepted.load(Ordering::SeqCst) {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        client::submit(&addr, &small, |_| {}).expect("small job");
+        let snapshot = big_cells_done.load(Ordering::SeqCst);
+        big_job.join().unwrap();
+        snapshot
+    });
+    assert!(
+        cells_when_small_finished < 4,
+        "small job finished only after all {cells_when_small_finished} big cells — \
+         the pool queued it FIFO instead of interleaving jobs"
+    );
+    srv.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A `--ranks > 1` job announces its rank topology as a dedicated
+/// `ranks` event before any cell completes, and the embedded report's
+/// spec round-trips the ranks/recovery axis.
+#[test]
+fn multi_rank_job_streams_a_ranks_event() {
+    let dir = tmpdir("ranks");
+    let (srv, addr) = start_on(&dir, None);
+    let spec = ExperimentSpec::builder()
+        .app("dcg")
+        .plan_str("none")
+        .expect("plan")
+        .tests(6)
+        .seed(0xEC)
+        .ranks(4)
+        .recovery(easycrash::easycrash::RecoveryMode::Assisted)
+        .build()
+        .expect("rank spec");
+
+    let mut events = Vec::new();
+    let done = client::submit(&addr, &spec, |ev| {
+        if let Some(kind) = ev.get("event").and_then(Json::as_str) {
+            events.push((kind.to_string(), ev.clone()));
+        }
+    })
+    .expect("rank job");
+
+    let ranks_pos = events.iter().position(|(k, _)| k == "ranks");
+    let first_cell = events.iter().position(|(k, _)| k == "cell");
+    let (pos, ev) = ranks_pos
+        .map(|p| (p, &events[p].1))
+        .expect("stream carries a ranks event");
+    assert!(pos < first_cell.expect("job has cells"), "ranks precedes cells");
+    assert_eq!(ev.get("ranks").and_then(Json::as_u64), Some(4));
+    assert_eq!(ev.get("recovery").and_then(Json::as_str), Some("assisted"));
+    let report_spec = done.get("report").and_then(|r| r.get("spec")).expect("spec");
+    assert_eq!(report_spec.get("ranks").and_then(Json::as_u64), Some(4));
+    assert_eq!(
+        report_spec.get("recovery").and_then(Json::as_str),
+        Some("assisted")
+    );
+    srv.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// A `--sampler classes` job streams one `easycrash.coverage/v1` event
 /// per cell alongside the cell events, and the client's event loop
 /// tolerates (and surfaces) them.

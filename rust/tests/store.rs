@@ -44,6 +44,8 @@ fn toy_cell() -> (CampaignResult, CellKey, ExperimentSpec) {
         spec.seed,
         "uniform",
         "native",
+        1,
+        "global",
         &spec.cfg,
     );
     (res, key, spec)
@@ -183,7 +185,9 @@ fn damaged_entries_classify_as_typed_misses() {
     // An entry legitimately written under a *different* key, landed on
     // this key's path (hash collision stand-in): typed mismatch, never
     // the wrong cell's data.
-    let other = CellKey::campaign("toy", "none", false, 999, 7, "uniform", "native", &spec.cfg);
+    let other = CellKey::campaign(
+        "toy", "none", false, 999, 7, "uniform", "native", 1, "global", &spec.cfg,
+    );
     store.save(&other, &res).unwrap();
     std::fs::copy(store.entry_path(&other), &path).unwrap();
     assert_eq!(load_miss(&store, &key), StoreMiss::KeyMismatch);
